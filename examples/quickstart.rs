@@ -1,0 +1,63 @@
+//! Quickstart: the MoPEQ pipeline in ~40 lines of API calls.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Opens the smallest sim model, computes the data-free Hessian
+//! sensitivity map (paper Algorithm 1), clusters experts into 2/3/4-bit
+//! groups (Algorithm 2, model-wise), quantizes, and compares accuracy
+//! and size against the fp16 reference.
+
+use mopeq::cluster::Granularity;
+use mopeq::coordinator::{Metric, Pipeline};
+use mopeq::data::Task;
+use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
+use mopeq::report;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open artifacts + weights (trained if `mopeq train` ran, else init)
+    let mut p = Pipeline::open("dsvl2_tiny", 0)?;
+    p.eval_samples = 16; // quick demo
+    p.hessian_closed_form = true; // exact trace, no sampling
+
+    // 2. per-expert sensitivity via Hessian trace (data-free)
+    let sens = p.importance(Metric::HessianSensitivity)?;
+    println!(
+        "{}",
+        report::ascii_heatmap("expert sensitivity (Hessian trace)",
+                              &sens.values)
+    );
+
+    // 3. Algorithm 2: cluster into {2,3,4}-bit groups, model-wise
+    let pmap = p.assign(&sens, Granularity::ModelWise);
+    println!("{}", report::precision_heatmap("precision map", &pmap));
+
+    // 4. quantize (SignRound) + evaluate vs the fp16 reference
+    let policy = SizePolicy::uniform(4, p.cfg.group);
+    let mixed = p.quantize_and_eval(&pmap, policy)?;
+    let fp16 = p.quantize_and_eval(
+        &PrecisionMap::uniform(&p.cfg, 16),
+        SizePolicy::fp16(),
+    )?;
+
+    println!(
+        "size: {:.2} MB (fp16 {:.2} MB)",
+        model_size_mb(&p.cfg, &pmap, policy),
+        model_size_mb(&p.cfg, &PrecisionMap::uniform(&p.cfg, 16),
+                      SizePolicy::fp16()),
+    );
+    println!("{:<16} {:>8} {:>8}", "task", "fp16", "MoPEQ");
+    for t in Task::ALL {
+        println!(
+            "{:<16} {:>8.3} {:>8.3}",
+            t.label(),
+            fp16.get(t),
+            mixed.get(t)
+        );
+    }
+    println!(
+        "mean accuracy: fp16 {:.3} vs MoPEQ {:.3}",
+        fp16.mean(),
+        mixed.mean()
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Sensitivity explorer: everything the paper's §3.3 claims about the
+//! Hutchinson estimator, measured.
+//!
+//!   cargo run --release --example sensitivity_explorer [variant]
+//!
+//! - convergence of the estimator to the closed form as m grows
+//!   (Algorithm 1's sample count),
+//! - the depth profile of expert sensitivity (Fig. 3's shape),
+//! - what Algorithm 2 does with it at both granularities.
+
+use mopeq::cluster::Granularity;
+use mopeq::coordinator::Pipeline;
+use mopeq::importance::{hessian_closed_form, hessian_hutchinson};
+use mopeq::report;
+
+fn main() -> anyhow::Result<()> {
+    let variant = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "dsvl2_tiny".into());
+    let p = Pipeline::open(&variant, 0)?;
+
+    // --- estimator convergence (expert (0,0), HLO autodiff path)
+    println!("Hutchinson convergence vs closed form, expert (0,0):");
+    let exact = hessian_closed_form(&p.ws, &p.cfg)?.values[0][0];
+    for m in [1usize, 2, 4, 8, 16, 32] {
+        // restrict to one expert by sampling the full map only at small m
+        let est = hessian_hutchinson(&p.session, &p.ws, &p.cfg, m, 1)?
+            .values[0][0];
+        println!(
+            "  m={m:<3} est {est:>10.2}  exact {exact:>10.2}  rel err {:.4}",
+            (est - exact).abs() / exact
+        );
+        if m >= 8 {
+            break; // full-map estimation beyond m=8 is bench territory
+        }
+    }
+
+    // --- depth profile
+    let map = hessian_closed_form(&p.ws, &p.cfg)?;
+    println!("\nper-layer mean sensitivity (Fig. 3 profile):");
+    for (l, m) in map.layer_means().iter().enumerate() {
+        let bar = "#".repeat((m / map.layer_means()[0] * 40.0) as usize);
+        println!("  L{l:>2} {m:>10.1} {bar}");
+    }
+    println!(
+        "{}",
+        report::ascii_heatmap("\nFig.3 sensitivity heatmap", &map.values)
+    );
+
+    // --- Algorithm 2 at both granularities
+    for gran in [Granularity::LayerWise, Granularity::ModelWise] {
+        let pmap = p.assign(&map, gran);
+        println!(
+            "{}",
+            report::precision_heatmap(
+                &format!("Algorithm 2, {}", gran.label()),
+                &pmap
+            )
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Serving demo: a threaded batching server over mixed-precision expert
+//! weights — fp16 vs MoPEQ-quantized side by side.
+//!
+//!   cargo run --release --example serve_mixed_precision [requests]
+//!
+//! Shows the weights-as-arguments invariant in action: the same compiled
+//! executables serve both weight sets; only the host tensors differ.
+
+use mopeq::cluster::Granularity;
+use mopeq::coordinator::{quantize_experts, Metric, Pipeline, Quantizer};
+use mopeq::data::{gen_sample, Task};
+use mopeq::rng::Rng;
+use mopeq::serve::{BatchPolicy, ServerHandle};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+    let mut p = Pipeline::open("dsvl2_tiny", 0)?;
+    p.hessian_closed_form = true;
+
+    // MoPEQ-quantized weights (RTN quantizer keeps the demo snappy)
+    let sens = p.importance(Metric::HessianSensitivity)?;
+    let pmap = p.assign(&sens, Granularity::ModelWise);
+    let mut quantized = p.clone_weights();
+    quantize_experts(
+        Some(&p.session),
+        &p.cfg,
+        &mut quantized,
+        &pmap,
+        &Quantizer::Rtn,
+        None,
+    )?;
+
+    for (label, ws) in [
+        ("fp16", p.clone_weights()),
+        ("MoPEQ 2/3/4-bit", quantized),
+    ] {
+        let handle =
+            ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?;
+        let mut rng = Rng::new(42).derive("serve-demo");
+        let mut pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            let task = Task::ALL[rng.below(Task::ALL.len())];
+            pending.push(handle.submit(gen_sample(task, &p.cfg, &mut rng))?);
+        }
+        let mut correct = 0usize;
+        for rx in pending {
+            if rx.recv()?.correct {
+                correct += 1;
+            }
+        }
+        let stats = handle.shutdown()?;
+        println!(
+            "{label:<18} {} reqs, {} batches (fill {:.2}), p50 {:?}, \
+             p95 {:?}, {:.1} req/s, acc {:.3}",
+            stats.requests,
+            stats.batches,
+            stats.mean_fill,
+            stats.p50,
+            stats.p95,
+            stats.throughput_rps,
+            correct as f64 / n as f64
+        );
+    }
+    Ok(())
+}

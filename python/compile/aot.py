@@ -1,0 +1,232 @@
+"""AOT lowering: every L2 entry point -> artifacts/**/*.hlo.txt + meta.json.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are deduplicated: entries whose shapes are variant-independent
+(embed/attn/lm_head/qdq/signround/hvp/qmatmul) live in ``shared/``;
+moe_layer is keyed by its (E, top_k, n_shared) signature; train_step is
+per variant.  ``meta.json`` records every entry's input/output specs and
+each variant's canonical parameter list — the rust registry refuses to
+run against a meta it can't verify.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only pat]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import hutchinson, model, signround
+from .configs import MIXED_BITS, VARIANTS, moe_signature
+from .kernels import moe_ffn, qdq, qmatmul, ref
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _tuple(fn):
+    """Ensure the entry returns a tuple (single-output entries)."""
+    @functools.wraps(fn)
+    def wrapped(*a):
+        out = fn(*a)
+        return out if isinstance(out, tuple) else (out,)
+    return wrapped
+
+
+# --------------------------------------------------------------- registry
+
+def build_entries():
+    """Return {relpath: (fn, [arg specs], [arg names])}."""
+    cfg0 = next(iter(VARIANTS.values()))   # common dims
+    d, m, v = cfg0.d_model, cfg0.d_expert, cfg0.vocab
+    b, s, g = cfg0.batch, cfg0.seq, cfg0.group
+    t = b * s
+    entries = {}
+
+    def add(path, fn, specs, names):
+        assert len(specs) == len(names)
+        entries[path] = (_tuple(fn), specs, names)
+
+    # ---- shared inference blocks
+    add("shared/embed",
+        lambda tok, tab, pos: model.embed(tok, tab, pos),
+        [spec((b, s), I32), spec((v, d)), spec((s, d))],
+        ["tokens", "table", "pos"])
+    add("shared/attn_layer",
+        lambda x, ln, wq, wk, wv, wo: model.attention(
+            x, ln, wq, wk, wv, wo, cfg0.n_heads),
+        [spec((b, s, d))] + [spec((d,))] + [spec((d, d))] * 4,
+        ["x", "ln", "wq", "wk", "wv", "wo"])
+    add("shared/dense_ffn",
+        model.dense_ffn,
+        [spec((b, s, d)), spec((d,)), spec((d, cfg0.d_dense)),
+         spec((d, cfg0.d_dense)), spec((cfg0.d_dense, d))],
+        ["x", "ln", "gate", "up", "down"])
+    add("shared/lm_head",
+        model.lm_head,
+        [spec((b, s, d)), spec((d,)), spec((d, v))],
+        ["x", "ln", "head"])
+
+    # ---- hessian trace (per-expert FC flattened size d*m; router row E*d
+    # handled by closed form in rust, experts by HLO)
+    n = d * m
+    add(f"shared/hvp_frob_n{n}",
+        hutchinson.hvp_entry,
+        [spec((n,)), spec((n,))],
+        ["w", "v"])
+
+    # ---- qdq + signround per (shape, bits). Expert FCs: gate/up are
+    # [d,m], down is [m,d].
+    ncal = 64
+    for din, dout in ((d, m), (m, d)):
+        gg = din // g if din >= g else 1
+        grp = g if din >= g else din
+        for bits in MIXED_BITS + (8,):
+            add(f"shared/qdq_{din}x{dout}_b{bits}",
+                functools.partial(qdq.qdq_pallas, bits=bits, g=grp),
+                [spec((din, dout)), spec((din, dout)),
+                 spec((gg, dout)), spec((gg, dout))],
+                ["w", "v", "alpha", "beta"])
+        for bits in MIXED_BITS:
+            add(f"shared/signround_{din}x{dout}_b{bits}",
+                functools.partial(signround.signround_step, bits=bits, g=grp),
+                [spec((din, dout)), spec((ncal, din)), spec((din, dout)),
+                 spec((gg, dout)), spec((gg, dout)), spec(())],
+                ["w", "x", "v", "alpha", "beta", "lr"])
+
+    # ---- packed-int4 dequant matmul (serving hot-path demo)
+    add(f"shared/qmatmul4_{t}x{d}x{m}",
+        functools.partial(qmatmul.qmatmul4, g=g),
+        [spec((t, d)), spec((d // qmatmul.PACK, m), I32),
+         spec((d // g, m)), spec((d // g, m))],
+        ["x", "packed", "s", "zp"])
+
+    # ---- standalone MoE-FFN kernel (pallas vs ref, for the L1 bench)
+    for tag, fn in (("pallas", moe_ffn.moe_ffn_pallas),
+                    ("ref", ref.moe_ffn_all)):
+        add(f"shared/moe_ffn_{tag}_e64",
+            fn,
+            [spec((t, d)), spec((64, d, m)), spec((64, d, m)),
+             spec((64, m, d))],
+            ["h", "gate", "up", "down"])
+
+    # ---- moe_layer per routing signature
+    sigs = {}
+    for cfg in VARIANTS.values():
+        sigs[moe_signature(cfg)] = cfg
+    for sig, cfg in sigs.items():
+        e = cfg.experts
+        shared_specs, shared_names = [], []
+        if cfg.n_shared:
+            ds = cfg.d_shared
+            shared_specs = [spec((d, ds)), spec((d, ds)), spec((ds, d))]
+            shared_names = ["sgate", "sup", "sdown"]
+
+        def make(cfg=cfg, use_pallas=False, use_sparse=False):
+            def fn(x, vis, ln, router, gw, uw, dw, *shared):
+                sh = tuple(shared) if shared else None
+                return model.moe_layer(x, vis, ln, router, gw, uw, dw,
+                                       sh, cfg.top_k, use_pallas,
+                                       use_sparse)
+            return fn
+
+        common_specs = [spec((b, s, d)), spec((b, s)), spec((d,)),
+                        spec((e, d)), spec((e, d, m)), spec((e, d, m)),
+                        spec((e, m, d))] + shared_specs
+        common_names = ["x", "vis_mask", "ln", "router", "gate", "up",
+                        "down"] + shared_names
+        add(f"{sig}/moe_layer", make(), common_specs, common_names)
+        add(f"{sig}/moe_layer_pallas", make(use_pallas=True),
+            common_specs, common_names)
+        add(f"{sig}/moe_layer_sparse", make(use_sparse=True),
+            common_specs, common_names)
+
+    # ---- train_step per variant
+    for name, cfg in VARIANTS.items():
+        specs_ = model.param_specs(cfg)
+        bt = cfg.train_batch
+
+        def make_ts(cfg=cfg, np_=len(specs_), use_sparse=False):
+            def fn(*args):
+                flat = args[:np_]
+                tokens, target, lr = args[np_:]
+                return model.train_step(cfg, flat, tokens, target, lr,
+                                        use_sparse)
+            return fn
+
+        # note: no vis_mask — an unused parameter would be DCE'd by the
+        # mlir->XlaComputation conversion and break the rust-side arity
+        arg_specs = [spec(sh) for _, sh in specs_] + [
+            spec((bt, cfg.seq), I32), spec((bt,), I32), spec(())]
+        arg_names = [nm for nm, _ in specs_] + ["tokens", "target", "lr"]
+        add(f"{name}/train_step", make_ts(), arg_specs, arg_names)
+        add(f"{name}/train_step_sparse", make_ts(use_sparse=True),
+            arg_specs, arg_names)
+
+    return entries
+
+
+def emit(out_dir, only=None):
+    entries = build_entries()
+    meta = {
+        "common": next(iter(VARIANTS.values())).to_dict(),
+        "variants": {
+            name: {
+                "config": cfg.to_dict(),
+                "moe_signature": moe_signature(cfg),
+                "params": [[n, list(sh)] for n, sh in
+                           model.param_specs(cfg)],
+            } for name, cfg in VARIANTS.items()
+        },
+        "entries": {},
+    }
+    for path, (fn, specs, names) in sorted(entries.items()):
+        meta["entries"][path] = {
+            "inputs": [{"name": nm, "shape": list(sp.shape),
+                        "dtype": str(sp.dtype)}
+                       for nm, sp in zip(names, specs)],
+        }
+        if only and only not in path:
+            continue
+        text = to_hlo_text(fn, specs)
+        fpath = os.path.join(out_dir, path + ".hlo.txt")
+        os.makedirs(os.path.dirname(fpath), exist_ok=True)
+        with open(fpath, "w") as f:
+            f.write(text)
+        print(f"  {path}: {len(text)//1024} KiB")
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {out_dir}/meta.json ({len(meta['entries'])} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter for faster iteration")
+    args = ap.parse_args()
+    emit(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

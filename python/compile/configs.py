@@ -1,0 +1,75 @@
+"""Single source of truth for the four sim-model variants.
+
+The variants mirror Table 1 of the MoPEQ paper exactly in *topology*
+(layers L, experts-per-layer E, active-experts-per-token AE) and in the
+architectural quirks the paper calls out (DeepSeek-V2 has no MoE in the
+first transformer layer and uses a load-balancing aux loss; MolmoE does
+not, which produces its imbalanced activation pattern — Fig. 2).  Hidden
+dimensions are shrunk so the models train and evaluate on one CPU core.
+
+Rust mirrors these configs in ``rust/src/config``; ``aot.py`` emits a
+``meta.json`` per variant which the rust registry cross-checks at load,
+so the two sides can never drift silently.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    layers: int          # L  — total transformer layers
+    experts: int         # E  — routed experts per MoE layer
+    top_k: int           # AE — active experts per token
+    first_dense: int     # leading layers with a dense FFN instead of MoE
+    n_shared: int        # shared (always-active) experts per MoE layer
+    aux_weight: float    # load-balance auxiliary loss weight at training
+    # common dims (identical across variants so kernel artifacts shard)
+    d_model: int = 64
+    d_expert: int = 32   # MoE expert inner dim (gate/up: d->m, down: m->d)
+    d_shared: int = 64   # shared-expert inner dim
+    d_dense: int = 256   # dense-FFN inner dim (first_dense layers)
+    n_heads: int = 4
+    vocab: int = 256     # ids [0,128) text, [128,256) visual patches
+    seq: int = 32
+    batch: int = 4       # static inference batch (server pads to this)
+    train_batch: int = 16
+    group: int = 32      # quantization group size along input dim
+
+    @property
+    def moe_layers(self) -> int:
+        return self.layers - self.first_dense
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# Paper Table 1 topologies, shrunk dims.
+VARIANTS = {
+    "dsvl2_tiny": ModelConfig(
+        name="dsvl2_tiny", layers=12, experts=64, top_k=6,
+        first_dense=1, n_shared=1, aux_weight=0.01),
+    "dsvl2_small": ModelConfig(
+        name="dsvl2_small", layers=27, experts=64, top_k=6,
+        first_dense=1, n_shared=1, aux_weight=0.02),
+    "dsvl2_base": ModelConfig(
+        name="dsvl2_base", layers=30, experts=72, top_k=6,
+        first_dense=1, n_shared=1, aux_weight=0.01),
+    "molmoe": ModelConfig(
+        name="molmoe", layers=16, experts=64, top_k=8,
+        first_dense=0, n_shared=0, aux_weight=0.0),
+}
+
+# Bit widths searched by MoPEQ (paper §5.1) plus the uniform baselines.
+MIXED_BITS = (2, 3, 4)
+UNIFORM_BITS = (4, 8)
+
+# Number of "visual" prefix tokens in every task sequence (sim of image
+# patch tokens produced by the vision encoder).
+VISUAL_PREFIX = 8
+
+
+def moe_signature(cfg: ModelConfig) -> str:
+    """MoE-layer artifacts are shared between variants with identical
+    (E, top_k, n_shared) — e.g. dsvl2_tiny and dsvl2_small."""
+    return f"moe_e{cfg.experts}_k{cfg.top_k}_s{cfg.n_shared}"

@@ -1,0 +1,59 @@
+"""Hessian-trace estimation (paper Algorithm 1).
+
+Hutchinson's estimator over the Frobenius-norm proxy loss:
+  L(w)   = ||w||_F
+  g1     = dL/dw                      (first-order grad, with tracking)
+  HVP    = d(g1 . v)/dw               (Hessian-vector product, autodiff)
+  T[i]   = sum(v * HVP)
+  Tr(H)  = mean_i T[i]
+
+``hvp_sample`` is the per-sample graph that aot.py lowers to
+``hvp_frob.hlo.txt``; the rust importance driver loops it with its own
+Rademacher/Gaussian draws so the estimator is data-free end to end.
+
+The closed form for this proxy loss — Tr(H) = (n-1)/||w||_F — is the
+cross-layer property test (see ref.frobenius_trace_exact): python
+hypothesis and rust proptest both assert Hutchinson converges to it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def proxy_loss(w_flat):
+    return jnp.sqrt(jnp.sum(w_flat * w_flat))
+
+
+def hvp_sample(w_flat, v):
+    """One Hutchinson sample: returns (trace_sample, hvp).
+
+    HVP via forward-over-reverse (jvp of grad) — never materializes H.
+    """
+    g1 = jax.grad(proxy_loss)
+    _, hvp = jax.jvp(g1, (w_flat,), (v,))
+    return jnp.sum(v * hvp), hvp
+
+
+def hvp_entry(w_flat, v):
+    """AOT entry point: (w[n], v[n]) -> (trace_sample scalar, hvp[n])."""
+    t, hvp = hvp_sample(w_flat, v)
+    return t, hvp
+
+
+def estimate_trace(w_flat, key, m=32):
+    """Reference estimator (build-time tests only; rust drives the HLO
+    version at runtime). Rademacher probes, matching Algorithm 1."""
+    def body(carry, k):
+        v = jax.random.rademacher(k, (w_flat.shape[0],), jnp.float32)
+        t, _ = hvp_sample(w_flat, v)
+        return carry + t, None
+
+    keys = jax.random.split(key, m)
+    total, _ = jax.lax.scan(body, 0.0, keys)
+    return total / m
+
+
+def closed_form_trace(w_flat):
+    return ref.frobenius_trace_exact(w_flat)

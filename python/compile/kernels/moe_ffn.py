@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: all-experts SwiGLU FFN, grid over experts.
+
+Computes ``out[e] = (silu(h @ gate[e]) * (h @ up[e])) @ down[e]`` for
+every expert e — the dense-dispatch form of the MoE layer body.  The L2
+model multiplies by the top-k router gates afterwards.
+
+TPU mapping: one expert's three weight tiles fit VMEM
+(2*(d*m) + m*d floats = 3*64*32*4B = 24 KiB at sim dims; at DeepSeek dims
+with bf16 it tiles along m), grid iterates experts so expert weights
+stream HBM→VMEM once per token block while `h` stays resident — the same
+schedule the paper's per-expert precision targets: lower-bit experts
+stream proportionally fewer bytes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def _moe_ffn_kernel(h_ref, g_ref, u_ref, d_ref, o_ref):
+    h = h_ref[...]                       # [T, d]
+    gate = g_ref[0]                      # [d, m]
+    up = u_ref[0]
+    down = d_ref[0]                      # [m, d]
+    act = _silu(jnp.dot(h, gate)) * jnp.dot(h, up)
+    o_ref[0] = jnp.dot(act, down)
+
+
+def moe_ffn_pallas(h, gate_w, up_w, down_w):
+    """h[T,d], gate/up[E,d,m], down[E,m,d] -> [E,T,d]."""
+    t, d = h.shape
+    e, _, m = gate_w.shape
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, t, d), jnp.float32),
+        interpret=True,
+    )(h, gate_w, up_w, down_w)

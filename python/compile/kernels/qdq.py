@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: group-wise SignRound quantize-dequantize.
+
+This is the paper's compute hot-spot: every SignRound SignSGD step and
+every fake-quant materialization runs qdq over an expert weight matrix.
+The kernel grid iterates over quantization groups (rows of ``g`` input
+channels); each program computes that group's scale/zero-point from its
+own min/max and the (alpha, beta) clip parameters, then rounds with the
+trainable offset V.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one group tile
+``[g, dout]`` per grid step lives in VMEM; min/max/scale are VPU
+reductions, the dequantized tile is written back — this is exactly the
+HBM→VMEM schedule a GPU implementation would express with one
+threadblock per group.
+
+``qdq_ste`` wraps the kernel in jax.custom_vjp so the Pallas forward is
+paired with the analytic straight-through backward (vjp of the jnp STE
+oracle) — SignRound differentiates through it.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+EPS = ref.EPS
+
+
+def _qdq_kernel(w_ref, v_ref, a_ref, b_ref, o_ref, *, bits: int):
+    """One program per quantization group: w_ref/v_ref are [g, dout]
+    tiles, a_ref/b_ref are [1, dout] clip params for this group."""
+    w = w_ref[...]
+    v = v_ref[...]
+    alpha = a_ref[...]          # [1, dout]
+    beta = b_ref[...]
+    qmax = 2.0**bits - 1.0
+    wmax = jnp.max(w, axis=0, keepdims=True)   # [1, dout]
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    s = jnp.maximum((wmax * alpha - wmin * beta) / qmax, EPS)
+    zp = jnp.round(-wmin * beta / s)
+    q = jnp.clip(jnp.round(w / s + v) + zp, 0.0, qmax)
+    o_ref[...] = s * (q - zp)
+
+
+def qdq_pallas(w, v, alpha, beta, *, bits: int, g: int):
+    """Group-wise qdq of w[din, dout]; alpha/beta are [G, dout]."""
+    din, dout = w.shape
+    n_groups = din // g
+    return pl.pallas_call(
+        functools.partial(_qdq_kernel, bits=bits),
+        grid=(n_groups,),
+        in_specs=[
+            pl.BlockSpec((g, dout), lambda i: (i, 0)),
+            pl.BlockSpec((g, dout), lambda i: (i, 0)),
+            pl.BlockSpec((1, dout), lambda i: (i, 0)),
+            pl.BlockSpec((1, dout), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), w.dtype),
+        interpret=True,
+    )(w, v, alpha, beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def qdq_ste(w, v, alpha, beta, bits, g):
+    """Pallas forward + straight-through backward. Differentiable in
+    (v, alpha, beta); w is treated as data (stop-grad), matching
+    SignRound, which never updates the weight itself."""
+    return qdq_pallas(w, v, alpha, beta, bits=bits, g=g)
+
+
+def _qdq_ste_fwd(w, v, alpha, beta, bits, g):
+    out = qdq_pallas(w, v, alpha, beta, bits=bits, g=g)
+    return out, (w, v, alpha, beta)
+
+
+def _qdq_ste_bwd(bits, g, res, ct):
+    w, v, alpha, beta = res
+    # Backward of the STE oracle: identical rounding semantics, analytic
+    # gradient path through scale/zp/clip.
+    _, vjp = jax.vjp(
+        lambda vv, aa, bb: ref.qdq(w, vv, aa, bb, bits, g, ste=True),
+        v, alpha, beta)
+    dv, da, db = vjp(ct)
+    return (jnp.zeros_like(w), dv, da, db)
+
+
+qdq_ste.defvjp(_qdq_ste_fwd, _qdq_ste_bwd)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: packed-int4 dequant-matmul (the serving hot path).
+
+``x[T, din] @ W~[din, dout]`` where W is stored as 4-bit codes packed
+eight-to-an-int32 plus group-wise (scale, zero-point).  The kernel
+dequantizes one group tile at a time *inside* the kernel — the analogue
+of vLLM's fused dequant-GEMM, and on TPU the dequant would fuse into the
+HBM→VMEM copy (unpack int32 words with shifts/masks on the VPU, feed
+bf16 tiles to the MXU).
+
+Packing layout (mirrored bit-for-bit by rust ``quant::pack``):
+  packed[r, c] holds codes for rows 8r..8r+7 of column c,
+  code k in bits [4k, 4k+4)   (little-endian nibbles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 8  # 4-bit codes per int32 word
+
+
+def pack4(q):
+    """Pack int codes q[din, dout] (values 0..15) into int32[din/8, dout].
+    Build-time helper + oracle for the rust packer."""
+    din, dout = q.shape
+    assert din % PACK == 0
+    qr = q.reshape(din // PACK, PACK, dout).astype(jnp.int32)
+    shifts = (jnp.arange(PACK, dtype=jnp.int32) * 4).reshape(1, PACK, 1)
+    return jnp.sum(qr << shifts, axis=1).astype(jnp.int32)
+
+
+def _unpack4(packed):
+    """int32[R, dout] -> float codes [R*8, dout]."""
+    r, dout = packed.shape
+    shifts = (jnp.arange(PACK, dtype=jnp.int32) * 4).reshape(1, PACK, 1)
+    codes = (packed.reshape(r, 1, dout) >> shifts) & 0xF
+    return codes.reshape(r * PACK, dout).astype(jnp.float32)
+
+
+def _qmatmul_kernel(x_ref, p_ref, s_ref, zp_ref, o_ref, *, g: int):
+    """One program per quantization group: accumulates the partial
+    product of x's group columns against the dequantized group tile."""
+    i = pl.program_id(0)
+    x = x_ref[...]                       # [T, g]
+    codes = _unpack4(p_ref[...])         # [g, dout]
+    w = s_ref[...] * (codes - zp_ref[...])   # [g, dout] dequant tile
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x, w)
+
+
+def qmatmul4(x, packed, s, zp, *, g: int):
+    """x[T,din] @ dequant4(packed)[din,dout]; s/zp are [G, dout]."""
+    t, din = x.shape
+    n_groups = din // g
+    dout = packed.shape[1]
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, g=g),
+        grid=(n_groups,),
+        in_specs=[
+            pl.BlockSpec((t, g), lambda i: (0, i)),
+            pl.BlockSpec((g // PACK, dout), lambda i: (i, 0)),
+            pl.BlockSpec((1, dout), lambda i: (i, 0)),
+            pl.BlockSpec((1, dout), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, dout), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, packed, s, zp)

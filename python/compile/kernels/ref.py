@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth pytest checks kernels against), plus the straight-through-estimator
+(STE) variants used to define gradients for SignRound.
+
+All quantization here is **group-wise asymmetric** over the input
+dimension (axis 0) of a weight matrix ``W[din, dout]``: rows are split
+into groups of ``g``; each (group, column) pair gets its own scale and
+zero point, exactly the layout the rust packer/size-accounting mirrors.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def round_ste(x):
+    """round() with a straight-through gradient (identity in bwd)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _group(w, g):
+    din, dout = w.shape
+    assert din % g == 0, f"din={din} not divisible by group={g}"
+    return w.reshape(din // g, g, dout)
+
+
+def qdq_params(w, alpha, beta, bits, g):
+    """SignRound scale/zero-point per (group, column).
+
+    s  = (max(W)*alpha - min(W)*beta) / (2^bits - 1)
+    zp = round(-min(W)*beta / s)
+
+    alpha, beta: [G, dout] clip parameters in [0, 1].
+    Returns (s[G, dout], zp[G, dout]).
+    """
+    wg = _group(w, g)
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    qmax = 2.0**bits - 1.0
+    s = (wmax * alpha - wmin * beta) / qmax
+    s = jnp.maximum(s, EPS)
+    zp = jnp.round(-wmin * beta / s)
+    return s, zp
+
+
+def qdq(w, v, alpha, beta, bits, g, ste=False):
+    """Quantize-dequantize with trainable rounding offset V (SignRound).
+
+        q  = clip(round(W/s + V) + zp, 0, 2^bits - 1)
+        W~ = s * (q - zp)
+
+    v: [din, dout] rounding offset (searched in [-0.5, 0.5]).
+    ste=True uses straight-through rounding so grad flows to (v, alpha,
+    beta) — this is the function SignSGD differentiates.
+    """
+    s, zp = qdq_params(w, alpha, beta, bits, g)
+    rnd = round_ste if ste else jnp.round
+    if not ste:
+        s, zp = jax.lax.stop_gradient(s), jax.lax.stop_gradient(zp)
+    sg = jnp.repeat(s, g, axis=0)       # [din, dout]
+    zpg = jnp.repeat(zp, g, axis=0)
+    q = jnp.clip(rnd(w / sg + v) + zpg, 0.0, 2.0**bits - 1.0)
+    return sg * (q - zpg)
+
+
+def quantize_int(w, v, alpha, beta, bits, g):
+    """Integer codes + (s, zp) — what the rust packer stores. Codes are
+    the same `q` as in qdq(); dequant is s*(q-zp)."""
+    s, zp = qdq_params(w, alpha, beta, bits, g)
+    sg = jnp.repeat(s, g, axis=0)
+    zpg = jnp.repeat(zp, g, axis=0)
+    q = jnp.clip(jnp.round(w / sg + v) + zpg, 0.0, 2.0**bits - 1.0)
+    return q.astype(jnp.int32), s, zp
+
+
+def qmatmul(x, q, s, zp, g):
+    """x[T,din] @ dequant(q)[din,dout] with int codes q[din,dout]."""
+    sg = jnp.repeat(s, g, axis=0)
+    zpg = jnp.repeat(zp, g, axis=0)
+    w = sg * (q.astype(jnp.float32) - zpg)
+    return x @ w
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn(h, gate_w, up_w, down_w):
+    """Single SwiGLU expert: (silu(h@gate) * (h@up)) @ down."""
+    return (silu(h @ gate_w) * (h @ up_w)) @ down_w
+
+
+def moe_ffn_all(h, gate_w, up_w, down_w):
+    """All-experts FFN: h[T,d], gate/up[E,d,m], down[E,m,d] -> [E,T,d].
+
+    Oracle for the Pallas moe_ffn kernel (grid over experts).
+    """
+    hg = jnp.einsum("td,edm->etm", h, gate_w)
+    hu = jnp.einsum("td,edm->etm", h, up_w)
+    act = silu(hg) * hu
+    return jnp.einsum("etm,emd->etd", act, down_w)
+
+
+def frobenius_hvp(w_flat, v):
+    """Closed-form Hessian-vector product for L = ||w||_F.
+
+    grad L = w/||w||;  H = (I - w_hat w_hat^T)/||w||
+    HVP(v) = (v - w_hat (w_hat . v)) / ||w||
+    and Tr(H) = (n-1)/||w||  exactly.
+    """
+    nrm = jnp.sqrt(jnp.sum(w_flat * w_flat))
+    what = w_flat / nrm
+    return (v - what * jnp.dot(what, v)) / nrm
+
+
+def frobenius_trace_exact(w_flat):
+    n = w_flat.shape[0]
+    return (n - 1.0) / jnp.sqrt(jnp.sum(w_flat * w_flat))

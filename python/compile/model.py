@@ -1,0 +1,287 @@
+"""L2: the sim VLM-MoE transformer in JAX — forward blocks (lowered per
+layer for the rust coordinator's layer loop) and a fused train step
+(lowered whole for the rust E2E training driver).
+
+Every entry point takes **weights as runtime arguments** so one compiled
+executable serves FP weights, RTN/GPTQ/AWQ/SignRound dequantized
+weights, or any per-expert mixed-precision combination the rust
+coordinator assembles (DESIGN.md §3, weights-as-arguments invariant).
+
+Canonical parameter order is defined by ``param_specs`` and exported to
+``meta.json``; the rust side initializes/slices weights strictly by that
+spec, so the two sides cannot drift.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.moe_ffn import moe_ffn_pallas
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------- blocks
+
+def rmsnorm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def top_k_fn(x, k):
+    """top-k over the last axis via sort_key_val.
+
+    `jax.lax.top_k` lowers to the native `topk(...), largest=true` HLO
+    op, which the xla_extension-0.5.1 text parser (the version the rust
+    `xla` crate links) rejects; `sort` round-trips fine. E is small (64/
+    72), so the O(E log E) sort is irrelevant.
+
+    Values are recovered by one-hot einsum rather than slicing the
+    sorted keys: differentiating through sort/gather emits batched
+    gathers the old converter also rejects, while the einsum path keeps
+    the VJP to plain multiplies (grads flow to `x` through it).
+    """
+    t, e = x.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (t, e), 1)
+    _, si = jax.lax.sort_key_val(
+        jax.lax.stop_gradient(-x), idx, dimension=-1)
+    topi = si[:, :k]
+    sel = jax.nn.one_hot(topi, e, dtype=x.dtype)     # [t, k, e]
+    topv = jnp.einsum("te,tke->tk", x, sel)
+    return topv, topi
+
+
+def embed(tokens, table, pos):
+    """(tokens i32[B,S], table [V,d], pos [S,d]) -> x [B,S,d]."""
+    return table[tokens] + pos[None, :, :]
+
+
+def attention(x, ln_w, wq, wk, wv, wo, n_heads):
+    """Pre-RMSNorm causal multi-head attention with residual."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    h = rmsnorm(x, ln_w)
+    def split(w):
+        return (h @ w).reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return x + out @ wo
+
+
+def dense_ffn(x, ln_w, gate_w, up_w, down_w):
+    """Dense SwiGLU FFN block with residual (the non-MoE layers)."""
+    h = rmsnorm(x, ln_w)
+    return x + ref.expert_ffn(h, gate_w, up_w, down_w)
+
+
+def moe_ffn_block_sparse(h2, gate_w, up_w, down_w, topv, topi):
+    """Sparse-dispatch MoE body: gather only the top-k experts' weights
+    per token and batch-matmul them — k/E of the dense-dispatch FLOPs
+    (EXPERIMENTS.md §Perf L2-A).
+
+    The gathers index axis 0 of the stacked expert weights with plain
+    advanced indexing, which lowers to gather *without*
+    operand_batching_dims (the construct xla_extension 0.5.1 rejects);
+    their VJP is scatter-add, which the old parser accepts.
+    """
+    wg = gate_w[topi]                     # [T,k,d,m]
+    wu = up_w[topi]
+    wd = down_w[topi]                     # [T,k,m,d]
+    hg = jnp.einsum("td,tkdm->tkm", h2, wg)
+    hu = jnp.einsum("td,tkdm->tkm", h2, wu)
+    act = ref.silu(hg) * hu
+    out = jnp.einsum("tkm,tkmd->tkd", act, wd)
+    return jnp.einsum("tkd,tk->td", out, topv)
+
+
+def moe_ffn_block(h2, gate_w, up_w, down_w, gates, use_pallas=False):
+    """Dense-dispatch MoE body: compute every expert, weight by gates.
+
+    h2 [T,d]; gate/up [E,d,m]; down [E,m,d]; gates [T,E] (0 for
+    unselected experts). use_pallas routes through the L1 kernel.
+    """
+    if use_pallas:
+        outs = moe_ffn_pallas(h2, gate_w, up_w, down_w)   # [E,T,d]
+    else:
+        outs = ref.moe_ffn_all(h2, gate_w, up_w, down_w)
+    return jnp.einsum("etd,te->td", outs, gates)
+
+
+def moe_layer(x, vis_mask, ln_w, router_w, gate_w, up_w, down_w,
+              shared_ws, top_k, use_pallas=False, use_sparse=False):
+    """MoE FFN block with residual, top-k routing and expert telemetry.
+
+    Returns (y, counts[E], vis_counts[E], h_postln[B,S,d]):
+      counts      — tokens routed to each expert (activation-frequency
+                    profiler input, Fig. 2),
+      vis_counts  — same restricted to visual-prefix tokens (the paper's
+                    vision-vs-language token scenario),
+      h_postln    — expert inputs, harvested by rust as calibration
+                    activations for SignRound/GPTQ/AWQ.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = router_w.shape[0]
+    h = rmsnorm(x, ln_w)
+    h2 = h.reshape(t, d)
+    logits = h2 @ router_w.T                      # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = top_k_fn(probs, top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    sel = jax.nn.one_hot(topi, e, dtype=x.dtype)  # [T,k,E]
+    if use_sparse:
+        y = moe_ffn_block_sparse(h2, gate_w, up_w, down_w, topv, topi)
+    else:
+        gates = jnp.einsum("tk,tke->te", topv, sel)
+        y = moe_ffn_block(h2, gate_w, up_w, down_w, gates, use_pallas)
+    if shared_ws is not None:
+        sg, su, sd = shared_ws
+        y = y + ref.expert_ffn(h2, sg, su, sd)
+    mask = jnp.sum(sel, axis=1)                   # [T,E] in {0,1}
+    counts = jnp.sum(mask, axis=0)
+    vis = vis_mask.reshape(t, 1)
+    vis_counts = jnp.sum(mask * vis, axis=0)
+    return x + y.reshape(b, s, d), counts, vis_counts, h
+
+
+def lm_head(x, ln_w, head_w):
+    """Final norm + projection; logits at the last position only."""
+    h = rmsnorm(x, ln_w)
+    return h[:, -1, :] @ head_w
+
+
+def router_aux_loss(probs):
+    """Load-balance penalty: squared coefficient of variation of the
+    mean routing probability per expert (differentiable proxy for the
+    paper's CV(Load))."""
+    p = jnp.mean(probs, axis=0)
+    cv2 = jnp.var(p) / (jnp.mean(p) ** 2 + 1e-12)
+    return cv2
+
+
+# ------------------------------------------------------------- param spec
+
+def param_specs(cfg: ModelConfig):
+    """Canonical (name, shape) list — the single wire format between
+    aot.py/meta.json and the rust weight store."""
+    d, m = cfg.d_model, cfg.d_expert
+    lm_, fd, e = cfg.moe_layers, cfg.first_dense, cfg.experts
+    specs = [
+        ("embed.table", (cfg.vocab, d)),
+        ("embed.pos", (cfg.seq, d)),
+    ]
+    if fd:
+        specs += [
+            ("dense.ln1", (fd, d)),
+            ("dense.wq", (fd, d, d)), ("dense.wk", (fd, d, d)),
+            ("dense.wv", (fd, d, d)), ("dense.wo", (fd, d, d)),
+            ("dense.ln2", (fd, d)),
+            ("dense.gate", (fd, d, cfg.d_dense)),
+            ("dense.up", (fd, d, cfg.d_dense)),
+            ("dense.down", (fd, cfg.d_dense, d)),
+        ]
+    specs += [
+        ("moe.ln1", (lm_, d)),
+        ("moe.wq", (lm_, d, d)), ("moe.wk", (lm_, d, d)),
+        ("moe.wv", (lm_, d, d)), ("moe.wo", (lm_, d, d)),
+        ("moe.ln2", (lm_, d)),
+        ("moe.router", (lm_, e, d)),
+        ("moe.gate", (lm_, e, d, m)),
+        ("moe.up", (lm_, e, d, m)),
+        ("moe.down", (lm_, e, m, d)),
+    ]
+    if cfg.n_shared:
+        specs += [
+            ("moe.sgate", (lm_, d, cfg.d_shared)),
+            ("moe.sup", (lm_, d, cfg.d_shared)),
+            ("moe.sdown", (lm_, cfg.d_shared, d)),
+        ]
+    specs += [
+        ("final.ln", (d,)),
+        ("final.head", (d, cfg.vocab)),
+    ]
+    return specs
+
+
+def params_from_flat(cfg: ModelConfig, flat):
+    return {name: w for (name, _), w in zip(param_specs(cfg), flat)}
+
+
+# ------------------------------------------------------------- full model
+
+def forward(cfg: ModelConfig, params, tokens, use_sparse=False):
+    """Whole-model forward used by train_step (scan over MoE blocks).
+
+    Returns (last-position logits [B,V], mean router aux loss).
+    """
+    p = params
+    x = embed(tokens, p["embed.table"], p["embed.pos"])
+
+    for i in range(cfg.first_dense):
+        x = attention(x, p["dense.ln1"][i], p["dense.wq"][i],
+                      p["dense.wk"][i], p["dense.wv"][i],
+                      p["dense.wo"][i], cfg.n_heads)
+        x = dense_ffn(x, p["dense.ln2"][i], p["dense.gate"][i],
+                      p["dense.up"][i], p["dense.down"][i])
+
+    b, s, d = x.shape
+    t = b * s
+
+    def block(carry, layer):
+        x, aux = carry
+        x = attention(x, layer["ln1"], layer["wq"], layer["wk"],
+                      layer["wv"], layer["wo"], cfg.n_heads)
+        h = rmsnorm(x, layer["ln2"])
+        h2 = h.reshape(t, d)
+        logits = h2 @ layer["router"].T
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = top_k_fn(probs, cfg.top_k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+        if use_sparse:
+            y = moe_ffn_block_sparse(h2, layer["gate"], layer["up"],
+                                     layer["down"], topv, topi)
+        else:
+            sel = jax.nn.one_hot(topi, cfg.experts, dtype=x.dtype)
+            gates = jnp.einsum("tk,tke->te", topv, sel)
+            y = moe_ffn_block(h2, layer["gate"], layer["up"],
+                              layer["down"], gates)
+        if cfg.n_shared:
+            y = y + ref.expert_ffn(h2, layer["sgate"], layer["sup"],
+                                   layer["sdown"])
+        aux = aux + router_aux_loss(probs)
+        return (x + y.reshape(b, s, d), aux), None
+
+    layer_keys = ["ln1", "wq", "wk", "wv", "wo", "ln2", "router",
+                  "gate", "up", "down"]
+    if cfg.n_shared:
+        layer_keys += ["sgate", "sup", "sdown"]
+    stacked = {k: p[f"moe.{k}"] for k in layer_keys}
+    (x, aux), _ = jax.lax.scan(block, (x, 0.0), stacked)
+
+    logits = lm_head(x, p["final.ln"], p["final.head"])
+    return logits, aux / cfg.moe_layers
+
+
+def train_step(cfg: ModelConfig, flat_params, tokens, target, lr,
+               use_sparse=False):
+    """One SGD step. Returns (new flat params..., loss, ce, aux)."""
+    specs = param_specs(cfg)
+
+    def loss_fn(flat):
+        params = params_from_flat(cfg, flat)
+        logits, aux = forward(cfg, params, tokens, use_sparse)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(jnp.take_along_axis(
+            logp, target[:, None], axis=-1))
+        return ce + cfg.aux_weight * aux, (ce, aux)
+
+    (loss, (ce, aux)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(list(flat_params))
+    new = [p - lr * g for p, g in zip(flat_params, grads)]
+    assert len(new) == len(specs)
+    return (*new, loss, ce, aux)

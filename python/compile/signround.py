@@ -1,0 +1,35 @@
+"""SignRound (AutoRound) reconstruction step — the quantization function
+the paper uses (§2.3, §5.1), implemented from scratch.
+
+One step minimizes the layer reconstruction loss
+    mse(X @ qdq(W; V, alpha, beta),  X @ W)
+over the rounding offset V in [-0.5, 0.5] and clip params alpha, beta in
+[0, 1], via **SignSGD**: p <- p - lr * sign(dL/dp).
+
+The forward qdq is the L1 Pallas kernel (qdq_ste — Pallas fwd, STE bwd),
+so the paper's hot spot is on the lowered path. The rust SignRound
+driver loops this HLO with its own lr schedule per expert FC layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.qdq import qdq_ste
+
+
+def recon_loss(w, x, v, alpha, beta, bits, g):
+    wq = qdq_ste(w, v, alpha, beta, bits, g)
+    diff = x @ wq - x @ w
+    return jnp.mean(diff * diff)
+
+
+def signround_step(w, x, v, alpha, beta, lr, *, bits, g):
+    """(W[din,dout], X[n,din], V, alpha[G,dout], beta[G,dout], lr) ->
+    (V', alpha', beta', loss). SignSGD update with box projection."""
+    loss, grads = jax.value_and_grad(recon_loss, argnums=(2, 3, 4))(
+        w, x, v, alpha, beta, bits, g)
+    gv, ga, gb = grads
+    v2 = jnp.clip(v - lr * jnp.sign(gv), -0.5, 0.5)
+    a2 = jnp.clip(alpha - lr * jnp.sign(ga), 0.0, 1.0)
+    b2 = jnp.clip(beta - lr * jnp.sign(gb), 0.0, 1.0)
+    return v2, a2, b2, loss

@@ -1,0 +1,53 @@
+"""aot.py registry consistency: every variant is covered, meta matches
+param_specs, and emitted artifacts (if present) match the registry."""
+
+import json
+import os
+
+from compile import model
+from compile.aot import build_entries
+from compile.configs import MIXED_BITS, VARIANTS, moe_signature
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_registry_covers_every_variant():
+    entries = build_entries()
+    for name, cfg in VARIANTS.items():
+        assert f"{name}/train_step" in entries
+        assert f"{moe_signature(cfg)}/moe_layer" in entries
+    for bits in MIXED_BITS:
+        assert f"shared/signround_64x32_b{bits}" in entries
+        assert f"shared/qdq_64x32_b{bits}" in entries
+        assert f"shared/qdq_32x64_b{bits}" in entries
+
+
+def test_train_step_arity_matches_param_specs():
+    entries = build_entries()
+    for name, cfg in VARIANTS.items():
+        _, specs, names = entries[f"{name}/train_step"]
+        want = [n for n, _ in model.param_specs(cfg)]
+        assert names[:len(want)] == want
+        assert names[len(want):] == ["tokens", "target", "lr"]
+        for (pname, pshape), sp in zip(model.param_specs(cfg), specs):
+            assert tuple(pshape) == tuple(sp.shape), pname
+
+
+def test_meta_json_matches_registry_if_present():
+    path = os.path.join(ART, "meta.json")
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        meta = json.load(f)
+    entries = build_entries()
+    assert set(meta["entries"].keys()) == set(entries.keys())
+    for path_, (_, specs, names) in entries.items():
+        mi = meta["entries"][path_]["inputs"]
+        assert [i["name"] for i in mi] == list(names)
+        assert [tuple(i["shape"]) for i in mi] == [tuple(s.shape)
+                                                   for s in specs]
+    for name, cfg in VARIANTS.items():
+        mv = meta["variants"][name]
+        assert mv["moe_signature"] == moe_signature(cfg)
+        want = [[n, list(sh)] for n, sh in model.param_specs(cfg)]
+        assert mv["params"] == want

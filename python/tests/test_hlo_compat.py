@@ -1,0 +1,57 @@
+"""HLO-text compatibility guard: the rust side links xla_extension
+0.5.1, whose HLO parser predates several modern ops/attributes. These
+regression tests scan the emitted artifacts for constructs we have
+already been burned by (native `topk`, batched gather dims) so a model
+change can't silently break the rust loader.
+"""
+
+import glob
+import os
+import re
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+# ops/attributes that xla_extension 0.5.1's HLO text parser rejects
+FORBIDDEN = [
+    r"\btopk\(",                  # native TopK op (use sort instead)
+    r"operand_batching_dims",     # batched gather (new gather semantics)
+    r"\bragged-dot\b",
+    r"\bragged-all-to-all\b",
+]
+
+
+def artifact_files():
+    return sorted(glob.glob(os.path.join(ART, "**", "*.hlo.txt"),
+                            recursive=True))
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts`")
+def test_artifacts_exist():
+    files = artifact_files()
+    assert len(files) >= 30, f"only {len(files)} artifacts emitted"
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts`")
+def test_no_forbidden_constructs():
+    bad = []
+    for path in artifact_files():
+        text = open(path).read()
+        for pat in FORBIDDEN:
+            if re.search(pat, text):
+                bad.append((os.path.relpath(path, ART), pat))
+    assert not bad, f"incompatible HLO constructs: {bad}"
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts`")
+def test_entry_computations_are_tuples():
+    """All entries lower with return_tuple=True; the rust runtime calls
+    to_tuple() unconditionally."""
+    for path in artifact_files():
+        text = open(path).read()
+        entry = text[text.index("ENTRY"):]
+        root = re.search(r"ROOT\s+\S+\s*=\s*(\S)", entry)
+        assert root, f"{path}: ENTRY has no ROOT instruction"
+        assert root.group(1) == "(", (
+            f"{path}: entry ROOT is not a tuple (got `{root.group(1)}`)")

@@ -1,0 +1,171 @@
+"""L2 model: shapes, routing invariants, telemetry semantics, and a
+short training-loss sanity run per variant family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import VARIANTS, VISUAL_PREFIX
+
+CFG = VARIANTS["dsvl2_tiny"]
+D, M, E, K = CFG.d_model, CFG.d_expert, CFG.experts, CFG.top_k
+B, S = CFG.batch, CFG.seq
+
+
+def init_params(cfg, seed=0, scale=0.3):
+    specs = model.param_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+    flat = []
+    for name, shape in specs:
+        key, k = jax.random.split(key)
+        if name.endswith("ln") or ".ln" in name:
+            flat.append(jnp.ones(shape))
+        else:
+            flat.append(jax.random.normal(k, shape) * scale)
+    return flat
+
+
+def moe_inputs(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    x = jax.random.normal(ks[0], (B, S, D))
+    vis = jnp.zeros((B, S)).at[:, :VISUAL_PREFIX].set(1.0)
+    ln = jnp.ones((D,))
+    router = jax.random.normal(ks[1], (E, D)) * 0.3
+    gw = jax.random.normal(ks[2], (E, D, M)) * 0.3
+    uw = jax.random.normal(ks[3], (E, D, M)) * 0.3
+    dw = jax.random.normal(ks[4], (E, M, D)) * 0.3
+    sh = (jax.random.normal(ks[5], (D, CFG.d_shared)) * 0.3,
+          jax.random.normal(ks[6], (D, CFG.d_shared)) * 0.3,
+          jax.random.normal(ks[7], (CFG.d_shared, D)) * 0.3)
+    return x, vis, ln, router, gw, uw, dw, sh
+
+
+def test_moe_layer_shapes_and_counts():
+    x, vis, ln, router, gw, uw, dw, sh = moe_inputs()
+    y, counts, vis_counts, h = model.moe_layer(
+        x, vis, ln, router, gw, uw, dw, sh, K)
+    assert y.shape == (B, S, D) and h.shape == (B, S, D)
+    assert counts.shape == (E,) and vis_counts.shape == (E,)
+    # every token activates exactly K experts
+    assert int(jnp.sum(counts)) == B * S * K
+    assert int(jnp.sum(vis_counts)) == B * VISUAL_PREFIX * K
+    assert bool(jnp.all(vis_counts <= counts))
+
+
+def test_moe_layer_residual_identity_with_zero_experts():
+    """Zero expert + shared weights -> layer output == input (residual)."""
+    x, vis, ln, router, gw, uw, dw, sh = moe_inputs()
+    zero = lambda t: jnp.zeros_like(t)
+    y, _, _, _ = model.moe_layer(
+        x, vis, ln, router, zero(gw), zero(uw), zero(dw),
+        tuple(zero(t) for t in sh), K)
+    np.testing.assert_allclose(y, x, rtol=1e-6, atol=1e-6)
+
+
+def test_moe_layer_pallas_path_matches():
+    x, vis, ln, router, gw, uw, dw, sh = moe_inputs(2)
+    y1, c1, _, _ = model.moe_layer(x, vis, ln, router, gw, uw, dw, sh, K,
+                                   use_pallas=False)
+    y2, c2, _, _ = model.moe_layer(x, vis, ln, router, gw, uw, dw, sh, K,
+                                   use_pallas=True)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2)
+
+
+def test_attention_causality():
+    """Perturbing a later token never changes earlier positions."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (B, S, D))
+    ws = [jax.random.normal(k, (D, D)) * 0.3 for k in ks[1:5]]
+    ln = jnp.ones((D,))
+    y1 = model.attention(x, ln, *ws, CFG.n_heads)
+    x2 = x.at[:, S - 1].add(1.0)
+    y2 = model.attention(x2, ln, *ws, CFG.n_heads)
+    np.testing.assert_allclose(y1[:, :S - 1], y2[:, :S - 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["dsvl2_tiny", "molmoe"])
+def test_forward_shapes(name):
+    cfg = VARIANTS[name]
+    flat = init_params(cfg, scale=0.1)
+    params = model.params_from_flat(cfg, flat)
+    tokens = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    logits, aux = model.forward(cfg, params, tokens)
+    assert logits.shape == (cfg.batch, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert float(aux) >= 0.0
+
+
+def test_train_step_learns_constant_target():
+    """A few SGD steps on a fixed batch must reduce CE loss."""
+    cfg = VARIANTS["dsvl2_tiny"]
+    flat = init_params(cfg, scale=0.1)
+    bt = cfg.train_batch
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (bt, cfg.seq), 0, cfg.vocab)
+    target = jnp.full((bt,), 7, jnp.int32)
+    step = jax.jit(lambda fl, lr: model.train_step(
+        cfg, fl, tokens, target, lr))
+    out = step(flat, 0.0)
+    loss0 = float(out[len(flat)])
+    for _ in range(8):
+        out = step(flat, 0.5)
+        flat = list(out[:len(flat)])
+    loss1 = float(out[len(flat)])
+    assert loss1 < loss0, f"{loss1} !< {loss0}"
+
+
+def test_param_specs_cover_all_variants():
+    for name, cfg in VARIANTS.items():
+        specs = model.param_specs(cfg)
+        names = [n for n, _ in specs]
+        assert len(set(names)) == len(names)
+        if cfg.first_dense:
+            assert "dense.gate" in names
+        else:
+            assert "dense.gate" not in names
+        if cfg.n_shared:
+            assert "moe.sgate" in names
+        else:
+            assert "moe.sgate" not in names
+        total = sum(int(np.prod(sh)) for _, sh in specs)
+        assert total > 100_000, f"{name} suspiciously small: {total}"
+
+
+def test_sparse_dispatch_matches_dense():
+    """moe_ffn_block_sparse (gather top-k weights) == dense dispatch —
+    the §Perf L2-A optimization must be numerically transparent."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    t, d, m, e, k = 48, D, M, 16, 4
+    h2 = jax.random.normal(ks[0], (t, d))
+    gw = jax.random.normal(ks[1], (e, d, m)) * 0.3
+    uw = jax.random.normal(ks[2], (e, d, m)) * 0.3
+    dw = jax.random.normal(ks[3], (e, m, d)) * 0.3
+    probs = jax.nn.softmax(jax.random.normal(ks[4], (t, e)))
+    topv, topi = model.top_k_fn(probs, k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    sel = jax.nn.one_hot(topi, e)
+    gates = jnp.einsum("tk,tke->te", topv, sel)
+    dense = model.moe_ffn_block(h2, gw, uw, dw, gates)
+    sparse = model.moe_ffn_block_sparse(h2, gw, uw, dw, topv, topi)
+    np.testing.assert_allclose(dense, sparse, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_layer_sparse_flag_matches():
+    x, vis, ln, router, gw, uw, dw, sh = moe_inputs(3)
+    y1, c1, _, _ = model.moe_layer(x, vis, ln, router, gw, uw, dw, sh, K)
+    y2, c2, _, _ = model.moe_layer(x, vis, ln, router, gw, uw, dw, sh, K,
+                                   use_sparse=True)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2)
+
+
+def test_top_k_fn_matches_lax_top_k():
+    x = jax.random.normal(jax.random.PRNGKey(9), (40, E))
+    v1, i1 = model.top_k_fn(x, K)
+    v2, i2 = jax.lax.top_k(x, K)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

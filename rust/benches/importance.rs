@@ -1,0 +1,60 @@
+//! Importance-metric cost: Hutchinson estimation (host closed-form HVP
+//! vs the AOT'd autodiff HLO), full-model closed form, and the
+//! activation-frequency profiler — the "data-free vs calibration"
+//! trade-off of paper §3.
+
+use mopeq::benchx::{bench, bench_items, section};
+use mopeq::config;
+use mopeq::coordinator::ModelExecutor;
+use mopeq::importance::{
+    hessian::hutchinson_host, hessian_closed_form, profile_frequency,
+};
+use mopeq::moe::{local_meta, WeightStore};
+use mopeq::rng::Rng;
+use mopeq::runtime::{Session, Value};
+use mopeq::tensor::Tensor;
+
+fn main() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+    let mut rng = Rng::new(1);
+
+    section("hessian trace, one expert FC (n=2048)");
+    let w = Tensor::randn(&mut rng, &[2048], 1.0);
+    for m in [8usize, 32] {
+        bench_items(&format!("hutchinson_host_m{m}"), m as f64, || {
+            hutchinson_host(&w, m, &mut rng)
+        });
+    }
+
+    section("hessian trace, whole model");
+    bench("closed_form_dsvl2_tiny (768 experts)", || {
+        hessian_closed_form(&ws, &cfg).unwrap()
+    });
+
+    match Session::open_default() {
+        Ok(s) => {
+            section("HLO autodiff HVP (per probe)");
+            let v = Tensor::new(&[2048], rng.rademacher_vec(2048));
+            let _ = s.exec(
+                "shared/hvp_frob_n2048",
+                &[Value::F32(w.clone()), Value::F32(v.clone())],
+            );
+            bench("hvp_frob_hlo_call", || {
+                s.exec(
+                    "shared/hvp_frob_n2048",
+                    &[Value::F32(w.clone()), Value::F32(v.clone())],
+                )
+                .unwrap()
+            });
+
+            section("activation-frequency profiler (4 calib batches)");
+            let exec = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+            let _ = exec.warm();
+            bench("profile_frequency_4batches", || {
+                profile_frequency(&exec, &cfg, 4, 0).unwrap()
+            });
+        }
+        Err(e) => println!("(skipping HLO benches: {e})"),
+    }
+}

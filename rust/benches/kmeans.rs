@@ -1,0 +1,41 @@
+//! Algorithm 2 cost: K-means clustering + precision assignment at both
+//! granularities, across the four model topologies — negligible next to
+//! quantization, which is the point (the paper's assignment step is
+//! free).
+
+use mopeq::benchx::{bench, section};
+use mopeq::cluster::{assign_bits, assign_map, assign_percent_split,
+                     Granularity};
+use mopeq::config;
+use mopeq::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    section("1-D kmeans assignment (k=3 bits {2,3,4})");
+    for n in [64usize, 768, 2160] {
+        let vals: Vec<f64> = (0..n).map(|_| rng.uniform() * 10.0).collect();
+        bench(&format!("assign_bits_n{n}"), || {
+            assign_bits(&vals, &[2, 3, 4], 0)
+        });
+    }
+
+    section("whole-model assignment per variant");
+    for cfg in config::variants() {
+        let map: Vec<Vec<f64>> = (0..cfg.moe_layers())
+            .map(|_| (0..cfg.experts).map(|_| rng.uniform()).collect())
+            .collect();
+        for (tag, gran) in [("layer", Granularity::LayerWise),
+                            ("model", Granularity::ModelWise)] {
+            bench(&format!("{}_{tag}", cfg.name), || {
+                assign_map(&map, &[2, 3, 4], gran, 0)
+            });
+        }
+    }
+
+    section("baseline percentage split (ablation comparator)");
+    let vals: Vec<f64> = (0..768).map(|_| rng.uniform()).collect();
+    bench("percent_split_n768", || {
+        assign_percent_split(&vals, &[2, 3, 4])
+    });
+}

@@ -1,0 +1,81 @@
+//! §5.4 offload-traffic bench: bytes moved per request under each
+//! precision-assignment policy, swept over device-cache sizes — the
+//! quantitative version of the paper's hardware-implications argument.
+//! Skewed (MolmoE-like) routing; hot experts are the sensitive ones
+//! under AF (high bits) but not under MoPEQ.
+
+use mopeq::benchx::section;
+use mopeq::cluster::{assign_map, Granularity};
+use mopeq::config;
+use mopeq::moe::PrecisionMap;
+use mopeq::serve::{expert_bytes, simulate_offload, LinkModel, RoutingDist};
+
+fn main() {
+    let cfg = config::variant("molmoe").unwrap();
+    let lm = cfg.moe_layers();
+
+    // skewed routing: 8 hot experts per layer get 50x the traffic
+    let mut weights = vec![vec![1.0f64; cfg.experts]; lm];
+    for layer in weights.iter_mut() {
+        for e in 0..8 {
+            layer[e] = 50.0;
+        }
+    }
+    let dist = RoutingDist::from_weights(&weights);
+
+    // AF-style: importance == routing weight (hot => high bits).
+    let af_map = PrecisionMap {
+        bits: assign_map(&weights, &[2, 3, 4], Granularity::ModelWise, 0),
+    };
+    // MoPEQ-style: sensitivity decreasing with depth, independent of
+    // hotness (the init design of the sim models).
+    let sens: Vec<Vec<f64>> = (0..lm)
+        .map(|l| vec![(lm - l) as f64; cfg.experts])
+        .collect();
+    let mopeq_map = PrecisionMap {
+        bits: assign_map(&sens, &[2, 3, 4], Granularity::ModelWise, 0),
+    };
+    let uniform4 = PrecisionMap::uniform(&cfg, 4);
+    let uniform3 = PrecisionMap::uniform(&cfg, 3);
+
+    let full: usize = uniform4
+        .iter_experts()
+        .map(|(_, b)| expert_bytes(&cfg, b))
+        .sum();
+    let link = LinkModel::default();
+    let requests = 400;
+
+    section(&format!(
+        "bytes/request vs cache size ({} requests, molmoe topology, \
+         skewed routing)",
+        requests
+    ));
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>14}",
+        "cache", "AF-map", "MoPEQ-map", "uniform4", "uniform3"
+    );
+    for frac in [0.05, 0.125, 0.25, 0.5, 1.0] {
+        let cache = (full as f64 * frac) as usize;
+        let mut row = format!("{:>8.1}% ", frac * 100.0);
+        for m in [&af_map, &mopeq_map, &uniform4, &uniform3] {
+            let r = simulate_offload(&cfg, m, &dist, &link, cache,
+                                     requests, 7);
+            row.push_str(&format!(" {:>13.0}", r.bytes_per_request));
+        }
+        println!("{row}");
+    }
+
+    section("hit rate + link time at 25% cache");
+    let cache = full / 4;
+    for (label, m) in [("AF-map", &af_map), ("MoPEQ-map", &mopeq_map),
+                       ("uniform4", &uniform4)] {
+        let r = simulate_offload(&cfg, m, &dist, &link, cache, requests, 7);
+        println!(
+            "{label:<10} hit-rate {:.3}  transfer {:.3} ms/request \
+             ({} misses)",
+            r.hit_rate,
+            r.transfer_secs * 1e3 / requests as f64,
+            r.misses
+        );
+    }
+}

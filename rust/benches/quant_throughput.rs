@@ -1,0 +1,62 @@
+//! Quantizer throughput: RTN / GPTQ / AWQ host paths, bit pack/unpack,
+//! and the SignRound HLO step — the cost side of the paper's method
+//! (PTQ cost per expert FC layer).
+
+use mopeq::benchx::{bench, bench_items, section};
+use mopeq::coordinator::{signround_optimize, SignRoundConfig};
+use mopeq::quant::{self, awq, gptq, pack};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::tensor::Tensor;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+    let x = Tensor::randn(&mut rng, &[256, 64], 1.0);
+
+    section("host quantizers (one expert FC 64x32)");
+    for bits in [2u8, 3, 4] {
+        bench(&format!("rtn_b{bits}"), || {
+            quant::rtn_quantize(&w, bits, 32)
+        });
+    }
+    bench("gptq_b4 (256 calib rows)", || {
+        gptq::gptq_quantize(&w, &x, 4, 32, 0.01).unwrap()
+    });
+    bench("awq_b4 (256 calib rows)", || {
+        awq::awq_quantize(&w, &x, 4, 32, 0.5)
+    });
+
+    section("bit packing (64x32 codes)");
+    let qm = quant::rtn_quantize(&w, 4, 32);
+    for bits in [2u8, 3, 4, 8] {
+        let q = quant::rtn_quantize(&w, bits, 32);
+        bench_items(&format!("pack_b{bits}"), (64 * 32) as f64, || {
+            pack::pack(&q.codes, 64, 32, bits).unwrap()
+        });
+    }
+    let packed = pack::pack(&qm.codes, 64, 32, 4).unwrap();
+    bench_items("unpack_b4", (64 * 32) as f64, || {
+        pack::unpack(&packed, 64, 32, 4)
+    });
+    bench("dequantize_b4", || qm.dequantize());
+
+    section("SignRound HLO step (Pallas qdq fwd + STE bwd + SignSGD)");
+    match Session::open_default() {
+        Ok(s) => {
+            let xs = Tensor::randn(&mut rng, &[64, 64], 1.0);
+            let cfg = SignRoundConfig { steps: 10, lr: 0.02, calib_rows: 64 };
+            // warm the executable so the bench measures steps, not compile
+            let _ = signround_optimize(&s, &w, &xs, 2, 32, &cfg);
+            for bits in [2u8, 4] {
+                bench_items(
+                    &format!("signround_10steps_b{bits}"),
+                    10.0,
+                    || signround_optimize(&s, &w, &xs, bits, 32, &cfg)
+                        .unwrap(),
+                );
+            }
+        }
+        Err(e) => println!("(skipping HLO benches: {e})"),
+    }
+}

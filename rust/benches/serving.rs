@@ -1,0 +1,84 @@
+//! Serving bench: end-to-end latency/throughput of the threaded batching
+//! server under fp16 vs mixed-precision weights, and the batch-linger
+//! policy sweep (throughput vs tail latency).
+
+use mopeq::benchx::section;
+use mopeq::cluster::Granularity;
+use mopeq::config;
+use mopeq::coordinator::{quantize_experts, Quantizer};
+use mopeq::data::{gen_sample, Task};
+use mopeq::importance::hessian_closed_form;
+use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::rng::Rng;
+use mopeq::serve::{BatchPolicy, ServerHandle};
+use std::time::Duration;
+
+fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), seed);
+    (cfg, ws)
+}
+
+fn run(cfg: &config::ModelConfig, ws: WeightStore, policy: BatchPolicy,
+       n: usize) -> anyhow::Result<mopeq::serve::ServerStats> {
+    let handle = ServerHandle::start(cfg.clone(), ws, policy)?;
+    let mut rng = Rng::new(9).derive("serving-bench");
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        pending.push(handle.submit(gen_sample(task, cfg, &mut rng))?);
+    }
+    for rx in pending {
+        rx.recv()?;
+    }
+    handle.shutdown()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = if std::env::var_os("MOPEQ_FULL").is_some() { 256 } else { 64 };
+
+    section("precision maps (batch linger 2ms)");
+    let (cfg, ws) = fresh_store(0);
+    let sens = hessian_closed_form(&ws, &cfg)?;
+    let mopeq_bits = mopeq::cluster::assign_map(
+        &sens.values, &[2, 3, 4], Granularity::ModelWise, 0);
+    for label in ["fp16", "uniform4-rtn", "mopeq-mixed-rtn"] {
+        let (_, mut w) = fresh_store(0);
+        match label {
+            "uniform4-rtn" => {
+                quantize_experts(None, &cfg, &mut w,
+                                 &PrecisionMap::uniform(&cfg, 4),
+                                 &Quantizer::Rtn, None)?;
+            }
+            "mopeq-mixed-rtn" => {
+                quantize_experts(None, &cfg, &mut w,
+                                 &PrecisionMap { bits: mopeq_bits.clone() },
+                                 &Quantizer::Rtn, None)?;
+            }
+            _ => {}
+        }
+        let s = run(&cfg, w, BatchPolicy::default(), n)?;
+        println!(
+            "{label:<18} {:>4} reqs  fill {:.2}  p50 {:?}  p95 {:?}  \
+             {:>7.1} req/s",
+            s.requests, s.mean_fill, s.p50, s.p95, s.throughput_rps
+        );
+    }
+
+    section("batch linger sweep (fp16)");
+    for linger_ms in [0u64, 2, 8] {
+        let (_, w) = fresh_store(0);
+        let s = run(
+            &cfg,
+            w,
+            BatchPolicy { max_linger: Duration::from_millis(linger_ms) },
+            n,
+        )?;
+        println!(
+            "linger {linger_ms:>2} ms  batches {:>4}  fill {:.2}  \
+             p50 {:?}  p95 {:?}  {:>7.1} req/s",
+            s.batches, s.mean_fill, s.p50, s.p95, s.throughput_rps
+        );
+    }
+    Ok(())
+}

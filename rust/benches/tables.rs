@@ -1,0 +1,72 @@
+//! Table regeneration bench — the paper's evaluation grid. Runs the nine
+//! method rows (Tables 2–5) for each sim model, prints the tables, and
+//! writes CSVs to reports/.
+//!
+//! Runtime scales with (models × rows × tasks × samples); the default is
+//! the tiny model with reduced sampling so `cargo bench` stays tractable
+//! on one core. Set:
+//!   MOPEQ_FULL=1        all four models, full sampling (tables 2–5)
+//!   MOPEQ_MODELS=a,b    explicit model list
+//!   MOPEQ_SAMPLES=n     eval samples per task
+
+use mopeq::config;
+use mopeq::coordinator::{MethodSpec, Pipeline};
+use mopeq::report;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var_os("MOPEQ_FULL").is_some();
+    let models: Vec<String> = match std::env::var("MOPEQ_MODELS") {
+        Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        Err(_) if full => config::variants()
+            .iter()
+            .map(|c| c.name.to_string())
+            .collect(),
+        Err(_) => vec!["dsvl2_tiny".into(), "molmoe".into()],
+    };
+    let samples: usize = std::env::var("MOPEQ_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 64 } else { 24 });
+
+    println!("{}", report::table1(&config::variants()));
+    report::write_report("table1.txt",
+                         &report::table1(&config::variants()))?;
+
+    for model in &models {
+        let t0 = Instant::now();
+        let mut p = Pipeline::open(model, 0)?;
+        p.eval_samples = samples;
+        p.hessian_closed_form = !full; // exact trace keeps quick mode quick
+        if !full {
+            p.calib_batches = 8;
+            p.signround.steps = 20;
+        }
+        let mut results = Vec::new();
+        for spec in MethodSpec::table_rows() {
+            let r0 = Instant::now();
+            let r = p.run_method(&spec)?;
+            eprintln!(
+                "  [{model}] {:<38} {:>6.1}s  size {:.2} MB  mean acc {:.3}",
+                r.label,
+                r0.elapsed().as_secs_f64(),
+                r.size_mb,
+                r.scores.mean()
+            );
+            results.push(r);
+        }
+        let table = report::method_table(&p.cfg, &results);
+        println!("{table}");
+        report::write_report(&format!("table_{model}.txt"), &table)?;
+        report::write_report(
+            &format!("table_{model}.csv"),
+            &report::method_table_csv(&p.cfg, &results),
+        )?;
+        println!(
+            "[{model}] done in {:.1}s (n={samples}/task)\n",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("CSVs in {}", report::reports_dir().display());
+    Ok(())
+}

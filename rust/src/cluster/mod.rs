@@ -1,0 +1,259 @@
+//! MoPEQ precision assignment (paper Algorithm 2): K-means clustering of
+//! expert-importance values, clusters sorted by mean importance, highest
+//! bit width to the most important cluster. Supports the paper's two
+//! granularities (layer-wise [18] vs model-wise, §4.2) plus the rigid
+//! percentage-split baseline ([12]-style) for the ablation bench.
+
+use crate::rng::Rng;
+
+/// K-means++ initialization + Lloyd iterations on 1-D values.
+/// Returns (assignment per value, centroid per cluster).
+pub fn kmeans_1d(values: &[f64], k: usize, seed: u64) -> (Vec<usize>, Vec<f64>) {
+    assert!(k >= 1);
+    let n = values.len();
+    assert!(n >= k, "need at least k values");
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(values[rng.below(n)]);
+    while centroids.len() < k {
+        let d2: Vec<f64> = values
+            .iter()
+            .map(|v| {
+                centroids
+                    .iter()
+                    .map(|c| (v - c) * (v - c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // all points coincide with a centroid: spread arbitrarily
+            centroids.push(values[rng.below(n)]);
+            continue;
+        }
+        let mut r = rng.uniform() * total;
+        let mut pick = n - 1;
+        for (i, d) in d2.iter().enumerate() {
+            r -= d;
+            if r <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(values[pick]);
+    }
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..100 {
+        // assignment step
+        let mut changed = false;
+        for (i, v) in values.iter().enumerate() {
+            let (best, _) = centroids
+                .iter()
+                .enumerate()
+                .map(|(c, m)| (c, (v - m).abs()))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        // update step
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, v) in values.iter().enumerate() {
+            sums[assign[i]] += v;
+            counts[assign[i]] += 1;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                centroids[c] = sums[c] / counts[c] as f64;
+            } else {
+                // dead cluster: reseed on the farthest point
+                let far = values
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        let da = (a.1 - centroids[assign[a.0]]).abs();
+                        let db = (b.1 - centroids[assign[b.0]]).abs();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap()
+                    .0;
+                centroids[c] = values[far];
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    (assign, centroids)
+}
+
+/// Algorithm 2: assign a bit width from `bits` (any order) to each value
+/// by clustering into `bits.len()` groups; the cluster with the highest
+/// mean importance receives the highest bit width.
+pub fn assign_bits(importance: &[f64], bits: &[u8], seed: u64) -> Vec<u8> {
+    let c = bits.len();
+    if importance.len() < c {
+        // degenerate: fewer experts than clusters — everything high bits
+        let hi = *bits.iter().max().unwrap();
+        return vec![hi; importance.len()];
+    }
+    let (assign, centroids) = kmeans_1d(importance, c, seed);
+    // sort clusters by mean importance descending
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_by(|&a, &b| centroids[b].partial_cmp(&centroids[a]).unwrap());
+    // sorted bits descending: O_i -> P'_i
+    let mut bits_desc = bits.to_vec();
+    bits_desc.sort_unstable_by(|a, b| b.cmp(a));
+    let mut cluster_bits = vec![0u8; c];
+    for (rank, &cluster) in order.iter().enumerate() {
+        cluster_bits[cluster] = bits_desc[rank];
+    }
+    assign.iter().map(|&a| cluster_bits[a]).collect()
+}
+
+/// Granularity of Algorithm 2 (paper §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// cluster experts within each MoE layer independently ([18])
+    LayerWise,
+    /// cluster all experts of the model as one population (MoPEQ)
+    ModelWise,
+}
+
+impl Granularity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Granularity::LayerWise => "Layer-wise",
+            Granularity::ModelWise => "Model-wise",
+        }
+    }
+}
+
+/// Assign bits to a `[layers][experts]` importance map at the requested
+/// granularity. Returns the same nested shape of bit widths.
+pub fn assign_map(
+    importance: &[Vec<f64>],
+    bits: &[u8],
+    gran: Granularity,
+    seed: u64,
+) -> Vec<Vec<u8>> {
+    match gran {
+        Granularity::LayerWise => importance
+            .iter()
+            .enumerate()
+            .map(|(l, layer)| assign_bits(layer, bits, seed ^ l as u64))
+            .collect(),
+        Granularity::ModelWise => {
+            let flat: Vec<f64> =
+                importance.iter().flatten().copied().collect();
+            let assigned = assign_bits(&flat, bits, seed);
+            let mut out = Vec::with_capacity(importance.len());
+            let mut i = 0;
+            for layer in importance {
+                out.push(assigned[i..i + layer.len()].to_vec());
+                i += layer.len();
+            }
+            out
+        }
+    }
+}
+
+/// Rigid percentage-split baseline (the [12]-style scheme the paper's
+/// §4.1 motivates against): sort by importance, top p% gets the highest
+/// bits, bottom p% the lowest, middle the middle.
+pub fn assign_percent_split(importance: &[f64], bits: &[u8]) -> Vec<u8> {
+    let n = importance.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        importance[b].partial_cmp(&importance[a]).unwrap()
+    });
+    let mut bits_desc = bits.to_vec();
+    bits_desc.sort_unstable_by(|a, b| b.cmp(a));
+    let c = bits_desc.len();
+    let mut out = vec![0u8; n];
+    for (rank, &idx) in order.iter().enumerate() {
+        let bucket = (rank * c / n).min(c - 1);
+        out[idx] = bits_desc[bucket];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_obvious_clusters() {
+        let vals = [0.0, 0.1, 0.05, 5.0, 5.1, 4.9, 10.0, 10.2, 9.9];
+        let (assign, centroids) = kmeans_1d(&vals, 3, 0);
+        assert_eq!(assign[0], assign[1]);
+        assert_eq!(assign[0], assign[2]);
+        assert_eq!(assign[3], assign[4]);
+        assert_eq!(assign[6], assign[7]);
+        assert_ne!(assign[0], assign[3]);
+        assert_ne!(assign[3], assign[6]);
+        let mut c = centroids.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((c[0] - 0.05).abs() < 0.01);
+        assert!((c[2] - 10.033).abs() < 0.05);
+    }
+
+    #[test]
+    fn assign_bits_orders_by_importance() {
+        let vals = [0.01, 0.02, 5.0, 5.2, 9.9, 10.0];
+        let bits = assign_bits(&vals, &[2, 3, 4], 1);
+        assert_eq!(bits, vec![2, 2, 3, 3, 4, 4]);
+    }
+
+    #[test]
+    fn assign_bits_unbalanced_beats_percent_split() {
+        // 8 important experts of 10 — the paper's §4.1 motivating case:
+        // K-means keeps all 8 at high precision, a 50/50 split cannot.
+        let vals = [9.0, 9.1, 9.2, 8.9, 9.05, 9.15, 8.95, 9.08, 0.1, 0.2];
+        let km = assign_bits(&vals, &[2, 4], 0);
+        assert_eq!(&km[..8], &[4u8; 8]);
+        let ps = assign_percent_split(&vals, &[2, 4]);
+        let high = ps.iter().filter(|&&b| b == 4).count();
+        assert_eq!(high, 5); // the rigid split demotes 3 critical experts
+    }
+
+    #[test]
+    fn model_wise_vs_layer_wise() {
+        // three well-separated importance bands placed across two layers:
+        // layer 0 entirely in the high band, layer 1 split mid/low.
+        let map = vec![
+            vec![10.0, 10.1, 9.9, 10.05],
+            vec![5.0, 5.1, 0.1, 0.12],
+        ];
+        let model = assign_map(&map, &[2, 3, 4], Granularity::ModelWise, 0);
+        // model-wise: all of layer 0 high; layer 1 = mid, mid, low, low
+        assert!(model[0].iter().all(|&b| b == 4), "{model:?}");
+        assert_eq!(model[1], vec![3, 3, 2, 2]);
+        let layer = assign_map(&map, &[2, 3, 4], Granularity::LayerWise, 0);
+        // layer-wise is forced to spread bits inside each layer, so some
+        // globally-critical layer-0 experts are demoted
+        assert!(layer[0].iter().any(|&b| b < 4), "{layer:?}");
+    }
+
+    #[test]
+    fn identical_importance_is_stable() {
+        let vals = [1.0; 16];
+        let bits = assign_bits(&vals, &[2, 3, 4], 0);
+        assert_eq!(bits.len(), 16);
+        // all values identical: every expert gets the same bucket
+        assert!(bits.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn fewer_values_than_clusters() {
+        let bits = assign_bits(&[1.0, 2.0], &[2, 3, 4], 0);
+        assert_eq!(bits, vec![4, 4]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Model-variant configuration, mirroring `python/compile/configs.py`
+//! (the paper's Table 1 topologies at sim dims). The rust constants are
+//! cross-checked against `artifacts/meta.json` at registry load — the
+//! two sides cannot drift silently.
+
+use crate::jsonx::Json;
+use anyhow::{bail, Result};
+
+/// One sim model variant (paper Table 1 row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    /// the real model this variant mirrors (reports/tables label)
+    pub paper_name: &'static str,
+    pub layers: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub first_dense: usize,
+    pub n_shared: usize,
+    pub aux_weight: f32,
+    pub d_model: usize,
+    pub d_expert: usize,
+    pub d_shared: usize,
+    pub d_dense: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub train_batch: usize,
+    pub group: usize,
+}
+
+impl ModelConfig {
+    pub fn moe_layers(&self) -> usize {
+        self.layers - self.first_dense
+    }
+
+    /// `moe_eXX_kY_sZ` — key for MoE-layer artifact sharing.
+    pub fn moe_signature(&self) -> String {
+        format!("moe_e{}_k{}_s{}", self.experts, self.top_k, self.n_shared)
+    }
+
+    /// Total routed experts in the model (clustering universe size).
+    pub fn total_experts(&self) -> usize {
+        self.moe_layers() * self.experts
+    }
+
+    /// Parameter element count of one routed expert (gate+up+down).
+    pub fn expert_params(&self) -> usize {
+        2 * self.d_model * self.d_expert + self.d_expert * self.d_model
+    }
+
+    /// Verify this config against the `variants.<name>.config` object
+    /// emitted by aot.py.
+    pub fn check_meta(&self, meta: &Json) -> Result<()> {
+        let checks: [(&str, usize); 12] = [
+            ("layers", self.layers),
+            ("experts", self.experts),
+            ("top_k", self.top_k),
+            ("first_dense", self.first_dense),
+            ("n_shared", self.n_shared),
+            ("d_model", self.d_model),
+            ("d_expert", self.d_expert),
+            ("n_heads", self.n_heads),
+            ("vocab", self.vocab),
+            ("seq", self.seq),
+            ("batch", self.batch),
+            ("group", self.group),
+        ];
+        for (key, want) in checks {
+            let got = meta.req(key)?.as_usize()?;
+            if got != want {
+                bail!("{}: meta {key}={got}, rust expects {want}",
+                      self.name);
+            }
+        }
+        let aux = meta.req("aux_weight")?.as_f64()? as f32;
+        if (aux - self.aux_weight).abs() > 1e-9 {
+            bail!("{}: aux_weight mismatch", self.name);
+        }
+        Ok(())
+    }
+}
+
+const COMMON: ModelConfig = ModelConfig {
+    name: "",
+    paper_name: "",
+    layers: 0,
+    experts: 0,
+    top_k: 0,
+    first_dense: 0,
+    n_shared: 0,
+    aux_weight: 0.0,
+    d_model: 64,
+    d_expert: 32,
+    d_shared: 64,
+    d_dense: 256,
+    n_heads: 4,
+    vocab: 256,
+    seq: 32,
+    batch: 4,
+    train_batch: 16,
+    group: 32,
+};
+
+/// The four sim variants (paper Table 1).
+pub fn variants() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "dsvl2_tiny",
+            paper_name: "DeepSeek VL2-Tiny",
+            layers: 12,
+            experts: 64,
+            top_k: 6,
+            first_dense: 1,
+            n_shared: 1,
+            aux_weight: 0.01,
+            ..COMMON
+        },
+        ModelConfig {
+            name: "dsvl2_small",
+            paper_name: "DeepSeek VL2-Small",
+            layers: 27,
+            experts: 64,
+            top_k: 6,
+            first_dense: 1,
+            n_shared: 1,
+            aux_weight: 0.02,
+            ..COMMON
+        },
+        ModelConfig {
+            name: "dsvl2_base",
+            paper_name: "DeepSeek VL2",
+            layers: 30,
+            experts: 72,
+            top_k: 6,
+            first_dense: 1,
+            n_shared: 1,
+            aux_weight: 0.01,
+            ..COMMON
+        },
+        ModelConfig {
+            name: "molmoe",
+            paper_name: "MolmoE-1B",
+            layers: 16,
+            experts: 64,
+            top_k: 8,
+            first_dense: 0,
+            n_shared: 0,
+            aux_weight: 0.0,
+            ..COMMON
+        },
+    ]
+}
+
+pub fn variant(name: &str) -> Result<ModelConfig> {
+    variants()
+        .into_iter()
+        .find(|v| v.name == name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown variant `{name}` (have: dsvl2_tiny, dsvl2_small, \
+             dsvl2_base, molmoe)"))
+}
+
+/// Number of visual-prefix tokens in every task sequence.
+pub const VISUAL_PREFIX: usize = 8;
+
+/// MoPEQ mixed-precision search space (paper §5.1).
+pub const MIXED_BITS: [u8; 3] = [2, 3, 4];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_topologies() {
+        // the four rows of paper Table 1
+        let v = variants();
+        let by: std::collections::HashMap<_, _> =
+            v.iter().map(|c| (c.name, c)).collect();
+        assert_eq!((by["dsvl2_tiny"].layers, by["dsvl2_tiny"].experts,
+                    by["dsvl2_tiny"].top_k), (12, 64, 6));
+        assert_eq!((by["dsvl2_small"].layers, by["dsvl2_small"].experts,
+                    by["dsvl2_small"].top_k), (27, 64, 6));
+        assert_eq!((by["dsvl2_base"].layers, by["dsvl2_base"].experts,
+                    by["dsvl2_base"].top_k), (30, 72, 6));
+        assert_eq!((by["molmoe"].layers, by["molmoe"].experts,
+                    by["molmoe"].top_k), (16, 64, 8));
+        // DeepSeek-V2: no MoE in the first layer; MolmoE: MoE everywhere
+        assert_eq!(by["dsvl2_base"].first_dense, 1);
+        assert_eq!(by["molmoe"].first_dense, 0);
+        // MolmoE trains without load-balance loss (imbalanced Fig. 2)
+        assert_eq!(by["molmoe"].aux_weight, 0.0);
+    }
+
+    #[test]
+    fn signatures_shard_as_designed() {
+        let v = variants();
+        let sig = |n: &str| {
+            v.iter().find(|c| c.name == n).unwrap().moe_signature()
+        };
+        assert_eq!(sig("dsvl2_tiny"), sig("dsvl2_small"));
+        assert_ne!(sig("dsvl2_tiny"), sig("dsvl2_base"));
+        assert_ne!(sig("dsvl2_tiny"), sig("molmoe"));
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        assert!(variant("nope").is_err());
+        assert!(variant("dsvl2_base").is_ok());
+    }
+}

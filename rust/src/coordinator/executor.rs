@@ -1,0 +1,281 @@
+//! Layer-by-layer model executor: the rust-owned transformer loop over
+//! the AOT'd per-layer HLO entries (`embed → [attn → ffn]×L → lm_head`).
+//!
+//! Weights are **runtime arguments** (DESIGN.md weights-as-arguments
+//! invariant): the executor pre-slices the stacked weight store into
+//! per-layer argument vectors once at construction, so swapping in a
+//! differently-quantized store is just `ModelExecutor::new` again with
+//! no recompilation, and each forward pass does no slicing work.
+//!
+//! The MoE entry also returns per-expert token counts (total and
+//! visual-prefix-only) and the post-norm hidden states — the raw
+//! telemetry feeding the activation-frequency profiler (Fig. 2) and the
+//! SignRound/GPTQ/AWQ calibration capture.
+
+use crate::config::ModelConfig;
+use crate::moe::WeightStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use crate::runtime::DeviceTensor;
+use xla::PjRtBuffer;
+
+/// Pre-sliced arguments for one attention block, held as **device
+/// buffers** uploaded once at construction, so each forward pass pays
+/// zero weight conversion/upload cost (EXPERIMENTS.md §Perf L3-B/C).
+struct AttnArgs {
+    ln: DeviceTensor,
+    wq: DeviceTensor,
+    wk: DeviceTensor,
+    wv: DeviceTensor,
+    wo: DeviceTensor,
+}
+
+struct DenseArgs {
+    attn: AttnArgs,
+    ln2: DeviceTensor,
+    gate: DeviceTensor,
+    up: DeviceTensor,
+    down: DeviceTensor,
+}
+
+struct MoeArgs {
+    attn: AttnArgs,
+    ln2: DeviceTensor,
+    router: DeviceTensor,
+    gate: DeviceTensor,
+    up: DeviceTensor,
+    down: DeviceTensor,
+    shared: Option<(DeviceTensor, DeviceTensor, DeviceTensor)>,
+}
+
+/// Which lowering of the MoE layer body to execute (same numerics;
+/// see EXPERIMENTS.md §Perf L2-A for the trade-off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MoeKernel {
+    /// dense dispatch: compute all E experts, mask by gates
+    #[default]
+    Dense,
+    /// dense dispatch through the L1 Pallas kernel
+    Pallas,
+    /// sparse dispatch: gather top-k expert weights per token
+    Sparse,
+}
+
+impl MoeKernel {
+    fn entry(&self) -> &'static str {
+        match self {
+            MoeKernel::Dense => "moe_layer",
+            MoeKernel::Pallas => "moe_layer_pallas",
+            MoeKernel::Sparse => "moe_layer_sparse",
+        }
+    }
+}
+
+/// Output of one forward pass.
+pub struct ForwardOutput {
+    /// last-position logits [B, vocab]
+    pub logits: Tensor<f32>,
+    /// per-MoE-layer expert token counts [Lm][E]
+    pub counts: Vec<Vec<f32>>,
+    /// same, restricted to visual-prefix tokens
+    pub vis_counts: Vec<Vec<f32>>,
+    /// post-norm expert inputs per MoE layer (only when captured)
+    pub hidden: Option<Vec<Tensor<f32>>>,
+}
+
+pub struct ModelExecutor<'a> {
+    session: &'a Session,
+    pub cfg: ModelConfig,
+    moe_entry: String,
+    embed_table: DeviceTensor,
+    embed_pos: DeviceTensor,
+    dense: Vec<DenseArgs>,
+    moe: Vec<MoeArgs>,
+    final_ln: DeviceTensor,
+    head: DeviceTensor,
+}
+
+impl<'a> ModelExecutor<'a> {
+    /// Build from a weight store (slices every layer's arguments once).
+    pub fn new(
+        session: &'a Session,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+    ) -> Result<ModelExecutor<'a>> {
+        Self::with_options(session, cfg, ws, MoeKernel::default())
+    }
+
+    /// Select which MoE-layer lowering to run (dense / pallas / sparse).
+    pub fn with_options(
+        session: &'a Session,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        kernel: MoeKernel,
+    ) -> Result<ModelExecutor<'a>> {
+        if ws.variant != cfg.name {
+            bail!("weight store is for `{}`, config is `{}`", ws.variant, cfg.name);
+        }
+        let val = |t: Tensor<f32>| -> Result<DeviceTensor> {
+            session.upload(&Value::F32(t))
+        };
+        let attn_for = |prefix: &str, l: usize| -> Result<AttnArgs> {
+            Ok(AttnArgs {
+                ln: val(ws.get(&format!("{prefix}.ln1"))?.index0(l))?,
+                wq: val(ws.get(&format!("{prefix}.wq"))?.index0(l))?,
+                wk: val(ws.get(&format!("{prefix}.wk"))?.index0(l))?,
+                wv: val(ws.get(&format!("{prefix}.wv"))?.index0(l))?,
+                wo: val(ws.get(&format!("{prefix}.wo"))?.index0(l))?,
+            })
+        };
+
+        let mut dense = Vec::with_capacity(cfg.first_dense);
+        for l in 0..cfg.first_dense {
+            dense.push(DenseArgs {
+                attn: attn_for("dense", l)?,
+                ln2: val(ws.get("dense.ln2")?.index0(l))?,
+                gate: val(ws.get("dense.gate")?.index0(l))?,
+                up: val(ws.get("dense.up")?.index0(l))?,
+                down: val(ws.get("dense.down")?.index0(l))?,
+            });
+        }
+        let mut moe = Vec::with_capacity(cfg.moe_layers());
+        for l in 0..cfg.moe_layers() {
+            let shared = if cfg.n_shared > 0 {
+                Some((
+                    val(ws.get("moe.sgate")?.index0(l))?,
+                    val(ws.get("moe.sup")?.index0(l))?,
+                    val(ws.get("moe.sdown")?.index0(l))?,
+                ))
+            } else {
+                None
+            };
+            moe.push(MoeArgs {
+                attn: attn_for("moe", l)?,
+                ln2: val(ws.get("moe.ln2")?.index0(l))?,
+                router: val(ws.get("moe.router")?.index0(l))?,
+                gate: val(ws.get("moe.gate")?.index0(l))?,
+                up: val(ws.get("moe.up")?.index0(l))?,
+                down: val(ws.get("moe.down")?.index0(l))?,
+                shared,
+            });
+        }
+        Ok(ModelExecutor {
+            session,
+            cfg: cfg.clone(),
+            moe_entry: format!("{}/{}", cfg.moe_signature(), kernel.entry()),
+            embed_table: val(ws.get("embed.table")?.clone())?,
+            embed_pos: val(ws.get("embed.pos")?.clone())?,
+            dense,
+            moe,
+            final_ln: val(ws.get("final.ln")?.clone())?,
+            head: val(ws.get("final.head")?.clone())?,
+        })
+    }
+
+    /// Pre-compile all entries this executor needs (so serving latency
+    /// never includes XLA compilation).
+    pub fn warm(&self) -> Result<()> {
+        self.session.warm("shared/embed")?;
+        self.session.warm("shared/attn_layer")?;
+        if !self.dense.is_empty() {
+            self.session.warm("shared/dense_ffn")?;
+        }
+        self.session.warm(&self.moe_entry)?;
+        self.session.warm("shared/lm_head")?;
+        Ok(())
+    }
+
+    fn attn(&self, x: &PjRtBuffer, a: &AttnArgs) -> Result<Value> {
+        let out = self.session.exec_buffers(
+            "shared/attn_layer",
+            &[x, &a.ln.buf, &a.wq.buf, &a.wk.buf, &a.wv.buf, &a.wo.buf],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Full forward: tokens [B,S] i32, vis_mask [B,S] f32.
+    pub fn forward(
+        &self,
+        tokens: &Tensor<i32>,
+        vis_mask: &Tensor<f32>,
+        capture_hidden: bool,
+    ) -> Result<ForwardOutput> {
+        let tok_buf = self.session.upload(&Value::I32(tokens.clone()))?;
+        let mut x = self
+            .session
+            .exec_buffers(
+                "shared/embed",
+                &[&tok_buf.buf, &self.embed_table.buf, &self.embed_pos.buf],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+
+        for d in &self.dense {
+            let xb = self.session.upload(&x)?;
+            x = self.attn(&xb.buf, &d.attn)?;
+            let xb = self.session.upload(&x)?;
+            x = self
+                .session
+                .exec_buffers(
+                    "shared/dense_ffn",
+                    &[&xb.buf, &d.ln2.buf, &d.gate.buf, &d.up.buf,
+                      &d.down.buf],
+                )?
+                .into_iter()
+                .next()
+                .unwrap();
+        }
+
+        let vis_buf = self.session.upload(&Value::F32(vis_mask.clone()))?;
+        let mut counts = Vec::with_capacity(self.moe.len());
+        let mut vis_counts = Vec::with_capacity(self.moe.len());
+        let mut hidden = capture_hidden.then(Vec::new);
+        for m in &self.moe {
+            let xb = self.session.upload(&x)?;
+            x = self.attn(&xb.buf, &m.attn)?;
+            let xb = self.session.upload(&x)?;
+            let mut args: Vec<&PjRtBuffer> = vec![
+                &xb.buf, &vis_buf.buf, &m.ln2.buf, &m.router.buf,
+                &m.gate.buf, &m.up.buf, &m.down.buf,
+            ];
+            if let Some((sg, su, sd)) = &m.shared {
+                args.extend([&sg.buf, &su.buf, &sd.buf]);
+            }
+            let mut out = self.session.exec_buffers(&self.moe_entry, &args)?;
+            // outputs: (y, counts, vis_counts, h)
+            let h = out.pop().unwrap().into_f32()?;
+            let vc = out.pop().unwrap().into_f32()?;
+            let c = out.pop().unwrap().into_f32()?;
+            x = out.pop().unwrap();
+            counts.push(c.data);
+            vis_counts.push(vc.data);
+            if let Some(hs) = hidden.as_mut() {
+                hs.push(h);
+            }
+        }
+
+        let xb = self.session.upload(&x)?;
+        let logits = self
+            .session
+            .exec_buffers(
+                "shared/lm_head",
+                &[&xb.buf, &self.final_ln.buf, &self.head.buf],
+            )?
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_f32()?;
+        Ok(ForwardOutput { logits, counts, vis_counts, hidden })
+    }
+
+    /// Predicted answer tokens (argmax of last-position logits).
+    pub fn predict(
+        &self,
+        tokens: &Tensor<i32>,
+        vis_mask: &Tensor<f32>,
+    ) -> Result<Vec<usize>> {
+        Ok(self.forward(tokens, vis_mask, false)?.logits.argmax_rows())
+    }
+}

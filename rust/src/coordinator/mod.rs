@@ -1,0 +1,325 @@
+//! L3 coordinator: the MoPEQ pipeline — profile → importance → cluster/
+//! assign → quantize → evaluate — orchestrated over the PJRT runtime.
+//! This module owns the experiment grid of Tables 2–5 (method rows ×
+//! task columns) and is what the CLI, examples, and benches drive.
+
+pub mod executor;
+pub mod quantize;
+pub mod signround;
+
+pub use executor::{ForwardOutput, ModelExecutor, MoeKernel};
+pub use quantize::{
+    capture_calib, quantize_backbone, quantize_experts, LayerCalib,
+    QuantStats, Quantizer,
+};
+pub use signround::{signround_optimize, SignRoundConfig};
+
+use crate::cluster::{assign_map, Granularity};
+use crate::config::{self, ModelConfig, MIXED_BITS};
+use crate::eval::{evaluate, TaskScores};
+use crate::importance::{
+    hessian_closed_form, hessian_hutchinson, hybrid, profile_frequency,
+    ImportanceMap,
+};
+use crate::moe::{
+    model_size_mb, local_meta, PrecisionMap, SizePolicy, WeightStore,
+};
+use crate::runtime::Session;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Importance metric choices (paper §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    ActivationFrequency,
+    HessianSensitivity,
+    /// normalized frequency × sensitivity (§3.4)
+    Hybrid,
+}
+
+impl Metric {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Metric::ActivationFrequency => "Activation Frequency",
+            Metric::HessianSensitivity => "Hessian Sensitivity",
+            Metric::Hybrid => "Norm. Freq-Sensitivity",
+        }
+    }
+}
+
+/// One row of a paper table.
+#[derive(Clone, Debug)]
+pub enum MethodSpec {
+    /// unquantized fp16 reference
+    Uniform16,
+    /// uniform baseline at `bits` (8-bit: RTN ≈ AutoRound at that width;
+    /// 4-bit: SignRound, matching the paper's Uniform-AutoRound row)
+    Uniform { bits: u8 },
+    /// MoPEQ mixed precision
+    Mixed { metric: Metric, granularity: Granularity },
+}
+
+impl MethodSpec {
+    /// The nine rows of Tables 2–5, in paper order.
+    pub fn table_rows() -> Vec<MethodSpec> {
+        let mut rows = vec![
+            MethodSpec::Uniform16,
+            MethodSpec::Uniform { bits: 8 },
+            MethodSpec::Uniform { bits: 4 },
+        ];
+        for metric in [
+            Metric::ActivationFrequency,
+            Metric::HessianSensitivity,
+            Metric::Hybrid,
+        ] {
+            for gran in [Granularity::LayerWise, Granularity::ModelWise] {
+                rows.push(MethodSpec::Mixed { metric, granularity: gran });
+            }
+        }
+        rows
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Uniform16 => "Uniform fp16".into(),
+            MethodSpec::Uniform { bits } => format!("Uniform {bits}-bit"),
+            MethodSpec::Mixed { metric, granularity } => {
+                format!("{} / {}", metric.label(), granularity.label())
+            }
+        }
+    }
+}
+
+/// Result of running one method row.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub label: String,
+    pub size_mb: f64,
+    pub mean_bits: f64,
+    pub scores: TaskScores,
+}
+
+/// The coordinator: session + per-variant state.
+pub struct Pipeline {
+    pub session: Session,
+    pub cfg: ModelConfig,
+    /// reference (trained or initialized) weights — quantization always
+    /// starts from these
+    pub ws: WeightStore,
+    pub seed: u64,
+    /// profiling knobs
+    pub calib_batches: usize,
+    pub calib_rows: usize,
+    pub hutchinson_samples: usize,
+    pub eval_samples: usize,
+    pub signround: SignRoundConfig,
+    /// use the exact closed-form trace instead of the HLO Hutchinson
+    /// loop (same values within estimator noise; much faster — see
+    /// EXPERIMENTS.md §Perf)
+    pub hessian_closed_form: bool,
+    /// which MoE-layer lowering the executors run (§Perf L2-A)
+    pub moe_kernel: MoeKernel,
+}
+
+impl Pipeline {
+    /// Open artifacts and load weights: `weights/<variant>.bin` if it
+    /// exists (trained via `mopeq train`), else deterministic init.
+    pub fn open(variant: &str, seed: u64) -> Result<Pipeline> {
+        let session = Session::open_default()?;
+        let cfg = config::variant(variant)?;
+        let ws = match Self::weights_path(variant) {
+            p if p.exists() => WeightStore::load(&p)?,
+            _ => {
+                let meta = session.registry().variant(variant)?.clone();
+                WeightStore::init(&cfg, &meta, seed)
+            }
+        };
+        Ok(Pipeline {
+            session,
+            cfg,
+            ws,
+            seed,
+            calib_batches: 16,
+            calib_rows: 256,
+            hutchinson_samples: 8,
+            eval_samples: 64,
+            signround: SignRoundConfig::default(),
+            hessian_closed_form: false,
+            moe_kernel: MoeKernel::default(),
+        })
+    }
+
+    pub fn weights_path(variant: &str) -> PathBuf {
+        crate::artifacts_dir()
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."))
+            .join("weights")
+            .join(format!("{variant}.bin"))
+    }
+
+    /// Fresh-weights init ignoring any cached trained weights.
+    pub fn reinit_weights(&mut self) -> Result<()> {
+        let meta = self.session.registry().variant(self.cfg.name)?.clone();
+        self.ws = WeightStore::init(&self.cfg, &meta, self.seed);
+        Ok(())
+    }
+
+    pub fn executor<'a>(&'a self, ws: &WeightStore) -> Result<ModelExecutor<'a>> {
+        ModelExecutor::with_options(&self.session, &self.cfg, ws,
+                                    self.moe_kernel)
+    }
+
+    // ----------------------------------------------------- importance
+
+    pub fn frequency_map(&self) -> Result<crate::importance::FreqProfile> {
+        let exec = self.executor(&self.ws)?;
+        profile_frequency(&exec, &self.cfg, self.calib_batches, self.seed)
+    }
+
+    pub fn hessian_map(&self) -> Result<ImportanceMap> {
+        if self.hessian_closed_form {
+            hessian_closed_form(&self.ws, &self.cfg)
+        } else {
+            hessian_hutchinson(
+                &self.session,
+                &self.ws,
+                &self.cfg,
+                self.hutchinson_samples,
+                self.seed,
+            )
+        }
+    }
+
+    pub fn importance(&self, metric: Metric) -> Result<ImportanceMap> {
+        Ok(match metric {
+            Metric::ActivationFrequency => self.frequency_map()?.total,
+            Metric::HessianSensitivity => self.hessian_map()?,
+            Metric::Hybrid => {
+                let af = self.frequency_map()?.total;
+                let h = self.hessian_map()?;
+                hybrid(&af, &h)
+            }
+        })
+    }
+
+    // ----------------------------------------------------- assignment
+
+    /// Algorithm 2 over an importance map.
+    pub fn assign(
+        &self,
+        importance: &ImportanceMap,
+        granularity: Granularity,
+    ) -> PrecisionMap {
+        PrecisionMap {
+            bits: assign_map(
+                &importance.values,
+                &MIXED_BITS,
+                granularity,
+                self.seed,
+            ),
+        }
+    }
+
+    // ----------------------------------------------------- method rows
+
+    /// Run one table row end to end: assign → quantize (SignRound) →
+    /// evaluate. Returns accuracy per task + exact storage size.
+    pub fn run_method(&self, spec: &MethodSpec) -> Result<MethodResult> {
+        let (pmap, policy) = match spec {
+            MethodSpec::Uniform16 => (
+                PrecisionMap::uniform(&self.cfg, 16),
+                SizePolicy::fp16(),
+            ),
+            MethodSpec::Uniform { bits } => (
+                PrecisionMap::uniform(&self.cfg, *bits),
+                SizePolicy::uniform(*bits, self.cfg.group),
+            ),
+            MethodSpec::Mixed { metric, granularity } => {
+                let imp = self.importance(*metric)?;
+                (
+                    self.assign(&imp, *granularity),
+                    // paper: other layers quantized uniformly (4-bit)
+                    SizePolicy::uniform(4, self.cfg.group),
+                )
+            }
+        };
+        let scores = self.quantize_and_eval(&pmap, policy)?;
+        Ok(MethodResult {
+            label: spec.label(),
+            size_mb: model_size_mb(&self.cfg, &pmap, policy),
+            mean_bits: pmap.mean_bits(),
+            scores,
+        })
+    }
+
+    /// Quantize a copy of the reference weights under (pmap, policy)
+    /// with the paper's SignRound function, then evaluate all tasks.
+    pub fn quantize_and_eval(
+        &self,
+        pmap: &PrecisionMap,
+        policy: SizePolicy,
+    ) -> Result<TaskScores> {
+        let mut ws = self.clone_weights();
+        let needs_quant =
+            pmap.iter_experts().any(|(_, b)| b < 16) || policy.backbone_bits < 16;
+        if needs_quant {
+            let exec = self.executor(&self.ws)?;
+            let calib = capture_calib(
+                &exec,
+                &self.cfg,
+                self.calib_batches,
+                self.calib_rows,
+                self.seed ^ 0xCA11B,
+            )?;
+            // 8-bit experts use RTN (SignRound artifacts cover 2/3/4;
+            // at 8 bits rounding search is negligible)
+            let any_low = pmap.iter_experts().any(|(_, b)| b < 8);
+            let quantizer = if any_low {
+                Quantizer::SignRound(self.signround)
+            } else {
+                Quantizer::Rtn
+            };
+            quantize_experts(
+                Some(&self.session),
+                &self.cfg,
+                &mut ws,
+                pmap,
+                &quantizer,
+                Some(&calib),
+            )?;
+            quantize_backbone(&self.cfg, &mut ws, policy.backbone_bits)?;
+        }
+        let exec = self.executor(&ws)?;
+        evaluate(&exec, &self.cfg, self.eval_samples, self.seed ^ 0xE7A1)
+    }
+
+    /// Deep copy of the reference weights (quantization scratch).
+    pub fn clone_weights(&self) -> WeightStore {
+        // round-trip through flat tensors (WeightStore has no Clone to
+        // keep accidental copies out of hot paths)
+        let meta = local_meta(&self.cfg);
+        let mut ws = WeightStore::init(&self.cfg, &meta, 0);
+        let flats: Vec<_> =
+            self.ws.flat().into_iter().cloned().collect();
+        ws.set_flat(flats).expect("clone_weights shape mismatch");
+        ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rows_match_paper() {
+        let rows = MethodSpec::table_rows();
+        assert_eq!(rows.len(), 9);
+        assert_eq!(rows[0].label(), "Uniform fp16");
+        assert_eq!(rows[2].label(), "Uniform 4-bit");
+        assert!(rows[3].label().contains("Activation Frequency"));
+        assert!(rows[3].label().contains("Layer-wise"));
+        assert!(rows[8].label().contains("Norm. Freq-Sensitivity"));
+        assert!(rows[8].label().contains("Model-wise"));
+    }
+}

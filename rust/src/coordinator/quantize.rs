@@ -1,0 +1,355 @@
+//! Applying a precision map to the model: per-expert quantization (with
+//! any of the four quantizers) writing dequantized weights back into the
+//! store — the weights-as-arguments invariant means evaluation and
+//! serving pick the new weights up with zero recompilation.
+//!
+//! Calibration activations come from the executor's hidden-state capture
+//! (`moe_layer` returns the post-norm expert inputs). Down-projection
+//! inputs are derived host-side per expert: act = silu(X·gate) ⊙ (X·up),
+//! using the original (pre-quantization) gate/up weights.
+
+use crate::config::ModelConfig;
+use crate::coordinator::executor::ModelExecutor;
+use crate::coordinator::signround::{signround_optimize, SignRoundConfig};
+use crate::data::{gen_sample, Task};
+use crate::moe::{ExpertId, ExpertMat, PrecisionMap, WeightStore};
+use crate::quant::{awq::awq_quantize, gptq::gptq_quantize, rtn_quantize};
+use crate::rng::Rng;
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Per-MoE-layer calibration matrix `[rows, d_model]`.
+pub struct LayerCalib {
+    pub layers: Vec<Tensor<f32>>,
+}
+
+/// Run mixed-task batches with hidden-state capture and subsample `rows`
+/// tokens per MoE layer.
+pub fn capture_calib(
+    exec: &ModelExecutor,
+    cfg: &ModelConfig,
+    n_batches: usize,
+    rows: usize,
+    seed: u64,
+) -> Result<LayerCalib> {
+    let mut rng = Rng::new(seed).derive("calib-capture");
+    let mut pools: Vec<Vec<f32>> = vec![Vec::new(); cfg.moe_layers()];
+    let d = cfg.d_model;
+    for _ in 0..n_batches {
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut vis = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let task = Task::ALL[rng.below(Task::ALL.len())];
+            let smp = gen_sample(task, cfg, &mut rng);
+            tokens.extend_from_slice(&smp.tokens);
+            vis.extend_from_slice(&smp.vis_mask);
+        }
+        let out = exec.forward(
+            &Tensor::new(&[b, s], tokens),
+            &Tensor::new(&[b, s], vis),
+            true,
+        )?;
+        for (l, h) in out.hidden.unwrap().into_iter().enumerate() {
+            pools[l].extend_from_slice(&h.data);
+        }
+    }
+    let mut layers = Vec::with_capacity(pools.len());
+    for pool in pools {
+        let total_rows = pool.len() / d;
+        if total_rows < rows {
+            bail!("calib pool has {total_rows} rows, need {rows}");
+        }
+        let mut rr = rng.derive("subsample");
+        let picks = rr.choose_k(total_rows, rows);
+        let mut data = Vec::with_capacity(rows * d);
+        for p in picks {
+            data.extend_from_slice(&pool[p * d..(p + 1) * d]);
+        }
+        layers.push(Tensor::new(&[rows, d], data));
+    }
+    Ok(LayerCalib { layers })
+}
+
+/// Which quantization function fills the precision map.
+#[derive(Clone, Debug)]
+pub enum Quantizer {
+    /// round-to-nearest (no calibration)
+    Rtn,
+    /// SignRound SignSGD over the AOT'd step (the paper's function)
+    SignRound(SignRoundConfig),
+    /// GPTQ with relative dampening
+    Gptq { damp: f64 },
+    /// AWQ-style activation-aware scaling
+    Awq { alpha: f32 },
+}
+
+impl Quantizer {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Quantizer::Rtn => "RTN",
+            Quantizer::SignRound(_) => "SignRound",
+            Quantizer::Gptq { .. } => "GPTQ",
+            Quantizer::Awq { .. } => "AWQ",
+        }
+    }
+
+    pub fn needs_calib(&self) -> bool {
+        !matches!(self, Quantizer::Rtn)
+    }
+}
+
+/// Summary of one quantization pass.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    pub experts: usize,
+    pub matrices: usize,
+    /// mean squared reconstruction error over expert weights
+    pub mean_weight_mse: f64,
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Host-side expert activation: silu(X·gate) ⊙ (X·up) — the calibration
+/// input of the down projection.
+fn down_inputs(x: &Tensor<f32>, gate: &Tensor<f32>, up: &Tensor<f32>) -> Tensor<f32> {
+    let hg = x.matmul(gate);
+    let hu = x.matmul(up);
+    let mut out = hg.clone();
+    for i in 0..out.data.len() {
+        out.data[i] = silu(hg.data[i]) * hu.data[i];
+    }
+    out
+}
+
+/// Subsample `rows` rows from a calib matrix (deterministic).
+fn subsample(x: &Tensor<f32>, rows: usize, seed: u64) -> Tensor<f32> {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    if n == rows {
+        return x.clone();
+    }
+    assert!(n > rows, "calib too small");
+    let mut rng = Rng::new(seed).derive("sr-sub");
+    let picks = rng.choose_k(n, rows);
+    let mut data = Vec::with_capacity(rows * d);
+    for p in picks {
+        data.extend_from_slice(&x.data[p * d..(p + 1) * d]);
+    }
+    Tensor::new(&[rows, d], data)
+}
+
+/// Quantize one matrix with the chosen quantizer, returning dequantized
+/// weights.
+fn quantize_mat(
+    session: Option<&Session>,
+    w: &Tensor<f32>,
+    x: &Tensor<f32>,
+    bits: u8,
+    group: usize,
+    q: &Quantizer,
+) -> Result<Tensor<f32>> {
+    let grp = if w.shape[0] % group == 0 { group } else { w.shape[0] };
+    Ok(match q {
+        Quantizer::Rtn => rtn_quantize(w, bits, grp).dequantize(),
+        Quantizer::SignRound(cfg) => {
+            let session = session
+                .ok_or_else(|| anyhow::anyhow!("SignRound needs a session"))?;
+            let xs = subsample(x, cfg.calib_rows, 0x5157);
+            signround_optimize(session, w, &xs, bits, grp, cfg)?
+                .qm
+                .dequantize()
+        }
+        Quantizer::Gptq { damp } => {
+            gptq_quantize(w, x, bits, grp, *damp)?.dequantize()
+        }
+        Quantizer::Awq { alpha } => {
+            awq_quantize(w, x, bits, grp, *alpha).dequantize()
+        }
+    })
+}
+
+/// Quantize every routed expert per the precision map, writing
+/// dequantized weights back into the store.
+pub fn quantize_experts(
+    session: Option<&Session>,
+    cfg: &ModelConfig,
+    ws: &mut WeightStore,
+    pmap: &PrecisionMap,
+    quantizer: &Quantizer,
+    calib: Option<&LayerCalib>,
+) -> Result<QuantStats> {
+    if quantizer.needs_calib() && calib.is_none() {
+        bail!("{} requires calibration data", quantizer.label());
+    }
+    let mut stats = QuantStats::default();
+    let mut mse_acc = 0.0f64;
+    for layer in 0..cfg.moe_layers() {
+        let x_layer = calib.map(|c| &c.layers[layer]);
+        for expert in 0..cfg.experts {
+            let id = ExpertId { layer, expert };
+            let bits = pmap.get(id);
+            if bits >= 16 {
+                continue; // fp16 expert: leave weights untouched
+            }
+            let gate = ws.expert_mat(id, ExpertMat::Gate)?;
+            let up = ws.expert_mat(id, ExpertMat::Up)?;
+            // gate/up share the layer input; down sees the expert act
+            let x_gate;
+            let x_down;
+            match x_layer {
+                Some(x) => {
+                    x_gate = (*x).clone();
+                    x_down = down_inputs(x, &gate, &up);
+                }
+                None => {
+                    // RTN: calib unused, pass placeholders
+                    x_gate = Tensor::zeros(&[1, cfg.d_model]);
+                    x_down = Tensor::zeros(&[1, cfg.d_expert]);
+                }
+            }
+            for mat in ExpertMat::ALL {
+                let w = ws.expert_mat(id, mat)?;
+                let x = match mat {
+                    ExpertMat::Down => &x_down,
+                    _ => &x_gate,
+                };
+                let wq = quantize_mat(session, &w, x, bits, cfg.group,
+                                      quantizer)?;
+                mse_acc += wq.mse(&w) as f64;
+                ws.set_expert_mat(id, mat, &wq)?;
+                stats.matrices += 1;
+            }
+            stats.experts += 1;
+        }
+    }
+    stats.mean_weight_mse = mse_acc / stats.matrices.max(1) as f64;
+    Ok(stats)
+}
+
+/// Uniform RTN quantization of every non-expert weight matrix (the
+/// paper quantizes "other layers" uniformly; embeddings and norms stay
+/// fp16). Matrices whose leading dim is not group-divisible fall back to
+/// one whole-column group.
+pub fn quantize_backbone(
+    cfg: &ModelConfig,
+    ws: &mut WeightStore,
+    bits: u8,
+) -> Result<usize> {
+    if bits >= 16 {
+        return Ok(0);
+    }
+    let expert_names = ["moe.gate", "moe.up", "moe.down"];
+    let skip = |n: &str| {
+        n.contains(".ln") || n.starts_with("embed.") || expert_names.contains(&n)
+    };
+    let names: Vec<String> = ws
+        .names()
+        .iter()
+        .filter(|n| !skip(n))
+        .map(|n| n.to_string())
+        .collect();
+    let mut count = 0usize;
+    for name in names {
+        let t = ws.get(&name)?.clone();
+        let rank = t.rank();
+        assert!(rank >= 2, "{name} rank {rank}");
+        let (din, dout) = (t.shape[rank - 2], t.shape[rank - 1]);
+        let lead: usize = t.shape[..rank - 2].iter().product();
+        let grp = if din % cfg.group == 0 { cfg.group } else { din };
+        let mut data = t.data.clone();
+        for l in 0..lead {
+            let off = l * din * dout;
+            let slice =
+                Tensor::new(&[din, dout], t.data[off..off + din * dout].to_vec());
+            let wq = rtn_quantize(&slice, bits, grp).dequantize();
+            data[off..off + din * dout].copy_from_slice(&wq.data);
+            count += 1;
+        }
+        ws.set(&name, Tensor::new(&t.shape, data))?;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::moe::local_meta;
+
+    #[test]
+    fn rtn_quantize_experts_no_calib() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let orig = ws
+            .expert_mat(ExpertId { layer: 0, expert: 0 }, ExpertMat::Gate)
+            .unwrap();
+        let pmap = PrecisionMap::uniform(&cfg, 4);
+        let stats = quantize_experts(None, &cfg, &mut ws, &pmap,
+                                     &Quantizer::Rtn, None)
+            .unwrap();
+        assert_eq!(stats.experts, cfg.total_experts());
+        assert_eq!(stats.matrices, cfg.total_experts() * 3);
+        let q = ws
+            .expert_mat(ExpertId { layer: 0, expert: 0 }, ExpertMat::Gate)
+            .unwrap();
+        assert!(q.max_abs_diff(&orig) > 0.0);
+        assert!(stats.mean_weight_mse > 0.0);
+    }
+
+    #[test]
+    fn fp16_experts_untouched() {
+        let cfg = config::variant("molmoe").unwrap();
+        let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 1);
+        let orig = ws
+            .expert_mat(ExpertId { layer: 2, expert: 5 }, ExpertMat::Down)
+            .unwrap();
+        let pmap = PrecisionMap::uniform(&cfg, 16);
+        let stats = quantize_experts(None, &cfg, &mut ws, &pmap,
+                                     &Quantizer::Rtn, None)
+            .unwrap();
+        assert_eq!(stats.experts, 0);
+        assert_eq!(
+            ws.expert_mat(ExpertId { layer: 2, expert: 5 }, ExpertMat::Down)
+                .unwrap(),
+            orig
+        );
+    }
+
+    #[test]
+    fn backbone_quantization_touches_non_experts_only() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 2);
+        let expert_before = ws
+            .expert_mat(ExpertId { layer: 0, expert: 0 }, ExpertMat::Gate)
+            .unwrap();
+        let attn_before = ws.get("moe.wq").unwrap().clone();
+        let embed_before = ws.get("embed.table").unwrap().clone();
+        let n = quantize_backbone(&cfg, &mut ws, 4).unwrap();
+        assert!(n > 0);
+        assert_eq!(
+            ws.expert_mat(ExpertId { layer: 0, expert: 0 }, ExpertMat::Gate)
+                .unwrap(),
+            expert_before
+        );
+        assert_eq!(ws.get("embed.table").unwrap(), &embed_before);
+        assert!(ws.get("moe.wq").unwrap().max_abs_diff(&attn_before) > 0.0);
+    }
+
+    #[test]
+    fn quantize_lowers_error_with_more_bits() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut errs = Vec::new();
+        for bits in [2u8, 4] {
+            let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 3);
+            let pmap = PrecisionMap::uniform(&cfg, bits);
+            let stats = quantize_experts(None, &cfg, &mut ws, &pmap,
+                                         &Quantizer::Rtn, None)
+                .unwrap();
+            errs.push(stats.mean_weight_mse);
+        }
+        assert!(errs[0] > errs[1]);
+    }
+}

@@ -1,0 +1,92 @@
+//! SignRound driver: loops the AOT'd `signround_step` HLO (Pallas qdq
+//! forward + STE backward + SignSGD update, see python/compile/signround
+//! .py) per expert FC layer, with linear lr decay and keep-best-by-loss
+//! (SignSGD overshoots on fine rounding grids — see the python test of
+//! the same semantics). Python never runs here: the optimizer loop is
+//! rust, the step is a compiled artifact.
+
+use crate::quant::{quantize_int, QuantizedMatrix};
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SignRoundConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// calibration rows the artifact expects (static shape)
+    pub calib_rows: usize,
+}
+
+impl Default for SignRoundConfig {
+    fn default() -> Self {
+        SignRoundConfig { steps: 40, lr: 0.02, calib_rows: 64 }
+    }
+}
+
+/// Result of optimizing one FC layer.
+pub struct SignRoundOutcome {
+    pub qm: QuantizedMatrix,
+    pub loss_before: f32,
+    pub loss_after: f32,
+}
+
+/// Optimize (V, alpha, beta) for `w[din, dout]` at `bits` against calib
+/// activations `x[calib_rows, din]`, then quantize to integer codes.
+pub fn signround_optimize(
+    session: &Session,
+    w: &Tensor<f32>,
+    x: &Tensor<f32>,
+    bits: u8,
+    group: usize,
+    cfg: &SignRoundConfig,
+) -> Result<SignRoundOutcome> {
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    if x.shape != [cfg.calib_rows, din] {
+        bail!(
+            "signround calib must be [{}, {din}], got {:?}",
+            cfg.calib_rows,
+            x.shape
+        );
+    }
+    let entry = format!("shared/signround_{din}x{dout}_b{bits}");
+    let gg = din / group.min(din);
+    let grp = group.min(din);
+    debug_assert_eq!(grp * gg, din);
+
+    let mut v = Tensor::zeros(&[din, dout]);
+    let mut alpha = Tensor::ones(&[gg, dout]);
+    let mut beta = Tensor::ones(&[gg, dout]);
+    let mut best: Option<(Tensor<f32>, Tensor<f32>, Tensor<f32>, f32)> = None;
+    let mut loss_before = f32::NAN;
+
+    for step in 0..cfg.steps {
+        // linear decay, as AutoRound's default schedule
+        let lr = cfg.lr * (1.0 - step as f32 / cfg.steps as f32);
+        let out = session.exec(
+            &entry,
+            &[
+                Value::F32(w.clone()),
+                Value::F32(x.clone()),
+                Value::F32(v.clone()),
+                Value::F32(alpha.clone()),
+                Value::F32(beta.clone()),
+                Value::scalar_f32(lr),
+            ],
+        )?;
+        // outputs: (v', alpha', beta', loss-at-input-params)
+        let loss = out[3].as_f32()?.data[0];
+        if step == 0 {
+            loss_before = loss;
+        }
+        if best.as_ref().map_or(true, |(_, _, _, b)| loss < *b) {
+            best = Some((v.clone(), alpha.clone(), beta.clone(), loss));
+        }
+        v = out[0].as_f32()?.clone();
+        alpha = out[1].as_f32()?.clone();
+        beta = out[2].as_f32()?.clone();
+    }
+    let (bv, ba, bb, best_loss) = best.unwrap();
+    let qm = quantize_int(w, Some(&bv), &ba.data, &bb.data, bits, grp);
+    Ok(SignRoundOutcome { qm, loss_before, loss_after: best_loss })
+}

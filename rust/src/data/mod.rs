@@ -1,0 +1,351 @@
+//! Synthetic multimodal tasks — the sim stand-ins for the paper's nine
+//! VLMEvalKit benchmarks (DESIGN.md §2). Every sample is a fixed-length
+//! sequence: an 8-token **visual prefix** (ids ≥ 128, simulating image
+//! patch tokens), a task-id token, a question region, and a query cue at
+//! the last position; the model predicts the answer token at the final
+//! position. Each task exercises a distinct skill (copy / combine /
+//! retrieve / count / compare / mixed / denoise / deduce / rank) so
+//! quantization damage shows up non-uniformly across tasks, as in the
+//! paper's tables.
+
+use crate::config::{ModelConfig, VISUAL_PREFIX};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Text-token space: [0, 128). Visual-token space: [128, 256).
+pub const TEXT_BASE: usize = 0;
+pub const VIS_BASE: usize = 128;
+pub const VIS_SPACE: usize = 128;
+/// answers live in [ANSWER_BASE, ANSWER_BASE + ANSWER_SPACE)
+pub const ANSWER_BASE: usize = 16;
+pub const ANSWER_SPACE: usize = 64;
+/// query cue token at the last position
+pub const CUE: usize = 10;
+/// pad token for the question region
+pub const PAD: usize = 0;
+
+/// The nine benchmark sims, in paper-table column order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// AI2D sim: relation between two visual tokens
+    Ai2d,
+    /// DocVQA sim: retrieve the visual token at a queried position
+    DocVqa,
+    /// InfoVQA sim: count visual tokens above a threshold
+    InfoVqa,
+    /// MME-Reasoning sim: combine two visual attributes
+    MmeReasoning,
+    /// MME-Perception sim: classify the first visual token
+    MmePerception,
+    /// MMMU sim: mixture of perception/reasoning/counting
+    Mmmu,
+    /// RealWorldQA sim: noisy perception into coarse bins
+    RealWorldQa,
+    /// ScienceQA sim: conditional rule deduction
+    ScienceQa,
+    /// BLINK sim: pairwise group comparison
+    Blink,
+}
+
+impl Task {
+    pub const ALL: [Task; 9] = [
+        Task::Ai2d,
+        Task::DocVqa,
+        Task::InfoVqa,
+        Task::MmeReasoning,
+        Task::MmePerception,
+        Task::Mmmu,
+        Task::RealWorldQa,
+        Task::ScienceQa,
+        Task::Blink,
+    ];
+
+    /// Paper-table column label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Task::Ai2d => "AI2D",
+            Task::DocVqa => "DocVQA",
+            Task::InfoVqa => "InfoVQA",
+            Task::MmeReasoning => "MME-Reasoning",
+            Task::MmePerception => "MME-Perception",
+            Task::Mmmu => "MMMU",
+            Task::RealWorldQa => "RealWorldQA",
+            Task::ScienceQa => "ScienceQA",
+            Task::Blink => "BLINK",
+        }
+    }
+
+    /// Unique task-id token (placed after the visual prefix).
+    pub fn id_token(&self) -> usize {
+        1 + Task::ALL.iter().position(|t| t == self).unwrap()
+    }
+}
+
+/// One sample: fixed-length token sequence + visual mask + answer token.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub vis_mask: Vec<f32>,
+    pub answer: i32,
+    pub task: Task,
+}
+
+fn vis_class(v: usize) -> usize {
+    (v - VIS_BASE) % ANSWER_SPACE
+}
+
+fn answer_token(class: usize) -> i32 {
+    (ANSWER_BASE + class % ANSWER_SPACE) as i32
+}
+
+/// Generate one sample of `task`.
+pub fn gen_sample(task: Task, cfg: &ModelConfig, rng: &mut Rng) -> Sample {
+    let s = cfg.seq;
+    let mut tokens = vec![PAD as i32; s];
+    let mut vis_mask = vec![0.0f32; s];
+    // visual prefix
+    let mut vis = Vec::with_capacity(VISUAL_PREFIX);
+    for i in 0..VISUAL_PREFIX {
+        let v = VIS_BASE + rng.below(VIS_SPACE);
+        vis.push(v);
+        tokens[i] = v as i32;
+        vis_mask[i] = 1.0;
+    }
+    tokens[VISUAL_PREFIX] = task.id_token() as i32;
+    let qpos = VISUAL_PREFIX + 1;
+    tokens[s - 1] = CUE as i32;
+
+    let answer = match task {
+        Task::MmePerception => answer_token(vis_class(vis[0])),
+        Task::MmeReasoning => {
+            answer_token(vis_class(vis[0]) + vis_class(vis[1]))
+        }
+        Task::DocVqa => {
+            let idx = rng.below(VISUAL_PREFIX);
+            // question encodes the queried position (offset into text ids)
+            tokens[qpos] = (96 + idx) as i32;
+            answer_token(vis_class(vis[idx]))
+        }
+        Task::InfoVqa => {
+            let count =
+                vis.iter().filter(|&&v| v >= VIS_BASE + VIS_SPACE / 2).count();
+            answer_token(count)
+        }
+        Task::Ai2d => {
+            answer_token(if vis[0] > vis[1] { 0 } else { 1 })
+        }
+        Task::Mmmu => {
+            // per-sample sub-domain, encoded in the question region
+            let sub = rng.below(3);
+            tokens[qpos] = (80 + sub) as i32;
+            match sub {
+                0 => answer_token(vis_class(vis[0])),
+                1 => answer_token(vis_class(vis[0]) + vis_class(vis[1])),
+                _ => {
+                    let count = vis
+                        .iter()
+                        .filter(|&&v| v >= VIS_BASE + VIS_SPACE / 2)
+                        .count();
+                    answer_token(count)
+                }
+            }
+        }
+        Task::RealWorldQa => {
+            // coarse 4-bin class of a noisy base token: all prefix tokens
+            // are base + small noise
+            let base = rng.below(4);
+            for (i, slot) in vis.iter_mut().enumerate() {
+                let noise = rng.below(16);
+                let v = VIS_BASE + base * 32 + noise;
+                *slot = v;
+                tokens[i] = v as i32;
+            }
+            answer_token(base)
+        }
+        Task::ScienceQa => {
+            // rule: if v2 is even take class of v0 else class of v1
+            if vis[2] % 2 == 0 {
+                answer_token(vis_class(vis[0]))
+            } else {
+                answer_token(vis_class(vis[1]))
+            }
+        }
+        Task::Blink => {
+            let a: usize = vis[..4].iter().sum();
+            let b: usize = vis[4..].iter().sum();
+            answer_token(if a > b { 0 } else { 1 })
+        }
+    };
+    Sample { tokens, vis_mask, answer, task }
+}
+
+/// Chance accuracy for a task (reporting baseline).
+pub fn chance_accuracy(task: Task) -> f64 {
+    match task {
+        Task::Ai2d | Task::Blink => 0.5,
+        Task::RealWorldQa => 0.25,
+        Task::InfoVqa => 1.0 / (VISUAL_PREFIX + 1) as f64,
+        _ => 1.0 / ANSWER_SPACE as f64,
+    }
+}
+
+/// A deterministic evaluation set: `n` samples of one task.
+pub fn eval_set(task: Task, cfg: &ModelConfig, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::new(seed).derive(&format!("eval/{}", task.label()));
+    (0..n).map(|_| gen_sample(task, cfg, &mut rng)).collect()
+}
+
+/// Mixed-task batch iterator for training and calibration.
+pub struct BatchGen {
+    cfg: ModelConfig,
+    rng: Rng,
+}
+
+/// One training batch in the shapes `train_step` expects.
+pub struct Batch {
+    pub tokens: Tensor<i32>,
+    pub vis_mask: Tensor<f32>,
+    pub target: Tensor<i32>,
+}
+
+impl BatchGen {
+    pub fn new(cfg: &ModelConfig, seed: u64) -> BatchGen {
+        BatchGen {
+            cfg: cfg.clone(),
+            rng: Rng::new(seed).derive("batchgen"),
+        }
+    }
+
+    /// Next mixed-task batch of `bs` samples.
+    pub fn next_batch(&mut self, bs: usize) -> Batch {
+        let s = self.cfg.seq;
+        let mut tokens = Vec::with_capacity(bs * s);
+        let mut vis = Vec::with_capacity(bs * s);
+        let mut target = Vec::with_capacity(bs);
+        for _ in 0..bs {
+            let task = Task::ALL[self.rng.below(Task::ALL.len())];
+            let smp = gen_sample(task, &self.cfg, &mut self.rng);
+            tokens.extend_from_slice(&smp.tokens);
+            vis.extend_from_slice(&smp.vis_mask);
+            target.push(smp.answer);
+        }
+        Batch {
+            tokens: Tensor::new(&[bs, s], tokens),
+            vis_mask: Tensor::new(&[bs, s], vis),
+            target: Tensor::new(&[bs], target),
+        }
+    }
+}
+
+/// Pack samples into inference-batch tensors (padding the tail batch by
+/// repeating the last sample, as the static-shape server does).
+pub fn pack_batch(samples: &[Sample], cfg: &ModelConfig) -> (Tensor<i32>, Tensor<f32>) {
+    let b = cfg.batch;
+    let s = cfg.seq;
+    assert!(!samples.is_empty() && samples.len() <= b);
+    let mut tokens = Vec::with_capacity(b * s);
+    let mut vis = Vec::with_capacity(b * s);
+    for i in 0..b {
+        let smp = samples.get(i).unwrap_or(samples.last().unwrap());
+        tokens.extend_from_slice(&smp.tokens);
+        vis.extend_from_slice(&smp.vis_mask);
+    }
+    (Tensor::new(&[b, s], tokens), Tensor::new(&[b, s], vis))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::proptest_lite::forall;
+
+    fn cfg() -> ModelConfig {
+        config::variant("dsvl2_tiny").unwrap()
+    }
+
+    #[test]
+    fn samples_are_well_formed() {
+        forall("sample_well_formed", 60, |rng| {
+            let c = cfg();
+            let task = Task::ALL[rng.below(9)];
+            let s = gen_sample(task, &c, rng);
+            s.tokens.len() == c.seq
+                && s.vis_mask.len() == c.seq
+                && s.tokens.iter().all(|&t| (t as usize) < c.vocab)
+                && (ANSWER_BASE..ANSWER_BASE + ANSWER_SPACE)
+                    .contains(&(s.answer as usize))
+                && s.vis_mask[..VISUAL_PREFIX].iter().all(|&m| m == 1.0)
+                && s.vis_mask[VISUAL_PREFIX..].iter().all(|&m| m == 0.0)
+                && s.tokens[c.seq - 1] == CUE as i32
+        });
+    }
+
+    #[test]
+    fn answers_are_deterministic_functions_of_tokens() {
+        // regenerating with the same rng stream gives identical samples
+        let c = cfg();
+        let a = eval_set(Task::DocVqa, &c, 32, 7);
+        let b = eval_set(Task::DocVqa, &c, 32, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.answer, y.answer);
+        }
+        // and a different seed gives different data
+        let d = eval_set(Task::DocVqa, &c, 32, 8);
+        assert!(a.iter().zip(&d).any(|(x, y)| x.tokens != y.tokens));
+    }
+
+    #[test]
+    fn docvqa_retrieval_is_consistent() {
+        let c = cfg();
+        for smp in eval_set(Task::DocVqa, &c, 64, 1) {
+            let qidx = (smp.tokens[VISUAL_PREFIX + 1] as usize) - 96;
+            let v = smp.tokens[qidx] as usize;
+            assert_eq!(
+                smp.answer as usize,
+                ANSWER_BASE + (v - VIS_BASE) % ANSWER_SPACE
+            );
+        }
+    }
+
+    #[test]
+    fn infovqa_counts() {
+        let c = cfg();
+        for smp in eval_set(Task::InfoVqa, &c, 64, 2) {
+            let count = smp.tokens[..VISUAL_PREFIX]
+                .iter()
+                .filter(|&&t| t as usize >= VIS_BASE + VIS_SPACE / 2)
+                .count();
+            assert_eq!(smp.answer as usize, ANSWER_BASE + count);
+        }
+    }
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let c = cfg();
+        let mut g = BatchGen::new(&c, 0);
+        let b = g.next_batch(c.train_batch);
+        assert_eq!(b.tokens.shape, vec![c.train_batch, c.seq]);
+        assert_eq!(b.vis_mask.shape, vec![c.train_batch, c.seq]);
+        assert_eq!(b.target.shape, vec![c.train_batch]);
+    }
+
+    #[test]
+    fn pack_batch_pads_by_repetition() {
+        let c = cfg();
+        let samples = eval_set(Task::Blink, &c, 2, 3);
+        let (tok, vis) = pack_batch(&samples, &c);
+        assert_eq!(tok.shape, vec![c.batch, c.seq]);
+        assert_eq!(vis.shape, vec![c.batch, c.seq]);
+        // rows 2 and 3 repeat row 1
+        let row = |i: usize| &tok.data[i * c.seq..(i + 1) * c.seq];
+        assert_eq!(row(2), row(1));
+        assert_eq!(row(3), row(1));
+    }
+
+    #[test]
+    fn chance_levels() {
+        assert_eq!(chance_accuracy(Task::Blink), 0.5);
+        assert!(chance_accuracy(Task::MmePerception) < 0.02);
+    }
+}

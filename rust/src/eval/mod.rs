@@ -1,0 +1,96 @@
+//! Task-accuracy evaluation harness: runs the nine benchmark sims
+//! through a model executor in static-shape batches and scores argmax
+//! predictions — the engine behind the accuracy columns of Tables 2–5.
+
+use crate::config::ModelConfig;
+use crate::coordinator::executor::ModelExecutor;
+use crate::data::{self, Task};
+use anyhow::Result;
+
+/// Accuracy results for one model configuration.
+#[derive(Clone, Debug)]
+pub struct TaskScores {
+    pub scores: Vec<(Task, f64)>,
+    pub n_per_task: usize,
+}
+
+impl TaskScores {
+    pub fn get(&self, task: Task) -> f64 {
+        self.scores
+            .iter()
+            .find(|(t, _)| *t == task)
+            .map(|(_, s)| *s)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Mean accuracy across tasks.
+    pub fn mean(&self) -> f64 {
+        self.scores.iter().map(|(_, s)| s).sum::<f64>()
+            / self.scores.len().max(1) as f64
+    }
+
+    /// Paper-scale display value: MME tasks are reported on their score
+    /// scales (perception /1600ish, reasoning /400ish in the tables2-5 value
+    /// ranges); everything else as accuracy percentage.
+    pub fn display_value(&self, task: Task) -> f64 {
+        let acc = self.get(task);
+        match task {
+            Task::MmePerception => acc * 1600.0,
+            Task::MmeReasoning => acc * 400.0,
+            _ => acc * 100.0,
+        }
+    }
+}
+
+/// Evaluate `n_per_task` samples of every task (deterministic given
+/// `seed`), batching with tail padding.
+pub fn evaluate(
+    exec: &ModelExecutor,
+    cfg: &ModelConfig,
+    n_per_task: usize,
+    seed: u64,
+) -> Result<TaskScores> {
+    evaluate_tasks(exec, cfg, &Task::ALL, n_per_task, seed)
+}
+
+pub fn evaluate_tasks(
+    exec: &ModelExecutor,
+    cfg: &ModelConfig,
+    tasks: &[Task],
+    n_per_task: usize,
+    seed: u64,
+) -> Result<TaskScores> {
+    let mut scores = Vec::with_capacity(tasks.len());
+    for &task in tasks {
+        let samples = data::eval_set(task, cfg, n_per_task, seed);
+        let mut correct = 0usize;
+        for chunk in samples.chunks(cfg.batch) {
+            let (tokens, vis) = data::pack_batch(chunk, cfg);
+            let preds = exec.predict(&tokens, &vis)?;
+            for (smp, &p) in chunk.iter().zip(preds.iter()) {
+                if p == smp.answer as usize {
+                    correct += 1;
+                }
+            }
+        }
+        scores.push((task, correct as f64 / n_per_task as f64));
+    }
+    Ok(TaskScores { scores, n_per_task })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_scores_accessors() {
+        let ts = TaskScores {
+            scores: vec![(Task::Blink, 0.75), (Task::MmePerception, 0.8)],
+            n_per_task: 4,
+        };
+        assert_eq!(ts.get(Task::Blink), 0.75);
+        assert!((ts.mean() - 0.775).abs() < 1e-12);
+        assert!((ts.display_value(Task::MmePerception) - 1280.0).abs() < 1e-9);
+        assert!(ts.get(Task::Ai2d).is_nan());
+    }
+}

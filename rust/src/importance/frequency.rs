@@ -1,0 +1,94 @@
+//! Activation-frequency profiling (paper §3.2, Fig. 2): run a
+//! calibration stream through the model and accumulate how many tokens
+//! the router dispatched to each expert, with a separate tally for
+//! visual-prefix tokens (the paper's vision-vs-language scenario).
+
+use crate::config::ModelConfig;
+use crate::coordinator::executor::ModelExecutor;
+use crate::data::{gen_sample, Task};
+use crate::importance::ImportanceMap;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Frequency statistics from one calibration run.
+#[derive(Clone, Debug)]
+pub struct FreqProfile {
+    /// total token count per expert
+    pub total: ImportanceMap,
+    /// visual-prefix-token count per expert
+    pub visual: ImportanceMap,
+    /// text-token count per expert (total - visual)
+    pub text: ImportanceMap,
+    /// number of calibration samples consumed
+    pub samples: usize,
+}
+
+/// Run `n_batches` mixed-task calibration batches through the model and
+/// accumulate per-expert activation counts.
+pub fn profile_frequency(
+    exec: &ModelExecutor,
+    cfg: &ModelConfig,
+    n_batches: usize,
+    seed: u64,
+) -> Result<FreqProfile> {
+    let lm = cfg.moe_layers();
+    let mut total = ImportanceMap::zeros(lm, cfg.experts);
+    let mut visual = ImportanceMap::zeros(lm, cfg.experts);
+    let mut rng = Rng::new(seed).derive("freq-calib");
+
+    for _ in 0..n_batches {
+        let (tokens, vis) = calib_batch(cfg, &mut rng);
+        let out = exec.forward(&tokens, &vis, false)?;
+        for (l, (c, vc)) in out.counts.iter().zip(&out.vis_counts).enumerate() {
+            for e in 0..cfg.experts {
+                total.values[l][e] += c[e] as f64;
+                visual.values[l][e] += vc[e] as f64;
+            }
+        }
+    }
+
+    let text = ImportanceMap {
+        values: total
+            .values
+            .iter()
+            .zip(&visual.values)
+            .map(|(t, v)| t.iter().zip(v).map(|(a, b)| a - b).collect())
+            .collect(),
+    };
+    Ok(FreqProfile {
+        total,
+        visual,
+        text,
+        samples: n_batches * cfg.batch,
+    })
+}
+
+/// One mixed-task inference batch (all nine tasks uniformly).
+fn calib_batch(cfg: &ModelConfig, rng: &mut Rng) -> (Tensor<i32>, Tensor<f32>) {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut tokens = Vec::with_capacity(b * s);
+    let mut vis = Vec::with_capacity(b * s);
+    for _ in 0..b {
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        let smp = gen_sample(task, cfg, rng);
+        tokens.extend_from_slice(&smp.tokens);
+        vis.extend_from_slice(&smp.vis_mask);
+    }
+    (Tensor::new(&[b, s], tokens), Tensor::new(&[b, s], vis))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn calib_batch_shapes() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut rng = Rng::new(0);
+        let (t, v) = calib_batch(&cfg, &mut rng);
+        assert_eq!(t.shape, vec![cfg.batch, cfg.seq]);
+        assert_eq!(v.shape, vec![cfg.batch, cfg.seq]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-expert Hessian-trace sensitivity (paper §3.3, Algorithm 1):
+//! Hutchinson's estimator `Tr(H) ≈ mean_i vᵢᵀ H vᵢ` with Rademacher
+//! probes, over the Frobenius-norm proxy loss — **data-free**, the
+//! paper's core argument against activation-frequency methods.
+//!
+//! The per-sample HVP runs through the AOT'd autodiff graph
+//! (`shared/hvp_frob_n{n}`, forward-over-reverse in JAX). For this proxy
+//! loss the trace also has the closed form `(n-1)/‖W‖_F`
+//! (DESIGN.md §4) — [`hessian_closed_form`] — which doubles as an
+//! independent oracle: the property tests assert the estimator converges
+//! to it, and fast paths may substitute it.
+//!
+//! An expert's sensitivity is the sum over its three FC layers
+//! (`H_gate + H_up + H_down`, §3.3).
+
+use crate::config::ModelConfig;
+use crate::importance::ImportanceMap;
+use crate::moe::{ExpertId, ExpertMat, WeightStore};
+use crate::rng::Rng;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Hutchinson estimate via the HLO autodiff graph. `samples` probes per
+/// FC layer (Algorithm 1's m).
+pub fn hessian_hutchinson(
+    session: &Session,
+    ws: &WeightStore,
+    cfg: &ModelConfig,
+    samples: usize,
+    seed: u64,
+) -> Result<ImportanceMap> {
+    let n = cfg.d_model * cfg.d_expert;
+    let entry = format!("shared/hvp_frob_n{n}");
+    let mut map = ImportanceMap::zeros(cfg.moe_layers(), cfg.experts);
+    let base = Rng::new(seed).derive("hutchinson");
+    for layer in 0..cfg.moe_layers() {
+        for expert in 0..cfg.experts {
+            let id = ExpertId { layer, expert };
+            let mut rng = base.derive(&format!("l{layer}/e{expert}"));
+            let mut trace_sum = 0.0f64;
+            for mat in ExpertMat::ALL {
+                let w = ws.expert_mat(id, mat)?.reshape(&[n])?;
+                let mut acc = 0.0f64;
+                for _ in 0..samples {
+                    let v = Tensor::new(&[n], rng.rademacher_vec(n));
+                    let out = session.exec(
+                        &entry,
+                        &[Value::F32(w.clone()), Value::F32(v)],
+                    )?;
+                    // outputs: (trace_sample, hvp)
+                    let t = out[0].as_f32()?.data[0];
+                    acc += t as f64;
+                }
+                trace_sum += acc / samples as f64;
+            }
+            map.values[layer][expert] = trace_sum;
+        }
+    }
+    Ok(map)
+}
+
+/// Closed-form trace under the Frobenius proxy: Σ_mats (n-1)/‖W‖_F.
+pub fn hessian_closed_form(ws: &WeightStore, cfg: &ModelConfig) -> Result<ImportanceMap> {
+    let mut map = ImportanceMap::zeros(cfg.moe_layers(), cfg.experts);
+    let n = (cfg.d_model * cfg.d_expert) as f64;
+    for layer in 0..cfg.moe_layers() {
+        for expert in 0..cfg.experts {
+            let id = ExpertId { layer, expert };
+            let mut t = 0.0f64;
+            for mat in ExpertMat::ALL {
+                let w = ws.expert_mat(id, mat)?;
+                t += (n - 1.0) / w.frobenius_norm().max(1e-12) as f64;
+            }
+            map.values[layer][expert] = t;
+        }
+    }
+    Ok(map)
+}
+
+/// Host-side Hutchinson over the closed-form HVP (no PJRT) — used by the
+/// importance bench to isolate estimator cost from runtime overhead, and
+/// by tests as a second implementation of Algorithm 1.
+pub fn hutchinson_host(w: &Tensor<f32>, samples: usize, rng: &mut Rng) -> f64 {
+    let n = w.len();
+    let norm = w.frobenius_norm() as f64;
+    let what: Vec<f64> = w.data.iter().map(|&x| x as f64 / norm).collect();
+    let mut acc = 0.0f64;
+    for _ in 0..samples {
+        let v: Vec<f64> = (0..n).map(|_| rng.rademacher() as f64).collect();
+        let dot: f64 = what.iter().zip(&v).map(|(a, b)| a * b).sum();
+        // HVP = (v - ŵ(ŵ·v))/‖w‖ ; t = v·HVP
+        let t: f64 = v
+            .iter()
+            .zip(&what)
+            .map(|(vi, wi)| vi * (vi - wi * dot) / norm)
+            .sum();
+        acc += t;
+    }
+    acc / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::moe::local_meta;
+    use crate::proptest_lite::forall;
+
+    #[test]
+    fn host_hutchinson_converges_to_closed_form() {
+        forall("hutchinson_converges", 8, |rng| {
+            let n = 512;
+            let w = Tensor::randn(rng, &[n], 1.0);
+            let exact = (n as f64 - 1.0) / w.frobenius_norm() as f64;
+            let est = hutchinson_host(&w, 400, rng);
+            (est - exact).abs() / exact < 0.1
+        });
+    }
+
+    #[test]
+    fn closed_form_depth_profile_matches_paper_fig3() {
+        // deeper layers have larger weight norms by init design, so the
+        // trace (sensitivity) must decrease with depth — Fig. 3's shape.
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let map = hessian_closed_form(&ws, &cfg).unwrap();
+        let means = map.layer_means();
+        assert!(
+            means.first().unwrap() > means.last().unwrap(),
+            "{means:?}"
+        );
+    }
+
+    #[test]
+    fn trace_is_inverse_in_weight_scale() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 1);
+        let before = hessian_closed_form(&ws, &cfg).unwrap().values[0][0];
+        // double expert (0,0)'s weights
+        let id = ExpertId { layer: 0, expert: 0 };
+        for mat in ExpertMat::ALL {
+            let w = ws.expert_mat(id, mat).unwrap().scale(2.0);
+            ws.set_expert_mat(id, mat, &w).unwrap();
+        }
+        let after = hessian_closed_form(&ws, &cfg).unwrap().values[0][0];
+        assert!((before / after - 2.0).abs() < 1e-3, "{before} {after}");
+    }
+}

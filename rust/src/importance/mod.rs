@@ -1,0 +1,148 @@
+//! Expert-importance metrics (paper §3): activation frequency (§3.2),
+//! Hessian-trace sensitivity via Hutchinson's estimator over the
+//! Frobenius proxy loss (§3.3, Algorithm 1), and the normalized
+//! frequency×sensitivity hybrid (§3.4).
+
+pub mod frequency;
+pub mod hessian;
+
+pub use frequency::{profile_frequency, FreqProfile};
+pub use hessian::{hessian_closed_form, hessian_hutchinson};
+
+/// A per-expert scalar map: `values[moe_layer][expert]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImportanceMap {
+    pub values: Vec<Vec<f64>>,
+}
+
+impl ImportanceMap {
+    pub fn zeros(layers: usize, experts: usize) -> ImportanceMap {
+        ImportanceMap { values: vec![vec![0.0; experts]; layers] }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn experts(&self) -> usize {
+        self.values.first().map_or(0, |l| l.len())
+    }
+
+    pub fn min_max(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for v in self.values.iter().flatten() {
+            lo = lo.min(*v);
+            hi = hi.max(*v);
+        }
+        (lo, hi)
+    }
+
+    /// Model-wide min-max normalization to [0, 1] (the paper's Eq. in
+    /// §3.4; constant maps normalize to all-zeros).
+    pub fn normalized(&self) -> ImportanceMap {
+        let (lo, hi) = self.min_max();
+        let span = hi - lo;
+        let f = |v: f64| if span > 0.0 { (v - lo) / span } else { 0.0 };
+        ImportanceMap {
+            values: self
+                .values
+                .iter()
+                .map(|l| l.iter().map(|&v| f(v)).collect())
+                .collect(),
+        }
+    }
+
+    /// Elementwise product (used for the hybrid metric).
+    pub fn hadamard(&self, other: &ImportanceMap) -> ImportanceMap {
+        assert_eq!(self.layers(), other.layers());
+        ImportanceMap {
+            values: self
+                .values
+                .iter()
+                .zip(&other.values)
+                .map(|(a, b)| {
+                    a.iter().zip(b).map(|(x, y)| x * y).collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Coefficient of variation over all experts — the balance telemetry
+    /// behind the paper's Fig. 2 discussion (DeepSeek ≈ uniform, MolmoE
+    /// skewed).
+    pub fn cv(&self) -> f64 {
+        let flat: Vec<f64> = self.values.iter().flatten().copied().collect();
+        let n = flat.len() as f64;
+        let mean = flat.iter().sum::<f64>() / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = flat.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        var.sqrt() / mean
+    }
+
+    /// Mean importance per layer (depth-profile telemetry, Fig. 3).
+    pub fn layer_means(&self) -> Vec<f64> {
+        self.values
+            .iter()
+            .map(|l| l.iter().sum::<f64>() / l.len().max(1) as f64)
+            .collect()
+    }
+}
+
+/// Paper §3.4: `I = norm(AF) ⊙ norm(H)` with model-wide min-max norms.
+pub fn hybrid(af: &ImportanceMap, h: &ImportanceMap) -> ImportanceMap {
+    af.normalized().hadamard(&h.normalized())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(vals: &[&[f64]]) -> ImportanceMap {
+        ImportanceMap { values: vals.iter().map(|l| l.to_vec()).collect() }
+    }
+
+    #[test]
+    fn normalization_bounds() {
+        let m = map(&[&[1.0, 5.0], &[3.0, 9.0]]);
+        let n = m.normalized();
+        assert_eq!(n.values[0][0], 0.0);
+        assert_eq!(n.values[1][1], 1.0);
+        assert!((n.values[1][0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_map_normalizes_to_zero() {
+        let m = map(&[&[2.0, 2.0], &[2.0, 2.0]]);
+        assert!(m.normalized().values.iter().flatten().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hybrid_highlights_jointly_important() {
+        // expert (0,0): high freq, low sens; (0,1): high both;
+        // (1,0): low both; (1,1): low freq, high sens
+        let af = map(&[&[10.0, 10.0], &[1.0, 1.0]]);
+        let h = map(&[&[1.0, 10.0], &[1.0, 10.0]]);
+        let hy = hybrid(&af, &h);
+        assert_eq!(hy.values[0][1], 1.0); // jointly max
+        assert!(hy.values[0][0] < 0.1);
+        assert!(hy.values[1][1] < 0.1);
+        assert_eq!(hy.values[1][0], 0.0);
+    }
+
+    #[test]
+    fn cv_distinguishes_balance() {
+        let balanced = map(&[&[5.0, 5.0, 5.0, 5.0]]);
+        let skewed = map(&[&[20.0, 0.1, 0.1, 0.1]]);
+        assert!(balanced.cv() < 1e-9);
+        assert!(skewed.cv() > 1.0);
+    }
+
+    #[test]
+    fn layer_means_profile() {
+        let m = map(&[&[4.0, 2.0], &[1.0, 1.0]]);
+        assert_eq!(m.layer_means(), vec![3.0, 1.0]);
+    }
+}

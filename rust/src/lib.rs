@@ -1,0 +1,50 @@
+//! MoPEQ — *Mixture of Mixed Precision Quantized Experts* — reproduced as
+//! a three-layer rust + JAX + Pallas system.
+//!
+//! Layering (see DESIGN.md):
+//! - **L3 (this crate)**: the coordinator — expert profiling, importance
+//!   metrics, K-means precision assignment (the paper's Algorithm 2),
+//!   quantization drivers (RTN / GPTQ / AWQ / SignRound), the evaluation
+//!   harness over the nine synthetic VLM tasks, a threaded inference
+//!   server with per-expert mixed-precision weight management, and an
+//!   offload simulator for the paper's §5.4 hardware claims.
+//! - **L2/L1 (build time)**: `python/compile` lowers the sim VLM-MoE
+//!   transformer + Pallas quantization kernels to `artifacts/*.hlo.txt`;
+//!   [`runtime`] loads and executes them via the PJRT CPU client.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `mopeq` binary is self-contained.
+
+pub mod benchx;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod importance;
+pub mod jsonx;
+pub mod linalg;
+pub mod moe;
+pub mod proptest_lite;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory, overridable for tests/CI.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MOPEQ_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| {
+            // crate root relative: works from repo root and from target/
+            let here = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+            here.join("artifacts")
+        })
+}

@@ -1,0 +1,163 @@
+//! Dense linear-algebra substrate for GPTQ: Cholesky decomposition,
+//! triangular solves, and SPD inverse — all on small `d_in × d_in`
+//! Hessians (64×64 at sim dims), f64 accumulation for stability.
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky of an SPD matrix `a` (n×n, row-major).
+/// Returns L with A = L Lᵀ.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not SPD at pivot {i} (sum={sum})");
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    y
+}
+
+/// Solve Lᵀ x = y (backward substitution).
+pub fn solve_lower_t(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (A⁻¹ = L⁻ᵀ L⁻¹).
+pub fn spd_inverse(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    let mut inv = vec![0.0f64; n * n];
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|x| *x = 0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, n, &e);
+        let x = solve_lower_t(&l, n, &y);
+        for i in 0..n {
+            inv[i * n + j] = x[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky of the *inverse* Hessian, as GPTQ uses:
+/// given SPD H, returns U upper-triangular with H⁻¹ = Uᵀ U ... in the
+/// GPTQ formulation we need `chol(H⁻¹)ᵀ` — the rows give the error
+/// propagation coefficients. We return chol(H⁻¹) as lower L and let the
+/// caller transpose.
+pub fn cholesky_inverse(h: &[f64], n: usize) -> Result<Vec<f64>> {
+    let inv = spd_inverse(h, n)?;
+    cholesky(&inv, n)
+}
+
+pub fn matvec(a: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+    (0..n)
+        .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        // A = B Bᵀ + n I
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 16;
+        let a = random_spd(n, 1);
+        let l = cholesky(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let n = 12;
+        let a = random_spd(n, 2);
+        let l = cholesky(&a, n).unwrap();
+        let mut rng = Rng::new(3);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = matvec(&a, n, &x_true);
+        let y = solve_lower(&l, n, &b);
+        let x = solve_lower_t(&l, n, &y);
+        for (xa, xb) in x.iter().zip(&x_true) {
+            assert!((xa - xb).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let n = 10;
+        let a = random_spd(n, 4);
+        let inv = spd_inverse(&a, n).unwrap();
+        for i in 0..n {
+            let col: Vec<f64> = (0..n).map(|j| inv[j * n + i]).collect();
+            let ai = matvec(&a, n, &col);
+            for (j, v) in ai.iter().enumerate() {
+                let want = if j == i { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-7, "({i},{j}) {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+}

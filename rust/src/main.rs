@@ -1,0 +1,450 @@
+//! `mopeq` — the MoPEQ coordinator CLI.
+//!
+//! Subcommands (see README for the full tour):
+//!   info      — artifacts + variant inventory
+//!   train     — E2E training driver (train_step HLO loop), saves weights
+//!   profile   — Figs. 2/3/4: frequency / Hessian / hybrid heatmaps
+//!   assign    — Figs. 5/6/8/10: precision-assignment maps (Algorithm 2)
+//!   eval      — evaluate the current (fp16) weights on all tasks
+//!   method    — run one table row (quantize + evaluate)
+//!   table     — full Table 2–5 row grid for one model
+//!   scorecard — §5.3 model-wise vs layer-wise win counts
+//!   offload   — §5.4 offload-traffic simulation
+//!   serve     — threaded batching server demo
+//!   report    — regenerate every table/figure into reports/
+
+use anyhow::{bail, Result};
+use mopeq::cli::Args;
+use mopeq::cluster::Granularity;
+use mopeq::config;
+use mopeq::coordinator::{MethodSpec, Metric, Pipeline};
+use mopeq::data::Task;
+use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
+use mopeq::report;
+use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist,
+                   ServerHandle};
+use mopeq::train::{train, TrainConfig};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("assign") => cmd_assign(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("method") => cmd_method(&args),
+        Some("table") => cmd_table(&args),
+        Some("scorecard") => cmd_scorecard(&args),
+        Some("offload") => cmd_offload(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("report") => cmd_report(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mopeq — Mixture of Mixed Precision Quantized Experts\n\
+         usage: mopeq <cmd> [--model <variant>] [flags]\n\
+         cmds:  info | train | profile | assign | eval | method | table |\n\
+         \x20      scorecard | offload | serve | report\n\
+         variants: dsvl2_tiny dsvl2_small dsvl2_base molmoe"
+    );
+}
+
+fn pipeline(args: &Args) -> Result<Pipeline> {
+    let model = args.str_flag("model", "dsvl2_tiny");
+    let seed = args.u64_flag("seed", 0)?;
+    let mut p = Pipeline::open(&model, seed)?;
+    p.eval_samples = args.usize_flag("samples", p.eval_samples)?;
+    p.calib_batches = args.usize_flag("calib-batches", p.calib_batches)?;
+    p.hutchinson_samples =
+        args.usize_flag("hutchinson-samples", p.hutchinson_samples)?;
+    if args.switch("closed-form-hessian") {
+        p.hessian_closed_form = true;
+    }
+    if args.switch("sparse") {
+        p.moe_kernel = mopeq::coordinator::MoeKernel::Sparse;
+    }
+    Ok(p)
+}
+
+fn metric_flag(args: &Args) -> Result<Metric> {
+    Ok(match args.str_flag("metric", "hessian").as_str() {
+        "frequency" | "af" => Metric::ActivationFrequency,
+        "hessian" => Metric::HessianSensitivity,
+        "hybrid" => Metric::Hybrid,
+        m => bail!("unknown --metric {m} (frequency|hessian|hybrid)"),
+    })
+}
+
+fn gran_flag(args: &Args) -> Result<Granularity> {
+    Ok(match args.str_flag("granularity", "model").as_str() {
+        "layer" => Granularity::LayerWise,
+        "model" => Granularity::ModelWise,
+        g => bail!("unknown --granularity {g} (layer|model)"),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("{}", report::table1(&config::variants()));
+    match mopeq::runtime::Session::open_default() {
+        Ok(s) => {
+            println!("PJRT platform: {}", s.platform());
+            println!("artifacts: {} entries", s.registry().entry_names().len());
+            let check = args.switch("check");
+            let mut bad = 0;
+            for e in s.registry().entry_names() {
+                if check {
+                    // parse + compile every artifact: catches HLO-text
+                    // ops the linked xla_extension cannot handle
+                    match s.warm(e) {
+                        Ok(()) => println!("  {e:<40} ok"),
+                        Err(err) => {
+                            bad += 1;
+                            let msg = err.to_string();
+                            let first = msg.lines().next().unwrap_or("");
+                            println!("  {e:<40} FAIL: {first}");
+                        }
+                    }
+                } else {
+                    println!("  {e}");
+                }
+            }
+            if check && bad > 0 {
+                bail!("{bad} artifacts failed to compile");
+            }
+        }
+        Err(e) => println!("(artifacts not available: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut p = pipeline(args)?;
+    if args.switch("fresh") {
+        p.reinit_weights()?;
+    }
+    let tcfg = TrainConfig {
+        steps: args.usize_flag("steps", 300)?,
+        lr: args.f64_flag("lr", 0.05)? as f32,
+        seed: args.u64_flag("seed", 0)?,
+        sparse: args.switch("sparse"),
+        ..Default::default()
+    };
+    println!("training {} for {} steps…", p.cfg.name, tcfg.steps);
+    let out = train(&p.session, &p.cfg, &mut p.ws, &tcfg)?;
+    for pt in &out.curve {
+        println!(
+            "step {:>5}  loss {:.4}  ce {:.4}  aux {:.4}  lr {:.4}",
+            pt.step, pt.loss, pt.ce, pt.aux, pt.lr
+        );
+    }
+    println!(
+        "{} steps in {:.1}s ({:.2} steps/s)",
+        out.steps, out.wall_secs, out.steps_per_sec
+    );
+    let path = Pipeline::weights_path(p.cfg.name);
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    p.ws.save(&path)?;
+    println!("saved weights to {}", path.display());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let freq = p.frequency_map()?;
+    println!(
+        "{}",
+        report::ascii_heatmap(
+            &format!("Fig.2 expert activation frequency — {}", p.cfg.name),
+            &freq.total.values
+        )
+    );
+    println!("activation CV = {:.3} (balanced ≈ 0)", freq.total.cv());
+    println!(
+        "{}",
+        report::ascii_heatmap(
+            &format!("Fig.2v visual-token activation — {}", p.cfg.name),
+            &freq.visual.values
+        )
+    );
+    let hess = p.hessian_map()?;
+    println!(
+        "{}",
+        report::ascii_heatmap(
+            &format!("Fig.3 Hessian trace approximation — {}", p.cfg.name),
+            &hess.values
+        )
+    );
+    let hy = mopeq::importance::hybrid(&freq.total, &hess);
+    println!(
+        "{}",
+        report::ascii_heatmap(
+            &format!("Fig.4 normalized AF × Hessian — {}", p.cfg.name),
+            &hy.values
+        )
+    );
+    Ok(())
+}
+
+fn cmd_assign(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let metric = metric_flag(args)?;
+    let gran = gran_flag(args)?;
+    let imp = p.importance(metric)?;
+    let pmap = p.assign(&imp, gran);
+    println!(
+        "{}",
+        report::precision_heatmap(
+            &format!(
+                "precision map — {} / {} / {}",
+                p.cfg.name,
+                metric.label(),
+                gran.label()
+            ),
+            &pmap
+        )
+    );
+    let policy = SizePolicy::uniform(4, p.cfg.group);
+    println!(
+        "model size: {:.3} MB (fp16: {:.3} MB)",
+        model_size_mb(&p.cfg, &pmap, policy),
+        model_size_mb(&p.cfg, &PrecisionMap::uniform(&p.cfg, 16),
+                      SizePolicy::fp16())
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let exec = p.executor(&p.ws)?;
+    let scores =
+        mopeq::eval::evaluate(&exec, &p.cfg, p.eval_samples, p.seed ^ 0xE7A1)?;
+    println!("{} (fp16 reference, n={}/task)", p.cfg.name, p.eval_samples);
+    for (t, acc) in &scores.scores {
+        println!(
+            "  {:<16} acc {:.3}  (chance {:.3})  display {:.1}",
+            t.label(),
+            acc,
+            mopeq::data::chance_accuracy(*t),
+            scores.display_value(*t)
+        );
+    }
+    println!("  mean accuracy {:.3}", scores.mean());
+    Ok(())
+}
+
+fn cmd_method(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let spec = match args.str_flag("row", "mixed").as_str() {
+        "fp16" => MethodSpec::Uniform16,
+        "u8" => MethodSpec::Uniform { bits: 8 },
+        "u4" => MethodSpec::Uniform { bits: 4 },
+        "mixed" => MethodSpec::Mixed {
+            metric: metric_flag(args)?,
+            granularity: gran_flag(args)?,
+        },
+        r => bail!("unknown --row {r} (fp16|u8|u4|mixed)"),
+    };
+    println!("running {} on {}…", spec.label(), p.cfg.name);
+    let r = p.run_method(&spec)?;
+    print_method(&p.cfg, &r);
+    Ok(())
+}
+
+fn print_method(cfg: &config::ModelConfig, r: &mopeq::coordinator::MethodResult) {
+    println!(
+        "{:<38} size {:.3} MB  mean bits {:.2}",
+        r.label, r.size_mb, r.mean_bits
+    );
+    for t in Task::ALL {
+        println!("  {:<16} {:.4}", t.label(), r.scores.get(t));
+    }
+    println!("  mean accuracy {:.4} ({})", r.scores.mean(), cfg.name);
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let mut results = Vec::new();
+    for spec in MethodSpec::table_rows() {
+        eprintln!("… {}", spec.label());
+        results.push(p.run_method(&spec)?);
+    }
+    let table = report::method_table(&p.cfg, &results);
+    println!("{table}");
+    let csv = report::method_table_csv(&p.cfg, &results);
+    let path = report::write_report(&format!("table_{}.csv", p.cfg.name), &csv)?;
+    report::write_report(&format!("table_{}.txt", p.cfg.name), &table)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_scorecard(args: &Args) -> Result<()> {
+    // §5.3: count model-wise vs layer-wise wins over (metric × task)
+    let p = pipeline(args)?;
+    let mut model_wins = 0;
+    let mut layer_wins = 0;
+    let mut ties = 0;
+    for metric in [Metric::ActivationFrequency, Metric::HessianSensitivity,
+                   Metric::Hybrid] {
+        let imp = p.importance(metric)?;
+        let pm_layer = p.assign(&imp, Granularity::LayerWise);
+        let pm_model = p.assign(&imp, Granularity::ModelWise);
+        let pol = SizePolicy::uniform(4, p.cfg.group);
+        let s_layer = p.quantize_and_eval(&pm_layer, pol)?;
+        let s_model = p.quantize_and_eval(&pm_model, pol)?;
+        for t in Task::ALL {
+            let (a, b) = (s_model.get(t), s_layer.get(t));
+            if a > b {
+                model_wins += 1;
+            } else if b > a {
+                layer_wins += 1;
+            } else {
+                ties += 1;
+            }
+            println!(
+                "{:<24} {:<16} model {:.3} vs layer {:.3}",
+                metric.label(),
+                t.label(),
+                a,
+                b
+            );
+        }
+    }
+    println!(
+        "\n§5.3 scorecard ({}): model-wise wins {}, layer-wise wins {}, \
+         ties {}",
+        p.cfg.name, model_wins, layer_wins, ties
+    );
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let requests = args.usize_flag("requests", 500)?;
+    let freq = p.frequency_map()?;
+    let hess = p.hessian_map()?;
+    let dist = RoutingDist::from_weights(&freq.total.values);
+    let af_map = p.assign(&freq.total, Granularity::ModelWise);
+    let h_map = p.assign(&hess, Granularity::ModelWise);
+    let cache_frac = args.f64_flag("cache-frac", 0.25)?;
+    let full: usize = af_map
+        .iter_experts()
+        .map(|(_, b)| mopeq::serve::expert_bytes(&p.cfg, b))
+        .sum();
+    let cache = (full as f64 * cache_frac) as usize;
+    let link = LinkModel::default();
+    println!(
+        "offload sim — {} requests, cache {:.1}% of AF-map total ({} KiB)",
+        requests,
+        cache_frac * 100.0,
+        cache / 1024
+    );
+    for (label, pmap) in [("activation-frequency map", &af_map),
+                          ("MoPEQ hessian map", &h_map)] {
+        let r = simulate_offload(&p.cfg, pmap, &dist, &link, cache,
+                                 requests, p.seed);
+        println!(
+            "  {label:<28} bytes/request {:>10.0}  hit-rate {:.3}  \
+             transfer {:.3} ms/request",
+            r.bytes_per_request,
+            r.hit_rate,
+            r.transfer_secs * 1e3 / requests as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    let n = args.usize_flag("requests", 64)?;
+    let ws = p.clone_weights();
+    let handle = ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?;
+    let mut rng = mopeq::rng::Rng::new(p.seed).derive("serve-cli");
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        let s = mopeq::data::gen_sample(task, &p.cfg, &mut rng);
+        pending.push(handle.submit(s)?);
+    }
+    let mut correct = 0;
+    for rx in pending {
+        let reply = rx.recv()?;
+        if reply.correct {
+            correct += 1;
+        }
+    }
+    let stats = handle.shutdown()?;
+    println!(
+        "served {} requests in {} batches (mean fill {:.2})",
+        stats.requests, stats.batches, stats.mean_fill
+    );
+    println!(
+        "latency p50 {:?}  p95 {:?}  p99 {:?}  throughput {:.1} req/s",
+        stats.p50, stats.p95, stats.p99, stats.throughput_rps
+    );
+    println!("accuracy {:.3}", correct as f64 / n as f64);
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    // regenerate every figure (tables are `mopeq table`, one per model —
+    // they dominate runtime, so they stay separate commands; the benches
+    // regenerate them too)
+    report::write_report("table1.txt", &report::table1(&config::variants()))?;
+    println!("wrote table1.txt");
+    let models: Vec<String> = match args.flags.get("model") {
+        Some(m) => vec![m.clone()],
+        None => config::variants().iter().map(|c| c.name.to_string()).collect(),
+    };
+    for model in models {
+        let mut sub = Args::default();
+        sub.flags.insert("model".into(), model.clone());
+        sub.flags
+            .insert("samples".into(), args.str_flag("samples", "32"));
+        let p = pipeline(&sub)?;
+        let freq = p.frequency_map()?;
+        let hess = p.hessian_map()?;
+        let hy = mopeq::importance::hybrid(&freq.total, &hess);
+        for (fig, map) in [("fig2_freq", &freq.total),
+                           ("fig2v_freq_visual", &freq.visual),
+                           ("fig3_hessian", &hess),
+                           ("fig4_hybrid", &hy)] {
+            let txt = report::ascii_heatmap(&format!("{fig} {model}"),
+                                            &map.values);
+            report::write_report(&report::figure_file(fig, &model), &txt)?;
+            report::write_report(
+                &format!("{fig}_{model}.csv"),
+                &report::map_csv(&map.values),
+            )?;
+        }
+        for (fig, metric, imp) in [
+            ("fig5_assign_freq", Metric::ActivationFrequency, &freq.total),
+            ("fig6_assign_hessian", Metric::HessianSensitivity, &hess),
+            ("fig10_assign_hybrid", Metric::Hybrid, &hy),
+        ] {
+            for (tag, gran) in [("layer", Granularity::LayerWise),
+                                ("model", Granularity::ModelWise)] {
+                let pmap = p.assign(imp, gran);
+                let txt = report::precision_heatmap(
+                    &format!("{fig} ({}) {} {}", metric.label(), tag, model),
+                    &pmap,
+                );
+                report::write_report(&format!("{fig}_{tag}_{model}.txt"),
+                                     &txt)?;
+                report::write_report(
+                    &format!("{fig}_{tag}_{model}.csv"),
+                    &report::pmap_csv(&pmap),
+                )?;
+            }
+        }
+        println!("wrote figures for {model}");
+    }
+    println!("reports in {}", report::reports_dir().display());
+    Ok(())
+}

@@ -1,0 +1,471 @@
+//! Model state: the weight store (canonical stacked parameters, mirroring
+//! `model.param_specs`), per-expert precision maps, and the exact
+//! bit-accounting behind the "Model Size" columns of Tables 2–5.
+
+pub mod size;
+
+pub use size::{model_size_bits, model_size_mb, SizePolicy};
+
+use crate::config::ModelConfig;
+use crate::rng::Rng;
+use crate::runtime::registry::VariantMeta;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Identifies one routed expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertId {
+    /// MoE-layer index in [0, moe_layers)
+    pub layer: usize,
+    pub expert: usize,
+}
+
+/// The three FC matrices of a SwiGLU expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertMat {
+    Gate,
+    Up,
+    Down,
+}
+
+impl ExpertMat {
+    pub const ALL: [ExpertMat; 3] =
+        [ExpertMat::Gate, ExpertMat::Up, ExpertMat::Down];
+
+    pub fn param_name(&self) -> &'static str {
+        match self {
+            ExpertMat::Gate => "moe.gate",
+            ExpertMat::Up => "moe.up",
+            ExpertMat::Down => "moe.down",
+        }
+    }
+}
+
+/// All model parameters, stored stacked exactly as `param_specs` defines
+/// (e.g. `moe.gate` is `[Lm, E, d, m]`).
+pub struct WeightStore {
+    pub variant: String,
+    params: Vec<(String, Tensor<f32>)>,
+    index: HashMap<String, usize>,
+}
+
+impl WeightStore {
+    /// Initialize from the variant's canonical spec.
+    ///
+    /// Expert init scale **grows with depth** (`0.08 → 0.16`): under the
+    /// paper's Frobenius proxy the Hessian trace is `(n-1)/‖W‖_F`, so
+    /// this reproduces the paper's Fig. 3 profile (early layers most
+    /// sensitive). Models trained without a load-balance loss
+    /// (`aux_weight == 0`, i.e. MolmoE) additionally get imbalanced
+    /// router row norms so the Fig. 2 activation skew emerges.
+    pub fn init(cfg: &ModelConfig, meta: &VariantMeta, seed: u64) -> WeightStore {
+        let rng = Rng::new(seed).derive(&format!("init/{}", cfg.name));
+        let lm = cfg.moe_layers();
+        let mut params = Vec::with_capacity(meta.params.len());
+        for (name, shape) in &meta.params {
+            let t = if name.contains(".ln") {
+                Tensor::ones(shape)
+            } else if name == "moe.gate" || name == "moe.up" || name == "moe.down" {
+                // [Lm, E, ...] — per-layer depth-dependent scale
+                let mut layers = Vec::with_capacity(lm);
+                for l in 0..lm {
+                    let scale = expert_init_scale(l, lm);
+                    let per: usize = shape[1..].iter().product();
+                    let mut r = rng.derive(&format!("{name}/{l}"));
+                    layers.push(Tensor::new(&shape[1..], r.normal_vec(per, scale)));
+                }
+                Tensor::stack(&layers)
+            } else if name == "moe.router" && cfg.aux_weight == 0.0 {
+                // imbalanced router init (MolmoE): log-normal per-expert
+                // row scale
+                let (e, d) = (shape[1], shape[2]);
+                let mut layers = Vec::with_capacity(lm);
+                for l in 0..lm {
+                    let r = rng.derive(&format!("router/{l}"));
+                    let mut rows = Vec::with_capacity(e);
+                    for ex in 0..e {
+                        let mut rr = r.derive(&format!("e{ex}"));
+                        let scale = 0.12 * (1.1 * rr.normal() as f32).exp();
+                        rows.push(Tensor::new(&[d], rr.normal_vec(d, scale)));
+                    }
+                    layers.push(Tensor::stack(&rows));
+                }
+                Tensor::stack(&layers)
+            } else {
+                let scale = match name.as_str() {
+                    "embed.table" | "embed.pos" | "final.head" => 0.10,
+                    _ => 0.08,
+                };
+                let mut r = rng.derive(name);
+                Tensor::new(shape, r.normal_vec(shape.iter().product(), scale))
+            };
+            params.push((name.clone(), t));
+        }
+        let index = params
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        WeightStore { variant: cfg.name.to_string(), params, index }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.params.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor<f32>> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("no param `{name}`"))?;
+        Ok(&self.params[i].1)
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor<f32>) -> Result<()> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("no param `{name}`"))?;
+        if self.params[i].1.shape != t.shape {
+            bail!("set `{name}`: shape {:?} != {:?}", t.shape, self.params[i].1.shape);
+        }
+        self.params[i].1 = t;
+        Ok(())
+    }
+
+    /// Parameters in canonical order (for train_step argument assembly).
+    pub fn flat(&self) -> Vec<&Tensor<f32>> {
+        self.params.iter().map(|(_, t)| t).collect()
+    }
+
+    /// Replace all parameters in canonical order.
+    pub fn set_flat(&mut self, tensors: Vec<Tensor<f32>>) -> Result<()> {
+        if tensors.len() != self.params.len() {
+            bail!("set_flat: {} tensors, expected {}", tensors.len(), self.params.len());
+        }
+        for ((name, slot), t) in self.params.iter_mut().zip(tensors) {
+            if slot.shape != t.shape {
+                bail!("set_flat `{name}`: shape {:?} != {:?}", t.shape, slot.shape);
+            }
+            *slot = t;
+        }
+        Ok(())
+    }
+
+    /// One expert FC matrix ([d,m] for gate/up, [m,d] for down).
+    pub fn expert_mat(&self, id: ExpertId, which: ExpertMat) -> Result<Tensor<f32>> {
+        let stacked = self.get(which.param_name())?;
+        if id.layer >= stacked.shape[0] || id.expert >= stacked.shape[1] {
+            bail!("expert {id:?} out of range {:?}", &stacked.shape[..2]);
+        }
+        Ok(stacked.index0(id.layer).index0(id.expert))
+    }
+
+    /// Overwrite one expert FC matrix (e.g. with dequantized weights).
+    pub fn set_expert_mat(
+        &mut self,
+        id: ExpertId,
+        which: ExpertMat,
+        w: &Tensor<f32>,
+    ) -> Result<()> {
+        let i = *self
+            .index
+            .get(which.param_name())
+            .ok_or_else(|| anyhow!("no param {}", which.param_name()))?;
+        let stacked = &mut self.params[i].1;
+        let per: usize = stacked.shape[2..].iter().product();
+        if w.len() != per {
+            bail!("expert mat size {} != {}", w.len(), per);
+        }
+        let off = (id.layer * stacked.shape[1] + id.expert) * per;
+        stacked.data[off..off + per].copy_from_slice(&w.data);
+        Ok(())
+    }
+
+    /// Total parameter element count.
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    // ---------------------------------------------------------- binary io
+
+    const MAGIC: &'static [u8; 8] = b"MOPQWT1\0";
+
+    /// Save to a simple binary format (cache of trained weights).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        write_str(&mut f, &self.variant)?;
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.params {
+            write_str(&mut f, name)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{}: not a mopeq weight file", path.display());
+        }
+        let variant = read_str(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut data = vec![0.0f32; count];
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf)?;
+            for (i, c) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            params.push((name, Tensor::new(&shape, data)));
+        }
+        let index = params
+            .iter()
+            .enumerate()
+            .map(|(i, (nm, _))| (nm.clone(), i))
+            .collect();
+        Ok(WeightStore { variant, params, index })
+    }
+}
+
+fn expert_init_scale(layer: usize, total: usize) -> f32 {
+    let frac = if total > 1 {
+        layer as f32 / (total - 1) as f32
+    } else {
+        0.0
+    };
+    0.08 * (1.0 + frac)
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("string too long");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Per-expert precision assignment: `bits[moe_layer][expert]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrecisionMap {
+    pub bits: Vec<Vec<u8>>,
+}
+
+impl PrecisionMap {
+    pub fn uniform(cfg: &ModelConfig, bits: u8) -> PrecisionMap {
+        PrecisionMap { bits: vec![vec![bits; cfg.experts]; cfg.moe_layers()] }
+    }
+
+    pub fn get(&self, id: ExpertId) -> u8 {
+        self.bits[id.layer][id.expert]
+    }
+
+    /// Mean assigned bit width (tables telemetry).
+    pub fn mean_bits(&self) -> f64 {
+        let total: usize = self.bits.iter().map(|l| l.len()).sum();
+        let sum: f64 = self.bits.iter().flatten().map(|&b| b as f64).sum();
+        sum / total as f64
+    }
+
+    /// Histogram over bit widths (figure rendering).
+    pub fn histogram(&self) -> Vec<(u8, usize)> {
+        let mut h: HashMap<u8, usize> = HashMap::new();
+        for &b in self.bits.iter().flatten() {
+            *h.entry(b).or_insert(0) += 1;
+        }
+        let mut v: Vec<(u8, usize)> = h.into_iter().collect();
+        v.sort();
+        v
+    }
+
+    pub fn iter_experts(&self) -> impl Iterator<Item = (ExpertId, u8)> + '_ {
+        self.bits.iter().enumerate().flat_map(|(layer, row)| {
+            row.iter()
+                .enumerate()
+                .map(move |(expert, &b)| (ExpertId { layer, expert }, b))
+        })
+    }
+}
+
+/// Build the canonical parameter spec for a config without meta.json —
+/// mirror of `model.param_specs` used by tests and the offline tools.
+/// (The authoritative copy is meta.json; `Registry::load` cross-checks.)
+pub fn param_specs(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (d, m) = (cfg.d_model, cfg.d_expert);
+    let (lm, fd, e) = (cfg.moe_layers(), cfg.first_dense, cfg.experts);
+    let mut p: Vec<(String, Vec<usize>)> = vec![
+        ("embed.table".into(), vec![cfg.vocab, d]),
+        ("embed.pos".into(), vec![cfg.seq, d]),
+    ];
+    if fd > 0 {
+        p.push(("dense.ln1".into(), vec![fd, d]));
+        for n in ["wq", "wk", "wv", "wo"] {
+            p.push((format!("dense.{n}"), vec![fd, d, d]));
+        }
+        p.push(("dense.ln2".into(), vec![fd, d]));
+        p.push(("dense.gate".into(), vec![fd, d, cfg.d_dense]));
+        p.push(("dense.up".into(), vec![fd, d, cfg.d_dense]));
+        p.push(("dense.down".into(), vec![fd, cfg.d_dense, d]));
+    }
+    p.push(("moe.ln1".into(), vec![lm, d]));
+    for n in ["wq", "wk", "wv", "wo"] {
+        p.push((format!("moe.{n}"), vec![lm, d, d]));
+    }
+    p.push(("moe.ln2".into(), vec![lm, d]));
+    p.push(("moe.router".into(), vec![lm, e, d]));
+    p.push(("moe.gate".into(), vec![lm, e, d, m]));
+    p.push(("moe.up".into(), vec![lm, e, d, m]));
+    p.push(("moe.down".into(), vec![lm, e, m, d]));
+    if cfg.n_shared > 0 {
+        p.push(("moe.sgate".into(), vec![lm, d, cfg.d_shared]));
+        p.push(("moe.sup".into(), vec![lm, d, cfg.d_shared]));
+        p.push(("moe.sdown".into(), vec![lm, cfg.d_shared, d]));
+    }
+    p.push(("final.ln".into(), vec![d]));
+    p.push(("final.head".into(), vec![d, cfg.vocab]));
+    p
+}
+
+/// VariantMeta built locally from a config (tests / offline tools).
+pub fn local_meta(cfg: &ModelConfig) -> VariantMeta {
+    VariantMeta {
+        name: cfg.name.to_string(),
+        moe_signature: cfg.moe_signature(),
+        params: param_specs(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn init_shapes_and_depth_scale() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let meta = local_meta(&cfg);
+        let ws = WeightStore::init(&cfg, &meta, 0);
+        assert_eq!(ws.total_params(), meta.total_params());
+        // depth-dependent expert norm: last layer > first layer
+        let first = ws
+            .expert_mat(ExpertId { layer: 0, expert: 0 }, ExpertMat::Gate)
+            .unwrap();
+        let last = ws
+            .expert_mat(
+                ExpertId { layer: cfg.moe_layers() - 1, expert: 0 },
+                ExpertMat::Gate,
+            )
+            .unwrap();
+        assert!(last.frobenius_norm() > 1.5 * first.frobenius_norm());
+    }
+
+    #[test]
+    fn expert_mat_roundtrip() {
+        let cfg = config::variant("molmoe").unwrap();
+        let meta = local_meta(&cfg);
+        let mut ws = WeightStore::init(&cfg, &meta, 1);
+        let id = ExpertId { layer: 3, expert: 17 };
+        let mut w = ws.expert_mat(id, ExpertMat::Up).unwrap();
+        for v in &mut w.data {
+            *v = 42.0;
+        }
+        ws.set_expert_mat(id, ExpertMat::Up, &w).unwrap();
+        assert_eq!(ws.expert_mat(id, ExpertMat::Up).unwrap(), w);
+        // neighbours untouched
+        let n = ws
+            .expert_mat(ExpertId { layer: 3, expert: 18 }, ExpertMat::Up)
+            .unwrap();
+        assert!(n.data.iter().any(|&v| v != 42.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let meta = local_meta(&cfg);
+        let ws = WeightStore::init(&cfg, &meta, 2);
+        let dir = std::env::temp_dir().join("mopeq_test_ws");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        ws.save(&path).unwrap();
+        let ws2 = WeightStore::load(&path).unwrap();
+        assert_eq!(ws2.variant, ws.variant);
+        for name in ws.names() {
+            assert_eq!(ws.get(name).unwrap(), ws2.get(name).unwrap());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn molmoe_router_is_imbalanced_deepseek_is_not() {
+        let spread = |name: &str| {
+            let cfg = config::variant(name).unwrap();
+            let meta = local_meta(&cfg);
+            let ws = WeightStore::init(&cfg, &meta, 3);
+            let router = ws.get("moe.router").unwrap();
+            let (e, d) = (router.shape[1], router.shape[2]);
+            let l0 = router.index0(0);
+            let norms: Vec<f32> = (0..e)
+                .map(|i| {
+                    l0.data[i * d..(i + 1) * d]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                })
+                .collect();
+            let mean = norms.iter().sum::<f32>() / e as f32;
+            let var = norms
+                .iter()
+                .map(|x| (x - mean) * (x - mean))
+                .sum::<f32>()
+                / e as f32;
+            var.sqrt() / mean
+        };
+        assert!(spread("molmoe") > 3.0 * spread("dsvl2_tiny"));
+    }
+
+    #[test]
+    fn precision_map_basics() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let pm = PrecisionMap::uniform(&cfg, 4);
+        assert_eq!(pm.mean_bits(), 4.0);
+        assert_eq!(pm.histogram(), vec![(4, cfg.total_experts())]);
+        assert_eq!(pm.iter_experts().count(), cfg.total_experts());
+    }
+}

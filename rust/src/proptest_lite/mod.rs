@@ -1,0 +1,73 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! vendor set): run a predicate over N seeded random cases; on failure,
+//! report the failing case number and seed so it can be replayed
+//! deterministically with `forall_seeded`.
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` independent RNG streams; panic with the
+/// replay seed on the first failure.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> bool,
+{
+    forall_seeded(name, 0xC0FFEE, cases, &mut prop)
+}
+
+/// Deterministic replay entry point.
+pub fn forall_seeded<F>(name: &str, base_seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Rng) -> bool,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if !prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay: forall_seeded(\"{name}\", {base_seed:#x}, \
+                 {n}, ..) case {case})",
+                n = cases
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("tautology", 50, |rng| rng.uniform() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `falsum` failed")]
+    fn failing_property_reports() {
+        forall("falsum", 10, |rng| rng.uniform() < 0.0);
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at 1")]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 1e-6);
+    }
+}

@@ -1,0 +1,141 @@
+//! AWQ-style baseline (paper §2.3, Lin et al.): protect salient weights
+//! by scaling input channels with activation statistics before RTN, then
+//! fold the inverse scale back at dequantization.
+//!
+//!   s_j   = (mean_t |X[t,j]|)^alpha, normalized to geometric mean 1
+//!   Ŵ     = qdq(diag(s) W) with the inverse scale folded into the
+//!           stored scales, so dequantize() returns weights in the
+//!           original space and the runtime needs no extra op.
+
+use crate::quant::{rtn_quantize, QuantizedMatrix};
+use crate::tensor::Tensor;
+
+/// Per-input-channel AWQ scales from calibration activations.
+pub fn awq_scales(x: &Tensor<f32>, alpha: f32) -> Vec<f32> {
+    let (n, din) = (x.shape[0], x.shape[1]);
+    let mut mean_abs = vec![0.0f64; din];
+    for t in 0..n {
+        for j in 0..din {
+            mean_abs[j] += (x.data[t * din + j].abs()) as f64;
+        }
+    }
+    let mut s: Vec<f64> = mean_abs
+        .iter()
+        .map(|m| ((m / n as f64).max(1e-8)).powf(alpha as f64))
+        .collect();
+    // normalize to geometric mean 1 so the overall weight magnitude is
+    // preserved
+    let log_mean = s.iter().map(|v| v.ln()).sum::<f64>() / din as f64;
+    let gm = log_mean.exp();
+    for v in &mut s {
+        *v /= gm;
+    }
+    s.iter().map(|&v| v as f32).collect()
+}
+
+/// AWQ quantization: scale rows, RTN, fold 1/s into the group scales.
+///
+/// Scale-folding subtlety: the stored `scales` are per (group, column)
+/// but the AWQ scale is per row, so folding exactly requires the rows of
+/// a group to share s_j. We therefore quantize in the scaled space and
+/// leave codes/zps there, storing the *row* scale vector so dequantize
+/// can undo it; `QuantizedMatrixAwq` wraps this.
+pub struct QuantizedMatrixAwq {
+    pub inner: QuantizedMatrix,
+    pub row_scale: Vec<f32>,
+}
+
+impl QuantizedMatrixAwq {
+    pub fn dequantize(&self) -> Tensor<f32> {
+        let mut w = self.inner.dequantize();
+        let dout = self.inner.dout;
+        for r in 0..self.inner.din {
+            let inv = 1.0 / self.row_scale[r];
+            for c in 0..dout {
+                w.data[r * dout + c] *= inv;
+            }
+        }
+        w
+    }
+
+    /// Codes + group meta + fp16 row scales.
+    pub fn size_bits(&self) -> usize {
+        self.inner.size_bits() + self.row_scale.len() * 16
+    }
+}
+
+pub fn awq_quantize(
+    w: &Tensor<f32>,
+    x: &Tensor<f32>,
+    bits: u8,
+    group: usize,
+    alpha: f32,
+) -> QuantizedMatrixAwq {
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    let s = awq_scales(x, alpha);
+    let mut ws = w.clone();
+    for r in 0..din {
+        for c in 0..dout {
+            ws.data[r * dout + c] *= s[r];
+        }
+    }
+    QuantizedMatrixAwq {
+        inner: rtn_quantize(&ws, bits, group),
+        row_scale: s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::{recon_error, rtn_recon_error};
+    use crate::rng::Rng;
+
+    /// Activations with a few dominant channels — AWQ's motivating case.
+    fn outlier_x(rng: &mut Rng, n: usize, din: usize) -> Tensor<f32> {
+        let mut x = Tensor::randn(rng, &[n, din], 0.2);
+        for t in 0..n {
+            for j in (0..din).step_by(16) {
+                x.data[t * din + j] *= 25.0;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn awq_beats_rtn_with_outlier_channels() {
+        let mut rng = Rng::new(11);
+        let din = 64;
+        let w = Tensor::randn(&mut rng, &[din, 32], 0.5);
+        let x = outlier_x(&mut rng, 256, din);
+        for bits in [2u8, 3] {
+            let aq = awq_quantize(&w, &x, bits, 32, 0.5);
+            let ae = recon_error(&w, &aq.dequantize(), &x);
+            let re = rtn_recon_error(&w, &x, bits, 32);
+            assert!(ae < re, "bits={bits}: awq {ae} !< rtn {re}");
+        }
+    }
+
+    #[test]
+    fn scales_have_geometric_mean_one() {
+        let mut rng = Rng::new(12);
+        let x = outlier_x(&mut rng, 64, 64);
+        let s = awq_scales(&x, 0.5);
+        let log_mean: f64 =
+            s.iter().map(|v| (*v as f64).ln()).sum::<f64>() / 64.0;
+        assert!(log_mean.abs() < 1e-4);
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn uniform_activations_reduce_to_rtn() {
+        // with constant |X| per channel the AWQ scales are all 1 and the
+        // result must equal plain RTN
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(&mut rng, &[64, 8], 0.5);
+        let x = Tensor::ones(&[32, 64]);
+        let aq = awq_quantize(&w, &x, 4, 32, 0.5);
+        let rq = rtn_quantize(&w, 4, 32);
+        assert_eq!(aq.inner.codes, rq.codes);
+    }
+}

@@ -1,0 +1,222 @@
+//! Quantization substrate: the SignRound qdq math (bit-for-bit mirror of
+//! `python/compile/kernels/ref.py`), integer codes + packing, and the
+//! three PTQ baselines implemented from scratch (RTN here, GPTQ and AWQ
+//! in submodules). The SignRound SignSGD *driver* (which loops the AOT'd
+//! `signround_step` HLO) lives in [`crate::coordinator`].
+
+pub mod awq;
+pub mod gptq;
+pub mod pack;
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-8;
+
+/// Group-wise quantization metadata for one matrix `W[din, dout]`:
+/// rows are grouped in blocks of `group`; each (group, column) has a
+/// scale and zero point.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub din: usize,
+    pub dout: usize,
+    pub bits: u8,
+    pub group: usize,
+    /// integer codes, row-major [din, dout], values in [0, 2^bits)
+    pub codes: Vec<u8>,
+    /// scales [n_groups, dout]
+    pub scales: Vec<f32>,
+    /// zero points [n_groups, dout]
+    pub zps: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    pub fn n_groups(&self) -> usize {
+        self.din / self.group
+    }
+
+    /// Dequantize to a dense f32 matrix: s * (q - zp).
+    pub fn dequantize(&self) -> Tensor<f32> {
+        let mut out = vec![0.0f32; self.din * self.dout];
+        for r in 0..self.din {
+            let grp = r / self.group;
+            for c in 0..self.dout {
+                let s = self.scales[grp * self.dout + c];
+                let zp = self.zps[grp * self.dout + c];
+                out[r * self.dout + c] =
+                    s * (self.codes[r * self.dout + c] as f32 - zp);
+            }
+        }
+        Tensor::new(&[self.din, self.dout], out)
+    }
+
+    /// Storage cost in bits: codes + per-group (fp16 scale + b-bit zp).
+    /// This is the accounting behind the "Model Size (GB)" columns of
+    /// Tables 2-5.
+    pub fn size_bits(&self) -> usize {
+        let code_bits = self.din * self.dout * self.bits as usize;
+        let overhead = self.n_groups() * self.dout
+            * (16 + self.bits as usize);
+        code_bits + overhead
+    }
+}
+
+/// Scale/zero-point per (group, column) — the SignRound parametrization:
+///   s  = (max(W)*alpha - min(W)*beta) / (2^bits - 1)
+///   zp = round(-min(W)*beta / s)
+pub fn qdq_params(
+    w: &Tensor<f32>,
+    alpha: &[f32],
+    beta: &[f32],
+    bits: u8,
+    group: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    assert_eq!(din % group, 0, "din {din} % group {group}");
+    let ngroups = din / group;
+    assert_eq!(alpha.len(), ngroups * dout);
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let mut scales = vec![0.0f32; ngroups * dout];
+    let mut zps = vec![0.0f32; ngroups * dout];
+    for grp in 0..ngroups {
+        for c in 0..dout {
+            let mut wmax = f32::NEG_INFINITY;
+            let mut wmin = f32::INFINITY;
+            for r in grp * group..(grp + 1) * group {
+                let v = w.data[r * dout + c];
+                wmax = wmax.max(v);
+                wmin = wmin.min(v);
+            }
+            let a = alpha[grp * dout + c];
+            let b = beta[grp * dout + c];
+            let s = ((wmax * a - wmin * b) / qmax).max(EPS);
+            scales[grp * dout + c] = s;
+            zps[grp * dout + c] = (-wmin * b / s).round();
+        }
+    }
+    (scales, zps)
+}
+
+/// Full SignRound quantization to integer codes with rounding offset V.
+/// RTN is the special case v = 0, alpha = beta = 1.
+pub fn quantize_int(
+    w: &Tensor<f32>,
+    v: Option<&Tensor<f32>>,
+    alpha: &[f32],
+    beta: &[f32],
+    bits: u8,
+    group: usize,
+) -> QuantizedMatrix {
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    let (scales, zps) = qdq_params(w, alpha, beta, bits, group);
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let mut codes = vec![0u8; din * dout];
+    for r in 0..din {
+        let grp = r / group;
+        for c in 0..dout {
+            let s = scales[grp * dout + c];
+            let zp = zps[grp * dout + c];
+            let off = v.map_or(0.0, |vv| vv.data[r * dout + c]);
+            let q = ((w.data[r * dout + c] / s + off).round() + zp)
+                .clamp(0.0, qmax);
+            codes[r * dout + c] = q as u8;
+        }
+    }
+    QuantizedMatrix { din, dout, bits, group, codes, scales, zps }
+}
+
+/// Round-to-nearest baseline (Uniform-AutoRound rows of the tables when
+/// SignRound optimization is skipped): v = 0, alpha = beta = 1.
+pub fn rtn_quantize(w: &Tensor<f32>, bits: u8, group: usize) -> QuantizedMatrix {
+    let dout = w.shape[1];
+    let ngroups = w.shape[0] / group;
+    let ones = vec![1.0f32; ngroups * dout];
+    quantize_int(w, None, &ones, &ones, bits, group)
+}
+
+/// Fake-quant convenience: dequantize(rtn_quantize(w)).
+pub fn rtn_qdq(w: &Tensor<f32>, bits: u8, group: usize) -> Tensor<f32> {
+    rtn_quantize(w, bits, group).dequantize()
+}
+
+/// fp16 storage cost of a dense matrix in bits (the Uniform-16 rows).
+pub fn fp16_size_bits(n_elems: usize) -> usize {
+    n_elems * 16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rtn_roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let qm = rtn_quantize(&w, 4, 32);
+        let wq = qm.dequantize();
+        for r in 0..64 {
+            let grp = r / 32;
+            for c in 0..32 {
+                let s = qm.scales[grp * 32 + c];
+                let err = (w.data[r * 32 + c] - wq.data[r * 32 + c]).abs();
+                // half-step plus clipping slack at the extremes
+                assert!(err <= 0.5 * s + 1e-5,
+                        "err {err} > s/2 {s} at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let errs: Vec<f32> = [2u8, 3, 4, 8]
+            .iter()
+            .map(|&b| rtn_qdq(&w, b, 32).mse(&w))
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3],
+                "{errs:?}");
+    }
+
+    #[test]
+    fn dequant_is_fixed_point() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.4);
+        let w1 = rtn_qdq(&w, 4, 32);
+        let w2 = rtn_qdq(&w1, 4, 32);
+        assert!(w1.max_abs_diff(&w2) < 2e-6, "{}", w1.max_abs_diff(&w2));
+    }
+
+    #[test]
+    fn codes_in_range_prop() {
+        forall("codes_in_range", 25, |rng| {
+            let din = 32 * (1 + rng.below(3));
+            let dout = 1 + rng.below(48);
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let w = Tensor::randn(rng, &[din, dout], 1.0);
+            let qm = rtn_quantize(&w, bits, 32);
+            let qmax = (1u16 << bits) as u16 - 1;
+            qm.codes.iter().all(|&c| (c as u16) <= qmax)
+        });
+    }
+
+    #[test]
+    fn size_bits_accounting() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let qm = rtn_quantize(&w, 4, 32);
+        // codes: 64*32*4 = 8192; overhead: 2 groups * 32 cols * (16+4)
+        assert_eq!(qm.size_bits(), 8192 + 2 * 32 * 20);
+        assert!(qm.size_bits() < fp16_size_bits(64 * 32));
+    }
+
+    #[test]
+    fn constant_matrix_quantizes_exactly() {
+        let w = Tensor::full(&[32, 8], 0.7);
+        let wq = rtn_qdq(&w, 2, 32);
+        // wmax == wmin == 0.7 > 0: s = (0.7-0.7)/3 -> EPS; zp huge; but
+        // the reconstruction must still be finite
+        assert!(wq.data.iter().all(|x| x.is_finite()));
+    }
+}

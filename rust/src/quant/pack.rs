@@ -1,0 +1,129 @@
+//! Bit-packing of integer quantization codes into u32 words — the
+//! storage format behind the model-size accounting and the wire format
+//! of the `qmatmul4` Pallas kernel (layout mirrored bit-for-bit by
+//! `python/compile/kernels/qmatmul.py::pack4`).
+//!
+//! Layout: column-major words along the input dimension. For bit width
+//! `b`, `per = 32 / b` codes per word (3-bit packs 10 codes, wasting 2
+//! bits/word); word `r` of column `c` holds codes for rows
+//! `r*per .. (r+1)*per`, code `k` in bits `[b*k, b*(k+1))`.
+
+use anyhow::{bail, Result};
+
+/// Codes per u32 word at a given bit width.
+pub fn codes_per_word(bits: u8) -> usize {
+    32 / bits as usize
+}
+
+/// Number of u32 words per column for `din` rows.
+pub fn words_per_col(din: usize, bits: u8) -> usize {
+    din.div_ceil(codes_per_word(bits))
+}
+
+/// Pack `codes[din, dout]` (row-major) into words `[words_per_col, dout]`
+/// (row-major, matching the jax `pack4` layout for bits=4).
+pub fn pack(codes: &[u8], din: usize, dout: usize, bits: u8) -> Result<Vec<u32>> {
+    if !matches!(bits, 2 | 3 | 4 | 8) {
+        bail!("unsupported bit width {bits}");
+    }
+    let per = codes_per_word(bits);
+    let rows = words_per_col(din, bits);
+    let qmax = ((1u32 << bits) - 1) as u8;
+    let mut out = vec![0u32; rows * dout];
+    for r in 0..din {
+        let word_row = r / per;
+        let k = r % per;
+        for c in 0..dout {
+            let code = codes[r * dout + c];
+            if code > qmax {
+                bail!("code {code} out of range for {bits}-bit");
+            }
+            out[word_row * dout + c] |= (code as u32) << (bits as usize * k);
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack`].
+pub fn unpack(words: &[u32], din: usize, dout: usize, bits: u8) -> Vec<u8> {
+    let per = codes_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let mut out = vec![0u8; din * dout];
+    for r in 0..din {
+        let word_row = r / per;
+        let k = r % per;
+        for c in 0..dout {
+            let w = words[word_row * dout + c];
+            out[r * dout + c] = ((w >> (bits as usize * k)) & mask) as u8;
+        }
+    }
+    out
+}
+
+/// Packed byte size (u32 words * 4).
+pub fn packed_bytes(din: usize, dout: usize, bits: u8) -> usize {
+    words_per_col(din, bits) * dout * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        forall("pack_roundtrip", 40, |rng| {
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let din = 1 + rng.below(100);
+            let dout = 1 + rng.below(20);
+            let qmax = (1u16 << bits) - 1;
+            let codes: Vec<u8> = (0..din * dout)
+                .map(|_| rng.below(qmax as usize + 1) as u8)
+                .collect();
+            let packed = pack(&codes, din, dout, bits).unwrap();
+            unpack(&packed, din, dout, bits) == codes
+        });
+    }
+
+    #[test]
+    fn pack4_matches_jax_layout() {
+        // mirror of python test_pack_layout: codes 0..15 in one column,
+        // little-endian nibbles, 8 per word.
+        let codes: Vec<u8> = (0..16).map(|i| (i % 16) as u8).collect();
+        let packed = pack(&codes, 16, 1, 4).unwrap();
+        assert_eq!(packed.len(), 2);
+        for (r, word) in packed.iter().enumerate() {
+            for k in 0..8 {
+                assert_eq!((word >> (4 * k)) & 0xF,
+                           codes[r * 8 + k] as u32);
+            }
+        }
+        // known value: nibbles 7..0 -> 0x76543210
+        assert_eq!(packed[0], 0x7654_3210);
+    }
+
+    #[test]
+    fn three_bit_wastes_two_bits_per_word() {
+        assert_eq!(codes_per_word(3), 10);
+        assert_eq!(words_per_col(64, 3), 7);
+        // and packing never touches the top 2 bits
+        let codes = vec![7u8; 30];
+        let packed = pack(&codes, 30, 1, 3).unwrap();
+        for w in packed {
+            assert_eq!(w >> 30, 0);
+        }
+    }
+
+    #[test]
+    fn out_of_range_code_rejected() {
+        assert!(pack(&[4u8], 1, 1, 2).is_err());
+        assert!(pack(&[3u8], 1, 1, 2).is_ok());
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        assert_eq!(packed_bytes(64, 32, 4), 8 * 32 * 4);
+        assert_eq!(packed_bytes(64, 32, 2), 4 * 32 * 4);
+        assert_eq!(packed_bytes(64, 32, 3), 7 * 32 * 4);
+    }
+}

@@ -1,0 +1,236 @@
+//! Report generation: regenerates every table and figure of the paper's
+//! evaluation as aligned text + CSV (heatmaps render as ASCII shading,
+//! the journal-friendly equivalent of Figs. 2–10). Everything lands in
+//! `reports/` so EXPERIMENTS.md can reference stable files.
+
+use crate::config::ModelConfig;
+use crate::coordinator::MethodResult;
+use crate::data::Task;
+use crate::moe::PrecisionMap;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Shade ramp for heatmaps (low → high).
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Render a `[layers][experts]` map as an ASCII heatmap, normalized
+/// model-wide (the paper's figures share one color scale per model).
+pub fn ascii_heatmap(title: &str, values: &[Vec<f64>]) -> String {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in values.iter().flatten() {
+        lo = lo.min(*v);
+        hi = hi.max(*v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}  (min={lo:.4}, max={hi:.4})");
+    let _ = writeln!(out, "      experts 0..{}", values[0].len() - 1);
+    for (l, layer) in values.iter().enumerate() {
+        let row: String = layer
+            .iter()
+            .map(|&v| {
+                let t = ((v - lo) / span * (RAMP.len() - 1) as f64).round();
+                RAMP[t as usize as usize] as char
+            })
+            .collect();
+        let _ = writeln!(out, "L{l:>3}  |{row}|");
+    }
+    out
+}
+
+/// Render a precision map (2/3/4/8/16 bit assignments) as digits.
+pub fn precision_heatmap(title: &str, pmap: &PrecisionMap) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "      experts 0..{}", pmap.bits[0].len() - 1);
+    for (l, layer) in pmap.bits.iter().enumerate() {
+        let row: String = layer
+            .iter()
+            .map(|&b| {
+                // 16-bit shows as 'F'
+                if b >= 16 { 'F' } else { char::from_digit(b as u32, 16).unwrap() }
+            })
+            .collect();
+        let _ = writeln!(out, "L{l:>3}  |{row}|");
+    }
+    let hist = pmap.histogram();
+    let _ = write!(out, "bits histogram: ");
+    for (b, n) in hist {
+        let _ = write!(out, "{b}-bit×{n} ");
+    }
+    let _ = writeln!(out, " (mean {:.3} bits)", pmap.mean_bits());
+    out
+}
+
+/// CSV form of an importance map (one row per layer).
+pub fn map_csv(values: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    for layer in values {
+        let row: Vec<String> = layer.iter().map(|v| format!("{v:.6}")).collect();
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+pub fn pmap_csv(pmap: &PrecisionMap) -> String {
+    let mut out = String::new();
+    for layer in &pmap.bits {
+        let row: Vec<String> = layer.iter().map(|b| b.to_string()).collect();
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+/// Paper Table 1: the model summary.
+pub fn table1(variants: &[ModelConfig]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Table 1. Summary of VLM-MoE sim benchmarks \
+         (topology mirrors the paper; dims shrunk)"
+    );
+    let _ = writeln!(
+        out,
+        "{:<22} {:>8} {:>5} {:>5} {:>5} {:>7} {:>8}",
+        "Model", "#P", "#L", "#E", "#AE", "dense0", "aux"
+    );
+    for cfg in variants {
+        let p: usize = crate::moe::param_specs(cfg)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        let _ = writeln!(
+            out,
+            "{:<22} {:>7.2}M {:>5} {:>5} {:>5} {:>7} {:>8.3}",
+            cfg.paper_name,
+            p as f64 / 1e6,
+            cfg.layers,
+            cfg.experts,
+            cfg.top_k,
+            cfg.first_dense,
+            cfg.aux_weight
+        );
+    }
+    out
+}
+
+/// One of Tables 2–5: method rows × task columns for one model.
+pub fn method_table(cfg: &ModelConfig, rows: &[MethodResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} — accuracy per task (display scale: MME-P×1600, MME-R×400, \
+         others %)",
+        cfg.paper_name
+    );
+    let _ = write!(out, "{:<38} {:>9} {:>6}", "Method", "Size(MB)", "bits");
+    for t in Task::ALL {
+        let _ = write!(out, " {:>9}", shorten(t.label()));
+    }
+    let _ = writeln!(out, " {:>7}", "mean%");
+    for r in rows {
+        let _ = write!(
+            out,
+            "{:<38} {:>9.3} {:>6.2}",
+            r.label, r.size_mb, r.mean_bits
+        );
+        for t in Task::ALL {
+            let _ = write!(out, " {:>9.2}", r.scores.display_value(t));
+        }
+        let _ = writeln!(out, " {:>7.2}", r.scores.mean() * 100.0);
+    }
+    out
+}
+
+pub fn method_table_csv(cfg: &ModelConfig, rows: &[MethodResult]) -> String {
+    let mut out = String::new();
+    let mut hdr = vec!["model".into(), "method".into(), "size_mb".into(),
+                       "mean_bits".into()];
+    hdr.extend(Task::ALL.iter().map(|t| t.label().to_string()));
+    hdr.push("mean_acc".into());
+    let _ = writeln!(out, "{}", hdr.join(","));
+    for r in rows {
+        let mut row = vec![
+            cfg.name.to_string(),
+            r.label.clone(),
+            format!("{:.4}", r.size_mb),
+            format!("{:.3}", r.mean_bits),
+        ];
+        row.extend(Task::ALL.iter().map(|&t| format!("{:.4}", r.scores.get(t))));
+        row.push(format!("{:.4}", r.scores.mean()));
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+fn shorten(label: &str) -> String {
+    label.chars().take(9).collect()
+}
+
+/// Output directory (env MOPEQ_REPORTS or ./reports).
+pub fn reports_dir() -> PathBuf {
+    std::env::var_os("MOPEQ_REPORTS")
+        .map(Into::into)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("reports")
+        })
+}
+
+pub fn write_report(name: &str, content: &str) -> Result<PathBuf> {
+    let dir = reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Figure-id labels → file names, for the per-experiment index.
+pub fn figure_file(fig: &str, variant: &str) -> String {
+    format!("{fig}_{variant}.txt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn heatmap_renders_all_layers() {
+        let vals = vec![vec![0.0, 0.5, 1.0], vec![1.0, 0.5, 0.0]];
+        let s = ascii_heatmap("t", &vals);
+        assert!(s.contains("L  0"));
+        assert!(s.contains("L  1"));
+        // extremes map to the ramp ends
+        assert!(s.contains('@'));
+        assert!(s.contains(' '));
+    }
+
+    #[test]
+    fn precision_heatmap_digits() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut pm = PrecisionMap::uniform(&cfg, 2);
+        pm.bits[0][0] = 4;
+        let s = precision_heatmap("t", &pm);
+        assert!(s.contains('4'));
+        assert!(s.contains('2'));
+        assert!(s.contains("bits histogram"));
+    }
+
+    #[test]
+    fn table1_lists_all_variants() {
+        let s = table1(&config::variants());
+        for cfg in config::variants() {
+            assert!(s.contains(cfg.paper_name), "{}", cfg.paper_name);
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let vals = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let csv = map_csv(&vals);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("1.000000,2.000000"));
+    }
+}

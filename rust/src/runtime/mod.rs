@@ -1,0 +1,285 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the only module that touches the `xla`
+//! crate; everything above it deals in host [`Tensor`]s.
+//!
+//! - [`Registry`] parses `artifacts/meta.json`, validates it against the
+//!   rust-side [`crate::config`] constants, and knows every entry's
+//!   input specification.
+//! - [`Session`] compiles executables lazily and caches them (XLA
+//!   compilation is the expensive step; execution is cheap), verifies
+//!   input shapes/dtypes against the registry before every call, and
+//!   returns host tensors.
+//!
+//! Interchange is HLO **text** (see aot.py) — xla_extension 0.5.1
+//! rejects jax >= 0.5 serialized protos (64-bit instruction ids).
+
+pub mod registry;
+
+pub use registry::{ArgSpec, EntrySpec, Registry};
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A host value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor<f32>),
+    I32(Tensor<i32>),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32(_) => "int32",
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor<f32>> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor<f32>> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Host tensor -> literal.
+    ///
+    /// Perf note (§Perf L3-A): the single-copy
+    /// `create_from_shape_and_untyped_data` path was tried and reverted —
+    /// the literals it produces report a padded `size_bytes()` that
+    /// `buffer_from_host_literal` check-fails on (32× for [64,64] f32).
+    /// vec1+reshape costs one extra memcpy but round-trips correctly.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(&t.data),
+            Value::I32(t) => xla::Literal::vec1(&t.data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Value::F32(Tensor::new(&dims, data)))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I32(Tensor::new(&dims, data)))
+            }
+            ty => bail!("unsupported output element type {ty:?}"),
+        }
+    }
+}
+
+impl From<Tensor<f32>> for Value {
+    fn from(t: Tensor<f32>) -> Value {
+        Value::F32(t)
+    }
+}
+
+impl From<Tensor<i32>> for Value {
+    fn from(t: Tensor<i32>) -> Value {
+        Value::I32(t)
+    }
+}
+
+#[allow(dead_code)]
+fn cast_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    // f32/i32 slices reinterpreted as bytes for the untyped-literal API
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+/// A device buffer together with the host literal backing it (PJRT may
+/// defer the host→device copy; the literal must outlive the buffer).
+pub struct DeviceTensor {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+/// Lazily-compiled executable cache over one PJRT CPU client.
+pub struct Session {
+    client: xla::PjRtClient,
+    registry: Registry,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// execution counters (entry -> calls), for the perf report
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Session {
+    /// Open the artifacts directory (meta.json + *.hlo.txt).
+    pub fn open(root: impl Into<PathBuf>) -> Result<Session> {
+        let root = root.into();
+        let registry = Registry::load(&root)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Session {
+            client,
+            registry,
+            root,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open the default artifacts dir (env MOPEQ_ARTIFACTS or ./artifacts).
+    pub fn open_default() -> Result<Session> {
+        Session::open(crate::artifacts_dir())
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile (or fetch cached) an entry's executable.
+    fn executable(
+        &self,
+        entry: &str,
+    ) -> Result<std::cell::Ref<'_, xla::PjRtLoadedExecutable>> {
+        if self.cache.borrow().get(entry).is_none() {
+            let path = self.root.join(format!("{entry}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact `{}` not found — run `make artifacts`",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {entry}: {e}"))?;
+            self.cache.borrow_mut().insert(entry.to_string(), exe);
+        }
+        Ok(std::cell::Ref::map(self.cache.borrow(), |c| {
+            c.get(entry).unwrap()
+        }))
+    }
+
+    /// Pre-compile an entry (used at startup so the serve path never
+    /// pays compile latency).
+    pub fn warm(&self, entry: &str) -> Result<()> {
+        self.executable(entry).map(|_| ())
+    }
+
+    /// Execute an entry with shape/dtype validation. All entries are
+    /// lowered with `return_tuple=True`, so the result is always the
+    /// decomposed tuple.
+    pub fn exec(&self, entry: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.registry.entry(entry)?;
+        spec.validate(inputs).with_context(|| format!("entry `{entry}`"))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.exec_literals(entry, &refs)
+    }
+
+    /// Execute with pre-converted literals (hot path: callers cache the
+    /// conversion of weight tensors — EXPERIMENTS.md §Perf L3-B).
+    ///
+    /// Inputs are uploaded to rust-owned [`xla::PjRtBuffer`]s and run via
+    /// `execute_b`: the crate's literal-taking `execute` leaks its
+    /// internally-created input buffers (~MBs per call on the MoE layer;
+    /// §Perf L3-C documents the measurement), while buffers created here
+    /// are freed by Drop.
+    pub fn exec_literals(
+        &self,
+        entry: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<Value>> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| self.upload_literal(l))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.exec_buffers(entry, &refs)
+    }
+
+    /// Upload a literal to a device buffer (rust-owned, freed on drop).
+    ///
+    /// SAFETY CONTRACT: PJRT's BufferFromHostLiteral may defer the host
+    /// copy, so the literal must stay alive as long as the buffer — use
+    /// [`Session::upload`]/[`DeviceTensor`] unless the caller already
+    /// guarantees that (as `exec_literals` does for the call duration).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e}"))
+    }
+
+    /// Upload a host value to the device, keeping the backing literal
+    /// alive for the buffer's lifetime (see upload_literal's contract —
+    /// dropping the literal early is a use-after-free the CPU client
+    /// surfaces as a size-check crash).
+    pub fn upload(&self, v: &Value) -> Result<DeviceTensor> {
+        let lit = v.to_literal()?;
+        let buf = self.upload_literal(&lit)?;
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// Execute with device-resident buffers (weights uploaded once by
+    /// the executor — §Perf L3-C).
+    pub fn exec_buffers(
+        &self,
+        entry: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Value>> {
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute {entry}: {e}"))?;
+        drop(exe);
+        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {entry}: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    /// Per-entry call counters (perf telemetry).
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.calls.borrow().iter().map(|(k, n)| (k.clone(), *n)).collect();
+        v.sort();
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact registry: parses `artifacts/meta.json` (written by aot.py),
+//! cross-checks it against the rust [`crate::config`] constants, and
+//! validates call-site inputs against each entry's recorded spec.
+
+use crate::config;
+use crate::jsonx::Json;
+use crate::runtime::Value;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub inputs: Vec<ArgSpec>,
+}
+
+impl EntrySpec {
+    pub fn validate(&self, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "arity mismatch: got {} inputs, spec has {} ({})",
+                inputs.len(),
+                self.inputs.len(),
+                self.inputs
+                    .iter()
+                    .map(|a| a.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.inputs) {
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "arg `{}`: shape {:?} != expected {:?}",
+                    spec.name,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "arg `{}`: dtype {} != expected {}",
+                    spec.name,
+                    v.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One model variant's canonical parameter list (name -> shape, ordered).
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub moe_signature: String,
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl VariantMeta {
+    pub fn param_shape(&self, name: &str) -> Result<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+            .ok_or_else(|| anyhow!("variant {}: no param `{name}`", self.name))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+pub struct Registry {
+    entries: HashMap<String, EntrySpec>,
+    variants: HashMap<String, VariantMeta>,
+}
+
+impl Registry {
+    pub fn load(root: &Path) -> Result<Registry> {
+        let path = root.join("meta.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow!(
+                "read {}: {e} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text)?;
+
+        let mut entries = HashMap::new();
+        for (name, e) in json.req("entries")?.as_obj()? {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(ArgSpec {
+                        name: i.req("name")?.as_str()?.to_string(),
+                        shape: i.req("shape")?.shape()?,
+                        dtype: i.req("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), EntrySpec { inputs });
+        }
+
+        let mut variants = HashMap::new();
+        for (name, v) in json.req("variants")?.as_obj()? {
+            // cross-check against the rust-side constants
+            let cfg = config::variant(name)?;
+            cfg.check_meta(v.req("config")?)?;
+            let sig = v.req("moe_signature")?.as_str()?.to_string();
+            if sig != cfg.moe_signature() {
+                bail!("{name}: moe_signature mismatch");
+            }
+            let params = v
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr()?;
+                    Ok((pair[0].as_str()?.to_string(), pair[1].shape()?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            variants.insert(
+                name.clone(),
+                VariantMeta { name: name.clone(), moe_signature: sig, params },
+            );
+        }
+        if variants.len() != config::variants().len() {
+            bail!(
+                "meta.json has {} variants, rust expects {}",
+                variants.len(),
+                config::variants().len()
+            );
+        }
+        Ok(Registry { entries, variants })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry `{name}`"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant `{name}`"))
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let spec = EntrySpec {
+            inputs: vec![
+                ArgSpec {
+                    name: "x".into(),
+                    shape: vec![2, 3],
+                    dtype: "float32".into(),
+                },
+                ArgSpec {
+                    name: "t".into(),
+                    shape: vec![2],
+                    dtype: "int32".into(),
+                },
+            ],
+        };
+        let ok: Vec<Value> = vec![
+            Tensor::<f32>::zeros(&[2, 3]).into(),
+            Tensor::<i32>::zeros(&[2]).into(),
+        ];
+        assert!(spec.validate(&ok).is_ok());
+        // wrong arity
+        assert!(spec.validate(&ok[..1]).is_err());
+        // wrong shape
+        let bad: Vec<Value> = vec![
+            Tensor::<f32>::zeros(&[3, 2]).into(),
+            Tensor::<i32>::zeros(&[2]).into(),
+        ];
+        assert!(spec.validate(&bad).is_err());
+        // wrong dtype
+        let bad2: Vec<Value> = vec![
+            Tensor::<f32>::zeros(&[2, 3]).into(),
+            Tensor::<f32>::zeros(&[2]).into(),
+        ];
+        assert!(spec.validate(&bad2).is_err());
+    }
+}

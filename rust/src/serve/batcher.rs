@@ -1,0 +1,88 @@
+//! Dynamic batcher: accumulates requests up to the static batch size or
+//! a linger deadline — the standard continuous-batching trade-off
+//! (throughput vs tail latency), tunable per deployment and swept by the
+//! serving bench.
+
+use crate::serve::Request;
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// how long the first request of a batch may wait for company
+    pub max_linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_linger: Duration::from_millis(2) }
+    }
+}
+
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    capacity: usize,
+    pending: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, capacity: usize) -> Batcher {
+        Batcher { policy, capacity, pending: Vec::with_capacity(capacity) }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        debug_assert!(self.pending.len() < self.capacity);
+        self.pending.push(r);
+    }
+
+    pub fn full(&self) -> bool {
+        self.pending.len() >= self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain the pending batch.
+    pub fn take(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::data::{gen_sample, Task};
+    use crate::rng::Rng;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req() -> Request {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut rng = Rng::new(0);
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            sample: gen_sample(Task::Blink, &cfg, &mut rng),
+            enqueued: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn fills_and_drains() {
+        let mut b = Batcher::new(BatchPolicy::default(), 4);
+        assert!(b.is_empty());
+        for _ in 0..4 {
+            assert!(!b.full());
+            b.push(req());
+        }
+        assert!(b.full());
+        assert_eq!(b.take().len(), 4);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal host tensor substrate: row-major, f32 or i32, with exactly
+//! the operations the coordinator needs (weight slicing, calibration
+//! math, reference matmuls for GPTQ/AWQ, size accounting). The heavy
+//! compute lives in the AOT'd HLO; this is deliberately simple.
+
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Element types we exchange with PJRT.
+pub trait Element: Copy + Default + std::fmt::Debug + 'static {
+    const DTYPE: &'static str; // matches meta.json dtype strings
+}
+impl Element for f32 {
+    const DTYPE: &'static str = "float32";
+}
+impl Element for i32 {
+    const DTYPE: &'static str = "int32";
+}
+
+/// Dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T: Element = f32> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Element> Tensor<T> {
+    pub fn new(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::new(shape, vec![T::default(); shape.iter().product()])
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor::new(&[], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor<T>> {
+        if shape.iter().product::<usize>() != self.len() {
+            bail!("reshape {:?} -> {:?}", self.shape, shape);
+        }
+        Ok(Tensor::new(shape, self.data.clone()))
+    }
+
+    /// Slice index `i` along axis 0 (returns a copy with rank-1 shape).
+    pub fn index0(&self, i: usize) -> Tensor<T> {
+        assert!(self.rank() >= 1 && i < self.shape[0]);
+        let stride: usize = self.shape[1..].iter().product();
+        Tensor::new(&self.shape[1..], self.data[i * stride..(i + 1) * stride].to_vec())
+    }
+
+    /// Stack tensors of identical shape along a new axis 0.
+    pub fn stack(parts: &[Tensor<T>]) -> Tensor<T> {
+        assert!(!parts.is_empty());
+        let shape = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            assert_eq!(&p.shape, shape, "stack shape mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        let mut s = vec![parts.len()];
+        s.extend_from_slice(shape);
+        Tensor::new(&s, data)
+    }
+}
+
+impl Tensor<f32> {
+    pub fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Self {
+        Tensor::new(shape, rng.normal_vec(shape.iter().product(), scale))
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor::new(shape, vec![1.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor::new(shape, vec![v; shape.iter().product()])
+    }
+
+    /// 2-D matmul: [m,k] x [k,n] -> [m,n]. ikj loop order (cache friendly).
+    pub fn matmul(&self, rhs: &Tensor<f32>) -> Tensor<f32> {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor<f32> {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn mse(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.len().max(1) as f32;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor<f32> {
+        Tensor::new(&self.shape, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn add(&self, other: &Tensor<f32>) -> Tensor<f32> {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    pub fn sub(&self, other: &Tensor<f32>) -> Tensor<f32> {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    /// argmax over the last axis of a 2-D tensor -> per-row index.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let n = self.shape[1];
+        self.data
+            .chunks(n)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.data[i * 3 + i] = 1.0;
+        }
+        assert_eq!(a.matmul(&eye).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&mut rng, &[5, 7], 1.0);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn stack_index_roundtrip() {
+        let a = Tensor::new(&[2], vec![1.0f32, 2.0]);
+        let b = Tensor::new(&[2], vec![3.0, 4.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.index0(0), a);
+        assert_eq!(s.index0(1), b);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::<f32>::new(&[2, 2], vec![1.0; 3]);
+    }
+}

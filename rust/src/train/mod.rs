@@ -1,0 +1,151 @@
+//! E2E training driver: the rust loop over the AOT'd whole-model
+//! `train_step` HLO (fwd + bwd + SGD fused by XLA). Used to produce the
+//! trained sim weights the quantization experiments start from, and as
+//! the end-to-end validation run recorded in EXPERIMENTS.md.
+
+use crate::config::ModelConfig;
+use crate::data::BatchGen;
+use crate::moe::WeightStore;
+use crate::runtime::{Session, Value};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// linear warmup steps
+    pub warmup: usize,
+    /// cosine decay to this fraction of peak lr
+    pub final_lr_frac: f32,
+    pub seed: u64,
+    pub log_every: usize,
+    /// use the sparse-dispatch train_step artifact (§Perf L2-A)
+    pub sparse: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 0.05,
+            warmup: 20,
+            final_lr_frac: 0.1,
+            seed: 0,
+            log_every: 20,
+            // measured on this testbed: dense 0.21 steps/s vs sparse
+            // 0.13 steps/s (scatter-add backward dominates on CPU) —
+            // see EXPERIMENTS.md §Perf L2-A
+            sparse: false,
+        }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub ce: f32,
+    pub aux: f32,
+    pub lr: f32,
+}
+
+pub struct TrainOutcome {
+    pub curve: Vec<LossPoint>,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+}
+
+fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup {
+        return cfg.lr * (step + 1) as f32 / cfg.warmup as f32;
+    }
+    let t = (step - cfg.warmup) as f32
+        / (cfg.steps - cfg.warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    cfg.lr * (cfg.final_lr_frac + (1.0 - cfg.final_lr_frac) * cos)
+}
+
+/// Train in place: repeatedly execute `<variant>/train_step`, feeding the
+/// current flat parameters and a fresh mixed-task batch, and swap the
+/// updated parameters back into the store.
+pub fn train(
+    session: &Session,
+    cfg: &ModelConfig,
+    ws: &mut WeightStore,
+    tcfg: &TrainConfig,
+) -> Result<TrainOutcome> {
+    let entry = if tcfg.sparse {
+        format!("{}/train_step_sparse", cfg.name)
+    } else {
+        format!("{}/train_step", cfg.name)
+    };
+    session.warm(&entry)?;
+    let mut gen = BatchGen::new(cfg, tcfg.seed);
+    let n_params = ws.flat().len();
+    let mut curve = Vec::new();
+    let t0 = Instant::now();
+
+    for step in 0..tcfg.steps {
+        let batch = gen.next_batch(cfg.train_batch);
+        let lr = lr_at(tcfg, step);
+        // train_step takes no vis_mask (unused params are DCE'd at
+        // lowering; see aot.py)
+        let mut args: Vec<Value> = Vec::with_capacity(n_params + 3);
+        for t in ws.flat() {
+            args.push(Value::F32(t.clone()));
+        }
+        args.push(Value::I32(batch.tokens));
+        args.push(Value::I32(batch.target));
+        args.push(Value::scalar_f32(lr));
+
+        let mut out = session.exec(&entry, &args)?;
+        if out.len() != n_params + 3 {
+            bail!(
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                n_params + 3
+            );
+        }
+        let aux = out.pop().unwrap().into_f32()?.data[0];
+        let ce = out.pop().unwrap().into_f32()?.data[0];
+        let loss = out.pop().unwrap().into_f32()?.data[0];
+        if !loss.is_finite() {
+            bail!("training diverged at step {step} (loss={loss})");
+        }
+        let new_params: Vec<_> = out
+            .into_iter()
+            .map(|v| v.into_f32())
+            .collect::<Result<_>>()?;
+        ws.set_flat(new_params)?;
+
+        if step % tcfg.log_every == 0 || step + 1 == tcfg.steps {
+            curve.push(LossPoint { step, loss, ce, aux, lr });
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(TrainOutcome {
+        curve,
+        steps: tcfg.steps,
+        wall_secs: wall,
+        steps_per_sec: tcfg.steps as f64 / wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let tc = TrainConfig { steps: 100, warmup: 10, lr: 1.0,
+                               final_lr_frac: 0.1, ..Default::default() };
+        assert!(lr_at(&tc, 0) < 0.2); // warmup start
+        assert!((lr_at(&tc, 9) - 1.0).abs() < 1e-6); // warmup end
+        assert!(lr_at(&tc, 50) < 1.0); // decaying
+        let last = lr_at(&tc, 99);
+        assert!(last >= 0.1 - 1e-3 && last < 0.2, "{last}");
+    }
+}

@@ -1,0 +1,316 @@
+//! Integration tests over the real artifacts + PJRT runtime: the
+//! cross-language contracts (rust quant math vs the Pallas kernels, rust
+//! Hutchinson vs the AOT'd autodiff HVP), the layer-loop executor, the
+//! SignRound driver and the training step. Requires `make artifacts`.
+
+use mopeq::config;
+use mopeq::coordinator::{
+    capture_calib, quantize_experts, signround_optimize, ModelExecutor,
+    Quantizer, SignRoundConfig,
+};
+use mopeq::data::{self, Task};
+use mopeq::importance::{hessian_closed_form, profile_frequency};
+use mopeq::moe::{local_meta, ExpertId, ExpertMat, PrecisionMap, WeightStore};
+use mopeq::quant::{self, pack};
+use mopeq::rng::Rng;
+use mopeq::runtime::{Session, Value};
+use mopeq::tensor::Tensor;
+
+fn session() -> Session {
+    Session::open_default().expect("run `make artifacts` first")
+}
+
+fn tiny_store(seed: u64) -> (config::ModelConfig, WeightStore) {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), seed);
+    (cfg, ws)
+}
+
+#[test]
+fn qdq_kernel_matches_rust_quant_math() {
+    // the Pallas qdq kernel (via HLO) and the rust host implementation
+    // must agree bit-for-bit on the dequantized grid
+    let s = session();
+    let mut rng = Rng::new(1);
+    for &(din, dout) in &[(64usize, 32usize), (32, 64)] {
+        for bits in [2u8, 3, 4, 8] {
+            let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+            let grp = 32.min(din);
+            let gg = din / grp;
+            let v = Tensor::zeros(&[din, dout]);
+            let alpha = Tensor::ones(&[gg, dout]);
+            let beta = Tensor::ones(&[gg, dout]);
+            let out = s
+                .exec(
+                    &format!("shared/qdq_{din}x{dout}_b{bits}"),
+                    &[
+                        Value::F32(w.clone()),
+                        Value::F32(v),
+                        Value::F32(alpha),
+                        Value::F32(beta),
+                    ],
+                )
+                .unwrap();
+            let kernel = out[0].as_f32().unwrap();
+            let host = quant::rtn_qdq(&w, bits, grp);
+            let diff = kernel.max_abs_diff(&host);
+            assert!(diff < 2e-5, "{din}x{dout} b{bits}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn qmatmul_kernel_matches_host_packing() {
+    // rust pack4 -> Pallas qmatmul4 artifact == host x @ dequant(w)
+    let s = session();
+    let mut rng = Rng::new(2);
+    let (t, din, dout, g) = (128usize, 64usize, 32usize, 32usize);
+    let x = Tensor::randn(&mut rng, &[t, din], 1.0);
+    let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+    let qm = quant::rtn_quantize(&w, 4, g);
+    let packed = pack::pack(&qm.codes, din, dout, 4).unwrap();
+    let packed_t = Tensor::new(
+        &[din / 8, dout],
+        packed.iter().map(|&u| u as i32).collect(),
+    );
+    let scales = Tensor::new(&[din / g, dout], qm.scales.clone());
+    let zps = Tensor::new(&[din / g, dout], qm.zps.clone());
+    let out = s
+        .exec(
+            "shared/qmatmul4_128x64x32",
+            &[
+                Value::F32(x.clone()),
+                Value::I32(packed_t),
+                Value::F32(scales),
+                Value::F32(zps),
+            ],
+        )
+        .unwrap();
+    let want = x.matmul(&qm.dequantize());
+    let diff = out[0].as_f32().unwrap().max_abs_diff(&want);
+    assert!(diff < 1e-3, "{diff}");
+}
+
+#[test]
+fn hvp_artifact_matches_closed_form() {
+    let s = session();
+    let mut rng = Rng::new(3);
+    let n = 2048;
+    let w = Tensor::randn(&mut rng, &[n], 1.0);
+    let mut acc = 0.0f64;
+    let m = 64;
+    for _ in 0..m {
+        let v = Tensor::new(&[n], rng.rademacher_vec(n));
+        let out = s
+            .exec(
+                "shared/hvp_frob_n2048",
+                &[Value::F32(w.clone()), Value::F32(v)],
+            )
+            .unwrap();
+        acc += out[0].as_f32().unwrap().data[0] as f64;
+    }
+    let est = acc / m as f64;
+    let exact = (n as f64 - 1.0) / w.frobenius_norm() as f64;
+    let rel = (est - exact).abs() / exact;
+    assert!(rel < 0.15, "est {est} vs exact {exact} (rel {rel})");
+}
+
+#[test]
+fn executor_forward_invariants() {
+    let s = session();
+    let (cfg, ws) = tiny_store(4);
+    let exec = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+    let samples = data::eval_set(Task::DocVqa, &cfg, cfg.batch, 7);
+    let (tokens, vis) = data::pack_batch(&samples, &cfg);
+    let out = exec.forward(&tokens, &vis, true).unwrap();
+    assert_eq!(out.logits.shape, vec![cfg.batch, cfg.vocab]);
+    assert!(out.logits.data.iter().all(|x| x.is_finite()));
+    assert_eq!(out.counts.len(), cfg.moe_layers());
+    let tokens_total = (cfg.batch * cfg.seq * cfg.top_k) as f32;
+    for (l, c) in out.counts.iter().enumerate() {
+        let sum: f32 = c.iter().sum();
+        assert_eq!(sum, tokens_total, "layer {l}");
+    }
+    let hidden = out.hidden.unwrap();
+    assert_eq!(hidden.len(), cfg.moe_layers());
+    assert_eq!(hidden[0].shape, vec![cfg.batch, cfg.seq, cfg.d_model]);
+    // determinism
+    let out2 = exec.forward(&tokens, &vis, false).unwrap();
+    assert_eq!(out.logits, out2.logits);
+}
+
+#[test]
+fn executor_sparse_path_matches_ref_path() {
+    let s = session();
+    let (cfg, ws) = tiny_store(5);
+    let exec_ref = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+    let exec_sp = ModelExecutor::with_options(
+        &s, &cfg, &ws, mopeq::coordinator::MoeKernel::Sparse).unwrap();
+    let samples = data::eval_set(Task::DocVqa, &cfg, cfg.batch, 21);
+    let (tokens, vis) = data::pack_batch(&samples, &cfg);
+    let a = exec_ref.forward(&tokens, &vis, false).unwrap();
+    let b = exec_sp.forward(&tokens, &vis, false).unwrap();
+    let diff = a.logits.max_abs_diff(&b.logits);
+    assert!(diff < 1e-2, "sparse vs dense logits diff {diff}");
+    assert_eq!(a.counts, b.counts);
+}
+
+#[test]
+fn executor_pallas_path_matches_ref_path() {
+    let s = session();
+    let (cfg, ws) = tiny_store(5);
+    let exec_ref = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+    let exec_pal = ModelExecutor::with_options(
+        &s, &cfg, &ws, mopeq::coordinator::MoeKernel::Pallas).unwrap();
+    let samples = data::eval_set(Task::Blink, &cfg, cfg.batch, 9);
+    let (tokens, vis) = data::pack_batch(&samples, &cfg);
+    let a = exec_ref.forward(&tokens, &vis, false).unwrap();
+    let b = exec_pal.forward(&tokens, &vis, false).unwrap();
+    let diff = a.logits.max_abs_diff(&b.logits);
+    assert!(diff < 1e-2, "pallas vs ref logits diff {diff}");
+    assert_eq!(a.counts, b.counts);
+}
+
+#[test]
+fn quantized_weights_change_logits_monotonically() {
+    // lower bits => larger deviation from the fp16 logits
+    let s = session();
+    let (cfg, ws) = tiny_store(6);
+    let exec = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+    let samples = data::eval_set(Task::MmePerception, &cfg, cfg.batch, 11);
+    let (tokens, vis) = data::pack_batch(&samples, &cfg);
+    let base = exec.forward(&tokens, &vis, false).unwrap().logits;
+    let mut devs = Vec::new();
+    for bits in [8u8, 4, 2] {
+        let mut wsq = {
+            let (_, mut w2) = tiny_store(6);
+            let flats: Vec<_> = ws.flat().into_iter().cloned().collect();
+            w2.set_flat(flats).unwrap();
+            w2
+        };
+        let pmap = PrecisionMap::uniform(&cfg, bits);
+        quantize_experts(None, &cfg, &mut wsq, &pmap, &Quantizer::Rtn, None)
+            .unwrap();
+        let e2 = ModelExecutor::new(&s, &cfg, &wsq).unwrap();
+        let l2 = e2.forward(&tokens, &vis, false).unwrap().logits;
+        devs.push(l2.max_abs_diff(&base));
+    }
+    assert!(devs[0] < devs[1] && devs[1] < devs[2], "{devs:?}");
+}
+
+#[test]
+fn signround_beats_rtn_on_reconstruction() {
+    let s = session();
+    let mut rng = Rng::new(7);
+    let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+    let x = Tensor::randn(&mut rng, &[64, 64], 1.0);
+    let cfg = SignRoundConfig { steps: 30, lr: 0.02, calib_rows: 64 };
+    let out = signround_optimize(&s, &w, &x, 2, 32, &cfg).unwrap();
+    assert!(
+        out.loss_after < out.loss_before,
+        "{} !< {}",
+        out.loss_after,
+        out.loss_before
+    );
+    // and the returned integer codes reproduce a grid-valued matrix
+    let wq = out.qm.dequantize();
+    let wq2 = quant::quantize_int(
+        &wq,
+        None,
+        &vec![1.0; 2 * 32],
+        &vec![1.0; 2 * 32],
+        2,
+        32,
+    );
+    assert!(wq2.codes.iter().all(|&c| c <= 3));
+}
+
+#[test]
+fn calib_capture_and_frequency_profile() {
+    let s = session();
+    let (cfg, ws) = tiny_store(8);
+    let exec = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+    let calib = capture_calib(&exec, &cfg, 4, 64, 1).unwrap();
+    assert_eq!(calib.layers.len(), cfg.moe_layers());
+    assert_eq!(calib.layers[0].shape, vec![64, cfg.d_model]);
+    assert!(calib.layers[0].data.iter().any(|&v| v != 0.0));
+
+    let freq = profile_frequency(&exec, &cfg, 4, 2).unwrap();
+    let total: f64 = freq.total.values.iter().flatten().sum();
+    let expect = (4 * cfg.batch * cfg.seq * cfg.top_k * cfg.moe_layers()) as f64;
+    assert_eq!(total, expect);
+    // visual counts are a strict subset
+    for (t, v) in freq
+        .total
+        .values
+        .iter()
+        .flatten()
+        .zip(freq.visual.values.iter().flatten())
+    {
+        assert!(v <= t);
+    }
+}
+
+#[test]
+fn molmoe_routing_is_more_skewed_than_deepseek() {
+    // Fig. 2's qualitative shape: MolmoE imbalanced, DeepSeek near-uniform
+    let s = session();
+    let cv = |name: &str| {
+        let cfg = config::variant(name).unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 10);
+        let exec = ModelExecutor::new(&s, &cfg, &ws).unwrap();
+        profile_frequency(&exec, &cfg, 8, 3).unwrap().total.cv()
+    };
+    let molmoe = cv("molmoe");
+    let deepseek = cv("dsvl2_tiny");
+    // note: at *init* weights any fixed router is already fairly skewed
+    // (CV ~1); training with the aux loss is what flattens DeepSeek
+    // (Fig. 2). The init-level contrast from the imbalanced molmoe
+    // router init must still be clearly visible:
+    assert!(
+        molmoe > 1.25 * deepseek,
+        "molmoe cv {molmoe} vs deepseek cv {deepseek}"
+    );
+}
+
+#[test]
+fn train_step_reduces_loss_from_rust() {
+    let s = session();
+    let (cfg, mut ws) = tiny_store(11);
+    let tcfg = mopeq::train::TrainConfig {
+        steps: 6,
+        lr: 0.05,
+        warmup: 2,
+        seed: 1,
+        log_every: 1,
+        ..Default::default()
+    };
+    let out = mopeq::train::train(&s, &cfg, &mut ws, &tcfg).unwrap();
+    let first = out.curve.first().unwrap().loss;
+    let last = out.curve.last().unwrap().loss;
+    assert!(last < first, "{last} !< {first}");
+}
+
+#[test]
+fn hessian_profile_decreases_with_depth() {
+    let (cfg, ws) = tiny_store(12);
+    let map = hessian_closed_form(&ws, &cfg).unwrap();
+    let means = map.layer_means();
+    // Fig. 3 shape: early layers more sensitive than deep ones
+    assert!(means[0] > *means.last().unwrap());
+}
+
+#[test]
+fn expert_mat_orientation_matches_artifacts() {
+    // gate/up are [d,m], down is [m,d] — keep rust & python in sync
+    let (cfg, ws) = tiny_store(13);
+    let id = ExpertId { layer: 0, expert: 0 };
+    assert_eq!(
+        ws.expert_mat(id, ExpertMat::Gate).unwrap().shape,
+        vec![cfg.d_model, cfg.d_expert]
+    );
+    assert_eq!(
+        ws.expert_mat(id, ExpertMat::Down).unwrap().shape,
+        vec![cfg.d_expert, cfg.d_model]
+    );
+}

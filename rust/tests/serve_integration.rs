@@ -1,0 +1,72 @@
+//! Server integration: full request → batcher → executor → reply loop
+//! over real artifacts, including mixed-precision weight swaps.
+
+use mopeq::config;
+use mopeq::coordinator::{quantize_experts, Quantizer};
+use mopeq::data::{eval_set, gen_sample, Task};
+use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::rng::Rng;
+use mopeq::serve::{BatchPolicy, ServerHandle};
+use std::time::Duration;
+
+#[test]
+fn server_roundtrip_and_stats() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+    let handle = ServerHandle::start(
+        cfg.clone(),
+        ws,
+        BatchPolicy { max_linger: Duration::from_millis(1) },
+    )
+    .expect("run `make artifacts` first");
+
+    let n = 12;
+    let mut rng = Rng::new(3);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        let s = gen_sample(task, &cfg, &mut rng);
+        pending.push((s.answer, handle.submit(s).unwrap()));
+    }
+    for (answer, rx) in pending {
+        let reply = rx.recv().expect("server dropped a request");
+        assert!(reply.answer < cfg.vocab);
+        assert_eq!(reply.correct, reply.answer == answer as usize);
+        assert!(reply.latency > Duration::ZERO);
+    }
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, n);
+    assert!(stats.batches >= (n + cfg.batch - 1) / cfg.batch);
+    assert!(stats.batches <= n);
+    assert!(stats.mean_fill >= 1.0 && stats.mean_fill <= cfg.batch as f64);
+    assert!(stats.p50 <= stats.p95 && stats.p95 <= stats.p99);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
+fn server_with_quantized_weights_still_answers() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 1);
+    quantize_experts(
+        None,
+        &cfg,
+        &mut ws,
+        &PrecisionMap::uniform(&cfg, 3),
+        &Quantizer::Rtn,
+        None,
+    )
+    .unwrap();
+    let handle =
+        ServerHandle::start(cfg.clone(), ws, BatchPolicy::default()).unwrap();
+    let samples = eval_set(Task::Blink, &cfg, 5, 2);
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| handle.submit(s.clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        let reply = rx.recv().unwrap();
+        assert!(reply.answer < cfg.vocab);
+    }
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 5);
+}
