@@ -1,11 +1,16 @@
 //! Layer-by-layer model executor: the rust-owned transformer loop over
-//! the AOT'd per-layer HLO entries (`embed → [attn → ffn]×L → lm_head`).
+//! the per-layer entries (`embed → [attn → ffn]×L → lm_head`), executed
+//! through whichever [`Backend`](crate::runtime::Backend) the session
+//! carries (native interpreter by default, PJRT/XLA when enabled).
 //!
 //! Weights are **runtime arguments** (DESIGN.md weights-as-arguments
 //! invariant): the executor pre-slices the stacked weight store into
-//! per-layer argument vectors once at construction, so swapping in a
-//! differently-quantized store is just `ModelExecutor::new` again with
-//! no recompilation, and each forward pass does no slicing work.
+//! per-layer argument vectors once at construction and [`Session::
+//! prepare`]s them into backend-resident handles — on the XLA backend
+//! that is a one-time device upload (§Perf L3-B/C), on the native
+//! backend a zero-copy host handle. Swapping in a differently-quantized
+//! store is just `ModelExecutor::new` again with no recompilation, and
+//! each forward pass does no slicing work.
 //!
 //! The MoE entry also returns per-expert token counts (total and
 //! visual-prefix-only) and the post-norm hidden states — the raw
@@ -14,43 +19,42 @@
 
 use crate::config::ModelConfig;
 use crate::moe::WeightStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{Prepared, Session, Value};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
-use crate::runtime::DeviceTensor;
-use xla::PjRtBuffer;
 
-/// Pre-sliced arguments for one attention block, held as **device
-/// buffers** uploaded once at construction, so each forward pass pays
-/// zero weight conversion/upload cost (EXPERIMENTS.md §Perf L3-B/C).
+/// Pre-sliced arguments for one attention block, prepared once at
+/// construction so each forward pass pays zero weight conversion/upload
+/// cost.
 struct AttnArgs {
-    ln: DeviceTensor,
-    wq: DeviceTensor,
-    wk: DeviceTensor,
-    wv: DeviceTensor,
-    wo: DeviceTensor,
+    ln: Prepared,
+    wq: Prepared,
+    wk: Prepared,
+    wv: Prepared,
+    wo: Prepared,
 }
 
 struct DenseArgs {
     attn: AttnArgs,
-    ln2: DeviceTensor,
-    gate: DeviceTensor,
-    up: DeviceTensor,
-    down: DeviceTensor,
+    ln2: Prepared,
+    gate: Prepared,
+    up: Prepared,
+    down: Prepared,
 }
 
 struct MoeArgs {
     attn: AttnArgs,
-    ln2: DeviceTensor,
-    router: DeviceTensor,
-    gate: DeviceTensor,
-    up: DeviceTensor,
-    down: DeviceTensor,
-    shared: Option<(DeviceTensor, DeviceTensor, DeviceTensor)>,
+    ln2: Prepared,
+    router: Prepared,
+    gate: Prepared,
+    up: Prepared,
+    down: Prepared,
+    shared: Option<(Prepared, Prepared, Prepared)>,
 }
 
 /// Which lowering of the MoE layer body to execute (same numerics;
-/// see EXPERIMENTS.md §Perf L2-A for the trade-off).
+/// see EXPERIMENTS.md §Perf L2-A for the trade-off — on the native
+/// backend all three evaluate through the same interpreter).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum MoeKernel {
     /// dense dispatch: compute all E experts, mask by gates
@@ -88,12 +92,12 @@ pub struct ModelExecutor<'a> {
     session: &'a Session,
     pub cfg: ModelConfig,
     moe_entry: String,
-    embed_table: DeviceTensor,
-    embed_pos: DeviceTensor,
+    embed_table: Prepared,
+    embed_pos: Prepared,
     dense: Vec<DenseArgs>,
     moe: Vec<MoeArgs>,
-    final_ln: DeviceTensor,
-    head: DeviceTensor,
+    final_ln: Prepared,
+    head: Prepared,
 }
 
 impl<'a> ModelExecutor<'a> {
@@ -116,8 +120,8 @@ impl<'a> ModelExecutor<'a> {
         if ws.variant != cfg.name {
             bail!("weight store is for `{}`, config is `{}`", ws.variant, cfg.name);
         }
-        let val = |t: Tensor<f32>| -> Result<DeviceTensor> {
-            session.upload(&Value::F32(t))
+        let val = |t: Tensor<f32>| -> Result<Prepared> {
+            session.prepare_owned(Value::F32(t))
         };
         let attn_for = |prefix: &str, l: usize| -> Result<AttnArgs> {
             Ok(AttnArgs {
@@ -174,7 +178,7 @@ impl<'a> ModelExecutor<'a> {
     }
 
     /// Pre-compile all entries this executor needs (so serving latency
-    /// never includes XLA compilation).
+    /// never includes backend compilation; a no-op on interpreters).
     pub fn warm(&self) -> Result<()> {
         self.session.warm("shared/embed")?;
         self.session.warm("shared/attn_layer")?;
@@ -186,10 +190,10 @@ impl<'a> ModelExecutor<'a> {
         Ok(())
     }
 
-    fn attn(&self, x: &PjRtBuffer, a: &AttnArgs) -> Result<Value> {
-        let out = self.session.exec_buffers(
+    fn attn(&self, x: &Prepared, a: &AttnArgs) -> Result<Value> {
+        let out = self.session.exec_prepared(
             "shared/attn_layer",
-            &[x, &a.ln.buf, &a.wq.buf, &a.wk.buf, &a.wv.buf, &a.wo.buf],
+            &[x, &a.ln, &a.wq, &a.wk, &a.wv, &a.wo],
         )?;
         Ok(out.into_iter().next().unwrap())
     }
@@ -201,49 +205,47 @@ impl<'a> ModelExecutor<'a> {
         vis_mask: &Tensor<f32>,
         capture_hidden: bool,
     ) -> Result<ForwardOutput> {
-        let tok_buf = self.session.upload(&Value::I32(tokens.clone()))?;
+        let tok = self.session.prepare_owned(Value::I32(tokens.clone()))?;
         let mut x = self
             .session
-            .exec_buffers(
+            .exec_prepared(
                 "shared/embed",
-                &[&tok_buf.buf, &self.embed_table.buf, &self.embed_pos.buf],
+                &[&tok, &self.embed_table, &self.embed_pos],
             )?
             .into_iter()
             .next()
             .unwrap();
 
         for d in &self.dense {
-            let xb = self.session.upload(&x)?;
-            x = self.attn(&xb.buf, &d.attn)?;
-            let xb = self.session.upload(&x)?;
+            let xp = self.session.prepare_owned(x)?;
+            x = self.attn(&xp, &d.attn)?;
+            let xp = self.session.prepare_owned(x)?;
             x = self
                 .session
-                .exec_buffers(
+                .exec_prepared(
                     "shared/dense_ffn",
-                    &[&xb.buf, &d.ln2.buf, &d.gate.buf, &d.up.buf,
-                      &d.down.buf],
+                    &[&xp, &d.ln2, &d.gate, &d.up, &d.down],
                 )?
                 .into_iter()
                 .next()
                 .unwrap();
         }
 
-        let vis_buf = self.session.upload(&Value::F32(vis_mask.clone()))?;
+        let vis = self.session.prepare_owned(Value::F32(vis_mask.clone()))?;
         let mut counts = Vec::with_capacity(self.moe.len());
         let mut vis_counts = Vec::with_capacity(self.moe.len());
         let mut hidden = capture_hidden.then(Vec::new);
         for m in &self.moe {
-            let xb = self.session.upload(&x)?;
-            x = self.attn(&xb.buf, &m.attn)?;
-            let xb = self.session.upload(&x)?;
-            let mut args: Vec<&PjRtBuffer> = vec![
-                &xb.buf, &vis_buf.buf, &m.ln2.buf, &m.router.buf,
-                &m.gate.buf, &m.up.buf, &m.down.buf,
+            let xp = self.session.prepare_owned(x)?;
+            x = self.attn(&xp, &m.attn)?;
+            let xp = self.session.prepare_owned(x)?;
+            let mut args: Vec<&Prepared> = vec![
+                &xp, &vis, &m.ln2, &m.router, &m.gate, &m.up, &m.down,
             ];
             if let Some((sg, su, sd)) = &m.shared {
-                args.extend([&sg.buf, &su.buf, &sd.buf]);
+                args.extend([sg, su, sd]);
             }
-            let mut out = self.session.exec_buffers(&self.moe_entry, &args)?;
+            let mut out = self.session.exec_prepared(&self.moe_entry, &args)?;
             // outputs: (y, counts, vis_counts, h)
             let h = out.pop().unwrap().into_f32()?;
             let vc = out.pop().unwrap().into_f32()?;
@@ -256,13 +258,10 @@ impl<'a> ModelExecutor<'a> {
             }
         }
 
-        let xb = self.session.upload(&x)?;
+        let xp = self.session.prepare_owned(x)?;
         let logits = self
             .session
-            .exec_buffers(
-                "shared/lm_head",
-                &[&xb.buf, &self.final_ln.buf, &self.head.buf],
-            )?
+            .exec_prepared("shared/lm_head", &[&xp, &self.final_ln, &self.head])?
             .into_iter()
             .next()
             .unwrap()

@@ -8,12 +8,18 @@
 //!   harness over the nine synthetic VLM tasks, a threaded inference
 //!   server with per-expert mixed-precision weight management, and an
 //!   offload simulator for the paper's §5.4 hardware claims.
-//! - **L2/L1 (build time)**: `python/compile` lowers the sim VLM-MoE
-//!   transformer + Pallas quantization kernels to `artifacts/*.hlo.txt`;
-//!   [`runtime`] loads and executes them via the PJRT CPU client.
+//! - **Execution** goes through the [`runtime::Backend`] trait. The
+//!   default is the pure-Rust **native interpreter** (no artifacts, no
+//!   native libraries — hermetic `cargo test`). With the `backend-xla`
+//!   cargo feature and `MOPEQ_BACKEND=xla`, the same entries execute on
+//!   the PJRT CPU client instead.
+//! - **L2/L1 (build time, XLA path only)**: `python/compile` lowers the
+//!   sim VLM-MoE transformer + Pallas quantization kernels to
+//!   `artifacts/*.hlo.txt`; [`runtime`] loads and executes them.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `mopeq` binary is self-contained.
+//! Python never runs on the request path: the `mopeq` binary is
+//! self-contained out of the box, and stays so after `make artifacts`
+//! on the XLA path.
 
 pub mod benchx;
 pub mod cli;

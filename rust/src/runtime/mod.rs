@@ -1,29 +1,39 @@
-//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them on
-//! the CPU PJRT client. This is the only module that touches the `xla`
-//! crate; everything above it deals in host [`Tensor`]s.
+//! Execution runtime behind the [`Backend`] trait.
 //!
-//! - [`Registry`] parses `artifacts/meta.json`, validates it against the
-//!   rust-side [`crate::config`] constants, and knows every entry's
-//!   input specification.
-//! - [`Session`] compiles executables lazily and caches them (XLA
-//!   compilation is the expensive step; execution is cheap), verifies
-//!   input shapes/dtypes against the registry before every call, and
-//!   returns host tensors.
+//! Everything above this module deals in host [`Value`]s (f32/i32
+//! [`Tensor`]s). A backend compiles/executes the registry's entry points
+//! (embed, attention, MoE layer, qdq, SignRound step, qmatmul, HVP, …):
 //!
-//! Interchange is HLO **text** (see aot.py) — xla_extension 0.5.1
-//! rejects jax >= 0.5 serialized protos (64-bit instruction ids).
+//! - [`NativeBackend`] (default): a pure-Rust interpreter that evaluates
+//!   every inference/quantization entry directly on host tensors,
+//!   mirroring the reference semantics of `python/compile/kernels/ref.py`
+//!   and `python/compile/model.py`. Zero artifacts, zero native
+//!   libraries — `cargo test` is hermetic.
+//! - `XlaBackend` (behind the `backend-xla` cargo feature): the PJRT CPU
+//!   client executing the AOT'd HLO-text artifacts, selected with
+//!   `MOPEQ_BACKEND=xla`. Opt-in acceleration, not a build prerequisite.
+//!
+//! [`Session`] owns a [`Registry`] plus one backend, validates every
+//! call's shapes/dtypes against the registry *before* dispatch (so
+//! validation errors are identical across backends), and counts calls
+//! for the perf report.
 
+pub mod native;
 pub mod registry;
+#[cfg(feature = "backend-xla")]
+pub mod xla_backend;
 
+pub use native::NativeBackend;
 pub use registry::{ArgSpec, EntrySpec, Registry};
+#[cfg(feature = "backend-xla")]
+pub use xla_backend::XlaBackend;
 
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::PathBuf;
 
-/// A host value crossing the PJRT boundary.
+/// A host value crossing the backend boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
     F32(Tensor<f32>),
@@ -56,42 +66,17 @@ impl Value {
         }
     }
 
+    pub fn as_i32(&self) -> Result<&Tensor<i32>> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
     pub fn into_f32(self) -> Result<Tensor<f32>> {
         match self {
             Value::F32(t) => Ok(t),
             _ => bail!("expected f32 tensor, got i32"),
-        }
-    }
-
-    /// Host tensor -> literal.
-    ///
-    /// Perf note (§Perf L3-A): the single-copy
-    /// `create_from_shape_and_untyped_data` path was tried and reverted —
-    /// the literals it produces report a padded `size_bytes()` that
-    /// `buffer_from_host_literal` check-fails on (32× for [64,64] f32).
-    /// vec1+reshape costs one extra memcpy but round-trips correctly.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Value::F32(t) => xla::Literal::vec1(&t.data),
-            Value::I32(t) => xla::Literal::vec1(&t.data),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Value> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                let data = lit.to_vec::<f32>()?;
-                Ok(Value::F32(Tensor::new(&dims, data)))
-            }
-            xla::ElementType::S32 => {
-                let data = lit.to_vec::<i32>()?;
-                Ok(Value::I32(Tensor::new(&dims, data)))
-            }
-            ty => bail!("unsupported output element type {ty:?}"),
         }
     }
 }
@@ -108,167 +93,200 @@ impl From<Tensor<i32>> for Value {
     }
 }
 
-#[allow(dead_code)]
-fn cast_bytes<T: Copy>(data: &[T]) -> &[u8] {
-    // f32/i32 slices reinterpreted as bytes for the untyped-literal API
-    unsafe {
-        std::slice::from_raw_parts(
-            data.as_ptr() as *const u8,
-            std::mem::size_of_val(data),
-        )
+/// A value prepared for repeated execution on one backend: the native
+/// backend keeps it on the host, the XLA backend uploads it to a
+/// device-resident buffer once (the §Perf L3-B/C weight-caching path).
+pub struct Prepared(pub(crate) PreparedInner);
+
+pub(crate) enum PreparedInner {
+    Host(Value),
+    #[cfg(feature = "backend-xla")]
+    Device(xla_backend::DeviceTensor),
+}
+
+impl Prepared {
+    /// A host-resident handle (what interpreter-style backends return
+    /// from [`Backend::prepare`]; public so out-of-crate backends and
+    /// test mocks can be written against the trait).
+    pub fn host(v: Value) -> Prepared {
+        Prepared(PreparedInner::Host(v))
+    }
+
+    /// The host value, when this handle is host-resident.
+    pub fn host_value(&self) -> Option<&Value> {
+        match &self.0 {
+            PreparedInner::Host(v) => Some(v),
+            #[cfg(feature = "backend-xla")]
+            PreparedInner::Device(_) => None,
+        }
     }
 }
 
-/// A device buffer together with the host literal backing it (PJRT may
-/// defer the host→device copy; the literal must outlive the buffer).
-pub struct DeviceTensor {
-    _lit: xla::Literal,
-    pub buf: xla::PjRtBuffer,
+/// An execution backend over the registry's entry points.
+///
+/// Implementations must treat entry names exactly as the registry
+/// defines them (`shared/…`, `<moe_sig>/moe_layer…`, `<variant>/
+/// train_step…`). [`Session`] performs registry validation before
+/// calling `execute*`, so backends may assume spec-conformant inputs.
+pub trait Backend {
+    /// Short platform label ("native", "cpu", …) for telemetry.
+    fn platform(&self) -> String;
+
+    /// Whether this backend can execute the entry at all (e.g. the
+    /// native interpreter does not implement the fused train_step).
+    fn supports(&self, entry: &str) -> bool;
+
+    /// Pre-compile / pre-check an entry so later calls pay no setup
+    /// latency. No-op for interpreters.
+    fn warm(&self, entry: &str) -> Result<()>;
+
+    /// Move a host value into backend-resident storage.
+    fn prepare(&self, v: &Value) -> Result<Prepared>;
+
+    /// Like [`Backend::prepare`] but consuming the value (lets the
+    /// native backend avoid a copy).
+    fn prepare_owned(&self, v: Value) -> Result<Prepared> {
+        self.prepare(&v)
+    }
+
+    /// Execute with host inputs.
+    fn execute(&self, entry: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+
+    /// Execute with prepared (possibly backend-resident) inputs — the
+    /// hot path the executor drives.
+    fn execute_prepared(
+        &self,
+        entry: &str,
+        inputs: &[&Prepared],
+    ) -> Result<Vec<Value>>;
 }
 
-/// Lazily-compiled executable cache over one PJRT CPU client.
+/// Registry + backend + call telemetry: the object the coordinator,
+/// server, benches and CLI all drive.
 pub struct Session {
-    client: xla::PjRtClient,
     registry: Registry,
-    root: PathBuf,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    backend: Box<dyn Backend>,
     /// execution counters (entry -> calls), for the perf report
     calls: RefCell<HashMap<String, u64>>,
 }
 
 impl Session {
-    /// Open the artifacts directory (meta.json + *.hlo.txt).
-    pub fn open(root: impl Into<PathBuf>) -> Result<Session> {
+    /// A session over the pure-Rust native interpreter (no artifacts).
+    pub fn native() -> Session {
+        Session {
+            registry: Registry::native(),
+            backend: Box::new(NativeBackend::new()),
+            calls: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// A session over the PJRT/XLA backend rooted at an artifacts
+    /// directory (meta.json + *.hlo.txt).
+    #[cfg(feature = "backend-xla")]
+    pub fn open_xla(root: impl Into<std::path::PathBuf>) -> Result<Session> {
         let root = root.into();
         let registry = Registry::load(&root)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let backend = XlaBackend::open(root)?;
         Ok(Session {
-            client,
             registry,
-            root,
-            cache: RefCell::new(HashMap::new()),
+            backend: Box::new(backend),
             calls: RefCell::new(HashMap::new()),
         })
     }
 
-    /// Open the default artifacts dir (env MOPEQ_ARTIFACTS or ./artifacts).
+    /// Backend selection for binaries/tests: `MOPEQ_BACKEND=native`
+    /// (default) or `MOPEQ_BACKEND=xla` (requires the `backend-xla`
+    /// feature and an artifacts directory, env `MOPEQ_ARTIFACTS` or
+    /// `./artifacts`).
     pub fn open_default() -> Result<Session> {
-        Session::open(crate::artifacts_dir())
+        let choice = std::env::var("MOPEQ_BACKEND").unwrap_or_default();
+        Session::from_choice(&choice)
+    }
+
+    /// The backend-selection logic behind [`Session::open_default`]
+    /// (separated so it is testable without mutating process-global
+    /// environment state).
+    pub fn from_choice(choice: &str) -> Result<Session> {
+        match choice {
+            "" | "native" => Ok(Session::native()),
+            "xla" => {
+                #[cfg(feature = "backend-xla")]
+                {
+                    Session::open_xla(crate::artifacts_dir())
+                }
+                #[cfg(not(feature = "backend-xla"))]
+                {
+                    bail!(
+                        "MOPEQ_BACKEND=xla but this build has no XLA \
+                         support — rebuild with `--features backend-xla`"
+                    )
+                }
+            }
+            other => bail!("unknown MOPEQ_BACKEND `{other}` (native|xla)"),
+        }
+    }
+
+    /// A session over an arbitrary backend implementation (tests inject
+    /// mock backends here to probe Session-level behavior).
+    pub fn with_backend(registry: Registry, backend: Box<dyn Backend>) -> Session {
+        Session { registry, backend, calls: RefCell::new(HashMap::new()) }
     }
 
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
-    /// Compile (or fetch cached) an entry's executable.
-    fn executable(
-        &self,
-        entry: &str,
-    ) -> Result<std::cell::Ref<'_, xla::PjRtLoadedExecutable>> {
-        if self.cache.borrow().get(entry).is_none() {
-            let path = self.root.join(format!("{entry}.hlo.txt"));
-            if !path.exists() {
-                bail!(
-                    "artifact `{}` not found — run `make artifacts`",
-                    path.display()
-                );
-            }
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {entry}: {e}"))?;
-            self.cache.borrow_mut().insert(entry.to_string(), exe);
-        }
-        Ok(std::cell::Ref::map(self.cache.borrow(), |c| {
-            c.get(entry).unwrap()
-        }))
+    /// Whether the entry exists in the registry *and* the backend can
+    /// run it.
+    pub fn supports(&self, entry: &str) -> bool {
+        self.registry.has_entry(entry) && self.backend.supports(entry)
     }
 
     /// Pre-compile an entry (used at startup so the serve path never
     /// pays compile latency).
     pub fn warm(&self, entry: &str) -> Result<()> {
-        self.executable(entry).map(|_| ())
+        self.registry.entry(entry)?;
+        self.backend.warm(entry)
     }
 
-    /// Execute an entry with shape/dtype validation. All entries are
-    /// lowered with `return_tuple=True`, so the result is always the
-    /// decomposed tuple.
+    /// Move a host value into backend-resident storage for repeated use.
+    pub fn prepare(&self, v: &Value) -> Result<Prepared> {
+        self.backend.prepare(v)
+    }
+
+    /// Like [`Session::prepare`], consuming the value (no host copy on
+    /// the native backend).
+    pub fn prepare_owned(&self, v: Value) -> Result<Prepared> {
+        self.backend.prepare_owned(v)
+    }
+
+    /// Execute an entry with shape/dtype validation. All entries return
+    /// the decomposed output tuple (single-output entries return one
+    /// element).
     pub fn exec(&self, entry: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let spec = self.registry.entry(entry)?;
         spec.validate(inputs).with_context(|| format!("entry `{entry}`"))?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|v| v.to_literal())
-            .collect::<Result<_>>()?;
-        let refs: Vec<&xla::Literal> = lits.iter().collect();
-        self.exec_literals(entry, &refs)
+        let out = self.backend.execute(entry, inputs)?;
+        self.count(entry);
+        Ok(out)
     }
 
-    /// Execute with pre-converted literals (hot path: callers cache the
-    /// conversion of weight tensors — EXPERIMENTS.md §Perf L3-B).
-    ///
-    /// Inputs are uploaded to rust-owned [`xla::PjRtBuffer`]s and run via
-    /// `execute_b`: the crate's literal-taking `execute` leaks its
-    /// internally-created input buffers (~MBs per call on the MoE layer;
-    /// §Perf L3-C documents the measurement), while buffers created here
-    /// are freed by Drop.
-    pub fn exec_literals(
+    /// Execute with prepared inputs (hot path: the executor prepares
+    /// weight tensors once at construction). Like the old device-buffer
+    /// path, this skips per-call spec validation — callers assemble
+    /// arguments straight from the registry specs.
+    pub fn exec_prepared(
         &self,
         entry: &str,
-        inputs: &[&xla::Literal],
+        inputs: &[&Prepared],
     ) -> Result<Vec<Value>> {
-        let bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|l| self.upload_literal(l))
-            .collect::<Result<_>>()?;
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        self.exec_buffers(entry, &refs)
+        let out = self.backend.execute_prepared(entry, inputs)?;
+        self.count(entry);
+        Ok(out)
     }
 
-    /// Upload a literal to a device buffer (rust-owned, freed on drop).
-    ///
-    /// SAFETY CONTRACT: PJRT's BufferFromHostLiteral may defer the host
-    /// copy, so the literal must stay alive as long as the buffer — use
-    /// [`Session::upload`]/[`DeviceTensor`] unless the caller already
-    /// guarantees that (as `exec_literals` does for the call duration).
-    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, lit)
-            .map_err(|e| anyhow!("upload: {e}"))
-    }
-
-    /// Upload a host value to the device, keeping the backing literal
-    /// alive for the buffer's lifetime (see upload_literal's contract —
-    /// dropping the literal early is a use-after-free the CPU client
-    /// surfaces as a size-check crash).
-    pub fn upload(&self, v: &Value) -> Result<DeviceTensor> {
-        let lit = v.to_literal()?;
-        let buf = self.upload_literal(&lit)?;
-        Ok(DeviceTensor { _lit: lit, buf })
-    }
-
-    /// Execute with device-resident buffers (weights uploaded once by
-    /// the executor — §Perf L3-C).
-    pub fn exec_buffers(
-        &self,
-        entry: &str,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<Value>> {
-        let exe = self.executable(entry)?;
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| anyhow!("execute {entry}: {e}"))?;
-        drop(exe);
+    fn count(&self, entry: &str) {
         *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result of {entry}: {e}"))?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
-        parts.iter().map(Value::from_literal).collect()
     }
 
     /// Per-entry call counters (perf telemetry).
@@ -280,6 +298,46 @@ impl Session {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_session_counts_calls() {
+        let s = Session::native();
+        let w = Tensor::<f32>::ones(&[2048]);
+        let v = Tensor::<f32>::ones(&[2048]);
+        s.exec("shared/hvp_frob_n2048", &[w.into(), v.into()]).unwrap();
+        assert_eq!(
+            s.call_counts(),
+            vec![("shared/hvp_frob_n2048".to_string(), 1)]
+        );
+        assert_eq!(s.platform(), "native");
+    }
+
+    #[test]
+    fn unknown_entry_is_rejected_before_dispatch() {
+        let s = Session::native();
+        let err = s.exec("shared/nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown entry"), "{err}");
+        assert!(!s.supports("shared/nope"));
+    }
+
+    #[test]
+    fn backend_choice_is_respected() {
+        // unset/native -> native session; bogus value -> error
+        // (tested through from_choice — mutating MOPEQ_BACKEND here
+        // would race with parallel tests in this binary)
+        assert_eq!(Session::from_choice("").unwrap().platform(), "native");
+        assert_eq!(
+            Session::from_choice("native").unwrap().platform(),
+            "native"
+        );
+        let err = Session::from_choice("definitely-not-a-backend").unwrap_err();
+        assert!(err.to_string().contains("unknown MOPEQ_BACKEND"), "{err}");
     }
 }

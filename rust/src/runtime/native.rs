@@ -1,0 +1,783 @@
+//! Pure-Rust native backend: evaluates every inference/quantization
+//! entry point directly on host [`Tensor`]s, mirroring the reference
+//! semantics of `python/compile/kernels/ref.py` (qdq / qmatmul /
+//! moe_ffn), `python/compile/model.py` (embed / attention / FFN /
+//! moe_layer / lm_head), `python/compile/hutchinson.py` (HVP) and
+//! `python/compile/signround.py` (SignSGD step with straight-through
+//! gradients).
+//!
+//! This is the default execution backend: it needs no artifacts, no
+//! Python, and no native libraries, which is what makes `cargo test`
+//! hermetic on a clean machine. The whole-model fused `train_step`
+//! entries are the one thing it does not implement (they are an XLA
+//! autodiff product); [`Backend::supports`] reports that honestly and
+//! the training driver gives an actionable error.
+//!
+//! Numerical notes:
+//! - softmax over the causal mask restricts to `j <= i`; the masked
+//!   `-1e30` scores underflow to exactly 0 after exp in f32, so the two
+//!   formulations agree bit-for-bit.
+//! - dense-dispatch, pallas and sparse moe_layer lowerings share one
+//!   evaluation here (they are the same function by construction); the
+//!   interpreter computes only the top-k experts per token.
+//! - SignRound gradients follow JAX's conventions at kinks: `round` has
+//!   zero gradient, the straight-through estimator passes gradient 1,
+//!   and `clip`/`maximum` pass gradient ½ exactly at the boundary.
+
+use crate::config;
+use crate::quant;
+use crate::runtime::{Backend, Prepared, PreparedInner, Value};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+
+const LN_EPS: f32 = 1e-6;
+
+/// The interpreter. Holds the (variant-independent) common dims it
+/// cannot recover from input shapes alone.
+pub struct NativeBackend {
+    n_heads: usize,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let cfg0 = &config::variants()[0];
+        NativeBackend { n_heads: cfg0.n_heads }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+fn unsupported(entry: &str) -> anyhow::Error {
+    anyhow!(
+        "entry `{entry}` is not supported by the native backend (the \
+         fused train_step is an XLA autodiff product) — rebuild with \
+         `--features backend-xla`, run `make artifacts`, and set \
+         MOPEQ_BACKEND=xla"
+    )
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn supports(&self, entry: &str) -> bool {
+        !entry.ends_with("/train_step") && !entry.ends_with("/train_step_sparse")
+    }
+
+    fn warm(&self, entry: &str) -> Result<()> {
+        if self.supports(entry) {
+            Ok(())
+        } else {
+            Err(unsupported(entry))
+        }
+    }
+
+    fn prepare(&self, v: &Value) -> Result<Prepared> {
+        Ok(Prepared(PreparedInner::Host(v.clone())))
+    }
+
+    fn prepare_owned(&self, v: Value) -> Result<Prepared> {
+        Ok(Prepared(PreparedInner::Host(v)))
+    }
+
+    fn execute(&self, entry: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = inputs.iter().collect();
+        self.dispatch(entry, &refs)
+    }
+
+    fn execute_prepared(
+        &self,
+        entry: &str,
+        inputs: &[&Prepared],
+    ) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = inputs
+            .iter()
+            .map(|p| {
+                p.host_value().ok_or_else(|| {
+                    anyhow!("native backend received a device-resident input")
+                })
+            })
+            .collect::<Result<_>>()?;
+        self.dispatch(entry, &refs)
+    }
+}
+
+impl NativeBackend {
+    fn dispatch(&self, entry: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let (ns, op) = entry
+            .split_once('/')
+            .ok_or_else(|| anyhow!("malformed entry name `{entry}`"))?;
+        if op.starts_with("train_step") {
+            return Err(unsupported(entry));
+        }
+        match (ns, op) {
+            ("shared", "embed") => embed(inputs),
+            ("shared", "attn_layer") => attention(inputs, self.n_heads),
+            ("shared", "dense_ffn") => dense_ffn(inputs),
+            ("shared", "lm_head") => lm_head(inputs),
+            ("shared", op) if op.starts_with("hvp_frob_n") => hvp_frob(inputs),
+            ("shared", op) if op.starts_with("qdq_") => {
+                qdq_entry(inputs, parse_bits(op)?)
+            }
+            ("shared", op) if op.starts_with("signround_") => {
+                signround_step(inputs, parse_bits(op)?)
+            }
+            ("shared", op) if op.starts_with("qmatmul4_") => qmatmul4(inputs),
+            ("shared", op) if op.starts_with("moe_ffn_") => moe_ffn_all(inputs),
+            (sig, op) if op.starts_with("moe_layer") => {
+                moe_layer(inputs, parse_top_k(sig)?)
+            }
+            _ => bail!("native backend: unknown entry `{entry}`"),
+        }
+    }
+}
+
+/// Trailing `_b{bits}` of a qdq/signround entry name.
+fn parse_bits(op: &str) -> Result<u8> {
+    op.rsplit_once("_b")
+        .and_then(|(_, b)| b.parse().ok())
+        .ok_or_else(|| anyhow!("no bit width in entry `{op}`"))
+}
+
+/// `top_k` from a routing signature `moe_e{E}_k{K}_s{S}`.
+fn parse_top_k(sig: &str) -> Result<usize> {
+    sig.split('_')
+        .find_map(|part| part.strip_prefix('k'))
+        .and_then(|k| k.parse().ok())
+        .ok_or_else(|| anyhow!("no top_k in signature `{sig}`"))
+}
+
+// ------------------------------------------------------------ primitives
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// jnp.sign: 0 at exactly 0 (f32::signum would return ±1 there).
+fn signf(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Row-wise RMSNorm over trailing dim `d`: x * w * rsqrt(mean(x²)+eps).
+fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), d);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + LN_EPS).sqrt();
+        for j in 0..d {
+            orow[j] = row[j] * w[j] * r;
+        }
+    }
+    out
+}
+
+/// `[rows,k] @ [k,n]` on slices, ikj loop order (cache friendly, skips
+/// zeros like `Tensor::matmul`).
+fn matmul(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; rows * n];
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// SwiGLU expert on a `[rows,din]` activation slab:
+/// `(silu(h@gate) * (h@up)) @ down` — ref.py `expert_ffn`.
+fn expert_ffn(
+    h: &[f32],
+    rows: usize,
+    din: usize,
+    gate: &[f32],
+    up: &[f32],
+    mid: usize,
+    down: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    let hg = matmul(h, rows, din, gate, mid);
+    let hu = matmul(h, rows, din, up, mid);
+    let act: Vec<f32> =
+        hg.iter().zip(&hu).map(|(&g, &u)| silu(g) * u).collect();
+    matmul(&act, rows, mid, down, dout)
+}
+
+// --------------------------------------------------------------- entries
+
+/// `(tokens i32[B,S], table [V,d], pos [S,d]) -> x [B,S,d]`.
+fn embed(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let tokens = inputs[0].as_i32()?;
+    let table = inputs[1].as_f32()?;
+    let pos = inputs[2].as_f32()?;
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let (v, d) = (table.shape[0], table.shape[1]);
+    let mut out = vec![0.0f32; b * s * d];
+    for i in 0..b * s {
+        // XLA gather clamps out-of-range indices; mirror that
+        let tok = tokens.data[i].clamp(0, v as i32 - 1) as usize;
+        let trow = &table.data[tok * d..(tok + 1) * d];
+        let prow = &pos.data[(i % s) * d..(i % s + 1) * d];
+        let orow = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            orow[j] = trow[j] + prow[j];
+        }
+    }
+    Ok(vec![Value::F32(Tensor::new(&[b, s, d], out))])
+}
+
+/// Pre-RMSNorm causal multi-head attention with residual.
+fn attention(inputs: &[&Value], n_heads: usize) -> Result<Vec<Value>> {
+    let x = inputs[0].as_f32()?;
+    let ln = inputs[1].as_f32()?;
+    let (wq, wk, wv, wo) = (
+        inputs[2].as_f32()?,
+        inputs[3].as_f32()?,
+        inputs[4].as_f32()?,
+        inputs[5].as_f32()?,
+    );
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let t = b * s;
+    let dh = d / n_heads;
+    let h = rmsnorm(&x.data, &ln.data, d);
+    let q = matmul(&h, t, d, &wq.data, d);
+    let k = matmul(&h, t, d, &wk.data, d);
+    let v = matmul(&h, t, d, &wv.data, d);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut ctx = vec![0.0f32; t * d];
+    let mut scores = vec![0.0f32; s];
+    for bi in 0..b {
+        for head in 0..n_heads {
+            let off = head * dh;
+            for i in 0..s {
+                let qrow = &q[(bi * s + i) * d + off..][..dh];
+                for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                    let krow = &k[(bi * s + j) * d + off..][..dh];
+                    *sc = dot(qrow, krow) * scale;
+                }
+                // softmax over the causal window j <= i
+                let mx = scores[..=i].iter().cloned().fold(f32::MIN, f32::max);
+                let mut sum = 0.0f32;
+                for sc in scores.iter_mut().take(i + 1) {
+                    *sc = (*sc - mx).exp();
+                    sum += *sc;
+                }
+                let orow = &mut ctx[(bi * s + i) * d + off..][..dh];
+                for j in 0..=i {
+                    let a = scores[j] / sum;
+                    let vrow = &v[(bi * s + j) * d + off..][..dh];
+                    for kk in 0..dh {
+                        orow[kk] += a * vrow[kk];
+                    }
+                }
+            }
+        }
+    }
+    let proj = matmul(&ctx, t, d, &wo.data, d);
+    let out: Vec<f32> =
+        x.data.iter().zip(&proj).map(|(&xv, &p)| xv + p).collect();
+    Ok(vec![Value::F32(Tensor::new(&[b, s, d], out))])
+}
+
+/// Dense SwiGLU FFN block with residual.
+fn dense_ffn(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let x = inputs[0].as_f32()?;
+    let ln = inputs[1].as_f32()?;
+    let (gate, up, down) =
+        (inputs[2].as_f32()?, inputs[3].as_f32()?, inputs[4].as_f32()?);
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let t = b * s;
+    let dd = gate.shape[1];
+    let h = rmsnorm(&x.data, &ln.data, d);
+    let y = expert_ffn(&h, t, d, &gate.data, &up.data, dd, &down.data, d);
+    let out: Vec<f32> =
+        x.data.iter().zip(&y).map(|(&xv, &yv)| xv + yv).collect();
+    Ok(vec![Value::F32(Tensor::new(&[b, s, d], out))])
+}
+
+/// Final norm + projection; logits at the last position only.
+fn lm_head(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let x = inputs[0].as_f32()?;
+    let ln = inputs[1].as_f32()?;
+    let head = inputs[2].as_f32()?;
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let v = head.shape[1];
+    let h = rmsnorm(&x.data, &ln.data, d);
+    let mut out = vec![0.0f32; b * v];
+    for bi in 0..b {
+        let hrow = &h[(bi * s + s - 1) * d..][..d];
+        let orow = &mut out[bi * v..(bi + 1) * v];
+        for (p, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &head.data[p * v..(p + 1) * v];
+            for j in 0..v {
+                orow[j] += hv * wrow[j];
+            }
+        }
+    }
+    Ok(vec![Value::F32(Tensor::new(&[b, v], out))])
+}
+
+/// One Hutchinson sample over the Frobenius proxy loss — the closed form
+/// of the autodiff graph: `HVP = (v - ŵ(ŵ·v))/‖w‖`, `t = v·HVP`.
+fn hvp_frob(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let w = inputs[0].as_f32()?;
+    let v = inputs[1].as_f32()?;
+    let n = w.len();
+    let norm = (w.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sqrt();
+    let dotwv: f64 = w
+        .data
+        .iter()
+        .zip(&v.data)
+        .map(|(&wi, &vi)| (wi as f64 / norm) * vi as f64)
+        .sum();
+    let mut hvp = vec![0.0f32; n];
+    let mut trace = 0.0f64;
+    for i in 0..n {
+        let what = w.data[i] as f64 / norm;
+        let h = (v.data[i] as f64 - what * dotwv) / norm;
+        hvp[i] = h as f32;
+        trace += v.data[i] as f64 * h;
+    }
+    Ok(vec![
+        Value::F32(Tensor::scalar(trace as f32)),
+        Value::F32(Tensor::new(&[n], hvp)),
+    ])
+}
+
+/// Group-wise SignRound quantize-dequantize (the L1 Pallas kernel's
+/// oracle): same math as `quant::quantize_int` + dequantize.
+fn qdq_entry(inputs: &[&Value], bits: u8) -> Result<Vec<Value>> {
+    let w = inputs[0].as_f32()?;
+    let v = inputs[1].as_f32()?;
+    let alpha = inputs[2].as_f32()?;
+    let beta = inputs[3].as_f32()?;
+    let grp = w.shape[0] / alpha.shape[0];
+    let qm = quant::quantize_int(w, Some(v), &alpha.data, &beta.data, bits, grp);
+    Ok(vec![Value::F32(qm.dequantize())])
+}
+
+/// One SignRound SignSGD step: gradients of
+/// `mse(X @ qdq(W; V, α, β), X @ W)` w.r.t. (V, α, β) through the
+/// straight-through estimator, then `p ← clip(p - lr·sign(g))`.
+/// Returns `(V', α', β', loss-at-input-params)`.
+fn signround_step(inputs: &[&Value], bits: u8) -> Result<Vec<Value>> {
+    let w = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    let v = inputs[2].as_f32()?;
+    let alpha = inputs[3].as_f32()?;
+    let beta = inputs[4].as_f32()?;
+    let lr = inputs[5].as_f32()?.data[0];
+
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    let n = x.shape[0];
+    let gg = alpha.shape[0];
+    let grp = din / gg;
+    let qmax = (1u32 << bits) as f32 - 1.0;
+
+    // scale/zero-point per (group, column), with the gradient gate of
+    // `maximum(s_pre, EPS)` (1 above EPS, ½ at the tie, 0 below)
+    let mut scales = vec![0.0f32; gg * dout];
+    let mut zps = vec![0.0f32; gg * dout];
+    let mut wmaxs = vec![0.0f32; gg * dout];
+    let mut wmins = vec![0.0f32; gg * dout];
+    let mut sgate = vec![0.0f32; gg * dout];
+    for g in 0..gg {
+        for c in 0..dout {
+            let mut wmax = f32::NEG_INFINITY;
+            let mut wmin = f32::INFINITY;
+            for r in g * grp..(g + 1) * grp {
+                let val = w.data[r * dout + c];
+                wmax = wmax.max(val);
+                wmin = wmin.min(val);
+            }
+            let a = alpha.data[g * dout + c];
+            let b = beta.data[g * dout + c];
+            let spre = (wmax * a - wmin * b) / qmax;
+            let s = spre.max(quant::EPS);
+            scales[g * dout + c] = s;
+            zps[g * dout + c] = (-wmin * b / s).round();
+            wmaxs[g * dout + c] = wmax;
+            wmins[g * dout + c] = wmin;
+            sgate[g * dout + c] = if spre > quant::EPS {
+                1.0
+            } else if spre == quant::EPS {
+                0.5
+            } else {
+                0.0
+            };
+        }
+    }
+
+    // forward qdq, remembering the clip gradient (1 inside (0, qmax),
+    // ½ exactly at the boundary, 0 outside — JAX's min/max convention)
+    let mut wq = vec![0.0f32; din * dout];
+    let mut qvals = vec![0.0f32; din * dout];
+    let mut clipg = vec![0.0f32; din * dout];
+    for r in 0..din {
+        let g = r / grp;
+        for c in 0..dout {
+            let s = scales[g * dout + c];
+            let zp = zps[g * dout + c];
+            let qpre = (w.data[r * dout + c] / s + v.data[r * dout + c])
+                .round()
+                + zp;
+            let q = qpre.clamp(0.0, qmax);
+            clipg[r * dout + c] = if qpre > 0.0 && qpre < qmax {
+                1.0
+            } else if qpre == 0.0 || qpre == qmax {
+                0.5
+            } else {
+                0.0
+            };
+            qvals[r * dout + c] = q;
+            wq[r * dout + c] = s * (q - zp);
+        }
+    }
+
+    // loss and dL/dWq = (2/N) Xᵀ(XWq - XW)
+    let xwq = matmul(&x.data, n, din, &wq, dout);
+    let xw = matmul(&x.data, n, din, &w.data, dout);
+    let diff: Vec<f32> =
+        xwq.iter().zip(&xw).map(|(&a, &b)| a - b).collect();
+    let nn = (n * dout) as f32;
+    let loss =
+        diff.iter().map(|&e| (e as f64) * (e as f64)).sum::<f64>() / nn as f64;
+    let gscale = 2.0 / nn;
+    let mut gwq = vec![0.0f32; din * dout];
+    for i in 0..n {
+        for r in 0..din {
+            let xv = x.data[i * din + r];
+            if xv == 0.0 {
+                continue;
+            }
+            let drow = &diff[i * dout..(i + 1) * dout];
+            let grow = &mut gwq[r * dout..(r + 1) * dout];
+            for c in 0..dout {
+                grow[c] += xv * drow[c];
+            }
+        }
+    }
+
+    // backprop: Wq = s·(clip(round_ste(w/s + v) + zp) - zp)
+    //   ∂Wq/∂v = s·clipg
+    //   ∂Wq/∂s = (q - zp) - clipg·w/s      (zp's round has zero grad)
+    //   ∂s/∂α  = sgate·wmax/qmax, ∂s/∂β = -sgate·wmin/qmax
+    let mut gv = vec![0.0f32; din * dout];
+    let mut gs = vec![0.0f32; gg * dout];
+    for r in 0..din {
+        let g = r / grp;
+        for c in 0..dout {
+            let idx = r * dout + c;
+            let gq = gwq[idx] * gscale;
+            let s = scales[g * dout + c];
+            let zp = zps[g * dout + c];
+            gv[idx] = gq * s * clipg[idx];
+            gs[g * dout + c] +=
+                gq * ((qvals[idx] - zp) - clipg[idx] * w.data[idx] / s);
+        }
+    }
+
+    // SignSGD with box projection
+    let vnew: Vec<f32> = v
+        .data
+        .iter()
+        .zip(&gv)
+        .map(|(&p, &g)| (p - lr * signf(g)).clamp(-0.5, 0.5))
+        .collect();
+    let mut anew = vec![0.0f32; gg * dout];
+    let mut bnew = vec![0.0f32; gg * dout];
+    for i in 0..gg * dout {
+        let ga = gs[i] * sgate[i] * wmaxs[i] / qmax;
+        let gb = gs[i] * sgate[i] * (-wmins[i]) / qmax;
+        anew[i] = (alpha.data[i] - lr * signf(ga)).clamp(0.0, 1.0);
+        bnew[i] = (beta.data[i] - lr * signf(gb)).clamp(0.0, 1.0);
+    }
+    Ok(vec![
+        Value::F32(Tensor::new(&[din, dout], vnew)),
+        Value::F32(Tensor::new(&[gg, dout], anew)),
+        Value::F32(Tensor::new(&[gg, dout], bnew)),
+        Value::F32(Tensor::scalar(loss as f32)),
+    ])
+}
+
+/// Packed-int4 dequant matmul: `x[T,din] @ dequant4(packed)[din,dout]`
+/// with the little-endian nibble layout of `quant::pack`.
+fn qmatmul4(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let x = inputs[0].as_f32()?;
+    let packed = inputs[1].as_i32()?;
+    let s = inputs[2].as_f32()?;
+    let zp = inputs[3].as_f32()?;
+    let (t, din) = (x.shape[0], x.shape[1]);
+    let dout = packed.shape[1];
+    let g = din / s.shape[0];
+    // dequantize the whole weight, then one matmul
+    let mut wdeq = vec![0.0f32; din * dout];
+    for r in 0..din {
+        let word_row = r / 8;
+        let shift = 4 * (r % 8);
+        let grp = r / g;
+        for c in 0..dout {
+            let code =
+                ((packed.data[word_row * dout + c] as u32) >> shift) & 0xF;
+            wdeq[r * dout + c] = s.data[grp * dout + c]
+                * (code as f32 - zp.data[grp * dout + c]);
+        }
+    }
+    let out = matmul(&x.data, t, din, &wdeq, dout);
+    Ok(vec![Value::F32(Tensor::new(&[t, dout], out))])
+}
+
+/// All-experts FFN: `h[T,d], gate/up[E,d,m], down[E,m,d] -> [E,T,d]`
+/// (ref.py `moe_ffn_all`; the pallas and ref lowerings are numerically
+/// identical, so both entry names land here).
+fn moe_ffn_all(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let h = inputs[0].as_f32()?;
+    let gate = inputs[1].as_f32()?;
+    let up = inputs[2].as_f32()?;
+    let down = inputs[3].as_f32()?;
+    let (t, d) = (h.shape[0], h.shape[1]);
+    let e = gate.shape[0];
+    let m = gate.shape[2];
+    let mut out = vec![0.0f32; e * t * d];
+    for ei in 0..e {
+        let y = expert_ffn(
+            &h.data,
+            t,
+            d,
+            &gate.data[ei * d * m..(ei + 1) * d * m],
+            &up.data[ei * d * m..(ei + 1) * d * m],
+            m,
+            &down.data[ei * m * d..(ei + 1) * m * d],
+            d,
+        );
+        out[ei * t * d..(ei + 1) * t * d].copy_from_slice(&y);
+    }
+    Ok(vec![Value::F32(Tensor::new(&[e, t, d], out))])
+}
+
+/// MoE FFN block with residual, top-k routing and expert telemetry.
+/// Returns `(y, counts[E], vis_counts[E], h_postln[B,S,d])`.
+fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
+    let x = inputs[0].as_f32()?;
+    let vis = inputs[1].as_f32()?;
+    let ln = inputs[2].as_f32()?;
+    let router = inputs[3].as_f32()?;
+    let gate = inputs[4].as_f32()?;
+    let up = inputs[5].as_f32()?;
+    let down = inputs[6].as_f32()?;
+    let shared = if inputs.len() > 7 {
+        Some((inputs[7].as_f32()?, inputs[8].as_f32()?, inputs[9].as_f32()?))
+    } else {
+        None
+    };
+
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let t = b * s;
+    let e = router.shape[0];
+    let m = gate.shape[2];
+    let h = rmsnorm(&x.data, &ln.data, d);
+
+    // the shared expert is routing-independent: evaluate it once on the
+    // whole [T,d] slab (as ref.expert_ffn does) instead of per token
+    let mut y = match shared {
+        Some((sg, su, sd)) => {
+            expert_ffn(&h, t, d, &sg.data, &su.data, sg.shape[1], &sd.data, d)
+        }
+        None => vec![0.0f32; t * d],
+    };
+    let mut counts = vec![0.0f32; e];
+    let mut vis_counts = vec![0.0f32; e];
+    let mut probs = vec![0.0f32; e];
+    let mut order: Vec<usize> = Vec::with_capacity(e);
+    for i in 0..t {
+        let hrow = &h[i * d..(i + 1) * d];
+        // router softmax
+        let mut mx = f32::MIN;
+        for j in 0..e {
+            probs[j] = dot(hrow, &router.data[j * d..(j + 1) * d]);
+            mx = mx.max(probs[j]);
+        }
+        let mut sum = 0.0f32;
+        for p in probs.iter_mut() {
+            *p = (*p - mx).exp();
+            sum += *p;
+        }
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        // top-k: descending prob, stable sort breaks ties toward the
+        // lower expert index (matching the jax sort_key_val lowering)
+        order.clear();
+        order.extend(0..e);
+        order.sort_by(|&a, &c| probs[c].partial_cmp(&probs[a]).unwrap());
+        let topi = &order[..top_k];
+        let tsum: f32 = topi.iter().map(|&j| probs[j]).sum();
+        let yrow = &mut y[i * d..(i + 1) * d];
+        for &ei in topi {
+            counts[ei] += 1.0;
+            vis_counts[ei] += vis.data[i];
+            let coef = probs[ei] / tsum;
+            let out = expert_ffn(
+                hrow,
+                1,
+                d,
+                &gate.data[ei * d * m..(ei + 1) * d * m],
+                &up.data[ei * d * m..(ei + 1) * d * m],
+                m,
+                &down.data[ei * m * d..(ei + 1) * m * d],
+                d,
+            );
+            for j in 0..d {
+                yrow[j] += coef * out[j];
+            }
+        }
+    }
+
+    let out: Vec<f32> =
+        x.data.iter().zip(&y).map(|(&xv, &yv)| xv + yv).collect();
+    Ok(vec![
+        Value::F32(Tensor::new(&[b, s, d], out)),
+        Value::F32(Tensor::new(&[e], counts)),
+        Value::F32(Tensor::new(&[e], vis_counts)),
+        Value::F32(Tensor::new(&[b, s, d], h)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn rmsnorm_unit_weight_normalizes() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let out = rmsnorm(&x, &w, 2);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn qdq_entry_matches_host_rtn_at_identity_clip() {
+        let be = backend();
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let v = Tensor::<f32>::zeros(&[64, 32]);
+        let a = Tensor::<f32>::ones(&[2, 32]);
+        let b = Tensor::<f32>::ones(&[2, 32]);
+        let out = be
+            .execute(
+                "shared/qdq_64x32_b4",
+                &[w.clone().into(), v.into(), a.into(), b.into()],
+            )
+            .unwrap();
+        let want = quant::rtn_qdq(&w, 4, 32);
+        assert_eq!(out[0].as_f32().unwrap(), &want);
+    }
+
+    #[test]
+    fn hvp_matches_closed_form_trace() {
+        let be = backend();
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[2048], 1.0);
+        let mut acc = 0.0f64;
+        let m = 64;
+        let mut r2 = Rng::new(2);
+        for _ in 0..m {
+            let v = Tensor::new(&[2048], r2.rademacher_vec(2048));
+            let out = be
+                .execute("shared/hvp_frob_n2048", &[w.clone().into(), v.into()])
+                .unwrap();
+            acc += out[0].as_f32().unwrap().data[0] as f64;
+        }
+        let est = acc / m as f64;
+        let exact = 2047.0 / w.frobenius_norm() as f64;
+        assert!((est - exact).abs() / exact < 0.15, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn signround_step_reduces_loss_over_steps() {
+        let be = backend();
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let x = Tensor::randn(&mut rng, &[64, 64], 1.0);
+        let mut v = Tensor::<f32>::zeros(&[64, 32]);
+        let mut a = Tensor::<f32>::ones(&[2, 32]);
+        let mut b = Tensor::<f32>::ones(&[2, 32]);
+        let mut first = f32::NAN;
+        let mut best = f32::INFINITY;
+        for step in 0..30 {
+            let lr = 0.02 * (1.0 - step as f32 / 30.0);
+            let out = be
+                .execute(
+                    "shared/signround_64x32_b2",
+                    &[
+                        w.clone().into(),
+                        x.clone().into(),
+                        v.clone().into(),
+                        a.clone().into(),
+                        b.clone().into(),
+                        Value::scalar_f32(lr),
+                    ],
+                )
+                .unwrap();
+            let loss = out[3].as_f32().unwrap().data[0];
+            if step == 0 {
+                first = loss;
+            }
+            best = best.min(loss);
+            v = out[0].as_f32().unwrap().clone();
+            a = out[1].as_f32().unwrap().clone();
+            b = out[2].as_f32().unwrap().clone();
+            // params stay in their boxes
+            assert!(v.data.iter().all(|&p| (-0.5..=0.5).contains(&p)));
+            assert!(a.data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        assert!(best < first, "signround did not improve: {best} !< {first}");
+    }
+
+    #[test]
+    fn train_step_is_reported_unsupported() {
+        let be = backend();
+        assert!(!be.supports("dsvl2_tiny/train_step"));
+        assert!(be.supports("shared/embed"));
+        let err = be.execute("dsvl2_tiny/train_step", &[]).unwrap_err();
+        assert!(err.to_string().contains("backend-xla"), "{err}");
+    }
+}

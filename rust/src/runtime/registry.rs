@@ -1,6 +1,18 @@
-//! Artifact registry: parses `artifacts/meta.json` (written by aot.py),
-//! cross-checks it against the rust [`crate::config`] constants, and
-//! validates call-site inputs against each entry's recorded spec.
+//! Entry registry: every executable entry point's input specification
+//! plus each model variant's canonical parameter list.
+//!
+//! Two constructors:
+//! - [`Registry::native`] synthesizes the specs directly from the rust
+//!   [`crate::config`] constants, mirroring `python/compile/aot.py`'s
+//!   `build_entries` — no artifacts directory needed. This is what the
+//!   default native backend runs against.
+//! - [`Registry::load`] parses `artifacts/meta.json` (written by aot.py)
+//!   and cross-checks it against the same constants, so the two sides
+//!   cannot drift silently. The XLA backend requires this path.
+//!
+//! Because both backends validate through the same [`EntrySpec`], a
+//! shape/dtype/arity mistake produces the identical error no matter
+//! which backend executes the entry (see tests/backend_parity.rs).
 
 use crate::config;
 use crate::jsonx::Json;
@@ -87,7 +99,184 @@ pub struct Registry {
     variants: HashMap<String, VariantMeta>,
 }
 
+const F32: &str = "float32";
+const I32: &str = "int32";
+
+fn arg(name: &str, shape: &[usize], dtype: &str) -> ArgSpec {
+    ArgSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: dtype.to_string(),
+    }
+}
+
 impl Registry {
+    /// Build the registry from the rust-side constants alone — the exact
+    /// mirror of aot.py's `build_entries` (same entry names, same input
+    /// order, same shapes/dtypes), with no artifacts on disk.
+    pub fn native() -> Registry {
+        let cfgs = config::variants();
+        let cfg0 = &cfgs[0]; // common dims (all variants share them)
+        let (d, m, v) = (cfg0.d_model, cfg0.d_expert, cfg0.vocab);
+        let (b, s, g) = (cfg0.batch, cfg0.seq, cfg0.group);
+        let dd = cfg0.d_dense;
+        let t = b * s;
+        let ncal = 64;
+
+        let mut entries: HashMap<String, EntrySpec> = HashMap::new();
+        let mut add = |name: String, inputs: Vec<ArgSpec>| {
+            entries.insert(name, EntrySpec { inputs });
+        };
+
+        // ---- shared inference blocks
+        add(
+            "shared/embed".into(),
+            vec![
+                arg("tokens", &[b, s], I32),
+                arg("table", &[v, d], F32),
+                arg("pos", &[s, d], F32),
+            ],
+        );
+        add(
+            "shared/attn_layer".into(),
+            vec![
+                arg("x", &[b, s, d], F32),
+                arg("ln", &[d], F32),
+                arg("wq", &[d, d], F32),
+                arg("wk", &[d, d], F32),
+                arg("wv", &[d, d], F32),
+                arg("wo", &[d, d], F32),
+            ],
+        );
+        add(
+            "shared/dense_ffn".into(),
+            vec![
+                arg("x", &[b, s, d], F32),
+                arg("ln", &[d], F32),
+                arg("gate", &[d, dd], F32),
+                arg("up", &[d, dd], F32),
+                arg("down", &[dd, d], F32),
+            ],
+        );
+        add(
+            "shared/lm_head".into(),
+            vec![
+                arg("x", &[b, s, d], F32),
+                arg("ln", &[d], F32),
+                arg("head", &[d, v], F32),
+            ],
+        );
+
+        // ---- hessian trace (per-expert FC flattened size d*m)
+        let n = d * m;
+        add(
+            format!("shared/hvp_frob_n{n}"),
+            vec![arg("w", &[n], F32), arg("v", &[n], F32)],
+        );
+
+        // ---- qdq + signround per (shape, bits)
+        for (din, dout) in [(d, m), (m, d)] {
+            let gg = if din >= g { din / g } else { 1 };
+            for bits in [2u8, 3, 4, 8] {
+                add(
+                    format!("shared/qdq_{din}x{dout}_b{bits}"),
+                    vec![
+                        arg("w", &[din, dout], F32),
+                        arg("v", &[din, dout], F32),
+                        arg("alpha", &[gg, dout], F32),
+                        arg("beta", &[gg, dout], F32),
+                    ],
+                );
+            }
+            for bits in config::MIXED_BITS {
+                add(
+                    format!("shared/signround_{din}x{dout}_b{bits}"),
+                    vec![
+                        arg("w", &[din, dout], F32),
+                        arg("x", &[ncal, din], F32),
+                        arg("v", &[din, dout], F32),
+                        arg("alpha", &[gg, dout], F32),
+                        arg("beta", &[gg, dout], F32),
+                        arg("lr", &[], F32),
+                    ],
+                );
+            }
+        }
+
+        // ---- packed-int4 dequant matmul (serving hot path)
+        add(
+            format!("shared/qmatmul4_{t}x{d}x{m}"),
+            vec![
+                arg("x", &[t, d], F32),
+                arg("packed", &[d / 8, m], I32),
+                arg("s", &[d / g, m], F32),
+                arg("zp", &[d / g, m], F32),
+            ],
+        );
+
+        // ---- standalone MoE-FFN kernel (pallas vs ref)
+        for tag in ["pallas", "ref"] {
+            add(
+                format!("shared/moe_ffn_{tag}_e64"),
+                vec![
+                    arg("h", &[t, d], F32),
+                    arg("gate", &[64, d, m], F32),
+                    arg("up", &[64, d, m], F32),
+                    arg("down", &[64, m, d], F32),
+                ],
+            );
+        }
+
+        // ---- moe_layer per routing signature
+        let mut sigs: HashMap<String, config::ModelConfig> = HashMap::new();
+        for cfg in &cfgs {
+            sigs.entry(cfg.moe_signature()).or_insert_with(|| cfg.clone());
+        }
+        for (sig, cfg) in &sigs {
+            let e = cfg.experts;
+            let mut inputs = vec![
+                arg("x", &[b, s, d], F32),
+                arg("vis_mask", &[b, s], F32),
+                arg("ln", &[d], F32),
+                arg("router", &[e, d], F32),
+                arg("gate", &[e, d, m], F32),
+                arg("up", &[e, d, m], F32),
+                arg("down", &[e, m, d], F32),
+            ];
+            if cfg.n_shared > 0 {
+                let ds = cfg.d_shared;
+                inputs.push(arg("sgate", &[d, ds], F32));
+                inputs.push(arg("sup", &[d, ds], F32));
+                inputs.push(arg("sdown", &[ds, d], F32));
+            }
+            for suffix in ["moe_layer", "moe_layer_pallas", "moe_layer_sparse"] {
+                add(format!("{sig}/{suffix}"), inputs.clone());
+            }
+        }
+
+        // ---- train_step per variant
+        for cfg in &cfgs {
+            let bt = cfg.train_batch;
+            let mut inputs: Vec<ArgSpec> = crate::moe::param_specs(cfg)
+                .into_iter()
+                .map(|(nm, sh)| arg(&nm, &sh, F32))
+                .collect();
+            inputs.push(arg("tokens", &[bt, cfg.seq], I32));
+            inputs.push(arg("target", &[bt], I32));
+            inputs.push(arg("lr", &[], F32));
+            add(format!("{}/train_step", cfg.name), inputs.clone());
+            add(format!("{}/train_step_sparse", cfg.name), inputs);
+        }
+
+        let variants = cfgs
+            .iter()
+            .map(|cfg| (cfg.name.to_string(), crate::moe::local_meta(cfg)))
+            .collect();
+        Registry { entries, variants }
+    }
+
+    /// Parse `artifacts/meta.json` and cross-check it against the rust
+    /// constants (XLA backend path).
     pub fn load(root: &Path) -> Result<Registry> {
         let path = root.join("meta.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
@@ -154,6 +343,10 @@ impl Registry {
             .ok_or_else(|| anyhow!("unknown entry `{name}`"))
     }
 
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
     pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
         self.variants
             .get(name)
@@ -207,5 +400,57 @@ mod tests {
             Tensor::<f32>::zeros(&[2]).into(),
         ];
         assert!(spec.validate(&bad2).is_err());
+    }
+
+    #[test]
+    fn native_registry_covers_the_aot_grid() {
+        let r = Registry::native();
+        // the variant-independent shared entries
+        for e in [
+            "shared/embed",
+            "shared/attn_layer",
+            "shared/dense_ffn",
+            "shared/lm_head",
+            "shared/hvp_frob_n2048",
+            "shared/qdq_64x32_b2",
+            "shared/qdq_32x64_b8",
+            "shared/signround_64x32_b4",
+            "shared/qmatmul4_128x64x32",
+            "shared/moe_ffn_ref_e64",
+            "shared/moe_ffn_pallas_e64",
+        ] {
+            assert!(r.has_entry(e), "missing {e}");
+        }
+        // one moe_layer triple per distinct routing signature
+        for sig in ["moe_e64_k6_s1", "moe_e72_k6_s1", "moe_e64_k8_s0"] {
+            for k in ["moe_layer", "moe_layer_pallas", "moe_layer_sparse"] {
+                assert!(r.has_entry(&format!("{sig}/{k}")), "missing {sig}/{k}");
+            }
+        }
+        // train_step per variant
+        for v in ["dsvl2_tiny", "dsvl2_small", "dsvl2_base", "molmoe"] {
+            assert!(r.has_entry(&format!("{v}/train_step")));
+            assert!(r.has_entry(&format!("{v}/train_step_sparse")));
+            assert!(r.variant(v).is_ok());
+        }
+        // spec shape sanity: signround takes 6 args ending in a scalar lr
+        let sr = r.entry("shared/signround_64x32_b2").unwrap();
+        assert_eq!(sr.inputs.len(), 6);
+        assert_eq!(sr.inputs[5].name, "lr");
+        assert!(sr.inputs[5].shape.is_empty());
+        // moe_layer with shared experts has 10 inputs, without has 7
+        assert_eq!(r.entry("moe_e64_k6_s1/moe_layer").unwrap().inputs.len(), 10);
+        assert_eq!(r.entry("moe_e64_k8_s0/moe_layer").unwrap().inputs.len(), 7);
+    }
+
+    #[test]
+    fn native_variant_meta_matches_local_param_specs() {
+        let r = Registry::native();
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let meta = r.variant("dsvl2_tiny").unwrap();
+        assert_eq!(meta.moe_signature, cfg.moe_signature());
+        assert_eq!(meta.params, crate::moe::param_specs(&cfg));
+        assert!(meta.param_shape("moe.gate").is_ok());
+        assert!(meta.param_shape("nope").is_err());
     }
 }

@@ -1,0 +1,209 @@
+//! PJRT/XLA backend (behind the `backend-xla` cargo feature): loads the
+//! AOT'd HLO-text artifacts and executes them on the CPU PJRT client.
+//! This is the only module that touches the `xla` crate; everything
+//! above it deals in host [`Value`]s.
+//!
+//! Interchange is HLO **text** (see aot.py) — xla_extension 0.5.1
+//! rejects jax >= 0.5 serialized protos (64-bit instruction ids).
+//!
+//! Note: the workspace ships `rust/vendor/xla`, an API *stub* that keeps
+//! this file compiling without the native library; swap the path
+//! dependency for the real `xla` crate to actually execute (DESIGN.md
+//! §Backends).
+
+use crate::runtime::{Backend, Prepared, PreparedInner, Value};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Host value -> literal.
+///
+/// Perf note (§Perf L3-A): the single-copy
+/// `create_from_shape_and_untyped_data` path was tried and reverted —
+/// the literals it produces report a padded `size_bytes()` that
+/// `buffer_from_host_literal` check-fails on (32× for [64,64] f32).
+/// vec1+reshape costs one extra memcpy but round-trips correctly.
+pub fn value_to_literal(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+    let lit = match v {
+        Value::F32(t) => xla::Literal::vec1(&t.data),
+        Value::I32(t) => xla::Literal::vec1(&t.data),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("literal reshape: {e}"))
+}
+
+// the wildcard arm is unreachable against the vendored stub's
+// two-variant enum but required once the real xla crate (with its
+// full dtype lattice) is swapped in
+#[allow(unreachable_patterns)]
+fn value_from_literal(lit: &xla::Literal) -> Result<Value> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            Ok(Value::F32(Tensor::new(&dims, data)))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            Ok(Value::I32(Tensor::new(&dims, data)))
+        }
+        ty => bail!("unsupported output element type {ty:?}"),
+    }
+}
+
+/// A device buffer together with the host literal backing it (PJRT may
+/// defer the host→device copy; the literal must outlive the buffer —
+/// dropping it early is a use-after-free the CPU client surfaces as a
+/// size-check crash).
+pub struct DeviceTensor {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+/// Lazily-compiled executable cache over one PJRT CPU client.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaBackend {
+    /// Open the artifacts directory (the registry is loaded separately
+    /// by [`crate::runtime::Session::open_xla`]).
+    pub fn open(root: impl Into<PathBuf>) -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(XlaBackend {
+            client,
+            root: root.into(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an entry's executable.
+    fn executable(
+        &self,
+        entry: &str,
+    ) -> Result<std::cell::Ref<'_, xla::PjRtLoadedExecutable>> {
+        if self.cache.borrow().get(entry).is_none() {
+            let path = self.root.join(format!("{entry}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact `{}` not found — run `make artifacts`",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {entry}: {e}"))?;
+            self.cache.borrow_mut().insert(entry.to_string(), exe);
+        }
+        Ok(std::cell::Ref::map(self.cache.borrow(), |c| {
+            c.get(entry).unwrap()
+        }))
+    }
+
+    fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e}"))
+    }
+
+    fn upload(&self, v: &Value) -> Result<DeviceTensor> {
+        let lit = value_to_literal(v)?;
+        let buf = self.upload_literal(&lit)?;
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// Execute with device-resident buffers (weights uploaded once by
+    /// the executor — §Perf L3-C). Inputs run via `execute_b`: the
+    /// crate's literal-taking `execute` leaks its internally-created
+    /// input buffers (~MBs per call on the MoE layer), while buffers
+    /// created here are freed by Drop.
+    fn exec_buffers(
+        &self,
+        entry: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Value>> {
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute {entry}: {e}"))?;
+        drop(exe);
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {entry}: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        parts.iter().map(value_from_literal).collect()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn supports(&self, _entry: &str) -> bool {
+        // XLA can execute any registry entry given its artifact; a
+        // missing .hlo.txt is an error state surfaced by warm()/execute
+        // ("run `make artifacts`"), not a lack of support — `mopeq info
+        // --check` relies on that distinction to flag broken artifacts
+        true
+    }
+
+    fn warm(&self, entry: &str) -> Result<()> {
+        self.executable(entry).map(|_| ())
+    }
+
+    fn prepare(&self, v: &Value) -> Result<Prepared> {
+        Ok(Prepared(PreparedInner::Device(self.upload(v)?)))
+    }
+
+    fn execute(&self, entry: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let temps: Vec<DeviceTensor> = inputs
+            .iter()
+            .map(|v| self.upload(v))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = temps.iter().map(|t| &t.buf).collect();
+        self.exec_buffers(entry, &refs)
+    }
+
+    fn execute_prepared(
+        &self,
+        entry: &str,
+        inputs: &[&Prepared],
+    ) -> Result<Vec<Value>> {
+        // two passes so temporary uploads live until the call returns
+        let mut temps: Vec<DeviceTensor> = Vec::new();
+        let mut slots: Vec<Option<&xla::PjRtBuffer>> =
+            Vec::with_capacity(inputs.len());
+        for p in inputs {
+            match &p.0 {
+                PreparedInner::Host(v) => {
+                    temps.push(self.upload(v)?);
+                    slots.push(None);
+                }
+                PreparedInner::Device(dt) => slots.push(Some(&dt.buf)),
+            }
+        }
+        let mut ti = 0;
+        let refs: Vec<&xla::PjRtBuffer> = slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| {
+                    let r = &temps[ti].buf;
+                    ti += 1;
+                    r
+                })
+            })
+            .collect();
+        self.exec_buffers(entry, &refs)
+    }
+}

@@ -1,10 +1,11 @@
 //! Threaded inference server: request router + dynamic batcher over the
 //! static-shape executor (vLLM-style, sized down). Python never runs
-//! here — the worker owns a PJRT session and a (possibly mixed-
-//! precision-quantized) weight store, and requests flow through std
-//! mpsc channels (the offline vendor set has no tokio; the event loop is
-//! a dedicated thread, which for a single-CPU PJRT device is the honest
-//! topology anyway).
+//! here — the worker owns its own backend [`Session`] (native
+//! interpreter by default, PJRT with `backend-xla`) and a (possibly
+//! mixed-precision-quantized) weight store, and requests flow through
+//! std mpsc channels (the offline vendor set has no tokio; the event
+//! loop is a dedicated thread, which for a single-CPU device is the
+//! honest topology anyway).
 
 pub mod batcher;
 pub mod offload;

@@ -82,6 +82,14 @@ pub fn train(
     } else {
         format!("{}/train_step", cfg.name)
     };
+    if !session.supports(&entry) {
+        bail!(
+            "training needs the fused `{entry}` entry, which the current \
+             `{}` backend cannot execute — build with `--features \
+             backend-xla`, run `make artifacts`, and set MOPEQ_BACKEND=xla",
+            session.platform()
+        );
+    }
     session.warm(&entry)?;
     let mut gen = BatchGen::new(cfg, tcfg.seed);
     let n_params = ws.flat().len();

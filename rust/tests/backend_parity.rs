@@ -1,0 +1,415 @@
+//! Backend-parity golden tests: the native interpreter must match the
+//! reference semantics of `python/compile/kernels/ref.py` (transcribed
+//! independently here) on fixed-seed inputs, and `Session`-level
+//! shape/dtype validation must produce identical errors no matter which
+//! backend executes — validation runs against the shared registry spec
+//! *before* dispatch.
+
+use mopeq::quant;
+use mopeq::rng::Rng;
+use mopeq::runtime::{Backend, Prepared, Registry, Session, Value};
+use mopeq::tensor::Tensor;
+use std::cell::Cell;
+
+fn native() -> Session {
+    Session::native()
+}
+
+// ------------------------------------------------------- ref.py mirrors
+// Independent transcriptions of the jnp oracles (NOT calls into the
+// interpreter under test).
+
+/// ref.qdq with explicit (v, alpha, beta): group-wise asymmetric qdq.
+fn ref_qdq(
+    w: &Tensor<f32>,
+    v: &Tensor<f32>,
+    alpha: &[f32],
+    beta: &[f32],
+    bits: u8,
+    g: usize,
+) -> Tensor<f32> {
+    let (din, dout) = (w.shape[0], w.shape[1]);
+    let ngroups = din / g;
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let mut out = vec![0.0f32; din * dout];
+    for grp in 0..ngroups {
+        for c in 0..dout {
+            let mut wmax = f32::NEG_INFINITY;
+            let mut wmin = f32::INFINITY;
+            for r in grp * g..(grp + 1) * g {
+                wmax = wmax.max(w.data[r * dout + c]);
+                wmin = wmin.min(w.data[r * dout + c]);
+            }
+            let a = alpha[grp * dout + c];
+            let b = beta[grp * dout + c];
+            let s = ((wmax * a - wmin * b) / qmax).max(1e-8);
+            let zp = (-wmin * b / s).round();
+            for r in grp * g..(grp + 1) * g {
+                let q = ((w.data[r * dout + c] / s + v.data[r * dout + c])
+                    .round()
+                    + zp)
+                    .clamp(0.0, qmax);
+                out[r * dout + c] = s * (q - zp);
+            }
+        }
+    }
+    Tensor::new(&[din, dout], out)
+}
+
+/// ref.qmatmul: x @ (s·(q - zp)) with int codes.
+fn ref_qmatmul(
+    x: &Tensor<f32>,
+    codes: &[u8],
+    scales: &[f32],
+    zps: &[f32],
+    din: usize,
+    dout: usize,
+    g: usize,
+) -> Tensor<f32> {
+    let mut w = vec![0.0f32; din * dout];
+    for r in 0..din {
+        let grp = r / g;
+        for c in 0..dout {
+            w[r * dout + c] = scales[grp * dout + c]
+                * (codes[r * dout + c] as f32 - zps[grp * dout + c]);
+        }
+    }
+    x.matmul(&Tensor::new(&[din, dout], w))
+}
+
+fn ref_silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// ref.moe_ffn_all: h[T,d], gate/up[E,d,m], down[E,m,d] -> [E,T,d].
+fn ref_moe_ffn_all(
+    h: &Tensor<f32>,
+    gate: &Tensor<f32>,
+    up: &Tensor<f32>,
+    down: &Tensor<f32>,
+) -> Tensor<f32> {
+    let (t, d) = (h.shape[0], h.shape[1]);
+    let (e, m) = (gate.shape[0], gate.shape[2]);
+    let mut out = vec![0.0f32; e * t * d];
+    for ei in 0..e {
+        let ge = Tensor::new(&[d, m], gate.data[ei * d * m..(ei + 1) * d * m].to_vec());
+        let ue = Tensor::new(&[d, m], up.data[ei * d * m..(ei + 1) * d * m].to_vec());
+        let de = Tensor::new(&[m, d], down.data[ei * m * d..(ei + 1) * m * d].to_vec());
+        let hg = h.matmul(&ge);
+        let hu = h.matmul(&ue);
+        let mut act = vec![0.0f32; t * m];
+        for i in 0..t * m {
+            act[i] = ref_silu(hg.data[i]) * hu.data[i];
+        }
+        let y = Tensor::new(&[t, m], act).matmul(&de);
+        out[ei * t * d..(ei + 1) * t * d].copy_from_slice(&y.data);
+    }
+    Tensor::new(&[e, t, d], out)
+}
+
+// ------------------------------------------------------- golden parity
+
+#[test]
+fn native_qdq_matches_ref_semantics() {
+    let s = native();
+    let mut rng = Rng::new(0xC0FFEE);
+    for &(din, dout) in &[(64usize, 32usize), (32, 64)] {
+        let gg = din / 32;
+        for bits in [2u8, 3, 4, 8] {
+            let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+            // non-trivial rounding offsets and clip parameters
+            let v = Tensor::new(
+                &[din, dout],
+                (0..din * dout)
+                    .map(|_| rng.uniform_in(-0.5, 0.5) as f32)
+                    .collect(),
+            );
+            let alpha = Tensor::new(
+                &[gg, dout],
+                (0..gg * dout)
+                    .map(|_| rng.uniform_in(0.7, 1.0) as f32)
+                    .collect(),
+            );
+            let beta = Tensor::new(
+                &[gg, dout],
+                (0..gg * dout)
+                    .map(|_| rng.uniform_in(0.7, 1.0) as f32)
+                    .collect(),
+            );
+            let out = s
+                .exec(
+                    &format!("shared/qdq_{din}x{dout}_b{bits}"),
+                    &[
+                        w.clone().into(),
+                        v.clone().into(),
+                        alpha.clone().into(),
+                        beta.clone().into(),
+                    ],
+                )
+                .unwrap();
+            let want = ref_qdq(&w, &v, &alpha.data, &beta.data, bits, 32);
+            let diff = out[0].as_f32().unwrap().max_abs_diff(&want);
+            assert!(diff < 1e-6, "{din}x{dout} b{bits}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn native_qdq_rtn_special_case_matches_host_quant() {
+    // v = 0, alpha = beta = 1 must reduce to the host RTN path bit-for-bit
+    let s = native();
+    let mut rng = Rng::new(1);
+    let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+    let out = s
+        .exec(
+            "shared/qdq_64x32_b4",
+            &[
+                w.clone().into(),
+                Tensor::<f32>::zeros(&[64, 32]).into(),
+                Tensor::<f32>::ones(&[2, 32]).into(),
+                Tensor::<f32>::ones(&[2, 32]).into(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &quant::rtn_qdq(&w, 4, 32));
+}
+
+#[test]
+fn native_qmatmul_matches_ref_semantics() {
+    let s = native();
+    let mut rng = Rng::new(2);
+    let (t, din, dout, g) = (128usize, 64usize, 32usize, 32usize);
+    let x = Tensor::randn(&mut rng, &[t, din], 1.0);
+    let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+    let qm = quant::rtn_quantize(&w, 4, g);
+    let packed = quant::pack::pack(&qm.codes, din, dout, 4).unwrap();
+    let packed_t = Tensor::new(
+        &[din / 8, dout],
+        packed.iter().map(|&u| u as i32).collect(),
+    );
+    let out = s
+        .exec(
+            "shared/qmatmul4_128x64x32",
+            &[
+                x.clone().into(),
+                packed_t.into(),
+                Tensor::new(&[din / g, dout], qm.scales.clone()).into(),
+                Tensor::new(&[din / g, dout], qm.zps.clone()).into(),
+            ],
+        )
+        .unwrap();
+    let want = ref_qmatmul(&x, &qm.codes, &qm.scales, &qm.zps, din, dout, g);
+    let diff = out[0].as_f32().unwrap().max_abs_diff(&want);
+    assert!(diff < 1e-4, "{diff}");
+}
+
+#[test]
+fn native_moe_ffn_matches_ref_semantics_on_both_lowerings() {
+    let s = native();
+    let mut rng = Rng::new(3);
+    let (t, d, m, e) = (128usize, 64usize, 32usize, 64usize);
+    let h = Tensor::randn(&mut rng, &[t, d], 1.0);
+    let gate = Tensor::randn(&mut rng, &[e, d, m], 0.2);
+    let up = Tensor::randn(&mut rng, &[e, d, m], 0.2);
+    let down = Tensor::randn(&mut rng, &[e, m, d], 0.2);
+    let want = ref_moe_ffn_all(&h, &gate, &up, &down);
+    for entry in ["shared/moe_ffn_ref_e64", "shared/moe_ffn_pallas_e64"] {
+        let out = s
+            .exec(
+                entry,
+                &[
+                    h.clone().into(),
+                    gate.clone().into(),
+                    up.clone().into(),
+                    down.clone().into(),
+                ],
+            )
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        assert_eq!(got.shape, vec![e, t, d]);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "{entry}: {diff}");
+    }
+}
+
+#[test]
+fn native_moe_layer_lowerings_agree_and_count_tokens() {
+    let s = native();
+    let mut rng = Rng::new(4);
+    let (b, sq, d, m, e, k) = (4usize, 32usize, 64usize, 32usize, 64usize, 6);
+    let x = Tensor::randn(&mut rng, &[b, sq, d], 1.0);
+    let vis = Tensor::<f32>::zeros(&[b, sq]);
+    let ln = Tensor::<f32>::ones(&[d]);
+    let router = Tensor::randn(&mut rng, &[e, d], 0.2);
+    let gate = Tensor::randn(&mut rng, &[e, d, m], 0.2);
+    let up = Tensor::randn(&mut rng, &[e, d, m], 0.2);
+    let down = Tensor::randn(&mut rng, &[e, m, d], 0.2);
+    let sgate = Tensor::randn(&mut rng, &[d, d], 0.2);
+    let sup = Tensor::randn(&mut rng, &[d, d], 0.2);
+    let sdown = Tensor::randn(&mut rng, &[d, d], 0.2);
+    let args: Vec<Value> = vec![
+        x.into(),
+        vis.into(),
+        ln.into(),
+        router.into(),
+        gate.into(),
+        up.into(),
+        down.into(),
+        sgate.into(),
+        sup.into(),
+        sdown.into(),
+    ];
+    let base = s.exec("moe_e64_k6_s1/moe_layer", &args).unwrap();
+    for entry in ["moe_e64_k6_s1/moe_layer_pallas", "moe_e64_k6_s1/moe_layer_sparse"]
+    {
+        let out = s.exec(entry, &args).unwrap();
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            base[0].as_f32().unwrap(),
+            "{entry} diverged from dense dispatch"
+        );
+        assert_eq!(out[1].as_f32().unwrap(), base[1].as_f32().unwrap());
+    }
+    // every token routes to exactly top_k experts
+    let counts = base[1].as_f32().unwrap();
+    assert_eq!(counts.shape, vec![e]);
+    let total: f32 = counts.data.iter().sum();
+    assert_eq!(total, (b * sq * k) as f32);
+    // all-zero vis mask -> zero visual counts
+    assert!(base[2].as_f32().unwrap().data.iter().all(|&c| c == 0.0));
+}
+
+// ------------------------------------------- validation error parity
+
+/// A backend that records whether execution was ever reached.
+struct MockBackend {
+    executed: Cell<bool>,
+}
+
+impl Backend for MockBackend {
+    fn platform(&self) -> String {
+        "mock".to_string()
+    }
+
+    fn supports(&self, _entry: &str) -> bool {
+        true
+    }
+
+    fn warm(&self, _entry: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn prepare(&self, v: &Value) -> anyhow::Result<Prepared> {
+        Ok(Prepared::host(v.clone()))
+    }
+
+    fn execute(&self, _entry: &str, _inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        self.executed.set(true);
+        anyhow::bail!("mock backend executed")
+    }
+
+    fn execute_prepared(
+        &self,
+        _entry: &str,
+        _inputs: &[&Prepared],
+    ) -> anyhow::Result<Vec<Value>> {
+        self.executed.set(true);
+        anyhow::bail!("mock backend executed")
+    }
+}
+
+#[test]
+fn session_validation_errors_are_identical_across_backends() {
+    let native = Session::native();
+    let mock = Session::with_backend(
+        Registry::native(),
+        Box::new(MockBackend { executed: Cell::new(false) }),
+    );
+
+    // wrong shape, wrong dtype, wrong arity, unknown entry — the error
+    // text must be byte-identical on both backends because validation
+    // happens at the Session level against the shared registry spec
+    let bad_shape: Vec<Value> = vec![
+        Tensor::<f32>::zeros(&[63, 32]).into(),
+        Tensor::<f32>::zeros(&[64, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+    ];
+    let bad_dtype: Vec<Value> = vec![
+        Tensor::<i32>::zeros(&[64, 32]).into(),
+        Tensor::<f32>::zeros(&[64, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+    ];
+    let bad_arity: Vec<Value> = vec![Tensor::<f32>::zeros(&[64, 32]).into()];
+
+    for (label, entry, inputs) in [
+        ("shape", "shared/qdq_64x32_b4", &bad_shape),
+        ("dtype", "shared/qdq_64x32_b4", &bad_dtype),
+        ("arity", "shared/qdq_64x32_b4", &bad_arity),
+        ("unknown", "shared/definitely_not_an_entry", &bad_arity),
+    ] {
+        let en = native.exec(entry, inputs).unwrap_err();
+        let em = mock.exec(entry, inputs).unwrap_err();
+        assert_eq!(
+            format!("{en:#}"),
+            format!("{em:#}"),
+            "{label}: backends disagree on the validation error"
+        );
+    }
+
+    // malformed inputs never reach the backend…
+    let mock_backend_untouched = mock
+        .exec("shared/qdq_64x32_b4", &bad_shape)
+        .unwrap_err()
+        .to_string();
+    assert!(
+        !mock_backend_untouched.contains("mock backend executed"),
+        "validation must fire before dispatch"
+    );
+
+    // …and well-formed inputs do reach it
+    let good: Vec<Value> = vec![
+        Tensor::<f32>::zeros(&[64, 32]).into(),
+        Tensor::<f32>::zeros(&[64, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+        Tensor::<f32>::zeros(&[2, 32]).into(),
+    ];
+    let e = mock.exec("shared/qdq_64x32_b4", &good).unwrap_err();
+    assert!(e.to_string().contains("mock backend executed"), "{e}");
+}
+
+#[test]
+fn signround_entry_golden_loss_at_rtn_point() {
+    // at v=0, alpha=beta=1 the reported loss must equal the host-side
+    // mse(X@rtn_qdq(W) - X@W) exactly — the SignRound loss definition
+    let s = native();
+    let mut rng = Rng::new(5);
+    let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+    let x = Tensor::randn(&mut rng, &[64, 64], 1.0);
+    let out = s
+        .exec(
+            "shared/signround_64x32_b3",
+            &[
+                w.clone().into(),
+                x.clone().into(),
+                Tensor::<f32>::zeros(&[64, 32]).into(),
+                Tensor::<f32>::ones(&[2, 32]).into(),
+                Tensor::<f32>::ones(&[2, 32]).into(),
+                Value::scalar_f32(0.0),
+            ],
+        )
+        .unwrap();
+    let loss = out[3].as_f32().unwrap().data[0];
+    let wq = quant::rtn_qdq(&w, 3, 32);
+    let want = x.matmul(&wq).mse(&x.matmul(&w));
+    // (native accumulates the mse in f64, the host helper in f32)
+    assert!(
+        (loss - want).abs() <= 1e-4 * want.max(1e-3),
+        "loss {loss} vs host mse {want}"
+    );
+    // lr = 0 must leave every parameter untouched
+    assert!(out[0].as_f32().unwrap().data.iter().all(|&p| p == 0.0));
+    assert!(out[1].as_f32().unwrap().data.iter().all(|&p| p == 1.0));
+    assert!(out[2].as_f32().unwrap().data.iter().all(|&p| p == 1.0));
+}

@@ -1,7 +1,9 @@
-//! Integration tests over the real artifacts + PJRT runtime: the
-//! cross-language contracts (rust quant math vs the Pallas kernels, rust
-//! Hutchinson vs the AOT'd autodiff HVP), the layer-loop executor, the
-//! SignRound driver and the training step. Requires `make artifacts`.
+//! Integration tests over the full runtime stack: the quant-math
+//! contracts (rust host math vs the executed kernels), the layer-loop
+//! executor, the SignRound driver and the training step. Runs on the
+//! default native backend with zero artifacts; set `MOPEQ_BACKEND=xla`
+//! (with the `backend-xla` feature and `make artifacts`) to exercise the
+//! PJRT path instead — the assertions are backend-agnostic.
 
 use mopeq::config;
 use mopeq::coordinator::{
@@ -17,7 +19,7 @@ use mopeq::runtime::{Session, Value};
 use mopeq::tensor::Tensor;
 
 fn session() -> Session {
-    Session::open_default().expect("run `make artifacts` first")
+    Session::open_default().expect("backend open failed")
 }
 
 fn tiny_store(seed: u64) -> (config::ModelConfig, WeightStore) {
@@ -277,6 +279,20 @@ fn molmoe_routing_is_more_skewed_than_deepseek() {
 fn train_step_reduces_loss_from_rust() {
     let s = session();
     let (cfg, mut ws) = tiny_store(11);
+    if !s.supports(&format!("{}/train_step", cfg.name)) {
+        // the native interpreter does not implement the fused XLA
+        // train_step; the driver's actionable error is covered instead
+        let err = mopeq::train::train(
+            &s,
+            &cfg,
+            &mut ws,
+            &mopeq::train::TrainConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("backend-xla"), "{err}");
+        eprintln!("skipping train loop: backend lacks train_step");
+        return;
+    }
     let tcfg = mopeq::train::TrainConfig {
         steps: 6,
         lr: 0.05,

@@ -1,5 +1,5 @@
 //! Server integration: full request → batcher → executor → reply loop
-//! over real artifacts, including mixed-precision weight swaps.
+//! over the default backend, including mixed-precision weight swaps.
 
 use mopeq::config;
 use mopeq::coordinator::{quantize_experts, Quantizer};
@@ -18,7 +18,7 @@ fn server_roundtrip_and_stats() {
         ws,
         BatchPolicy { max_linger: Duration::from_millis(1) },
     )
-    .expect("run `make artifacts` first");
+    .expect("server start failed");
 
     let n = 12;
     let mut rng = Rng::new(3);

@@ -1,0 +1,215 @@
+//! Vendored, dependency-free subset of the `anyhow` crate API, so the
+//! workspace builds hermetically from a clean checkout with no network
+//! access and no pre-populated registry cache.
+//!
+//! Covered surface (exactly what this repository uses):
+//! - [`Error`]: message + source chain, `Debug`/`Display` (`{:#}` prints
+//!   the full chain like real anyhow)
+//! - [`Result<T>`] alias
+//! - `anyhow!`, `bail!`, `ensure!` macros (format-style)
+//! - [`Context::context`] / [`Context::with_context`] on `Result<T, Error>`
+//! - `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!   std errors (io, utf8, …) into [`Error`]
+//!
+//! To switch back to the real crate, replace the path dependency in
+//! `rust/Cargo.toml` with a registry version — no call sites change.
+
+use std::fmt;
+
+/// Error type: an outermost message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a new outermost context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(src) = &cur.source {
+            cur = src;
+        }
+        cur
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+}
+
+/// Iterator over an error chain (outermost context first).
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, colon-separated, like real anyhow
+            write!(f, "{}", self.msg)?;
+            let mut cur = &self.source;
+            while let Some(src) = cur {
+                write!(f, ": {}", src.msg)?;
+                cur = &src.source;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(src);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // preserve the std source chain as message context
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("non-empty chain")
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (subset: implemented for `Result<T, Error>`,
+/// which is the only receiver this repository uses).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.root_cause().to_string(), "inner 42");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn from_std_error() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn with_context_on_result() {
+        let r: Result<()> = fails().with_context(|| format!("ctx {}", 1));
+        assert_eq!(format!("{:#}", r.unwrap_err()), "ctx 1: inner 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! API stub of the `xla` crate (PJRT bindings), covering exactly the
+//! surface `mopeq::runtime::xla` calls. Every constructor returns a
+//! runtime error, so `cargo build --features backend-xla` always
+//! compiles and the binary degrades to a clear "stub build" message if
+//! the XLA backend is requested.
+//!
+//! To run the real PJRT path, replace this path dependency in
+//! `rust/Cargo.toml` with the actual `xla` crate (same module surface);
+//! no `mopeq` source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+
+/// Stub error: always "not linked".
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "xla stub: `{what}` requires the real PJRT bindings — \
+             replace rust/vendor/xla with the actual xla crate \
+             (see DESIGN.md §Backends)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types we exchange with PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Marker for host element types the literal API accepts.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Host literal (stub: shape/type metadata only, no storage).
+pub struct Literal {
+    _p: PhantomData<()>,
+}
+
+pub struct ArrayShape {
+    _p: PhantomData<()>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+
+    pub fn ty(&self) -> ElementType {
+        ElementType::F32
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _p: PhantomData }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub("Literal::reshape"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::stub("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _p: PhantomData<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {
+    _p: PhantomData<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client (stub: `cpu()` fails, so callers bail at session open).
+pub struct PjRtClient {
+    _p: PhantomData<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::stub("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _p: PhantomData<()>,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _p: PhantomData<()>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: PhantomData }
+    }
+}
