@@ -1,10 +1,12 @@
 //! Quantizer throughput: RTN / GPTQ / AWQ host paths, bit pack/unpack,
-//! and the SignRound HLO step — the cost side of the paper's method
-//! (PTQ cost per expert FC layer).
+//! the fused packed qmatmul kernels vs the f32 dense baseline (weight
+//! GB/s — the §5.4 bandwidth argument, measured), and the SignRound HLO
+//! step — the cost side of the paper's method (PTQ cost per expert FC
+//! layer).
 
 use mopeq::benchx::{bench, bench_items, section};
 use mopeq::coordinator::{signround_optimize, SignRoundConfig};
-use mopeq::quant::{self, awq, gptq, pack};
+use mopeq::quant::{self, awq, gptq, kernels, pack};
 use mopeq::rng::Rng;
 use mopeq::runtime::Session;
 use mopeq::tensor::Tensor;
@@ -40,6 +42,46 @@ fn main() {
         pack::unpack(&packed, 64, 32, 4)
     });
     bench("dequantize_b4", || qm.dequantize());
+
+    section("fused packed qmatmul vs f32 dense ([64,512] @ [512,512])");
+    let (rows, din, dout) = (64usize, 512usize, 512usize);
+    let wb = Tensor::randn(&mut rng, &[din, dout], 0.5);
+    let xb = Tensor::randn(&mut rng, &[rows, din], 1.0);
+    let gbs = |bytes: usize, secs: f64| bytes as f64 / secs / 1e9;
+    let dense_bytes = din * dout * 4;
+    let sd = bench("dense_f32_matmul", || {
+        kernels::matmul_f32(&xb.data, rows, din, &wb.data, dout)
+    });
+    println!(
+        "{:<44} weight bytes/matmul {:>9}  read {:.2} GB/s",
+        "",
+        dense_bytes,
+        gbs(dense_bytes, sd.mean.as_secs_f64())
+    );
+    for bits in [2u8, 3, 4, 8] {
+        let qm = quant::rtn_quantize(&wb, bits, 32);
+        let pm = kernels::PackedMatrix::from_quantized(&qm).unwrap();
+        // parity guard: the fused kernel must be bit-exact vs the
+        // dequantize-then-matmul golden path before we time it
+        assert_eq!(
+            kernels::qmatmul(&xb.data, rows, &pm),
+            kernels::matmul_f32(
+                &xb.data, rows, din, &qm.dequantize().data, dout
+            ),
+            "qmatmul{bits} diverged from the qdq->f32 path"
+        );
+        let st = bench(&format!("qmatmul{bits}_fused"), || {
+            kernels::qmatmul(&xb.data, rows, &pm)
+        });
+        println!(
+            "{:<44} weight bytes/matmul {:>9}  read {:.2} GB/s \
+             ({:.1}x fewer bytes than f32)",
+            "",
+            pm.heap_bytes(),
+            gbs(pm.heap_bytes(), st.mean.as_secs_f64()),
+            dense_bytes as f64 / pm.heap_bytes() as f64
+        );
+    }
 
     section("SignRound HLO step (Pallas qdq fwd + STE bwd + SignSGD)");
     match Session::open_default() {

@@ -1,6 +1,7 @@
 //! Serving bench: end-to-end latency/throughput of the threaded batching
-//! server under fp16 vs mixed-precision weights, and the batch-linger
-//! policy sweep (throughput vs tail latency).
+//! server under fp16 vs mixed-precision weights (qdq→f32 vs bit-packed
+//! execution, with *measured* resident expert bytes), and the
+//! batch-linger policy sweep (throughput vs tail latency).
 
 use mopeq::benchx::section;
 use mopeq::cluster::Granularity;
@@ -8,9 +9,9 @@ use mopeq::config;
 use mopeq::coordinator::{quantize_experts, Quantizer};
 use mopeq::data::{gen_sample, Task};
 use mopeq::importance::hessian_closed_form;
-use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
 use mopeq::rng::Rng;
-use mopeq::serve::{BatchPolicy, ServerHandle};
+use mopeq::serve::{expert_bytes, BatchPolicy, ServerHandle};
 use std::time::Duration;
 
 fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
@@ -19,9 +20,8 @@ fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
     (cfg, ws)
 }
 
-fn run(cfg: &config::ModelConfig, ws: WeightStore, policy: BatchPolicy,
-       n: usize) -> anyhow::Result<mopeq::serve::ServerStats> {
-    let handle = ServerHandle::start(cfg.clone(), ws, policy)?;
+fn drive(handle: ServerHandle, cfg: &config::ModelConfig, n: usize)
+         -> anyhow::Result<mopeq::serve::ServerStats> {
     let mut rng = Rng::new(9).derive("serving-bench");
     let mut pending = Vec::with_capacity(n);
     for _ in 0..n {
@@ -34,36 +34,63 @@ fn run(cfg: &config::ModelConfig, ws: WeightStore, policy: BatchPolicy,
     handle.shutdown()
 }
 
+fn run(cfg: &config::ModelConfig, ws: WeightStore, policy: BatchPolicy,
+       n: usize) -> anyhow::Result<mopeq::serve::ServerStats> {
+    drive(ServerHandle::start(cfg.clone(), ws, policy)?, cfg, n)
+}
+
 fn main() -> anyhow::Result<()> {
     let n = if std::env::var_os("MOPEQ_FULL").is_some() { 256 } else { 64 };
 
     section("precision maps (batch linger 2ms)");
     let (cfg, ws) = fresh_store(0);
     let sens = hessian_closed_form(&ws, &cfg)?;
-    let mopeq_bits = mopeq::cluster::assign_map(
-        &sens.values, &[2, 3, 4], Granularity::ModelWise, 0);
-    for label in ["fp16", "uniform4-rtn", "mopeq-mixed-rtn"] {
+    let mopeq_map = PrecisionMap {
+        bits: mopeq::cluster::assign_map(
+            &sens.values, &[2, 3, 4], Granularity::ModelWise, 0),
+    };
+    for label in ["fp16", "uniform4-rtn", "mopeq-mixed-rtn",
+                  "mopeq-mixed-packed"] {
         let (_, mut w) = fresh_store(0);
-        match label {
+        let s = match label {
             "uniform4-rtn" => {
                 quantize_experts(None, &cfg, &mut w,
                                  &PrecisionMap::uniform(&cfg, 4),
                                  &Quantizer::Rtn, None)?;
+                run(&cfg, w, BatchPolicy::default(), n)?
             }
             "mopeq-mixed-rtn" => {
-                quantize_experts(None, &cfg, &mut w,
-                                 &PrecisionMap { bits: mopeq_bits.clone() },
+                quantize_experts(None, &cfg, &mut w, &mopeq_map,
                                  &Quantizer::Rtn, None)?;
+                run(&cfg, w, BatchPolicy::default(), n)?
             }
-            _ => {}
-        }
-        let s = run(&cfg, w, BatchPolicy::default(), n)?;
+            "mopeq-mixed-packed" => {
+                // same codes as the rtn row, served bit-packed
+                let store = PackedStore::rtn(&cfg, &w, &mopeq_map)?;
+                drive(
+                    ServerHandle::start_packed(
+                        cfg.clone(), w, store, BatchPolicy::default())?,
+                    &cfg, n,
+                )?
+            }
+            _ => run(&cfg, w, BatchPolicy::default(), n)?,
+        };
         println!(
             "{label:<18} {:>4} reqs  fill {:.2}  p50 {:?}  p95 {:?}  \
-             {:>7.1} req/s",
-            s.requests, s.mean_fill, s.p50, s.p95, s.throughput_rps
+             {:>7.1} req/s  experts resident {:>8} B ({} f32 tensors)",
+            s.requests, s.mean_fill, s.p50, s.p95, s.throughput_rps,
+            s.resident.expert_accounted_bytes,
+            s.resident.dense_expert_tensors,
         );
     }
+    let accounted: usize = mopeq_map
+        .iter_experts()
+        .map(|(_, b)| expert_bytes(&cfg, b))
+        .sum();
+    println!(
+        "(SizePolicy accounting for the mixed map: {accounted} B — the \
+         packed row's resident bytes must equal it)"
+    );
 
     section("batch linger sweep (fp16)");
     for linger_ms in [0u64, 2, 8] {

@@ -18,6 +18,7 @@
 //! SignRound/GPTQ/AWQ calibration capture.
 
 use crate::config::ModelConfig;
+use crate::moe::packed::PackedStore;
 use crate::moe::WeightStore;
 use crate::runtime::{Prepared, Session, Value};
 use crate::tensor::Tensor;
@@ -42,13 +43,19 @@ struct DenseArgs {
     down: Prepared,
 }
 
+/// One MoE layer's routed-expert weights as prepared backend arguments:
+/// the classic three stacked f32 tensors, or a single bit-packed handle
+/// (`Value::Packed`) behind which no dense f32 expert copy exists.
+enum ExpertArgs {
+    Dense { gate: Prepared, up: Prepared, down: Prepared },
+    Packed(Prepared),
+}
+
 struct MoeArgs {
     attn: AttnArgs,
     ln2: Prepared,
     router: Prepared,
-    gate: Prepared,
-    up: Prepared,
-    down: Prepared,
+    experts: ExpertArgs,
     shared: Option<(Prepared, Prepared, Prepared)>,
 }
 
@@ -74,6 +81,32 @@ impl MoeKernel {
             MoeKernel::Sparse => "moe_layer_sparse",
         }
     }
+}
+
+/// What the executor actually holds resident for serving — *measured*
+/// from the prepared argument handles, not derived from a policy, so
+/// the serve/offload reports show real residency instead of
+/// hypothetical accounting (host-side handles; device-resident XLA
+/// buffers report 0 here).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidentReport {
+    /// f32 bytes of every non-expert weight (embeddings, attention,
+    /// router, shared experts, dense FFN, norms, head)
+    pub backbone_bytes: usize,
+    /// wire-accounted expert bytes. For a packed deployment built by
+    /// the plain quantizers (RTN / GPTQ / SignRound) this equals the
+    /// `SizePolicy` accounting (`serve::expert_bytes` summed over the
+    /// precision map) by construction; AWQ-packed experts additionally
+    /// count their fp16 row scales (real wire cost the policy formula
+    /// does not model). Dense f32 experts are accounted at fp16 wire
+    /// cost (2 B/param), matching `SizePolicy` for `bits >= 16`.
+    pub expert_accounted_bytes: usize,
+    /// actual expert heap bytes (u32 padding + f32 scale/zp for packed
+    /// experts; the f32 tensors themselves for dense)
+    pub expert_heap_bytes: usize,
+    /// dense f32 expert matrices resident — 0 when serving packed with
+    /// a fully-quantized precision map
+    pub dense_expert_tensors: usize,
 }
 
 /// Output of one forward pass.
@@ -117,6 +150,69 @@ impl<'a> ModelExecutor<'a> {
         ws: &WeightStore,
         kernel: MoeKernel,
     ) -> Result<ModelExecutor<'a>> {
+        let entry = format!("{}/{}", cfg.moe_signature(), kernel.entry());
+        Self::build(session, cfg, ws, entry, |l| {
+            Ok(ExpertArgs::Dense {
+                gate: session
+                    .prepare_owned(Value::F32(ws.get("moe.gate")?.index0(l)))?,
+                up: session
+                    .prepare_owned(Value::F32(ws.get("moe.up")?.index0(l)))?,
+                down: session
+                    .prepare_owned(Value::F32(ws.get("moe.down")?.index0(l)))?,
+            })
+        })
+    }
+
+    /// Serve straight from a bit-packed expert store: the MoE layers
+    /// run the `moe_layer_packed` lowering and **no dense f32 expert
+    /// tensor is prepared** — `ws` only provides the backbone
+    /// (embeddings, attention, router, shared experts, head), so a
+    /// store whose experts were [`WeightStore::strip_experts`]-ed works.
+    pub fn with_packed(
+        session: &'a Session,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        packed: &PackedStore,
+    ) -> Result<ModelExecutor<'a>> {
+        if packed.variant != cfg.name {
+            bail!(
+                "packed store is for `{}`, config is `{}`",
+                packed.variant,
+                cfg.name
+            );
+        }
+        if packed.moe_layers() != cfg.moe_layers()
+            || packed.experts_per_layer() != cfg.experts
+        {
+            bail!(
+                "packed store shape {}x{} != config {}x{}",
+                packed.moe_layers(),
+                packed.experts_per_layer(),
+                cfg.moe_layers(),
+                cfg.experts
+            );
+        }
+        let entry = format!("{}/moe_layer_packed", cfg.moe_signature());
+        Self::build(session, cfg, ws, entry, |l| {
+            Ok(ExpertArgs::Packed(
+                session.prepare_owned(Value::Packed(packed.layer(l)))?,
+            ))
+        })
+    }
+
+    /// Shared construction: slices every backbone argument once and
+    /// delegates the per-layer routed-expert arguments to
+    /// `experts_for`.
+    fn build<F>(
+        session: &'a Session,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        moe_entry: String,
+        mut experts_for: F,
+    ) -> Result<ModelExecutor<'a>>
+    where
+        F: FnMut(usize) -> Result<ExpertArgs>,
+    {
         if ws.variant != cfg.name {
             bail!("weight store is for `{}`, config is `{}`", ws.variant, cfg.name);
         }
@@ -158,16 +254,14 @@ impl<'a> ModelExecutor<'a> {
                 attn: attn_for("moe", l)?,
                 ln2: val(ws.get("moe.ln2")?.index0(l))?,
                 router: val(ws.get("moe.router")?.index0(l))?,
-                gate: val(ws.get("moe.gate")?.index0(l))?,
-                up: val(ws.get("moe.up")?.index0(l))?,
-                down: val(ws.get("moe.down")?.index0(l))?,
+                experts: experts_for(l)?,
                 shared,
             });
         }
         Ok(ModelExecutor {
             session,
             cfg: cfg.clone(),
-            moe_entry: format!("{}/{}", cfg.moe_signature(), kernel.entry()),
+            moe_entry,
             embed_table: val(ws.get("embed.table")?.clone())?,
             embed_pos: val(ws.get("embed.pos")?.clone())?,
             dense,
@@ -175,6 +269,68 @@ impl<'a> ModelExecutor<'a> {
             final_ln: val(ws.get("final.ln")?.clone())?,
             head: val(ws.get("final.head")?.clone())?,
         })
+    }
+
+    /// Measure the weight bytes this executor holds resident (see
+    /// [`ResidentReport`]).
+    pub fn resident_report(&self) -> ResidentReport {
+        fn f32_bytes(p: &Prepared) -> usize {
+            p.host_value()
+                .and_then(|v| v.as_f32().ok())
+                .map_or(0, |t| t.len() * 4)
+        }
+        fn attn_bytes(a: &AttnArgs) -> usize {
+            f32_bytes(&a.ln)
+                + f32_bytes(&a.wq)
+                + f32_bytes(&a.wk)
+                + f32_bytes(&a.wv)
+                + f32_bytes(&a.wo)
+        }
+        let mut r = ResidentReport {
+            backbone_bytes: f32_bytes(&self.embed_table)
+                + f32_bytes(&self.embed_pos)
+                + f32_bytes(&self.final_ln)
+                + f32_bytes(&self.head),
+            ..ResidentReport::default()
+        };
+        for d in &self.dense {
+            r.backbone_bytes += attn_bytes(&d.attn)
+                + f32_bytes(&d.ln2)
+                + f32_bytes(&d.gate)
+                + f32_bytes(&d.up)
+                + f32_bytes(&d.down);
+        }
+        for m in &self.moe {
+            r.backbone_bytes += attn_bytes(&m.attn)
+                + f32_bytes(&m.ln2)
+                + f32_bytes(&m.router);
+            if let Some((sg, su, sd)) = &m.shared {
+                r.backbone_bytes +=
+                    f32_bytes(sg) + f32_bytes(su) + f32_bytes(sd);
+            }
+            match &m.experts {
+                ExpertArgs::Dense { gate, up, down } => {
+                    let b =
+                        f32_bytes(gate) + f32_bytes(up) + f32_bytes(down);
+                    // wire accounting stores dense weights as fp16
+                    // (2 B/param), same as SizePolicy at bits >= 16 and
+                    // as PackedMat::Dense::size_bits
+                    r.expert_accounted_bytes += b / 2;
+                    r.expert_heap_bytes += b;
+                    r.dense_expert_tensors += 3;
+                }
+                ExpertArgs::Packed(p) => {
+                    if let Some(pl) =
+                        p.host_value().and_then(|v| v.as_packed().ok())
+                    {
+                        r.expert_accounted_bytes += pl.accounted_bytes();
+                        r.expert_heap_bytes += pl.heap_bytes();
+                        r.dense_expert_tensors += pl.dense_mats();
+                    }
+                }
+            }
+        }
+        r
     }
 
     /// Pre-compile all entries this executor needs (so serving latency
@@ -239,9 +395,14 @@ impl<'a> ModelExecutor<'a> {
             let xp = self.session.prepare_owned(x)?;
             x = self.attn(&xp, &m.attn)?;
             let xp = self.session.prepare_owned(x)?;
-            let mut args: Vec<&Prepared> = vec![
-                &xp, &vis, &m.ln2, &m.router, &m.gate, &m.up, &m.down,
-            ];
+            let mut args: Vec<&Prepared> =
+                vec![&xp, &vis, &m.ln2, &m.router];
+            match &m.experts {
+                ExpertArgs::Dense { gate, up, down } => {
+                    args.extend([gate, up, down]);
+                }
+                ExpertArgs::Packed(p) => args.push(p),
+            }
             if let Some((sg, su, sd)) = &m.shared {
                 args.extend([sg, su, sd]);
             }

@@ -7,10 +7,10 @@ pub mod executor;
 pub mod quantize;
 pub mod signround;
 
-pub use executor::{ForwardOutput, ModelExecutor, MoeKernel};
+pub use executor::{ForwardOutput, ModelExecutor, MoeKernel, ResidentReport};
 pub use quantize::{
-    capture_calib, quantize_backbone, quantize_experts, LayerCalib,
-    QuantStats, Quantizer,
+    capture_calib, pack_experts, quantize_backbone, quantize_experts,
+    LayerCalib, QuantStats, Quantizer,
 };
 pub use signround::{signround_optimize, SignRoundConfig};
 

@@ -12,8 +12,11 @@ use crate::config::ModelConfig;
 use crate::coordinator::executor::ModelExecutor;
 use crate::coordinator::signround::{signround_optimize, SignRoundConfig};
 use crate::data::{gen_sample, Task};
+use crate::moe::packed::{PackedExpert, PackedMat, PackedStore};
 use crate::moe::{ExpertId, ExpertMat, PrecisionMap, WeightStore};
-use crate::quant::{awq::awq_quantize, gptq::gptq_quantize, rtn_quantize};
+use crate::quant::awq::{awq_quantize, QuantizedMatrixAwq};
+use crate::quant::kernels::PackedMatrix;
+use crate::quant::{gptq::gptq_quantize, rtn_quantize, QuantizedMatrix};
 use crate::rng::Rng;
 use crate::runtime::Session;
 use crate::tensor::Tensor;
@@ -141,61 +144,95 @@ fn subsample(x: &Tensor<f32>, rows: usize, seed: u64) -> Tensor<f32> {
     Tensor::new(&[rows, d], data)
 }
 
-/// Quantize one matrix with the chosen quantizer, returning dequantized
-/// weights.
-fn quantize_mat(
+/// Integer-code result of one quantized matrix — plain for RTN / GPTQ /
+/// SignRound, AWQ carries its per-row scale.
+enum Codes {
+    Plain(QuantizedMatrix),
+    Awq(QuantizedMatrixAwq),
+}
+
+impl Codes {
+    fn dequantize(&self) -> Tensor<f32> {
+        match self {
+            Codes::Plain(qm) => qm.dequantize(),
+            Codes::Awq(aq) => aq.dequantize(),
+        }
+    }
+
+    fn into_packed(self) -> Result<PackedMatrix> {
+        match self {
+            Codes::Plain(qm) => PackedMatrix::from_quantized(&qm),
+            Codes::Awq(aq) => PackedMatrix::from_awq(&aq),
+        }
+    }
+}
+
+/// Quantize one matrix with the chosen quantizer, returning the integer
+/// codes (the packed store and the qdq→f32 path both derive from these
+/// same codes — that is what makes their parity structural).
+fn quantize_mat_codes(
     session: Option<&Session>,
     w: &Tensor<f32>,
     x: &Tensor<f32>,
     bits: u8,
     group: usize,
     q: &Quantizer,
-) -> Result<Tensor<f32>> {
+) -> Result<Codes> {
     let grp = if w.shape[0] % group == 0 { group } else { w.shape[0] };
     Ok(match q {
-        Quantizer::Rtn => rtn_quantize(w, bits, grp).dequantize(),
+        Quantizer::Rtn => Codes::Plain(rtn_quantize(w, bits, grp)),
         Quantizer::SignRound(cfg) => {
             let session = session
                 .ok_or_else(|| anyhow::anyhow!("SignRound needs a session"))?;
             let xs = subsample(x, cfg.calib_rows, 0x5157);
-            signround_optimize(session, w, &xs, bits, grp, cfg)?
-                .qm
-                .dequantize()
+            Codes::Plain(signround_optimize(session, w, &xs, bits, grp, cfg)?.qm)
         }
         Quantizer::Gptq { damp } => {
-            gptq_quantize(w, x, bits, grp, *damp)?.dequantize()
+            Codes::Plain(gptq_quantize(w, x, bits, grp, *damp)?)
         }
         Quantizer::Awq { alpha } => {
-            awq_quantize(w, x, bits, grp, *alpha).dequantize()
+            Codes::Awq(awq_quantize(w, x, bits, grp, *alpha))
         }
     })
 }
 
-/// Quantize every routed expert per the precision map, writing
-/// dequantized weights back into the store.
-pub fn quantize_experts(
+/// Quantize every routed expert per the precision map into a bit-packed
+/// [`PackedStore`] — the execution form a quantized deployment serves
+/// from, holding no dense f32 expert copies (fp16-mapped experts stay
+/// dense by design). `ws` is only read.
+pub fn pack_experts(
     session: Option<&Session>,
     cfg: &ModelConfig,
-    ws: &mut WeightStore,
+    ws: &WeightStore,
     pmap: &PrecisionMap,
     quantizer: &Quantizer,
     calib: Option<&LayerCalib>,
-) -> Result<QuantStats> {
+) -> Result<(PackedStore, QuantStats)> {
     if quantizer.needs_calib() && calib.is_none() {
         bail!("{} requires calibration data", quantizer.label());
     }
     let mut stats = QuantStats::default();
     let mut mse_acc = 0.0f64;
+    let mut layers = Vec::with_capacity(cfg.moe_layers());
     for layer in 0..cfg.moe_layers() {
         let x_layer = calib.map(|c| &c.layers[layer]);
+        let mut experts = Vec::with_capacity(cfg.experts);
         for expert in 0..cfg.experts {
             let id = ExpertId { layer, expert };
             let bits = pmap.get(id);
-            if bits >= 16 {
-                continue; // fp16 expert: leave weights untouched
-            }
             let gate = ws.expert_mat(id, ExpertMat::Gate)?;
             let up = ws.expert_mat(id, ExpertMat::Up)?;
+            let down = ws.expert_mat(id, ExpertMat::Down)?;
+            if bits >= 16 {
+                // fp16 expert: dense, no quantization
+                experts.push(PackedExpert {
+                    bits,
+                    gate: PackedMat::Dense(gate),
+                    up: PackedMat::Dense(up),
+                    down: PackedMat::Dense(down),
+                });
+                continue;
+            }
             // gate/up share the layer input; down sees the expert act
             let x_gate;
             let x_down;
@@ -210,22 +247,54 @@ pub fn quantize_experts(
                     x_down = Tensor::zeros(&[1, cfg.d_expert]);
                 }
             }
-            for mat in ExpertMat::ALL {
-                let w = ws.expert_mat(id, mat)?;
-                let x = match mat {
-                    ExpertMat::Down => &x_down,
-                    _ => &x_gate,
-                };
-                let wq = quantize_mat(session, &w, x, bits, cfg.group,
-                                      quantizer)?;
-                mse_acc += wq.mse(&w) as f64;
-                ws.set_expert_mat(id, mat, &wq)?;
+            let mut mats = Vec::with_capacity(3);
+            for (w, x) in [(&gate, &x_gate), (&up, &x_gate), (&down, &x_down)]
+            {
+                let codes = quantize_mat_codes(session, w, x, bits,
+                                               cfg.group, quantizer)?;
+                let deq = codes.dequantize();
+                mse_acc += deq.mse(w) as f64;
+                // widths outside the packed u32 layout (e.g. 5/6-bit)
+                // still quantize — they ride dense, reusing the deq
+                mats.push(if crate::quant::pack::packable(bits) {
+                    PackedMat::Packed(codes.into_packed()?)
+                } else {
+                    PackedMat::Dense(deq)
+                });
                 stats.matrices += 1;
             }
+            let down_m = mats.pop().unwrap();
+            let up_m = mats.pop().unwrap();
+            let gate_m = mats.pop().unwrap();
+            experts.push(PackedExpert {
+                bits,
+                gate: gate_m,
+                up: up_m,
+                down: down_m,
+            });
             stats.experts += 1;
         }
+        layers.push(experts);
     }
     stats.mean_weight_mse = mse_acc / stats.matrices.max(1) as f64;
+    Ok((PackedStore::new(cfg.name, layers), stats))
+}
+
+/// Quantize every routed expert per the precision map, writing
+/// dequantized weights back into the store — the legacy qdq→f32 path,
+/// now derived from the *same* packed codes as [`pack_experts`] so the
+/// two serving paths cannot diverge.
+pub fn quantize_experts(
+    session: Option<&Session>,
+    cfg: &ModelConfig,
+    ws: &mut WeightStore,
+    pmap: &PrecisionMap,
+    quantizer: &Quantizer,
+    calib: Option<&LayerCalib>,
+) -> Result<QuantStats> {
+    let (store, stats) =
+        pack_experts(session, cfg, ws, pmap, quantizer, calib)?;
+    store.write_dequantized(ws)?;
     Ok(stats)
 }
 
@@ -297,6 +366,36 @@ mod tests {
             .unwrap();
         assert!(q.max_abs_diff(&orig) > 0.0);
         assert!(stats.mean_weight_mse > 0.0);
+    }
+
+    #[test]
+    fn pack_experts_and_qdq_path_share_codes() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 7);
+        let mut pmap = PrecisionMap::uniform(&cfg, 2);
+        for l in 0..cfg.moe_layers() {
+            for e in 0..cfg.experts {
+                pmap.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+            }
+        }
+        let (store, stats) =
+            pack_experts(None, &cfg, &ws, &pmap, &Quantizer::Rtn, None)
+                .unwrap();
+        assert_eq!(stats.experts, cfg.total_experts());
+        assert_eq!(store.dense_expert_count(), 0);
+        assert_eq!(store.precision_map(), pmap);
+        // the qdq->f32 store derived from the same codes equals what
+        // quantize_experts writes
+        let mut via_store = WeightStore::init(&cfg, &local_meta(&cfg), 7);
+        store.write_dequantized(&mut via_store).unwrap();
+        let mut via_quant = WeightStore::init(&cfg, &local_meta(&cfg), 7);
+        quantize_experts(None, &cfg, &mut via_quant, &pmap,
+                         &Quantizer::Rtn, None)
+            .unwrap();
+        for name in ["moe.gate", "moe.up", "moe.down"] {
+            assert_eq!(via_store.get(name).unwrap(),
+                       via_quant.get(name).unwrap());
+        }
     }
 
     #[test]

@@ -370,7 +370,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let p = pipeline(args)?;
     let n = args.usize_flag("requests", 64)?;
     let ws = p.clone_weights();
-    let handle = ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?;
+    // --packed: assign a MoPEQ 2/3/4-bit map (closed-form Hessian,
+    // model-wise), pack every expert, and serve with no f32 expert copy
+    let packed_map = if args.switch("packed") {
+        let sens =
+            mopeq::importance::hessian_closed_form(&p.ws, &p.cfg)?;
+        Some(p.assign(&sens, Granularity::ModelWise))
+    } else {
+        None
+    };
+    let handle = match &packed_map {
+        Some(pmap) => {
+            let store = mopeq::moe::PackedStore::rtn(&p.cfg, &p.ws, pmap)?;
+            ServerHandle::start_packed(
+                p.cfg.clone(),
+                ws,
+                store,
+                BatchPolicy::default(),
+            )?
+        }
+        None => {
+            ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?
+        }
+    };
     let mut rng = mopeq::rng::Rng::new(p.seed).derive("serve-cli");
     let mut pending = Vec::new();
     for _ in 0..n {
@@ -395,6 +417,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.p50, stats.p95, stats.p99, stats.throughput_rps
     );
     println!("accuracy {:.3}", correct as f64 / n as f64);
+    let r = &stats.resident;
+    println!(
+        "resident weights: backbone {} B, experts {} B ({} B heap, {} \
+         dense f32 expert tensors)",
+        r.backbone_bytes,
+        r.expert_accounted_bytes,
+        r.expert_heap_bytes,
+        r.dense_expert_tensors
+    );
+    if let Some(pmap) = &packed_map {
+        let accounted: usize = pmap
+            .iter_experts()
+            .map(|(_, b)| mopeq::serve::expert_bytes(&p.cfg, b))
+            .sum();
+        println!(
+            "SizePolicy expert accounting: {} B — resident {} it \
+             (mean {:.2} bits/expert weight)",
+            accounted,
+            if accounted == r.expert_accounted_bytes {
+                "matches"
+            } else {
+                "DIVERGES FROM"
+            },
+            pmap.mean_bits()
+        );
+    }
     Ok(())
 }
 

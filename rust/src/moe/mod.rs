@@ -2,9 +2,13 @@
 //! `model.param_specs`), per-expert precision maps, and the exact
 //! bit-accounting behind the "Model Size" columns of Tables 2–5.
 
+pub mod packed;
 pub mod size;
 
-pub use size::{model_size_bits, model_size_mb, SizePolicy};
+pub use packed::{PackedExpert, PackedLayerExperts, PackedMat, PackedStore};
+pub use size::{
+    expert_size_bits, model_size_bits, model_size_mb, SizePolicy,
+};
 
 use crate::config::ModelConfig;
 use crate::rng::Rng;
@@ -188,6 +192,27 @@ impl WeightStore {
     /// Total parameter element count.
     pub fn total_params(&self) -> usize {
         self.params.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Drop the stacked f32 expert tensors (after they were packed into
+    /// a [`packed::PackedStore`]) so a packed deployment holds **no**
+    /// dense expert copies — the runtime side of the paper's memory
+    /// claim. Backbone/router/shared weights are untouched.
+    pub fn strip_experts(&mut self) {
+        for which in ExpertMat::ALL {
+            if let Some(&i) = self.index.get(which.param_name()) {
+                self.params[i].1 = Tensor::zeros(&[0]);
+            }
+        }
+    }
+
+    /// Whether any dense f32 expert tensor is still resident.
+    pub fn has_expert_tensors(&self) -> bool {
+        ExpertMat::ALL.iter().any(|w| {
+            self.index
+                .get(w.param_name())
+                .is_some_and(|&i| !self.params[i].1.is_empty())
+        })
     }
 
     // ---------------------------------------------------------- binary io

@@ -1,0 +1,423 @@
+//! Packed-weight expert store: every routed expert's three FC matrices
+//! held as bit-packed `u32` words at the expert's assigned MoPEQ bit
+//! width — the runtime realization of the paper's memory-footprint
+//! claim. Serving from a [`PackedStore`] keeps **no dense f32 expert
+//! copies** anywhere: the executor hands each MoE layer's experts to
+//! the backend as one packed argument handle and the fused
+//! `quant::kernels::qmatmul{2,3,4,8}` kernels read the packed words
+//! directly.
+//!
+//! fp16 experts (`bits >= 16` in the precision map) stay dense by
+//! design — a mixed 2/3/4-bit MoPEQ allocation packs every expert and
+//! [`PackedStore::dense_expert_count`] returns 0 (asserted in CI by the
+//! e2e example).
+
+use crate::config::ModelConfig;
+use crate::moe::{ExpertId, ExpertMat, PrecisionMap, WeightStore};
+use crate::quant::kernels::{matmul_f32, qmatmul, silu, PackedMatrix};
+use crate::quant::rtn_quantize;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One expert FC matrix: packed codes, or a dense f32 fallback for
+/// fp16 experts.
+#[derive(Clone, Debug)]
+pub enum PackedMat {
+    Packed(PackedMatrix),
+    Dense(Tensor<f32>),
+}
+
+impl PackedMat {
+    pub fn din(&self) -> usize {
+        match self {
+            PackedMat::Packed(pm) => pm.din,
+            PackedMat::Dense(t) => t.shape[0],
+        }
+    }
+
+    pub fn dout(&self) -> usize {
+        match self {
+            PackedMat::Packed(pm) => pm.dout,
+            PackedMat::Dense(t) => t.shape[1],
+        }
+    }
+
+    /// `x[rows, din] @ W` without ever materializing a dense copy of a
+    /// packed matrix (fused kernel); the dense fallback runs the same
+    /// `matmul_f32` the native interpreter uses, so both arms are
+    /// bit-exact vs the qdq→f32 path.
+    pub fn matmul(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        match self {
+            PackedMat::Packed(pm) => qmatmul(x, rows, pm),
+            PackedMat::Dense(t) => {
+                matmul_f32(x, rows, t.shape[0], &t.data, t.shape[1])
+            }
+        }
+    }
+
+    /// Wire-format storage bits (the Tables 2–5 formula; fp16 for
+    /// dense).
+    pub fn size_bits(&self) -> usize {
+        match self {
+            PackedMat::Packed(pm) => pm.size_bits(),
+            PackedMat::Dense(t) => t.len() * 16,
+        }
+    }
+
+    /// Actual resident heap bytes.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            PackedMat::Packed(pm) => pm.heap_bytes(),
+            PackedMat::Dense(t) => t.len() * 4,
+        }
+    }
+}
+
+/// One routed expert's three packed FC matrices + its assigned width.
+#[derive(Clone, Debug)]
+pub struct PackedExpert {
+    pub bits: u8,
+    pub gate: PackedMat,
+    pub up: PackedMat,
+    pub down: PackedMat,
+}
+
+impl PackedExpert {
+    /// SwiGLU forward `(silu(h@gate) * (h@up)) @ down` straight from
+    /// packed weights — mirrors the native backend's `expert_ffn`
+    /// op-for-op (same silu, same matmul accumulation order).
+    pub fn ffn(&self, h: &[f32], rows: usize) -> Vec<f32> {
+        let hg = self.gate.matmul(h, rows);
+        let hu = self.up.matmul(h, rows);
+        let act: Vec<f32> =
+            hg.iter().zip(&hu).map(|(&g, &u)| silu(g) * u).collect();
+        self.down.matmul(&act, rows)
+    }
+
+    fn mats(&self) -> [&PackedMat; 3] {
+        [&self.gate, &self.up, &self.down]
+    }
+
+    /// How many of the three matrices are dense f32 (0 when packed).
+    pub fn dense_mats(&self) -> usize {
+        self.mats()
+            .iter()
+            .filter(|m| matches!(m, PackedMat::Dense(_)))
+            .count()
+    }
+
+    /// Wire-accounted bytes — equals `serve::offload::expert_bytes` for
+    /// this expert's width by construction (same formula, same per-
+    /// expert rounding) when packed by a plain quantizer; AWQ-packed
+    /// matrices add their fp16 row scales on top (real wire cost the
+    /// policy formula does not model).
+    pub fn accounted_bytes(&self) -> usize {
+        self.mats().iter().map(|m| m.size_bits()).sum::<usize>().div_ceil(8)
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.mats().iter().map(|m| m.heap_bytes()).sum()
+    }
+}
+
+/// All experts of one MoE layer — the unit the executor prepares and
+/// the backend consumes as a single `Value::Packed` argument.
+#[derive(Debug)]
+pub struct PackedLayerExperts {
+    /// registry-visible shape (`[n_experts]`) reported by
+    /// `Value::shape`
+    pub shape: Vec<usize>,
+    pub experts: Vec<PackedExpert>,
+}
+
+impl PackedLayerExperts {
+    pub fn new(experts: Vec<PackedExpert>) -> PackedLayerExperts {
+        PackedLayerExperts { shape: vec![experts.len()], experts }
+    }
+
+    pub fn accounted_bytes(&self) -> usize {
+        self.experts.iter().map(|e| e.accounted_bytes()).sum()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.experts.iter().map(|e| e.heap_bytes()).sum()
+    }
+
+    pub fn dense_mats(&self) -> usize {
+        self.experts.iter().map(|e| e.dense_mats()).sum()
+    }
+}
+
+/// Per-(layer, expert) packed weights for a whole model — what a
+/// quantized deployment serves from instead of dequantized f32 copies.
+pub struct PackedStore {
+    pub variant: String,
+    layers: Vec<Arc<PackedLayerExperts>>,
+}
+
+impl PackedStore {
+    pub fn new(
+        variant: impl Into<String>,
+        layers: Vec<Vec<PackedExpert>>,
+    ) -> PackedStore {
+        PackedStore {
+            variant: variant.into(),
+            layers: layers
+                .into_iter()
+                .map(|e| Arc::new(PackedLayerExperts::new(e)))
+                .collect(),
+        }
+    }
+
+    /// RTN-quantize + pack every routed expert per the precision map
+    /// (calibration-free builder; the calibrated quantizers go through
+    /// `coordinator::quantize::pack_experts`).
+    pub fn rtn(
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        pmap: &PrecisionMap,
+    ) -> Result<PackedStore> {
+        let mut layers = Vec::with_capacity(cfg.moe_layers());
+        for layer in 0..cfg.moe_layers() {
+            let mut experts = Vec::with_capacity(cfg.experts);
+            for expert in 0..cfg.experts {
+                let id = ExpertId { layer, expert };
+                let bits = pmap.get(id);
+                let mut mats = Vec::with_capacity(3);
+                for which in ExpertMat::ALL {
+                    let w = ws.expert_mat(id, which)?;
+                    mats.push(if bits >= 16 {
+                        PackedMat::Dense(w)
+                    } else {
+                        let grp = if w.shape[0] % cfg.group == 0 {
+                            cfg.group
+                        } else {
+                            w.shape[0]
+                        };
+                        let qm = rtn_quantize(&w, bits, grp);
+                        if crate::quant::pack::packable(bits) {
+                            PackedMat::Packed(PackedMatrix::from_quantized(
+                                &qm,
+                            )?)
+                        } else {
+                            // e.g. 6-bit: quantized but carried dense
+                            PackedMat::Dense(qm.dequantize())
+                        }
+                    });
+                }
+                let down = mats.pop().unwrap();
+                let up = mats.pop().unwrap();
+                let gate = mats.pop().unwrap();
+                experts.push(PackedExpert { bits, gate, up, down });
+            }
+            layers.push(experts);
+        }
+        Ok(PackedStore::new(cfg.name, layers))
+    }
+
+    pub fn moe_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn experts_per_layer(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.experts.len())
+    }
+
+    /// One layer's experts as the shared handle the executor prepares.
+    pub fn layer(&self, l: usize) -> Arc<PackedLayerExperts> {
+        self.layers[l].clone()
+    }
+
+    pub fn expert(&self, id: ExpertId) -> &PackedExpert {
+        &self.layers[id.layer].experts[id.expert]
+    }
+
+    pub fn bits(&self, id: ExpertId) -> u8 {
+        self.expert(id).bits
+    }
+
+    /// The precision map this store realizes.
+    pub fn precision_map(&self) -> PrecisionMap {
+        PrecisionMap {
+            bits: self
+                .layers
+                .iter()
+                .map(|l| l.experts.iter().map(|e| e.bits).collect())
+                .collect(),
+        }
+    }
+
+    /// Experts still held as dense f32 (fp16-mapped ones, plus any
+    /// width outside the packed u32 layout); 0 for a fully mixed
+    /// 2/3/4-bit MoPEQ allocation.
+    pub fn dense_expert_count(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .filter(|e| e.dense_mats() > 0)
+            .count()
+    }
+
+    /// Wire-accounted resident bytes — equal to the SizePolicy expert
+    /// accounting (sum of `serve::offload::expert_bytes`) by
+    /// construction for RTN / GPTQ / SignRound stores; AWQ stores count
+    /// their fp16 row scales on top.
+    pub fn accounted_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.accounted_bytes()).sum()
+    }
+
+    /// Actual heap bytes (u32 padding + f32 scale/zp vectors included).
+    pub fn heap_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.heap_bytes()).sum()
+    }
+
+    /// Write the f32 reconstruction of every expert back into a weight
+    /// store — the legacy qdq→f32 serving path, derived from the *same*
+    /// codes, which is what makes the golden packed-vs-qdq parity
+    /// structural. Dense entries are written as-is: a no-op for fp16
+    /// experts (they hold the original weights) and the qdq result for
+    /// non-packable widths.
+    pub fn write_dequantized(&self, ws: &mut WeightStore) -> Result<()> {
+        if ws.variant != self.variant {
+            bail!(
+                "packed store is for `{}`, weight store is `{}`",
+                self.variant,
+                ws.variant
+            );
+        }
+        for (layer, pl) in self.layers.iter().enumerate() {
+            for (expert, pe) in pl.experts.iter().enumerate() {
+                let id = ExpertId { layer, expert };
+                for (which, mat) in ExpertMat::ALL.iter().zip(pe.mats()) {
+                    match mat {
+                        PackedMat::Packed(pm) => {
+                            ws.set_expert_mat(id, *which, &pm.dequantize())?;
+                        }
+                        PackedMat::Dense(t) => {
+                            ws.set_expert_mat(id, *which, t)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::moe::local_meta;
+    use crate::quant::rtn_qdq;
+    use crate::serve::offload::expert_bytes;
+
+    fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+        let mut pm = PrecisionMap::uniform(cfg, 2);
+        for l in 0..cfg.moe_layers() {
+            for e in 0..cfg.experts {
+                pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+            }
+        }
+        pm
+    }
+
+    #[test]
+    fn rtn_store_dequantizes_to_host_rtn() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let pmap = mixed_map(&cfg);
+        let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+        assert_eq!(store.dense_expert_count(), 0);
+        assert_eq!(store.precision_map(), pmap);
+        let id = ExpertId { layer: 2, expert: 5 };
+        let w = ws.expert_mat(id, ExpertMat::Gate).unwrap();
+        let bits = pmap.get(id);
+        match &store.expert(id).gate {
+            PackedMat::Packed(pm) => {
+                assert_eq!(pm.dequantize(), rtn_qdq(&w, bits, cfg.group));
+            }
+            PackedMat::Dense(_) => panic!("expected packed gate"),
+        }
+    }
+
+    #[test]
+    fn write_dequantized_matches_expert_mats() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 1);
+        let pmap = mixed_map(&cfg);
+        let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+        let mut ws2 = WeightStore::init(&cfg, &local_meta(&cfg), 1);
+        store.write_dequantized(&mut ws2).unwrap();
+        let id = ExpertId { layer: 0, expert: 1 };
+        let got = ws2.expert_mat(id, ExpertMat::Down).unwrap();
+        let want = rtn_qdq(
+            &ws.expert_mat(id, ExpertMat::Down).unwrap(),
+            pmap.get(id),
+            cfg.group,
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fp16_experts_stay_dense_and_counted() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 2);
+        let mut pmap = mixed_map(&cfg);
+        pmap.bits[0][0] = 16;
+        pmap.bits[1][3] = 16;
+        let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+        assert_eq!(store.dense_expert_count(), 2);
+        assert_eq!(store.bits(ExpertId { layer: 0, expert: 0 }), 16);
+    }
+
+    #[test]
+    fn accounted_bytes_equal_offload_expert_bytes() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 3);
+        let pmap = mixed_map(&cfg);
+        let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+        let want: usize = pmap
+            .iter_experts()
+            .map(|(_, b)| expert_bytes(&cfg, b))
+            .sum();
+        assert_eq!(store.accounted_bytes(), want);
+        // heap differs from wire (u32 padding, f32 scales) but is the
+        // same order of magnitude and far below the f32 footprint
+        let f32_bytes = cfg.total_experts() * cfg.expert_params() * 4;
+        assert!(store.heap_bytes() < f32_bytes / 2);
+    }
+
+    #[test]
+    fn packed_ffn_matches_dense_ffn_on_dequantized_weights() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 4);
+        let pmap = mixed_map(&cfg);
+        let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+        let id = ExpertId { layer: 1, expert: 7 };
+        let pe = store.expert(id);
+        let mut rng = crate::rng::Rng::new(5);
+        let h = Tensor::randn(&mut rng, &[3, cfg.d_model], 1.0);
+        let got = pe.ffn(&h.data, 3);
+        // dense oracle on the dequantized copies
+        let g = match &pe.gate {
+            PackedMat::Packed(pm) => pm.dequantize(),
+            PackedMat::Dense(t) => t.clone(),
+        };
+        let u = match &pe.up {
+            PackedMat::Packed(pm) => pm.dequantize(),
+            PackedMat::Dense(t) => t.clone(),
+        };
+        let d = match &pe.down {
+            PackedMat::Packed(pm) => pm.dequantize(),
+            PackedMat::Dense(t) => t.clone(),
+        };
+        let hg = matmul_f32(&h.data, 3, cfg.d_model, &g.data, cfg.d_expert);
+        let hu = matmul_f32(&h.data, 3, cfg.d_model, &u.data, cfg.d_expert);
+        let act: Vec<f32> =
+            hg.iter().zip(&hu).map(|(&a, &b)| silu(a) * b).collect();
+        let want = matmul_f32(&act, 3, cfg.d_expert, &d.data, cfg.d_model);
+        assert_eq!(got, want);
+    }
+}

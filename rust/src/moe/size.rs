@@ -27,14 +27,21 @@ impl SizePolicy {
     }
 }
 
-/// Storage bits of a quantized matrix with `n` elements whose input dim
-/// is `din` (group overhead = per-group fp16 scale + b-bit zero point).
+/// Storage bits of a quantized matrix with input dim `din` (group
+/// overhead = per-group fp16 scale + b-bit zero point). Delegates to
+/// the crate-wide canonical formula so this accounting, the offload
+/// simulator's `expert_bytes` and the packed store can never disagree.
 fn quantized_bits(din: usize, dout: usize, bits: u8, group: usize) -> usize {
-    if bits >= 16 {
-        return din * dout * 16;
-    }
-    let groups = din.div_ceil(group);
-    din * dout * bits as usize + groups * dout * (16 + bits as usize)
+    crate::quant::quantized_size_bits(din, dout, bits, group)
+}
+
+/// Wire-format storage bits of one routed expert (gate + up + down) at
+/// `bits` — the per-expert term of [`model_size_bits`], and the single
+/// formula behind `serve::offload::expert_bytes` and
+/// `PackedStore::accounted_bytes`.
+pub fn expert_size_bits(cfg: &ModelConfig, bits: u8) -> usize {
+    let (d, m, g) = (cfg.d_model, cfg.d_expert, cfg.group);
+    2 * quantized_bits(d, m, bits, g) + quantized_bits(m, d, bits, g)
 }
 
 /// Total model storage in bits under a precision map + backbone policy.
@@ -132,6 +139,29 @@ mod tests {
         let mid = model_size_bits(&cfg, &pm, pol);
         assert!(lo < mid && mid < hi);
         assert_eq!(mid, (lo + hi) / 2);
+    }
+
+    #[test]
+    fn expert_term_of_model_size_is_expert_size_bits() {
+        // swapping every expert between two widths moves the total by
+        // exactly total_experts * Δexpert_size_bits — i.e. the tables'
+        // expert term IS expert_size_bits, with no hidden second formula
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let pol = SizePolicy::uniform(4, 32);
+        let lo = model_size_bits(&cfg, &PrecisionMap::uniform(&cfg, 2), pol);
+        let hi = model_size_bits(&cfg, &PrecisionMap::uniform(&cfg, 4), pol);
+        assert_eq!(
+            hi - lo,
+            cfg.total_experts()
+                * (expert_size_bits(&cfg, 4) - expert_size_bits(&cfg, 2))
+        );
+        // and the offload simulator rounds the same bits to bytes
+        for bits in [2u8, 3, 4, 8, 16] {
+            assert_eq!(
+                crate::serve::offload::expert_bytes(&cfg, bits),
+                expert_size_bits(&cfg, bits).div_ceil(8)
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Fused dequant-matmul kernels over bit-packed weights — the packed
+//! execution subsystem's hot path. A [`PackedMatrix`] keeps a quantized
+//! FC matrix as `u32` words (the `quant::pack` layout) plus per-(group,
+//! column) scale/zero-point; `qmatmul` unpacks codes in registers inside
+//! the ikj matmul loop instead of materializing an f32 weight matrix, so
+//! the weight bytes read per matmul shrink by the assigned bit width.
+//!
+//! **Parity guarantee** (asserted by `tests/packed_parity.rs` and the
+//! property tests below): for any `QuantizedMatrix` `qm`,
+//! `qmatmul(x, pack(qm))` is **bit-exact** equal to
+//! `matmul_f32(x, qm.dequantize())` — both round every weight through
+//! the identical `s * (code - zp)` f32 expression and accumulate in the
+//! identical order (p ascending, zero activations skipped), so packed
+//! serving and the legacy qdq→f32 path cannot diverge by even one ulp.
+
+use crate::quant::awq::QuantizedMatrixAwq;
+use crate::quant::{pack, quantized_size_bits, QuantizedMatrix};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// `x / (1 + e^{-x})` — the SwiGLU activation, shared with the native
+/// backend so dense and packed expert evaluation agree bit-for-bit.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// `[rows,k] @ [k,n]` on slices, ikj loop order, skipping zero
+/// activations — the canonical f32 matmul every execution path (native
+/// interpreter, packed kernels' dense fallback, parity oracles) shares.
+pub fn matmul_f32(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; rows * n];
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// One quantized FC matrix in execution form: bit-packed codes plus the
+/// group-wise affine metadata, with no dense f32 copy anywhere.
+///
+/// `words` follows the `quant::pack` layout (`[words_per_col, dout]`
+/// row-major, codes little-endian within each u32). `row_scale` is the
+/// optional AWQ per-input-channel scale whose inverse is applied at
+/// dequantization (None for RTN / GPTQ / SignRound).
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub din: usize,
+    pub dout: usize,
+    pub bits: u8,
+    pub group: usize,
+    pub words: Vec<u32>,
+    /// scales `[n_groups, dout]`
+    pub scales: Vec<f32>,
+    /// zero points `[n_groups, dout]`
+    pub zps: Vec<f32>,
+    /// AWQ row scales `[din]`; dequant multiplies by `1/row_scale[r]`
+    pub row_scale: Option<Vec<f32>>,
+}
+
+impl PackedMatrix {
+    /// Pack integer codes produced by any of the plain quantizers
+    /// (RTN / GPTQ / SignRound).
+    pub fn from_quantized(qm: &QuantizedMatrix) -> Result<PackedMatrix> {
+        let words = pack::pack(&qm.codes, qm.din, qm.dout, qm.bits)?;
+        Ok(PackedMatrix {
+            din: qm.din,
+            dout: qm.dout,
+            bits: qm.bits,
+            group: qm.group,
+            words,
+            scales: qm.scales.clone(),
+            zps: qm.zps.clone(),
+            row_scale: None,
+        })
+    }
+
+    /// Pack an AWQ result: codes live in the row-scaled space, so the
+    /// per-row inverse scale rides along and is applied at dequant.
+    pub fn from_awq(aq: &QuantizedMatrixAwq) -> Result<PackedMatrix> {
+        let mut pm = PackedMatrix::from_quantized(&aq.inner)?;
+        pm.row_scale = Some(aq.row_scale.clone());
+        Ok(pm)
+    }
+
+    /// Dense f32 reconstruction — bit-exact inverse of the packing (the
+    /// qdq→f32 golden path; used by tests and `write_dequantized`).
+    pub fn dequantize(&self) -> Tensor<f32> {
+        let codes = pack::unpack(&self.words, self.din, self.dout, self.bits);
+        let mut out = vec![0.0f32; self.din * self.dout];
+        for r in 0..self.din {
+            let grp = r / self.group;
+            for c in 0..self.dout {
+                let s = self.scales[grp * self.dout + c];
+                let zp = self.zps[grp * self.dout + c];
+                out[r * self.dout + c] =
+                    s * (codes[r * self.dout + c] as f32 - zp);
+            }
+        }
+        if let Some(rs) = &self.row_scale {
+            for r in 0..self.din {
+                let inv = 1.0 / rs[r];
+                for c in 0..self.dout {
+                    out[r * self.dout + c] *= inv;
+                }
+            }
+        }
+        Tensor::new(&[self.din, self.dout], out)
+    }
+
+    /// Wire-format storage bits — the *same* formula as the Tables 2–5
+    /// size columns (`b`-bit codes + per-group fp16 scale and `b`-bit
+    /// zero point), plus fp16 row scales when AWQ-packed. u32 padding
+    /// (the 3-bit 2-wasted-bits and ragged tails) is a heap artifact,
+    /// not wire cost — see [`PackedMatrix::heap_bytes`].
+    pub fn size_bits(&self) -> usize {
+        quantized_size_bits(self.din, self.dout, self.bits, self.group)
+            + self.row_scale.as_ref().map_or(0, |rs| rs.len() * 16)
+    }
+
+    /// Actual resident heap bytes of this matrix (u32 words + f32
+    /// scale/zp/row-scale vectors).
+    pub fn heap_bytes(&self) -> usize {
+        self.words.len() * 4
+            + self.scales.len() * 4
+            + self.zps.len() * 4
+            + self.row_scale.as_ref().map_or(0, |rs| rs.len() * 4)
+    }
+}
+
+/// Fused dequant-matmul `x[rows, din] @ W[din, dout]` where `W` stays
+/// bit-packed; dispatches to the width-specialized kernel.
+pub fn qmatmul(x: &[f32], rows: usize, pm: &PackedMatrix) -> Vec<f32> {
+    match pm.bits {
+        2 => qmatmul_bits::<2>(x, rows, pm),
+        4 => qmatmul_bits::<4>(x, rows, pm),
+        8 => qmatmul_bits::<8>(x, rows, pm),
+        3 => qmatmul_bits::<3>(x, rows, pm),
+        b => panic!("unsupported packed bit width {b}"),
+    }
+}
+
+/// The width-specialized fused kernel: ikj loop order, codes unpacked
+/// in registers (`per = 32/BITS` weight rows per word row), each weight
+/// dequantized with exactly the `s * (code - zp)` expression of
+/// `QuantizedMatrix::dequantize` so the result is bit-exact vs the
+/// dequantize-then-matmul path.
+fn qmatmul_bits<const BITS: usize>(
+    x: &[f32],
+    rows: usize,
+    pm: &PackedMatrix,
+) -> Vec<f32> {
+    let (din, dout, group) = (pm.din, pm.dout, pm.group);
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(pm.bits as usize, BITS);
+    let per = 32 / BITS;
+    let mask: u32 = (1u32 << BITS) - 1;
+    let mut out = vec![0.0f32; rows * dout];
+    for i in 0..rows {
+        let arow = &x[i * din..(i + 1) * din];
+        let orow = &mut out[i * dout..(i + 1) * dout];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let shift = BITS * (p % per);
+            let wrow = &pm.words[(p / per) * dout..(p / per + 1) * dout];
+            let grp = p / group;
+            let srow = &pm.scales[grp * dout..(grp + 1) * dout];
+            let zrow = &pm.zps[grp * dout..(grp + 1) * dout];
+            match &pm.row_scale {
+                None => {
+                    for c in 0..dout {
+                        let code = ((wrow[c] >> shift) & mask) as f32;
+                        orow[c] += av * (srow[c] * (code - zrow[c]));
+                    }
+                }
+                Some(rs) => {
+                    // same op order as dequantize(): qdq value first,
+                    // then the AWQ inverse row scale, then the matmul
+                    let inv = 1.0 / rs[p];
+                    for c in 0..dout {
+                        let code = ((wrow[c] >> shift) & mask) as f32;
+                        orow[c] += av * (srow[c] * (code - zrow[c]) * inv);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+    use crate::quant::{awq::awq_quantize, rtn_quantize};
+    use crate::rng::Rng;
+
+    #[test]
+    fn qmatmul_bit_exact_vs_dequant_matmul_all_widths() {
+        forall("qmatmul_parity", 40, |rng| {
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let din = 1 + rng.below(97);
+            let dout = 1 + rng.below(33);
+            let rows = 1 + rng.below(6);
+            let group = if din % 32 == 0 { 32 } else { din };
+            let w = Tensor::randn(rng, &[din, dout], 0.5);
+            let qm = rtn_quantize(&w, bits, group);
+            let pm = PackedMatrix::from_quantized(&qm).unwrap();
+            let x = Tensor::randn(rng, &[rows, din], 1.0);
+            qmatmul(&x.data, rows, &pm)
+                == matmul_f32(&x.data, rows, din, &qm.dequantize().data, dout)
+        });
+    }
+
+    #[test]
+    fn packed_dequantize_matches_quantized_matrix() {
+        forall("packed_dequant_parity", 30, |rng| {
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let din = 1 + rng.below(80);
+            let dout = 1 + rng.below(24);
+            let group = if din % 32 == 0 { 32 } else { din };
+            let w = Tensor::randn(rng, &[din, dout], 0.5);
+            let qm = rtn_quantize(&w, bits, group);
+            let pm = PackedMatrix::from_quantized(&qm).unwrap();
+            pm.dequantize() == qm.dequantize()
+        });
+    }
+
+    #[test]
+    fn awq_packed_matches_awq_dequant_matmul() {
+        let mut rng = Rng::new(7);
+        let (din, dout, rows) = (64usize, 32usize, 5usize);
+        let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+        let xc = Tensor::randn(&mut rng, &[128, din], 1.0);
+        let aq = awq_quantize(&w, &xc, 3, 32, 0.5);
+        let pm = PackedMatrix::from_awq(&aq).unwrap();
+        assert_eq!(pm.dequantize(), aq.dequantize());
+        let x = Tensor::randn(&mut rng, &[rows, din], 1.0);
+        assert_eq!(
+            qmatmul(&x.data, rows, &pm),
+            matmul_f32(&x.data, rows, din, &aq.dequantize().data, dout)
+        );
+    }
+
+    #[test]
+    fn matmul_f32_matches_tensor_matmul() {
+        let mut rng = Rng::new(8);
+        let a = Tensor::randn(&mut rng, &[5, 13], 1.0);
+        let b = Tensor::randn(&mut rng, &[13, 7], 1.0);
+        assert_eq!(matmul_f32(&a.data, 5, 13, &b.data, 7), a.matmul(&b).data);
+    }
+
+    #[test]
+    fn accounting_wire_vs_heap() {
+        let mut rng = Rng::new(9);
+        let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
+        let pm =
+            PackedMatrix::from_quantized(&rtn_quantize(&w, 3, 32)).unwrap();
+        // wire: 3-bit codes + 2 groups * 32 cols * (16+3) bits
+        assert_eq!(pm.size_bits(), 64 * 32 * 3 + 2 * 32 * 19);
+        // heap: 7 words/col * 32 cols * 4B + 2 * (2*32*4B) scale/zp
+        assert_eq!(pm.heap_bytes(), 7 * 32 * 4 + 2 * 2 * 32 * 4);
+        // 3-bit padding: heap words cost more than wire code bits
+        assert!(pm.heap_bytes() * 8 > 64 * 32 * 3);
+    }
+}

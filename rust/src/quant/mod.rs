@@ -6,11 +6,37 @@
 
 pub mod awq;
 pub mod gptq;
+pub mod kernels;
 pub mod pack;
 
 use crate::tensor::Tensor;
 
 pub const EPS: f32 = 1e-8;
+
+/// Canonical wire-format storage cost in bits of a quantized
+/// `[din, dout]` matrix: `b`-bit codes plus per-(group, column) fp16
+/// scale + `b`-bit zero point; `bits >= 16` means unquantized fp16.
+/// **Single source of truth** shared by the Tables 2–5 size columns
+/// (`moe::size`), the offload simulator (`serve::offload::expert_bytes`)
+/// and the packed store accounting — they can never disagree.
+///
+/// Group policy mirrors what every quantizer actually stores: when
+/// `group` does not divide `din`, the matrix is quantized as one
+/// whole-column group (see `coordinator::quantize`), so the overhead is
+/// counted for exactly that one group — not a hypothetical partial one.
+pub fn quantized_size_bits(
+    din: usize,
+    dout: usize,
+    bits: u8,
+    group: usize,
+) -> usize {
+    if bits >= 16 {
+        return din * dout * 16;
+    }
+    let grp = if group > 0 && din % group == 0 { group } else { din };
+    let groups = din / grp.max(1);
+    din * dout * bits as usize + groups * dout * (16 + bits as usize)
+}
 
 /// Group-wise quantization metadata for one matrix `W[din, dout]`:
 /// rows are grouped in blocks of `group`; each (group, column) has a
@@ -51,12 +77,9 @@ impl QuantizedMatrix {
 
     /// Storage cost in bits: codes + per-group (fp16 scale + b-bit zp).
     /// This is the accounting behind the "Model Size (GB)" columns of
-    /// Tables 2-5.
+    /// Tables 2-5 (delegates to the crate-wide canonical formula).
     pub fn size_bits(&self) -> usize {
-        let code_bits = self.din * self.dout * self.bits as usize;
-        let overhead = self.n_groups() * self.dout
-            * (16 + self.bits as usize);
-        code_bits + overhead
+        quantized_size_bits(self.din, self.dout, self.bits, self.group)
     }
 }
 

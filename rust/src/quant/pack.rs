@@ -10,6 +10,13 @@
 
 use anyhow::{bail, Result};
 
+/// Whether a bit width has a packed `u32` layout (the MoPEQ widths).
+/// Other sub-fp16 widths still quantize/dequantize fine — they are just
+/// carried dense by the packed store.
+pub fn packable(bits: u8) -> bool {
+    matches!(bits, 2 | 3 | 4 | 8)
+}
+
 /// Codes per u32 word at a given bit width.
 pub fn codes_per_word(bits: u8) -> usize {
     32 / bits as usize
@@ -112,6 +119,46 @@ mod tests {
         for w in packed {
             assert_eq!(w >> 30, 0);
         }
+    }
+
+    #[test]
+    fn ragged_tail_roundtrips_at_every_width() {
+        // din deliberately NOT divisible by codes-per-word, so the last
+        // word row is partially filled (the 3-bit 10-codes/word tail)
+        forall("pack_ragged_tail", 60, |rng| {
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let per = codes_per_word(bits);
+            let full = rng.below(6);
+            let tail = 1 + rng.below(per - 1); // 1..per-1 => ragged
+            let din = per * full + tail;
+            let dout = 1 + rng.below(8);
+            let qmax = (1u16 << bits) - 1;
+            let codes: Vec<u8> = (0..din * dout)
+                .map(|_| rng.below(qmax as usize + 1) as u8)
+                .collect();
+            let packed = pack(&codes, din, dout, bits).unwrap();
+            // exactly ceil(din/per) word rows, and the unused high code
+            // slots of the tail word row stay zero for every column
+            let rows_ok = packed.len() == din.div_ceil(per) * dout;
+            let tail_shift = bits as usize * tail;
+            let tail_ok = tail_shift >= 32
+                || packed[full * dout..]
+                    .iter()
+                    .all(|w| (w >> tail_shift) == 0);
+            rows_ok && tail_ok && unpack(&packed, din, dout, bits) == codes
+        });
+    }
+
+    #[test]
+    fn three_bit_tail_known_values() {
+        // 12 rows at 3 bits = one full word (10 codes) + a 2-code tail
+        let codes: Vec<u8> = (0..12).map(|i| (i % 8) as u8).collect();
+        let packed = pack(&codes, 12, 1, 3).unwrap();
+        assert_eq!(packed.len(), 2);
+        // tail word holds codes 10 (=2) and 11 (=3) in its low 6 bits
+        assert_eq!(packed[1] & 0x7, 2);
+        assert_eq!((packed[1] >> 3) & 0x7, 3);
+        assert_eq!(packed[1] >> 6, 0, "tail padding must be zero");
     }
 
     #[test]

@@ -28,16 +28,22 @@ pub use registry::{ArgSpec, EntrySpec, Registry};
 #[cfg(feature = "backend-xla")]
 pub use xla_backend::XlaBackend;
 
+use crate::moe::packed::PackedLayerExperts;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A host value crossing the backend boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
     F32(Tensor<f32>),
     I32(Tensor<i32>),
+    /// One MoE layer's bit-packed expert weights (see `moe::packed`) —
+    /// the argument handle of the `moe_layer_packed` / `moe_ffn_packed`
+    /// entries. Cloning shares the Arc; no weight bytes are copied.
+    Packed(Arc<PackedLayerExperts>),
 }
 
 impl Value {
@@ -45,6 +51,7 @@ impl Value {
         match self {
             Value::F32(t) => &t.shape,
             Value::I32(t) => &t.shape,
+            Value::Packed(p) => &p.shape,
         }
     }
 
@@ -52,6 +59,7 @@ impl Value {
         match self {
             Value::F32(_) => "float32",
             Value::I32(_) => "int32",
+            Value::Packed(_) => "packed_experts",
         }
     }
 
@@ -62,22 +70,38 @@ impl Value {
     pub fn as_f32(&self) -> Result<&Tensor<f32>> {
         match self {
             Value::F32(t) => Ok(t),
-            _ => bail!("expected f32 tensor, got i32"),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
         }
     }
 
     pub fn as_i32(&self) -> Result<&Tensor<i32>> {
         match self {
             Value::I32(t) => Ok(t),
-            _ => bail!("expected i32 tensor, got f32"),
+            _ => bail!("expected i32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn as_packed(&self) -> Result<&PackedLayerExperts> {
+        match self {
+            Value::Packed(p) => Ok(p),
+            _ => bail!(
+                "expected packed expert weights, got {}",
+                self.dtype()
+            ),
         }
     }
 
     pub fn into_f32(self) -> Result<Tensor<f32>> {
         match self {
             Value::F32(t) => Ok(t),
-            _ => bail!("expected f32 tensor, got i32"),
+            other => bail!("expected f32 tensor, got {}", other.dtype()),
         }
+    }
+}
+
+impl From<Arc<PackedLayerExperts>> for Value {
+    fn from(p: Arc<PackedLayerExperts>) -> Value {
+        Value::Packed(p)
     }
 }
 

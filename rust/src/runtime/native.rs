@@ -25,7 +25,9 @@
 //!   and `clip`/`maximum` pass gradient ½ exactly at the boundary.
 
 use crate::config;
+use crate::moe::packed::PackedLayerExperts;
 use crate::quant;
+use crate::quant::kernels::{self, matmul_f32 as matmul, silu};
 use crate::runtime::{Backend, Prepared, PreparedInner, Value};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
@@ -127,8 +129,16 @@ impl NativeBackend {
             ("shared", op) if op.starts_with("signround_") => {
                 signround_step(inputs, parse_bits(op)?)
             }
-            ("shared", op) if op.starts_with("qmatmul4_") => qmatmul4(inputs),
+            ("shared", op) if op.starts_with("qmatmul") => {
+                qmatmul_entry(inputs, parse_qmatmul_bits(op)?)
+            }
+            ("shared", op) if op.starts_with("moe_ffn_packed") => {
+                moe_ffn_packed_all(inputs)
+            }
             ("shared", op) if op.starts_with("moe_ffn_") => moe_ffn_all(inputs),
+            (sig, "moe_layer_packed") => {
+                moe_layer_packed(inputs, parse_top_k(sig)?)
+            }
             (sig, op) if op.starts_with("moe_layer") => {
                 moe_layer(inputs, parse_top_k(sig)?)
             }
@@ -152,11 +162,18 @@ fn parse_top_k(sig: &str) -> Result<usize> {
         .ok_or_else(|| anyhow!("no top_k in signature `{sig}`"))
 }
 
-// ------------------------------------------------------------ primitives
-
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
+/// Leading bit width of a `qmatmul{b}_{t}x{din}x{dout}` entry name.
+fn parse_qmatmul_bits(op: &str) -> Result<u8> {
+    op.strip_prefix("qmatmul")
+        .and_then(|rest| rest.split('_').next())
+        .and_then(|b| b.parse().ok())
+        .ok_or_else(|| anyhow!("no bit width in entry `{op}`"))
 }
+
+// ------------------------------------------------------------ primitives
+// (`silu` and the canonical zero-skipping ikj `matmul` live in
+// `quant::kernels`, shared with the packed execution path so dense and
+// packed expert evaluation agree bit-for-bit)
 
 /// jnp.sign: 0 at exactly 0 (f32::signum would return ±1 there).
 fn signf(x: f32) -> f32 {
@@ -178,28 +195,6 @@ fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> Vec<f32> {
         let r = 1.0 / (ms + LN_EPS).sqrt();
         for j in 0..d {
             orow[j] = row[j] * w[j] * r;
-        }
-    }
-    out
-}
-
-/// `[rows,k] @ [k,n]` on slices, ikj loop order (cache friendly, skips
-/// zeros like `Tensor::matmul`).
-fn matmul(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), rows * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; rows * n];
-    for i in 0..rows {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
         }
     }
     out
@@ -530,30 +525,29 @@ fn signround_step(inputs: &[&Value], bits: u8) -> Result<Vec<Value>> {
     ])
 }
 
-/// Packed-int4 dequant matmul: `x[T,din] @ dequant4(packed)[din,dout]`
-/// with the little-endian nibble layout of `quant::pack`.
-fn qmatmul4(inputs: &[&Value]) -> Result<Vec<Value>> {
+/// Packed dequant matmul `x[T,din] @ dequant_b(packed)[din,dout]` at
+/// any MoPEQ bit width, fused through `quant::kernels::qmatmul` —
+/// codes unpack in registers inside the matmul loop; no f32 weight
+/// matrix is ever materialized (the generalization of the old
+/// `qmatmul4` dequantize-then-matmul path, bit-exact with it).
+fn qmatmul_entry(inputs: &[&Value], bits: u8) -> Result<Vec<Value>> {
     let x = inputs[0].as_f32()?;
     let packed = inputs[1].as_i32()?;
     let s = inputs[2].as_f32()?;
     let zp = inputs[3].as_f32()?;
     let (t, din) = (x.shape[0], x.shape[1]);
     let dout = packed.shape[1];
-    let g = din / s.shape[0];
-    // dequantize the whole weight, then one matmul
-    let mut wdeq = vec![0.0f32; din * dout];
-    for r in 0..din {
-        let word_row = r / 8;
-        let shift = 4 * (r % 8);
-        let grp = r / g;
-        for c in 0..dout {
-            let code =
-                ((packed.data[word_row * dout + c] as u32) >> shift) & 0xF;
-            wdeq[r * dout + c] = s.data[grp * dout + c]
-                * (code as f32 - zp.data[grp * dout + c]);
-        }
-    }
-    let out = matmul(&x.data, t, din, &wdeq, dout);
+    let pm = kernels::PackedMatrix {
+        din,
+        dout,
+        bits,
+        group: din / s.shape[0],
+        words: packed.data.iter().map(|&w| w as u32).collect(),
+        scales: s.data.clone(),
+        zps: zp.data.clone(),
+        row_scale: None,
+    };
+    let out = kernels::qmatmul(&x.data, t, &pm);
     Ok(vec![Value::F32(Tensor::new(&[t, dout], out))])
 }
 
@@ -585,13 +579,26 @@ fn moe_ffn_all(inputs: &[&Value]) -> Result<Vec<Value>> {
     Ok(vec![Value::F32(Tensor::new(&[e, t, d], out))])
 }
 
+/// All-experts FFN over one MoE layer's *packed* expert handle:
+/// `h[T,d], experts(packed)[E] -> [E,T,d]` — numerically identical to
+/// [`moe_ffn_all`] on the dequantized weights (fused kernels).
+fn moe_ffn_packed_all(inputs: &[&Value]) -> Result<Vec<Value>> {
+    let h = inputs[0].as_f32()?;
+    let pl = inputs[1].as_packed()?;
+    let (t, d) = (h.shape[0], h.shape[1]);
+    let e = pl.experts.len();
+    let mut out = vec![0.0f32; e * t * d];
+    for (ei, ex) in pl.experts.iter().enumerate() {
+        let y = ex.ffn(&h.data, t);
+        out[ei * t * d..(ei + 1) * t * d].copy_from_slice(&y);
+    }
+    Ok(vec![Value::F32(Tensor::new(&[e, t, d], out))])
+}
+
 /// MoE FFN block with residual, top-k routing and expert telemetry.
 /// Returns `(y, counts[E], vis_counts[E], h_postln[B,S,d])`.
+/// Dense dispatch over stacked f32 expert tensors.
 fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
-    let x = inputs[0].as_f32()?;
-    let vis = inputs[1].as_f32()?;
-    let ln = inputs[2].as_f32()?;
-    let router = inputs[3].as_f32()?;
     let gate = inputs[4].as_f32()?;
     let up = inputs[5].as_f32()?;
     let down = inputs[6].as_f32()?;
@@ -600,11 +607,65 @@ fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
     } else {
         None
     };
+    let (d, m) = (gate.shape[1], gate.shape[2]);
+    moe_layer_common(&inputs[..4], shared, top_k, |hrow, ei| {
+        expert_ffn(
+            hrow,
+            1,
+            d,
+            &gate.data[ei * d * m..(ei + 1) * d * m],
+            &up.data[ei * d * m..(ei + 1) * d * m],
+            m,
+            &down.data[ei * m * d..(ei + 1) * m * d],
+            d,
+        )
+    })
+}
+
+/// MoE layer over the bit-packed expert handle (`Value::Packed`) — the
+/// packed-weight serving path. The routing body is shared with
+/// [`moe_layer`] and each expert evaluates through the fused
+/// `qmatmul{2,3,4,8}` kernels, so the output is **bit-exact** vs dense
+/// dispatch over the dequantized f32 copies of the same codes.
+fn moe_layer_packed(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
+    let pl: &PackedLayerExperts = inputs[4].as_packed()?;
+    let shared = if inputs.len() > 5 {
+        Some((inputs[5].as_f32()?, inputs[6].as_f32()?, inputs[7].as_f32()?))
+    } else {
+        None
+    };
+    let e = inputs[3].as_f32()?.shape[0];
+    if pl.experts.len() != e {
+        bail!(
+            "packed expert handle has {} experts, router expects {e}",
+            pl.experts.len()
+        );
+    }
+    moe_layer_common(&inputs[..4], shared, top_k, |hrow, ei| {
+        pl.experts[ei].ffn(hrow, 1)
+    })
+}
+
+/// The routing body shared by the dense and packed MoE-layer lowerings:
+/// `head` is `[x, vis_mask, ln, router]`; `eval_expert(hrow, ei)`
+/// computes one expert's SwiGLU output on a single token row.
+fn moe_layer_common<F>(
+    head: &[&Value],
+    shared: Option<(&Tensor<f32>, &Tensor<f32>, &Tensor<f32>)>,
+    top_k: usize,
+    eval_expert: F,
+) -> Result<Vec<Value>>
+where
+    F: Fn(&[f32], usize) -> Vec<f32>,
+{
+    let x = head[0].as_f32()?;
+    let vis = head[1].as_f32()?;
+    let ln = head[2].as_f32()?;
+    let router = head[3].as_f32()?;
 
     let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
     let t = b * s;
     let e = router.shape[0];
-    let m = gate.shape[2];
     let h = rmsnorm(&x.data, &ln.data, d);
 
     // the shared expert is routing-independent: evaluate it once on the
@@ -647,16 +708,7 @@ fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
             counts[ei] += 1.0;
             vis_counts[ei] += vis.data[i];
             let coef = probs[ei] / tsum;
-            let out = expert_ffn(
-                hrow,
-                1,
-                d,
-                &gate.data[ei * d * m..(ei + 1) * d * m],
-                &up.data[ei * d * m..(ei + 1) * d * m],
-                m,
-                &down.data[ei * m * d..(ei + 1) * m * d],
-                d,
-            );
+            let out = eval_expert(hrow, ei);
             for j in 0..d {
                 yrow[j] += coef * out[j];
             }
@@ -770,6 +822,102 @@ mod tests {
             assert!(a.data.iter().all(|&p| (0.0..=1.0).contains(&p)));
         }
         assert!(best < first, "signround did not improve: {best} !< {first}");
+    }
+
+    #[test]
+    fn packed_moe_layer_bit_exact_vs_dense_on_same_codes() {
+        use crate::moe::packed::{PackedExpert, PackedLayerExperts, PackedMat};
+        use crate::quant::kernels::PackedMatrix;
+        use std::sync::Arc;
+
+        let be = backend();
+        let mut rng = Rng::new(21);
+        let (b, s, d, m, e, k) = (2usize, 4usize, 16usize, 8usize, 8usize, 2);
+        let mut experts = Vec::with_capacity(e);
+        let mut gate_deq = Vec::new();
+        let mut up_deq = Vec::new();
+        let mut down_deq = Vec::new();
+        for ei in 0..e {
+            let bits = [2u8, 3, 4, 8][ei % 4];
+            let mut mats = Vec::with_capacity(3);
+            for (din, dout) in [(d, m), (d, m), (m, d)] {
+                let w = Tensor::randn(&mut rng, &[din, dout], 0.4);
+                let qm = quant::rtn_quantize(&w, bits, din);
+                let pm = PackedMatrix::from_quantized(&qm).unwrap();
+                match mats.len() {
+                    0 => gate_deq.push(pm.dequantize()),
+                    1 => up_deq.push(pm.dequantize()),
+                    _ => down_deq.push(pm.dequantize()),
+                }
+                mats.push(PackedMat::Packed(pm));
+            }
+            let down = mats.pop().unwrap();
+            let up = mats.pop().unwrap();
+            let gate = mats.pop().unwrap();
+            experts.push(PackedExpert { bits, gate, up, down });
+        }
+        let x = Tensor::randn(&mut rng, &[b, s, d], 1.0);
+        let vis = Tensor::randn(&mut rng, &[b, s], 1.0);
+        let ln = Tensor::<f32>::ones(&[d]);
+        let router = Tensor::randn(&mut rng, &[e, d], 0.3);
+        let dense_args: Vec<Value> = vec![
+            x.clone().into(),
+            vis.clone().into(),
+            ln.clone().into(),
+            router.clone().into(),
+            Tensor::stack(&gate_deq).into(),
+            Tensor::stack(&up_deq).into(),
+            Tensor::stack(&down_deq).into(),
+        ];
+        let packed_args: Vec<Value> = vec![
+            x.into(),
+            vis.into(),
+            ln.into(),
+            router.into(),
+            Value::Packed(Arc::new(PackedLayerExperts::new(experts))),
+        ];
+        let want = be.execute("moe_e8_k2_s0/moe_layer", &dense_args).unwrap();
+        let got = be
+            .execute("moe_e8_k2_s0/moe_layer_packed", &packed_args)
+            .unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(
+                w.as_f32().unwrap(),
+                g.as_f32().unwrap(),
+                "packed moe_layer diverged from the qdq->f32 path"
+            );
+        }
+    }
+
+    #[test]
+    fn qmatmul_entry_all_widths_match_dequant_matmul() {
+        let be = backend();
+        let mut rng = Rng::new(22);
+        let (t, din, dout) = (5usize, 64usize, 32usize);
+        let x = Tensor::randn(&mut rng, &[t, din], 1.0);
+        let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+        for bits in [2u8, 3, 4, 8] {
+            let qm = quant::rtn_quantize(&w, bits, 32);
+            let packed = quant::pack::pack(&qm.codes, din, dout, bits).unwrap();
+            let wrows = quant::pack::words_per_col(din, bits);
+            let out = be
+                .execute(
+                    &format!("shared/qmatmul{bits}_{t}x{din}x{dout}"),
+                    &[
+                        x.clone().into(),
+                        Tensor::new(
+                            &[wrows, dout],
+                            packed.iter().map(|&u| u as i32).collect(),
+                        )
+                        .into(),
+                        Tensor::new(&[2, dout], qm.scales.clone()).into(),
+                        Tensor::new(&[2, dout], qm.zps.clone()).into(),
+                    ],
+                )
+                .unwrap();
+            let want = matmul(&x.data, t, din, &qm.dequantize().data, dout);
+            assert_eq!(out[0].as_f32().unwrap().data, want, "b{bits}");
+        }
     }
 
     #[test]

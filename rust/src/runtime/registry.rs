@@ -101,6 +101,8 @@ pub struct Registry {
 
 const F32: &str = "float32";
 const I32: &str = "int32";
+/// dtype of the packed-expert argument handle (`Value::Packed`)
+const PACKED: &str = "packed_experts";
 
 fn arg(name: &str, shape: &[usize], dtype: &str) -> ArgSpec {
     ArgSpec {
@@ -203,18 +205,22 @@ impl Registry {
             }
         }
 
-        // ---- packed-int4 dequant matmul (serving hot path)
-        add(
-            format!("shared/qmatmul4_{t}x{d}x{m}"),
-            vec![
-                arg("x", &[t, d], F32),
-                arg("packed", &[d / 8, m], I32),
-                arg("s", &[d / g, m], F32),
-                arg("zp", &[d / g, m], F32),
-            ],
-        );
+        // ---- packed dequant matmuls (serving hot path), one per
+        // MoPEQ bit width; 4-bit keeps the original qmatmul4 name/shape
+        for bits in [2u8, 3, 4, 8] {
+            let wrows = crate::quant::pack::words_per_col(d, bits);
+            add(
+                format!("shared/qmatmul{bits}_{t}x{d}x{m}"),
+                vec![
+                    arg("x", &[t, d], F32),
+                    arg("packed", &[wrows, m], I32),
+                    arg("s", &[d / g, m], F32),
+                    arg("zp", &[d / g, m], F32),
+                ],
+            );
+        }
 
-        // ---- standalone MoE-FFN kernel (pallas vs ref)
+        // ---- standalone MoE-FFN kernel (pallas vs ref vs packed)
         for tag in ["pallas", "ref"] {
             add(
                 format!("shared/moe_ffn_{tag}_e64"),
@@ -226,6 +232,10 @@ impl Registry {
                 ],
             );
         }
+        add(
+            "shared/moe_ffn_packed_e64".into(),
+            vec![arg("h", &[t, d], F32), arg("experts", &[64], PACKED)],
+        );
 
         // ---- moe_layer per routing signature
         let mut sigs: HashMap<String, config::ModelConfig> = HashMap::new();
@@ -252,6 +262,22 @@ impl Registry {
             for suffix in ["moe_layer", "moe_layer_pallas", "moe_layer_sparse"] {
                 add(format!("{sig}/{suffix}"), inputs.clone());
             }
+            // packed lowering: gate/up/down replaced by one bit-packed
+            // expert handle (native backend; see moe::packed)
+            let mut pinputs = vec![
+                arg("x", &[b, s, d], F32),
+                arg("vis_mask", &[b, s], F32),
+                arg("ln", &[d], F32),
+                arg("router", &[e, d], F32),
+                arg("experts", &[e], PACKED),
+            ];
+            if cfg.n_shared > 0 {
+                let ds = cfg.d_shared;
+                pinputs.push(arg("sgate", &[d, ds], F32));
+                pinputs.push(arg("sup", &[d, ds], F32));
+                pinputs.push(arg("sdown", &[ds, d], F32));
+            }
+            add(format!("{sig}/moe_layer_packed"), pinputs);
         }
 
         // ---- train_step per variant
@@ -415,18 +441,39 @@ mod tests {
             "shared/qdq_64x32_b2",
             "shared/qdq_32x64_b8",
             "shared/signround_64x32_b4",
+            "shared/qmatmul2_128x64x32",
+            "shared/qmatmul3_128x64x32",
             "shared/qmatmul4_128x64x32",
+            "shared/qmatmul8_128x64x32",
             "shared/moe_ffn_ref_e64",
             "shared/moe_ffn_pallas_e64",
+            "shared/moe_ffn_packed_e64",
         ] {
             assert!(r.has_entry(e), "missing {e}");
         }
-        // one moe_layer triple per distinct routing signature
+        // one moe_layer quadruple per distinct routing signature
         for sig in ["moe_e64_k6_s1", "moe_e72_k6_s1", "moe_e64_k8_s0"] {
-            for k in ["moe_layer", "moe_layer_pallas", "moe_layer_sparse"] {
+            for k in [
+                "moe_layer",
+                "moe_layer_pallas",
+                "moe_layer_sparse",
+                "moe_layer_packed",
+            ] {
                 assert!(r.has_entry(&format!("{sig}/{k}")), "missing {sig}/{k}");
             }
         }
+        // packed specs: 3-bit packs 10 codes/word -> ceil(64/10) = 7
+        // word rows; the expert handle is one packed arg
+        let q3 = r.entry("shared/qmatmul3_128x64x32").unwrap();
+        assert_eq!(q3.inputs[1].shape, vec![7, 32]);
+        let pk = r.entry("moe_e64_k6_s1/moe_layer_packed").unwrap();
+        assert_eq!(pk.inputs.len(), 8);
+        assert_eq!(pk.inputs[4].dtype, "packed_experts");
+        assert_eq!(pk.inputs[4].shape, vec![64]);
+        assert_eq!(
+            r.entry("moe_e64_k8_s0/moe_layer_packed").unwrap().inputs.len(),
+            5
+        );
         // train_step per variant
         for v in ["dsvl2_tiny", "dsvl2_small", "dsvl2_base", "molmoe"] {
             assert!(r.has_entry(&format!("{v}/train_step")));

@@ -30,6 +30,10 @@ pub fn value_to_literal(v: &Value) -> Result<xla::Literal> {
     let lit = match v {
         Value::F32(t) => xla::Literal::vec1(&t.data),
         Value::I32(t) => xla::Literal::vec1(&t.data),
+        Value::Packed(_) => bail!(
+            "packed expert weights are a native-backend execution path; \
+             the XLA backend serves dense (qdq->f32) weights"
+        ),
     };
     lit.reshape(&dims).map_err(|e| anyhow!("literal reshape: {e}"))
 }

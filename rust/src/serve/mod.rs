@@ -17,8 +17,9 @@ pub use offload::{
 };
 
 use crate::config::ModelConfig;
-use crate::coordinator::executor::ModelExecutor;
+use crate::coordinator::executor::{ModelExecutor, ResidentReport};
 use crate::data::Sample;
+use crate::moe::packed::PackedStore;
 use crate::moe::WeightStore;
 use crate::runtime::Session;
 use anyhow::{anyhow, Result};
@@ -64,6 +65,18 @@ pub struct ServerStats {
     pub p95: Duration,
     pub p99: Duration,
     pub throughput_rps: f64,
+    /// weight bytes the worker's executor actually held resident —
+    /// for a packed deployment `expert_accounted_bytes` equals the
+    /// `SizePolicy` accounting and `dense_expert_tensors` is 0
+    pub resident: ResidentReport,
+}
+
+/// Which weight form the worker serves from.
+enum ServeWeights {
+    /// dense f32 store (fp16 reference or qdq→f32 quantized)
+    Dense(WeightStore),
+    /// bit-packed experts + backbone-only store (experts stripped)
+    Packed { backbone: WeightStore, experts: PackedStore },
 }
 
 impl ServerHandle {
@@ -74,11 +87,38 @@ impl ServerHandle {
         ws: WeightStore,
         policy: BatchPolicy,
     ) -> Result<ServerHandle> {
+        Self::start_weights(cfg, ServeWeights::Dense(ws), policy)
+    }
+
+    /// Start a server over a bit-packed expert store: the worker serves
+    /// the `moe_layer_packed` lowering and the f32 expert tensors of
+    /// `backbone` are dropped before the thread spawns — a quantized
+    /// deployment holds **no** dense expert copy, and
+    /// `ServerStats::resident` proves it.
+    pub fn start_packed(
+        cfg: ModelConfig,
+        mut backbone: WeightStore,
+        experts: PackedStore,
+        policy: BatchPolicy,
+    ) -> Result<ServerHandle> {
+        backbone.strip_experts();
+        Self::start_weights(
+            cfg,
+            ServeWeights::Packed { backbone, experts },
+            policy,
+        )
+    }
+
+    fn start_weights(
+        cfg: ModelConfig,
+        weights: ServeWeights,
+        policy: BatchPolicy,
+    ) -> Result<ServerHandle> {
         let (tx, rx) = mpsc::channel::<Control>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name("mopeq-server".into())
-            .spawn(move || worker(cfg, ws, policy, rx, ready_tx))?;
+            .spawn(move || worker(cfg, weights, policy, rx, ready_tx))?;
         // wait for warm-up (compile) to finish so callers measure pure
         // serving latency
         ready_rx
@@ -111,9 +151,22 @@ impl ServerHandle {
     }
 }
 
+fn build_executor<'a>(
+    session: &'a Session,
+    cfg: &ModelConfig,
+    weights: &ServeWeights,
+) -> Result<ModelExecutor<'a>> {
+    match weights {
+        ServeWeights::Dense(ws) => ModelExecutor::new(session, cfg, ws),
+        ServeWeights::Packed { backbone, experts } => {
+            ModelExecutor::with_packed(session, cfg, backbone, experts)
+        }
+    }
+}
+
 fn worker(
     cfg: ModelConfig,
-    ws: WeightStore,
+    weights: ServeWeights,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Control>,
     ready: mpsc::Sender<Result<()>>,
@@ -126,7 +179,7 @@ fn worker(
             anyhow::bail!("session open failed: {msg}");
         }
     };
-    let exec = match ModelExecutor::new(&session, &cfg, &ws)
+    let exec = match build_executor(&session, &cfg, &weights)
         .and_then(|ex| ex.warm().map(|_| ex))
     {
         Ok(ex) => {
@@ -139,6 +192,11 @@ fn worker(
             anyhow::bail!("executor build failed: {msg}");
         }
     };
+    let resident = exec.resident_report();
+    // the executor prepared everything it needs; the source weights can
+    // go (for the packed path this is where the last reference to any
+    // f32 expert data would have died — start_packed already stripped)
+    drop(weights);
 
     let mut batcher = Batcher::new(policy, cfg.batch);
     let mut latencies: Vec<Duration> = Vec::new();
@@ -193,6 +251,7 @@ fn worker(
         p95: pct(0.95),
         p99: pct(0.99),
         throughput_rps: n as f64 / started.elapsed().as_secs_f64().max(1e-9),
+        resident,
     })
 }
 

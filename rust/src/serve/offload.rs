@@ -12,24 +12,17 @@
 //! expert's packed size at its assigned precision.
 
 use crate::config::ModelConfig;
-use crate::moe::{ExpertId, PrecisionMap};
-use crate::quant::pack::packed_bytes;
+use crate::moe::{expert_size_bits, ExpertId, PrecisionMap};
 use crate::rng::Rng;
 use std::collections::HashMap;
 
-/// Packed byte size of one routed expert at `bits` (3 matrices + group
-/// scale/zp overhead at fp16+bits per group).
+/// Wire byte size of one routed expert at `bits` (3 matrices + group
+/// scale/zp overhead) — **the same formula as the Tables 2–5 size
+/// columns** (`moe::size::expert_size_bits`) and the packed store's
+/// `accounted_bytes`, so the offload simulator and the size accounting
+/// can never disagree.
 pub fn expert_bytes(cfg: &ModelConfig, bits: u8) -> usize {
-    let (d, m, g) = (cfg.d_model, cfg.d_expert, cfg.group);
-    if bits >= 16 {
-        return 3 * d * m * 2; // fp16
-    }
-    let overhead = |din: usize, dout: usize| {
-        din.div_ceil(g) * dout * (2 + (bits as usize + 7) / 8)
-    };
-    2 * (packed_bytes(d, m, bits) + overhead(d, m))
-        + packed_bytes(m, d, bits)
-        + overhead(m, d)
+    expert_size_bits(cfg, bits).div_ceil(8)
 }
 
 #[derive(Clone, Copy, Debug)]

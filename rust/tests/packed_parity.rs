@@ -1,0 +1,217 @@
+//! Packed-execution golden parity: serving from bit-packed 2/3/4-bit
+//! expert weights must be **bit-exact** vs the legacy qdq→f32 path —
+//! both round every weight through the same integer codes and the same
+//! `s * (code - zp)` dequant expression, and the fused kernels
+//! accumulate in the same order as the dense matmul. Also locks the
+//! resident-memory claim: a packed deployment holds no dense f32 expert
+//! tensor, and its accounted bytes equal the SizePolicy accounting.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::{pack_experts, ModelExecutor, Quantizer};
+use mopeq::data::{gen_sample, pack_batch, Task};
+use mopeq::moe::{
+    local_meta, ExpertId, PackedStore, PrecisionMap, WeightStore,
+};
+use mopeq::quant::{self, kernels};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::serve::{expert_bytes, BatchPolicy, ServerHandle};
+use mopeq::tensor::Tensor;
+
+/// A mixed {2,3,4}-bit allocation exercising every packed width.
+fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+    let mut pm = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+        }
+    }
+    pm
+}
+
+fn sample_batch(cfg: &ModelConfig, seed: u64) -> (Tensor<i32>, Tensor<f32>) {
+    let mut rng = Rng::new(seed).derive("packed-parity");
+    let samples: Vec<_> = (0..cfg.batch)
+        .map(|i| gen_sample(Task::ALL[i % Task::ALL.len()], cfg, &mut rng))
+        .collect();
+    pack_batch(&samples, cfg)
+}
+
+#[test]
+fn qmatmul_kernels_bit_exact_incl_ragged_tails() {
+    let mut rng = Rng::new(1);
+    // din=70: 3-bit tail (70 = 7*10), 2-bit tail (70 % 16 != 0), etc.
+    for &(rows, din, dout) in &[(4usize, 64usize, 32usize), (3, 70, 17)] {
+        let group = if din % 32 == 0 { 32 } else { din };
+        let x = Tensor::randn(&mut rng, &[rows, din], 1.0);
+        let w = Tensor::randn(&mut rng, &[din, dout], 0.5);
+        for bits in [2u8, 3, 4, 8] {
+            let qm = quant::rtn_quantize(&w, bits, group);
+            let pm = kernels::PackedMatrix::from_quantized(&qm).unwrap();
+            let got = kernels::qmatmul(&x.data, rows, &pm);
+            let want = kernels::matmul_f32(
+                &x.data,
+                rows,
+                din,
+                &qm.dequantize().data,
+                dout,
+            );
+            assert_eq!(got, want, "b{bits} {rows}x{din}x{dout}");
+        }
+    }
+}
+
+#[test]
+fn packed_forward_bit_exact_vs_qdq_forward() {
+    // the golden acceptance test: mixed {2,3,4}-bit allocation, full
+    // model forward — packed moe_layer output and telemetry must be
+    // bit-exact vs dense dispatch over the dequantized copies of the
+    // same codes
+    let session = Session::native();
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 11);
+    let pmap = mixed_map(&cfg);
+    let (store, _) =
+        pack_experts(None, &cfg, &ws, &pmap, &Quantizer::Rtn, None).unwrap();
+    assert_eq!(store.dense_expert_count(), 0);
+
+    // qdq→f32 path: same codes dequantized into a dense store
+    let mut qdq_ws = WeightStore::init(&cfg, &local_meta(&cfg), 11);
+    store.write_dequantized(&mut qdq_ws).unwrap();
+    let dense_exec = ModelExecutor::new(&session, &cfg, &qdq_ws).unwrap();
+
+    // packed path: backbone only, experts stripped
+    let mut backbone = WeightStore::init(&cfg, &local_meta(&cfg), 11);
+    backbone.strip_experts();
+    assert!(!backbone.has_expert_tensors());
+    let packed_exec =
+        ModelExecutor::with_packed(&session, &cfg, &backbone, &store)
+            .unwrap();
+    packed_exec.warm().unwrap();
+
+    let (tokens, vis) = sample_batch(&cfg, 3);
+    let a = dense_exec.forward(&tokens, &vis, true).unwrap();
+    let b = packed_exec.forward(&tokens, &vis, true).unwrap();
+    assert_eq!(a.logits, b.logits, "logits diverged");
+    assert_eq!(a.counts, b.counts, "expert counts diverged");
+    assert_eq!(a.vis_counts, b.vis_counts);
+    assert_eq!(a.hidden.unwrap(), b.hidden.unwrap());
+}
+
+#[test]
+fn packed_moe_ffn_entry_matches_ref_on_dequantized_weights() {
+    let session = Session::native();
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let (t, d, e) = (cfg.batch * cfg.seq, cfg.d_model, 64);
+    let mut rng = Rng::new(12);
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 12);
+    let store = PackedStore::rtn(&cfg, &ws, &mixed_map(&cfg)).unwrap();
+    let layer = store.layer(0);
+    // dense oracle inputs: dequantized copies of layer 0's experts
+    let deq = |which| {
+        let mats: Vec<Tensor<f32>> = (0..e)
+            .map(|ex| {
+                let id = ExpertId { layer: 0, expert: ex };
+                match (which, store.expert(id)) {
+                    (0, pe) => pe.gate.clone(),
+                    (1, pe) => pe.up.clone(),
+                    (_, pe) => pe.down.clone(),
+                }
+            })
+            .map(|mat| match mat {
+                mopeq::moe::PackedMat::Packed(pm) => pm.dequantize(),
+                mopeq::moe::PackedMat::Dense(tns) => tns,
+            })
+            .collect();
+        Tensor::stack(&mats)
+    };
+    let h = Tensor::randn(&mut rng, &[t, d], 1.0);
+    let want = session
+        .exec(
+            "shared/moe_ffn_ref_e64",
+            &[h.clone().into(), deq(0).into(), deq(1).into(), deq(2).into()],
+        )
+        .unwrap();
+    let got = session
+        .exec(
+            "shared/moe_ffn_packed_e64",
+            &[h.into(), mopeq::runtime::Value::Packed(layer)],
+        )
+        .unwrap();
+    assert_eq!(got[0].as_f32().unwrap(), want[0].as_f32().unwrap());
+    assert_eq!(got[0].as_f32().unwrap().shape, vec![e, t, d]);
+}
+
+#[test]
+fn packed_resident_accounting_matches_size_policy() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 13);
+    let pmap = mixed_map(&cfg);
+    let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+    let accounted: usize = pmap
+        .iter_experts()
+        .map(|(_, b)| expert_bytes(&cfg, b))
+        .sum();
+    assert_eq!(store.accounted_bytes(), accounted);
+
+    let session = Session::native();
+    let mut backbone = WeightStore::init(&cfg, &local_meta(&cfg), 13);
+    backbone.strip_experts();
+    let exec =
+        ModelExecutor::with_packed(&session, &cfg, &backbone, &store)
+            .unwrap();
+    let r = exec.resident_report();
+    assert_eq!(r.expert_accounted_bytes, accounted);
+    assert_eq!(r.dense_expert_tensors, 0, "f32 expert residency");
+    assert!(r.backbone_bytes > 0);
+    // the packed residency is a fraction of the f32 expert footprint
+    let f32_bytes = cfg.total_experts() * cfg.expert_params() * 4;
+    assert!(r.expert_heap_bytes < f32_bytes / 2);
+}
+
+#[test]
+fn packed_server_serves_and_reports_residency() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 14);
+    let pmap = mixed_map(&cfg);
+    let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+    let accounted: usize = pmap
+        .iter_experts()
+        .map(|(_, b)| expert_bytes(&cfg, b))
+        .sum();
+
+    // parity of answers: a dense server over the dequantized copies
+    let mut qdq_ws = WeightStore::init(&cfg, &local_meta(&cfg), 14);
+    store.write_dequantized(&mut qdq_ws).unwrap();
+    let dense = ServerHandle::start(cfg.clone(), qdq_ws,
+                                    BatchPolicy::default())
+        .unwrap();
+    let packed = ServerHandle::start_packed(cfg.clone(), ws, store,
+                                            BatchPolicy::default())
+        .unwrap();
+
+    let mut rng = Rng::new(5);
+    let samples: Vec<_> = (0..8)
+        .map(|_| {
+            gen_sample(Task::ALL[rng.below(Task::ALL.len())], &cfg, &mut rng)
+        })
+        .collect();
+    for s in &samples {
+        let a = dense.submit(s.clone()).unwrap().recv().unwrap();
+        let b = packed.submit(s.clone()).unwrap().recv().unwrap();
+        assert_eq!(a.answer, b.answer, "packed server answer diverged");
+    }
+    let dstats = dense.shutdown().unwrap();
+    let pstats = packed.shutdown().unwrap();
+    assert_eq!(pstats.requests, samples.len());
+    // measured residency == SizePolicy accounting; no f32 experts
+    assert_eq!(pstats.resident.expert_accounted_bytes, accounted);
+    assert_eq!(pstats.resident.dense_expert_tensors, 0);
+    // while the dense server holds the full f32 expert footprint
+    assert_eq!(
+        dstats.resident.expert_heap_bytes,
+        cfg.total_experts() * cfg.expert_params() * 4
+    );
+    assert!(dstats.resident.expert_heap_bytes
+            > 4 * pstats.resident.expert_heap_bytes);
+}
