@@ -18,8 +18,10 @@
 
 use mopeq::cluster::Granularity;
 use mopeq::coordinator::{
-    pack_experts, MethodSpec, Metric, ModelExecutor, Pipeline, Quantizer,
+    pack_experts, ExecWeights, MethodSpec, Metric, ModelExecutor, Pipeline,
+    Quantizer,
 };
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
 use mopeq::report;
 use mopeq::serve::{expert_bytes, simulate_offload, LinkModel, RoutingDist};
 use mopeq::train::{train, TrainConfig};
@@ -124,8 +126,11 @@ fn main() -> anyhow::Result<()> {
     let mut backbone = p.clone_weights();
     backbone.strip_experts();
     anyhow::ensure!(!backbone.has_expert_tensors());
-    let packed_exec =
-        ModelExecutor::with_packed(&p.session, &p.cfg, &backbone, &store)?;
+    let packed_exec = ModelExecutor::with_weights(
+        &p.session,
+        &p.cfg,
+        ExecWeights::Packed { backbone: &backbone, experts: &store },
+    )?;
     let mut rng = mopeq::rng::Rng::new(7).derive("e2e-packed");
     let batch: Vec<_> = (0..p.cfg.batch)
         .map(|i| {
@@ -161,6 +166,52 @@ fn main() -> anyhow::Result<()> {
         rep.expert_accounted_bytes,
         f32_bytes,
         f32_bytes as f64 / rep.expert_accounted_bytes as f64
+    );
+
+    // ---- 6b. the same deployment through the unified engine builder:
+    // two workers over Arc-shared packed weights, typed client sessions
+    println!("  serving the map through Engine (2 workers, packed)…");
+    let engine = Engine::builder(p.cfg.name)
+        .weights(p.clone_weights())
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(64)
+        .build()?;
+    let client = engine.client();
+    let tickets: Vec<_> = batch
+        .iter()
+        .cycle()
+        .take(16)
+        .map(|s| client.submit(s.clone()))
+        .collect::<Result<_, _>>()?;
+    for t in tickets {
+        let reply = t.wait()?;
+        anyhow::ensure!(
+            reply.batch_fill >= 1 && reply.batch_fill <= p.cfg.batch,
+            "batch_fill must report real occupancy"
+        );
+    }
+    let stats = engine.shutdown()?;
+    anyhow::ensure!(stats.requests == 16, "engine answered every request");
+    anyhow::ensure!(
+        stats.requests
+            == stats.workers.iter().map(|w| w.requests).sum::<usize>(),
+        "stats self-consistency: requests == Σ worker fills"
+    );
+    anyhow::ensure!(
+        stats.resident.expert_accounted_bytes == accounted
+            && stats.resident.dense_expert_tensors == 0,
+        "engine residency {} B != SizePolicy accounting {} B",
+        stats.resident.expert_accounted_bytes,
+        accounted
+    );
+    println!(
+        "  engine ✓  {} reqs over {} workers, fill {:.2}, resident = \
+         SizePolicy",
+        stats.requests,
+        stats.workers.len(),
+        stats.mean_fill
     );
 
     // ---- 7. offload simulation on the profiled routing

@@ -1,67 +1,72 @@
-//! Serving demo: a threaded batching server over mixed-precision expert
-//! weights — fp16 vs MoPEQ-quantized side by side.
+//! Serving demo: one engine builder, three deployment shapes — fp16
+//! reference, MoPEQ qdq→f32, and MoPEQ bit-packed — side by side, the
+//! last with two workers to show the scale-out axis.
 //!
 //!   cargo run --release --example serve_mixed_precision [requests]
 //!
-//! Shows the weights-as-arguments invariant in action: the same compiled
-//! executables serve both weight sets; only the host tensors differ.
+//! Shows the single-construction-path invariant in action: the same
+//! builder grammar composes every {weight form × precision × workers}
+//! combination; no `*_packed` constructor split anywhere.
 
-use mopeq::cluster::Granularity;
-use mopeq::coordinator::{quantize_experts, Metric, Pipeline, Quantizer};
 use mopeq::data::{gen_sample, Task};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::moe::{local_meta, WeightStore};
 use mopeq::rng::Rng;
-use mopeq::serve::{BatchPolicy, ServerHandle};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(96);
-    let mut p = Pipeline::open("dsvl2_tiny", 0)?;
-    p.hessian_closed_form = true;
+    let cfg = mopeq::config::variant("dsvl2_tiny")?;
 
-    // MoPEQ-quantized weights (RTN quantizer keeps the demo snappy)
-    let sens = p.importance(Metric::HessianSensitivity)?;
-    let pmap = p.assign(&sens, Granularity::ModelWise);
-    let mut quantized = p.clone_weights();
-    quantize_experts(
-        Some(&p.session),
-        &p.cfg,
-        &mut quantized,
-        &pmap,
-        &Quantizer::Rtn,
-        None,
-    )?;
-
-    for (label, ws) in [
-        ("fp16", p.clone_weights()),
-        ("MoPEQ 2/3/4-bit", quantized),
-    ] {
-        let handle =
-            ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?;
+    let rows: [(&str, WeightForm, PrecisionSource, usize); 3] = [
+        ("fp16", WeightForm::Fp16, PrecisionSource::Reference, 1),
+        (
+            "MoPEQ qdq->f32",
+            WeightForm::DequantizedF32,
+            PrecisionSource::Mopeq,
+            1,
+        ),
+        ("MoPEQ packed x2", WeightForm::Packed, PrecisionSource::Mopeq, 2),
+    ];
+    for (label, form, precision, workers) in rows {
+        let engine = Engine::builder(cfg.name)
+            .weights(WeightStore::init(&cfg, &local_meta(&cfg), 0))
+            .weight_form(form)
+            .precision(precision)
+            .workers(workers)
+            // the demo pre-submits all n requests before waiting, so
+            // the admission bound must cover the burst
+            .queue_depth(n)
+            .build()?;
+        let client = engine.client();
         let mut rng = Rng::new(42).derive("serve-demo");
         let mut pending = Vec::with_capacity(n);
         for _ in 0..n {
             let task = Task::ALL[rng.below(Task::ALL.len())];
-            pending.push(handle.submit(gen_sample(task, &p.cfg, &mut rng))?);
+            pending.push(client.submit(gen_sample(task, &cfg, &mut rng))?);
         }
         let mut correct = 0usize;
-        for rx in pending {
-            if rx.recv()?.correct {
+        for t in pending {
+            if t.wait()?.correct {
                 correct += 1;
             }
         }
-        let stats = handle.shutdown()?;
+        let stats = engine.shutdown()?;
         println!(
-            "{label:<18} {} reqs, {} batches (fill {:.2}), p50 {:?}, \
-             p95 {:?}, {:.1} req/s, acc {:.3}",
+            "{label:<16} {} reqs, {} batches (fill {:.2}), p50 {:?}, \
+             p95 {:?}, {:.1} req/s, acc {:.3}, experts resident {} B \
+             ({} f32 tensors)",
             stats.requests,
             stats.batches,
             stats.mean_fill,
             stats.p50,
             stats.p95,
             stats.throughput_rps,
-            correct as f64 / n as f64
+            correct as f64 / n as f64,
+            stats.resident.expert_accounted_bytes,
+            stats.resident.dense_expert_tensors
         );
     }
     Ok(())

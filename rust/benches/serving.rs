@@ -1,17 +1,18 @@
-//! Serving bench: end-to-end latency/throughput of the threaded batching
-//! server under fp16 vs mixed-precision weights (qdq→f32 vs bit-packed
-//! execution, with *measured* resident expert bytes), and the
-//! batch-linger policy sweep (throughput vs tail latency).
+//! Serving bench: end-to-end latency/throughput of the engine under
+//! fp16 vs mixed-precision weights (qdq→f32 vs bit-packed execution,
+//! with *measured* resident expert bytes), the **worker-count sweep**
+//! (the scale-out axis: N executor replicas over Arc-shared weights),
+//! and the batch-linger policy sweep (throughput vs tail latency).
 
 use mopeq::benchx::section;
 use mopeq::cluster::Granularity;
 use mopeq::config;
-use mopeq::coordinator::{quantize_experts, Quantizer};
 use mopeq::data::{gen_sample, Task};
+use mopeq::engine::{Engine, MetricsSnapshot, PrecisionSource, WeightForm};
 use mopeq::importance::hessian_closed_form;
-use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
 use mopeq::rng::Rng;
-use mopeq::serve::{expert_bytes, BatchPolicy, ServerHandle};
+use mopeq::serve::{expert_bytes, BatchPolicy};
 use std::time::Duration;
 
 fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
@@ -20,70 +21,81 @@ fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
     (cfg, ws)
 }
 
-fn drive(handle: ServerHandle, cfg: &config::ModelConfig, n: usize)
-         -> anyhow::Result<mopeq::serve::ServerStats> {
+fn drive(engine: Engine, n: usize) -> anyhow::Result<MetricsSnapshot> {
+    let cfg = engine.config().clone();
+    let client = engine.client();
     let mut rng = Rng::new(9).derive("serving-bench");
     let mut pending = Vec::with_capacity(n);
     for _ in 0..n {
         let task = Task::ALL[rng.below(Task::ALL.len())];
-        pending.push(handle.submit(gen_sample(task, cfg, &mut rng))?);
+        pending.push(client.submit(gen_sample(task, &cfg, &mut rng))?);
     }
-    for rx in pending {
-        rx.recv()?;
+    for t in pending {
+        t.wait()?;
     }
-    handle.shutdown()
+    engine.shutdown()
 }
 
-fn run(cfg: &config::ModelConfig, ws: WeightStore, policy: BatchPolicy,
-       n: usize) -> anyhow::Result<mopeq::serve::ServerStats> {
-    drive(ServerHandle::start(cfg.clone(), ws, policy)?, cfg, n)
+fn mopeq_map(cfg: &config::ModelConfig, ws: &WeightStore) -> PrecisionMap {
+    let sens = hessian_closed_form(ws, cfg).unwrap();
+    PrecisionMap {
+        bits: mopeq::cluster::assign_map(
+            &sens.values,
+            &[2, 3, 4],
+            Granularity::ModelWise,
+            0,
+        ),
+    }
 }
 
 fn main() -> anyhow::Result<()> {
     let n = if std::env::var_os("MOPEQ_FULL").is_some() { 256 } else { 64 };
 
-    section("precision maps (batch linger 2ms)");
+    section("precision maps (batch linger 2ms, 1 worker)");
     let (cfg, ws) = fresh_store(0);
-    let sens = hessian_closed_form(&ws, &cfg)?;
-    let mopeq_map = PrecisionMap {
-        bits: mopeq::cluster::assign_map(
-            &sens.values, &[2, 3, 4], Granularity::ModelWise, 0),
-    };
-    for label in ["fp16", "uniform4-rtn", "mopeq-mixed-rtn",
-                  "mopeq-mixed-packed"] {
-        let (_, mut w) = fresh_store(0);
-        let s = match label {
-            "uniform4-rtn" => {
-                quantize_experts(None, &cfg, &mut w,
-                                 &PrecisionMap::uniform(&cfg, 4),
-                                 &Quantizer::Rtn, None)?;
-                run(&cfg, w, BatchPolicy::default(), n)?
-            }
-            "mopeq-mixed-rtn" => {
-                quantize_experts(None, &cfg, &mut w, &mopeq_map,
-                                 &Quantizer::Rtn, None)?;
-                run(&cfg, w, BatchPolicy::default(), n)?
-            }
-            "mopeq-mixed-packed" => {
-                // same codes as the rtn row, served bit-packed
-                let store = PackedStore::rtn(&cfg, &w, &mopeq_map)?;
-                drive(
-                    ServerHandle::start_packed(
-                        cfg.clone(), w, store, BatchPolicy::default())?,
-                    &cfg, n,
-                )?
-            }
-            _ => run(&cfg, w, BatchPolicy::default(), n)?,
-        };
+    let mixed = mopeq_map(&cfg, &ws);
+    let rows: [(&str, WeightForm, PrecisionSource); 4] = [
+        ("fp16", WeightForm::Fp16, PrecisionSource::Reference),
+        (
+            "uniform4-rtn",
+            WeightForm::DequantizedF32,
+            PrecisionSource::Uniform(4),
+        ),
+        (
+            "mopeq-mixed-rtn",
+            WeightForm::DequantizedF32,
+            PrecisionSource::Map(mixed.clone()),
+        ),
+        (
+            "mopeq-mixed-packed",
+            WeightForm::Packed,
+            PrecisionSource::Map(mixed.clone()),
+        ),
+    ];
+    for (label, form, precision) in rows {
+        let (_, w) = fresh_store(0);
+        let engine = Engine::builder(cfg.name)
+            .weights(w)
+            .weight_form(form)
+            .precision(precision)
+            // the bench pre-submits the whole workload before waiting,
+            // so the admission bound must cover it (MOPEQ_FULL: n=256)
+            .queue_depth(n)
+            .build()?;
+        let s = drive(engine, n)?;
         println!(
             "{label:<18} {:>4} reqs  fill {:.2}  p50 {:?}  p95 {:?}  \
              {:>7.1} req/s  experts resident {:>8} B ({} f32 tensors)",
-            s.requests, s.mean_fill, s.p50, s.p95, s.throughput_rps,
+            s.requests,
+            s.mean_fill,
+            s.p50,
+            s.p95,
+            s.throughput_rps,
             s.resident.expert_accounted_bytes,
             s.resident.dense_expert_tensors,
         );
     }
-    let accounted: usize = mopeq_map
+    let accounted: usize = mixed
         .iter_experts()
         .map(|(_, b)| expert_bytes(&cfg, b))
         .sum();
@@ -92,15 +104,44 @@ fn main() -> anyhow::Result<()> {
          packed row's resident bytes must equal it)"
     );
 
-    section("batch linger sweep (fp16)");
+    section("worker-count sweep (scale-out: rps and p99 vs replicas)");
+    for (label, form, precision) in [
+        ("fp16-dense", WeightForm::Fp16, PrecisionSource::Reference),
+        (
+            "mopeq-packed",
+            WeightForm::Packed,
+            PrecisionSource::Map(mixed.clone()),
+        ),
+    ] {
+        for workers in [1usize, 2, 4] {
+            let (_, w) = fresh_store(0);
+            let engine = Engine::builder(cfg.name)
+                .weights(w)
+                .weight_form(form)
+                .precision(precision.clone())
+                .workers(workers)
+                .queue_depth(n)
+                .build()?;
+            let s = drive(engine, n)?;
+            println!(
+                "{label:<14} workers {workers}  {:>4} reqs  fill {:.2}  \
+                 p99 {:?}  {:>7.1} req/s",
+                s.requests, s.mean_fill, s.p99, s.throughput_rps
+            );
+        }
+    }
+
+    section("batch linger sweep (fp16, 1 worker)");
     for linger_ms in [0u64, 2, 8] {
         let (_, w) = fresh_store(0);
-        let s = run(
-            &cfg,
-            w,
-            BatchPolicy { max_linger: Duration::from_millis(linger_ms) },
-            n,
-        )?;
+        let engine = Engine::builder(cfg.name)
+            .weights(w)
+            .batch_policy(BatchPolicy {
+                max_linger: Duration::from_millis(linger_ms),
+            })
+            .queue_depth(n)
+            .build()?;
+        let s = drive(engine, n)?;
         println!(
             "linger {linger_ms:>2} ms  batches {:>4}  fill {:.2}  \
              p50 {:?}  p95 {:?}  {:>7.1} req/s",

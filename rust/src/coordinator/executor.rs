@@ -109,6 +109,22 @@ pub struct ResidentReport {
     pub dense_expert_tensors: usize,
 }
 
+/// Which weights an executor serves from — the **single** construction
+/// axis replacing the old `new` / `with_packed` constructor split (the
+/// engine's `WeightForm` resolves to one of these).
+pub enum ExecWeights<'w> {
+    /// dense f32 store (fp16 reference or qdq→f32 quantized)
+    Dense(&'w WeightStore),
+    /// bit-packed experts + a backbone-only store (a store whose
+    /// experts were [`WeightStore::strip_experts`]-ed works) — the MoE
+    /// layers run the `moe_layer_packed` lowering and **no dense f32
+    /// expert tensor is prepared**
+    Packed {
+        backbone: &'w WeightStore,
+        experts: &'w PackedStore,
+    },
+}
+
 /// Output of one forward pass.
 pub struct ForwardOutput {
     /// last-position logits [B, vocab]
@@ -163,41 +179,47 @@ impl<'a> ModelExecutor<'a> {
         })
     }
 
-    /// Serve straight from a bit-packed expert store: the MoE layers
-    /// run the `moe_layer_packed` lowering and **no dense f32 expert
-    /// tensor is prepared** — `ws` only provides the backbone
-    /// (embeddings, attention, router, shared experts, head), so a
-    /// store whose experts were [`WeightStore::strip_experts`]-ed works.
-    pub fn with_packed(
+    /// Build over either weight form through one entry point (dense
+    /// stores get the default MoE lowering; packed stores have exactly
+    /// one lowering, `moe_layer_packed`).
+    pub fn with_weights(
         session: &'a Session,
         cfg: &ModelConfig,
-        ws: &WeightStore,
-        packed: &PackedStore,
+        weights: ExecWeights<'_>,
     ) -> Result<ModelExecutor<'a>> {
-        if packed.variant != cfg.name {
-            bail!(
-                "packed store is for `{}`, config is `{}`",
-                packed.variant,
-                cfg.name
-            );
+        match weights {
+            ExecWeights::Dense(ws) => {
+                Self::with_options(session, cfg, ws, MoeKernel::default())
+            }
+            ExecWeights::Packed { backbone, experts: packed } => {
+                if packed.variant != cfg.name {
+                    bail!(
+                        "packed store is for `{}`, config is `{}`",
+                        packed.variant,
+                        cfg.name
+                    );
+                }
+                if packed.moe_layers() != cfg.moe_layers()
+                    || packed.experts_per_layer() != cfg.experts
+                {
+                    bail!(
+                        "packed store shape {}x{} != config {}x{}",
+                        packed.moe_layers(),
+                        packed.experts_per_layer(),
+                        cfg.moe_layers(),
+                        cfg.experts
+                    );
+                }
+                let entry =
+                    format!("{}/moe_layer_packed", cfg.moe_signature());
+                Self::build(session, cfg, backbone, entry, |l| {
+                    Ok(ExpertArgs::Packed(
+                        session
+                            .prepare_owned(Value::Packed(packed.layer(l)))?,
+                    ))
+                })
+            }
         }
-        if packed.moe_layers() != cfg.moe_layers()
-            || packed.experts_per_layer() != cfg.experts
-        {
-            bail!(
-                "packed store shape {}x{} != config {}x{}",
-                packed.moe_layers(),
-                packed.experts_per_layer(),
-                cfg.moe_layers(),
-                cfg.experts
-            );
-        }
-        let entry = format!("{}/moe_layer_packed", cfg.moe_signature());
-        Self::build(session, cfg, ws, entry, |l| {
-            Ok(ExpertArgs::Packed(
-                session.prepare_owned(Value::Packed(packed.layer(l)))?,
-            ))
-        })
     }
 
     /// Shared construction: slices every backbone argument once and

@@ -7,7 +7,9 @@ pub mod executor;
 pub mod quantize;
 pub mod signround;
 
-pub use executor::{ForwardOutput, ModelExecutor, MoeKernel, ResidentReport};
+pub use executor::{
+    ExecWeights, ForwardOutput, ModelExecutor, MoeKernel, ResidentReport,
+};
 pub use quantize::{
     capture_calib, pack_experts, quantize_backbone, quantize_experts,
     LayerCalib, QuantStats, Quantizer,

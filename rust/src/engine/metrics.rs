@@ -1,0 +1,230 @@
+//! Live engine telemetry: lock-light counters + per-worker logs that a
+//! [`MetricsSnapshot`](crate::engine::MetricsSnapshot) can be cut from
+//! **while serving** — queue depth, admission rejections, per-worker
+//! batch-fill histograms and latency percentiles, and the measured
+//! resident weight bytes. Shutdown stats are just the final snapshot;
+//! there is no separate end-of-life accounting path that could disagree
+//! with the live one.
+
+use crate::coordinator::executor::ResidentReport;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Point-in-time view of a running (or just-shut-down) engine.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// jobs currently admitted but not yet executed
+    pub queue_depth: usize,
+    /// submits admitted past admission control
+    pub submitted: usize,
+    /// requests answered (== Σ over workers of their batch fills)
+    pub requests: usize,
+    /// submits rejected with [`Rejected::Busy`](crate::engine::Rejected)
+    pub rejected_busy: usize,
+    /// admitted jobs whose per-request deadline expired before execution
+    pub rejected_deadline: usize,
+    /// batches executed across all workers
+    pub batches: usize,
+    /// mean real requests per executed batch
+    pub mean_fill: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// answered requests per second of engine uptime
+    pub throughput_rps: f64,
+    pub uptime: Duration,
+    /// weight bytes **one worker's** executor holds resident (workers
+    /// are replicas; packed expert words are shared via `Arc`, so the
+    /// per-process packed heap does not multiply with the worker count)
+    pub resident: ResidentReport,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+/// One worker's slice of the snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_fill: f64,
+    /// `fill_hist[k-1]` = batches that executed with k real requests
+    pub fill_hist: Vec<usize>,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// Per-worker mutable log (one `Mutex` each — workers never contend
+/// with each other, only with a snapshot reader).
+#[derive(Default)]
+struct WorkerLog {
+    batches: usize,
+    fills: usize,
+    fill_hist: Vec<usize>,
+    latencies: Vec<Duration>,
+}
+
+pub(crate) struct Metrics {
+    started: Mutex<Instant>,
+    submitted: AtomicUsize,
+    rejected_busy: AtomicUsize,
+    rejected_deadline: AtomicUsize,
+    resident: Mutex<Option<ResidentReport>>,
+    workers: Vec<Mutex<WorkerLog>>,
+}
+
+impl Metrics {
+    pub fn new(workers: usize) -> Metrics {
+        Metrics {
+            started: Mutex::new(Instant::now()),
+            submitted: AtomicUsize::new(0),
+            rejected_busy: AtomicUsize::new(0),
+            rejected_deadline: AtomicUsize::new(0),
+            resident: Mutex::new(None),
+            workers: (0..workers).map(|_| Mutex::new(WorkerLog::default())).collect(),
+        }
+    }
+
+    /// Restart the uptime clock — called once every worker has warmed,
+    /// so `throughput_rps` measures pure serving time, never session
+    /// open / executor compile cost (the worker-count sweep would
+    /// otherwise be biased: each added replica adds warmup).
+    pub fn mark_started(&self) {
+        *self.started.lock().unwrap() = Instant::now();
+    }
+
+    /// Count an admission *attempt* — called before the queue push so a
+    /// concurrent snapshot can never observe `requests > submitted`;
+    /// a rejected push takes it back with
+    /// [`uncount_submitted`](Self::uncount_submitted).
+    pub fn count_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn uncount_submitted(&self) {
+        self.submitted.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn count_busy(&self) {
+        self.rejected_busy.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_deadline(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one worker's measured residency (workers are replicas —
+    /// first report wins, the rest are identical by construction).
+    pub fn set_resident(&self, r: ResidentReport) {
+        let mut slot = self.resident.lock().unwrap();
+        slot.get_or_insert(r);
+    }
+
+    /// Record one executed batch: its real occupancy and the end-to-end
+    /// latency of every request it answered.
+    pub fn record_batch(&self, worker: usize, fill: usize, latencies: &[Duration]) {
+        let mut log = self.workers[worker].lock().unwrap();
+        log.batches += 1;
+        log.fills += fill;
+        if log.fill_hist.len() < fill {
+            log.fill_hist.resize(fill, 0);
+        }
+        log.fill_hist[fill - 1] += 1;
+        log.latencies.extend_from_slice(latencies);
+    }
+
+    pub fn snapshot(&self, queue_depth: usize) -> MetricsSnapshot {
+        let mut workers = Vec::with_capacity(self.workers.len());
+        let mut all: Vec<Duration> = Vec::new();
+        let (mut batches, mut requests) = (0usize, 0usize);
+        for log in &self.workers {
+            let log = log.lock().unwrap();
+            let mut lat = log.latencies.clone();
+            lat.sort();
+            workers.push(WorkerSnapshot {
+                requests: log.fills,
+                batches: log.batches,
+                mean_fill: mean_fill(log.fills, log.batches),
+                fill_hist: log.fill_hist.clone(),
+                p50: percentile(&lat, 0.50),
+                p99: percentile(&lat, 0.99),
+            });
+            batches += log.batches;
+            requests += log.fills;
+            all.extend_from_slice(&lat);
+        }
+        all.sort();
+        let uptime = self.started.lock().unwrap().elapsed();
+        MetricsSnapshot {
+            queue_depth,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            requests,
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            batches,
+            mean_fill: mean_fill(requests, batches),
+            p50: percentile(&all, 0.50),
+            p95: percentile(&all, 0.95),
+            p99: percentile(&all, 0.99),
+            throughput_rps: requests as f64 / uptime.as_secs_f64().max(1e-9),
+            uptime,
+            resident: self.resident.lock().unwrap().unwrap_or_default(),
+            workers,
+        }
+    }
+}
+
+fn mean_fill(fills: usize, batches: usize) -> f64 {
+    if batches == 0 {
+        0.0
+    } else {
+        fills as f64 / batches as f64
+    }
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        Duration::ZERO
+    } else {
+        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates_and_stays_self_consistent() {
+        let m = Metrics::new(2);
+        for _ in 0..5 {
+            m.count_submitted();
+        }
+        m.count_busy();
+        m.count_deadline();
+        let ms = Duration::from_millis(1);
+        m.record_batch(0, 3, &[ms, 2 * ms, 3 * ms]);
+        m.record_batch(1, 1, &[4 * ms]);
+        let s = m.snapshot(7);
+        assert_eq!(s.queue_depth, 7);
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.rejected_busy, 1);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.requests, 4);
+        let per_worker: usize = s.workers.iter().map(|w| w.requests).sum();
+        assert_eq!(s.requests, per_worker, "requests == Σ worker fills");
+        assert_eq!(s.workers[0].fill_hist, vec![0, 0, 1]);
+        assert_eq!(s.workers[1].fill_hist, vec![1]);
+        assert!((s.mean_fill - 2.0).abs() < 1e-12);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.p99, 4 * ms);
+    }
+
+    #[test]
+    fn empty_engine_snapshot_is_zeroed_not_nan() {
+        let s = Metrics::new(1).snapshot(0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_fill, 0.0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+}

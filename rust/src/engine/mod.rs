@@ -1,0 +1,531 @@
+//! Unified serving engine: **one** construction path for every
+//! deployment shape the MoPEQ system can serve.
+//!
+//! [`EngineBuilder`] composes the whole deployment declaratively —
+//! model variant × [`WeightForm`] × [`PrecisionSource`] × backend ×
+//! [`BatchPolicy`] × worker count × admission control — replacing the
+//! old `ServerHandle::start` / `start_packed` and
+//! `ModelExecutor::new` / `with_packed` constructor splits:
+//!
+//! ```no_run
+//! use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+//! use mopeq::data::{gen_sample, Task};
+//! use mopeq::rng::Rng;
+//!
+//! let engine = Engine::builder("dsvl2_tiny")
+//!     .weight_form(WeightForm::Packed)
+//!     .precision(PrecisionSource::Mopeq)
+//!     .workers(2)
+//!     .queue_depth(64)
+//!     .build()?;
+//! let client = engine.client();
+//! let sample = gen_sample(Task::Blink, engine.config(), &mut Rng::new(0));
+//! let reply = client.submit(sample)?.wait()?;
+//! let live = engine.metrics(); // queryable while serving
+//! let stats = engine.shutdown()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! **Topology.** N worker threads each own a backend `Session` and a
+//! `ModelExecutor` replica; the immutable source stores (backbone
+//! [`WeightStore`], packed [`PackedStore`]) are shared across workers
+//! via `Arc`. A packed deployment's expert words stay shared all the
+//! way into the executors (`Value::Packed` clones the `Arc`, no weight
+//! bytes are copied), so scaling workers multiplies compute — not
+//! packed expert memory. Requests flow through one bounded MPMC queue —
+//! a full queue rejects the submit with a typed [`Rejected::Busy`]
+//! (admission control), and a request whose per-client deadline expires
+//! while queued is answered with [`Rejected::Deadline`] instead of
+//! being served stale or dropped.
+
+pub mod metrics;
+pub(crate) mod queue;
+mod worker;
+
+pub use metrics::{MetricsSnapshot, WorkerSnapshot};
+
+use crate::cluster::{assign_map, Granularity};
+use crate::config::{self, ModelConfig, MIXED_BITS};
+use crate::coordinator::{quantize_experts, Quantizer};
+use crate::data::Sample;
+use crate::importance::hessian_closed_form;
+use crate::moe::{PackedStore, PrecisionMap, WeightStore};
+use crate::serve::BatchPolicy;
+use anyhow::{anyhow, bail, Result};
+use metrics::Metrics;
+use queue::JobQueue;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// How the engine holds (and executes) expert weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WeightForm {
+    /// dense f32 reference weights, fp16-accounted — no quantization
+    #[default]
+    Fp16,
+    /// quantize→dequantize: experts rounded through their assigned
+    /// integer codes but served as dense f32 (the legacy qdq path)
+    DequantizedF32,
+    /// serve straight from bit-packed codes: no dense f32 expert copy
+    /// is resident, and `MetricsSnapshot::resident` proves it
+    Packed,
+}
+
+/// Where the per-expert precision map comes from.
+#[derive(Clone, Debug, Default)]
+pub enum PrecisionSource {
+    /// fp16 reference — only valid with [`WeightForm::Fp16`]
+    #[default]
+    Reference,
+    /// every expert at the same width
+    Uniform(u8),
+    /// a precomputed / loaded assignment
+    Map(PrecisionMap),
+    /// the paper's allocation: closed-form Hessian sensitivity →
+    /// Algorithm 2 K-means over {2,3,4} bits, model-wise
+    Mopeq,
+}
+
+/// Typed admission/deadline rejection — the only ways the engine
+/// declines work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// the bounded queue is at capacity; retry later or scale workers
+    Busy { depth: usize },
+    /// the request's deadline expired before a worker reached it
+    Deadline,
+    /// the engine is shutting down (or has shut down)
+    Closed,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Busy { depth } => {
+                write!(f, "engine busy: queue at depth {depth}")
+            }
+            Rejected::Deadline => write!(f, "request deadline expired"),
+            Rejected::Closed => write!(f, "engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Engine reply for one request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub answer: usize,
+    pub correct: bool,
+    /// end-to-end latency (submit → reply)
+    pub latency: Duration,
+    /// how many real requests shared the executed batch (≥ 1)
+    pub batch_fill: usize,
+}
+
+/// One admitted request, queued for a worker.
+pub(crate) struct Job {
+    pub sample: Sample,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub respond: mpsc::Sender<Result<Reply, Rejected>>,
+}
+
+/// The shared immutable weights every worker replica executes over.
+pub(crate) enum EngineWeights {
+    Dense(Arc<WeightStore>),
+    Packed {
+        backbone: Arc<WeightStore>,
+        experts: Arc<PackedStore>,
+    },
+}
+
+impl EngineWeights {
+    fn exec_weights(&self) -> crate::coordinator::ExecWeights<'_> {
+        match self {
+            EngineWeights::Dense(ws) => {
+                crate::coordinator::ExecWeights::Dense(ws)
+            }
+            EngineWeights::Packed { backbone, experts } => {
+                crate::coordinator::ExecWeights::Packed {
+                    backbone,
+                    experts,
+                }
+            }
+        }
+    }
+}
+
+pub(crate) struct Shared {
+    pub(crate) queue: JobQueue,
+    pub(crate) metrics: Metrics,
+}
+
+/// Builder for an [`Engine`] — the single construction path for every
+/// deployment shape (see the module docs for the grammar).
+pub struct EngineBuilder {
+    variant: String,
+    weights: Option<WeightStore>,
+    seed: u64,
+    form: WeightForm,
+    precision: PrecisionSource,
+    backend: Option<String>,
+    policy: BatchPolicy,
+    workers: usize,
+    queue_depth: usize,
+}
+
+impl EngineBuilder {
+    pub fn new(variant: impl Into<String>) -> EngineBuilder {
+        EngineBuilder {
+            variant: variant.into(),
+            weights: None,
+            seed: 0,
+            form: WeightForm::Fp16,
+            precision: PrecisionSource::Reference,
+            backend: None,
+            policy: BatchPolicy::default(),
+            workers: 1,
+            queue_depth: 128,
+        }
+    }
+
+    /// Serve these weights (trained or reference). Without this the
+    /// engine uses the variant's deterministic init at [`seed`](Self::seed).
+    pub fn weights(mut self, ws: WeightStore) -> Self {
+        self.weights = Some(ws);
+        self
+    }
+
+    /// Seed for deterministic weight init (ignored when
+    /// [`weights`](Self::weights) is given) and for Algorithm 2.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn weight_form(mut self, form: WeightForm) -> Self {
+        self.form = form;
+        self
+    }
+
+    pub fn precision(mut self, src: PrecisionSource) -> Self {
+        self.precision = src;
+        self
+    }
+
+    /// Backend choice per worker: `"native"` or `"xla"`. Default
+    /// follows `MOPEQ_BACKEND` (native when unset).
+    pub fn backend(mut self, choice: impl Into<String>) -> Self {
+        self.backend = Some(choice.into());
+        self
+    }
+
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Worker threads (≥ 1). Each owns a session + executor replica;
+    /// expert weights are shared, so this scales compute not memory.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Admission-control bound: jobs queued beyond this are rejected
+    /// with [`Rejected::Busy`] instead of buffered.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Resolve the deployment (assign → quantize/pack as the form
+    /// demands), then spawn and warm the worker pool. Returns once
+    /// every worker is ready to serve.
+    pub fn build(self) -> Result<Engine> {
+        let cfg = config::variant(&self.variant)?;
+        let mut ws = match self.weights {
+            Some(ws) => {
+                if ws.variant != cfg.name {
+                    bail!(
+                        "weights are for `{}`, engine variant is `{}`",
+                        ws.variant,
+                        cfg.name
+                    );
+                }
+                ws
+            }
+            None => WeightStore::init(&cfg, &crate::moe::local_meta(&cfg), self.seed),
+        };
+
+        let pmap = resolve_precision(&cfg, &ws, &self.precision, self.seed)?;
+        let weights = match self.form {
+            WeightForm::Fp16 => {
+                if pmap.is_some() {
+                    bail!(
+                        "WeightForm::Fp16 serves the reference weights — \
+                         use DequantizedF32 or Packed to apply a \
+                         precision source"
+                    );
+                }
+                EngineWeights::Dense(Arc::new(ws))
+            }
+            WeightForm::DequantizedF32 => {
+                let pmap = pmap.clone().ok_or_else(|| {
+                    anyhow!(
+                        "WeightForm::DequantizedF32 needs a quantizing \
+                         PrecisionSource (Uniform / Map / Mopeq)"
+                    )
+                })?;
+                quantize_experts(None, &cfg, &mut ws, &pmap, &Quantizer::Rtn, None)?;
+                EngineWeights::Dense(Arc::new(ws))
+            }
+            WeightForm::Packed => {
+                let pmap = pmap.clone().ok_or_else(|| {
+                    anyhow!(
+                        "WeightForm::Packed needs a quantizing \
+                         PrecisionSource (Uniform / Map / Mopeq)"
+                    )
+                })?;
+                let store = PackedStore::rtn(&cfg, &ws, &pmap)?;
+                ws.strip_experts();
+                EngineWeights::Packed {
+                    backbone: Arc::new(ws),
+                    experts: Arc::new(store),
+                }
+            }
+        };
+
+        let weights = Arc::new(weights);
+        let shared = Arc::new(Shared {
+            queue: JobQueue::new(self.queue_depth),
+            metrics: Metrics::new(self.workers),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(self.workers);
+        for index in 0..self.workers {
+            let wc = worker::WorkerConfig {
+                index,
+                cfg: cfg.clone(),
+                weights: weights.clone(),
+                backend: self.backend.clone(),
+                policy: self.policy,
+                shared: shared.clone(),
+            };
+            let tx = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mopeq-engine-{index}"))
+                    .spawn(move || worker::run(wc, tx))?,
+            );
+        }
+        drop(ready_tx);
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..self.workers {
+            let outcome = ready_rx
+                .recv()
+                .unwrap_or_else(|_| Err(anyhow!("a worker died during warmup")));
+            if let Err(e) = outcome {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            shared.queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        // every worker is warm: start the serving clock now so
+        // throughput never includes compile/warmup cost
+        shared.metrics.mark_started();
+        Ok(Engine { shared, workers: handles, cfg, pmap })
+    }
+}
+
+/// Resolve a [`PrecisionSource`] into the per-expert map it denotes
+/// (`None` for the fp16 reference).
+fn resolve_precision(
+    cfg: &ModelConfig,
+    ws: &WeightStore,
+    src: &PrecisionSource,
+    seed: u64,
+) -> Result<Option<PrecisionMap>> {
+    Ok(match src {
+        PrecisionSource::Reference => None,
+        PrecisionSource::Uniform(bits) => {
+            if *bits >= 16 {
+                bail!(
+                    "PrecisionSource::Uniform({bits}) is the fp16 \
+                     reference — use WeightForm::Fp16 with \
+                     PrecisionSource::Reference"
+                );
+            }
+            Some(PrecisionMap::uniform(cfg, *bits))
+        }
+        PrecisionSource::Map(pmap) => {
+            if pmap.bits.len() != cfg.moe_layers()
+                || pmap.bits.iter().any(|l| l.len() != cfg.experts)
+            {
+                bail!(
+                    "precision map shape {}x{} != config {}x{}",
+                    pmap.bits.len(),
+                    pmap.bits.first().map_or(0, |l| l.len()),
+                    cfg.moe_layers(),
+                    cfg.experts
+                );
+            }
+            Some(pmap.clone())
+        }
+        PrecisionSource::Mopeq => {
+            let sens = hessian_closed_form(ws, cfg)?;
+            Some(PrecisionMap {
+                bits: assign_map(
+                    &sens.values,
+                    &MIXED_BITS,
+                    Granularity::ModelWise,
+                    seed,
+                ),
+            })
+        }
+    })
+}
+
+/// A running deployment: worker pool + shared queue + live metrics.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    cfg: ModelConfig,
+    /// the resolved per-expert map this engine serves (None for fp16)
+    pmap: Option<PrecisionMap>,
+}
+
+impl Engine {
+    /// Start composing a deployment for a model variant.
+    pub fn builder(variant: impl Into<String>) -> EngineBuilder {
+        EngineBuilder::new(variant)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// The precision map the engine resolved at build (None = fp16
+    /// reference) — what `MetricsSnapshot::resident` accounting is
+    /// checked against.
+    pub fn precision_map(&self) -> Option<&PrecisionMap> {
+        self.pmap.as_ref()
+    }
+
+    /// A cheap client session (an `Arc` clone). Clients are `Send` and
+    /// independent — hand one to each request thread.
+    pub fn client(&self) -> Client {
+        Client { shared: self.shared.clone(), deadline: None }
+    }
+
+    /// Live telemetry — queryable **while serving**, not only at
+    /// shutdown.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot(self.shared.queue.len())
+    }
+
+    /// Stop admissions, drain every queued job through the workers,
+    /// join them, and return the final snapshot.
+    pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
+        self.shared.queue.close();
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.workers.drain(..) {
+            let outcome = h
+                .join()
+                .map_err(|_| anyhow!("an engine worker panicked"))
+                .and_then(|r| r);
+            if let Err(e) = outcome {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(self.shared.metrics.snapshot(self.shared.queue.len()))
+    }
+}
+
+impl Drop for Engine {
+    /// An engine dropped without [`shutdown`](Engine::shutdown) (early
+    /// `?` return, panic unwind) must not strand its worker threads
+    /// blocked on an open queue forever: close, let them drain, join.
+    fn drop(&mut self) {
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A typed client session over a running engine.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+    deadline: Option<Duration>,
+}
+
+impl Client {
+    /// Per-request deadline: a request still queued when it expires is
+    /// answered with [`Rejected::Deadline`].
+    pub fn with_deadline(mut self, deadline: Duration) -> Client {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Submit a request past admission control. `Err(Busy)` when the
+    /// bounded queue is full, `Err(Closed)` after shutdown.
+    pub fn submit(&self, sample: Sample) -> Result<Ticket, Rejected> {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let job = Job {
+            sample,
+            enqueued: now,
+            deadline: self.deadline.map(|d| now + d),
+            respond: tx,
+        };
+        // count the attempt *before* the push: once the job is visible
+        // in the queue a worker may answer it, and a concurrent
+        // snapshot must never read `requests > submitted`
+        self.shared.metrics.count_submitted();
+        match self.shared.queue.push(job) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(r) => {
+                self.shared.metrics.uncount_submitted();
+                if matches!(r, Rejected::Busy { .. }) {
+                    self.shared.metrics.count_busy();
+                }
+                Err(r)
+            }
+        }
+    }
+
+    /// Submit and block for the reply.
+    pub fn call(&self, sample: Sample) -> Result<Reply, Rejected> {
+        self.submit(sample)?.wait()
+    }
+}
+
+/// The pending reply for one submitted request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Reply, Rejected>>,
+}
+
+impl Ticket {
+    /// Block until the engine answers (or rejects) this request.
+    pub fn wait(self) -> Result<Reply, Rejected> {
+        match self.rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => Err(Rejected::Closed),
+        }
+    }
+}

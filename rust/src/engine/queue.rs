@@ -1,0 +1,177 @@
+//! Bounded multi-producer/multi-consumer job queue: the admission-control
+//! boundary between [`Client`](crate::engine::Client)s and the worker
+//! pool. Depth is a hard cap — a full queue rejects the submit with a
+//! typed [`Rejected::Busy`] instead of buffering unboundedly, which is
+//! what lets the engine shed load with bounded tail latency instead of
+//! collapsing under it (the vendor set has no tokio; a `Mutex` +
+//! `Condvar` deque is the honest std topology for a handful of worker
+//! threads).
+
+use crate::engine::{Job, Rejected};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// false once the engine begins shutdown: submits are rejected but
+    /// queued jobs are still drained by the workers
+    open: bool,
+}
+
+pub(crate) struct JobQueue {
+    state: Mutex<QueueState>,
+    notify: Condvar,
+    depth: usize,
+}
+
+impl JobQueue {
+    pub fn new(depth: usize) -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::with_capacity(depth.max(1)),
+                open: true,
+            }),
+            notify: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Admit a job, or reject it without blocking: [`Rejected::Busy`]
+    /// when the queue is at depth, [`Rejected::Closed`] after shutdown
+    /// began.
+    pub fn push(&self, job: Job) -> Result<(), Rejected> {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            return Err(Rejected::Closed);
+        }
+        if st.jobs.len() >= self.depth {
+            return Err(Rejected::Busy { depth: st.jobs.len() });
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for a job; returns `None` only when the
+    /// queue is closed **and** drained (the shutdown-drain guarantee —
+    /// every admitted job is either executed or deadline-rejected, never
+    /// silently dropped).
+    pub fn pop(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.notify.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batch-linger fill path): returns `None`
+    /// when the deadline passes, or immediately when the queue is closed
+    /// and drained — a draining worker never lingers on an empty queue.
+    pub fn pop_before(&self, deadline: Instant) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if !st.open {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) = self
+                .notify
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if timeout.timed_out() && st.jobs.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Current queue occupancy (live `MetricsSnapshot.queue_depth`).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Begin shutdown: reject new submits, wake every worker so the
+    /// remaining jobs drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::data::{gen_sample, Task};
+    use crate::rng::Rng;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn job() -> Job {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut rng = Rng::new(0);
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            sample: gen_sample(Task::Blink, &cfg, &mut rng),
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn depth_is_a_hard_cap_with_typed_busy() {
+        let q = JobQueue::new(2);
+        q.push(job()).unwrap();
+        q.push(job()).unwrap();
+        match q.push(job()) {
+            Err(Rejected::Busy { depth }) => assert_eq!(depth, 2),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // popping frees a slot
+        q.pop().unwrap();
+        q.push(job()).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_submits_but_drains_queued_jobs() {
+        let q = JobQueue::new(4);
+        q.push(job()).unwrap();
+        q.push(job()).unwrap();
+        q.close();
+        assert!(matches!(q.push(job()), Err(Rejected::Closed)));
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none(), "closed + drained must return None");
+    }
+
+    #[test]
+    fn pop_before_times_out_and_skips_linger_when_closed() {
+        let q = JobQueue::new(1);
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(20);
+        assert!(q.pop_before(deadline).is_none());
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        q.close();
+        let start = Instant::now();
+        assert!(q.pop_before(start + Duration::from_secs(5)).is_none());
+        assert!(
+            start.elapsed() < Duration::from_secs(1),
+            "a closed empty queue must not linger"
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Engine worker: one thread owning one backend [`Session`] and one
+//! [`ModelExecutor`] replica, pulling jobs from the shared bounded
+//! queue. The immutable source stores are shared across workers via
+//! `Arc`; for packed deployments the expert words stay shared into the
+//! executors themselves (`Value::Packed` clones the `Arc`), so worker
+//! count multiplies compute, not packed expert memory. Sessions are
+//! per-worker because backend state (call counters, compiled
+//! executables) is not synchronized.
+
+use crate::config::ModelConfig;
+use crate::coordinator::executor::ModelExecutor;
+use crate::data::Sample;
+use crate::engine::{EngineWeights, Job, Rejected, Reply, Shared};
+use crate::runtime::Session;
+use crate::serve::{BatchPolicy, Batcher};
+use anyhow::Result;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+pub(crate) struct WorkerConfig {
+    pub index: usize,
+    pub cfg: ModelConfig,
+    pub weights: Arc<EngineWeights>,
+    pub backend: Option<String>,
+    pub policy: BatchPolicy,
+    pub shared: Arc<Shared>,
+}
+
+/// Worker body: open a session, build + warm the executor replica,
+/// report readiness, then serve until the queue is closed **and**
+/// drained.
+pub(crate) fn run(wc: WorkerConfig, ready: mpsc::Sender<Result<()>>) -> Result<()> {
+    let session = match open_session(wc.backend.as_deref()) {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = format!("{e}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("worker {}: session open failed: {msg}", wc.index);
+        }
+    };
+    let exec = match ModelExecutor::with_weights(
+        &session,
+        &wc.cfg,
+        wc.weights.exec_weights(),
+    )
+    .and_then(|ex| ex.warm().map(|_| ex))
+    {
+        Ok(ex) => {
+            wc.shared.metrics.set_resident(ex.resident_report());
+            let _ = ready.send(Ok(()));
+            ex
+        }
+        Err(e) => {
+            let msg = format!("{e}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("worker {}: executor build failed: {msg}", wc.index);
+        }
+    };
+
+    // a mid-serve failure — Err *or panic* — must not strand callers:
+    // the guard stops admissions and rejects whatever is still queued so
+    // no Ticket::wait blocks forever on a queue nobody will drain
+    // (healthy workers of a multi-worker pool may still race the drain
+    // for some of these jobs — those get served, the rest get a typed
+    // rejection). Disarmed on the clean exit path.
+    let mut guard = FailGuard { shared: wc.shared.as_ref(), armed: true };
+    let result = serve_loop(&wc, &exec);
+    if result.is_ok() {
+        guard.armed = false;
+    }
+    drop(guard);
+    result
+}
+
+/// Drop guard for the worker's serve phase: on an error return or a
+/// panic unwind it closes the queue and drains it with typed
+/// rejections (serve_loop panics happen outside the queue's mutex, so
+/// its lock is not poisoned here).
+struct FailGuard<'a> {
+    shared: &'a Shared,
+    armed: bool,
+}
+
+impl Drop for FailGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        self.shared.queue.close();
+        while let Some(job) = self.shared.queue.pop() {
+            let _ = job.respond.send(Err(Rejected::Closed));
+        }
+    }
+}
+
+fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
+    let mut batcher: Batcher<Job> = Batcher::new(wc.policy, wc.cfg.batch);
+    while let Some(first) = wc.shared.queue.pop() {
+        if batcher.push(first).is_err() {
+            // flush() drains the batcher before every loop iteration,
+            // and the fill loop below is guarded by !full() — a reject
+            // here means a job would vanish without a reply, so fail
+            // loudly instead of dropping it silently
+            unreachable!("batcher not drained at loop top");
+        }
+        let linger = Instant::now() + wc.policy.max_linger;
+        while !batcher.full() {
+            match wc.shared.queue.pop_before(linger) {
+                Some(job) => {
+                    if batcher.push(job).is_err() {
+                        unreachable!("push is guarded by !batcher.full()");
+                    }
+                }
+                None => break,
+            }
+        }
+        flush(wc, exec, &mut batcher)?;
+    }
+    Ok(())
+}
+
+fn open_session(choice: Option<&str>) -> Result<Session> {
+    match choice {
+        Some(c) => Session::from_choice(c),
+        None => Session::open_default(),
+    }
+}
+
+/// Execute the pending batch: deadline-expired jobs are rejected with a
+/// typed reply (never silently dropped), the rest run as one static
+/// batch and every reply carries the batch's real occupancy.
+fn flush(
+    wc: &WorkerConfig,
+    exec: &ModelExecutor,
+    batcher: &mut Batcher<Job>,
+) -> Result<()> {
+    let now = Instant::now();
+    let (live, expired): (Vec<Job>, Vec<Job>) = batcher
+        .take()
+        .into_iter()
+        .partition(|j| j.deadline.is_none_or(|d| now < d));
+    for job in expired {
+        wc.shared.metrics.count_deadline();
+        let _ = job.respond.send(Err(Rejected::Deadline));
+    }
+    if live.is_empty() {
+        return Ok(());
+    }
+    let samples: Vec<Sample> = live.iter().map(|j| j.sample.clone()).collect();
+    let (tokens, vis) = crate::data::pack_batch(&samples, &wc.cfg);
+    let preds = exec.predict(&tokens, &vis)?;
+    let fill = live.len();
+    let latencies: Vec<_> =
+        live.iter().map(|j| j.enqueued.elapsed()).collect();
+    // record before replying so a client holding its reply is always
+    // already visible in a metrics snapshot (requests == Σ fills holds
+    // at every observable instant)
+    wc.shared.metrics.record_batch(wc.index, fill, &latencies);
+    for ((job, &answer), latency) in
+        live.into_iter().zip(preds.iter()).zip(latencies)
+    {
+        let _ = job.respond.send(Ok(Reply {
+            answer,
+            correct: answer == job.sample.answer as usize,
+            latency,
+            batch_fill: fill,
+        }));
+    }
+    Ok(())
+}

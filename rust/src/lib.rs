@@ -5,9 +5,10 @@
 //! - **L3 (this crate)**: the coordinator — expert profiling, importance
 //!   metrics, K-means precision assignment (the paper's Algorithm 2),
 //!   quantization drivers (RTN / GPTQ / AWQ / SignRound), the evaluation
-//!   harness over the nine synthetic VLM tasks, a threaded inference
-//!   server with per-expert mixed-precision weight management, and an
-//!   offload simulator for the paper's §5.4 hardware claims.
+//!   harness over the nine synthetic VLM tasks, the builder-composed
+//!   multi-worker serving [`engine`] with per-expert mixed-precision
+//!   weight management and typed client sessions, and an offload
+//!   simulator for the paper's §5.4 hardware claims.
 //! - **Execution** goes through the [`runtime::Backend`] trait. The
 //!   default is the pure-Rust **native interpreter** (no artifacts, no
 //!   native libraries — hermetic `cargo test`). With the `backend-xla`
@@ -27,6 +28,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod eval;
 pub mod importance;
 pub mod jsonx;

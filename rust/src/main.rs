@@ -19,11 +19,12 @@ use mopeq::cluster::Granularity;
 use mopeq::config;
 use mopeq::coordinator::{MethodSpec, Metric, Pipeline};
 use mopeq::data::Task;
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
 use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
 use mopeq::report;
-use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist,
-                   ServerHandle};
+use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist};
 use mopeq::train::{train, TrainConfig};
+use std::time::Duration;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -369,64 +370,106 @@ fn cmd_offload(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let p = pipeline(args)?;
     let n = args.usize_flag("requests", 64)?;
-    let ws = p.clone_weights();
-    // --packed: assign a MoPEQ 2/3/4-bit map (closed-form Hessian,
-    // model-wise), pack every expert, and serve with no f32 expert copy
-    let packed_map = if args.switch("packed") {
-        let sens =
-            mopeq::importance::hessian_closed_form(&p.ws, &p.cfg)?;
-        Some(p.assign(&sens, Granularity::ModelWise))
-    } else {
-        None
-    };
-    let handle = match &packed_map {
-        Some(pmap) => {
-            let store = mopeq::moe::PackedStore::rtn(&p.cfg, &p.ws, pmap)?;
-            ServerHandle::start_packed(
-                p.cfg.clone(),
-                ws,
-                store,
-                BatchPolicy::default(),
-            )?
-        }
-        None => {
-            ServerHandle::start(p.cfg.clone(), ws, BatchPolicy::default())?
-        }
-    };
+    let workers = args.usize_flag("workers", 1)?;
+    let queue_depth = args.usize_flag("queue-depth", 128)?;
+    let linger_ms = args.u64_flag("linger-ms", 2)?;
+
+    // one construction path for every deployment shape: --packed picks
+    // WeightForm::Packed + the paper's MoPEQ allocation (closed-form
+    // Hessian, model-wise 2/3/4-bit) and serves with no f32 expert copy
+    let mut builder = Engine::builder(p.cfg.name)
+        .weights(p.clone_weights())
+        .seed(p.seed)
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .batch_policy(BatchPolicy {
+            max_linger: Duration::from_millis(linger_ms),
+        });
+    if args.switch("packed") {
+        builder = builder
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::Mopeq);
+    }
+    let engine = builder.build()?;
+    let pmap = engine.precision_map().cloned();
+
+    let client = engine.client();
     let mut rng = mopeq::rng::Rng::new(p.seed).derive("serve-cli");
     let mut pending = Vec::new();
+    let mut rejected = 0usize;
     for _ in 0..n {
         let task = Task::ALL[rng.below(Task::ALL.len())];
         let s = mopeq::data::gen_sample(task, &p.cfg, &mut rng);
-        pending.push(handle.submit(s)?);
-    }
-    let mut correct = 0;
-    for rx in pending {
-        let reply = rx.recv()?;
-        if reply.correct {
-            correct += 1;
+        match client.submit(s) {
+            Ok(t) => pending.push(t),
+            Err(r) => {
+                rejected += 1;
+                eprintln!("submit rejected: {r}");
+            }
         }
     }
-    let stats = handle.shutdown()?;
+    // live telemetry while the queue is still draining
+    let live = engine.metrics();
     println!(
-        "served {} requests in {} batches (mean fill {:.2})",
-        stats.requests, stats.batches, stats.mean_fill
+        "live: queue depth {}, {} answered of {} admitted so far",
+        live.queue_depth, live.requests, live.submitted
     );
+    let mut correct = 0usize;
+    let mut answered = 0usize;
+    let mut min_fill = usize::MAX;
+    for t in pending {
+        match t.wait() {
+            Ok(reply) => {
+                answered += 1;
+                min_fill = min_fill.min(reply.batch_fill);
+                if reply.correct {
+                    correct += 1;
+                }
+            }
+            Err(r) => {
+                rejected += 1;
+                eprintln!("request rejected: {r}");
+            }
+        }
+    }
+    let stats = engine.shutdown()?;
+    println!(
+        "served {} requests in {} batches (mean fill {:.2}, min \
+         batch_fill {}) on {} worker(s); {} rejected",
+        stats.requests,
+        stats.batches,
+        stats.mean_fill,
+        if min_fill == usize::MAX { 0 } else { min_fill },
+        stats.workers.len(),
+        rejected
+    );
+    for (i, w) in stats.workers.iter().enumerate() {
+        println!(
+            "  worker {i}: {} reqs, {} batches, fill {:.2}, p50 {:?}, \
+             p99 {:?}",
+            w.requests, w.batches, w.mean_fill, w.p50, w.p99
+        );
+    }
     println!(
         "latency p50 {:?}  p95 {:?}  p99 {:?}  throughput {:.1} req/s",
         stats.p50, stats.p95, stats.p99, stats.throughput_rps
     );
-    println!("accuracy {:.3}", correct as f64 / n as f64);
+    println!("accuracy {:.3}", correct as f64 / answered.max(1) as f64);
     let r = &stats.resident;
     println!(
-        "resident weights: backbone {} B, experts {} B ({} B heap, {} \
-         dense f32 expert tensors)",
+        "resident weights/worker: backbone {} B, experts {} B ({} B \
+         heap, {} dense f32 expert tensors){}",
         r.backbone_bytes,
         r.expert_accounted_bytes,
         r.expert_heap_bytes,
-        r.dense_expert_tensors
+        r.dense_expert_tensors,
+        if pmap.is_some() {
+            "; packed words shared across workers via Arc"
+        } else {
+            ""
+        }
     );
-    if let Some(pmap) = &packed_map {
+    if let Some(pmap) = &pmap {
         let accounted: usize = pmap
             .iter_experts()
             .map(|(_, b)| mopeq::serve::expert_bytes(&p.cfg, b))

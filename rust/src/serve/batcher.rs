@@ -1,9 +1,13 @@
-//! Dynamic batcher: accumulates requests up to the static batch size or
-//! a linger deadline — the standard continuous-batching trade-off
+//! Dynamic batcher: accumulates items up to the static batch size or a
+//! linger deadline — the standard continuous-batching trade-off
 //! (throughput vs tail latency), tunable per deployment and swept by the
-//! serving bench.
+//! serving bench. Generic over the item type so the engine can batch
+//! its queued jobs directly.
+//!
+//! Capacity is **enforced**, not merely `debug_assert!`ed: pushing into
+//! a full batcher returns the item to the caller instead of silently
+//! overflowing the static batch shape in release builds.
 
-use crate::serve::Request;
 use std::time::Duration;
 
 #[derive(Clone, Copy, Debug)]
@@ -18,20 +22,27 @@ impl Default for BatchPolicy {
     }
 }
 
-pub struct Batcher {
+pub struct Batcher<T> {
     pub policy: BatchPolicy,
     capacity: usize,
-    pending: Vec<Request>,
+    pending: Vec<T>,
 }
 
-impl Batcher {
-    pub fn new(policy: BatchPolicy, capacity: usize) -> Batcher {
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy, capacity: usize) -> Batcher<T> {
+        let capacity = capacity.max(1);
         Batcher { policy, capacity, pending: Vec::with_capacity(capacity) }
     }
 
-    pub fn push(&mut self, r: Request) {
-        debug_assert!(self.pending.len() < self.capacity);
-        self.pending.push(r);
+    /// Admit an item into the pending batch. A full batcher rejects the
+    /// push and hands the item back — the caller flushes and retries
+    /// (identical behavior in debug and release builds).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.pending.len() >= self.capacity {
+            return Err(item);
+        }
+        self.pending.push(item);
+        Ok(())
     }
 
     pub fn full(&self) -> bool {
@@ -47,7 +58,7 @@ impl Batcher {
     }
 
     /// Drain the pending batch.
-    pub fn take(&mut self) -> Vec<Request> {
+    pub fn take(&mut self) -> Vec<T> {
         std::mem::take(&mut self.pending)
     }
 }
@@ -55,34 +66,44 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config;
-    use crate::data::{gen_sample, Task};
-    use crate::rng::Rng;
-    use std::sync::mpsc;
-    use std::time::Instant;
-
-    fn req() -> Request {
-        let cfg = config::variant("dsvl2_tiny").unwrap();
-        let mut rng = Rng::new(0);
-        let (tx, _rx) = mpsc::channel();
-        Request {
-            sample: gen_sample(Task::Blink, &cfg, &mut rng),
-            enqueued: Instant::now(),
-            respond: tx,
-        }
-    }
 
     #[test]
     fn fills_and_drains() {
-        let mut b = Batcher::new(BatchPolicy::default(), 4);
+        let mut b: Batcher<usize> = Batcher::new(BatchPolicy::default(), 4);
         assert!(b.is_empty());
-        for _ in 0..4 {
+        for i in 0..4 {
             assert!(!b.full());
-            b.push(req());
+            b.push(i).unwrap();
         }
         assert!(b.full());
-        assert_eq!(b.take().len(), 4);
+        assert_eq!(b.take(), vec![0, 1, 2, 3]);
         assert!(b.is_empty());
         assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn overflow_is_rejected_not_silent() {
+        // plain `if`-based enforcement: this test exercises the exact
+        // same code path in release builds (CI runs the release-profile
+        // engine_integration suite over the same Batcher), unlike the
+        // old debug_assert! which compiled out
+        let mut b: Batcher<&'static str> =
+            Batcher::new(BatchPolicy::default(), 2);
+        b.push("a").unwrap();
+        b.push("b").unwrap();
+        assert_eq!(b.push("overflow"), Err("overflow"));
+        assert_eq!(b.len(), 2, "rejected item must not grow the batch");
+        assert_eq!(b.take(), vec!["a", "b"]);
+        // after a flush the rejected item fits again
+        b.push("overflow").unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut b: Batcher<u8> = Batcher::new(BatchPolicy::default(), 0);
+        b.push(1).unwrap();
+        assert!(b.full());
+        assert_eq!(b.push(2), Err(2));
     }
 }

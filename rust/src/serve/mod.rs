@@ -1,11 +1,12 @@
-//! Threaded inference server: request router + dynamic batcher over the
-//! static-shape executor (vLLM-style, sized down). Python never runs
-//! here — the worker owns its own backend [`Session`] (native
-//! interpreter by default, PJRT with `backend-xla`) and a (possibly
-//! mixed-precision-quantized) weight store, and requests flow through
-//! std mpsc channels (the offline vendor set has no tokio; the event
-//! loop is a dedicated thread, which for a single-CPU device is the
-//! honest topology anyway).
+//! Serving support: the dynamic [`Batcher`] (static-shape batch
+//! assembly under a linger policy) and the §5.4 expert-offload traffic
+//! simulator.
+//!
+//! The threaded server itself lives in [`crate::engine`] — a
+//! builder-composed deployment (`EngineBuilder`: variant × weight form
+//! × precision source × backend × batch policy × worker count ×
+//! admission control) that replaced the old single-worker
+//! `ServerHandle::start` / `start_packed` constructor split.
 
 pub mod batcher;
 pub mod offload;
@@ -15,273 +16,3 @@ pub use offload::{
     expert_bytes, simulate_offload, ExpertCache, LinkModel, OffloadReport,
     RoutingDist,
 };
-
-use crate::config::ModelConfig;
-use crate::coordinator::executor::{ModelExecutor, ResidentReport};
-use crate::data::Sample;
-use crate::moe::packed::PackedStore;
-use crate::moe::WeightStore;
-use crate::runtime::Session;
-use anyhow::{anyhow, Result};
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
-
-/// One inference request.
-pub struct Request {
-    pub sample: Sample,
-    pub enqueued: Instant,
-    respond: mpsc::Sender<Reply>,
-}
-
-/// Server reply for one request.
-#[derive(Clone, Debug)]
-pub struct Reply {
-    pub answer: usize,
-    pub correct: bool,
-    /// end-to-end latency
-    pub latency: Duration,
-    /// how many real requests shared the batch
-    pub batch_fill: usize,
-}
-
-enum Control {
-    Submit(Request),
-    Shutdown,
-}
-
-/// Handle for submitting requests to a running server.
-pub struct ServerHandle {
-    tx: mpsc::Sender<Control>,
-    join: Option<std::thread::JoinHandle<Result<ServerStats>>>,
-}
-
-/// Aggregate statistics reported at shutdown.
-#[derive(Clone, Debug, Default)]
-pub struct ServerStats {
-    pub requests: usize,
-    pub batches: usize,
-    pub mean_fill: f64,
-    pub p50: Duration,
-    pub p95: Duration,
-    pub p99: Duration,
-    pub throughput_rps: f64,
-    /// weight bytes the worker's executor actually held resident —
-    /// for a packed deployment `expert_accounted_bytes` equals the
-    /// `SizePolicy` accounting and `dense_expert_tensors` is 0
-    pub resident: ResidentReport,
-}
-
-/// Which weight form the worker serves from.
-enum ServeWeights {
-    /// dense f32 store (fp16 reference or qdq→f32 quantized)
-    Dense(WeightStore),
-    /// bit-packed experts + backbone-only store (experts stripped)
-    Packed { backbone: WeightStore, experts: PackedStore },
-}
-
-impl ServerHandle {
-    /// Start a server thread: opens its own session, builds the executor
-    /// over `ws`, pre-compiles entries, then serves until shutdown.
-    pub fn start(
-        cfg: ModelConfig,
-        ws: WeightStore,
-        policy: BatchPolicy,
-    ) -> Result<ServerHandle> {
-        Self::start_weights(cfg, ServeWeights::Dense(ws), policy)
-    }
-
-    /// Start a server over a bit-packed expert store: the worker serves
-    /// the `moe_layer_packed` lowering and the f32 expert tensors of
-    /// `backbone` are dropped before the thread spawns — a quantized
-    /// deployment holds **no** dense expert copy, and
-    /// `ServerStats::resident` proves it.
-    pub fn start_packed(
-        cfg: ModelConfig,
-        mut backbone: WeightStore,
-        experts: PackedStore,
-        policy: BatchPolicy,
-    ) -> Result<ServerHandle> {
-        backbone.strip_experts();
-        Self::start_weights(
-            cfg,
-            ServeWeights::Packed { backbone, experts },
-            policy,
-        )
-    }
-
-    fn start_weights(
-        cfg: ModelConfig,
-        weights: ServeWeights,
-        policy: BatchPolicy,
-    ) -> Result<ServerHandle> {
-        let (tx, rx) = mpsc::channel::<Control>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("mopeq-server".into())
-            .spawn(move || worker(cfg, weights, policy, rx, ready_tx))?;
-        // wait for warm-up (compile) to finish so callers measure pure
-        // serving latency
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server thread died during warmup"))??;
-        Ok(ServerHandle { tx, join: Some(join) })
-    }
-
-    /// Submit a request; returns the reply receiver.
-    pub fn submit(&self, sample: Sample) -> Result<mpsc::Receiver<Reply>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Control::Submit(Request {
-                sample,
-                enqueued: Instant::now(),
-                respond: rtx,
-            }))
-            .map_err(|_| anyhow!("server is down"))?;
-        Ok(rrx)
-    }
-
-    /// Stop the server and collect statistics.
-    pub fn shutdown(mut self) -> Result<ServerStats> {
-        let _ = self.tx.send(Control::Shutdown);
-        self.join
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| anyhow!("server thread panicked"))?
-    }
-}
-
-fn build_executor<'a>(
-    session: &'a Session,
-    cfg: &ModelConfig,
-    weights: &ServeWeights,
-) -> Result<ModelExecutor<'a>> {
-    match weights {
-        ServeWeights::Dense(ws) => ModelExecutor::new(session, cfg, ws),
-        ServeWeights::Packed { backbone, experts } => {
-            ModelExecutor::with_packed(session, cfg, backbone, experts)
-        }
-    }
-}
-
-fn worker(
-    cfg: ModelConfig,
-    weights: ServeWeights,
-    policy: BatchPolicy,
-    rx: mpsc::Receiver<Control>,
-    ready: mpsc::Sender<Result<()>>,
-) -> Result<ServerStats> {
-    let session = match Session::open_default() {
-        Ok(s) => s,
-        Err(e) => {
-            let msg = format!("{e}");
-            let _ = ready.send(Err(e));
-            anyhow::bail!("session open failed: {msg}");
-        }
-    };
-    let exec = match build_executor(&session, &cfg, &weights)
-        .and_then(|ex| ex.warm().map(|_| ex))
-    {
-        Ok(ex) => {
-            let _ = ready.send(Ok(()));
-            ex
-        }
-        Err(e) => {
-            let msg = format!("{e}");
-            let _ = ready.send(Err(e));
-            anyhow::bail!("executor build failed: {msg}");
-        }
-    };
-    let resident = exec.resident_report();
-    // the executor prepared everything it needs; the source weights can
-    // go (for the packed path this is where the last reference to any
-    // f32 expert data would have died — start_packed already stripped)
-    drop(weights);
-
-    let mut batcher = Batcher::new(policy, cfg.batch);
-    let mut latencies: Vec<Duration> = Vec::new();
-    let mut batches = 0usize;
-    let mut fills = 0usize;
-    let started = Instant::now();
-
-    'outer: loop {
-        // blocking wait for the first request of a batch
-        let first = match rx.recv() {
-            Ok(Control::Submit(r)) => r,
-            Ok(Control::Shutdown) | Err(_) => break 'outer,
-        };
-        batcher.push(first);
-        // fill the batch until full or the linger deadline passes
-        let deadline = Instant::now() + batcher.policy.max_linger;
-        while !batcher.full() {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Control::Submit(r)) => batcher.push(r),
-                Ok(Control::Shutdown) => {
-                    flush(&exec, &cfg, &mut batcher, &mut latencies,
-                          &mut batches, &mut fills)?;
-                    break 'outer;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
-            }
-        }
-        flush(&exec, &cfg, &mut batcher, &mut latencies, &mut batches,
-              &mut fills)?;
-    }
-
-    latencies.sort();
-    let pct = |p: f64| -> Duration {
-        if latencies.is_empty() {
-            Duration::ZERO
-        } else {
-            latencies[((latencies.len() as f64 * p) as usize)
-                .min(latencies.len() - 1)]
-        }
-    };
-    let n = latencies.len();
-    Ok(ServerStats {
-        requests: n,
-        batches,
-        mean_fill: if batches > 0 { fills as f64 / batches as f64 } else { 0.0 },
-        p50: pct(0.50),
-        p95: pct(0.95),
-        p99: pct(0.99),
-        throughput_rps: n as f64 / started.elapsed().as_secs_f64().max(1e-9),
-        resident,
-    })
-}
-
-fn flush(
-    exec: &ModelExecutor,
-    cfg: &ModelConfig,
-    batcher: &mut Batcher,
-    latencies: &mut Vec<Duration>,
-    batches: &mut usize,
-    fills: &mut usize,
-) -> Result<()> {
-    let pending = batcher.take();
-    if pending.is_empty() {
-        return Ok(());
-    }
-    let samples: Vec<Sample> =
-        pending.iter().map(|r| r.sample.clone()).collect();
-    let (tokens, vis) = crate::data::pack_batch(&samples, cfg);
-    let preds = exec.predict(&tokens, &vis)?;
-    *batches += 1;
-    *fills += pending.len();
-    for (req, &answer) in pending.into_iter().zip(preds.iter()) {
-        let latency = req.enqueued.elapsed();
-        latencies.push(latency);
-        let _ = req.respond.send(Reply {
-            answer,
-            correct: answer == req.sample.answer as usize,
-            latency,
-            batch_fill: 0, // filled by caller-side if needed
-        });
-    }
-    Ok(())
-}

@@ -1,0 +1,246 @@
+//! Multi-worker engine integration: concurrent typed clients against a
+//! mixed {2,3,4}-bit **packed** deployment with 2 workers. Locks the
+//! unified-API guarantees:
+//!
+//! - replies are routed to the right requester (every reply matches the
+//!   prediction an offline executor over the *same* codes makes for
+//!   that exact sample — batch rows are independent, so routing is the
+//!   only way answers could differ),
+//! - shutdown drains every admitted job,
+//! - the live/final stats are self-consistent
+//!   (`requests == Σ worker fills`),
+//! - resident bytes still equal the `SizePolicy` accounting, and
+//! - the shared `Batcher` enforces capacity in this (release-profile in
+//!   CI) build.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::{ModelExecutor, Pipeline};
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::serve::{expert_bytes, BatchPolicy, Batcher};
+use mopeq::tensor::Tensor;
+use std::time::Duration;
+
+/// A mixed {2,3,4}-bit allocation exercising every packed width.
+fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+    let mut pm = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+        }
+    }
+    pm
+}
+
+/// The prediction an offline executor makes for one sample — the
+/// routing oracle (rows of a static batch are independent, so the
+/// engine's batch composition cannot change per-sample answers).
+fn expected_answers(
+    cfg: &ModelConfig,
+    seed: u64,
+    pmap: &PrecisionMap,
+    samples: &[Sample],
+) -> Vec<usize> {
+    let ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    let store = PackedStore::rtn(cfg, &ws, pmap).unwrap();
+    let mut qdq = WeightStore::init(cfg, &local_meta(cfg), seed);
+    store.write_dequantized(&mut qdq).unwrap();
+    let session = Session::native();
+    let exec = ModelExecutor::new(&session, cfg, &qdq).unwrap();
+    samples
+        .iter()
+        .map(|s| {
+            let (tokens, vis) = pack_batch(std::slice::from_ref(s), cfg);
+            exec.predict(&tokens, &vis).unwrap()[0]
+        })
+        .collect()
+}
+
+#[test]
+fn two_worker_packed_engine_routes_drains_and_accounts() {
+    const SEED: u64 = 21;
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 8;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let pmap = mixed_map(&cfg);
+
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(2 * CLIENTS * PER_CLIENT)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .build()
+        .expect("2-worker packed engine build failed");
+
+    // distinct per-client workloads + their oracle answers
+    let workloads: Vec<Vec<Sample>> = (0..CLIENTS)
+        .map(|c| {
+            let mut rng = Rng::new(SEED).derive(&format!("client-{c}"));
+            (0..PER_CLIENT)
+                .map(|i| {
+                    gen_sample(Task::ALL[(c + i) % Task::ALL.len()], &cfg,
+                               &mut rng)
+                })
+                .collect()
+        })
+        .collect();
+    let oracles: Vec<Vec<usize>> = workloads
+        .iter()
+        .map(|w| expected_answers(&cfg, SEED, &pmap, w))
+        .collect();
+
+    // concurrent clients, each on its own thread
+    std::thread::scope(|scope| {
+        for (client_id, (samples, expect)) in
+            workloads.iter().zip(&oracles).enumerate()
+        {
+            let client = engine.client();
+            let cfg = &cfg;
+            scope.spawn(move || {
+                let tickets: Vec<_> = samples
+                    .iter()
+                    .map(|s| client.submit(s.clone()).unwrap())
+                    .collect();
+                for (i, t) in tickets.into_iter().enumerate() {
+                    let reply = t.wait().expect("request dropped");
+                    assert_eq!(
+                        reply.answer, expect[i],
+                        "client {client_id} request {i}: reply routed to \
+                         the wrong requester"
+                    );
+                    assert!(
+                        reply.batch_fill >= 1
+                            && reply.batch_fill <= cfg.batch,
+                        "batch_fill {} out of range",
+                        reply.batch_fill
+                    );
+                }
+            });
+        }
+    });
+
+    // live metrics are queryable while the engine is still up
+    let live = engine.metrics();
+    assert_eq!(live.requests, CLIENTS * PER_CLIENT);
+    assert_eq!(live.submitted, CLIENTS * PER_CLIENT);
+
+    // shutdown drains: submit a tail burst and immediately shut down —
+    // every admitted ticket must still be answered
+    let client = engine.client();
+    let mut rng = Rng::new(SEED).derive("tail");
+    let tail_samples: Vec<Sample> = (0..4)
+        .map(|_| gen_sample(Task::Blink, &cfg, &mut rng))
+        .collect();
+    let tail_expect = expected_answers(&cfg, SEED, &pmap, &tail_samples);
+    let tail: Vec<_> = tail_samples
+        .iter()
+        .map(|s| client.submit(s.clone()).unwrap())
+        .collect();
+    let stats = engine.shutdown().unwrap();
+    for (i, t) in tail.into_iter().enumerate() {
+        let reply = t.wait().expect("shutdown dropped an admitted job");
+        assert_eq!(reply.answer, tail_expect[i]);
+    }
+
+    // stats self-consistency
+    let total = CLIENTS * PER_CLIENT + 4;
+    assert_eq!(stats.requests, total);
+    assert_eq!(stats.submitted, total);
+    assert_eq!(
+        stats.requests,
+        stats.workers.iter().map(|w| w.requests).sum::<usize>(),
+        "requests == Σ per-worker fills"
+    );
+    assert_eq!(
+        stats.batches,
+        stats.workers.iter().map(|w| w.batches).sum::<usize>()
+    );
+    for w in &stats.workers {
+        assert_eq!(
+            w.requests,
+            w.fill_hist
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (i + 1) * n)
+                .sum::<usize>(),
+            "fill histogram inconsistent with fills"
+        );
+    }
+    assert_eq!(stats.workers.len(), 2);
+    assert_eq!(stats.rejected_busy, 0);
+    assert_eq!(stats.rejected_deadline, 0);
+    assert_eq!(stats.queue_depth, 0, "shutdown must drain the queue");
+
+    // residency: measured == SizePolicy accounting, zero f32 experts
+    let accounted: usize = pmap
+        .iter_experts()
+        .map(|(_, b)| expert_bytes(&cfg, b))
+        .sum();
+    assert_eq!(stats.resident.expert_accounted_bytes, accounted);
+    assert_eq!(stats.resident.dense_expert_tensors, 0);
+}
+
+#[test]
+fn engine_weights_variant_mismatch_is_rejected() {
+    let other = config::variant("molmoe").unwrap();
+    let ws = WeightStore::init(&other, &local_meta(&other), 0);
+    let err = Engine::builder("dsvl2_tiny").weights(ws).build().unwrap_err();
+    assert!(err.to_string().contains("molmoe"), "{err}");
+}
+
+#[test]
+fn fp16_form_rejects_a_quantizing_precision_source() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Fp16)
+        .precision(PrecisionSource::Uniform(4))
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("Fp16"), "{err}");
+}
+
+#[test]
+fn packed_form_requires_a_precision_source() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("PrecisionSource"), "{err}");
+}
+
+#[test]
+fn pipeline_weights_thread_into_the_engine() {
+    // the CLI path: Pipeline-loaded weights handed to the builder
+    let p = Pipeline::open("dsvl2_tiny", 0).unwrap();
+    let engine = Engine::builder(p.cfg.name)
+        .weights(p.clone_weights())
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let mut rng = Rng::new(0);
+    let reply = client
+        .call(gen_sample(Task::Blink, &p.cfg, &mut rng))
+        .unwrap();
+    assert!(reply.answer < p.cfg.vocab);
+    assert_eq!(engine.shutdown().unwrap().requests, 1);
+}
+
+#[test]
+fn batcher_enforces_capacity_in_this_build_profile() {
+    // satellite: the engine's batcher rejects overflow identically in
+    // debug and release — CI runs this test with --release, so the
+    // old debug_assert!-only guard would not have been exercised here
+    let mut b: Batcher<Tensor<f32>> = Batcher::new(BatchPolicy::default(), 2);
+    b.push(Tensor::zeros(&[1])).unwrap();
+    b.push(Tensor::zeros(&[1])).unwrap();
+    let rejected = b.push(Tensor::ones(&[3]));
+    let got_back = rejected.expect_err("full batcher must reject");
+    assert_eq!(got_back, Tensor::ones(&[3]), "rejected item handed back");
+    assert_eq!(b.len(), 2);
+    assert_eq!(b.take().len(), 2);
+    b.push(got_back).unwrap();
+}

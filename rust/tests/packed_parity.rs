@@ -7,15 +7,16 @@
 //! tensor, and its accounted bytes equal the SizePolicy accounting.
 
 use mopeq::config::{self, ModelConfig};
-use mopeq::coordinator::{pack_experts, ModelExecutor, Quantizer};
+use mopeq::coordinator::{pack_experts, ExecWeights, ModelExecutor, Quantizer};
 use mopeq::data::{gen_sample, pack_batch, Task};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
 use mopeq::moe::{
     local_meta, ExpertId, PackedStore, PrecisionMap, WeightStore,
 };
 use mopeq::quant::{self, kernels};
 use mopeq::rng::Rng;
 use mopeq::runtime::Session;
-use mopeq::serve::{expert_bytes, BatchPolicy, ServerHandle};
+use mopeq::serve::expert_bytes;
 use mopeq::tensor::Tensor;
 
 /// A mixed {2,3,4}-bit allocation exercising every packed width.
@@ -84,9 +85,12 @@ fn packed_forward_bit_exact_vs_qdq_forward() {
     let mut backbone = WeightStore::init(&cfg, &local_meta(&cfg), 11);
     backbone.strip_experts();
     assert!(!backbone.has_expert_tensors());
-    let packed_exec =
-        ModelExecutor::with_packed(&session, &cfg, &backbone, &store)
-            .unwrap();
+    let packed_exec = ModelExecutor::with_weights(
+        &session,
+        &cfg,
+        ExecWeights::Packed { backbone: &backbone, experts: &store },
+    )
+    .unwrap();
     packed_exec.warm().unwrap();
 
     let (tokens, vis) = sample_batch(&cfg, 3);
@@ -157,9 +161,12 @@ fn packed_resident_accounting_matches_size_policy() {
     let session = Session::native();
     let mut backbone = WeightStore::init(&cfg, &local_meta(&cfg), 13);
     backbone.strip_experts();
-    let exec =
-        ModelExecutor::with_packed(&session, &cfg, &backbone, &store)
-            .unwrap();
+    let exec = ModelExecutor::with_weights(
+        &session,
+        &cfg,
+        ExecWeights::Packed { backbone: &backbone, experts: &store },
+    )
+    .unwrap();
     let r = exec.resident_report();
     assert_eq!(r.expert_accounted_bytes, accounted);
     assert_eq!(r.dense_expert_tensors, 0, "f32 expert residency");
@@ -170,24 +177,27 @@ fn packed_resident_accounting_matches_size_policy() {
 }
 
 #[test]
-fn packed_server_serves_and_reports_residency() {
+fn packed_engine_serves_and_reports_residency() {
     let cfg = config::variant("dsvl2_tiny").unwrap();
-    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 14);
     let pmap = mixed_map(&cfg);
-    let store = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
     let accounted: usize = pmap
         .iter_experts()
         .map(|(_, b)| expert_bytes(&cfg, b))
         .sum();
 
-    // parity of answers: a dense server over the dequantized copies
-    let mut qdq_ws = WeightStore::init(&cfg, &local_meta(&cfg), 14);
-    store.write_dequantized(&mut qdq_ws).unwrap();
-    let dense = ServerHandle::start(cfg.clone(), qdq_ws,
-                                    BatchPolicy::default())
+    // same seed + same map → the engine's internal RTN store carries
+    // the same codes on both deployments; answers must agree
+    let dense = Engine::builder(cfg.name)
+        .seed(14)
+        .weight_form(WeightForm::DequantizedF32)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .build()
         .unwrap();
-    let packed = ServerHandle::start_packed(cfg.clone(), ws, store,
-                                            BatchPolicy::default())
+    let packed = Engine::builder(cfg.name)
+        .seed(14)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .build()
         .unwrap();
 
     let mut rng = Rng::new(5);
@@ -196,10 +206,12 @@ fn packed_server_serves_and_reports_residency() {
             gen_sample(Task::ALL[rng.below(Task::ALL.len())], &cfg, &mut rng)
         })
         .collect();
+    let (dc, pc) = (dense.client(), packed.client());
     for s in &samples {
-        let a = dense.submit(s.clone()).unwrap().recv().unwrap();
-        let b = packed.submit(s.clone()).unwrap().recv().unwrap();
-        assert_eq!(a.answer, b.answer, "packed server answer diverged");
+        let a = dc.call(s.clone()).unwrap();
+        let b = pc.call(s.clone()).unwrap();
+        assert_eq!(a.answer, b.answer, "packed engine answer diverged");
+        assert!(b.batch_fill >= 1, "batch_fill must be populated");
     }
     let dstats = dense.shutdown().unwrap();
     let pstats = packed.shutdown().unwrap();
@@ -207,7 +219,7 @@ fn packed_server_serves_and_reports_residency() {
     // measured residency == SizePolicy accounting; no f32 experts
     assert_eq!(pstats.resident.expert_accounted_bytes, accounted);
     assert_eq!(pstats.resident.dense_expert_tensors, 0);
-    // while the dense server holds the full f32 expert footprint
+    // while the qdq→f32 deployment holds the full f32 expert footprint
     assert_eq!(
         dstats.resident.expert_heap_bytes,
         cfg.total_experts() * cfg.expert_params() * 4

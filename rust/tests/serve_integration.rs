@@ -1,24 +1,26 @@
-//! Server integration: full request → batcher → executor → reply loop
-//! over the default backend, including mixed-precision weight swaps.
+//! Engine integration (single worker): full client → admission →
+//! batcher → executor → reply loop over the default backend, including
+//! mixed-precision weight forms, batch_fill reporting, per-request
+//! deadlines, and shutdown semantics.
 
 use mopeq::config;
-use mopeq::coordinator::{quantize_experts, Quantizer};
 use mopeq::data::{eval_set, gen_sample, Task};
-use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::engine::{Engine, PrecisionSource, Rejected, WeightForm};
+use mopeq::moe::{local_meta, WeightStore};
 use mopeq::rng::Rng;
-use mopeq::serve::{BatchPolicy, ServerHandle};
+use mopeq::serve::BatchPolicy;
 use std::time::Duration;
 
 #[test]
-fn server_roundtrip_and_stats() {
+fn engine_roundtrip_and_stats() {
     let cfg = config::variant("dsvl2_tiny").unwrap();
     let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
-    let handle = ServerHandle::start(
-        cfg.clone(),
-        ws,
-        BatchPolicy { max_linger: Duration::from_millis(1) },
-    )
-    .expect("server start failed");
+    let engine = Engine::builder(cfg.name)
+        .weights(ws)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .build()
+        .expect("engine build failed");
+    let client = engine.client();
 
     let n = 12;
     let mut rng = Rng::new(3);
@@ -26,47 +28,114 @@ fn server_roundtrip_and_stats() {
     for _ in 0..n {
         let task = Task::ALL[rng.below(Task::ALL.len())];
         let s = gen_sample(task, &cfg, &mut rng);
-        pending.push((s.answer, handle.submit(s).unwrap()));
+        pending.push((s.answer, client.submit(s).unwrap()));
     }
-    for (answer, rx) in pending {
-        let reply = rx.recv().expect("server dropped a request");
+    for (answer, ticket) in pending {
+        let reply = ticket.wait().expect("engine dropped a request");
         assert!(reply.answer < cfg.vocab);
         assert_eq!(reply.correct, reply.answer == answer as usize);
         assert!(reply.latency > Duration::ZERO);
+        assert!(reply.batch_fill >= 1 && reply.batch_fill <= cfg.batch);
     }
-    let stats = handle.shutdown().unwrap();
+    let stats = engine.shutdown().unwrap();
     assert_eq!(stats.requests, n);
-    assert!(stats.batches >= (n + cfg.batch - 1) / cfg.batch);
+    assert_eq!(stats.submitted, n);
+    assert!(stats.batches >= n.div_ceil(cfg.batch));
     assert!(stats.batches <= n);
     assert!(stats.mean_fill >= 1.0 && stats.mean_fill <= cfg.batch as f64);
     assert!(stats.p50 <= stats.p95 && stats.p95 <= stats.p99);
     assert!(stats.throughput_rps > 0.0);
+    assert_eq!(stats.rejected_busy, 0);
+    assert_eq!(stats.rejected_deadline, 0);
 }
 
 #[test]
-fn server_with_quantized_weights_still_answers() {
+fn engine_with_quantized_weights_still_answers() {
     let cfg = config::variant("dsvl2_tiny").unwrap();
-    let mut ws = WeightStore::init(&cfg, &local_meta(&cfg), 1);
-    quantize_experts(
-        None,
-        &cfg,
-        &mut ws,
-        &PrecisionMap::uniform(&cfg, 3),
-        &Quantizer::Rtn,
-        None,
-    )
-    .unwrap();
-    let handle =
-        ServerHandle::start(cfg.clone(), ws, BatchPolicy::default()).unwrap();
+    let engine = Engine::builder(cfg.name)
+        .seed(1)
+        .weight_form(WeightForm::DequantizedF32)
+        .precision(PrecisionSource::Uniform(3))
+        .build()
+        .unwrap();
+    let client = engine.client();
     let samples = eval_set(Task::Blink, &cfg, 5, 2);
-    let rxs: Vec<_> = samples
+    let tickets: Vec<_> = samples
         .iter()
-        .map(|s| handle.submit(s.clone()).unwrap())
+        .map(|s| client.submit(s.clone()).unwrap())
         .collect();
-    for rx in rxs {
-        let reply = rx.recv().unwrap();
+    for t in tickets {
+        let reply = t.wait().unwrap();
         assert!(reply.answer < cfg.vocab);
     }
-    let stats = handle.shutdown().unwrap();
+    let stats = engine.shutdown().unwrap();
     assert_eq!(stats.requests, 5);
+}
+
+#[test]
+fn batch_fill_reports_real_occupancy() {
+    // a long linger + exactly one static batch of submissions: the
+    // worker must report batch_fill == cfg.batch on every reply (the
+    // old server hardcoded 0 here)
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let engine = Engine::builder(cfg.name)
+        .seed(7)
+        .batch_policy(BatchPolicy {
+            max_linger: Duration::from_millis(500),
+        })
+        .queue_depth(cfg.batch)
+        .build()
+        .unwrap();
+    let client = engine.client();
+    let mut rng = Rng::new(7);
+    let tickets: Vec<_> = (0..cfg.batch)
+        .map(|_| {
+            client
+                .submit(gen_sample(Task::Blink, &cfg, &mut rng))
+                .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().batch_fill, cfg.batch);
+    }
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.requests, cfg.batch);
+    assert_eq!(stats.workers[0].fill_hist, {
+        let mut h = vec![0; cfg.batch];
+        h[cfg.batch - 1] = 1;
+        h
+    });
+}
+
+#[test]
+fn expired_deadline_is_rejected_typed() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let engine = Engine::builder(cfg.name).seed(9).build().unwrap();
+    // a zero deadline is already expired when a worker reaches it
+    let client = engine.client().with_deadline(Duration::ZERO);
+    let mut rng = Rng::new(9);
+    let t = client
+        .submit(gen_sample(Task::Blink, &cfg, &mut rng))
+        .unwrap();
+    match t.wait() {
+        Err(Rejected::Deadline) => {}
+        other => panic!("expected Deadline, got {:?}", other.map(|_| ())),
+    }
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.rejected_deadline, 1);
+    assert_eq!(stats.requests, 0, "an expired request is never executed");
+}
+
+#[test]
+fn shutdown_closes_admissions() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let engine = Engine::builder(cfg.name).seed(4).build().unwrap();
+    let client = engine.client();
+    engine.shutdown().unwrap();
+    let mut rng = Rng::new(4);
+    match client.submit(gen_sample(Task::Blink, &cfg, &mut rng)) {
+        Err(Rejected::Closed) => {}
+        other => panic!("expected Closed, got {:?}", other.map(|_| ())),
+    }
 }
