@@ -206,6 +206,15 @@ fn main() -> anyhow::Result<()> {
         stats.resident.expert_accounted_bytes,
         accounted
     );
+    anyhow::ensure!(
+        stats.resident.shared_bytes
+            == stats.resident.backbone_bytes
+                + stats.resident.expert_heap_bytes
+            && stats.resident.process_bytes(2)
+                == stats.resident.process_bytes(1),
+        "the 2 workers must share (not copy) the backbone and packed \
+         words"
+    );
     println!(
         "  engine ✓  {} reqs over {} workers, fill {:.2}, resident = \
          SizePolicy",

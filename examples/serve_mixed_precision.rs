@@ -25,10 +25,15 @@ fn main() -> anyhow::Result<()> {
         (
             "MoPEQ qdq->f32",
             WeightForm::DequantizedF32,
-            PrecisionSource::Mopeq,
+            PrecisionSource::mopeq(),
             1,
         ),
-        ("MoPEQ packed x2", WeightForm::Packed, PrecisionSource::Mopeq, 2),
+        (
+            "MoPEQ packed x2",
+            WeightForm::Packed,
+            PrecisionSource::mopeq(),
+            2,
+        ),
     ];
     for (label, form, precision, workers) in rows {
         let engine = Engine::builder(cfg.name)

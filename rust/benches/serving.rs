@@ -1,19 +1,23 @@
 //! Serving bench: end-to-end latency/throughput of the engine under
 //! fp16 vs mixed-precision weights (qdq→f32 vs bit-packed execution,
-//! with *measured* resident expert bytes), the **worker-count sweep**
-//! (the scale-out axis: N executor replicas over Arc-shared weights),
-//! and the batch-linger policy sweep (throughput vs tail latency).
+//! with *measured* resident expert bytes), the **quantizer axis**
+//! (RTN vs SignRound at 4-bit packed: build-time calibration cost vs
+//! steady-state rps/p99), the **worker-count sweep** (the scale-out
+//! axis: N executor replicas over Arc-shared weights), and the
+//! batch-linger policy sweep (throughput vs tail latency).
 
 use mopeq::benchx::section;
 use mopeq::cluster::Granularity;
 use mopeq::config;
+use mopeq::coordinator::{Quantizer, SignRoundConfig};
 use mopeq::data::{gen_sample, Task};
+use mopeq::engine::spec::{CalibSpec, QuantSpec};
 use mopeq::engine::{Engine, MetricsSnapshot, PrecisionSource, WeightForm};
 use mopeq::importance::hessian_closed_form;
 use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
 use mopeq::rng::Rng;
 use mopeq::serve::{expert_bytes, BatchPolicy};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn fresh_store(seed: u64) -> (config::ModelConfig, WeightStore) {
     let cfg = config::variant("dsvl2_tiny").unwrap();
@@ -102,6 +106,46 @@ fn main() -> anyhow::Result<()> {
     println!(
         "(SizePolicy accounting for the mixed map: {accounted} B — the \
          packed row's resident bytes must equal it)"
+    );
+
+    section(
+        "quantizer axis (4-bit packed, 1 worker): build-time \
+         calibration cost vs steady state",
+    );
+    let quantizer_rows: [(&str, QuantSpec); 2] = [
+        ("rtn", QuantSpec::rtn()),
+        (
+            "signround",
+            QuantSpec::calibrated(
+                Quantizer::SignRound(SignRoundConfig {
+                    steps: 12,
+                    ..SignRoundConfig::default()
+                }),
+                CalibSpec { batches: 2, rows: 64 },
+            ),
+        ),
+    ];
+    for (label, quant) in quantizer_rows {
+        let (_, w) = fresh_store(0);
+        let t0 = Instant::now();
+        let engine = Engine::builder(cfg.name)
+            .weights(w)
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::Uniform(4))
+            .quantizer(quant)
+            .queue_depth(n)
+            .build()?;
+        let build = t0.elapsed();
+        let s = drive(engine, n)?;
+        println!(
+            "{label:<10} build {build:>8.2?} (capture+quantize+pack)  \
+             {:>4} reqs  p50 {:?}  p99 {:?}  {:>7.1} req/s",
+            s.requests, s.p50, s.p99, s.throughput_rps
+        );
+    }
+    println!(
+        "(same packed execution path once built — the quantizers \
+         differ in build cost and accuracy, not serving speed)"
     );
 
     section("worker-count sweep (scale-out: rps and p99 vs replicas)");

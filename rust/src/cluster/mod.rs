@@ -165,6 +165,61 @@ pub fn assign_map(
     }
 }
 
+/// Enforce an average-bits budget over an Algorithm 2 assignment (the
+/// GEMQ-style global constraint): while the mean assigned bits exceeds
+/// `max_mean`, sweep the experts from least to most important and
+/// demote each one palette step at a time, so the cheapest capacity is
+/// given up first and the reduction spreads across the low-importance
+/// tail instead of zeroing out one expert. `palette` must be sorted
+/// ascending; assignments already at the smallest width are left
+/// alone. Deterministic: ties in importance resolve in (layer, expert)
+/// order. A budget below the smallest palette width is infeasible —
+/// callers validate that before calling (`AllocPolicy::validate`).
+pub fn enforce_budget(
+    bits: &mut [Vec<u8>],
+    importance: &[Vec<f64>],
+    palette: &[u8],
+    max_mean: f64,
+) {
+    let total: usize = bits.iter().map(|l| l.len()).sum();
+    if total == 0 || palette.is_empty() {
+        return;
+    }
+    let mut order: Vec<(usize, usize)> = bits
+        .iter()
+        .enumerate()
+        .flat_map(|(l, row)| (0..row.len()).map(move |e| (l, e)))
+        .collect();
+    order.sort_by(|a, b| {
+        importance[a.0][a.1]
+            .partial_cmp(&importance[b.0][b.1])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut sum: usize = bits.iter().flatten().map(|&b| b as usize).sum();
+    let target = max_mean * total as f64;
+    while (sum as f64) > target {
+        let mut demoted = false;
+        for &(l, e) in &order {
+            let cur = bits[l][e];
+            let Some(pos) = palette.iter().position(|&p| p == cur) else {
+                continue; // width outside the palette (e.g. fp16 pin)
+            };
+            if pos == 0 {
+                continue; // already at the smallest width
+            }
+            bits[l][e] = palette[pos - 1];
+            sum -= (cur - palette[pos - 1]) as usize;
+            demoted = true;
+            if (sum as f64) <= target {
+                return;
+            }
+        }
+        if !demoted {
+            return; // everything demotable is at the floor
+        }
+    }
+}
+
 /// Rigid percentage-split baseline (the [12]-style scheme the paper's
 /// §4.1 motivates against): sort by importance, top p% gets the highest
 /// bits, bottom p% the lowest, middle the middle.
@@ -255,5 +310,50 @@ mod tests {
     fn fewer_values_than_clusters() {
         let bits = assign_bits(&[1.0, 2.0], &[2, 3, 4], 0);
         assert_eq!(bits, vec![4, 4]);
+    }
+
+    #[test]
+    fn budget_demotes_least_important_first() {
+        // importance ascending left to right, all at 4 bits: mean 4.0
+        let importance = vec![vec![1.0, 2.0, 3.0, 4.0]];
+        let mut bits = vec![vec![4u8, 4, 4, 4]];
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5);
+        // one demotion step (4→3) on the least important expert reaches
+        // mean 3.75 > 3.5, the second (next-least) lands exactly on 3.5
+        assert_eq!(bits, vec![vec![3, 3, 4, 4]]);
+        assert!(mean(&bits) <= 3.5);
+    }
+
+    #[test]
+    fn budget_sweeps_in_waves_not_to_the_floor() {
+        // a tight budget demotes everyone one step before demoting the
+        // least important expert a second step
+        let importance = vec![vec![1.0, 2.0, 3.0]];
+        let mut bits = vec![vec![4u8, 4, 4]];
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.0);
+        assert_eq!(bits, vec![vec![3, 3, 3]]);
+    }
+
+    #[test]
+    fn budget_at_floor_terminates() {
+        let importance = vec![vec![1.0, 2.0]];
+        let mut bits = vec![vec![2u8, 2]];
+        // target equals the floor: nothing to do, must not loop forever
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 2.0);
+        assert_eq!(bits, vec![vec![2, 2]]);
+    }
+
+    #[test]
+    fn budget_satisfied_is_a_noop() {
+        let importance = vec![vec![1.0, 9.0]];
+        let mut bits = vec![vec![2u8, 4]];
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5);
+        assert_eq!(bits, vec![vec![2, 4]]);
+    }
+
+    fn mean(bits: &[Vec<u8>]) -> f64 {
+        let total: usize = bits.iter().map(|l| l.len()).sum();
+        bits.iter().flatten().map(|&b| b as f64).sum::<f64>()
+            / total as f64
     }
 }

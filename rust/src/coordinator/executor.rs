@@ -22,7 +22,9 @@ use crate::moe::packed::PackedStore;
 use crate::moe::WeightStore;
 use crate::runtime::{Prepared, Session, Value};
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Pre-sliced arguments for one attention block, prepared once at
 /// construction so each forward pass pays zero weight conversion/upload
@@ -83,6 +85,85 @@ impl MoeKernel {
     }
 }
 
+/// Every executor argument pre-sliced once and held behind `Arc`s —
+/// the engine builds one `SharedArgs` per deployment and every worker
+/// replica's executor prepares `Value::F32Shared` handles over the
+/// *same* slices, so adding workers multiplies compute, not dense
+/// weight memory (the single-executor paths still slice from a
+/// [`WeightStore`] directly and own their copies).
+pub struct SharedArgs {
+    pub variant: String,
+    /// param name → per-layer slices (len 1 for unstacked tensors)
+    slices: HashMap<String, Vec<Arc<Tensor<f32>>>>,
+}
+
+impl SharedArgs {
+    /// Slice every parameter of the store once. `embed.*` / `final.*`
+    /// tensors are whole; everything else is stacked `[layers, ...]`
+    /// and sliced per layer (exactly the slicing the executor's
+    /// constructors perform). Stripped (empty) expert tensors are
+    /// skipped.
+    pub fn new(ws: &WeightStore) -> SharedArgs {
+        let mut slices = HashMap::new();
+        for name in ws.names() {
+            let t = ws.get(name).expect("name from names()");
+            if t.is_empty() {
+                continue; // stripped experts
+            }
+            let per_layer: Vec<Arc<Tensor<f32>>> =
+                if name.starts_with("embed.") || name.starts_with("final.") {
+                    vec![Arc::new(t.clone())]
+                } else {
+                    (0..t.shape[0]).map(|l| Arc::new(t.index0(l))).collect()
+                };
+            slices.insert(name.to_string(), per_layer);
+        }
+        SharedArgs { variant: ws.variant.clone(), slices }
+    }
+
+    fn get(&self, name: &str, layer: Option<usize>) -> Result<Arc<Tensor<f32>>> {
+        let v = self
+            .slices
+            .get(name)
+            .ok_or_else(|| anyhow!("no param `{name}`"))?;
+        let l = layer.unwrap_or(0);
+        v.get(l)
+            .cloned()
+            .ok_or_else(|| anyhow!("param `{name}` has no layer {l}"))
+    }
+}
+
+/// Where an executor's f32 arguments come from: a weight store it
+/// slices (and owns copies of), or pre-sliced Arc-shared slices.
+enum ArgSource<'w> {
+    Store(&'w WeightStore),
+    Shared(&'w SharedArgs),
+}
+
+impl ArgSource<'_> {
+    fn variant(&self) -> &str {
+        match self {
+            ArgSource::Store(ws) => &ws.variant,
+            ArgSource::Shared(sa) => &sa.variant,
+        }
+    }
+
+    fn value(&self, name: &str, layer: Option<usize>) -> Result<Value> {
+        match self {
+            ArgSource::Store(ws) => {
+                let t = ws.get(name)?;
+                Ok(Value::F32(match layer {
+                    Some(l) => t.index0(l),
+                    None => t.clone(),
+                }))
+            }
+            ArgSource::Shared(sa) => {
+                Ok(Value::F32Shared(sa.get(name, layer)?))
+            }
+        }
+    }
+}
+
 /// What the executor actually holds resident for serving — *measured*
 /// from the prepared argument handles, not derived from a policy, so
 /// the serve/offload reports show real residency instead of
@@ -107,6 +188,23 @@ pub struct ResidentReport {
     /// dense f32 expert matrices resident — 0 when serving packed with
     /// a fully-quantized precision map
     pub dense_expert_tensors: usize,
+    /// bytes of `backbone_bytes` + `expert_heap_bytes` living in
+    /// Arc-shared storage ([`SharedArgs`] slices, packed expert words):
+    /// counted once per process no matter how many worker replicas hold
+    /// handles. An engine deployment shares its entire weight footprint
+    /// (`shared_bytes == backbone_bytes + expert_heap_bytes`), so
+    /// workers scale compute, not dense memory.
+    pub shared_bytes: usize,
+}
+
+impl ResidentReport {
+    /// Process-wide resident weight bytes for `workers` replicas of
+    /// this executor: shared bytes count once, private bytes multiply.
+    pub fn process_bytes(&self, workers: usize) -> usize {
+        let per_replica = self.backbone_bytes + self.expert_heap_bytes;
+        let private = per_replica.saturating_sub(self.shared_bytes);
+        self.shared_bytes + private * workers.max(1)
+    }
 }
 
 /// Which weights an executor serves from — the **single** construction
@@ -115,12 +213,21 @@ pub struct ResidentReport {
 pub enum ExecWeights<'w> {
     /// dense f32 store (fp16 reference or qdq→f32 quantized)
     Dense(&'w WeightStore),
+    /// dense deployment over pre-sliced Arc-shared arguments (the
+    /// engine's replica path — expert slices shared too)
+    SharedDense(&'w SharedArgs),
     /// bit-packed experts + a backbone-only store (a store whose
     /// experts were [`WeightStore::strip_experts`]-ed works) — the MoE
     /// layers run the `moe_layer_packed` lowering and **no dense f32
     /// expert tensor is prepared**
     Packed {
         backbone: &'w WeightStore,
+        experts: &'w PackedStore,
+    },
+    /// packed experts over a pre-sliced Arc-shared backbone (the
+    /// engine's replica path: nothing dense is copied per worker)
+    SharedPacked {
+        backbone: &'w SharedArgs,
         experts: &'w PackedStore,
     },
 }
@@ -135,6 +242,43 @@ pub struct ForwardOutput {
     pub vis_counts: Vec<Vec<f32>>,
     /// post-norm expert inputs per MoE layer (only when captured)
     pub hidden: Option<Vec<Tensor<f32>>>,
+}
+
+/// Per-layer dense routed-expert arguments from any source (owned
+/// slices for `Store`, Arc-shared for `Shared`).
+fn dense_experts(
+    session: &Session,
+    source: &ArgSource<'_>,
+    l: usize,
+) -> Result<ExpertArgs> {
+    Ok(ExpertArgs::Dense {
+        gate: session.prepare_owned(source.value("moe.gate", Some(l))?)?,
+        up: session.prepare_owned(source.value("moe.up", Some(l))?)?,
+        down: session.prepare_owned(source.value("moe.down", Some(l))?)?,
+    })
+}
+
+/// Shape/variant validation shared by both packed construction paths.
+fn check_packed(cfg: &ModelConfig, packed: &PackedStore) -> Result<()> {
+    if packed.variant != cfg.name {
+        bail!(
+            "packed store is for `{}`, config is `{}`",
+            packed.variant,
+            cfg.name
+        );
+    }
+    if packed.moe_layers() != cfg.moe_layers()
+        || packed.experts_per_layer() != cfg.experts
+    {
+        bail!(
+            "packed store shape {}x{} != config {}x{}",
+            packed.moe_layers(),
+            packed.experts_per_layer(),
+            cfg.moe_layers(),
+            cfg.experts
+        );
+    }
+    Ok(())
 }
 
 pub struct ModelExecutor<'a> {
@@ -167,20 +311,14 @@ impl<'a> ModelExecutor<'a> {
         kernel: MoeKernel,
     ) -> Result<ModelExecutor<'a>> {
         let entry = format!("{}/{}", cfg.moe_signature(), kernel.entry());
-        Self::build(session, cfg, ws, entry, |l| {
-            Ok(ExpertArgs::Dense {
-                gate: session
-                    .prepare_owned(Value::F32(ws.get("moe.gate")?.index0(l)))?,
-                up: session
-                    .prepare_owned(Value::F32(ws.get("moe.up")?.index0(l)))?,
-                down: session
-                    .prepare_owned(Value::F32(ws.get("moe.down")?.index0(l)))?,
-            })
+        let source = ArgSource::Store(ws);
+        Self::build(session, cfg, &source, entry, |l| {
+            dense_experts(session, &source, l)
         })
     }
 
-    /// Build over either weight form through one entry point (dense
-    /// stores get the default MoE lowering; packed stores have exactly
+    /// Build over any weight form through one entry point (dense
+    /// sources get the default MoE lowering; packed stores have exactly
     /// one lowering, `moe_layer_packed`).
     pub fn with_weights(
         session: &'a Session,
@@ -191,63 +329,74 @@ impl<'a> ModelExecutor<'a> {
             ExecWeights::Dense(ws) => {
                 Self::with_options(session, cfg, ws, MoeKernel::default())
             }
-            ExecWeights::Packed { backbone, experts: packed } => {
-                if packed.variant != cfg.name {
-                    bail!(
-                        "packed store is for `{}`, config is `{}`",
-                        packed.variant,
-                        cfg.name
-                    );
-                }
-                if packed.moe_layers() != cfg.moe_layers()
-                    || packed.experts_per_layer() != cfg.experts
-                {
-                    bail!(
-                        "packed store shape {}x{} != config {}x{}",
-                        packed.moe_layers(),
-                        packed.experts_per_layer(),
-                        cfg.moe_layers(),
-                        cfg.experts
-                    );
-                }
+            ExecWeights::SharedDense(args) => {
+                let entry = format!(
+                    "{}/{}",
+                    cfg.moe_signature(),
+                    MoeKernel::default().entry()
+                );
+                let source = ArgSource::Shared(args);
+                Self::build(session, cfg, &source, entry, |l| {
+                    dense_experts(session, &source, l)
+                })
+            }
+            ExecWeights::Packed { backbone, experts } => {
+                check_packed(cfg, experts)?;
                 let entry =
                     format!("{}/moe_layer_packed", cfg.moe_signature());
-                Self::build(session, cfg, backbone, entry, |l| {
+                let source = ArgSource::Store(backbone);
+                Self::build(session, cfg, &source, entry, |l| {
                     Ok(ExpertArgs::Packed(
                         session
-                            .prepare_owned(Value::Packed(packed.layer(l)))?,
+                            .prepare_owned(Value::Packed(experts.layer(l)))?,
+                    ))
+                })
+            }
+            ExecWeights::SharedPacked { backbone, experts } => {
+                check_packed(cfg, experts)?;
+                let entry =
+                    format!("{}/moe_layer_packed", cfg.moe_signature());
+                let source = ArgSource::Shared(backbone);
+                Self::build(session, cfg, &source, entry, |l| {
+                    Ok(ExpertArgs::Packed(
+                        session
+                            .prepare_owned(Value::Packed(experts.layer(l)))?,
                     ))
                 })
             }
         }
     }
 
-    /// Shared construction: slices every backbone argument once and
-    /// delegates the per-layer routed-expert arguments to
-    /// `experts_for`.
+    /// Shared construction: fetches every backbone argument through the
+    /// source (owned slice or Arc-shared slice) and delegates the
+    /// per-layer routed-expert arguments to `experts_for`.
     fn build<F>(
         session: &'a Session,
         cfg: &ModelConfig,
-        ws: &WeightStore,
+        source: &ArgSource<'_>,
         moe_entry: String,
         mut experts_for: F,
     ) -> Result<ModelExecutor<'a>>
     where
         F: FnMut(usize) -> Result<ExpertArgs>,
     {
-        if ws.variant != cfg.name {
-            bail!("weight store is for `{}`, config is `{}`", ws.variant, cfg.name);
+        if source.variant() != cfg.name {
+            bail!(
+                "weight store is for `{}`, config is `{}`",
+                source.variant(),
+                cfg.name
+            );
         }
-        let val = |t: Tensor<f32>| -> Result<Prepared> {
-            session.prepare_owned(Value::F32(t))
+        let val = |name: &str, l: Option<usize>| -> Result<Prepared> {
+            session.prepare_owned(source.value(name, l)?)
         };
         let attn_for = |prefix: &str, l: usize| -> Result<AttnArgs> {
             Ok(AttnArgs {
-                ln: val(ws.get(&format!("{prefix}.ln1"))?.index0(l))?,
-                wq: val(ws.get(&format!("{prefix}.wq"))?.index0(l))?,
-                wk: val(ws.get(&format!("{prefix}.wk"))?.index0(l))?,
-                wv: val(ws.get(&format!("{prefix}.wv"))?.index0(l))?,
-                wo: val(ws.get(&format!("{prefix}.wo"))?.index0(l))?,
+                ln: val(&format!("{prefix}.ln1"), Some(l))?,
+                wq: val(&format!("{prefix}.wq"), Some(l))?,
+                wk: val(&format!("{prefix}.wk"), Some(l))?,
+                wv: val(&format!("{prefix}.wv"), Some(l))?,
+                wo: val(&format!("{prefix}.wo"), Some(l))?,
             })
         };
 
@@ -255,27 +404,27 @@ impl<'a> ModelExecutor<'a> {
         for l in 0..cfg.first_dense {
             dense.push(DenseArgs {
                 attn: attn_for("dense", l)?,
-                ln2: val(ws.get("dense.ln2")?.index0(l))?,
-                gate: val(ws.get("dense.gate")?.index0(l))?,
-                up: val(ws.get("dense.up")?.index0(l))?,
-                down: val(ws.get("dense.down")?.index0(l))?,
+                ln2: val("dense.ln2", Some(l))?,
+                gate: val("dense.gate", Some(l))?,
+                up: val("dense.up", Some(l))?,
+                down: val("dense.down", Some(l))?,
             });
         }
         let mut moe = Vec::with_capacity(cfg.moe_layers());
         for l in 0..cfg.moe_layers() {
             let shared = if cfg.n_shared > 0 {
                 Some((
-                    val(ws.get("moe.sgate")?.index0(l))?,
-                    val(ws.get("moe.sup")?.index0(l))?,
-                    val(ws.get("moe.sdown")?.index0(l))?,
+                    val("moe.sgate", Some(l))?,
+                    val("moe.sup", Some(l))?,
+                    val("moe.sdown", Some(l))?,
                 ))
             } else {
                 None
             };
             moe.push(MoeArgs {
                 attn: attn_for("moe", l)?,
-                ln2: val(ws.get("moe.ln2")?.index0(l))?,
-                router: val(ws.get("moe.router")?.index0(l))?,
+                ln2: val("moe.ln2", Some(l))?,
+                router: val("moe.router", Some(l))?,
                 experts: experts_for(l)?,
                 shared,
             });
@@ -284,56 +433,67 @@ impl<'a> ModelExecutor<'a> {
             session,
             cfg: cfg.clone(),
             moe_entry,
-            embed_table: val(ws.get("embed.table")?.clone())?,
-            embed_pos: val(ws.get("embed.pos")?.clone())?,
+            embed_table: val("embed.table", None)?,
+            embed_pos: val("embed.pos", None)?,
             dense,
             moe,
-            final_ln: val(ws.get("final.ln")?.clone())?,
-            head: val(ws.get("final.head")?.clone())?,
+            final_ln: val("final.ln", None)?,
+            head: val("final.head", None)?,
         })
     }
 
     /// Measure the weight bytes this executor holds resident (see
     /// [`ResidentReport`]).
     pub fn resident_report(&self) -> ResidentReport {
-        fn f32_bytes(p: &Prepared) -> usize {
-            p.host_value()
-                .and_then(|v| v.as_f32().ok())
-                .map_or(0, |t| t.len() * 4)
+        // (f32 bytes, whether those bytes live in Arc-shared storage)
+        fn f32_meas(p: &Prepared) -> (usize, bool) {
+            match p.host_value() {
+                Some(Value::F32(t)) => (t.len() * 4, false),
+                Some(Value::F32Shared(t)) => (t.len() * 4, true),
+                _ => (0, false),
+            }
         }
-        fn attn_bytes(a: &AttnArgs) -> usize {
-            f32_bytes(&a.ln)
-                + f32_bytes(&a.wq)
-                + f32_bytes(&a.wk)
-                + f32_bytes(&a.wv)
-                + f32_bytes(&a.wo)
-        }
-        let mut r = ResidentReport {
-            backbone_bytes: f32_bytes(&self.embed_table)
-                + f32_bytes(&self.embed_pos)
-                + f32_bytes(&self.final_ln)
-                + f32_bytes(&self.head),
-            ..ResidentReport::default()
-        };
+        let mut r = ResidentReport::default();
+        let mut backbone_args: Vec<&Prepared> = vec![
+            &self.embed_table,
+            &self.embed_pos,
+            &self.final_ln,
+            &self.head,
+        ];
         for d in &self.dense {
-            r.backbone_bytes += attn_bytes(&d.attn)
-                + f32_bytes(&d.ln2)
-                + f32_bytes(&d.gate)
-                + f32_bytes(&d.up)
-                + f32_bytes(&d.down);
+            let a = &d.attn;
+            backbone_args.extend([
+                &a.ln, &a.wq, &a.wk, &a.wv, &a.wo, &d.ln2, &d.gate, &d.up,
+                &d.down,
+            ]);
         }
         for m in &self.moe {
-            r.backbone_bytes += attn_bytes(&m.attn)
-                + f32_bytes(&m.ln2)
-                + f32_bytes(&m.router);
+            let a = &m.attn;
+            backbone_args.extend([
+                &a.ln, &a.wq, &a.wk, &a.wv, &a.wo, &m.ln2, &m.router,
+            ]);
             if let Some((sg, su, sd)) = &m.shared {
-                r.backbone_bytes +=
-                    f32_bytes(sg) + f32_bytes(su) + f32_bytes(sd);
+                backbone_args.extend([sg, su, sd]);
             }
+        }
+        for p in backbone_args {
+            let (bytes, shared) = f32_meas(p);
+            r.backbone_bytes += bytes;
+            if shared {
+                r.shared_bytes += bytes;
+            }
+        }
+        for m in &self.moe {
             match &m.experts {
                 ExpertArgs::Dense { gate, up, down } => {
-                    let b =
-                        f32_bytes(gate) + f32_bytes(up) + f32_bytes(down);
+                    let mut b = 0usize;
+                    for p in [gate, up, down] {
+                        let (bytes, shared) = f32_meas(p);
+                        b += bytes;
+                        if shared {
+                            r.shared_bytes += bytes;
+                        }
+                    }
                     // wire accounting stores dense weights as fp16
                     // (2 B/param), same as SizePolicy at bits >= 16 and
                     // as PackedMat::Dense::size_bits
@@ -347,6 +507,8 @@ impl<'a> ModelExecutor<'a> {
                     {
                         r.expert_accounted_bytes += pl.accounted_bytes();
                         r.expert_heap_bytes += pl.heap_bytes();
+                        // packed words are always behind an Arc
+                        r.shared_bytes += pl.heap_bytes();
                         r.dense_expert_tensors += pl.dense_mats();
                     }
                 }

@@ -9,6 +9,7 @@ pub mod signround;
 
 pub use executor::{
     ExecWeights, ForwardOutput, ModelExecutor, MoeKernel, ResidentReport,
+    SharedArgs,
 };
 pub use quantize::{
     capture_calib, pack_experts, quantize_backbone, quantize_experts,
@@ -18,11 +19,11 @@ pub use signround::{signround_optimize, SignRoundConfig};
 
 use crate::cluster::{assign_map, Granularity};
 use crate::config::{self, ModelConfig, MIXED_BITS};
-use crate::eval::{evaluate, TaskScores};
-use crate::importance::{
-    hessian_closed_form, hessian_hutchinson, hybrid, profile_frequency,
-    ImportanceMap,
+use crate::engine::spec::{
+    AllocPolicy, CalibSpec, Estimator, QuantSpec, Resolver,
 };
+use crate::eval::{evaluate, TaskScores};
+use crate::importance::{profile_frequency, ImportanceMap};
 use crate::moe::{
     model_size_mb, local_meta, PrecisionMap, SizePolicy, WeightStore,
 };
@@ -174,35 +175,64 @@ impl Pipeline {
 
     // ----------------------------------------------------- importance
 
+    /// The shared resolution stage over this pipeline's session,
+    /// weights, seed, and kernel choice — the **same** [`Resolver`]
+    /// `EngineBuilder::build` drives, so coordinator allocations and
+    /// engine allocations are identical by construction.
+    pub fn resolver(&self) -> Resolver<'_> {
+        Resolver::new(&self.session, &self.cfg, &self.ws, self.seed)
+            .with_kernel(self.moe_kernel)
+    }
+
+    /// This pipeline's knobs (calib batches, Hutchinson samples,
+    /// closed-form switch) applied to a table-row metric, as the spec
+    /// grammar's [`crate::engine::spec::Metric`].
+    pub fn spec_metric(&self, metric: Metric) -> crate::engine::spec::Metric {
+        use crate::engine::spec::Metric as SpecMetric;
+        let estimator = if self.hessian_closed_form {
+            Estimator::ClosedForm
+        } else {
+            Estimator::Hutchinson { samples: self.hutchinson_samples }
+        };
+        match metric {
+            Metric::ActivationFrequency => {
+                SpecMetric::Frequency { batches: self.calib_batches }
+            }
+            Metric::HessianSensitivity => SpecMetric::Hessian(estimator),
+            Metric::Hybrid => {
+                SpecMetric::Hybrid { batches: self.calib_batches, estimator }
+            }
+        }
+    }
+
+    /// The paper's allocation policy for one (metric, granularity)
+    /// table cell: this pipeline's metric knobs over the {2,3,4}
+    /// palette, no budget.
+    pub fn alloc_policy(
+        &self,
+        metric: Metric,
+        granularity: Granularity,
+    ) -> AllocPolicy {
+        AllocPolicy {
+            metric: self.spec_metric(metric),
+            granularity,
+            palette: MIXED_BITS.to_vec(),
+            budget: None,
+        }
+    }
+
     pub fn frequency_map(&self) -> Result<crate::importance::FreqProfile> {
         let exec = self.executor(&self.ws)?;
         profile_frequency(&exec, &self.cfg, self.calib_batches, self.seed)
     }
 
     pub fn hessian_map(&self) -> Result<ImportanceMap> {
-        if self.hessian_closed_form {
-            hessian_closed_form(&self.ws, &self.cfg)
-        } else {
-            hessian_hutchinson(
-                &self.session,
-                &self.ws,
-                &self.cfg,
-                self.hutchinson_samples,
-                self.seed,
-            )
-        }
+        self.resolver()
+            .importance(&self.spec_metric(Metric::HessianSensitivity))
     }
 
     pub fn importance(&self, metric: Metric) -> Result<ImportanceMap> {
-        Ok(match metric {
-            Metric::ActivationFrequency => self.frequency_map()?.total,
-            Metric::HessianSensitivity => self.hessian_map()?,
-            Metric::Hybrid => {
-                let af = self.frequency_map()?.total;
-                let h = self.hessian_map()?;
-                hybrid(&af, &h)
-            }
-        })
+        self.resolver().importance(&self.spec_metric(metric))
     }
 
     // ----------------------------------------------------- assignment
@@ -225,7 +255,8 @@ impl Pipeline {
 
     // ----------------------------------------------------- method rows
 
-    /// Run one table row end to end: assign → quantize (SignRound) →
+    /// Run one table row end to end: allocate (through the shared
+    /// [`Resolver`]) → quantize (through the shared [`QuantSpec`]) →
     /// evaluate. Returns accuracy per task + exact storage size.
     pub fn run_method(&self, spec: &MethodSpec) -> Result<MethodResult> {
         let (pmap, policy) = match spec {
@@ -238,12 +269,11 @@ impl Pipeline {
                 SizePolicy::uniform(*bits, self.cfg.group),
             ),
             MethodSpec::Mixed { metric, granularity } => {
-                let imp = self.importance(*metric)?;
-                (
-                    self.assign(&imp, *granularity),
-                    // paper: other layers quantized uniformly (4-bit)
-                    SizePolicy::uniform(4, self.cfg.group),
-                )
+                let (pmap, _prov) = self
+                    .resolver()
+                    .allocate(&self.alloc_policy(*metric, *granularity))?;
+                // paper: other layers quantized uniformly (4-bit)
+                (pmap, SizePolicy::uniform(4, self.cfg.group))
             }
         };
         let scores = self.quantize_and_eval(&pmap, policy)?;
@@ -255,8 +285,32 @@ impl Pipeline {
         })
     }
 
+    /// The table rows' quantization function for a given map: SignRound
+    /// (the paper's function) when any expert sits below 8 bits, RTN
+    /// otherwise (SignRound artifacts cover 2/3/4; at 8 bits the
+    /// rounding search is negligible), with this pipeline's calibration
+    /// capture spec attached.
+    pub fn quant_spec(&self, pmap: &PrecisionMap) -> QuantSpec {
+        let any_low = pmap.iter_experts().any(|(_, b)| b < 8);
+        let quantizer = if any_low {
+            Quantizer::SignRound(self.signround)
+        } else {
+            Quantizer::Rtn
+        };
+        QuantSpec {
+            quantizer,
+            calib: Some(CalibSpec {
+                batches: self.calib_batches,
+                rows: self.calib_rows,
+            }),
+        }
+    }
+
     /// Quantize a copy of the reference weights under (pmap, policy)
-    /// with the paper's SignRound function, then evaluate all tasks.
+    /// through the shared [`QuantSpec::pack`] stage (capture → quantize
+    /// → codes; the qdq→f32 evaluation weights are dequantized from the
+    /// same codes a packed engine would serve), then evaluate all
+    /// tasks.
     pub fn quantize_and_eval(
         &self,
         pmap: &PrecisionMap,
@@ -266,30 +320,15 @@ impl Pipeline {
         let needs_quant =
             pmap.iter_experts().any(|(_, b)| b < 16) || policy.backbone_bits < 16;
         if needs_quant {
-            let exec = self.executor(&self.ws)?;
-            let calib = capture_calib(
-                &exec,
-                &self.cfg,
-                self.calib_batches,
-                self.calib_rows,
-                self.seed ^ 0xCA11B,
-            )?;
-            // 8-bit experts use RTN (SignRound artifacts cover 2/3/4;
-            // at 8 bits rounding search is negligible)
-            let any_low = pmap.iter_experts().any(|(_, b)| b < 8);
-            let quantizer = if any_low {
-                Quantizer::SignRound(self.signround)
-            } else {
-                Quantizer::Rtn
-            };
-            quantize_experts(
+            let (store, _stats) = self.quant_spec(pmap).pack(
                 Some(&self.session),
                 &self.cfg,
-                &mut ws,
+                &self.ws,
                 pmap,
-                &quantizer,
-                Some(&calib),
+                self.moe_kernel,
+                self.seed,
             )?;
+            store.write_dequantized(&mut ws)?;
             quantize_backbone(&self.cfg, &mut ws, policy.backbone_bits)?;
         }
         let exec = self.executor(&ws)?;

@@ -76,9 +76,10 @@ pub fn capture_calib(
 }
 
 /// Which quantization function fills the precision map.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub enum Quantizer {
     /// round-to-nearest (no calibration)
+    #[default]
     Rtn,
     /// SignRound SignSGD over the AOT'd step (the paper's function)
     SignRound(SignRoundConfig),

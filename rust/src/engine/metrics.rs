@@ -34,9 +34,14 @@ pub struct MetricsSnapshot {
     /// answered requests per second of engine uptime
     pub throughput_rps: f64,
     pub uptime: Duration,
-    /// weight bytes **one worker's** executor holds resident (workers
-    /// are replicas; packed expert words are shared via `Arc`, so the
-    /// per-process packed heap does not multiply with the worker count)
+    /// weight bytes **one worker's** executor holds resident. Workers
+    /// are replicas over Arc-shared pre-sliced arguments (dense
+    /// backbone and expert slices included, not just packed words), so
+    /// `resident.shared_bytes == resident.backbone_bytes +
+    /// resident.expert_heap_bytes` for every engine deployment —
+    /// asserted at build — and the per-process footprint
+    /// (`resident.process_bytes(workers)`) does not multiply with the
+    /// worker count.
     pub resident: ResidentReport,
     pub workers: Vec<WorkerSnapshot>,
 }

@@ -14,7 +14,7 @@
 //!
 //! let engine = Engine::builder("dsvl2_tiny")
 //!     .weight_form(WeightForm::Packed)
-//!     .precision(PrecisionSource::Mopeq)
+//!     .precision(PrecisionSource::mopeq()) // paper's allocation
 //!     .workers(2)
 //!     .queue_depth(64)
 //!     .build()?;
@@ -26,13 +26,26 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
+//! The **whole coordinator pipeline** is expressible in the builder:
+//! [`PrecisionSource::Allocated`] parameterizes the allocation
+//! (importance metric × granularity × bit palette × average-bits
+//! budget, [`spec::AllocPolicy`]) and [`EngineBuilder::quantizer`]
+//! selects the quantization function with its calibration capture
+//! ([`spec::QuantSpec`]: RTN / SignRound / GPTQ / AWQ). Resolution runs
+//! the shared [`spec::PreparedWeights`] pipeline — resolve → calibrate
+//! → allocate → quantize/pack → strip — the same stages the coordinator
+//! drives, so a deployment built here matches the paper tables' maps
+//! and codes exactly.
+//!
 //! **Topology.** N worker threads each own a backend `Session` and a
-//! `ModelExecutor` replica; the immutable source stores (backbone
-//! [`WeightStore`], packed [`PackedStore`]) are shared across workers
-//! via `Arc`. A packed deployment's expert words stay shared all the
-//! way into the executors (`Value::Packed` clones the `Arc`, no weight
-//! bytes are copied), so scaling workers multiplies compute — not
-//! packed expert memory. Requests flow through one bounded MPMC queue —
+//! `ModelExecutor` replica; every immutable argument is pre-sliced
+//! **once** into Arc-shared [`SharedArgs`] (and, for packed
+//! deployments, the packed [`PackedStore`] words) and stays shared all
+//! the way into the executors (`Value::F32Shared` / `Value::Packed`
+//! clone the `Arc`, no weight bytes are copied), so scaling workers
+//! multiplies compute — not dense or packed weight memory
+//! (`ResidentReport::shared_bytes` measures it). Requests flow through
+//! one bounded MPMC queue —
 //! a full queue rejects the submit with a typed [`Rejected::Busy`]
 //! (admission control), and a request whose per-client deadline expires
 //! while queued is answered with [`Rejected::Deadline`] instead of
@@ -40,20 +53,25 @@
 
 pub mod metrics;
 pub(crate) mod queue;
+pub mod spec;
 mod worker;
 
 pub use metrics::{MetricsSnapshot, WorkerSnapshot};
+pub use spec::{
+    AllocPolicy, AvgBitsBudget, CalibSpec, PreparedWeights, Provenance,
+    QuantSpec, SavedMap, SpecError,
+};
 
-use crate::cluster::{assign_map, Granularity};
-use crate::config::{self, ModelConfig, MIXED_BITS};
-use crate::coordinator::{quantize_experts, Quantizer};
+use crate::config::{self, ModelConfig};
+use crate::coordinator::executor::SharedArgs;
+use crate::coordinator::QuantStats;
 use crate::data::Sample;
-use crate::importance::hessian_closed_form;
 use crate::moe::{PackedStore, PrecisionMap, WeightStore};
 use crate::serve::BatchPolicy;
 use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
 use queue::JobQueue;
+use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -71,6 +89,16 @@ pub enum WeightForm {
     Packed,
 }
 
+impl WeightForm {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WeightForm::Fp16 => "Fp16",
+            WeightForm::DequantizedF32 => "DequantizedF32",
+            WeightForm::Packed => "Packed",
+        }
+    }
+}
+
 /// Where the per-expert precision map comes from.
 #[derive(Clone, Debug, Default)]
 pub enum PrecisionSource {
@@ -79,11 +107,23 @@ pub enum PrecisionSource {
     Reference,
     /// every expert at the same width
     Uniform(u8),
-    /// a precomputed / loaded assignment
+    /// a precomputed assignment
     Map(PrecisionMap),
-    /// the paper's allocation: closed-form Hessian sensitivity →
-    /// Algorithm 2 K-means over {2,3,4} bits, model-wise
-    Mopeq,
+    /// a JSON map artifact written by [`SavedMap::save`] /
+    /// `mopeq allocate --out` — the allocate→serve round-trip
+    MapFile(PathBuf),
+    /// computed at build by the parameterized allocation policy
+    /// (importance metric × granularity × palette × budget)
+    Allocated(AllocPolicy),
+}
+
+impl PrecisionSource {
+    /// The paper's MoPEQ allocation — closed-form Hessian sensitivity →
+    /// Algorithm 2 K-means over {2,3,4} bits, model-wise — i.e.
+    /// [`PrecisionSource::Allocated`] of [`AllocPolicy::default`].
+    pub fn mopeq() -> PrecisionSource {
+        PrecisionSource::Allocated(AllocPolicy::default())
+    }
 }
 
 /// Typed admission/deadline rejection — the only ways the engine
@@ -131,11 +171,14 @@ pub(crate) struct Job {
     pub respond: mpsc::Sender<Result<Reply, Rejected>>,
 }
 
-/// The shared immutable weights every worker replica executes over.
+/// The shared immutable weights every worker replica executes over:
+/// every argument is pre-sliced once into Arc-shared [`SharedArgs`]
+/// (and, for packed deployments, the packed expert words), so worker
+/// count multiplies compute — never dense weight memory.
 pub(crate) enum EngineWeights {
-    Dense(Arc<WeightStore>),
+    Dense(Arc<SharedArgs>),
     Packed {
-        backbone: Arc<WeightStore>,
+        backbone: Arc<SharedArgs>,
         experts: Arc<PackedStore>,
     },
 }
@@ -143,11 +186,11 @@ pub(crate) enum EngineWeights {
 impl EngineWeights {
     fn exec_weights(&self) -> crate::coordinator::ExecWeights<'_> {
         match self {
-            EngineWeights::Dense(ws) => {
-                crate::coordinator::ExecWeights::Dense(ws)
+            EngineWeights::Dense(args) => {
+                crate::coordinator::ExecWeights::SharedDense(args)
             }
             EngineWeights::Packed { backbone, experts } => {
-                crate::coordinator::ExecWeights::Packed {
+                crate::coordinator::ExecWeights::SharedPacked {
                     backbone,
                     experts,
                 }
@@ -169,6 +212,7 @@ pub struct EngineBuilder {
     seed: u64,
     form: WeightForm,
     precision: PrecisionSource,
+    quant: QuantSpec,
     backend: Option<String>,
     policy: BatchPolicy,
     workers: usize,
@@ -183,6 +227,7 @@ impl EngineBuilder {
             seed: 0,
             form: WeightForm::Fp16,
             precision: PrecisionSource::Reference,
+            quant: QuantSpec::default(),
             backend: None,
             policy: BatchPolicy::default(),
             workers: 1,
@@ -214,6 +259,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Which quantization function fills the precision map when the
+    /// form quantizes (`DequantizedF32` / `Packed`), with its
+    /// calibration capture. Default: calibration-free RTN. A
+    /// calib-needing quantizer (`Quantizer::needs_calib`) without a
+    /// [`CalibSpec`] fails `build()` with a typed
+    /// [`SpecError::MissingCalib`].
+    pub fn quantizer(mut self, quant: QuantSpec) -> Self {
+        self.quant = quant;
+        self
+    }
+
     /// Backend choice per worker: `"native"` or `"xla"`. Default
     /// follows `MOPEQ_BACKEND` (native when unset).
     pub fn backend(mut self, choice: impl Into<String>) -> Self {
@@ -240,12 +296,15 @@ impl EngineBuilder {
         self
     }
 
-    /// Resolve the deployment (assign → quantize/pack as the form
-    /// demands), then spawn and warm the worker pool. Returns once
-    /// every worker is ready to serve.
+    /// Resolve the deployment through the [`spec::PreparedWeights`]
+    /// pipeline (resolve → calibrate → allocate → quantize/pack →
+    /// strip), then spawn and warm the worker pool. Returns once every
+    /// worker is ready to serve. Invalid form × precision × quantizer
+    /// combinations fail here with a typed [`SpecError`] before any
+    /// thread is spawned.
     pub fn build(self) -> Result<Engine> {
         let cfg = config::variant(&self.variant)?;
-        let mut ws = match self.weights {
+        let ws = match self.weights {
             Some(ws) => {
                 if ws.variant != cfg.name {
                     bail!(
@@ -259,43 +318,17 @@ impl EngineBuilder {
             None => WeightStore::init(&cfg, &crate::moe::local_meta(&cfg), self.seed),
         };
 
-        let pmap = resolve_precision(&cfg, &ws, &self.precision, self.seed)?;
-        let weights = match self.form {
-            WeightForm::Fp16 => {
-                if pmap.is_some() {
-                    bail!(
-                        "WeightForm::Fp16 serves the reference weights — \
-                         use DequantizedF32 or Packed to apply a \
-                         precision source"
-                    );
-                }
-                EngineWeights::Dense(Arc::new(ws))
-            }
-            WeightForm::DequantizedF32 => {
-                let pmap = pmap.clone().ok_or_else(|| {
-                    anyhow!(
-                        "WeightForm::DequantizedF32 needs a quantizing \
-                         PrecisionSource (Uniform / Map / Mopeq)"
-                    )
-                })?;
-                quantize_experts(None, &cfg, &mut ws, &pmap, &Quantizer::Rtn, None)?;
-                EngineWeights::Dense(Arc::new(ws))
-            }
-            WeightForm::Packed => {
-                let pmap = pmap.clone().ok_or_else(|| {
-                    anyhow!(
-                        "WeightForm::Packed needs a quantizing \
-                         PrecisionSource (Uniform / Map / Mopeq)"
-                    )
-                })?;
-                let store = PackedStore::rtn(&cfg, &ws, &pmap)?;
-                ws.strip_experts();
-                EngineWeights::Packed {
-                    backbone: Arc::new(ws),
-                    experts: Arc::new(store),
-                }
-            }
-        };
+        let backend = self.backend.clone();
+        let prepared = PreparedWeights::prepare(
+            &cfg,
+            ws,
+            self.form,
+            &self.precision,
+            &self.quant,
+            self.seed,
+            || worker::open_session(backend.as_deref()),
+        )?;
+        let PreparedWeights { weights, pmap, provenance, stats } = prepared;
 
         let weights = Arc::new(weights);
         let shared = Arc::new(Shared {
@@ -339,59 +372,33 @@ impl EngineBuilder {
             }
             return Err(e);
         }
+        // every engine argument is Arc-shared — one worker's measured
+        // residency must report its whole weight footprint as shared,
+        // i.e. N workers scale compute, not dense memory (host-measured
+        // backends only: device-resident reports measure 0 here). A
+        // violation shuts the pool down cleanly and errors — never a
+        // panic over live worker threads.
+        let resident = shared.metrics.snapshot(0).resident;
+        if resident.backbone_bytes > 0
+            && resident.shared_bytes
+                != resident.backbone_bytes + resident.expert_heap_bytes
+        {
+            shared.queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            bail!(
+                "engine invariant violated: only {} of {} resident \
+                 weight bytes are Arc-shared across workers",
+                resident.shared_bytes,
+                resident.backbone_bytes + resident.expert_heap_bytes
+            );
+        }
         // every worker is warm: start the serving clock now so
         // throughput never includes compile/warmup cost
         shared.metrics.mark_started();
-        Ok(Engine { shared, workers: handles, cfg, pmap })
+        Ok(Engine { shared, workers: handles, cfg, pmap, provenance, stats })
     }
-}
-
-/// Resolve a [`PrecisionSource`] into the per-expert map it denotes
-/// (`None` for the fp16 reference).
-fn resolve_precision(
-    cfg: &ModelConfig,
-    ws: &WeightStore,
-    src: &PrecisionSource,
-    seed: u64,
-) -> Result<Option<PrecisionMap>> {
-    Ok(match src {
-        PrecisionSource::Reference => None,
-        PrecisionSource::Uniform(bits) => {
-            if *bits >= 16 {
-                bail!(
-                    "PrecisionSource::Uniform({bits}) is the fp16 \
-                     reference — use WeightForm::Fp16 with \
-                     PrecisionSource::Reference"
-                );
-            }
-            Some(PrecisionMap::uniform(cfg, *bits))
-        }
-        PrecisionSource::Map(pmap) => {
-            if pmap.bits.len() != cfg.moe_layers()
-                || pmap.bits.iter().any(|l| l.len() != cfg.experts)
-            {
-                bail!(
-                    "precision map shape {}x{} != config {}x{}",
-                    pmap.bits.len(),
-                    pmap.bits.first().map_or(0, |l| l.len()),
-                    cfg.moe_layers(),
-                    cfg.experts
-                );
-            }
-            Some(pmap.clone())
-        }
-        PrecisionSource::Mopeq => {
-            let sens = hessian_closed_form(ws, cfg)?;
-            Some(PrecisionMap {
-                bits: assign_map(
-                    &sens.values,
-                    &MIXED_BITS,
-                    Granularity::ModelWise,
-                    seed,
-                ),
-            })
-        }
-    })
 }
 
 /// A running deployment: worker pool + shared queue + live metrics.
@@ -401,6 +408,11 @@ pub struct Engine {
     cfg: ModelConfig,
     /// the resolved per-expert map this engine serves (None for fp16)
     pmap: Option<PrecisionMap>,
+    /// allocation provenance (Allocated sources and MapFiles carrying
+    /// one)
+    provenance: Option<Provenance>,
+    /// quantization stats from the build (None for fp16)
+    stats: Option<QuantStats>,
 }
 
 impl Engine {
@@ -418,6 +430,29 @@ impl Engine {
     /// checked against.
     pub fn precision_map(&self) -> Option<&PrecisionMap> {
         self.pmap.as_ref()
+    }
+
+    /// Provenance of the allocation this engine serves (metric,
+    /// granularity, palette, per-layer mean bits) — `Some` for
+    /// [`PrecisionSource::Allocated`] builds and for map files that
+    /// carry one.
+    pub fn provenance(&self) -> Option<&Provenance> {
+        self.provenance.as_ref()
+    }
+
+    /// Quantization stats from the build-time pack (None for fp16).
+    pub fn quant_stats(&self) -> Option<&QuantStats> {
+        self.stats.as_ref()
+    }
+
+    /// The resolved deployment as a saveable JSON artifact — what
+    /// `mopeq allocate --out` writes; `None` for the fp16 reference.
+    pub fn saved_map(&self) -> Option<SavedMap> {
+        self.pmap.as_ref().map(|map| SavedMap {
+            variant: self.cfg.name.to_string(),
+            map: map.clone(),
+            provenance: self.provenance.clone(),
+        })
     }
 
     /// A cheap client session (an `Arc` clone). Clients are `Send` and

@@ -1,0 +1,1050 @@
+//! Calibration-aware quantization specs: the declarative types that
+//! make the **full coordinator pipeline** expressible in the engine's
+//! builder grammar.
+//!
+//! - [`QuantSpec`] = which quantization function fills the precision
+//!   map ([`Quantizer`]: RTN / SignRound / GPTQ / AWQ) plus the
+//!   [`CalibSpec`] describing the calibration capture the calibrated
+//!   quantizers require. A calib-needing quantizer without a
+//!   `CalibSpec` fails at `build()` with a typed
+//!   [`SpecError::MissingCalib`] — never a silent RTN fallback, never
+//!   a mid-warmup panic.
+//! - [`AllocPolicy`] = how the per-expert bit allocation is computed:
+//!   importance [`Metric`] × [`Granularity`] × bit `palette` ×
+//!   optional [`AvgBitsBudget`]. `AllocPolicy::default()` is the
+//!   paper's setting (closed-form Hessian sensitivity, model-wise
+//!   K-means over {2,3,4}).
+//! - [`Resolver`] = the shared resolution stage: metric → importance →
+//!   Algorithm 2 → (optional) budget enforcement. The coordinator's
+//!   table runner and `EngineBuilder::build` both call it, which is
+//!   what makes their precision maps identical by construction.
+//! - [`PreparedWeights`] = the whole pipeline
+//!   (resolve → calibrate → allocate → quantize/pack → strip) run to
+//!   completion: the execution-form weights plus the resolved map,
+//!   its [`Provenance`], and the quantization stats.
+//! - [`SavedMap`] = JSON (de)serialization of a precision map + its
+//!   allocation provenance via [`crate::jsonx`], so
+//!   `mopeq allocate --out map.json` →
+//!   `PrecisionSource::MapFile(path)` round-trips a deployment.
+
+use crate::cluster::{assign_map, enforce_budget, Granularity};
+use crate::config::{ModelConfig, MIXED_BITS};
+use crate::coordinator::executor::{ModelExecutor, MoeKernel, SharedArgs};
+use crate::coordinator::quantize::{
+    capture_calib, pack_experts, LayerCalib, QuantStats, Quantizer,
+};
+use crate::engine::{EngineWeights, PrecisionSource, WeightForm};
+use crate::importance::{
+    hessian_closed_form, hessian_hutchinson, hybrid, profile_frequency,
+    ImportanceMap,
+};
+use crate::jsonx::Json;
+use crate::moe::{PackedStore, PrecisionMap, WeightStore};
+use crate::runtime::Session;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// How the Hessian-trace sensitivity (paper §3.3) is computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Estimator {
+    /// exact trace under the Frobenius proxy, `(n-1)/‖W‖_F` — data-free
+    /// and fast (the paper's values within estimator noise)
+    ClosedForm,
+    /// Algorithm 1: Hutchinson's estimator with `samples` Rademacher
+    /// probes per FC layer, through the backend's HVP entry
+    Hutchinson { samples: usize },
+}
+
+/// Expert-importance metric (paper §3) with its profiling knobs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// activation frequency over `batches` mixed-task calibration
+    /// batches (§3.2)
+    Frequency { batches: usize },
+    /// Hessian-trace sensitivity (§3.3)
+    Hessian(Estimator),
+    /// normalized frequency × sensitivity (§3.4)
+    Hybrid { batches: usize, estimator: Estimator },
+}
+
+impl Metric {
+    /// Whether resolving this metric executes the model (and therefore
+    /// needs a backend session). Only the closed-form Hessian is free.
+    pub fn needs_model_runs(&self) -> bool {
+        !matches!(self, Metric::Hessian(Estimator::ClosedForm))
+    }
+
+    /// Typed rejection of degenerate profiling knobs: zero batches or
+    /// probes would produce an all-zero importance map, making the
+    /// allocation arbitrary with no error.
+    pub fn validate(&self) -> Result<()> {
+        let knob = match self {
+            Metric::Frequency { batches: 0 }
+            | Metric::Hybrid { batches: 0, .. } => Some("batches"),
+            Metric::Hessian(Estimator::Hutchinson { samples: 0 })
+            | Metric::Hybrid {
+                estimator: Estimator::Hutchinson { samples: 0 },
+                ..
+            } => Some("samples"),
+            _ => None,
+        };
+        match knob {
+            Some(knob) => {
+                Err(SpecError::DegenerateMetric { knob }.into())
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Human/provenance label.
+    pub fn label(&self) -> String {
+        fn est(e: &Estimator) -> String {
+            match e {
+                Estimator::ClosedForm => "closed-form".into(),
+                Estimator::Hutchinson { samples } => {
+                    format!("hutchinson m={samples}")
+                }
+            }
+        }
+        match self {
+            Metric::Frequency { batches } => {
+                format!("frequency(batches={batches})")
+            }
+            Metric::Hessian(e) => format!("hessian({})", est(e)),
+            Metric::Hybrid { batches, estimator } => {
+                format!("hybrid(batches={batches}, {})", est(estimator))
+            }
+        }
+    }
+}
+
+/// Calibration capture: how many mixed-task batches to run with
+/// hidden-state capture and how many token rows to subsample per MoE
+/// layer (the coordinator's defaults).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CalibSpec {
+    pub batches: usize,
+    pub rows: usize,
+}
+
+impl Default for CalibSpec {
+    fn default() -> Self {
+        CalibSpec { batches: 16, rows: 256 }
+    }
+}
+
+/// Which quantization function fills the precision map, plus the
+/// calibration the calibrated quantizers (SignRound / GPTQ / AWQ)
+/// require. The default is RTN (calibration-free).
+#[derive(Clone, Debug, Default)]
+pub struct QuantSpec {
+    pub quantizer: Quantizer,
+    pub calib: Option<CalibSpec>,
+}
+
+impl QuantSpec {
+    /// Calibration-free round-to-nearest (the default).
+    pub fn rtn() -> QuantSpec {
+        QuantSpec { quantizer: Quantizer::Rtn, calib: None }
+    }
+
+    /// A calibrated quantizer with its capture spec.
+    pub fn calibrated(quantizer: Quantizer, calib: CalibSpec) -> QuantSpec {
+        QuantSpec { quantizer, calib: Some(calib) }
+    }
+
+    /// Typed validation of everything knowable from the spec alone —
+    /// run before any session/executor work so a statically-invalid
+    /// spec never pays for importance resolution first. `capture`
+    /// re-checks the same conditions for direct callers.
+    pub fn validate(&self) -> Result<()> {
+        if !self.quantizer.needs_calib() {
+            return Ok(());
+        }
+        let spec = self.calib.as_ref().ok_or_else(|| {
+            SpecError::MissingCalib { quantizer: self.quantizer.label() }
+        })?;
+        if spec.batches == 0 || spec.rows == 0 {
+            return Err(SpecError::EmptyCalib {
+                batches: spec.batches,
+                rows: spec.rows,
+            }
+            .into());
+        }
+        // SignRound's artifact has a static calib shape: fewer captured
+        // rows than it expects must fail typed, not assert deep in the
+        // row subsampler
+        if let Quantizer::SignRound(sr) = &self.quantizer {
+            if spec.rows < sr.calib_rows {
+                return Err(SpecError::CalibRows {
+                    rows: spec.rows,
+                    needed: sr.calib_rows,
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Capture calibration (when the quantizer needs it) and quantize +
+    /// pack every routed expert per the precision map — the **single**
+    /// quantize stage both `EngineBuilder::build` and the coordinator
+    /// drive, so their packed codes are bit-exact by construction.
+    /// Calibration activations are captured from `ws` (the reference
+    /// weights) at `seed ^ 0xCA11B`, exactly as the coordinator's table
+    /// runner does.
+    pub fn pack(
+        &self,
+        session: Option<&Session>,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        pmap: &PrecisionMap,
+        kernel: MoeKernel,
+        seed: u64,
+    ) -> Result<(PackedStore, QuantStats)> {
+        let calib = self.capture(session, cfg, ws, kernel, seed)?;
+        pack_experts(session, cfg, ws, pmap, &self.quantizer, calib.as_ref())
+    }
+
+    /// The calibration-capture stage alone: `None` for calibration-free
+    /// quantizers, a typed [`SpecError::MissingCalib`] when a
+    /// calibrated quantizer has no [`CalibSpec`].
+    pub fn capture(
+        &self,
+        session: Option<&Session>,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        kernel: MoeKernel,
+        seed: u64,
+    ) -> Result<Option<LayerCalib>> {
+        if !self.quantizer.needs_calib() {
+            return Ok(None);
+        }
+        self.validate()?;
+        let spec = self.calib.as_ref().expect("validate checked calib");
+        let session = session.ok_or_else(|| {
+            anyhow!(
+                "{} needs a backend session for calibration capture",
+                self.quantizer.label()
+            )
+        })?;
+        let exec = ModelExecutor::with_options(session, cfg, ws, kernel)?;
+        Ok(Some(capture_calib(
+            &exec,
+            cfg,
+            spec.batches,
+            spec.rows,
+            seed ^ 0xCA11B,
+        )?))
+    }
+}
+
+/// Upper bound on the mean assigned bits/expert: after Algorithm 2,
+/// the least-important experts are demoted palette-step by
+/// palette-step until the mean fits (the GEMQ-style global budget).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AvgBitsBudget {
+    pub max_mean_bits: f64,
+}
+
+/// The parameterized allocation policy — everything the paper ablates
+/// (metric × granularity) plus the bit palette and an optional average
+/// budget. `Default` is the paper's headline setting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AllocPolicy {
+    pub metric: Metric,
+    pub granularity: Granularity,
+    /// candidate bit widths, strictly ascending (Algorithm 2 clusters
+    /// into `palette.len()` groups)
+    pub palette: Vec<u8>,
+    pub budget: Option<AvgBitsBudget>,
+}
+
+impl Default for AllocPolicy {
+    /// The paper's setting: closed-form Hessian sensitivity,
+    /// model-wise K-means over {2, 3, 4} bits, no budget.
+    fn default() -> Self {
+        AllocPolicy {
+            metric: Metric::Hessian(Estimator::ClosedForm),
+            granularity: Granularity::ModelWise,
+            palette: MIXED_BITS.to_vec(),
+            budget: None,
+        }
+    }
+}
+
+impl AllocPolicy {
+    /// Typed validation of the policy itself (no model access).
+    pub fn validate(&self) -> Result<()> {
+        self.metric.validate()?;
+        let Some(&lo) = self.palette.first() else {
+            return Err(SpecError::EmptyPalette.into());
+        };
+        if self.palette.windows(2).any(|w| w[1] <= w[0]) {
+            return Err(SpecError::UnsortedPalette {
+                palette: self.palette.clone(),
+            }
+            .into());
+        }
+        if let Some(&bad) =
+            self.palette.iter().find(|&&b| b == 0 || b > 16)
+        {
+            return Err(SpecError::PaletteWidth { bits: bad }.into());
+        }
+        if let Some(budget) = &self.budget {
+            if budget.max_mean_bits < lo as f64 {
+                return Err(SpecError::InfeasibleBudget {
+                    max_mean_bits: budget.max_mean_bits,
+                    min_palette_bits: lo,
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a precision map came from — serialized next to the map so a
+/// deployment artifact is self-describing (re-running the recorded
+/// metric × granularity × palette × budget reproduces the map).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    pub metric: String,
+    pub granularity: String,
+    pub palette: Vec<u8>,
+    /// the [`AvgBitsBudget`] cap the allocation was demoted under, if
+    /// any — without it a budgeted map would not be reproducible from
+    /// its own provenance
+    pub budget: Option<f64>,
+    pub mean_bits: f64,
+    /// mean assigned bits per MoE layer
+    pub layer_mean_bits: Vec<f64>,
+}
+
+/// Typed errors of the spec grammar — every invalid builder
+/// combination fails at `build()` with one of these (downcast from the
+/// returned `anyhow::Error`), before any worker thread is spawned.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// `WeightForm::Fp16` combined with a quantizing precision source
+    Fp16WithQuantizingSource,
+    /// `WeightForm::Fp16` with a non-RTN quantizer configured — the
+    /// spec would be silently ignored
+    Fp16WithQuantizer { quantizer: &'static str },
+    /// `PrecisionSource::Uniform(bits >= 16)` — that is the fp16
+    /// reference, spelled `Reference`
+    UniformIsFp16 { bits: u8 },
+    /// `DequantizedF32` / `Packed` with `PrecisionSource::Reference`
+    MissingPrecisionSource { form: &'static str },
+    /// a calib-needing quantizer with no [`CalibSpec`]
+    MissingCalib { quantizer: &'static str },
+    /// the capture yields fewer calibration rows than the quantizer's
+    /// static calib shape needs
+    CalibRows { rows: usize, needed: usize },
+    /// a calibration capture of zero batches or zero rows
+    EmptyCalib { batches: usize, rows: usize },
+    /// a profiling knob of zero (batches / probe samples) — the metric
+    /// would be an all-zero map and the allocation arbitrary
+    DegenerateMetric { knob: &'static str },
+    EmptyPalette,
+    UnsortedPalette { palette: Vec<u8> },
+    PaletteWidth { bits: u8 },
+    /// a supplied/loaded precision map contains an unquantizable width
+    MapWidth { bits: u8 },
+    /// budget below the smallest palette width — no allocation can fit
+    InfeasibleBudget { max_mean_bits: f64, min_palette_bits: u8 },
+    /// a loaded map names a different model variant
+    VariantMismatch { expected: String, found: String },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Fp16WithQuantizingSource => write!(
+                f,
+                "WeightForm::Fp16 serves the reference weights — use \
+                 DequantizedF32 or Packed to apply a quantizing \
+                 PrecisionSource"
+            ),
+            SpecError::Fp16WithQuantizer { quantizer } => write!(
+                f,
+                "WeightForm::Fp16 serves the reference weights \
+                 unquantized — the configured {quantizer} QuantSpec \
+                 would be silently ignored; use DequantizedF32 or \
+                 Packed (or drop .quantizer())"
+            ),
+            SpecError::UniformIsFp16 { bits } => write!(
+                f,
+                "PrecisionSource::Uniform({bits}) is the fp16 \
+                 reference — use WeightForm::Fp16 with \
+                 PrecisionSource::Reference"
+            ),
+            SpecError::MissingPrecisionSource { form } => write!(
+                f,
+                "WeightForm::{form} needs a quantizing PrecisionSource \
+                 (Uniform / Map / MapFile / Allocated)"
+            ),
+            SpecError::MissingCalib { quantizer } => write!(
+                f,
+                "{quantizer} needs calibration data — attach a CalibSpec \
+                 via QuantSpec::calibrated({quantizer}, CalibSpec {{ .. }})"
+            ),
+            SpecError::CalibRows { rows, needed } => write!(
+                f,
+                "CalibSpec captures {rows} rows but the quantizer's \
+                 calibration shape needs at least {needed} — raise \
+                 CalibSpec.rows (or lower SignRoundConfig.calib_rows)"
+            ),
+            SpecError::EmptyCalib { batches, rows } => write!(
+                f,
+                "CalibSpec {{ batches: {batches}, rows: {rows} }} \
+                 captures no calibration data — both must be non-zero"
+            ),
+            SpecError::DegenerateMetric { knob } => write!(
+                f,
+                "importance metric has {knob} = 0 — the map would be \
+                 all zeros and the allocation arbitrary"
+            ),
+            SpecError::EmptyPalette => {
+                write!(f, "AllocPolicy palette is empty")
+            }
+            SpecError::UnsortedPalette { palette } => write!(
+                f,
+                "AllocPolicy palette {palette:?} must be strictly \
+                 ascending"
+            ),
+            SpecError::PaletteWidth { bits } => write!(
+                f,
+                "palette width {bits} is outside the quantizable range \
+                 1..=16"
+            ),
+            SpecError::MapWidth { bits } => write!(
+                f,
+                "precision map contains width {bits}, outside the \
+                 quantizable range 1..=16"
+            ),
+            SpecError::InfeasibleBudget {
+                max_mean_bits,
+                min_palette_bits,
+            } => write!(
+                f,
+                "budget of {max_mean_bits} mean bits/expert is \
+                 infeasible: the smallest palette width is \
+                 {min_palette_bits}"
+            ),
+            SpecError::VariantMismatch { expected, found } => write!(
+                f,
+                "precision map is for `{found}`, engine variant is \
+                 `{expected}`"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// The shared resolution stage over one model's reference weights:
+/// metric → importance map → Algorithm 2 (at the policy's granularity
+/// and palette) → optional budget enforcement. `EngineBuilder::build`,
+/// the coordinator's table runner, and the CLI all allocate through
+/// this one type, so a given `(weights, seed, policy)` yields the
+/// identical [`PrecisionMap`] on every path.
+pub struct Resolver<'a> {
+    session: Option<&'a Session>,
+    cfg: &'a ModelConfig,
+    ws: &'a WeightStore,
+    seed: u64,
+    kernel: MoeKernel,
+}
+
+impl<'a> Resolver<'a> {
+    pub fn new(
+        session: &'a Session,
+        cfg: &'a ModelConfig,
+        ws: &'a WeightStore,
+        seed: u64,
+    ) -> Resolver<'a> {
+        Resolver {
+            session: Some(session),
+            cfg,
+            ws,
+            seed,
+            kernel: MoeKernel::default(),
+        }
+    }
+
+    /// A resolver without a backend session — only the data-free
+    /// closed-form Hessian metric resolves; anything that must execute
+    /// the model errors.
+    pub fn sessionless(
+        cfg: &'a ModelConfig,
+        ws: &'a WeightStore,
+        seed: u64,
+    ) -> Resolver<'a> {
+        Resolver { session: None, cfg, ws, seed, kernel: MoeKernel::default() }
+    }
+
+    /// Select the MoE-layer lowering profiling runs execute (the
+    /// coordinator threads its `--sparse` choice through here).
+    pub fn with_kernel(mut self, kernel: MoeKernel) -> Resolver<'a> {
+        self.kernel = kernel;
+        self
+    }
+
+    fn session(&self) -> Result<&'a Session> {
+        self.session.ok_or_else(|| {
+            anyhow!(
+                "this importance metric executes the model and needs a \
+                 backend session (only Metric::Hessian(ClosedForm) is \
+                 data-free)"
+            )
+        })
+    }
+
+    fn executor(&self) -> Result<ModelExecutor<'a>> {
+        ModelExecutor::with_options(
+            self.session()?,
+            self.cfg,
+            self.ws,
+            self.kernel,
+        )
+    }
+
+    fn frequency(&self, batches: usize) -> Result<ImportanceMap> {
+        Ok(profile_frequency(&self.executor()?, self.cfg, batches, self.seed)?
+            .total)
+    }
+
+    fn hessian(&self, est: &Estimator) -> Result<ImportanceMap> {
+        match est {
+            Estimator::ClosedForm => hessian_closed_form(self.ws, self.cfg),
+            Estimator::Hutchinson { samples } => hessian_hutchinson(
+                self.session()?,
+                self.ws,
+                self.cfg,
+                *samples,
+                self.seed,
+            ),
+        }
+    }
+
+    /// Resolve a metric into its per-expert importance map.
+    pub fn importance(&self, metric: &Metric) -> Result<ImportanceMap> {
+        match metric {
+            Metric::Frequency { batches } => self.frequency(*batches),
+            Metric::Hessian(est) => self.hessian(est),
+            Metric::Hybrid { batches, estimator } => {
+                let af = self.frequency(*batches)?;
+                let h = self.hessian(estimator)?;
+                Ok(hybrid(&af, &h))
+            }
+        }
+    }
+
+    /// The allocation stage: validate → importance → Algorithm 2 →
+    /// budget. Returns the map plus its provenance record.
+    pub fn allocate(
+        &self,
+        policy: &AllocPolicy,
+    ) -> Result<(PrecisionMap, Provenance)> {
+        policy.validate()?;
+        let imp = self.importance(&policy.metric)?;
+        let mut bits = assign_map(
+            &imp.values,
+            &policy.palette,
+            policy.granularity,
+            self.seed,
+        );
+        if let Some(budget) = &policy.budget {
+            enforce_budget(
+                &mut bits,
+                &imp.values,
+                &policy.palette,
+                budget.max_mean_bits,
+            );
+        }
+        let map = PrecisionMap { bits };
+        let provenance = Provenance {
+            metric: policy.metric.label(),
+            granularity: policy.granularity.label().to_string(),
+            palette: policy.palette.clone(),
+            budget: policy.budget.map(|b| b.max_mean_bits),
+            mean_bits: map.mean_bits(),
+            layer_mean_bits: map.layer_mean_bits(),
+        };
+        Ok((map, provenance))
+    }
+}
+
+/// A precision map + provenance as a JSON artifact: what
+/// `mopeq allocate --out map.json` writes and
+/// `PrecisionSource::MapFile` loads. The map's `bits` round-trip
+/// byte-for-byte (integers), so allocate → serve reproduces the exact
+/// deployment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SavedMap {
+    pub variant: String,
+    pub map: PrecisionMap,
+    pub provenance: Option<Provenance>,
+}
+
+impl SavedMap {
+    pub fn to_json(&self) -> Json {
+        let bits = Json::Arr(
+            self.map
+                .bits
+                .iter()
+                .map(|row| {
+                    Json::Arr(
+                        row.iter().map(|&b| Json::Num(b as f64)).collect(),
+                    )
+                })
+                .collect(),
+        );
+        let provenance = match &self.provenance {
+            None => Json::Null,
+            Some(p) => Json::Obj(vec![
+                ("metric".into(), Json::Str(p.metric.clone())),
+                ("granularity".into(), Json::Str(p.granularity.clone())),
+                (
+                    "palette".into(),
+                    Json::Arr(
+                        p.palette
+                            .iter()
+                            .map(|&b| Json::Num(b as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "budget".into(),
+                    p.budget.map_or(Json::Null, Json::Num),
+                ),
+                ("mean_bits".into(), Json::Num(p.mean_bits)),
+                (
+                    "layer_mean_bits".into(),
+                    Json::Arr(
+                        p.layer_mean_bits
+                            .iter()
+                            .map(|&v| Json::Num(v))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("bits".into(), bits),
+            ("provenance".into(), provenance),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SavedMap> {
+        let variant = j.req("variant")?.as_str()?.to_string();
+        let mut bits = Vec::new();
+        for row in j.req("bits")?.as_arr()? {
+            let mut r = Vec::new();
+            for v in row.as_arr()? {
+                let b = v.as_usize()?;
+                if b > u8::MAX as usize {
+                    bail!("bit width {b} is out of range");
+                }
+                r.push(b as u8);
+            }
+            bits.push(r);
+        }
+        let provenance = match j.get("provenance") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(Provenance {
+                metric: p.req("metric")?.as_str()?.to_string(),
+                granularity: p.req("granularity")?.as_str()?.to_string(),
+                palette: p
+                    .req("palette")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_usize()? as u8))
+                    .collect::<Result<_>>()?,
+                budget: match p.get("budget") {
+                    None | Some(Json::Null) => None,
+                    Some(b) => Some(b.as_f64()?),
+                },
+                mean_bits: p.req("mean_bits")?.as_f64()?,
+                layer_mean_bits: p
+                    .req("layer_mean_bits")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<_>>()?,
+            }),
+        };
+        Ok(SavedMap { variant, map: PrecisionMap { bits }, provenance })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SavedMap> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        SavedMap::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// The full weight-preparation pipeline run to completion:
+/// resolve → calibrate → allocate → quantize/pack → strip. This is the
+/// single path `EngineBuilder::build` executes; the coordinator drives
+/// the same stages ([`Resolver::allocate`], [`QuantSpec::pack`])
+/// against its own evaluation scratch stores.
+pub struct PreparedWeights {
+    pub(crate) weights: EngineWeights,
+    /// the resolved per-expert map (`None` for the fp16 reference)
+    pub pmap: Option<PrecisionMap>,
+    /// allocation provenance (`Some` for `Allocated` sources and for
+    /// `MapFile`s that carry one)
+    pub provenance: Option<Provenance>,
+    /// quantization stats (`Some` whenever experts were quantized)
+    pub stats: Option<QuantStats>,
+}
+
+impl PreparedWeights {
+    /// Run the pipeline (profiling/calibration runs use the default MoE
+    /// lowering, like the engine's workers). `open` is called at most
+    /// once, and only when a stage actually executes the model
+    /// (profiling metrics, Hutchinson probes, calibration capture) —
+    /// fp16 / RTN / closed-form builds stay session-free.
+    pub(crate) fn prepare(
+        cfg: &ModelConfig,
+        mut ws: WeightStore,
+        form: WeightForm,
+        precision: &PrecisionSource,
+        quant: &QuantSpec,
+        seed: u64,
+        open: impl FnOnce() -> Result<Session>,
+    ) -> Result<PreparedWeights> {
+        let kernel = MoeKernel::default();
+        // -- validation first: typed errors, before any session,
+        // executor, or worker work. Uniform(>=16) is checked ahead of
+        // the form grid so `Fp16 × Uniform(16)` gets the actionable
+        // advice (use Reference), not a misleading form error.
+        if let PrecisionSource::Uniform(bits) = precision {
+            if *bits >= 16 {
+                return Err(SpecError::UniformIsFp16 { bits: *bits }.into());
+            }
+        }
+        let quantizing = !matches!(precision, PrecisionSource::Reference);
+        match form {
+            WeightForm::Fp16 if quantizing => {
+                return Err(SpecError::Fp16WithQuantizingSource.into());
+            }
+            WeightForm::DequantizedF32 | WeightForm::Packed
+                if !quantizing =>
+            {
+                return Err(SpecError::MissingPrecisionSource {
+                    form: form.label(),
+                }
+                .into());
+            }
+            _ => {}
+        }
+        if form == WeightForm::Fp16 {
+            // a non-RTN quantizer on an fp16 build would be silently
+            // ignored — the no-silent-fallback contract forbids that
+            if !matches!(quant.quantizer, Quantizer::Rtn) {
+                return Err(SpecError::Fp16WithQuantizer {
+                    quantizer: quant.quantizer.label(),
+                }
+                .into());
+            }
+        } else {
+            // everything knowable from the quant spec alone (missing /
+            // empty / too-small CalibSpec) fails here, before any
+            // session is opened or importance resolved
+            quant.validate()?;
+        }
+        if let PrecisionSource::Allocated(policy) = precision {
+            policy.validate()?;
+        }
+
+        // -- open a session only when a stage executes the model
+        let needs_runs = matches!(
+            precision,
+            PrecisionSource::Allocated(p) if p.metric.needs_model_runs()
+        ) || (form != WeightForm::Fp16 && quant.quantizer.needs_calib());
+        let session = if needs_runs { Some(open()?) } else { None };
+
+        // -- resolve the precision source into a map (+ provenance)
+        let (pmap, provenance) = match precision {
+            PrecisionSource::Reference => (None, None),
+            PrecisionSource::Uniform(bits) => {
+                let map = PrecisionMap::uniform(cfg, *bits);
+                // same width validation as supplied maps: Uniform(0)
+                // would otherwise quantize to NaN weights
+                check_map(cfg, &map)?;
+                (Some(map), None)
+            }
+            PrecisionSource::Map(map) => {
+                check_map(cfg, map)?;
+                (Some(map.clone()), None)
+            }
+            PrecisionSource::MapFile(path) => {
+                let saved = SavedMap::load(path)?;
+                if saved.variant != cfg.name {
+                    return Err(SpecError::VariantMismatch {
+                        expected: cfg.name.to_string(),
+                        found: saved.variant,
+                    }
+                    .into());
+                }
+                check_map(cfg, &saved.map)?;
+                (Some(saved.map), saved.provenance)
+            }
+            PrecisionSource::Allocated(policy) => {
+                let resolver = Resolver {
+                    session: session.as_ref(),
+                    cfg,
+                    ws: &ws,
+                    seed,
+                    kernel,
+                };
+                let (map, prov) = resolver.allocate(policy)?;
+                (Some(map), Some(prov))
+            }
+        };
+
+        // -- calibrate → quantize/pack → strip into the execution form
+        let mut stats = None;
+        let weights = match form {
+            WeightForm::Fp16 => {
+                EngineWeights::Dense(Arc::new(SharedArgs::new(&ws)))
+            }
+            WeightForm::DequantizedF32 | WeightForm::Packed => {
+                let map = pmap.as_ref().expect("validated quantizing source");
+                let (store, st) = quant.pack(
+                    session.as_ref(),
+                    cfg,
+                    &ws,
+                    map,
+                    kernel,
+                    seed,
+                )?;
+                stats = Some(st);
+                if form == WeightForm::DequantizedF32 {
+                    store.write_dequantized(&mut ws)?;
+                    EngineWeights::Dense(Arc::new(SharedArgs::new(&ws)))
+                } else {
+                    ws.strip_experts();
+                    EngineWeights::Packed {
+                        backbone: Arc::new(SharedArgs::new(&ws)),
+                        experts: Arc::new(store),
+                    }
+                }
+            }
+        };
+        Ok(PreparedWeights { weights, pmap, provenance, stats })
+    }
+}
+
+/// Shape + width validation of a supplied/loaded precision map: a
+/// corrupt artifact (e.g. a 0-bit entry, which would quantize every
+/// weight to its zero-point) must fail at build, not serve garbage.
+fn check_map(cfg: &ModelConfig, pmap: &PrecisionMap) -> Result<()> {
+    if pmap.bits.len() != cfg.moe_layers()
+        || pmap.bits.iter().any(|l| l.len() != cfg.experts)
+    {
+        bail!(
+            "precision map shape {}x{} != config {}x{}",
+            pmap.bits.len(),
+            pmap.bits.first().map_or(0, |l| l.len()),
+            cfg.moe_layers(),
+            cfg.experts
+        );
+    }
+    if let Some((_, bad)) =
+        pmap.iter_experts().find(|&(_, b)| b == 0 || b > 16)
+    {
+        return Err(SpecError::MapWidth { bits: bad }.into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::moe::local_meta;
+
+    #[test]
+    fn default_policy_is_the_paper_setting() {
+        let p = AllocPolicy::default();
+        assert_eq!(p.metric, Metric::Hessian(Estimator::ClosedForm));
+        assert_eq!(p.granularity, Granularity::ModelWise);
+        assert_eq!(p.palette, MIXED_BITS.to_vec());
+        assert!(p.budget.is_none());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn palette_validation_is_typed() {
+        let mut p = AllocPolicy { palette: vec![], ..Default::default() };
+        let err = p.validate().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::EmptyPalette)
+        );
+        p.palette = vec![4, 2, 3];
+        let err = p.validate().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SpecError>(),
+            Some(SpecError::UnsortedPalette { .. })
+        ));
+        p.palette = vec![2, 2, 4];
+        assert!(p.validate().is_err(), "duplicates are not ascending");
+        p.palette = vec![0, 2];
+        assert!(matches!(
+            p.validate().unwrap_err().downcast_ref::<SpecError>(),
+            Some(SpecError::PaletteWidth { bits: 0 })
+        ));
+        p.palette = vec![2, 3, 4];
+        p.budget = Some(AvgBitsBudget { max_mean_bits: 1.5 });
+        assert!(matches!(
+            p.validate().unwrap_err().downcast_ref::<SpecError>(),
+            Some(SpecError::InfeasibleBudget { .. })
+        ));
+        p.budget = Some(AvgBitsBudget { max_mean_bits: 2.0 });
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn sessionless_resolver_allocates_closed_form_only() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 3);
+        let r = Resolver::sessionless(&cfg, &ws, 3);
+        let (map, prov) = r.allocate(&AllocPolicy::default()).unwrap();
+        assert_eq!(map.bits.len(), cfg.moe_layers());
+        assert!(prov.metric.contains("hessian"));
+        assert_eq!(prov.layer_mean_bits.len(), cfg.moe_layers());
+        // data-driven metrics need a session
+        let err = r
+            .allocate(&AllocPolicy {
+                metric: Metric::Frequency { batches: 1 },
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("session"), "{err}");
+    }
+
+    #[test]
+    fn saved_map_json_roundtrip_is_exact() {
+        let saved = SavedMap {
+            variant: "dsvl2_tiny".into(),
+            map: PrecisionMap {
+                bits: vec![vec![2, 3, 4, 16], vec![4, 4, 2, 3]],
+            },
+            provenance: Some(Provenance {
+                metric: "hessian(closed-form)".into(),
+                granularity: "Model-wise".into(),
+                palette: vec![2, 3, 4],
+                budget: Some(2.5),
+                mean_bits: 5.25,
+                layer_mean_bits: vec![6.25, 3.25],
+            }),
+        };
+        let json = saved.to_json().to_string();
+        let back = SavedMap::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, saved);
+        // budget-free provenance round-trips as null
+        let mut unbudgeted = saved.clone();
+        unbudgeted.provenance.as_mut().unwrap().budget = None;
+        let back = SavedMap::from_json(
+            &Json::parse(&unbudgeted.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, unbudgeted);
+        // and without provenance entirely
+        let bare = SavedMap { provenance: None, ..saved };
+        let back =
+            SavedMap::from_json(&Json::parse(&bare.to_json().to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back, bare);
+    }
+
+    #[test]
+    fn missing_calib_is_a_typed_error() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let spec = QuantSpec {
+            quantizer: Quantizer::Gptq { damp: 0.01 },
+            calib: None,
+        };
+        let err = spec
+            .capture(None, &cfg, &ws, MoeKernel::default(), 0)
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::MissingCalib { quantizer: "GPTQ" })
+        );
+    }
+
+    #[test]
+    fn zero_profiling_knobs_are_typed_errors() {
+        for metric in [
+            Metric::Frequency { batches: 0 },
+            Metric::Hessian(Estimator::Hutchinson { samples: 0 }),
+            Metric::Hybrid {
+                batches: 0,
+                estimator: Estimator::ClosedForm,
+            },
+            Metric::Hybrid {
+                batches: 4,
+                estimator: Estimator::Hutchinson { samples: 0 },
+            },
+        ] {
+            let p = AllocPolicy { metric, ..Default::default() };
+            assert!(matches!(
+                p.validate().unwrap_err().downcast_ref::<SpecError>(),
+                Some(SpecError::DegenerateMetric { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn empty_calib_capture_is_a_typed_error() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let spec = QuantSpec::calibrated(
+            Quantizer::Gptq { damp: 0.01 },
+            CalibSpec { batches: 2, rows: 0 },
+        );
+        let err = spec
+            .capture(None, &cfg, &ws, MoeKernel::default(), 0)
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::EmptyCalib { batches: 2, rows: 0 })
+        );
+    }
+
+    #[test]
+    fn signround_with_too_few_calib_rows_is_a_typed_error() {
+        use crate::coordinator::SignRoundConfig;
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        // SignRound's artifact wants 64 calib rows; capturing only 32
+        // must fail typed at the capture stage, not assert inside the
+        // row subsampler mid-build
+        let spec = QuantSpec::calibrated(
+            Quantizer::SignRound(SignRoundConfig::default()),
+            CalibSpec { batches: 2, rows: 32 },
+        );
+        let err = spec
+            .capture(None, &cfg, &ws, MoeKernel::default(), 0)
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::CalibRows { rows: 32, needed: 64 })
+        );
+    }
+}

@@ -119,7 +119,10 @@ fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
     Ok(())
 }
 
-fn open_session(choice: Option<&str>) -> Result<Session> {
+/// Backend selection shared by the workers and the builder's
+/// resolution stage (calibration capture / profiling runs use the same
+/// backend the workers will serve on).
+pub(crate) fn open_session(choice: Option<&str>) -> Result<Session> {
     match choice {
         Some(c) => Session::from_choice(c),
         None => Session::open_default(),

@@ -5,25 +5,31 @@
 //!   train     — E2E training driver (train_step HLO loop), saves weights
 //!   profile   — Figs. 2/3/4: frequency / Hessian / hybrid heatmaps
 //!   assign    — Figs. 5/6/8/10: precision-assignment maps (Algorithm 2)
+//!   allocate  — parameterized allocation (metric × granularity ×
+//!               palette × budget) with optional `--out map.json`
 //!   eval      — evaluate the current (fp16) weights on all tasks
 //!   method    — run one table row (quantize + evaluate)
 //!   table     — full Table 2–5 row grid for one model
 //!   scorecard — §5.3 model-wise vs layer-wise win counts
 //!   offload   — §5.4 offload-traffic simulation
-//!   serve     — threaded batching server demo
+//!   serve     — engine-served batching demo (any quantizer / map)
 //!   report    — regenerate every table/figure into reports/
 
 use anyhow::{bail, Result};
 use mopeq::cli::Args;
 use mopeq::cluster::Granularity;
 use mopeq::config;
-use mopeq::coordinator::{MethodSpec, Metric, Pipeline};
+use mopeq::coordinator::{MethodSpec, Metric, Pipeline, Quantizer};
 use mopeq::data::Task;
+use mopeq::engine::spec::{
+    AllocPolicy, AvgBitsBudget, CalibSpec, QuantSpec, SavedMap,
+};
 use mopeq::engine::{Engine, PrecisionSource, WeightForm};
 use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
 use mopeq::report;
 use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist};
 use mopeq::train::{train, TrainConfig};
+use std::path::PathBuf;
 use std::time::Duration;
 
 fn main() -> Result<()> {
@@ -33,6 +39,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("profile") => cmd_profile(&args),
         Some("assign") => cmd_assign(&args),
+        Some("allocate") => cmd_allocate(&args),
         Some("eval") => cmd_eval(&args),
         Some("method") => cmd_method(&args),
         Some("table") => cmd_table(&args),
@@ -51,8 +58,14 @@ fn print_usage() {
     println!(
         "mopeq — Mixture of Mixed Precision Quantized Experts\n\
          usage: mopeq <cmd> [--model <variant>] [flags]\n\
-         cmds:  info | train | profile | assign | eval | method | table |\n\
-         \x20      scorecard | offload | serve | report\n\
+         cmds:  info | train | profile | assign | allocate | eval |\n\
+         \x20      method | table | scorecard | offload | serve | report\n\
+         allocate: --metric frequency|hessian|hybrid\n\
+         \x20         [--closed-form-hessian] --granularity layer|model\n\
+         \x20         --palette 2,3,4 [--budget <mean-bits>]\n\
+         \x20         [--out map.json]\n\
+         serve:    [--packed] [--workers N] [--map map.json]\n\
+         \x20         [--quantizer rtn|signround|gptq|awq] + allocate flags\n\
          variants: dsvl2_tiny dsvl2_small dsvl2_base molmoe"
     );
 }
@@ -63,6 +76,7 @@ fn pipeline(args: &Args) -> Result<Pipeline> {
     let mut p = Pipeline::open(&model, seed)?;
     p.eval_samples = args.usize_flag("samples", p.eval_samples)?;
     p.calib_batches = args.usize_flag("calib-batches", p.calib_batches)?;
+    p.calib_rows = args.usize_flag("calib-rows", p.calib_rows)?;
     p.hutchinson_samples =
         args.usize_flag("hutchinson-samples", p.hutchinson_samples)?;
     if args.switch("closed-form-hessian") {
@@ -89,6 +103,92 @@ fn gran_flag(args: &Args) -> Result<Granularity> {
         "model" => Granularity::ModelWise,
         g => bail!("unknown --granularity {g} (layer|model)"),
     })
+}
+
+/// Spec-grammar allocation policy from the CLI flags. An explicit
+/// `--metric` is threaded through `Pipeline::spec_metric`, so the same
+/// flag means the identical allocation on every subcommand
+/// (`--metric hessian` = the Hutchinson estimator with
+/// `--hutchinson-samples` probes, `--closed-form-hessian` switches to
+/// the data-free exact trace — exactly as on `method`/`table`).
+/// Without `--metric`, the paper's default metric applies
+/// (`AllocPolicy::default()`: closed-form Hessian) — so e.g.
+/// `serve --packed --budget 3` is "the paper allocation plus a cap",
+/// not a silent estimator switch.
+fn alloc_policy_flags(args: &Args, p: &Pipeline) -> Result<AllocPolicy> {
+    // estimator knobs count as asking for the pipeline metric semantics
+    // too — they must never be accepted-but-ignored
+    let metric = if args.flags.contains_key("metric") || estimator_knobs(args)
+    {
+        p.spec_metric(metric_flag(args)?)
+    } else {
+        AllocPolicy::default().metric
+    };
+    let palette = match args.flags.get("palette") {
+        None => AllocPolicy::default().palette,
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u8>()
+                    .map_err(|_| anyhow::anyhow!("--palette: bad width `{s}`"))
+            })
+            .collect::<Result<Vec<u8>>>()?,
+    };
+    let budget = match args.flags.get("budget") {
+        None => None,
+        Some(_) => Some(AvgBitsBudget {
+            max_mean_bits: args.f64_flag("budget", 0.0)?,
+        }),
+    };
+    Ok(AllocPolicy { metric, granularity: gran_flag(args)?, palette, budget })
+}
+
+/// Any allocation flag present → the user asked for an allocated map.
+fn has_alloc_flags(args: &Args) -> bool {
+    ["metric", "granularity", "palette", "budget"]
+        .iter()
+        .any(|f| args.flags.contains_key(*f))
+}
+
+/// Estimator knobs — one definition shared by every site that must
+/// honor (never silently drop) them.
+fn estimator_knobs(args: &Args) -> bool {
+    args.flags.contains_key("hutchinson-samples")
+        || args.switch("closed-form-hessian")
+}
+
+/// Quantizer + calibration spec from `--quantizer` (+ `--calib-batches`
+/// / `--calib-rows`): rtn (default, calibration-free), signround, gptq,
+/// awq.
+fn quant_spec_flags(args: &Args, p: &Pipeline) -> Result<QuantSpec> {
+    let quantizer = match args.str_flag("quantizer", "rtn").as_str() {
+        "rtn" => Quantizer::Rtn,
+        // same SignRoundConfig the method/table rows use: a too-small
+        // --calib-rows fails typed (SpecError::CalibRows) instead of
+        // silently degrading the rounding search
+        "signround" => Quantizer::SignRound(p.signround),
+        "gptq" => Quantizer::Gptq { damp: args.f64_flag("damp", 0.01)? },
+        "awq" => {
+            Quantizer::Awq { alpha: args.f64_flag("alpha", 0.5)? as f32 }
+        }
+        q => bail!("unknown --quantizer {q} (rtn|signround|gptq|awq)"),
+    };
+    // quantizer-specific knobs must never be accepted-but-ignored
+    if args.flags.contains_key("damp")
+        && !matches!(quantizer, Quantizer::Gptq { .. })
+    {
+        bail!("--damp only applies to --quantizer gptq");
+    }
+    if args.flags.contains_key("alpha")
+        && !matches!(quantizer, Quantizer::Awq { .. })
+    {
+        bail!("--alpha only applies to --quantizer awq");
+    }
+    let calib = quantizer
+        .needs_calib()
+        .then_some(CalibSpec { batches: p.calib_batches, rows: p.calib_rows });
+    Ok(QuantSpec { quantizer, calib })
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -224,6 +324,67 @@ fn cmd_assign(args: &Args) -> Result<()> {
         model_size_mb(&p.cfg, &PrecisionMap::uniform(&p.cfg, 16),
                       SizePolicy::fp16())
     );
+    Ok(())
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    // the allocation is quantizer-independent — quantizer flags here
+    // would be accepted-but-ignored, so reject them
+    for f in ["quantizer", "damp", "alpha"] {
+        if args.flags.contains_key(f) {
+            bail!(
+                "--{f} applies to quantized serving (`mopeq serve`), \
+                 not `allocate` — the precision map does not depend on \
+                 the quantizer"
+            );
+        }
+    }
+    let p = pipeline(args)?;
+    let policy = alloc_policy_flags(args, &p)?;
+    let (pmap, prov) = p.resolver().allocate(&policy)?;
+    println!(
+        "{}",
+        report::precision_heatmap(
+            &format!(
+                "allocation — {} / {} / {}",
+                p.cfg.name, prov.metric, prov.granularity
+            ),
+            &pmap
+        )
+    );
+    println!(
+        "palette {:?}{}  mean bits {:.3}  per-layer {}",
+        prov.palette,
+        prov.budget
+            .map_or(String::new(), |b| format!("  budget {b}")),
+        prov.mean_bits,
+        prov.layer_mean_bits
+            .iter()
+            .map(|b| format!("{b:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    let policy4 = SizePolicy::uniform(4, p.cfg.group);
+    println!(
+        "model size: {:.3} MB (fp16: {:.3} MB)",
+        model_size_mb(&p.cfg, &pmap, policy4),
+        model_size_mb(&p.cfg, &PrecisionMap::uniform(&p.cfg, 16),
+                      SizePolicy::fp16())
+    );
+    if let Some(out) = args.flags.get("out") {
+        let saved = SavedMap {
+            variant: p.cfg.name.to_string(),
+            map: pmap,
+            provenance: Some(prov),
+        };
+        let path = PathBuf::from(out);
+        saved.save(&path)?;
+        println!(
+            "wrote {} — serve it with `mopeq serve --map {} --packed`",
+            path.display(),
+            path.display()
+        );
+    }
     Ok(())
 }
 
@@ -374,24 +535,82 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_depth = args.usize_flag("queue-depth", 128)?;
     let linger_ms = args.u64_flag("linger-ms", 2)?;
 
-    // one construction path for every deployment shape: --packed picks
-    // WeightForm::Packed + the paper's MoPEQ allocation (closed-form
-    // Hessian, model-wise 2/3/4-bit) and serves with no f32 expert copy
-    let mut builder = Engine::builder(p.cfg.name)
+    // one construction path for every deployment shape. The precision
+    // source: `--map file.json` loads a saved allocation (the
+    // allocate→serve round-trip); explicit allocation flags compute one
+    // at build with the same semantics those flags have on
+    // `allocate`/`method`/`table`; bare `--packed` is the paper's MoPEQ
+    // setting (`PrecisionSource::mopeq()`: closed-form Hessian,
+    // model-wise, {2,3,4} — exactly PR 3's behavior). `--quantizer`
+    // picks the quantization function (calibrated ones capture at
+    // build); `--packed` serves straight from the packed codes with no
+    // f32 expert copy.
+    let precision = if let Some(path) = args.flags.get("map") {
+        // a map file IS the allocation — computing a different one from
+        // flags at the same time would silently ignore one of the two
+        if has_alloc_flags(args) || estimator_knobs(args) {
+            bail!(
+                "--map loads a finished allocation; drop --metric/\
+                 --granularity/--palette/--budget/--hutchinson-samples/\
+                 --closed-form-hessian (or drop --map to allocate from \
+                 those flags)"
+            );
+        }
+        PrecisionSource::MapFile(PathBuf::from(path))
+    } else if args.switch("packed")
+        || has_alloc_flags(args)
+        || estimator_knobs(args)
+    {
+        // bare --packed: alloc_policy_flags with no flags is exactly
+        // AllocPolicy::default() — the paper's MoPEQ setting
+        PrecisionSource::Allocated(alloc_policy_flags(args, &p)?)
+    } else {
+        PrecisionSource::Reference
+    };
+    // parse the quantizer first so a typo errors as a typo, not as a
+    // deployment-shape complaint
+    let quant = quant_spec_flags(args, &p)?;
+    if matches!(precision, PrecisionSource::Reference)
+        && !matches!(quant.quantizer, Quantizer::Rtn)
+    {
+        bail!(
+            "--quantizer only applies to a quantized deployment — add \
+             --packed, --map, or an allocation flag (--metric/\
+             --granularity/--palette/--budget)"
+        );
+    }
+    let form = if args.switch("packed") {
+        WeightForm::Packed
+    } else if matches!(precision, PrecisionSource::Reference) {
+        WeightForm::Fp16
+    } else {
+        WeightForm::DequantizedF32
+    };
+    let engine = Engine::builder(p.cfg.name)
         .weights(p.clone_weights())
         .seed(p.seed)
+        .weight_form(form)
+        .precision(precision)
+        .quantizer(quant)
         .workers(workers)
         .queue_depth(queue_depth)
         .batch_policy(BatchPolicy {
             max_linger: Duration::from_millis(linger_ms),
-        });
-    if args.switch("packed") {
-        builder = builder
-            .weight_form(WeightForm::Packed)
-            .precision(PrecisionSource::Mopeq);
-    }
-    let engine = builder.build()?;
+        })
+        .build()?;
     let pmap = engine.precision_map().cloned();
+    if let Some(prov) = engine.provenance() {
+        println!(
+            "allocation: {} / {} / palette {:?}{} — mean {:.2} \
+             bits/expert",
+            prov.metric,
+            prov.granularity,
+            prov.palette,
+            prov.budget
+                .map_or(String::new(), |b| format!(" / budget {b}")),
+            prov.mean_bits
+        );
+    }
 
     let client = engine.client();
     let mut rng = mopeq::rng::Rng::new(p.seed).derive("serve-cli");
@@ -458,16 +677,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let r = &stats.resident;
     println!(
         "resident weights/worker: backbone {} B, experts {} B ({} B \
-         heap, {} dense f32 expert tensors){}",
+         heap, {} dense f32 expert tensors); {} B Arc-shared across \
+         workers (process total for {} worker(s): {} B)",
         r.backbone_bytes,
         r.expert_accounted_bytes,
         r.expert_heap_bytes,
         r.dense_expert_tensors,
-        if pmap.is_some() {
-            "; packed words shared across workers via Arc"
-        } else {
-            ""
-        }
+        r.shared_bytes,
+        stats.workers.len(),
+        r.process_bytes(stats.workers.len().max(1)),
     );
     if let Some(pmap) = &pmap {
         let accounted: usize = pmap

@@ -328,6 +328,17 @@ impl PrecisionMap {
         sum / total as f64
     }
 
+    /// Mean assigned bit width per MoE layer (allocation provenance).
+    pub fn layer_mean_bits(&self) -> Vec<f64> {
+        self.bits
+            .iter()
+            .map(|l| {
+                l.iter().map(|&b| b as f64).sum::<f64>()
+                    / l.len().max(1) as f64
+            })
+            .collect()
+    }
+
     /// Histogram over bit widths (figure rendering).
     pub fn histogram(&self) -> Vec<(u8, usize)> {
         let mut h: HashMap<u8, usize> = HashMap::new();

@@ -40,6 +40,11 @@ use std::sync::Arc;
 pub enum Value {
     F32(Tensor<f32>),
     I32(Tensor<i32>),
+    /// An f32 tensor shared across executor replicas (the engine's
+    /// pre-sliced argument store). Cloning shares the Arc; no weight
+    /// bytes are copied — this is what lets N engine workers hold the
+    /// same dense backbone without N dense copies.
+    F32Shared(Arc<Tensor<f32>>),
     /// One MoE layer's bit-packed expert weights (see `moe::packed`) —
     /// the argument handle of the `moe_layer_packed` / `moe_ffn_packed`
     /// entries. Cloning shares the Arc; no weight bytes are copied.
@@ -51,13 +56,14 @@ impl Value {
         match self {
             Value::F32(t) => &t.shape,
             Value::I32(t) => &t.shape,
+            Value::F32Shared(t) => &t.shape,
             Value::Packed(p) => &p.shape,
         }
     }
 
     pub fn dtype(&self) -> &'static str {
         match self {
-            Value::F32(_) => "float32",
+            Value::F32(_) | Value::F32Shared(_) => "float32",
             Value::I32(_) => "int32",
             Value::Packed(_) => "packed_experts",
         }
@@ -70,6 +76,7 @@ impl Value {
     pub fn as_f32(&self) -> Result<&Tensor<f32>> {
         match self {
             Value::F32(t) => Ok(t),
+            Value::F32Shared(t) => Ok(t),
             _ => bail!("expected f32 tensor, got {}", self.dtype()),
         }
     }
@@ -94,6 +101,9 @@ impl Value {
     pub fn into_f32(self) -> Result<Tensor<f32>> {
         match self {
             Value::F32(t) => Ok(t),
+            Value::F32Shared(t) => {
+                Ok(Arc::try_unwrap(t).unwrap_or_else(|a| (*a).clone()))
+            }
             other => bail!("expected f32 tensor, got {}", other.dtype()),
         }
     }

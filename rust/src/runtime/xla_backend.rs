@@ -29,6 +29,7 @@ pub fn value_to_literal(v: &Value) -> Result<xla::Literal> {
     let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
     let lit = match v {
         Value::F32(t) => xla::Literal::vec1(&t.data),
+        Value::F32Shared(t) => xla::Literal::vec1(&t.data),
         Value::I32(t) => xla::Literal::vec1(&t.data),
         Value::Packed(_) => bail!(
             "packed expert weights are a native-backend execution path; \

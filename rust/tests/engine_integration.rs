@@ -183,6 +183,23 @@ fn two_worker_packed_engine_routes_drains_and_accounts() {
         .sum();
     assert_eq!(stats.resident.expert_accounted_bytes, accounted);
     assert_eq!(stats.resident.dense_expert_tensors, 0);
+
+    // satellite: the dense backbone (and the packed expert words) are
+    // Arc-shared across both workers — the whole measured footprint is
+    // shared, so the per-process residency must not scale with the
+    // worker count
+    let r = &stats.resident;
+    assert!(r.backbone_bytes > 0);
+    assert_eq!(
+        r.shared_bytes,
+        r.backbone_bytes + r.expert_heap_bytes,
+        "engine weights must be fully Arc-shared across workers"
+    );
+    assert_eq!(
+        r.process_bytes(2),
+        r.process_bytes(1),
+        "2 workers must not double the resident weight bytes"
+    );
 }
 
 #[test]

@@ -1,0 +1,411 @@
+//! Spec-grammar integration: the calibration-aware builder
+//! (`QuantSpec` + `AllocPolicy`) vs the coordinator pipeline.
+//!
+//! Locks the PR's acceptance criteria:
+//! - a GPTQ-quantized, Hutchinson-metric, layer-wise, {2,3,4}-palette
+//!   **packed** deployment builds through `EngineBuilder` alone, serves
+//!   the answers an offline executor over the same codes produces, and
+//!   its `PrecisionMap` matches the coordinator pipeline's
+//!   byte-for-byte after a JSON map round-trip;
+//! - every invalid builder combination fails with a **typed**
+//!   `SpecError` (Fp16×Allocated, Packed×Reference, empty palette,
+//!   unsorted palette, infeasible budget, missing CalibSpec) before
+//!   any worker is spawned;
+//! - the average-bits budget demotes the least-important experts and
+//!   lands under the cap.
+
+use mopeq::cluster::Granularity;
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::{ModelExecutor, MoeKernel, Quantizer};
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::spec::{
+    AllocPolicy, AvgBitsBudget, CalibSpec, Estimator, Metric, QuantSpec,
+    Resolver, SavedMap, SpecError,
+};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::moe::{local_meta, WeightStore};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+
+const SEED: u64 = 11;
+
+fn cfg() -> ModelConfig {
+    config::variant("dsvl2_tiny").unwrap()
+}
+
+/// The acceptance-criteria deployment: Hutchinson metric, layer-wise
+/// clustering, {2,3,4} palette.
+fn acceptance_policy() -> AllocPolicy {
+    AllocPolicy {
+        metric: Metric::Hessian(Estimator::Hutchinson { samples: 2 }),
+        granularity: Granularity::LayerWise,
+        palette: vec![2, 3, 4],
+        budget: None,
+    }
+}
+
+/// GPTQ with a small calibration capture (fast on the interpreter).
+fn acceptance_quant() -> QuantSpec {
+    QuantSpec::calibrated(
+        Quantizer::Gptq { damp: 0.01 },
+        CalibSpec { batches: 2, rows: 32 },
+    )
+}
+
+#[test]
+fn calibrated_allocated_engine_matches_coordinator_and_roundtrips() {
+    let cfg = cfg();
+
+    // --- engine path: the whole pipeline through EngineBuilder alone
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Allocated(acceptance_policy()))
+        .quantizer(acceptance_quant())
+        .queue_depth(32)
+        .build()
+        .expect("GPTQ-calibrated packed engine build failed");
+    let engine_map = engine.precision_map().unwrap().clone();
+    let prov = engine.provenance().unwrap().clone();
+    assert!(prov.metric.contains("hutchinson"), "{}", prov.metric);
+    assert_eq!(prov.granularity, "Layer-wise");
+    assert_eq!(prov.palette, vec![2, 3, 4]);
+    assert_eq!(prov.layer_mean_bits.len(), cfg.moe_layers());
+    assert!(engine.quant_stats().unwrap().experts > 0);
+    // layer-wise clustering over {2,3,4} uses every palette width
+    let widths: Vec<u8> =
+        engine_map.histogram().iter().map(|&(b, _)| b).collect();
+    assert_eq!(widths, vec![2, 3, 4]);
+
+    // --- coordinator path: the same spec types through the shared
+    // Resolver + QuantSpec stages must yield the identical map and
+    // bit-exact codes
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), SEED);
+    let session = Session::native();
+    let resolver = Resolver::new(&session, &cfg, &ws, SEED);
+    let (coord_map, _) = resolver.allocate(&acceptance_policy()).unwrap();
+    assert_eq!(
+        coord_map, engine_map,
+        "engine and coordinator allocations diverged"
+    );
+    let (store, stats) = acceptance_quant()
+        .pack(
+            Some(&session),
+            &cfg,
+            &ws,
+            &coord_map,
+            MoeKernel::default(),
+            SEED,
+        )
+        .unwrap();
+    assert_eq!(store.precision_map(), engine_map);
+    assert_eq!(stats.experts, cfg.total_experts());
+
+    // --- serve-correctness: the engine must answer exactly what an
+    // offline executor over the qdq→f32 weights derived from those
+    // same codes answers (routing oracle)
+    let mut qdq = WeightStore::init(&cfg, &local_meta(&cfg), SEED);
+    store.write_dequantized(&mut qdq).unwrap();
+    let exec = ModelExecutor::new(&session, &cfg, &qdq).unwrap();
+    let mut rng = Rng::new(SEED).derive("spec-parity");
+    let samples: Vec<Sample> = (0..6)
+        .map(|i| gen_sample(Task::ALL[i % Task::ALL.len()], &cfg, &mut rng))
+        .collect();
+    let client = engine.client();
+    for s in &samples {
+        let (tokens, vis) = pack_batch(std::slice::from_ref(s), &cfg);
+        let want = exec.predict(&tokens, &vis).unwrap()[0];
+        let reply = client.call(s.clone()).unwrap();
+        assert_eq!(
+            reply.answer, want,
+            "engine diverged from the offline same-codes oracle"
+        );
+    }
+
+    // --- engine residency equals the packed store it serves from
+    let final_stats = engine.shutdown().unwrap();
+    assert_eq!(
+        final_stats.resident.expert_accounted_bytes,
+        store.accounted_bytes()
+    );
+    assert_eq!(final_stats.resident.dense_expert_tensors, 0);
+
+    // --- JSON round-trip: save the engine's map, load it back
+    // byte-for-byte, and build a second engine from the file
+    let dir = std::env::temp_dir().join("mopeq_engine_spec");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("map.json");
+    SavedMap {
+        variant: cfg.name.to_string(),
+        map: engine_map.clone(),
+        provenance: Some(prov),
+    }
+    .save(&path)
+    .unwrap();
+    let loaded = SavedMap::load(&path).unwrap();
+    assert_eq!(loaded.map, engine_map, "map must round-trip exactly");
+    assert_eq!(loaded.variant, cfg.name);
+    let engine2 = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::MapFile(path.clone()))
+        .build()
+        .expect("MapFile engine build failed");
+    assert_eq!(engine2.precision_map().unwrap(), &engine_map);
+    assert!(
+        engine2.provenance().is_some(),
+        "a map file carries its provenance through"
+    );
+    engine2.shutdown().unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn budgeted_allocation_lands_under_the_cap() {
+    let cfg = cfg();
+    let budget = 2.5;
+    let engine = Engine::builder(cfg.name)
+        .seed(3)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Allocated(AllocPolicy {
+            budget: Some(AvgBitsBudget { max_mean_bits: budget }),
+            ..Default::default()
+        }))
+        .build()
+        .unwrap();
+    let map = engine.precision_map().unwrap().clone();
+    assert!(
+        map.mean_bits() <= budget,
+        "mean {} exceeds the budget {budget}",
+        map.mean_bits()
+    );
+    // the cap is part of the provenance, so a budgeted artifact can be
+    // reproduced from its own record
+    assert_eq!(engine.provenance().unwrap().budget, Some(budget));
+    // the budget demotes, it does not invent widths off the palette
+    for (_, b) in map.iter_experts() {
+        assert!([2u8, 3, 4].contains(&b), "off-palette width {b}");
+    }
+    // and a budgeted engine still serves
+    let mut rng = Rng::new(3);
+    let reply = engine
+        .client()
+        .call(gen_sample(Task::Blink, &cfg, &mut rng))
+        .unwrap();
+    assert!(reply.answer < cfg.vocab);
+    engine.shutdown().unwrap();
+}
+
+fn downcast(err: anyhow::Error) -> SpecError {
+    match err.downcast_ref::<SpecError>() {
+        Some(e) => e.clone(),
+        None => panic!("expected a typed SpecError, got: {err}"),
+    }
+}
+
+#[test]
+fn fp16_with_allocated_source_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Fp16)
+        .precision(PrecisionSource::Allocated(AllocPolicy::default()))
+        .build()
+        .unwrap_err();
+    assert_eq!(downcast(err), SpecError::Fp16WithQuantizingSource);
+}
+
+#[test]
+fn fp16_with_configured_quantizer_is_a_typed_error() {
+    // a GPTQ spec on an fp16 build would be silently ignored — the
+    // no-silent-fallback contract makes it a build error instead
+    let err = Engine::builder("dsvl2_tiny")
+        .quantizer(acceptance_quant())
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::Fp16WithQuantizer { quantizer: "GPTQ" }
+    );
+}
+
+#[test]
+fn packed_with_reference_source_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::MissingPrecisionSource { form: "Packed" }
+    );
+}
+
+#[test]
+fn dequantized_with_reference_source_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::DequantizedF32)
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::MissingPrecisionSource { form: "DequantizedF32" }
+    );
+}
+
+#[test]
+fn empty_palette_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Allocated(AllocPolicy {
+            palette: vec![],
+            ..Default::default()
+        }))
+        .build()
+        .unwrap_err();
+    assert_eq!(downcast(err), SpecError::EmptyPalette);
+}
+
+#[test]
+fn unsorted_palette_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Allocated(AllocPolicy {
+            palette: vec![4, 2, 3],
+            ..Default::default()
+        }))
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::UnsortedPalette { palette: vec![4, 2, 3] }
+    );
+}
+
+#[test]
+fn infeasible_budget_is_a_typed_error() {
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Allocated(AllocPolicy {
+            budget: Some(AvgBitsBudget { max_mean_bits: 1.5 }),
+            ..Default::default()
+        }))
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::InfeasibleBudget {
+            max_mean_bits: 1.5,
+            min_palette_bits: 2
+        }
+    );
+}
+
+#[test]
+fn calibrated_quantizer_without_calib_fails_before_warmup() {
+    // the silent-RTN footgun in reverse: a calib-needing quantizer with
+    // no CalibSpec must fail at build() with a typed error naming the
+    // missing CalibSpec — no fallback, no mid-warmup panic
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Uniform(4))
+        .quantizer(QuantSpec {
+            quantizer: Quantizer::Gptq { damp: 0.01 },
+            calib: None,
+        })
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::MissingCalib { quantizer: "GPTQ" }
+    );
+}
+
+#[test]
+fn corrupt_map_width_is_a_typed_error() {
+    // a hand-edited/corrupted map with a 0-bit expert must fail at
+    // build — rtn at 0 bits would quantize every weight to its
+    // zero-point and serve garbage silently
+    let cfg = cfg();
+    let mut map = mopeq::moe::PrecisionMap::uniform(&cfg, 4);
+    map.bits[0][0] = 0;
+    let err = Engine::builder(cfg.name)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map))
+        .build()
+        .unwrap_err();
+    assert_eq!(downcast(err), SpecError::MapWidth { bits: 0 });
+    // Uniform(0) goes through the same validator (RTN at 0 bits would
+    // produce NaN weights: scale = span/0)
+    let err = Engine::builder(cfg.name)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Uniform(0))
+        .build()
+        .unwrap_err();
+    assert_eq!(downcast(err), SpecError::MapWidth { bits: 0 });
+}
+
+#[test]
+fn fp16_uniform16_error_names_the_actual_fix() {
+    // Fp16 × Uniform(16) is "you meant Reference", not a form problem —
+    // the Uniform(>=16) check must fire before the form grid
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Fp16)
+        .precision(PrecisionSource::Uniform(16))
+        .build()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("PrecisionSource::Reference"),
+        "{err}"
+    );
+}
+
+#[test]
+fn map_file_for_the_wrong_variant_is_a_typed_error() {
+    let other = config::variant("molmoe").unwrap();
+    let dir = std::env::temp_dir().join("mopeq_engine_spec_mismatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("molmoe.json");
+    SavedMap {
+        variant: other.name.to_string(),
+        map: mopeq::moe::PrecisionMap::uniform(&other, 4),
+        provenance: None,
+    }
+    .save(&path)
+    .unwrap();
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::MapFile(path.clone()))
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        downcast(err),
+        SpecError::VariantMismatch {
+            expected: "dsvl2_tiny".into(),
+            found: "molmoe".into()
+        }
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn default_allocated_source_is_the_paper_deployment() {
+    // PrecisionSource::mopeq() == Allocated(AllocPolicy::default()):
+    // closed-form Hessian, model-wise, {2,3,4} — the old hard-wired
+    // `Mopeq` variant's exact behavior, now one point in the grid
+    let cfg = cfg();
+    let engine = Engine::builder(cfg.name)
+        .seed(7)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::mopeq())
+        .build()
+        .unwrap();
+    let map = engine.precision_map().unwrap().clone();
+    engine.shutdown().unwrap();
+
+    // the same allocation by hand (no session needed: data-free)
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 7);
+    let (want, prov) = Resolver::sessionless(&cfg, &ws, 7)
+        .allocate(&AllocPolicy::default())
+        .unwrap();
+    assert_eq!(map, want);
+    assert!(prov.metric.contains("closed-form"));
+}

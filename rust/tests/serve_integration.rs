@@ -47,6 +47,12 @@ fn engine_roundtrip_and_stats() {
     assert!(stats.throughput_rps > 0.0);
     assert_eq!(stats.rejected_busy, 0);
     assert_eq!(stats.rejected_deadline, 0);
+    // even a 1-worker fp16 engine serves over the Arc-shared argument
+    // slices (dense expert slices included) — nothing is copied per
+    // replica
+    let r = &stats.resident;
+    assert!(r.backbone_bytes > 0 && r.expert_heap_bytes > 0);
+    assert_eq!(r.shared_bytes, r.backbone_bytes + r.expert_heap_bytes);
 }
 
 #[test]

@@ -10,27 +10,57 @@
 //! - [`Context::context`] / [`Context::with_context`] on `Result<T, Error>`
 //! - `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
 //!   std errors (io, utf8, …) into [`Error`]
+//! - [`Error::downcast_ref`]: typed errors converted through `From` keep
+//!   their payload (anywhere in the chain), so callers can match on
+//!   structured error enums like real anyhow
 //!
 //! To switch back to the real crate, replace the path dependency in
 //! `rust/Cargo.toml` with a registry version — no call sites change.
 
 use std::fmt;
 
-/// Error type: an outermost message plus an optional chain of causes.
+/// Error type: an outermost message plus an optional chain of causes,
+/// carrying the original typed value when built from one.
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from anything displayable (what `anyhow!` expands to).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
+    }
+
+    /// Construct from a typed error, preserving it for
+    /// [`downcast_ref`](Error::downcast_ref) (same as `.into()`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        e.into()
     }
 
     /// Wrap `self` under a new outermost context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+            payload: None,
+        }
+    }
+
+    /// The typed error this chain was built from, if any level of it
+    /// was converted from a `T` (mirrors real anyhow's chain search).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(t) =
+                e.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
+            {
+                return Some(t);
+            }
+            cur = e.source.as_deref();
+        }
+        None
     }
 
     /// The innermost error in the chain.
@@ -107,9 +137,12 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
         }
         let mut err: Option<Error> = None;
         for m in msgs.into_iter().rev() {
-            err = Some(Error { msg: m, source: err.map(Box::new) });
+            err = Some(Error { msg: m, source: err.map(Box::new), payload: None });
         }
-        err.expect("non-empty chain")
+        let mut err = err.expect("non-empty chain");
+        // keep the typed value for downcast_ref
+        err.payload = Some(Box::new(e));
+        err
     }
 }
 
@@ -195,6 +228,27 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
         let e: Error = io.into();
         assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn downcast_preserves_typed_payload_through_context() {
+        #[derive(Debug, PartialEq)]
+        struct MyErr(u32);
+        impl fmt::Display for MyErr {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "my error {}", self.0)
+            }
+        }
+        impl std::error::Error for MyErr {}
+
+        let e: Error = MyErr(7).into();
+        assert_eq!(e.downcast_ref::<MyErr>(), Some(&MyErr(7)));
+        // context wrapping keeps the payload reachable down the chain
+        let wrapped = e.context("outer");
+        assert_eq!(wrapped.downcast_ref::<MyErr>(), Some(&MyErr(7)));
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_none());
+        // plain message errors carry no payload
+        assert!(Error::msg("plain").downcast_ref::<MyErr>().is_none());
     }
 
     #[test]
