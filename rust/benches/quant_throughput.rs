@@ -3,45 +3,61 @@
 //! GB/s — the §5.4 bandwidth argument, measured), and the SignRound HLO
 //! step — the cost side of the paper's method (PTQ cost per expert FC
 //! layer).
+//!
+//! Emits `reports/BENCH_quant_throughput.json` — the measured kernel
+//! profile `mopeq search --profile` feeds into the search `CostModel`
+//! (`ThroughputProfile::from_bench_json`), and the perf-trajectory
+//! artifact diffed across PRs.
 
-use mopeq::benchx::{bench, bench_items, section};
+use mopeq::benchx::{bench, bench_items, section, BenchLog};
 use mopeq::coordinator::{signround_optimize, SignRoundConfig};
+use mopeq::jsonx::Json;
 use mopeq::quant::{self, awq, gptq, kernels, pack};
 use mopeq::rng::Rng;
 use mopeq::runtime::Session;
 use mopeq::tensor::Tensor;
 
 fn main() {
+    let mut log = BenchLog::new("quant_throughput");
     let mut rng = Rng::new(0);
     let w = Tensor::randn(&mut rng, &[64, 32], 0.5);
     let x = Tensor::randn(&mut rng, &[256, 64], 1.0);
 
     section("host quantizers (one expert FC 64x32)");
+    let mut host = Vec::new();
     for bits in [2u8, 3, 4] {
-        bench(&format!("rtn_b{bits}"), || {
+        let s = bench(&format!("rtn_b{bits}"), || {
             quant::rtn_quantize(&w, bits, 32)
         });
+        host.push((format!("rtn_b{bits}"), BenchLog::stats_json(&s)));
     }
-    bench("gptq_b4 (256 calib rows)", || {
+    let s = bench("gptq_b4 (256 calib rows)", || {
         gptq::gptq_quantize(&w, &x, 4, 32, 0.01).unwrap()
     });
-    bench("awq_b4 (256 calib rows)", || {
+    host.push(("gptq_b4".into(), BenchLog::stats_json(&s)));
+    let s = bench("awq_b4 (256 calib rows)", || {
         awq::awq_quantize(&w, &x, 4, 32, 0.5)
     });
+    host.push(("awq_b4".into(), BenchLog::stats_json(&s)));
+    log.put("host_quantizers", Json::Obj(host));
 
     section("bit packing (64x32 codes)");
     let qm = quant::rtn_quantize(&w, 4, 32);
+    let mut packing = Vec::new();
     for bits in [2u8, 3, 4, 8] {
         let q = quant::rtn_quantize(&w, bits, 32);
-        bench_items(&format!("pack_b{bits}"), (64 * 32) as f64, || {
+        let s = bench_items(&format!("pack_b{bits}"), (64 * 32) as f64, || {
             pack::pack(&q.codes, 64, 32, bits).unwrap()
         });
+        packing.push((format!("pack_b{bits}"), BenchLog::stats_json(&s)));
     }
     let packed = pack::pack(&qm.codes, 64, 32, 4).unwrap();
-    bench_items("unpack_b4", (64 * 32) as f64, || {
+    let s = bench_items("unpack_b4", (64 * 32) as f64, || {
         pack::unpack(&packed, 64, 32, 4)
     });
+    packing.push(("unpack_b4".into(), BenchLog::stats_json(&s)));
     bench("dequantize_b4", || qm.dequantize());
+    log.put("packing", Json::Obj(packing));
 
     section("fused packed qmatmul vs f32 dense ([64,512] @ [512,512])");
     let (rows, din, dout) = (64usize, 512usize, 512usize);
@@ -52,12 +68,20 @@ fn main() {
     let sd = bench("dense_f32_matmul", || {
         kernels::matmul_f32(&xb.data, rows, din, &wb.data, dout)
     });
+    let dense_gbs = gbs(dense_bytes, sd.mean.as_secs_f64());
     println!(
         "{:<44} weight bytes/matmul {:>9}  read {:.2} GB/s",
-        "",
-        dense_bytes,
-        gbs(dense_bytes, sd.mean.as_secs_f64())
+        "", dense_bytes, dense_gbs
     );
+    let mut dense_entry = match BenchLog::stats_json(&sd) {
+        Json::Obj(o) => o,
+        _ => unreachable!(),
+    };
+    dense_entry
+        .push(("weight_bytes".into(), Json::Num(dense_bytes as f64)));
+    dense_entry.push(("gbs".into(), Json::Num(dense_gbs)));
+    log.put("dense", Json::Obj(dense_entry));
+    let mut qmatmul_entries = Vec::new();
     for bits in [2u8, 3, 4, 8] {
         let qm = quant::rtn_quantize(&wb, bits, 32);
         let pm = kernels::PackedMatrix::from_quantized(&qm).unwrap();
@@ -73,15 +97,27 @@ fn main() {
         let st = bench(&format!("qmatmul{bits}_fused"), || {
             kernels::qmatmul(&xb.data, rows, &pm)
         });
+        let kernel_gbs = gbs(pm.heap_bytes(), st.mean.as_secs_f64());
         println!(
             "{:<44} weight bytes/matmul {:>9}  read {:.2} GB/s \
              ({:.1}x fewer bytes than f32)",
             "",
             pm.heap_bytes(),
-            gbs(pm.heap_bytes(), st.mean.as_secs_f64()),
+            kernel_gbs,
             dense_bytes as f64 / pm.heap_bytes() as f64
         );
+        let mut entry = match BenchLog::stats_json(&st) {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        entry.push((
+            "weight_bytes".into(),
+            Json::Num(pm.heap_bytes() as f64),
+        ));
+        entry.push(("gbs".into(), Json::Num(kernel_gbs)));
+        qmatmul_entries.push((bits.to_string(), Json::Obj(entry)));
     }
+    log.put("qmatmul", Json::Obj(qmatmul_entries));
 
     section("SignRound HLO step (Pallas qdq fwd + STE bwd + SignSGD)");
     match Session::open_default() {
@@ -90,15 +126,30 @@ fn main() {
             let cfg = SignRoundConfig { steps: 10, lr: 0.02, calib_rows: 64 };
             // warm the executable so the bench measures steps, not compile
             let _ = signround_optimize(&s, &w, &xs, 2, 32, &cfg);
+            let mut sr = Vec::new();
             for bits in [2u8, 4] {
-                bench_items(
+                let st = bench_items(
                     &format!("signround_10steps_b{bits}"),
                     10.0,
                     || signround_optimize(&s, &w, &xs, bits, 32, &cfg)
                         .unwrap(),
                 );
+                sr.push((
+                    format!("b{bits}"),
+                    BenchLog::stats_json(&st),
+                ));
             }
+            log.put("signround", Json::Obj(sr));
         }
         Err(e) => println!("(skipping HLO benches: {e})"),
+    }
+
+    match log.save() {
+        Ok(path) => println!(
+            "\nwrote {} (feed it back: `mopeq search --profile {}`)",
+            path.display(),
+            path.display()
+        ),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
     }
 }

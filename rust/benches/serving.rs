@@ -5,8 +5,13 @@
 //! steady-state rps/p99), the **worker-count sweep** (the scale-out
 //! axis: N executor replicas over Arc-shared weights), and the
 //! batch-linger policy sweep (throughput vs tail latency).
+//!
+//! Emits `reports/BENCH_serving.json` (one row per configuration:
+//! rps, p50/p99 ns, mean fill, resident expert bytes) so the serving
+//! perf trajectory is diffable across PRs.
 
-use mopeq::benchx::section;
+use mopeq::benchx::{section, BenchLog};
+use mopeq::jsonx::Json;
 use mopeq::cluster::Granularity;
 use mopeq::config;
 use mopeq::coordinator::{Quantizer, SignRoundConfig};
@@ -40,6 +45,24 @@ fn drive(engine: Engine, n: usize) -> anyhow::Result<MetricsSnapshot> {
     engine.shutdown()
 }
 
+/// One configuration's steady-state numbers as a BENCH_serving.json row.
+fn snap_row(label: &str, workers: usize, s: &MetricsSnapshot) -> Json {
+    Json::Obj(vec![
+        ("label".into(), Json::Str(label.to_string())),
+        ("workers".into(), Json::Num(workers as f64)),
+        ("requests".into(), Json::Num(s.requests as f64)),
+        ("batches".into(), Json::Num(s.batches as f64)),
+        ("mean_fill".into(), Json::Num(s.mean_fill)),
+        ("rps".into(), Json::Num(s.throughput_rps)),
+        ("p50_ns".into(), Json::Num(s.p50.as_nanos() as f64)),
+        ("p99_ns".into(), Json::Num(s.p99.as_nanos() as f64)),
+        (
+            "resident_expert_bytes".into(),
+            Json::Num(s.resident.expert_accounted_bytes as f64),
+        ),
+    ])
+}
+
 fn mopeq_map(cfg: &config::ModelConfig, ws: &WeightStore) -> PrecisionMap {
     let sens = hessian_closed_form(ws, cfg).unwrap();
     PrecisionMap {
@@ -54,6 +77,8 @@ fn mopeq_map(cfg: &config::ModelConfig, ws: &WeightStore) -> PrecisionMap {
 
 fn main() -> anyhow::Result<()> {
     let n = if std::env::var_os("MOPEQ_FULL").is_some() { 256 } else { 64 };
+    let mut log = BenchLog::new("serving");
+    let mut rows_json: Vec<Json> = Vec::new();
 
     section("precision maps (batch linger 2ms, 1 worker)");
     let (cfg, ws) = fresh_store(0);
@@ -98,6 +123,7 @@ fn main() -> anyhow::Result<()> {
             s.resident.expert_accounted_bytes,
             s.resident.dense_expert_tensors,
         );
+        rows_json.push(snap_row(label, 1, &s));
     }
     let accounted: usize = mixed
         .iter_experts()
@@ -142,6 +168,14 @@ fn main() -> anyhow::Result<()> {
              {:>4} reqs  p50 {:?}  p99 {:?}  {:>7.1} req/s",
             s.requests, s.p50, s.p99, s.throughput_rps
         );
+        let mut row = snap_row(&format!("quantizer-{label}"), 1, &s);
+        if let Json::Obj(fields) = &mut row {
+            fields.push((
+                "build_ns".into(),
+                Json::Num(build.as_nanos() as f64),
+            ));
+        }
+        rows_json.push(row);
     }
     println!(
         "(same packed execution path once built — the quantizers \
@@ -172,6 +206,7 @@ fn main() -> anyhow::Result<()> {
                  p99 {:?}  {:>7.1} req/s",
                 s.requests, s.mean_fill, s.p99, s.throughput_rps
             );
+            rows_json.push(snap_row(label, workers, &s));
         }
     }
 
@@ -191,6 +226,12 @@ fn main() -> anyhow::Result<()> {
              p50 {:?}  p95 {:?}  {:>7.1} req/s",
             s.batches, s.mean_fill, s.p50, s.p95, s.throughput_rps
         );
+        rows_json.push(snap_row(&format!("linger-{linger_ms}ms"), 1, &s));
     }
+
+    log.put_num("requests_per_row", n as f64);
+    log.put("rows", Json::Arr(rows_json));
+    let path = log.save()?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

@@ -2,7 +2,16 @@
 //! warmup + timed runs, median/mean/p95/throughput reporting, and a
 //! tabular printer shared by the `cargo bench` targets. Deliberately
 //! criterion-flavoured API so benches read familiarly.
+//!
+//! Benches additionally emit a machine-readable artifact via
+//! [`BenchLog`] — `reports/BENCH_<name>.json` — so the perf trajectory
+//! (ops, GB/s, rps, p99) is diffable across PRs and the search
+//! subsystem's `CostModel` can load a *measured* kernel profile
+//! (`search::ThroughputProfile::from_bench_json`) instead of its
+//! built-in table.
 
+use crate::jsonx::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 pub struct Bencher {
@@ -153,6 +162,78 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench artifact builder: nested key → JSON value
+/// pairs, saved as `reports/BENCH_<name>.json` with stable key order
+/// (insertion order — [`crate::jsonx`] preserves it), so successive
+/// runs diff cleanly.
+pub struct BenchLog {
+    bench: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl BenchLog {
+    pub fn new(bench: &str) -> BenchLog {
+        BenchLog {
+            bench: bench.to_string(),
+            fields: vec![("bench".into(), Json::Str(bench.to_string()))],
+        }
+    }
+
+    /// Set a top-level field (overwrites an existing key).
+    pub fn put(&mut self, key: &str, value: Json) {
+        if let Some(slot) =
+            self.fields.iter_mut().find(|(k, _)| k == key)
+        {
+            slot.1 = value;
+        } else {
+            self.fields.push((key.to_string(), value));
+        }
+    }
+
+    pub fn put_num(&mut self, key: &str, value: f64) {
+        self.put(key, Json::Num(value));
+    }
+
+    /// A [`Stats`] block as JSON (`mean_ns` / `median_ns` / `p95_ns` /
+    /// `iters`, plus `items_per_sec` when throughput items were set).
+    pub fn stats_json(stats: &Stats) -> Json {
+        let mut obj = vec![
+            (
+                "mean_ns".to_string(),
+                Json::Num(stats.mean.as_nanos() as f64),
+            ),
+            (
+                "median_ns".to_string(),
+                Json::Num(stats.median.as_nanos() as f64),
+            ),
+            (
+                "p95_ns".to_string(),
+                Json::Num(stats.p95.as_nanos() as f64),
+            ),
+            ("iters".to_string(), Json::Num(stats.iters as f64)),
+        ];
+        if stats.items_per_iter != 1.0 {
+            obj.push((
+                "items_per_sec".to_string(),
+                Json::Num(stats.items_per_sec()),
+            ));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.fields.clone())
+    }
+
+    /// Write `reports/BENCH_<name>.json`; returns the path.
+    pub fn save(&self) -> anyhow::Result<PathBuf> {
+        crate::report::write_report(
+            &format!("BENCH_{}.json", self.bench),
+            &self.to_json().to_string(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +251,60 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.mean >= Duration::from_micros(90));
         assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn bench_log_schema_feeds_the_search_profile() {
+        let mut log = BenchLog::new("quant_throughput");
+        let mut qm = Vec::new();
+        for (bits, gbs) in [(2u8, 1.1), (3, 0.8), (4, 1.4), (8, 2.0)] {
+            qm.push((
+                bits.to_string(),
+                Json::Obj(vec![
+                    ("mean_ns".into(), Json::Num(1000.0)),
+                    ("weight_bytes".into(), Json::Num(4096.0)),
+                    ("gbs".into(), Json::Num(gbs)),
+                ]),
+            ));
+        }
+        log.put("qmatmul", Json::Obj(qm));
+        log.put_num("overwritten", 1.0);
+        log.put_num("overwritten", 2.0);
+        let text = log.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.req("bench").unwrap().as_str().unwrap(),
+            "quant_throughput"
+        );
+        assert_eq!(
+            parsed.req("overwritten").unwrap().as_f64().unwrap(),
+            2.0
+        );
+        // the exact schema ThroughputProfile::from_bench_json reads
+        let dir = std::env::temp_dir().join("mopeq_benchlog_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_quant_throughput.json");
+        std::fs::write(&path, &text).unwrap();
+        let profile =
+            crate::search::ThroughputProfile::from_bench_json(&path)
+                .unwrap();
+        assert_eq!(profile.gbs_for(3), Some(0.8));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stats_json_carries_throughput_only_when_set() {
+        let mut s = Bencher::new("t")
+            .warmup(0)
+            .min_iters(3)
+            .target(Duration::from_millis(1))
+            .run(|| 1);
+        let j = BenchLog::stats_json(&s);
+        assert!(j.get("items_per_sec").is_none());
+        s.items_per_iter = 10.0;
+        let j = BenchLog::stats_json(&s);
+        assert!(j.req("items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.req("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! granularities (layer-wise [18] vs model-wise, §4.2) plus the rigid
 //! percentage-split baseline ([12]-style) for the ablation bench.
 
+use crate::engine::spec::SpecError;
 use crate::rng::Rng;
+use anyhow::Result;
 
 /// K-means++ initialization + Lloyd iterations on 1-D values.
 /// Returns (assignment per value, centroid per cluster).
@@ -172,18 +174,24 @@ pub fn assign_map(
 /// given up first and the reduction spreads across the low-importance
 /// tail instead of zeroing out one expert. `palette` must be sorted
 /// ascending; assignments already at the smallest width are left
-/// alone. Deterministic: ties in importance resolve in (layer, expert)
-/// order. A budget below the smallest palette width is infeasible —
-/// callers validate that before calling (`AllocPolicy::validate`).
+/// alone; an already-feasible assignment is returned untouched.
+/// Deterministic: ties in importance resolve in (layer, expert) order
+/// (the sweep order is a stable sort over that order).
+///
+/// A budget that stays violated after every palette-width expert is at
+/// the floor — widths pinned outside the palette (fp16 experts) cannot
+/// be demoted — fails with a typed [`SpecError::BudgetUnreachable`],
+/// never a silent under-delivery. (Budgets below the smallest palette
+/// width are rejected earlier, by `AllocPolicy::validate`.)
 pub fn enforce_budget(
     bits: &mut [Vec<u8>],
     importance: &[Vec<f64>],
     palette: &[u8],
     max_mean: f64,
-) {
+) -> Result<()> {
     let total: usize = bits.iter().map(|l| l.len()).sum();
     if total == 0 || palette.is_empty() {
-        return;
+        return Ok(());
     }
     let mut order: Vec<(usize, usize)> = bits
         .iter()
@@ -211,13 +219,20 @@ pub fn enforce_budget(
             sum -= (cur - palette[pos - 1]) as usize;
             demoted = true;
             if (sum as f64) <= target {
-                return;
+                return Ok(());
             }
         }
         if !demoted {
-            return; // everything demotable is at the floor
+            // everything demotable is at the floor and the cap is
+            // still violated: infeasible, typed
+            return Err(SpecError::BudgetUnreachable {
+                max_mean_bits: max_mean,
+                floor_mean_bits: sum as f64 / total as f64,
+            }
+            .into());
         }
     }
+    Ok(())
 }
 
 /// Rigid percentage-split baseline (the [12]-style scheme the paper's
@@ -317,7 +332,7 @@ mod tests {
         // importance ascending left to right, all at 4 bits: mean 4.0
         let importance = vec![vec![1.0, 2.0, 3.0, 4.0]];
         let mut bits = vec![vec![4u8, 4, 4, 4]];
-        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5);
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5).unwrap();
         // one demotion step (4→3) on the least important expert reaches
         // mean 3.75 > 3.5, the second (next-least) lands exactly on 3.5
         assert_eq!(bits, vec![vec![3, 3, 4, 4]]);
@@ -330,7 +345,7 @@ mod tests {
         // least important expert a second step
         let importance = vec![vec![1.0, 2.0, 3.0]];
         let mut bits = vec![vec![4u8, 4, 4]];
-        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.0);
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.0).unwrap();
         assert_eq!(bits, vec![vec![3, 3, 3]]);
     }
 
@@ -339,16 +354,64 @@ mod tests {
         let importance = vec![vec![1.0, 2.0]];
         let mut bits = vec![vec![2u8, 2]];
         // target equals the floor: nothing to do, must not loop forever
-        enforce_budget(&mut bits, &importance, &[2, 3, 4], 2.0);
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 2.0).unwrap();
         assert_eq!(bits, vec![vec![2, 2]]);
     }
 
     #[test]
-    fn budget_satisfied_is_a_noop() {
-        let importance = vec![vec![1.0, 9.0]];
-        let mut bits = vec![vec![2u8, 4]];
-        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5);
-        assert_eq!(bits, vec![vec![2, 4]]);
+    fn budget_satisfied_is_untouched() {
+        // an already-feasible assignment comes back byte-identical —
+        // budget enforcement must never reshuffle a map that fits
+        let importance = vec![vec![1.0, 9.0], vec![4.0, 2.0]];
+        let mut bits = vec![vec![2u8, 4], vec![3, 2]];
+        let before = bits.clone();
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5).unwrap();
+        assert_eq!(bits, before);
+        // including exactly-at-the-cap
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 2.75)
+            .unwrap();
+        assert_eq!(bits, before);
+    }
+
+    #[test]
+    fn budget_ties_demote_in_layer_expert_order() {
+        // four experts with identical importance: the sweep is a stable
+        // sort, so demotions land in (layer, expert) order — expert
+        // (0,0) first, then (0,1), never (1,*) before layer 0 is swept
+        let importance = vec![vec![5.0, 5.0], vec![5.0, 5.0]];
+        let mut bits = vec![vec![4u8, 4], vec![4, 4]];
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.75).unwrap();
+        assert_eq!(bits, vec![vec![3, 4], vec![4, 4]]);
+        let mut bits = vec![vec![4u8, 4], vec![4, 4]];
+        enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.5).unwrap();
+        assert_eq!(bits, vec![vec![3, 3], vec![4, 4]]);
+    }
+
+    #[test]
+    fn budget_unreachable_is_a_typed_error_not_a_panic() {
+        use crate::engine::spec::SpecError;
+        // fp16-pinned experts sit outside the palette and cannot be
+        // demoted: a cap below their contribution must fail typed
+        let importance = vec![vec![1.0, 2.0, 3.0]];
+        let mut bits = vec![vec![16u8, 16, 2]];
+        let err = enforce_budget(&mut bits, &importance, &[2, 3, 4], 3.0)
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::BudgetUnreachable {
+                max_mean_bits: 3.0,
+                floor_mean_bits: 34.0 / 3.0,
+            })
+        );
+        // same when every palette expert is already at the floor
+        let mut bits = vec![vec![2u8, 2, 16]];
+        let err = enforce_budget(&mut bits, &importance, &[2, 3, 4], 2.0)
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SpecError>(),
+            Some(SpecError::BudgetUnreachable { .. })
+        ));
+        assert_eq!(bits, vec![vec![2, 2, 16]], "floor stays intact");
     }
 
     fn mean(bits: &[Vec<u8>]) -> f64 {

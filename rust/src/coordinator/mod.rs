@@ -12,8 +12,8 @@ pub use executor::{
     SharedArgs,
 };
 pub use quantize::{
-    capture_calib, pack_experts, quantize_backbone, quantize_experts,
-    LayerCalib, QuantStats, Quantizer,
+    capture_calib, pack_experts, probe_expert_mse, quantize_backbone,
+    quantize_experts, LayerCalib, QuantStats, Quantizer,
 };
 pub use signround::{signround_optimize, SignRoundConfig};
 
@@ -122,6 +122,11 @@ pub struct Pipeline {
     pub hessian_closed_form: bool,
     /// which MoE-layer lowering the executors run (§Perf L2-A)
     pub moe_kernel: MoeKernel,
+    /// whether `ws` came from a trained `weights/<variant>.bin`
+    /// checkpoint (false = deterministic init). Surfaced so map-deriving
+    /// commands (`allocate`, `search`) can warn instead of silently
+    /// shipping an init-weights artifact.
+    pub loaded_trained_weights: bool,
 }
 
 impl Pipeline {
@@ -130,11 +135,12 @@ impl Pipeline {
     pub fn open(variant: &str, seed: u64) -> Result<Pipeline> {
         let session = Session::open_default()?;
         let cfg = config::variant(variant)?;
-        let ws = match Self::weights_path(variant) {
-            p if p.exists() => WeightStore::load(&p)?,
+        let (ws, loaded_trained_weights) = match Self::weights_path(variant)
+        {
+            p if p.exists() => (WeightStore::load(&p)?, true),
             _ => {
                 let meta = session.registry().variant(variant)?.clone();
-                WeightStore::init(&cfg, &meta, seed)
+                (WeightStore::init(&cfg, &meta, seed), false)
             }
         };
         Ok(Pipeline {
@@ -149,6 +155,7 @@ impl Pipeline {
             signround: SignRoundConfig::default(),
             hessian_closed_form: false,
             moe_kernel: MoeKernel::default(),
+            loaded_trained_weights,
         })
     }
 
@@ -165,6 +172,7 @@ impl Pipeline {
     pub fn reinit_weights(&mut self) -> Result<()> {
         let meta = self.session.registry().variant(self.cfg.name)?.clone();
         self.ws = WeightStore::init(&self.cfg, &meta, self.seed);
+        self.loaded_trained_weights = false;
         Ok(())
     }
 

@@ -281,6 +281,68 @@ pub fn pack_experts(
     Ok((PackedStore::new(cfg.name, layers), stats))
 }
 
+/// Per-expert reconstruction error probe at one uniform width: quantize
+/// every routed expert's three FC matrices with `quantizer` at `bits`
+/// and return the summed per-expert MSE `[moe_layer][expert]` — without
+/// packing or writing anything. This is the error side of the search
+/// subsystem's `CostModel` (the same `quantize_mat_codes` the real
+/// build runs, so a probed error is the error the deployment would
+/// actually pay), reused across the RTN / GPTQ / AWQ / SignRound
+/// probes.
+pub fn probe_expert_mse(
+    session: Option<&Session>,
+    cfg: &ModelConfig,
+    ws: &WeightStore,
+    bits: u8,
+    quantizer: &Quantizer,
+    calib: Option<&LayerCalib>,
+) -> Result<Vec<Vec<f64>>> {
+    if quantizer.needs_calib() && calib.is_none() {
+        bail!("{} requires calibration data", quantizer.label());
+    }
+    // calibration-free placeholders, shared across the whole probe loop
+    // (this runs once per expert per candidate width — the search's
+    // dominant cost path — so no per-expert allocation)
+    let zero_gate = Tensor::zeros(&[1, cfg.d_model]);
+    let zero_down = Tensor::zeros(&[1, cfg.d_expert]);
+    let mut out = Vec::with_capacity(cfg.moe_layers());
+    for layer in 0..cfg.moe_layers() {
+        let x_layer = calib.map(|c| &c.layers[layer]);
+        let mut row = Vec::with_capacity(cfg.experts);
+        for expert in 0..cfg.experts {
+            let id = ExpertId { layer, expert };
+            if bits >= 16 {
+                row.push(0.0); // fp16 experts reconstruct exactly
+                continue;
+            }
+            let gate = ws.expert_mat(id, ExpertMat::Gate)?;
+            let up = ws.expert_mat(id, ExpertMat::Up)?;
+            let down = ws.expert_mat(id, ExpertMat::Down)?;
+            // gate/up share the layer calib unchanged (borrowed, not
+            // cloned); only the down input depends on the expert
+            let x_down_owned;
+            let (x_gate, x_down): (&Tensor<f32>, &Tensor<f32>) =
+                match x_layer {
+                    Some(x) => {
+                        x_down_owned = down_inputs(x, &gate, &up);
+                        (x, &x_down_owned)
+                    }
+                    None => (&zero_gate, &zero_down),
+                };
+            let mut mse = 0.0f64;
+            for (w, x) in [(&gate, x_gate), (&up, x_gate), (&down, x_down)]
+            {
+                let codes = quantize_mat_codes(session, w, x, bits,
+                                               cfg.group, quantizer)?;
+                mse += codes.dequantize().mse(w) as f64;
+            }
+            row.push(mse);
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
 /// Quantize every routed expert per the precision map, writing
 /// dequantized weights back into the store — the legacy qdq→f32 path,
 /// now derived from the *same* packed codes as [`pack_experts`] so the
@@ -436,6 +498,53 @@ mod tests {
         );
         assert_eq!(ws.get("embed.table").unwrap(), &embed_before);
         assert!(ws.get("moe.wq").unwrap().max_abs_diff(&attn_before) > 0.0);
+    }
+
+    #[test]
+    fn probe_mse_matches_pack_and_is_monotone() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 5);
+        let probe2 =
+            probe_expert_mse(None, &cfg, &ws, 2, &Quantizer::Rtn, None)
+                .unwrap();
+        let probe4 =
+            probe_expert_mse(None, &cfg, &ws, 4, &Quantizer::Rtn, None)
+                .unwrap();
+        assert_eq!(probe2.len(), cfg.moe_layers());
+        for (r2, r4) in probe2.iter().zip(&probe4) {
+            assert_eq!(r2.len(), cfg.experts);
+            for (a, b) in r2.iter().zip(r4) {
+                assert!(a > b, "2-bit error {a} !> 4-bit error {b}");
+            }
+        }
+        // the probe is the same error pack_experts aggregates: its mean
+        // equals QuantStats::mean_weight_mse (per-matrix mean)
+        let pmap = PrecisionMap::uniform(&cfg, 4);
+        let (_, stats) =
+            pack_experts(None, &cfg, &ws, &pmap, &Quantizer::Rtn, None)
+                .unwrap();
+        let probe_mean: f64 = probe4.iter().flatten().sum::<f64>()
+            / (cfg.total_experts() * 3) as f64;
+        assert!(
+            (probe_mean - stats.mean_weight_mse).abs() < 1e-12,
+            "{probe_mean} vs {}",
+            stats.mean_weight_mse
+        );
+        // fp16 probes are exactly zero
+        let probe16 =
+            probe_expert_mse(None, &cfg, &ws, 16, &Quantizer::Rtn, None)
+                .unwrap();
+        assert!(probe16.iter().flatten().all(|&v| v == 0.0));
+        // calibrated probes without calib fail like pack_experts does
+        assert!(probe_expert_mse(
+            None,
+            &cfg,
+            &ws,
+            4,
+            &Quantizer::Gptq { damp: 0.01 },
+            None
+        )
+        .is_err());
     }
 
     #[test]

@@ -67,6 +67,7 @@ use crate::coordinator::executor::SharedArgs;
 use crate::coordinator::QuantStats;
 use crate::data::Sample;
 use crate::moe::{PackedStore, PrecisionMap, WeightStore};
+use crate::search::SearchSpec;
 use crate::serve::BatchPolicy;
 use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
@@ -115,6 +116,11 @@ pub enum PrecisionSource {
     /// computed at build by the parameterized allocation policy
     /// (importance metric × granularity × palette × budget)
     Allocated(AllocPolicy),
+    /// computed at build by the Pareto allocation search
+    /// ([`crate::search::run_search`]): exact DP + local refinement
+    /// over the cost model's size/error/throughput table — "the best
+    /// map under this budget", not "the clustering heuristic capped"
+    Searched(SearchSpec),
 }
 
 impl PrecisionSource {
@@ -123,6 +129,13 @@ impl PrecisionSource {
     /// [`PrecisionSource::Allocated`] of [`AllocPolicy::default`].
     pub fn mopeq() -> PrecisionSource {
         PrecisionSource::Allocated(AllocPolicy::default())
+    }
+
+    /// The searched counterpart of [`PrecisionSource::mopeq`]: the best
+    /// map under `max_mean_bits` average bits
+    /// ([`SearchSpec::avg_bits`]).
+    pub fn searched(max_mean_bits: f64) -> PrecisionSource {
+        PrecisionSource::Searched(SearchSpec::avg_bits(max_mean_bits))
     }
 }
 
@@ -257,6 +270,18 @@ impl EngineBuilder {
     pub fn precision(mut self, src: PrecisionSource) -> Self {
         self.precision = src;
         self
+    }
+
+    /// "Serve the best deployment under `max_mean_bits` average bits":
+    /// packed weight form + [`PrecisionSource::Searched`] of
+    /// [`SearchSpec::avg_bits`] — build runs the Pareto allocation
+    /// search (exact DP + refinement over the size/error/throughput
+    /// cost model) and serves the winning map directly. Compose
+    /// [`precision`](Self::precision) with a hand-built [`SearchSpec`]
+    /// for non-default metrics, palettes, probes, or byte budgets.
+    pub fn auto(self, max_mean_bits: f64) -> Self {
+        self.weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::searched(max_mean_bits))
     }
 
     /// Which quantization function fills the precision map when the

@@ -354,6 +354,11 @@ pub enum SpecError {
     MapWidth { bits: u8 },
     /// budget below the smallest palette width — no allocation can fit
     InfeasibleBudget { max_mean_bits: f64, min_palette_bits: u8 },
+    /// budget enforcement ran out of demotable experts: even with every
+    /// palette width at the floor the mean stays above the cap (widths
+    /// pinned outside the palette — e.g. fp16 experts — cannot be
+    /// demoted)
+    BudgetUnreachable { max_mean_bits: f64, floor_mean_bits: f64 },
     /// a loaded map names a different model variant
     VariantMismatch { expected: String, found: String },
 }
@@ -432,6 +437,16 @@ impl std::fmt::Display for SpecError {
                 "budget of {max_mean_bits} mean bits/expert is \
                  infeasible: the smallest palette width is \
                  {min_palette_bits}"
+            ),
+            SpecError::BudgetUnreachable {
+                max_mean_bits,
+                floor_mean_bits,
+            } => write!(
+                f,
+                "budget of {max_mean_bits} mean bits/expert is \
+                 unreachable: demoting every palette-width expert to \
+                 the floor still leaves a mean of {floor_mean_bits} \
+                 (non-palette widths cannot be demoted)"
             ),
             SpecError::VariantMismatch { expected, found } => write!(
                 f,
@@ -562,7 +577,7 @@ impl<'a> Resolver<'a> {
                 &imp.values,
                 &policy.palette,
                 budget.max_mean_bits,
-            );
+            )?;
         }
         let map = PrecisionMap { bits };
         let provenance = Provenance {
@@ -766,11 +781,17 @@ impl PreparedWeights {
         if let PrecisionSource::Allocated(policy) = precision {
             policy.validate()?;
         }
+        if let PrecisionSource::Searched(spec) = precision {
+            spec.validate()?;
+        }
 
         // -- open a session only when a stage executes the model
         let needs_runs = matches!(
             precision,
             PrecisionSource::Allocated(p) if p.metric.needs_model_runs()
+        ) || matches!(
+            precision,
+            PrecisionSource::Searched(s) if s.needs_model_runs()
         ) || (form != WeightForm::Fp16 && quant.quantizer.needs_calib());
         let session = if needs_runs { Some(open()?) } else { None };
 
@@ -810,6 +831,16 @@ impl PreparedWeights {
                 };
                 let (map, prov) = resolver.allocate(policy)?;
                 (Some(map), Some(prov))
+            }
+            PrecisionSource::Searched(spec) => {
+                let out = crate::search::run_search(
+                    session.as_ref(),
+                    cfg,
+                    &ws,
+                    spec,
+                    seed,
+                )?;
+                (Some(out.map), Some(out.provenance))
             }
         };
 

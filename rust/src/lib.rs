@@ -39,6 +39,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod search;
 pub mod serve;
 pub mod tensor;
 pub mod train;

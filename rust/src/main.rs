@@ -7,6 +7,8 @@
 //!   assign    — Figs. 5/6/8/10: precision-assignment maps (Algorithm 2)
 //!   allocate  — parameterized allocation (metric × granularity ×
 //!               palette × budget) with optional `--out map.json`
+//!   search    — Pareto allocation search (exact DP + refiner over the
+//!               size/error/throughput cost model), frontier artifacts
 //!   eval      — evaluate the current (fp16) weights on all tasks
 //!   method    — run one table row (quantize + evaluate)
 //!   table     — full Table 2–5 row grid for one model
@@ -17,7 +19,7 @@
 
 use anyhow::{bail, Result};
 use mopeq::cli::Args;
-use mopeq::cluster::Granularity;
+use mopeq::cluster::{assign_map, enforce_budget, Granularity};
 use mopeq::config;
 use mopeq::coordinator::{MethodSpec, Metric, Pipeline, Quantizer};
 use mopeq::data::Task;
@@ -27,9 +29,12 @@ use mopeq::engine::spec::{
 use mopeq::engine::{Engine, PrecisionSource, WeightForm};
 use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
 use mopeq::report;
+use mopeq::search::{
+    self, CostModel, Objective, SearchBudget, SearchSpec, ThroughputProfile,
+};
 use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist};
 use mopeq::train::{train, TrainConfig};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn main() -> Result<()> {
@@ -40,6 +45,7 @@ fn main() -> Result<()> {
         Some("profile") => cmd_profile(&args),
         Some("assign") => cmd_assign(&args),
         Some("allocate") => cmd_allocate(&args),
+        Some("search") => cmd_search(&args),
         Some("eval") => cmd_eval(&args),
         Some("method") => cmd_method(&args),
         Some("table") => cmd_table(&args),
@@ -58,12 +64,19 @@ fn print_usage() {
     println!(
         "mopeq — Mixture of Mixed Precision Quantized Experts\n\
          usage: mopeq <cmd> [--model <variant>] [flags]\n\
-         cmds:  info | train | profile | assign | allocate | eval |\n\
-         \x20      method | table | scorecard | offload | serve | report\n\
+         cmds:  info | train | profile | assign | allocate | search |\n\
+         \x20      eval | method | table | scorecard | offload | serve |\n\
+         \x20      report\n\
          allocate: --metric frequency|hessian|hybrid\n\
          \x20         [--closed-form-hessian] --granularity layer|model\n\
          \x20         --palette 2,3,4 [--budget <mean-bits>]\n\
          \x20         [--out map.json]\n\
+         search:   [--budget <mean-bits> | --budget-bytes N]\n\
+         \x20         [--objective accuracy|balanced [--lambda X]]\n\
+         \x20         [--probe rtn|gptq|awq|signround] [--palette 2,3,4]\n\
+         \x20         [--profile BENCH_quant_throughput.json]\n\
+         \x20         [--frontier-out dir [--points N]] [--no-refine]\n\
+         \x20         [--serve-check] [--allow-init-weights]\n\
          serve:    [--packed] [--workers N] [--map map.json]\n\
          \x20         [--quantizer rtn|signround|gptq|awq] + allocate flags\n\
          variants: dsvl2_tiny dsvl2_small dsvl2_base molmoe"
@@ -124,17 +137,7 @@ fn alloc_policy_flags(args: &Args, p: &Pipeline) -> Result<AllocPolicy> {
     } else {
         AllocPolicy::default().metric
     };
-    let palette = match args.flags.get("palette") {
-        None => AllocPolicy::default().palette,
-        Some(csv) => csv
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse::<u8>()
-                    .map_err(|_| anyhow::anyhow!("--palette: bad width `{s}`"))
-            })
-            .collect::<Result<Vec<u8>>>()?,
-    };
+    let palette = palette_flag(args)?;
     let budget = match args.flags.get("budget") {
         None => None,
         Some(_) => Some(AvgBitsBudget {
@@ -142,6 +145,22 @@ fn alloc_policy_flags(args: &Args, p: &Pipeline) -> Result<AllocPolicy> {
         }),
     };
     Ok(AllocPolicy { metric, granularity: gran_flag(args)?, palette, budget })
+}
+
+/// `--palette 2,3,4` → candidate bit widths (default: the paper's
+/// {2,3,4}).
+fn palette_flag(args: &Args) -> Result<Vec<u8>> {
+    match args.flags.get("palette") {
+        None => Ok(AllocPolicy::default().palette),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u8>()
+                    .map_err(|_| anyhow::anyhow!("--palette: bad width `{s}`"))
+            })
+            .collect::<Result<Vec<u8>>>(),
+    }
 }
 
 /// Any allocation flag present → the user asked for an allocated map.
@@ -156,6 +175,23 @@ fn has_alloc_flags(args: &Args) -> bool {
 fn estimator_knobs(args: &Args) -> bool {
     args.flags.contains_key("hutchinson-samples")
         || args.switch("closed-form-hessian")
+}
+
+/// The ROADMAP-noted silent fallback, fixed: commands that derive a map
+/// artifact warn loudly when `weights/<variant>.bin` is missing and the
+/// map therefore describes the deterministic **init** weights, not a
+/// trained checkpoint. `--allow-init-weights` acknowledges and
+/// silences.
+fn warn_init_weights(p: &Pipeline, args: &Args) {
+    if !p.loaded_trained_weights && !args.switch("allow-init-weights") {
+        eprintln!(
+            "warning: weights/{name}.bin not found — this map derives \
+             from deterministic init weights, not a trained checkpoint \
+             (run `mopeq train --model {name}` first, or pass \
+             --allow-init-weights to acknowledge)",
+            name = p.cfg.name
+        );
+    }
 }
 
 /// Quantizer + calibration spec from `--quantizer` (+ `--calib-batches`
@@ -340,6 +376,7 @@ fn cmd_allocate(args: &Args) -> Result<()> {
         }
     }
     let p = pipeline(args)?;
+    warn_init_weights(&p, args);
     let policy = alloc_policy_flags(args, &p)?;
     let (pmap, prov) = p.resolver().allocate(&policy)?;
     println!(
@@ -384,6 +421,266 @@ fn cmd_allocate(args: &Args) -> Result<()> {
             path.display(),
             path.display()
         );
+    }
+    Ok(())
+}
+
+/// `SearchSpec` from the CLI flags — budget, objective, palette, probe,
+/// profile, metric (metric semantics identical to `allocate`).
+fn search_spec_flags(args: &Args, p: &Pipeline) -> Result<SearchSpec> {
+    let metric = if args.flags.contains_key("metric") || estimator_knobs(args)
+    {
+        p.spec_metric(metric_flag(args)?)
+    } else {
+        AllocPolicy::default().metric
+    };
+    if args.flags.contains_key("budget")
+        && args.flags.contains_key("budget-bytes")
+    {
+        bail!("--budget and --budget-bytes are exclusive — pick one");
+    }
+    let budget = match args.flags.get("budget-bytes") {
+        Some(_) => {
+            SearchBudget::TotalBytes(args.usize_flag("budget-bytes", 0)?)
+        }
+        None => SearchBudget::AvgBits(args.f64_flag("budget", 3.0)?),
+    };
+    let objective = match args.str_flag("objective", "accuracy").as_str() {
+        "accuracy" => {
+            if args.flags.contains_key("lambda") {
+                bail!("--lambda only applies to --objective balanced");
+            }
+            Objective::Accuracy
+        }
+        "balanced" => {
+            Objective::Balanced { lambda: args.f64_flag("lambda", 1.0)? }
+        }
+        o => bail!("unknown --objective {o} (accuracy|balanced)"),
+    };
+    let probe = match args.str_flag("probe", "rtn").as_str() {
+        "rtn" => QuantSpec::rtn(),
+        probe => {
+            let quantizer = match probe {
+                "signround" => Quantizer::SignRound(p.signround),
+                "gptq" => Quantizer::Gptq { damp: 0.01 },
+                "awq" => Quantizer::Awq { alpha: 0.5 },
+                q => bail!("unknown --probe {q} (rtn|signround|gptq|awq)"),
+            };
+            QuantSpec::calibrated(
+                quantizer,
+                CalibSpec { batches: p.calib_batches, rows: p.calib_rows },
+            )
+        }
+    };
+    let profile = match args.flags.get("profile") {
+        None => ThroughputProfile::builtin(),
+        Some(path) => ThroughputProfile::from_bench_json(Path::new(path))?,
+    };
+    Ok(SearchSpec {
+        metric,
+        palette: palette_flag(args)?,
+        budget,
+        objective,
+        probe,
+        refine: !args.switch("no-refine"),
+        profile,
+    })
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let p = pipeline(args)?;
+    warn_init_weights(&p, args);
+    let spec = search_spec_flags(args, &p)?;
+    spec.validate()?;
+    let avg_budget = spec.budget_avg_bits(&p.cfg)?;
+    let cap_bits = spec.cap_bits(&p.cfg)?;
+
+    // --- the shared cost model every allocator is scored on
+    let imp = search::resolve_importance(
+        Some(&p.session),
+        &p.cfg,
+        &p.ws,
+        &spec.metric,
+        p.seed,
+    )?;
+    let cm = CostModel::build(
+        Some(&p.session),
+        &p.cfg,
+        &p.ws,
+        &imp,
+        &spec.palette,
+        &spec.probe,
+        &spec.profile,
+        spec.objective,
+        p.seed,
+    )?;
+
+    // --- the coordinator comparison table: paper default vs uniform vs
+    // greedy demotion vs the search, all on the same cost model
+    let mut rows = Vec::new();
+    let row = |label: String, assign: &[usize]| {
+        let s = cm.summary(assign);
+        report::SearchRow {
+            label,
+            mean_bits: s.mean_bits,
+            wire_bytes: s.wire_bytes,
+            weighted_err: s.weighted_err,
+            read_us_per_token: s.read_us_per_token,
+        }
+    };
+    let n = cm.n_experts();
+    for (pi, &bits) in spec.palette.iter().enumerate() {
+        if (bits as f64) <= avg_budget + 1e-9 {
+            rows.push(row(format!("uniform-{bits}bit"), &vec![pi; n]));
+        }
+    }
+    let paper = assign_map(
+        &imp.values,
+        &spec.palette,
+        Granularity::ModelWise,
+        p.seed,
+    );
+    let paper_ix = cm.map_indices(&PrecisionMap { bits: paper.clone() })?;
+    rows.push(row("mopeq-default (no budget)".into(), &paper_ix));
+    let mut greedy = paper;
+    enforce_budget(&mut greedy, &imp.values, &spec.palette, avg_budget)?;
+    let greedy_ix = cm.map_indices(&PrecisionMap { bits: greedy })?;
+    rows.push(row("greedy enforce_budget".into(), &greedy_ix));
+    let mut assign = search::solve::dp_solve(&cm.cost, &cm.palette, cap_bits)?;
+    rows.push(row("search(dp)".into(), &assign));
+    if spec.refine {
+        search::solve::refine(&mut assign, &cm.cost, &cm.palette, cap_bits);
+        rows.push(row("search(dp+refine)".into(), &assign));
+    }
+    let budget_label = match spec.budget {
+        SearchBudget::AvgBits(b) => format!("{b} avg bits"),
+        SearchBudget::TotalBytes(bytes) => {
+            format!("{bytes} expert bytes (= {avg_budget:.3} avg bits)")
+        }
+    };
+    println!("{}", report::search_table(&p.cfg, &budget_label, &rows));
+    let csv = report::search_table_csv(&p.cfg, &rows);
+    let csv_path =
+        report::write_report(&format!("search_{}.csv", p.cfg.name), &csv)?;
+    println!("wrote {}", csv_path.display());
+
+    // --- the winning map (+ its provenance) for artifacts/serve-check
+    let best_summary = cm.summary(&assign);
+    let best_map = cm.assignment_map(&assign);
+    println!(
+        "{}",
+        report::precision_heatmap(
+            &format!(
+                "searched allocation — {} / {} / {}",
+                p.cfg.name,
+                spec.metric.label(),
+                spec.objective.label()
+            ),
+            &best_map
+        )
+    );
+
+    // --- frontier sweep → ranked artifact directory
+    if args.flags.contains_key("points")
+        && !args.flags.contains_key("frontier-out")
+    {
+        bail!("--points only applies with --frontier-out");
+    }
+    if let Some(dir) = args.flags.get("frontier-out") {
+        let points = args.usize_flag("points", 9)?.max(2);
+        let lo = spec.palette[0] as f64;
+        let hi = *spec.palette.last().unwrap() as f64;
+        let mut budgets: Vec<f64> = (0..points)
+            .map(|i| lo + (hi - lo) * i as f64 / (points - 1) as f64)
+            .collect();
+        if budgets.iter().all(|b| (b - avg_budget).abs() > 1e-9) {
+            budgets.push(avg_budget);
+        }
+        let set = search::frontier::sweep(
+            &cm,
+            p.cfg.name,
+            &spec.metric.label(),
+            &spec.objective.label(),
+            &budgets,
+            avg_budget,
+            spec.refine,
+            &spec.profile.source,
+        )?;
+        let dir = Path::new(dir);
+        set.save(dir)?;
+        println!(
+            "frontier: {} Pareto points → {}",
+            set.meta.points.len(),
+            dir.display()
+        );
+        for (i, pt) in set.meta.points.iter().enumerate() {
+            let marker =
+                if i == set.meta.best { "  ← best under budget" } else { "" };
+            println!(
+                "  {:<14} mean {:.3} bits  {:>8.1} KB  err {:.6}  \
+                 {:>6.2} µs/tok{}",
+                pt.file,
+                pt.mean_bits,
+                pt.wire_bytes as f64 / 1024.0,
+                pt.weighted_err,
+                pt.read_us_per_token,
+                marker
+            );
+        }
+        println!(
+            "serve the selection: `mopeq serve --map {} --packed \
+             --workers 2`",
+            dir.join("best.json").display()
+        );
+    }
+
+    // --- serve-check: the searched map through a real 2-worker packed
+    // engine; its measured resident expert bytes must not exceed the
+    // budget-implied SizePolicy bound
+    if args.switch("serve-check") {
+        let budget_bound_bytes = match spec.budget {
+            SearchBudget::TotalBytes(bytes) => bytes,
+            SearchBudget::AvgBits(_) => {
+                mopeq::search::cost::wire_bytes_at_cap(&p.cfg, n, cap_bits)
+            }
+        };
+        let engine = Engine::builder(p.cfg.name)
+            .weights(p.clone_weights())
+            .seed(p.seed)
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::Map(best_map.clone()))
+            .workers(2)
+            .queue_depth(32)
+            .build()?;
+        let client = engine.client();
+        let mut rng = mopeq::rng::Rng::new(p.seed).derive("search-check");
+        for _ in 0..8 {
+            let task = Task::ALL[rng.below(Task::ALL.len())];
+            client
+                .call(mopeq::data::gen_sample(task, &p.cfg, &mut rng))
+                .map_err(|e| anyhow::anyhow!("serve-check request: {e}"))?;
+        }
+        let stats = engine.shutdown()?;
+        let resident = stats.resident.expert_accounted_bytes;
+        println!(
+            "serve-check: 2-worker packed engine, resident expert bytes \
+             {resident} (predicted {}), budget-implied bound \
+             {budget_bound_bytes}",
+            best_summary.wire_bytes
+        );
+        if resident > budget_bound_bytes {
+            bail!(
+                "serve-check FAILED: resident {resident} B exceeds the \
+                 budget-implied SizePolicy bound {budget_bound_bytes} B"
+            );
+        }
+        if stats.resident.dense_expert_tensors != 0 {
+            bail!(
+                "serve-check FAILED: {} dense f32 expert tensors resident",
+                stats.resident.dense_expert_tensors
+            );
+        }
+        println!("serve-check: OK (resident ≤ budget bound, 0 dense experts)");
     }
     Ok(())
 }

@@ -191,6 +191,76 @@ pub fn figure_file(fig: &str, variant: &str) -> String {
     format!("{fig}_{variant}.txt")
 }
 
+/// One allocator in the search comparison ([`search_table`]).
+#[derive(Clone, Debug)]
+pub struct SearchRow {
+    pub label: String,
+    pub mean_bits: f64,
+    /// expert wire bytes (`SizePolicy` accounting)
+    pub wire_bytes: usize,
+    /// predicted sensitivity-weighted quantization error
+    pub weighted_err: f64,
+    /// predicted expert-weight read µs per token
+    pub read_us_per_token: f64,
+}
+
+/// The coordinator's search comparison: paper-default MoPEQ allocation
+/// vs greedy budget demotion vs the DP/refined search, scored on the
+/// same cost model (lower error and lower µs are better; sizes satisfy
+/// the budget).
+pub fn search_table(
+    cfg: &ModelConfig,
+    budget_label: &str,
+    rows: &[SearchRow],
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} — allocation search, budget {} (shared cost model: \
+         sensitivity-weighted error + packed-kernel µs/token)",
+        cfg.paper_name, budget_label
+    );
+    let _ = writeln!(
+        out,
+        "{:<34} {:>9} {:>12} {:>14} {:>10}",
+        "Allocator", "bits", "experts(KB)", "pred. error", "µs/token"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<34} {:>9.3} {:>12.2} {:>14.6} {:>10.2}",
+            r.label,
+            r.mean_bits,
+            r.wire_bytes as f64 / 1024.0,
+            r.weighted_err,
+            r.read_us_per_token,
+        );
+    }
+    out
+}
+
+pub fn search_table_csv(cfg: &ModelConfig, rows: &[SearchRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "model,allocator,mean_bits,wire_bytes,weighted_err,\
+         read_us_per_token"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{:.4},{},{:.8},{:.4}",
+            cfg.name,
+            r.label,
+            r.mean_bits,
+            r.wire_bytes,
+            r.weighted_err,
+            r.read_us_per_token,
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +294,34 @@ mod tests {
         for cfg in config::variants() {
             assert!(s.contains(cfg.paper_name), "{}", cfg.paper_name);
         }
+    }
+
+    #[test]
+    fn search_table_lists_every_allocator() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let rows = vec![
+            SearchRow {
+                label: "uniform-3bit".into(),
+                mean_bits: 3.0,
+                wire_bytes: 1_943_040,
+                weighted_err: 0.125,
+                read_us_per_token: 42.0,
+            },
+            SearchRow {
+                label: "search(dp+refine)".into(),
+                mean_bits: 3.0,
+                wire_bytes: 1_943_040,
+                weighted_err: 0.091,
+                read_us_per_token: 40.5,
+            },
+        ];
+        let s = search_table(&cfg, "3.0 avg bits", &rows);
+        assert!(s.contains("uniform-3bit"));
+        assert!(s.contains("search(dp+refine)"));
+        assert!(s.contains("3.0 avg bits"));
+        let csv = search_table_csv(&cfg, &rows);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("dsvl2_tiny,uniform-3bit"));
     }
 
     #[test]

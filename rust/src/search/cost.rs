@@ -1,0 +1,428 @@
+//! The search cost model: for every routed expert × palette width, the
+//! three prices a candidate bit-width map pays —
+//!
+//! - **size**: wire bytes under the canonical `SizePolicy` accounting
+//!   (`moe::expert_size_bits`), identical for every expert at a given
+//!   width;
+//! - **sensitivity-weighted error**: Hessian-trace importance
+//!   (`importance::hessian` / any spec [`Metric`] the caller resolved)
+//!   × the measured per-expert quantization MSE at that width, probed
+//!   through the real quantizers (RTN data-free; GPTQ / AWQ / SignRound
+//!   against a calibration capture) — the paper's §3.3 sensitivity
+//!   argument turned into a per-(expert, width) number;
+//! - **throughput**: predicted µs to stream the expert's packed weights
+//!   through the profiled `qmatmul` kernel
+//!   ([`ThroughputProfile::expert_read_us`]) — the MxMoE-style term
+//!   that makes byte-inefficient widths (3-bit padding) pay their way.
+//!
+//! The scalarization ([`Objective`]) collapses error + throughput into
+//! the single `cost[i][p]` table the solvers optimize; size is enforced
+//! as the budget constraint, not scalarized.
+
+use crate::config::ModelConfig;
+use crate::coordinator::quantize::probe_expert_mse;
+use crate::engine::spec::QuantSpec;
+use crate::importance::ImportanceMap;
+use crate::moe::{expert_size_bits, PrecisionMap, WeightStore};
+use crate::runtime::Session;
+use crate::search::profile::{packed_expert_heap_bytes, ThroughputProfile};
+use crate::search::solve::widths_to_indices;
+use crate::search::{Objective, SearchError};
+use anyhow::{bail, Result};
+
+/// Everything the solvers need, precomputed: per-expert per-width
+/// scalar costs plus the per-width byte/time tables for reporting.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// candidate widths, strictly ascending
+    pub palette: Vec<u8>,
+    pub layers: usize,
+    pub experts: usize,
+    /// routed experts activated per token (throughput projection)
+    pub top_k: usize,
+    /// scalar solver objective, `[layer * experts + e][palette index]`
+    pub cost: Vec<Vec<f64>>,
+    /// the sensitivity-weighted error component alone (same indexing) —
+    /// what the acceptance tests compare across allocators
+    pub weighted_err: Vec<Vec<f64>>,
+    /// wire (`SizePolicy`) bytes of one expert at each palette width
+    pub wire_bytes: Vec<usize>,
+    /// resident heap bytes of one expert at each palette width
+    pub heap_bytes: Vec<usize>,
+    /// predicted µs to stream one expert at each palette width
+    pub read_us: Vec<f64>,
+}
+
+/// Predicted aggregates of one assignment under a [`CostModel`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostSummary {
+    pub mean_bits: f64,
+    /// Σ importance × quantization MSE over all experts
+    pub weighted_err: f64,
+    /// Σ wire bytes (the `SizePolicy` expert term)
+    pub wire_bytes: usize,
+    /// Σ resident heap bytes (what a packed engine holds)
+    pub heap_bytes: usize,
+    /// predicted expert-weight read time per token: `top_k` activated
+    /// experts per MoE layer, each at its layer-mean read cost
+    pub read_us_per_token: f64,
+}
+
+impl CostModel {
+    /// Probe the model and assemble the full cost table. `probe` names
+    /// the quantizer whose reconstruction error prices each width (RTN
+    /// is data-free; calibrated probes capture activations once at
+    /// `seed`, exactly as a real build would).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        session: Option<&Session>,
+        cfg: &ModelConfig,
+        ws: &WeightStore,
+        importance: &ImportanceMap,
+        palette: &[u8],
+        probe: &QuantSpec,
+        profile: &ThroughputProfile,
+        objective: Objective,
+        seed: u64,
+    ) -> Result<CostModel> {
+        let (layers, experts) = (cfg.moe_layers(), cfg.experts);
+        if importance.layers() != layers || importance.experts() != experts
+        {
+            bail!(
+                "importance map {}x{} != model {}x{}",
+                importance.layers(),
+                importance.experts(),
+                layers,
+                experts
+            );
+        }
+        profile.check_palette(palette)?;
+
+        // one calibration capture feeds every width's probe (identical
+        // to how a real engine build captures once and packs once)
+        let kernel = crate::coordinator::MoeKernel::default();
+        let calib = probe.capture(session, cfg, ws, kernel, seed)?;
+
+        let n = layers * experts;
+        let mut weighted_err = vec![Vec::with_capacity(palette.len()); n];
+        let mut wire_bytes = Vec::with_capacity(palette.len());
+        let mut heap_bytes = Vec::with_capacity(palette.len());
+        let mut read_us = Vec::with_capacity(palette.len());
+        for &bits in palette {
+            let mse = probe_expert_mse(
+                session,
+                cfg,
+                ws,
+                bits,
+                &probe.quantizer,
+                calib.as_ref(),
+            )?;
+            for l in 0..layers {
+                for e in 0..experts {
+                    weighted_err[l * experts + e]
+                        .push(importance.values[l][e] * mse[l][e]);
+                }
+            }
+            // the canonical byte accounting shared with the offload
+            // simulator and the size tables
+            wire_bytes.push(crate::serve::expert_bytes(cfg, bits));
+            heap_bytes.push(packed_expert_heap_bytes(cfg, bits));
+            read_us.push(profile.expert_read_us(cfg, bits)?);
+        }
+
+        // scalarize error + throughput. The time term is normalized by
+        // the slowest width and scaled by the mean per-expert error
+        // span, so λ = 1 weighs "serve faster" and "quantize better"
+        // in the same currency regardless of model scale.
+        let lambda = match objective {
+            Objective::Accuracy => 0.0,
+            Objective::Balanced { lambda } => lambda,
+        };
+        let cost = if lambda == 0.0 {
+            weighted_err.clone()
+        } else {
+            let last = palette.len() - 1;
+            let err_span: f64 = weighted_err
+                .iter()
+                .map(|row| (row[0] - row[last]).max(0.0))
+                .sum::<f64>()
+                / n as f64;
+            let t_max = read_us
+                .iter()
+                .cloned()
+                .fold(f64::MIN, f64::max)
+                .max(1e-12);
+            weighted_err
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .zip(&read_us)
+                        .map(|(&werr, &t)| {
+                            werr + lambda * err_span * (t / t_max)
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+
+        Ok(CostModel {
+            palette: palette.to_vec(),
+            layers,
+            experts,
+            top_k: cfg.top_k,
+            cost,
+            weighted_err,
+            wire_bytes,
+            heap_bytes,
+            read_us,
+        })
+    }
+
+    /// Experts in the flattened solver order.
+    pub fn n_experts(&self) -> usize {
+        self.layers * self.experts
+    }
+
+    /// An assignment (palette indices, flattened order) as a
+    /// `PrecisionMap`.
+    pub fn assignment_map(&self, assign: &[usize]) -> PrecisionMap {
+        assert_eq!(assign.len(), self.n_experts());
+        let bits = (0..self.layers)
+            .map(|l| {
+                (0..self.experts)
+                    .map(|e| self.palette[assign[l * self.experts + e]])
+                    .collect()
+            })
+            .collect();
+        PrecisionMap { bits }
+    }
+
+    /// A `PrecisionMap` as palette indices in the solver order — typed
+    /// [`SearchError::OffPaletteWidth`] for widths the model cannot
+    /// price.
+    pub fn map_indices(&self, map: &PrecisionMap) -> Result<Vec<usize>> {
+        let assign = widths_to_indices(&map.bits, &self.palette)?;
+        if assign.len() != self.n_experts() {
+            bail!(
+                "precision map has {} experts, cost model prices {}",
+                assign.len(),
+                self.n_experts()
+            );
+        }
+        Ok(assign)
+    }
+
+    /// Predicted aggregates of an assignment — what the frontier
+    /// records per point and the comparison table prints per row.
+    pub fn summary(&self, assign: &[usize]) -> CostSummary {
+        let n = self.n_experts();
+        assert_eq!(assign.len(), n);
+        let mut bits_sum = 0usize;
+        let mut werr = 0.0f64;
+        let mut wire = 0usize;
+        let mut heap = 0usize;
+        let mut us_sum = 0.0f64;
+        for (i, &p) in assign.iter().enumerate() {
+            bits_sum += self.palette[p] as usize;
+            werr += self.weighted_err[i][p];
+            wire += self.wire_bytes[p];
+            heap += self.heap_bytes[p];
+            us_sum += self.read_us[p];
+        }
+        CostSummary {
+            mean_bits: bits_sum as f64 / n as f64,
+            weighted_err: werr,
+            wire_bytes: wire,
+            heap_bytes: heap,
+            // per token: top_k experts activate in each MoE layer at the
+            // model-mean expert read cost
+            read_us_per_token: self.top_k as f64
+                * self.layers as f64
+                * (us_sum / n as f64),
+        }
+    }
+
+    /// Typed feasibility floor: the bit-sum cap below which no
+    /// assignment exists.
+    pub fn floor_bits(&self) -> usize {
+        self.n_experts() * self.palette[0] as usize
+    }
+}
+
+/// Convert a budget in average bits/expert into the solver's bit-sum
+/// cap.
+pub fn avg_bits_cap(n_experts: usize, max_mean_bits: f64) -> usize {
+    (max_mean_bits * n_experts as f64).floor() as usize
+}
+
+/// The affine coefficients of `expert_size_bits` in the width:
+/// `size(b) = A·b + B` for every quantizable width `b < 16` (the group
+/// policy is fixed by the config). Single source for both directions
+/// of the bytes ↔ bit-cap conversion.
+fn size_affine(cfg: &ModelConfig) -> (usize, usize) {
+    let a = expert_size_bits(cfg, 3) - expert_size_bits(cfg, 2);
+    let b = expert_size_bits(cfg, 2) - 2 * a;
+    (a, b)
+}
+
+/// Forward direction: the total expert wire bytes a bit-sum cap
+/// implies — the budget bound `mopeq search --serve-check` asserts
+/// measured resident bytes against. Inverse of [`bytes_cap`] by
+/// construction (both read [`size_affine`]).
+pub fn wire_bytes_at_cap(
+    cfg: &ModelConfig,
+    n_experts: usize,
+    cap_bits: usize,
+) -> usize {
+    let (a, b) = size_affine(cfg);
+    (a * cap_bits + n_experts * b).div_ceil(8)
+}
+
+/// Convert a total-wire-bytes budget into a bit-sum cap, using the fact
+/// that `expert_size_bits` is affine in the width (`A·b + B` for b < 16
+/// with the group policy fixed by the config): `Σ size(b_e) ≤ 8·bytes`
+/// ⇔ `Σ b_e ≤ (8·bytes − n·B) / A`. Returns a typed error when even
+/// the all-minimum-width model exceeds the byte budget.
+pub fn bytes_cap(
+    cfg: &ModelConfig,
+    n_experts: usize,
+    min_palette_bits: u8,
+    budget_bytes: usize,
+) -> Result<usize> {
+    let (a, b) = size_affine(cfg);
+    let total_bits = 8i128 * budget_bytes as i128;
+    let cap = (total_bits - n_experts as i128 * b as i128) / a as i128;
+    let floor = n_experts as i128 * min_palette_bits as i128;
+    if cap < floor {
+        let floor_bytes = (n_experts
+            * expert_size_bits(cfg, min_palette_bits))
+        .div_ceil(8);
+        return Err(SearchError::InfeasibleBytes {
+            budget_bytes,
+            floor_bytes,
+        }
+        .into());
+    }
+    Ok(cap as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::importance::hessian_closed_form;
+    use crate::moe::local_meta;
+
+    fn tiny() -> (ModelConfig, WeightStore) {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 5);
+        (cfg, ws)
+    }
+
+    fn rtn_model(objective: Objective) -> (ModelConfig, CostModel) {
+        let (cfg, ws) = tiny();
+        let imp = hessian_closed_form(&ws, &cfg).unwrap();
+        let cm = CostModel::build(
+            None,
+            &cfg,
+            &ws,
+            &imp,
+            &[2, 3, 4],
+            &QuantSpec::rtn(),
+            &ThroughputProfile::builtin(),
+            objective,
+            5,
+        )
+        .unwrap();
+        (cfg, cm)
+    }
+
+    #[test]
+    fn error_is_monotone_decreasing_in_width() {
+        let (_, cm) = rtn_model(Objective::Accuracy);
+        for row in &cm.weighted_err {
+            assert!(row[0] > row[1] && row[1] > row[2], "{row:?}");
+            assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        // accuracy objective: the scalar cost IS the weighted error
+        assert_eq!(cm.cost, cm.weighted_err);
+    }
+
+    #[test]
+    fn balanced_objective_penalizes_slow_widths() {
+        let (_, cm) = rtn_model(Objective::Balanced { lambda: 1.0 });
+        // 3-bit is the slowest profiled width, so its scalar cost gets
+        // the largest throughput surcharge over the raw error
+        let surcharge: Vec<f64> = (0..3)
+            .map(|p| cm.cost[0][p] - cm.weighted_err[0][p])
+            .collect();
+        assert!(surcharge[1] > surcharge[0], "{surcharge:?}");
+        assert!(surcharge[1] > surcharge[2], "{surcharge:?}");
+        // the surcharge is uniform across experts at a given width
+        assert!(
+            ((cm.cost[7][1] - cm.weighted_err[7][1]) - surcharge[1]).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn summary_matches_uniform_accounting() {
+        let (cfg, cm) = rtn_model(Objective::Accuracy);
+        let n = cm.n_experts();
+        let uni3 = vec![1usize; n]; // palette index 1 = 3-bit
+        let s = cm.summary(&uni3);
+        assert_eq!(s.mean_bits, 3.0);
+        assert_eq!(
+            s.wire_bytes,
+            n * expert_size_bits(&cfg, 3).div_ceil(8)
+        );
+        assert_eq!(s.heap_bytes, n * packed_expert_heap_bytes(&cfg, 3));
+        assert!(s.read_us_per_token > 0.0);
+        assert!(s.weighted_err > 0.0);
+    }
+
+    #[test]
+    fn map_roundtrips_through_indices() {
+        let (cfg, cm) = rtn_model(Objective::Accuracy);
+        let mut assign = vec![0usize; cm.n_experts()];
+        for (i, a) in assign.iter_mut().enumerate() {
+            *a = i % 3;
+        }
+        let map = cm.assignment_map(&assign);
+        assert_eq!(map.bits.len(), cfg.moe_layers());
+        assert_eq!(cm.map_indices(&map).unwrap(), assign);
+        // off-palette widths are typed errors
+        let mut bad = map.clone();
+        bad.bits[0][0] = 8;
+        let err = cm.map_indices(&bad).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::OffPaletteWidth { bits: 8 })
+        );
+    }
+
+    #[test]
+    fn bytes_cap_inverts_the_affine_size_formula() {
+        let (cfg, _) = tiny();
+        let n = cfg.total_experts();
+        // budget = exactly a uniform-3-bit model in bytes → cap = 3n
+        let bytes3 = n * expert_size_bits(&cfg, 3) / 8;
+        let cap = bytes_cap(&cfg, n, 2, bytes3).unwrap();
+        assert_eq!(cap, 3 * n);
+        // the forward helper is the exact inverse (shared coefficients)
+        assert_eq!(wire_bytes_at_cap(&cfg, n, cap), bytes3);
+        // a cap that mixes widths still prices exactly like the
+        // per-width table (affinity)
+        assert_eq!(
+            wire_bytes_at_cap(&cfg, 2, 6),
+            2 * expert_size_bits(&cfg, 3).div_ceil(8)
+        );
+        // a budget below the all-2-bit floor is a typed error
+        let floor = n * expert_size_bits(&cfg, 2) / 8;
+        let err = bytes_cap(&cfg, n, 2, floor / 2).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SearchError>(),
+            Some(SearchError::InfeasibleBytes { .. })
+        ));
+    }
+}

@@ -1,0 +1,476 @@
+//! Pareto frontier sweep: solve the budgeted allocation at a ladder of
+//! average-bit budgets, keep the non-dominated (size, error) points,
+//! and persist the whole sweep as a self-describing artifact directory
+//! —
+//!
+//! ```text
+//! frontier-out/
+//!   frontier.json     sweep metadata + per-point predictions + ranking
+//!   point_00.json     SavedMap (map + provenance) of each kept point
+//!   point_01.json     ...
+//!   best.json         copy of the point selected for the requested
+//!                     budget — what `mopeq serve --map` consumes
+//! ```
+//!
+//! Every file round-trips byte-for-byte through [`crate::jsonx`]
+//! (stable key order, shortest-roundtrip floats), and a corrupt or
+//! partial directory loads back as a **typed** [`SearchError`] — never
+//! a panic, never a silently truncated frontier.
+
+use crate::engine::spec::{Provenance, SavedMap};
+use crate::jsonx::Json;
+use crate::search::cost::{avg_bits_cap, CostModel, CostSummary};
+use crate::search::solve::{dp_solve, refine};
+use crate::search::SearchError;
+use anyhow::Result;
+use std::path::Path;
+
+/// One solved point of the sweep with its predicted aggregates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// the average-bits budget this point was solved under
+    pub budget_avg_bits: f64,
+    pub mean_bits: f64,
+    /// Σ expert wire bytes (`SizePolicy` accounting)
+    pub wire_bytes: usize,
+    /// Σ resident heap bytes a packed engine would hold
+    pub heap_bytes: usize,
+    /// predicted sensitivity-weighted quantization error
+    pub weighted_err: f64,
+    /// predicted expert-weight read µs per token
+    pub read_us_per_token: f64,
+    /// the `SavedMap` file of this point, relative to the frontier dir
+    pub file: String,
+}
+
+/// Sweep metadata — the `frontier.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frontier {
+    pub variant: String,
+    /// objective label (`"accuracy"` / `"balanced(λ=…)"`)
+    pub objective: String,
+    pub palette: Vec<u8>,
+    /// throughput-profile source (`"builtin"` or a bench JSON path)
+    pub profile: String,
+    /// index into `points` of the map selected for the requested budget
+    pub best: usize,
+    /// non-dominated points, ascending by mean bits
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    (
+                        "budget_avg_bits".into(),
+                        Json::Num(p.budget_avg_bits),
+                    ),
+                    ("mean_bits".into(), Json::Num(p.mean_bits)),
+                    (
+                        "wire_bytes".into(),
+                        Json::Num(p.wire_bytes as f64),
+                    ),
+                    (
+                        "heap_bytes".into(),
+                        Json::Num(p.heap_bytes as f64),
+                    ),
+                    ("weighted_err".into(), Json::Num(p.weighted_err)),
+                    (
+                        "read_us_per_token".into(),
+                        Json::Num(p.read_us_per_token),
+                    ),
+                    ("file".into(), Json::Str(p.file.clone())),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("objective".into(), Json::Str(self.objective.clone())),
+            (
+                "palette".into(),
+                Json::Arr(
+                    self.palette
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("profile".into(), Json::Str(self.profile.clone())),
+            ("best".into(), Json::Num(self.best as f64)),
+            ("points".into(), Json::Arr(points)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frontier> {
+        let mut points = Vec::new();
+        for p in j.req("points")?.as_arr()? {
+            points.push(FrontierPoint {
+                budget_avg_bits: p.req("budget_avg_bits")?.as_f64()?,
+                mean_bits: p.req("mean_bits")?.as_f64()?,
+                wire_bytes: p.req("wire_bytes")?.as_usize()?,
+                heap_bytes: p.req("heap_bytes")?.as_usize()?,
+                weighted_err: p.req("weighted_err")?.as_f64()?,
+                read_us_per_token: p
+                    .req("read_us_per_token")?
+                    .as_f64()?,
+                file: p.req("file")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Frontier {
+            variant: j.req("variant")?.as_str()?.to_string(),
+            objective: j.req("objective")?.as_str()?.to_string(),
+            palette: j
+                .req("palette")?
+                .as_arr()?
+                .iter()
+                .map(|v| {
+                    let b = v.as_usize()?;
+                    if b == 0 || b > u8::MAX as usize {
+                        anyhow::bail!("palette width {b} out of range");
+                    }
+                    Ok(b as u8)
+                })
+                .collect::<Result<_>>()?,
+            profile: j.req("profile")?.as_str()?.to_string(),
+            best: j.req("best")?.as_usize()?,
+            points,
+        })
+    }
+}
+
+/// A frontier with its point maps — what [`sweep`] produces and a
+/// frontier directory (de)serializes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierSet {
+    pub meta: Frontier,
+    /// aligned with `meta.points`
+    pub maps: Vec<SavedMap>,
+}
+
+impl FrontierSet {
+    /// The map selected for the requested budget.
+    pub fn best_map(&self) -> &SavedMap {
+        &self.maps[self.meta.best]
+    }
+
+    /// Write `frontier.json`, every point map, and `best.json` into
+    /// `dir` (created if needed).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join("frontier.json"),
+            self.meta.to_json().to_string(),
+        )?;
+        for (point, map) in self.meta.points.iter().zip(&self.maps) {
+            map.save(&dir.join(&point.file))?;
+        }
+        self.best_map().save(&dir.join("best.json"))?;
+        Ok(())
+    }
+
+    /// Load a frontier directory back. Corrupt or partial directories
+    /// fail with typed [`SearchError`]s naming the offending file.
+    pub fn load(dir: &Path) -> Result<FrontierSet> {
+        let meta_path = dir.join("frontier.json");
+        let bad = |detail: String| SearchError::FrontierMeta {
+            path: meta_path.display().to_string(),
+            detail,
+        };
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| bad(format!("read: {e}")))?;
+        let json =
+            Json::parse(&text).map_err(|e| bad(format!("parse: {e}")))?;
+        let meta = Frontier::from_json(&json)
+            .map_err(|e| bad(format!("schema: {e}")))?;
+        if meta.points.is_empty() {
+            return Err(bad("frontier has no points".into()).into());
+        }
+        if meta.best >= meta.points.len() {
+            return Err(bad(format!(
+                "best index {} out of range ({} points)",
+                meta.best,
+                meta.points.len()
+            ))
+            .into());
+        }
+        let mut maps = Vec::with_capacity(meta.points.len());
+        for point in &meta.points {
+            let path = dir.join(&point.file);
+            if !path.exists() {
+                return Err(SearchError::MissingPoint {
+                    file: path.display().to_string(),
+                }
+                .into());
+            }
+            let map = SavedMap::load(&path).map_err(|e| {
+                SearchError::FrontierMeta {
+                    path: path.display().to_string(),
+                    detail: format!("point map: {e}"),
+                }
+            })?;
+            if map.variant != meta.variant {
+                return Err(SearchError::PointVariant {
+                    expected: meta.variant.clone(),
+                    found: map.variant,
+                }
+                .into());
+            }
+            maps.push(map);
+        }
+        Ok(FrontierSet { meta, maps })
+    }
+}
+
+/// Solve the budget ladder and keep the Pareto-optimal points.
+///
+/// `budgets` are average-bits caps (ascending recommended, any order
+/// accepted); `request` selects the `best` point — the lowest
+/// predicted-error point whose mean bits fit under it. Dominated points
+/// (another point with ≤ wire bytes **and** ≤ weighted error, one
+/// strictly) are dropped; duplicate solutions collapse to one point.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    cm: &CostModel,
+    variant: &str,
+    metric_label: &str,
+    objective_label: &str,
+    budgets: &[f64],
+    request: f64,
+    do_refine: bool,
+    profile_source: &str,
+) -> Result<FrontierSet> {
+    if budgets.is_empty() {
+        return Err(SearchError::EmptyFrontier.into());
+    }
+    let n = cm.n_experts();
+    let mut solved: Vec<(f64, CostSummary, Vec<usize>)> = Vec::new();
+    for &budget in budgets {
+        let cap = avg_bits_cap(n, budget);
+        let mut assign = dp_solve(&cm.cost, &cm.palette, cap)?;
+        if do_refine {
+            refine(&mut assign, &cm.cost, &cm.palette, cap);
+        }
+        let summary = cm.summary(&assign);
+        if solved.iter().any(|(_, _, a)| *a == assign) {
+            continue; // the ladder resolved to an already-kept map
+        }
+        solved.push((budget, summary, assign));
+    }
+    // Pareto filter on (wire bytes, weighted error)
+    let dominated = |a: &CostSummary, by: &CostSummary| {
+        by.wire_bytes <= a.wire_bytes
+            && by.weighted_err <= a.weighted_err
+            && (by.wire_bytes < a.wire_bytes
+                || by.weighted_err < a.weighted_err)
+    };
+    let mut kept: Vec<(f64, CostSummary, Vec<usize>)> = Vec::new();
+    for (budget, summary, assign) in solved.iter() {
+        if !solved.iter().any(|(_, other, _)| dominated(summary, other)) {
+            kept.push((*budget, *summary, assign.clone()));
+        }
+    }
+    if kept.is_empty() {
+        return Err(SearchError::EmptyFrontier.into());
+    }
+    kept.sort_by(|a, b| {
+        a.1.mean_bits
+            .partial_cmp(&b.1.mean_bits)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    // best = lowest predicted error among points fitting the request —
+    // no silent fallback: a ladder whose every point exceeds the
+    // request must fail typed, never hand out an over-budget best.json
+    let mut best: Option<usize> = None;
+    let mut best_err = f64::INFINITY;
+    for (i, (_, summary, _)) in kept.iter().enumerate() {
+        if summary.mean_bits <= request + 1e-9
+            && summary.weighted_err < best_err
+        {
+            best_err = summary.weighted_err;
+            best = Some(i);
+        }
+    }
+    let Some(best) = best else {
+        return Err(SearchError::NoPointUnderBudget {
+            request_avg_bits: request,
+        }
+        .into());
+    };
+    let solver = if do_refine { "search(dp+refine)" } else { "search(dp)" };
+    let mut points = Vec::with_capacity(kept.len());
+    let mut maps = Vec::with_capacity(kept.len());
+    for (i, (budget, summary, assign)) in kept.iter().enumerate() {
+        let map = cm.assignment_map(assign);
+        let provenance = Provenance {
+            metric: metric_label.to_string(),
+            granularity: solver.to_string(),
+            palette: cm.palette.clone(),
+            budget: Some(*budget),
+            mean_bits: map.mean_bits(),
+            layer_mean_bits: map.layer_mean_bits(),
+        };
+        points.push(FrontierPoint {
+            budget_avg_bits: *budget,
+            mean_bits: summary.mean_bits,
+            wire_bytes: summary.wire_bytes,
+            heap_bytes: summary.heap_bytes,
+            weighted_err: summary.weighted_err,
+            read_us_per_token: summary.read_us_per_token,
+            file: format!("point_{i:02}.json"),
+        });
+        maps.push(SavedMap {
+            variant: variant.to_string(),
+            map,
+            provenance: Some(provenance),
+        });
+    }
+    Ok(FrontierSet {
+        meta: Frontier {
+            variant: variant.to_string(),
+            objective: objective_label.to_string(),
+            palette: cm.palette.clone(),
+            profile: profile_source.to_string(),
+            best,
+            points,
+        },
+        maps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::engine::spec::QuantSpec;
+    use crate::importance::hessian_closed_form;
+    use crate::moe::{local_meta, WeightStore};
+    use crate::search::profile::ThroughputProfile;
+    use crate::search::Objective;
+
+    fn model() -> CostModel {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 9);
+        let imp = hessian_closed_form(&ws, &cfg).unwrap();
+        CostModel::build(
+            None,
+            &cfg,
+            &ws,
+            &imp,
+            &[2, 3, 4],
+            &QuantSpec::rtn(),
+            &ThroughputProfile::builtin(),
+            Objective::Accuracy,
+            9,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sweep_is_pareto_and_monotone() {
+        let cm = model();
+        let set = sweep(
+            &cm,
+            "dsvl2_tiny",
+            "hessian(closed-form)",
+            "accuracy",
+            &[2.0, 2.5, 3.0, 3.5, 4.0],
+            3.0,
+            true,
+            "builtin",
+        )
+        .unwrap();
+        let pts = &set.meta.points;
+        assert!(pts.len() >= 2, "{pts:?}");
+        // ascending in size, strictly descending in predicted error
+        for w in pts.windows(2) {
+            assert!(w[0].wire_bytes < w[1].wire_bytes);
+            assert!(w[0].weighted_err > w[1].weighted_err);
+        }
+        // the selected point fits the requested budget
+        let best = &pts[set.meta.best];
+        assert!(best.mean_bits <= 3.0 + 1e-9);
+        assert_eq!(set.best_map().map.bits.len(), cm.layers);
+        // every map matches its recorded mean
+        for (p, m) in pts.iter().zip(&set.maps) {
+            assert!((m.map.mean_bits() - p.mean_bits).abs() < 1e-9);
+            assert_eq!(m.provenance.as_ref().unwrap().budget,
+                       Some(p.budget_avg_bits));
+        }
+    }
+
+    #[test]
+    fn frontier_json_roundtrips_byte_for_byte() {
+        let cm = model();
+        let set = sweep(
+            &cm,
+            "dsvl2_tiny",
+            "hessian(closed-form)",
+            "accuracy",
+            &[2.0, 3.0, 4.0],
+            3.0,
+            false,
+            "builtin",
+        )
+        .unwrap();
+        let text = set.meta.to_json().to_string();
+        let back =
+            Frontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, set.meta);
+        // re-serialization is byte-identical (stable key order + floats)
+        assert_eq!(back.to_json().to_string(), text);
+        // out-of-range palette widths fail instead of truncating
+        let corrupt = text.replace("[2,3,4]", "[260,3,4]");
+        let err =
+            Frontier::from_json(&Json::parse(&corrupt).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn ladder_entirely_over_the_request_is_a_typed_error() {
+        // no silent over-budget best.json: a ladder whose every point
+        // exceeds the requested budget must fail typed
+        let cm = model();
+        let err = sweep(
+            &cm,
+            "dsvl2_tiny",
+            "hessian(closed-form)",
+            "accuracy",
+            &[3.5, 4.0],
+            3.0,
+            false,
+            "builtin",
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::NoPointUnderBudget {
+                request_avg_bits: 3.0
+            })
+        );
+    }
+
+    #[test]
+    fn empty_budget_ladder_is_a_typed_error() {
+        let cm = model();
+        let err = sweep(
+            &cm,
+            "dsvl2_tiny",
+            "m",
+            "accuracy",
+            &[],
+            3.0,
+            false,
+            "builtin",
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::EmptyFrontier)
+        );
+    }
+}

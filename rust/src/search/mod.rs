@@ -1,0 +1,435 @@
+//! Pareto allocation search — accuracy/throughput co-designed bit-width
+//! maps over the PR 4 spec grammar.
+//!
+//! MoPEQ's Algorithm 2 clusters experts by sensitivity and
+//! `AvgBitsBudget` demotes greedily; this subsystem instead treats the
+//! per-expert width choice as an explicit **global optimization** (the
+//! GEMQ framing), scored by a [`CostModel`] that prices every
+//! (expert, width) pair on three axes — `SizePolicy` bytes,
+//! sensitivity-weighted quantization error, and measured packed-kernel
+//! throughput (the MxMoE observation that accuracy-only allocation
+//! leaves throughput on the table) — and solved **exactly** by a
+//! multiple-choice-knapsack DP plus a marginal-cost local refiner that
+//! strictly dominates the greedy demotion pass on its own objective.
+//!
+//! Entry points:
+//! - [`run_search`] — one budget, one map (what
+//!   `PrecisionSource::Searched` / `EngineBuilder::auto` resolve
+//!   through);
+//! - [`frontier::sweep`] — a budget ladder → ranked Pareto
+//!   [`frontier::FrontierSet`] artifact directory (what
+//!   `mopeq search --frontier-out` writes and `mopeq serve --map`
+//!   consumes);
+//! - [`CostModel`] / [`solve`] — the pieces, for tests and benches.
+
+pub mod cost;
+pub mod frontier;
+pub mod profile;
+pub mod solve;
+
+pub use cost::{CostModel, CostSummary};
+pub use frontier::{Frontier, FrontierPoint, FrontierSet};
+pub use profile::ThroughputProfile;
+
+use crate::config::ModelConfig;
+use crate::engine::spec::{
+    AllocPolicy, AvgBitsBudget, Metric, Provenance, QuantSpec, Resolver,
+};
+use crate::importance::ImportanceMap;
+use crate::moe::{PrecisionMap, WeightStore};
+use crate::quant::pack;
+use crate::runtime::Session;
+use anyhow::Result;
+
+/// What the search optimizes beyond the size budget.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// minimize sensitivity-weighted quantization error alone
+    Accuracy,
+    /// error plus `λ ×` (normalized packed-kernel read time) — `λ = 1`
+    /// weighs a width's full throughput penalty like the mean
+    /// per-expert error span, so byte-inefficient widths (3-bit
+    /// padding) must buy their keep in accuracy
+    Balanced { lambda: f64 },
+}
+
+impl Objective {
+    pub fn label(&self) -> String {
+        match self {
+            Objective::Accuracy => "accuracy".into(),
+            Objective::Balanced { lambda } => {
+                format!("balanced(lambda={lambda})")
+            }
+        }
+    }
+}
+
+/// The size constraint the solver enforces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SearchBudget {
+    /// mean assigned bits/expert ≤ this
+    AvgBits(f64),
+    /// Σ expert wire bytes (`SizePolicy` accounting) ≤ this
+    TotalBytes(usize),
+}
+
+/// A complete search request — the declarative type behind
+/// `PrecisionSource::Searched` and `mopeq search`.
+#[derive(Clone, Debug)]
+pub struct SearchSpec {
+    /// importance metric (any spec-grammar [`Metric`]; the default is
+    /// the paper's data-free closed-form Hessian)
+    pub metric: Metric,
+    /// candidate widths, strictly ascending, every one packable and
+    /// profiled
+    pub palette: Vec<u8>,
+    pub budget: SearchBudget,
+    pub objective: Objective,
+    /// which quantizer's reconstruction error prices each width (RTN is
+    /// data-free; GPTQ / AWQ / SignRound probe against a calibration
+    /// capture and therefore need a session)
+    pub probe: QuantSpec,
+    /// run the local-search refiner after the DP (kept on by default;
+    /// off reproduces the raw DP optimum for ablations)
+    pub refine: bool,
+    /// packed-kernel throughput profile (built-in table or a measured
+    /// `BENCH_quant_throughput.json`)
+    pub profile: ThroughputProfile,
+}
+
+impl SearchSpec {
+    /// "Best map under `max_mean_bits` average bits": paper-default
+    /// metric and palette, RTN probe, accuracy objective, refiner on.
+    pub fn avg_bits(max_mean_bits: f64) -> SearchSpec {
+        SearchSpec {
+            metric: AllocPolicy::default().metric,
+            palette: AllocPolicy::default().palette,
+            budget: SearchBudget::AvgBits(max_mean_bits),
+            objective: Objective::Accuracy,
+            probe: QuantSpec::rtn(),
+            refine: true,
+            profile: ThroughputProfile::builtin(),
+        }
+    }
+
+    /// Typed validation of everything knowable without the model —
+    /// shares the spec grammar's palette/metric/budget checks
+    /// (`SpecError`) and adds the search-specific ones
+    /// ([`SearchError`]).
+    pub fn validate(&self) -> Result<()> {
+        // metric / palette shape / avg-bits floor: the same typed
+        // SpecErrors AllocPolicy raises, so CLI and builder users see
+        // one error vocabulary
+        let budget = match self.budget {
+            SearchBudget::AvgBits(b) => {
+                Some(AvgBitsBudget { max_mean_bits: b })
+            }
+            SearchBudget::TotalBytes(_) => None, // floor needs the config
+        };
+        AllocPolicy {
+            metric: self.metric.clone(),
+            granularity: crate::cluster::Granularity::ModelWise,
+            palette: self.palette.clone(),
+            budget,
+        }
+        .validate()?;
+        self.probe.validate()?;
+        for &bits in &self.palette {
+            if !pack::packable(bits) {
+                return Err(SearchError::UnpackableWidth { bits }.into());
+            }
+        }
+        self.profile.check_palette(&self.palette)?;
+        Ok(())
+    }
+
+    /// Whether resolving this spec must execute the model (importance
+    /// profiling or a calibrated error probe).
+    pub fn needs_model_runs(&self) -> bool {
+        self.metric.needs_model_runs() || self.probe.quantizer.needs_calib()
+    }
+
+    /// The bit-sum cap this budget implies for `cfg`.
+    pub fn cap_bits(&self, cfg: &ModelConfig) -> Result<usize> {
+        let n = cfg.total_experts();
+        match self.budget {
+            SearchBudget::AvgBits(b) => Ok(cost::avg_bits_cap(n, b)),
+            SearchBudget::TotalBytes(bytes) => {
+                cost::bytes_cap(cfg, n, self.palette[0], bytes)
+            }
+        }
+    }
+
+    /// The budget as average bits/expert (byte budgets converted via
+    /// the cap) — what frontier ranking and provenance record.
+    pub fn budget_avg_bits(&self, cfg: &ModelConfig) -> Result<f64> {
+        match self.budget {
+            SearchBudget::AvgBits(b) => Ok(b),
+            SearchBudget::TotalBytes(_) => Ok(self.cap_bits(cfg)? as f64
+                / cfg.total_experts() as f64),
+        }
+    }
+}
+
+/// A solved search: the map, its self-describing provenance, and the
+/// predicted aggregates.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub map: PrecisionMap,
+    pub provenance: Provenance,
+    pub summary: CostSummary,
+}
+
+/// Resolve a [`SearchSpec`] end to end over one model's reference
+/// weights: importance → cost model → exact DP (→ refiner) → map. The
+/// single-budget path `PrecisionSource::Searched` and
+/// `EngineBuilder::auto` build through; `mopeq search` drives the same
+/// stages plus the frontier sweep.
+pub fn run_search(
+    session: Option<&Session>,
+    cfg: &ModelConfig,
+    ws: &WeightStore,
+    spec: &SearchSpec,
+    seed: u64,
+) -> Result<SearchOutcome> {
+    spec.validate()?;
+    let importance = resolve_importance(session, cfg, ws, &spec.metric, seed)?;
+    let cm = CostModel::build(
+        session,
+        cfg,
+        ws,
+        &importance,
+        &spec.palette,
+        &spec.probe,
+        &spec.profile,
+        spec.objective,
+        seed,
+    )?;
+    let cap = spec.cap_bits(cfg)?;
+    let mut assign = solve::dp_solve(&cm.cost, &cm.palette, cap)?;
+    if spec.refine {
+        solve::refine(&mut assign, &cm.cost, &cm.palette, cap);
+    }
+    let summary = cm.summary(&assign);
+    let map = cm.assignment_map(&assign);
+    let provenance = Provenance {
+        metric: spec.metric.label(),
+        granularity: if spec.refine {
+            "search(dp+refine)".into()
+        } else {
+            "search(dp)".into()
+        },
+        palette: spec.palette.clone(),
+        budget: Some(spec.budget_avg_bits(cfg)?),
+        mean_bits: map.mean_bits(),
+        layer_mean_bits: map.layer_mean_bits(),
+    };
+    Ok(SearchOutcome { map, provenance, summary })
+}
+
+/// Resolve a spec-grammar metric into its importance map through the
+/// shared [`Resolver`] (identical values to what `AllocPolicy` builds
+/// see, by construction).
+pub fn resolve_importance(
+    session: Option<&Session>,
+    cfg: &ModelConfig,
+    ws: &WeightStore,
+    metric: &Metric,
+    seed: u64,
+) -> Result<ImportanceMap> {
+    match session {
+        Some(s) => Resolver::new(s, cfg, ws, seed).importance(metric),
+        None => Resolver::sessionless(cfg, ws, seed).importance(metric),
+    }
+}
+
+/// Typed errors of the search subsystem. (Spec-shape problems — empty
+/// or unsorted palettes, degenerate metrics, avg-bits budgets below the
+/// palette floor — reuse the grammar's `SpecError` vocabulary; these
+/// cover what only the search layer can know.)
+#[derive(Clone, Debug, PartialEq)]
+pub enum SearchError {
+    /// a palette width with no packed u32 execution layout
+    UnpackableWidth { bits: u8 },
+    /// a palette width the throughput profile cannot price
+    NoProfileEntry { bits: u8 },
+    /// a bench-profile artifact that is unreadable or malformed
+    Profile { path: String, detail: String },
+    /// the bit-sum cap is below the all-minimum-width floor
+    InfeasibleBits { cap_bits: usize, floor_bits: usize },
+    /// a byte budget below the all-minimum-width model size
+    InfeasibleBytes { budget_bytes: usize, floor_bytes: usize },
+    /// an assignment width the cost table cannot price
+    OffPaletteWidth { bits: u8 },
+    /// a sweep with no budgets (or no surviving points)
+    EmptyFrontier,
+    /// every swept point exceeds the requested budget — there is no
+    /// `best.json` to select
+    NoPointUnderBudget { request_avg_bits: f64 },
+    /// a frontier directory whose metadata is missing/corrupt
+    FrontierMeta { path: String, detail: String },
+    /// frontier metadata names a point file that does not exist
+    MissingPoint { file: String },
+    /// a point map inside the frontier names a different variant
+    PointVariant { expected: String, found: String },
+}
+
+impl std::fmt::Display for SearchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SearchError::UnpackableWidth { bits } => write!(
+                f,
+                "palette width {bits} has no packed u32 layout (packable \
+                 widths: 2, 3, 4, 8)"
+            ),
+            SearchError::NoProfileEntry { bits } => write!(
+                f,
+                "throughput profile has no entry for width {bits} — \
+                 re-run the quant_throughput bench or drop the width"
+            ),
+            SearchError::Profile { path, detail } => {
+                write!(f, "throughput profile {path}: {detail}")
+            }
+            SearchError::InfeasibleBits { cap_bits, floor_bits } => write!(
+                f,
+                "bit budget {cap_bits} is below the all-minimum-width \
+                 floor {floor_bits}"
+            ),
+            SearchError::InfeasibleBytes { budget_bytes, floor_bytes } => {
+                write!(
+                    f,
+                    "byte budget {budget_bytes} is below the \
+                     all-minimum-width model size {floor_bytes}"
+                )
+            }
+            SearchError::OffPaletteWidth { bits } => write!(
+                f,
+                "width {bits} is not in the search palette — the cost \
+                 model cannot price it"
+            ),
+            SearchError::EmptyFrontier => {
+                write!(f, "frontier sweep has no budget points")
+            }
+            SearchError::NoPointUnderBudget { request_avg_bits } => {
+                write!(
+                    f,
+                    "no swept point fits the requested budget of \
+                     {request_avg_bits} avg bits — include the request \
+                     in the budget ladder"
+                )
+            }
+            SearchError::FrontierMeta { path, detail } => {
+                write!(f, "frontier artifact {path}: {detail}")
+            }
+            SearchError::MissingPoint { file } => write!(
+                f,
+                "frontier names point file {file}, which does not exist"
+            ),
+            SearchError::PointVariant { expected, found } => write!(
+                f,
+                "frontier point map is for `{found}`, frontier is for \
+                 `{expected}`"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SearchError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::engine::spec::SpecError;
+    use crate::moe::local_meta;
+
+    #[test]
+    fn default_spec_is_the_paper_setting_plus_a_budget() {
+        let spec = SearchSpec::avg_bits(3.0);
+        assert_eq!(spec.metric, AllocPolicy::default().metric);
+        assert_eq!(spec.palette, vec![2, 3, 4]);
+        assert_eq!(spec.budget, SearchBudget::AvgBits(3.0));
+        assert!(spec.refine);
+        assert!(!spec.needs_model_runs());
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_reuses_the_spec_grammar_errors() {
+        let mut spec = SearchSpec::avg_bits(3.0);
+        spec.palette = vec![4, 2];
+        assert!(matches!(
+            spec.validate().unwrap_err().downcast_ref::<SpecError>(),
+            Some(SpecError::UnsortedPalette { .. })
+        ));
+        spec.palette = vec![];
+        assert!(matches!(
+            spec.validate().unwrap_err().downcast_ref::<SpecError>(),
+            Some(SpecError::EmptyPalette)
+        ));
+        let spec = SearchSpec::avg_bits(1.0);
+        assert!(matches!(
+            spec.validate().unwrap_err().downcast_ref::<SpecError>(),
+            Some(SpecError::InfeasibleBudget { .. })
+        ));
+    }
+
+    #[test]
+    fn search_specific_validation_is_typed() {
+        // width 5 quantizes fine but has no packed layout: the search
+        // must reject it rather than plan a map the engine serves dense
+        let mut spec = SearchSpec::avg_bits(5.5);
+        spec.palette = vec![2, 4, 5];
+        assert_eq!(
+            spec.validate()
+                .unwrap_err()
+                .downcast_ref::<SearchError>(),
+            Some(&SearchError::UnpackableWidth { bits: 5 })
+        );
+        // packable but unprofiled width
+        let mut spec = SearchSpec::avg_bits(3.0);
+        spec.profile.gbs.retain(|&(b, _)| b != 3);
+        assert_eq!(
+            spec.validate()
+                .unwrap_err()
+                .downcast_ref::<SearchError>(),
+            Some(&SearchError::NoProfileEntry { bits: 3 })
+        );
+    }
+
+    #[test]
+    fn run_search_lands_under_the_budget_sessionless() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 4);
+        let out =
+            run_search(None, &cfg, &ws, &SearchSpec::avg_bits(3.0), 4)
+                .unwrap();
+        assert!(out.map.mean_bits() <= 3.0);
+        assert_eq!(out.provenance.budget, Some(3.0));
+        assert!(out.provenance.granularity.contains("dp+refine"));
+        assert!(out.summary.weighted_err > 0.0);
+        // the budget binds: an unconstrained model would be all 4-bit
+        assert!(out.map.mean_bits() > 2.0);
+    }
+
+    #[test]
+    fn byte_budget_resolves_to_the_same_grammar() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 4);
+        // a byte budget equal to the uniform-3-bit model
+        let bytes = cfg.total_experts()
+            * crate::moe::expert_size_bits(&cfg, 3)
+            / 8;
+        let mut spec = SearchSpec::avg_bits(3.0);
+        spec.budget = SearchBudget::TotalBytes(bytes);
+        let out = run_search(None, &cfg, &ws, &spec, 4).unwrap();
+        assert!(out.summary.wire_bytes <= bytes);
+        // and an impossible byte budget is typed
+        spec.budget = SearchBudget::TotalBytes(16);
+        let err = run_search(None, &cfg, &ws, &spec, 4).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SearchError>(),
+            Some(SearchError::InfeasibleBytes { .. })
+        ));
+    }
+}

@@ -1,0 +1,254 @@
+//! Packed-kernel throughput profile — the MxMoE-style efficiency side
+//! of the allocation search. Accuracy-only allocation treats every bit
+//! width as equally servable, but the fused `qmatmul{2,3,4,8}` kernels
+//! read weight bytes at *different* effective rates (the 3-bit layout
+//! wastes 2 bits per u32 word and pays a wider unpack shift), so a
+//! palette choice has a throughput price the [`crate::search::CostModel`]
+//! must see.
+//!
+//! The profile is either the built-in table below (representative host
+//! measurements from the `quant_throughput` bench) or a **measured**
+//! profile loaded from the machine-readable `BENCH_quant_throughput.json`
+//! that bench emits — so a deployment searched on the serving machine is
+//! weighed by that machine's actual kernel rates.
+
+use crate::config::ModelConfig;
+use crate::jsonx::Json;
+use crate::quant::pack;
+use crate::search::SearchError;
+use anyhow::Result;
+use std::path::Path;
+
+/// Weight-read throughput of the packed qmatmul kernel per bit width,
+/// in GB/s over the *resident heap bytes* the kernel actually streams
+/// (u32 words + f32 scale/zp vectors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThroughputProfile {
+    /// `(bits, GB/s)`, ascending by bits
+    pub gbs: Vec<(u8, f64)>,
+    /// `"builtin"` or the path of the bench JSON it was loaded from
+    pub source: String,
+}
+
+impl Default for ThroughputProfile {
+    fn default() -> Self {
+        ThroughputProfile::builtin()
+    }
+}
+
+impl ThroughputProfile {
+    /// The built-in table: representative host rates from the
+    /// `quant_throughput` bench's fused-qmatmul section. The *shape* is
+    /// what the search needs — 3-bit is the least byte-efficient width
+    /// (10 codes per u32, 2 padding bits, non-power-of-two shifts),
+    /// 8-bit streams fastest — absolute numbers are machine-dependent
+    /// and a measured profile should replace them
+    /// ([`ThroughputProfile::from_bench_json`]).
+    pub fn builtin() -> ThroughputProfile {
+        ThroughputProfile {
+            gbs: vec![(2, 2.4), (3, 1.6), (4, 2.8), (8, 4.5)],
+            source: "builtin".into(),
+        }
+    }
+
+    /// GB/s for one bit width, if profiled.
+    pub fn gbs_for(&self, bits: u8) -> Option<f64> {
+        self.gbs.iter().find(|&&(b, _)| b == bits).map(|&(_, g)| g)
+    }
+
+    /// Typed check that every palette width has a profile entry — a
+    /// width the profile cannot price would make the throughput term
+    /// silently wrong.
+    pub fn check_palette(&self, palette: &[u8]) -> Result<()> {
+        for &bits in palette {
+            if self.gbs_for(bits).is_none() {
+                return Err(SearchError::NoProfileEntry { bits }.into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a measured profile from the `BENCH_quant_throughput.json`
+    /// artifact (`benchx::BenchLog` schema: a `"qmatmul"` object keyed
+    /// by bit width, each entry carrying a `"gbs"` number). Malformed
+    /// artifacts fail with a typed [`SearchError::Profile`].
+    pub fn from_bench_json(path: &Path) -> Result<ThroughputProfile> {
+        let bad = |detail: String| SearchError::Profile {
+            path: path.display().to_string(),
+            detail,
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("read: {e}")))?;
+        let json = Json::parse(&text)
+            .map_err(|e| bad(format!("parse: {e}")))?;
+        let qm = json
+            .get("qmatmul")
+            .ok_or_else(|| bad("missing `qmatmul` object".into()))?;
+        let mut gbs = Vec::new();
+        for (key, entry) in
+            qm.as_obj().map_err(|e| bad(format!("qmatmul: {e}")))?
+        {
+            let bits: u8 = key.parse().map_err(|_| {
+                bad(format!("qmatmul key `{key}` is not a bit width"))
+            })?;
+            let g = entry
+                .get("gbs")
+                .ok_or_else(|| bad(format!("qmatmul.{key}: missing `gbs`")))?
+                .as_f64()
+                .map_err(|e| bad(format!("qmatmul.{key}.gbs: {e}")))?;
+            if !(g.is_finite() && g > 0.0) {
+                return Err(bad(format!(
+                    "qmatmul.{key}.gbs = {g} is not a positive rate"
+                ))
+                .into());
+            }
+            gbs.push((bits, g));
+        }
+        if gbs.is_empty() {
+            return Err(bad("`qmatmul` object has no width entries".into())
+                .into());
+        }
+        gbs.sort_by_key(|&(b, _)| b);
+        Ok(ThroughputProfile { gbs, source: path.display().to_string() })
+    }
+
+    /// Predicted wall time, in µs, to stream one routed expert's packed
+    /// weights at `bits` through the profiled kernel.
+    pub fn expert_read_us(&self, cfg: &ModelConfig, bits: u8) -> Result<f64> {
+        let gbs = self.gbs_for(bits).ok_or_else(|| {
+            anyhow::Error::new(SearchError::NoProfileEntry { bits })
+        })?;
+        Ok(packed_expert_heap_bytes(cfg, bits) as f64 / (gbs * 1e3))
+    }
+}
+
+/// Resident heap bytes of one packed FC matrix: u32 words (including
+/// the 3-bit padding and ragged-tail waste the kernel actually reads)
+/// plus the f32 scale/zp vectors — mirrors
+/// `quant::kernels::PackedMatrix::heap_bytes` without materializing one.
+fn packed_matrix_heap_bytes(din: usize, dout: usize, bits: u8, group: usize) -> usize {
+    let grp = if group > 0 && din % group == 0 { group } else { din };
+    let groups = din / grp.max(1);
+    pack::words_per_col(din, bits) * dout * 4 + 2 * groups * dout * 4
+}
+
+/// Resident heap bytes of one routed expert (gate + up + down) at
+/// `bits` — the byte count the throughput term charges, as opposed to
+/// the *wire* bytes `moe::expert_size_bits` accounts (heap ≥ wire: u32
+/// padding is a real read cost but not a storage cost).
+pub fn packed_expert_heap_bytes(cfg: &ModelConfig, bits: u8) -> usize {
+    let (d, m, g) = (cfg.d_model, cfg.d_expert, cfg.group);
+    2 * packed_matrix_heap_bytes(d, m, bits, g)
+        + packed_matrix_heap_bytes(m, d, bits, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::quant::kernels::PackedMatrix;
+    use crate::quant::rtn_quantize;
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn builtin_covers_the_packable_widths() {
+        let p = ThroughputProfile::builtin();
+        for bits in [2u8, 3, 4, 8] {
+            assert!(p.gbs_for(bits).unwrap() > 0.0);
+        }
+        assert!(p.gbs_for(5).is_none());
+        p.check_palette(&[2, 3, 4]).unwrap();
+        let err = p.check_palette(&[2, 5]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::NoProfileEntry { bits: 5 })
+        );
+    }
+
+    #[test]
+    fn three_bit_is_the_least_byte_efficient_width() {
+        // the MxMoE motivation: the built-in shape must keep the 3-bit
+        // padding penalty visible to the solver
+        let p = ThroughputProfile::builtin();
+        assert!(p.gbs_for(3).unwrap() < p.gbs_for(2).unwrap());
+        assert!(p.gbs_for(3).unwrap() < p.gbs_for(4).unwrap());
+        assert!(p.gbs_for(8).unwrap() > p.gbs_for(4).unwrap());
+    }
+
+    #[test]
+    fn heap_bytes_formula_matches_a_real_packed_matrix() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let mut rng = Rng::new(0);
+        for bits in [2u8, 3, 4, 8] {
+            // gate/up shape [d, m] and down shape [m, d]
+            let gate = Tensor::randn(
+                &mut rng,
+                &[cfg.d_model, cfg.d_expert],
+                0.5,
+            );
+            let down = Tensor::randn(
+                &mut rng,
+                &[cfg.d_expert, cfg.d_model],
+                0.5,
+            );
+            let pm_gate = PackedMatrix::from_quantized(&rtn_quantize(
+                &gate, bits, cfg.group,
+            ))
+            .unwrap();
+            let pm_down = PackedMatrix::from_quantized(&rtn_quantize(
+                &down, bits, cfg.group,
+            ))
+            .unwrap();
+            assert_eq!(
+                packed_expert_heap_bytes(&cfg, bits),
+                2 * pm_gate.heap_bytes() + pm_down.heap_bytes(),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn expert_read_time_reflects_both_bytes_and_rate() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let p = ThroughputProfile::builtin();
+        // 2-bit reads fewer bytes at a faster rate than 3-bit: strictly
+        // quicker. 4-bit reads more bytes than 2-bit at a similar rate:
+        // strictly slower.
+        let t2 = p.expert_read_us(&cfg, 2).unwrap();
+        let t3 = p.expert_read_us(&cfg, 3).unwrap();
+        let t4 = p.expert_read_us(&cfg, 4).unwrap();
+        assert!(t2 < t3, "{t2} {t3}");
+        assert!(t2 < t4, "{t2} {t4}");
+        assert!(p.expert_read_us(&cfg, 5).is_err());
+    }
+
+    #[test]
+    fn bench_json_roundtrip_and_typed_errors() {
+        let dir = std::env::temp_dir().join("mopeq_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_quant_throughput.json");
+        std::fs::write(
+            &path,
+            r#"{"bench":"quant_throughput","qmatmul":{
+                "2":{"gbs":1.5},"3":{"gbs":0.9},
+                "4":{"gbs":1.8},"8":{"gbs":3.2}}}"#,
+        )
+        .unwrap();
+        let p = ThroughputProfile::from_bench_json(&path).unwrap();
+        assert_eq!(p.gbs_for(3), Some(0.9));
+        assert_eq!(p.gbs.len(), 4);
+        assert_eq!(p.source, path.display().to_string());
+
+        std::fs::write(&path, r#"{"bench":"quant_throughput"}"#).unwrap();
+        let err = ThroughputProfile::from_bench_json(&path).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SearchError>(),
+            Some(SearchError::Profile { .. })
+        ));
+
+        std::fs::write(&path, "not json").unwrap();
+        assert!(ThroughputProfile::from_bench_json(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,368 @@
+//! Allocation solvers over the per-expert cost table: an **exact**
+//! multiple-choice knapsack DP (GEMQ frames expert precision assignment
+//! as a global budgeted optimization — this solves that optimization
+//! to optimality at sim scale) and a marginal-cost local-search refiner
+//! that walks the error-per-bit frontier from any feasible starting
+//! assignment (in particular, from the greedy `cluster::enforce_budget`
+//! result, which it therefore can never score worse than).
+//!
+//! All solvers speak the same language: `cost[i][p]` is the scalar
+//! objective of giving flattened expert `i` palette choice `p`, and
+//! `widths[p]` its bit price; the budget is a cap on the summed bits.
+
+use crate::search::SearchError;
+use anyhow::Result;
+
+/// Total objective of an assignment (`assign[i]` = palette index).
+pub fn score(assign: &[usize], cost: &[Vec<f64>]) -> f64 {
+    assign.iter().zip(cost).map(|(&p, row)| row[p]).sum()
+}
+
+/// Total bits of an assignment.
+pub fn total_bits(assign: &[usize], widths: &[u8]) -> usize {
+    assign.iter().map(|&p| widths[p] as usize).sum()
+}
+
+/// Exact DP over per-expert palette choices: minimize
+/// `Σ cost[i][assign[i]]` subject to `Σ widths[assign[i]] ≤ cap_bits`.
+///
+/// Classic multiple-choice knapsack on the bit budget — `O(n · cap ·
+/// |palette|)` time, `O(n · cap)` choice memory: at sim scale (≤ ~2k
+/// experts × ≤ 8 bits each) that is a few MB and milliseconds. Returns
+/// a typed [`SearchError::InfeasibleBits`] when even the all-minimum
+/// assignment exceeds the cap.
+pub fn dp_solve(
+    cost: &[Vec<f64>],
+    widths: &[u8],
+    cap_bits: usize,
+) -> Result<Vec<usize>> {
+    let n = cost.len();
+    assert!(!widths.is_empty(), "empty palette");
+    let min_w = *widths.iter().min().unwrap() as usize;
+    if n * min_w > cap_bits {
+        return Err(SearchError::InfeasibleBits {
+            cap_bits,
+            floor_bits: n * min_w,
+        }
+        .into());
+    }
+    // beyond all-maximum-width the budget cannot bind — clamp so a
+    // generous byte budget sizes the DP table by the model, not the
+    // budget (an unclamped multi-GB cap would OOM, not solve)
+    let max_w = *widths.iter().max().unwrap() as usize;
+    let cap_bits = cap_bits.min(n * max_w);
+    // dp[b] = min cost with the experts so far summing to exactly b bits
+    let mut dp = vec![f64::INFINITY; cap_bits + 1];
+    dp[0] = 0.0;
+    // choice[i][b] = palette index chosen for expert i when its prefix
+    // lands on b total bits
+    let mut choice = vec![u8::MAX; n * (cap_bits + 1)];
+    let mut next = vec![f64::INFINITY; cap_bits + 1];
+    for (i, row) in cost.iter().enumerate() {
+        debug_assert_eq!(row.len(), widths.len());
+        next.iter_mut().for_each(|v| *v = f64::INFINITY);
+        let ch = &mut choice[i * (cap_bits + 1)..(i + 1) * (cap_bits + 1)];
+        for (b, &base) in dp.iter().enumerate() {
+            if !base.is_finite() {
+                continue;
+            }
+            for (p, &w) in widths.iter().enumerate() {
+                let nb = b + w as usize;
+                if nb > cap_bits {
+                    continue;
+                }
+                let c = base + row[p];
+                if c < next[nb] {
+                    next[nb] = c;
+                    ch[nb] = p as u8;
+                }
+            }
+        }
+        std::mem::swap(&mut dp, &mut next);
+    }
+    // best endpoint ≤ cap, then backtrack through the choice table
+    let mut best_b = 0;
+    let mut best_c = f64::INFINITY;
+    for (b, &c) in dp.iter().enumerate() {
+        if c < best_c {
+            best_c = c;
+            best_b = b;
+        }
+    }
+    debug_assert!(best_c.is_finite(), "feasible cap with no DP endpoint");
+    let mut assign = vec![0usize; n];
+    let mut b = best_b;
+    for i in (0..n).rev() {
+        let p = choice[i * (cap_bits + 1) + b] as usize;
+        debug_assert!(p < widths.len(), "broken DP backtrack");
+        assign[i] = p;
+        b -= widths[p] as usize;
+    }
+    debug_assert_eq!(b, 0);
+    Ok(assign)
+}
+
+/// Local-search refiner: walk the marginal cost-per-bit frontier from a
+/// feasible assignment, applying the best single-expert move (one
+/// palette step up or down) or paired move (one expert up a step, one
+/// down a step) while the objective strictly improves and the bit cap
+/// holds. Monotone — every accepted move lowers the objective — so a
+/// refined greedy assignment **never** scores worse than greedy on the
+/// same objective. Returns the number of moves applied.
+pub fn refine(
+    assign: &mut [usize],
+    cost: &[Vec<f64>],
+    widths: &[u8],
+    cap_bits: usize,
+) -> usize {
+    let n = assign.len();
+    let np = widths.len();
+    if n == 0 || np < 2 {
+        return 0;
+    }
+    let mut bits = total_bits(assign, widths);
+    let mut moves = 0usize;
+    // each accepted move strictly lowers a bounded objective; the cap
+    // still bounds iterations defensively against float-noise cycles
+    let max_moves = 4 * n * np + 64;
+    while moves < max_moves {
+        // best single move: expert e one palette step up or down
+        let mut best: Option<(f64, usize, usize)> = None; // (Δcost, e, p)
+        for (e, &cur) in assign.iter().enumerate() {
+            for p in [cur.wrapping_sub(1), cur + 1] {
+                if p >= np {
+                    continue;
+                }
+                let delta_bits =
+                    widths[p] as isize - widths[cur] as isize;
+                if bits as isize + delta_bits > cap_bits as isize {
+                    continue;
+                }
+                let delta = cost[e][p] - cost[e][cur];
+                if delta < -1e-15
+                    && best.is_none_or(|(bd, _, _)| delta < bd)
+                {
+                    best = Some((delta, e, p));
+                }
+            }
+        }
+        // paired move: the best one-step upgrade funded by the cheapest
+        // one-step downgrade on another expert (lets error flow from
+        // unimportant experts to important ones at constant budget)
+        let mut up_best: Option<(f64, usize)> = None; // gain of +1 step
+        let mut down_best: Option<(f64, usize)> = None; // pain of -1 step
+        for (e, &cur) in assign.iter().enumerate() {
+            if cur + 1 < np {
+                let d = cost[e][cur + 1] - cost[e][cur];
+                if up_best.is_none_or(|(bd, _)| d < bd) {
+                    up_best = Some((d, e));
+                }
+            }
+            if cur > 0 {
+                let d = cost[e][cur - 1] - cost[e][cur];
+                if down_best.is_none_or(|(bd, _)| d < bd) {
+                    down_best = Some((d, e));
+                }
+            }
+        }
+        let mut pair: Option<(f64, usize, usize)> = None; // (Δ, up_e, down_e)
+        if let (Some((ud, ue)), Some((dd, de))) = (up_best, down_best) {
+            if ue != de {
+                let up_bits = widths[assign[ue] + 1] as isize
+                    - widths[assign[ue]] as isize;
+                let down_bits = widths[assign[de] - 1] as isize
+                    - widths[assign[de]] as isize;
+                if bits as isize + up_bits + down_bits
+                    <= cap_bits as isize
+                {
+                    let delta = ud + dd;
+                    if delta < -1e-15 {
+                        pair = Some((delta, ue, de));
+                    }
+                }
+            }
+        }
+        // apply the better of the two move kinds, or stop at a local
+        // optimum
+        match (best, pair) {
+            (Some((sd, _, _)), Some((pd, ue, de))) if pd < sd => {
+                assign[ue] += 1;
+                assign[de] -= 1;
+            }
+            (Some((_, e, p)), _) => {
+                assign[e] = p;
+            }
+            (None, Some((_, ue, de))) => {
+                assign[ue] += 1;
+                assign[de] -= 1;
+            }
+            (None, None) => break,
+        }
+        bits = total_bits(assign, widths);
+        debug_assert!(bits <= cap_bits);
+        moves += 1;
+    }
+    moves
+}
+
+/// Map a width assignment (e.g. the greedy `cluster` output) onto
+/// palette indices for scoring against the same cost table. Widths off
+/// the palette yield a typed error — the solvers cannot price them.
+pub fn widths_to_indices(
+    bits: &[Vec<u8>],
+    widths: &[u8],
+) -> Result<Vec<usize>> {
+    let mut out = Vec::with_capacity(bits.iter().map(Vec::len).sum());
+    for row in bits {
+        for &b in row {
+            match widths.iter().position(|&w| w == b) {
+                Some(p) => out.push(p),
+                None => {
+                    return Err(SearchError::OffPaletteWidth { bits: b }
+                        .into())
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    /// Synthetic cost rows: importance × an RTN-like error curve that
+    /// shrinks ~4x per extra bit.
+    fn cost_rows(importance: &[f64], widths: &[u8]) -> Vec<Vec<f64>> {
+        importance
+            .iter()
+            .map(|imp| {
+                widths
+                    .iter()
+                    .map(|&w| imp * 0.25f64.powi(w as i32))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dp_gives_high_bits_to_important_experts() {
+        let widths = [2u8, 3, 4];
+        let cost = cost_rows(&[1.0, 100.0, 1.0, 100.0], &widths);
+        // cap 12 = mean 3.0: the optimum is {2,4,2,4}
+        let assign = dp_solve(&cost, &widths, 12).unwrap();
+        assert_eq!(assign, vec![0, 2, 0, 2]);
+        assert_eq!(total_bits(&assign, &widths), 12);
+    }
+
+    #[test]
+    fn dp_uses_slack_when_error_still_falls() {
+        let widths = [2u8, 3, 4];
+        let cost = cost_rows(&[1.0, 1.0], &widths);
+        // cap 8 = everyone at max width: error is monotone in bits, so
+        // the optimum spends the whole budget
+        let assign = dp_solve(&cost, &widths, 8).unwrap();
+        assert_eq!(assign, vec![2, 2]);
+    }
+
+    #[test]
+    fn dp_clamps_non_binding_caps_to_the_model_size() {
+        // a cap far beyond all-max-width must solve instantly (table
+        // sized by the model), not allocate a budget-sized DP table
+        let widths = [2u8, 3, 4];
+        let cost = cost_rows(&[1.0, 2.0, 3.0], &widths);
+        let assign = dp_solve(&cost, &widths, usize::MAX / 2).unwrap();
+        assert_eq!(assign, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn dp_infeasible_cap_is_a_typed_error() {
+        let widths = [2u8, 3, 4];
+        let cost = cost_rows(&[1.0, 1.0, 1.0], &widths);
+        let err = dp_solve(&cost, &widths, 5).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::InfeasibleBits {
+                cap_bits: 5,
+                floor_bits: 6
+            })
+        );
+    }
+
+    #[test]
+    fn refine_only_improves_and_respects_the_cap() {
+        forall("refine_improves", 30, |rng| {
+            let widths = [2u8, 3, 4];
+            let n = 3 + rng.below(12);
+            let importance: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 10.0).collect();
+            let cost = cost_rows(&importance, &widths);
+            let cap = n * 2 + rng.below(n * 2 + 1);
+            // random feasible start: everyone at the floor, then pad
+            let mut assign = vec![0usize; n];
+            let before_feasible = total_bits(&assign, &widths) <= cap;
+            let before = score(&assign, &cost);
+            refine(&mut assign, &cost, &widths, cap);
+            let after = score(&assign, &cost);
+            before_feasible
+                && after <= before + 1e-12
+                && total_bits(&assign, &widths) <= cap
+        });
+    }
+
+    #[test]
+    fn refine_reaches_the_dp_optimum_on_small_instances() {
+        // with a planted two-tier skew and single/paired one-step moves,
+        // the refiner climbs from all-floor to the DP optimum
+        let widths = [2u8, 3, 4];
+        let cost = cost_rows(&[50.0, 1.0, 50.0, 1.0], &widths);
+        let cap = 12;
+        let dp = dp_solve(&cost, &widths, cap).unwrap();
+        let mut assign = vec![0usize; 4];
+        refine(&mut assign, &cost, &widths, cap);
+        assert_eq!(score(&assign, &cost), score(&dp, &cost));
+        assert_eq!(assign, vec![2, 0, 2, 0]);
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_exhaustive_enumeration() {
+        forall("dp_vs_bruteforce", 25, |rng| {
+            let widths = [2u8, 3, 4];
+            let n = 2 + rng.below(5); // 3^6 = 729 states max
+            let importance: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 5.0).collect();
+            let cost = cost_rows(&importance, &widths);
+            let cap = n * 2 + rng.below(n * 2 + 1);
+            let dp = dp_solve(&cost, &widths, cap).unwrap();
+            // brute force over all palette combinations
+            let mut best = f64::INFINITY;
+            let states = widths.len().pow(n as u32);
+            for s in 0..states {
+                let mut x = s;
+                let mut a = Vec::with_capacity(n);
+                for _ in 0..n {
+                    a.push(x % widths.len());
+                    x /= widths.len();
+                }
+                if total_bits(&a, &widths) <= cap {
+                    best = best.min(score(&a, &cost));
+                }
+            }
+            (score(&dp, &cost) - best).abs() < 1e-9
+        });
+    }
+
+    #[test]
+    fn widths_to_indices_rejects_off_palette() {
+        let ok = widths_to_indices(&[vec![2, 4], vec![3, 3]], &[2, 3, 4])
+            .unwrap();
+        assert_eq!(ok, vec![0, 2, 1, 1]);
+        let err =
+            widths_to_indices(&[vec![2, 16]], &[2, 3, 4]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SearchError>(),
+            Some(&SearchError::OffPaletteWidth { bits: 16 })
+        );
+    }
+}

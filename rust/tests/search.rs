@@ -1,0 +1,467 @@
+//! Pareto allocation search integration suite.
+//!
+//! Locks the PR's acceptance criteria:
+//! - on a synthetic model with a **planted sensitivity skew**, the DP
+//!   solver under a 3.0 avg-bit budget achieves strictly lower
+//!   sensitivity-weighted error than both uniform-3-bit and the greedy
+//!   `cluster::enforce_budget` demotion, at equal or smaller packed
+//!   size;
+//! - the DP solver never scores worse than greedy on the same
+//!   objective (property-tested), and the refiner never worsens the
+//!   greedy result it starts from;
+//! - a frontier artifact directory round-trips byte-for-byte, corrupt/
+//!   partial directories load as typed `SearchError`s;
+//! - `search --frontier-out` → `serve --map best.json` is bit-exact vs
+//!   an engine built with `PrecisionSource::Searched` of the same spec
+//!   (`EngineBuilder::auto`).
+
+use mopeq::cluster::{assign_map, enforce_budget, Granularity};
+use mopeq::config::{self, ModelConfig};
+use mopeq::data::{gen_sample, Sample, Task};
+use mopeq::engine::spec::{QuantSpec, SpecError};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::importance::hessian_closed_form;
+use mopeq::moe::{local_meta, ExpertId, ExpertMat, PrecisionMap, WeightStore};
+use mopeq::proptest_lite::forall;
+use mopeq::rng::Rng;
+use mopeq::search::{
+    frontier, solve, CostModel, FrontierSet, Objective, SearchError,
+    SearchSpec, ThroughputProfile,
+};
+use std::path::PathBuf;
+
+const SEED: u64 = 21;
+
+fn cfg() -> ModelConfig {
+    config::variant("dsvl2_tiny").unwrap()
+}
+
+/// A store with a **planted sensitivity skew**: expert `e`'s weights in
+/// every MoE layer are scaled by a smooth ramp (×0.5 … ×2.0 across the
+/// expert axis). Under the closed-form trace (∝ 1/‖W‖) importance
+/// *falls* along the ramp while the RTN reconstruction MSE (∝ scale²)
+/// *rises* — so importance rank and true error impact disagree, which
+/// is exactly the regime where clustering + greedy demotion by
+/// importance alone leaves error on the table and a global optimizer
+/// must win.
+fn skewed_store(cfg: &ModelConfig, seed: u64) -> WeightStore {
+    let mut ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    for layer in 0..cfg.moe_layers() {
+        for expert in 0..cfg.experts {
+            let id = ExpertId { layer, expert };
+            let t = expert as f32 / (cfg.experts - 1) as f32;
+            let scale = 0.5 * 4.0f32.powf(t);
+            for mat in ExpertMat::ALL {
+                let w = ws.expert_mat(id, mat).unwrap().scale(scale);
+                ws.set_expert_mat(id, mat, &w).unwrap();
+            }
+        }
+    }
+    ws
+}
+
+fn cost_model(cfg: &ModelConfig, ws: &WeightStore) -> CostModel {
+    let imp = hessian_closed_form(ws, cfg).unwrap();
+    CostModel::build(
+        None,
+        cfg,
+        ws,
+        &imp,
+        &[2, 3, 4],
+        &QuantSpec::rtn(),
+        &ThroughputProfile::builtin(),
+        Objective::Accuracy,
+        SEED,
+    )
+    .unwrap()
+}
+
+/// Acceptance criterion: DP under a 3.0 avg-bit budget strictly beats
+/// uniform-3-bit and greedy `enforce_budget` on sensitivity-weighted
+/// error, at equal or smaller packed size.
+#[test]
+fn dp_beats_uniform3_and_greedy_on_planted_skew() {
+    let cfg = cfg();
+    let ws = skewed_store(&cfg, SEED);
+    let imp = hessian_closed_form(&ws, &cfg).unwrap();
+    let cm = cost_model(&cfg, &ws);
+    let n = cm.n_experts();
+    let cap = 3 * n; // 3.0 avg bits
+
+    // uniform 3-bit: palette index 1 everywhere
+    let uni3 = cm.summary(&vec![1usize; n]);
+
+    // the paper's allocator + greedy budget demotion
+    let mut greedy_bits =
+        assign_map(&imp.values, &[2, 3, 4], Granularity::ModelWise, SEED);
+    enforce_budget(&mut greedy_bits, &imp.values, &[2, 3, 4], 3.0).unwrap();
+    let greedy_ix = cm
+        .map_indices(&PrecisionMap { bits: greedy_bits })
+        .unwrap();
+    let greedy = cm.summary(&greedy_ix);
+    assert!(greedy.mean_bits <= 3.0 + 1e-9);
+
+    // DP at the 3.0-avg-bit cap: strictly lower error than uniform-3
+    // at equal or smaller size
+    let dp_ix = solve::dp_solve(&cm.cost, &cm.palette, cap).unwrap();
+    let dp = cm.summary(&dp_ix);
+    assert!(
+        dp.weighted_err < uni3.weighted_err,
+        "DP {} !< uniform-3 {}",
+        dp.weighted_err,
+        uni3.weighted_err
+    );
+    assert!(dp.wire_bytes <= uni3.wire_bytes);
+    assert!(dp.mean_bits <= 3.0 + 1e-9);
+
+    // DP at greedy's *achieved* bit total (≤ the 3.0 cap — greedy may
+    // undershoot): strictly lower error at equal or smaller size than
+    // greedy, under the same 3.0 budget
+    let greedy_cap = solve::total_bits(&greedy_ix, &cm.palette);
+    assert!(greedy_cap <= cap);
+    let dpg_ix = solve::dp_solve(&cm.cost, &cm.palette, greedy_cap).unwrap();
+    let dpg = cm.summary(&dpg_ix);
+    assert!(
+        dpg.weighted_err < greedy.weighted_err,
+        "DP {} !< greedy {}",
+        dpg.weighted_err,
+        greedy.weighted_err
+    );
+    assert!(dpg.wire_bytes <= greedy.wire_bytes);
+
+    // and the refiner, started from greedy, also strictly improves it
+    // here (it can never do worse — see the property test below)
+    let mut refined_ix = greedy_ix.clone();
+    solve::refine(&mut refined_ix, &cm.cost, &cm.palette, greedy_cap);
+    let refined = cm.summary(&refined_ix);
+    assert!(
+        refined.weighted_err < greedy.weighted_err,
+        "refiner failed to improve greedy on the planted skew"
+    );
+    // DP is the floor for everything at its cap
+    assert!(dpg.weighted_err <= refined.weighted_err + 1e-9);
+}
+
+/// Satellite: the DP solver never scores worse than greedy on the same
+/// objective, over random importance maps and budgets.
+#[test]
+fn dp_never_worse_than_greedy_property() {
+    forall("dp_vs_greedy", 20, |rng| {
+        let palette = [2u8, 3, 4];
+        let (layers, experts) = (2usize, 6usize);
+        let importance: Vec<Vec<f64>> = (0..layers)
+            .map(|_| {
+                (0..experts).map(|_| rng.uniform() * 10.0 + 0.1).collect()
+            })
+            .collect();
+        // synthetic error curve aligned with importance (the greedy
+        // heuristic's own modeling assumption — DP must win even on
+        // greedy's home turf)
+        let cost: Vec<Vec<f64>> = importance
+            .iter()
+            .flatten()
+            .map(|imp| {
+                palette
+                    .iter()
+                    .map(|&b| imp * 0.25f64.powi(b as i32))
+                    .collect()
+            })
+            .collect();
+        let budget = 2.0 + rng.uniform() * 2.0;
+        let mut bits = assign_map(
+            &importance,
+            &palette,
+            Granularity::ModelWise,
+            rng.next_u64(),
+        );
+        enforce_budget(&mut bits, &importance, &palette, budget).unwrap();
+        let greedy: Vec<usize> = bits
+            .iter()
+            .flatten()
+            .map(|b| palette.iter().position(|p| p == b).unwrap())
+            .collect();
+        let cap = (budget * (layers * experts) as f64).floor() as usize;
+        let dp = solve::dp_solve(&cost, &palette, cap).unwrap();
+        // greedy stays within its own budget…
+        solve::total_bits(&greedy, &palette) <= cap
+            // …and DP is never worse on the shared objective
+            && solve::score(&dp, &cost)
+                <= solve::score(&greedy, &cost) + 1e-9
+    });
+}
+
+/// Satellite: the refiner is monotone from any feasible start — a
+/// refined greedy result can never score worse than greedy.
+#[test]
+fn refine_never_worsens_greedy_property() {
+    forall("refine_vs_greedy", 20, |rng| {
+        let palette = [2u8, 3, 4];
+        let n = 4 + rng.below(12);
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let imp = rng.uniform() * 8.0 + 0.1;
+                palette
+                    .iter()
+                    .map(|&b| imp * 0.3f64.powi(b as i32))
+                    .collect()
+            })
+            .collect();
+        let cap = 2 * n + rng.below(2 * n + 1);
+        let mut start: Vec<usize> =
+            (0..n).map(|_| rng.below(2)).collect(); // feasible: ≤ 3n/ex
+        while solve::total_bits(&start, &palette) > cap {
+            let i = rng.below(n);
+            if start[i] > 0 {
+                start[i] -= 1;
+            }
+        }
+        let before = solve::score(&start, &cost);
+        let mut refined = start.clone();
+        solve::refine(&mut refined, &cost, &palette, cap);
+        solve::score(&refined, &cost) <= before + 1e-12
+            && solve::total_bits(&refined, &palette) <= cap
+    });
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mopeq_search_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Satellite: frontier artifacts round-trip byte-for-byte through
+/// jsonx.
+#[test]
+fn frontier_dir_roundtrips_byte_for_byte() {
+    let cfg = cfg();
+    let ws = skewed_store(&cfg, SEED);
+    let cm = cost_model(&cfg, &ws);
+    let set = frontier::sweep(
+        &cm,
+        cfg.name,
+        "hessian(closed-form)",
+        "accuracy",
+        &[2.0, 2.5, 3.0, 3.5, 4.0],
+        3.0,
+        true,
+        "builtin",
+    )
+    .unwrap();
+    let dir1 = tmp_dir("rt1");
+    set.save(&dir1).unwrap();
+    let loaded = FrontierSet::load(&dir1).unwrap();
+    assert_eq!(loaded, set, "frontier set must reload identically");
+
+    // byte-for-byte: re-saving the loaded set reproduces every file
+    let dir2 = tmp_dir("rt2");
+    loaded.save(&dir2).unwrap();
+    let mut files = vec!["frontier.json".to_string(), "best.json".into()];
+    files.extend(set.meta.points.iter().map(|p| p.file.clone()));
+    for f in files {
+        let a = std::fs::read(dir1.join(&f)).unwrap();
+        let b = std::fs::read(dir2.join(&f)).unwrap();
+        assert_eq!(a, b, "{f} is not byte-stable");
+    }
+    // the best map satisfies the requested budget
+    assert!(set.best_map().map.mean_bits() <= 3.0 + 1e-9);
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// Satellite: corrupt/partial frontier directories are typed errors.
+#[test]
+fn corrupt_frontier_dirs_are_typed_errors() {
+    let cfg = cfg();
+    let ws = skewed_store(&cfg, SEED);
+    let cm = cost_model(&cfg, &ws);
+    let set = frontier::sweep(
+        &cm,
+        cfg.name,
+        "hessian(closed-form)",
+        "accuracy",
+        &[2.0, 3.0, 4.0],
+        3.0,
+        false,
+        "builtin",
+    )
+    .unwrap();
+
+    // missing frontier.json
+    let dir = tmp_dir("corrupt");
+    let err = FrontierSet::load(&dir).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<SearchError>(),
+            Some(SearchError::FrontierMeta { .. })
+        ),
+        "{err}"
+    );
+
+    // a named point file deleted → MissingPoint
+    set.save(&dir).unwrap();
+    std::fs::remove_file(dir.join(&set.meta.points[0].file)).unwrap();
+    let err = FrontierSet::load(&dir).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<SearchError>(),
+            Some(SearchError::MissingPoint { .. })
+        ),
+        "{err}"
+    );
+
+    // a corrupt point file → typed, names the file
+    set.save(&dir).unwrap();
+    std::fs::write(dir.join(&set.meta.points[0].file), "{broken").unwrap();
+    let err = FrontierSet::load(&dir).unwrap_err();
+    match err.downcast_ref::<SearchError>() {
+        Some(SearchError::FrontierMeta { path, .. }) => {
+            assert!(path.contains(&set.meta.points[0].file), "{path}");
+        }
+        other => panic!("expected FrontierMeta, got {other:?}"),
+    }
+
+    // a point for the wrong variant → PointVariant
+    set.save(&dir).unwrap();
+    let other = config::variant("molmoe").unwrap();
+    mopeq::engine::spec::SavedMap {
+        variant: other.name.to_string(),
+        map: PrecisionMap::uniform(&other, 4),
+        provenance: None,
+    }
+    .save(&dir.join(&set.meta.points[0].file))
+    .unwrap();
+    let err = FrontierSet::load(&dir).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SearchError>(),
+        Some(&SearchError::PointVariant {
+            expected: cfg.name.to_string(),
+            found: other.name.to_string(),
+        })
+    );
+
+    // corrupt metadata → FrontierMeta
+    std::fs::write(dir.join("frontier.json"), "[]").unwrap();
+    let err = FrontierSet::load(&dir).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<SearchError>(),
+        Some(SearchError::FrontierMeta { .. })
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance criterion: `search --frontier-out` → `serve --map best`
+/// is bit-exact vs an engine built with `PrecisionSource::Searched` of
+/// the same spec (`EngineBuilder::auto`).
+#[test]
+fn searched_engine_matches_the_frontier_best_map_bit_exact() {
+    let cfg = cfg();
+    // the library-level equivalent of `mopeq search --frontier-out`:
+    // same spec defaults as SearchSpec::avg_bits(3.0), same init
+    // weights the engines below resolve (seed-deterministic)
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), SEED);
+    let spec = SearchSpec::avg_bits(3.0);
+    let imp = hessian_closed_form(&ws, &cfg).unwrap();
+    let cm = CostModel::build(
+        None,
+        &cfg,
+        &ws,
+        &imp,
+        &spec.palette,
+        &spec.probe,
+        &spec.profile,
+        spec.objective,
+        SEED,
+    )
+    .unwrap();
+    let set = frontier::sweep(
+        &cm,
+        cfg.name,
+        &spec.metric.label(),
+        &spec.objective.label(),
+        &[2.0, 2.5, 3.0, 3.5, 4.0],
+        3.0,
+        spec.refine,
+        &spec.profile.source,
+    )
+    .unwrap();
+    let dir = tmp_dir("serve");
+    set.save(&dir).unwrap();
+
+    // engine A: the saved frontier selection (the CLI round-trip path)
+    let engine_map = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::MapFile(dir.join("best.json")))
+        .queue_depth(16)
+        .build()
+        .unwrap();
+    // engine B: the same spec searched at build (EngineBuilder::auto)
+    let engine_auto = Engine::builder(cfg.name)
+        .seed(SEED)
+        .auto(3.0)
+        .queue_depth(16)
+        .build()
+        .unwrap();
+
+    // identical precision maps…
+    let map_a = engine_map.precision_map().unwrap().clone();
+    let map_b = engine_auto.precision_map().unwrap().clone();
+    assert_eq!(map_a, map_b, "frontier best != Searched-built map");
+    assert!(map_b.mean_bits() <= 3.0 + 1e-9);
+    let prov = engine_auto.provenance().unwrap();
+    assert!(prov.granularity.contains("search"), "{}", prov.granularity);
+    assert_eq!(prov.budget, Some(3.0));
+
+    // …identical resident accounting…
+    let ra = engine_map.metrics().resident;
+    let rb = engine_auto.metrics().resident;
+    assert_eq!(ra.expert_accounted_bytes, rb.expert_accounted_bytes);
+    assert_eq!(ra.dense_expert_tensors, 0);
+    assert_eq!(rb.dense_expert_tensors, 0);
+
+    // …and bit-exact serving: same codes → same answers
+    let mut rng = Rng::new(SEED).derive("search-serve");
+    let samples: Vec<Sample> = (0..6)
+        .map(|i| gen_sample(Task::ALL[i % Task::ALL.len()], &cfg, &mut rng))
+        .collect();
+    let (ca, cb) = (engine_map.client(), engine_auto.client());
+    for s in samples {
+        let a = ca.call(s.clone()).unwrap();
+        let b = cb.call(s).unwrap();
+        assert_eq!(
+            a.answer, b.answer,
+            "MapFile and Searched engines diverged"
+        );
+    }
+    engine_map.shutdown().unwrap();
+    engine_auto.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Searched-source validation fails typed at `build()`, before any
+/// worker spawns.
+#[test]
+fn searched_source_invalid_specs_are_typed_at_build() {
+    // budget below the palette floor: the spec grammar's own error
+    let err = Engine::builder("dsvl2_tiny").auto(1.0).build().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SpecError>(),
+        Some(&SpecError::InfeasibleBudget {
+            max_mean_bits: 1.0,
+            min_palette_bits: 2
+        })
+    );
+    // an unpackable palette width: the search layer's own typed error
+    let mut spec = SearchSpec::avg_bits(3.5);
+    spec.palette = vec![2, 4, 5];
+    let err = Engine::builder("dsvl2_tiny")
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Searched(spec))
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SearchError>(),
+        Some(&SearchError::UnpackableWidth { bits: 5 })
+    );
+}
