@@ -4,7 +4,10 @@
 //! (RTN vs SignRound at 4-bit packed: build-time calibration cost vs
 //! steady-state rps/p99), the **worker-count sweep** (the scale-out
 //! axis: N executor replicas over Arc-shared weights), and the
-//! batch-linger policy sweep (throughput vs tail latency).
+//! batch-linger policy sweep (throughput vs tail latency), and a
+//! **network row**: the same packed engine behind the HTTP front-end,
+//! driven by the loopback load generator, so the wire overhead
+//! (rps, client p50/p99) is diffable against the in-process rows.
 //!
 //! Emits `reports/BENCH_serving.json` (one row per configuration:
 //! rps, p50/p99 ns, mean fill, resident expert bytes) so the serving
@@ -20,6 +23,7 @@ use mopeq::engine::spec::{CalibSpec, QuantSpec};
 use mopeq::engine::{Engine, MetricsSnapshot, PrecisionSource, WeightForm};
 use mopeq::importance::hessian_closed_form;
 use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::net::{LoadSpec, NetConfig, NetServer};
 use mopeq::rng::Rng;
 use mopeq::serve::{expert_bytes, BatchPolicy};
 use std::time::{Duration, Instant};
@@ -76,7 +80,8 @@ fn mopeq_map(cfg: &config::ModelConfig, ws: &WeightStore) -> PrecisionMap {
 }
 
 fn main() -> anyhow::Result<()> {
-    let n = if std::env::var_os("MOPEQ_FULL").is_some() { 256 } else { 64 };
+    let full = std::env::var_os("MOPEQ_FULL").is_some();
+    let n = if full { 256 } else { 64 };
     let mut log = BenchLog::new("serving");
     let mut rows_json: Vec<Json> = Vec::new();
 
@@ -227,6 +232,53 @@ fn main() -> anyhow::Result<()> {
             s.batches, s.mean_fill, s.p50, s.p95, s.throughput_rps
         );
         rows_json.push(snap_row(&format!("linger-{linger_ms}ms"), 1, &s));
+    }
+
+    section(
+        "network front-end (loopback HTTP, packed engine): wire \
+         overhead on top of the in-process rows",
+    );
+    {
+        let (_, w) = fresh_store(0);
+        let engine = Engine::builder(cfg.name)
+            .weights(w)
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::Map(mixed.clone()))
+            .workers(2)
+            .queue_depth(n)
+            .build()?;
+        let server = NetServer::spawn(engine, NetConfig::default())?;
+        let addr = server.local_addr().to_string();
+        let spec = LoadSpec {
+            addr,
+            concurrency: 4,
+            duration: Duration::from_secs_f64(if full { 6.0 } else { 2.0 }),
+            ..LoadSpec::default()
+        };
+        let load = mopeq::net::loadgen::run(&spec)?;
+        let s = server.shutdown()?;
+        println!(
+            "net-loopback-packed  {:>4} ok (correct {})  busy {}  \
+             wire p50 {:?}  p99 {:?}  {:>7.1} req/s",
+            load.ok, load.correct, load.busy, load.p50, load.p99, load.rps
+        );
+        // same shape as snap_row, but the latencies are the client's
+        // round-trip times: the delta vs the in-process packed rows IS
+        // the wire overhead
+        rows_json.push(Json::Obj(vec![
+            ("label".into(), Json::Str("net-loopback-packed".into())),
+            ("workers".into(), Json::Num(2.0)),
+            ("requests".into(), Json::Num(load.ok as f64)),
+            ("batches".into(), Json::Num(s.batches as f64)),
+            ("mean_fill".into(), Json::Num(s.mean_fill)),
+            ("rps".into(), Json::Num(load.rps)),
+            ("p50_ns".into(), Json::Num(load.p50.as_nanos() as f64)),
+            ("p99_ns".into(), Json::Num(load.p99.as_nanos() as f64)),
+            (
+                "resident_expert_bytes".into(),
+                Json::Num(s.resident.expert_accounted_bytes as f64),
+            ),
+        ]));
     }
 
     log.put_num("requests_per_row", n as f64);

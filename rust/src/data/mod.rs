@@ -79,6 +79,16 @@ impl Task {
     pub fn id_token(&self) -> usize {
         1 + Task::ALL.iter().position(|t| t == self).unwrap()
     }
+
+    /// Parse a paper-table column label back into its task — the wire
+    /// format's `task` field. Case-insensitive so `"blink"` from a curl
+    /// one-liner matches `"BLINK"`.
+    pub fn from_label(label: &str) -> Option<Task> {
+        Task::ALL
+            .iter()
+            .copied()
+            .find(|t| t.label().eq_ignore_ascii_case(label))
+    }
 }
 
 /// One sample: fixed-length token sequence + visual mask + answer token.

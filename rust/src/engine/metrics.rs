@@ -7,6 +7,8 @@
 //! with the live one.
 
 use crate::coordinator::executor::ResidentReport;
+use crate::jsonx::Json;
+use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -56,6 +58,143 @@ pub struct WorkerSnapshot {
     pub fill_hist: Vec<usize>,
     pub p50: Duration,
     pub p99: Duration,
+}
+
+fn dur_json(d: Duration) -> Json {
+    Json::Num(d.as_nanos() as f64)
+}
+
+fn dur_from(j: &Json) -> Result<Duration> {
+    let ns = j.as_f64()?;
+    if !ns.is_finite() || ns < 0.0 {
+        anyhow::bail!("bad duration: {ns} ns");
+    }
+    Ok(Duration::from_nanos(ns as u64))
+}
+
+impl MetricsSnapshot {
+    /// The `GET /metrics` wire body — every field, durations in
+    /// nanoseconds, per-worker slices included. Key order is fixed, so
+    /// the serialization is byte-stable across a
+    /// [`from_json`](Self::from_json) round-trip (asserted in the unit
+    /// tests; the future traffic-aware reallocation loop diffs these).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("queue_depth".into(), Json::Num(self.queue_depth as f64)),
+            ("submitted".into(), Json::Num(self.submitted as f64)),
+            ("requests".into(), Json::Num(self.requests as f64)),
+            (
+                "rejected_busy".into(),
+                Json::Num(self.rejected_busy as f64),
+            ),
+            (
+                "rejected_deadline".into(),
+                Json::Num(self.rejected_deadline as f64),
+            ),
+            ("batches".into(), Json::Num(self.batches as f64)),
+            ("mean_fill".into(), Json::Num(self.mean_fill)),
+            ("p50_ns".into(), dur_json(self.p50)),
+            ("p95_ns".into(), dur_json(self.p95)),
+            ("p99_ns".into(), dur_json(self.p99)),
+            ("throughput_rps".into(), Json::Num(self.throughput_rps)),
+            ("uptime_ns".into(), dur_json(self.uptime)),
+            ("resident".into(), resident_json(&self.resident)),
+            (
+                "workers".into(),
+                Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        Ok(MetricsSnapshot {
+            queue_depth: j.req("queue_depth")?.as_usize()?,
+            submitted: j.req("submitted")?.as_usize()?,
+            requests: j.req("requests")?.as_usize()?,
+            rejected_busy: j.req("rejected_busy")?.as_usize()?,
+            rejected_deadline: j.req("rejected_deadline")?.as_usize()?,
+            batches: j.req("batches")?.as_usize()?,
+            mean_fill: j.req("mean_fill")?.as_f64()?,
+            p50: dur_from(j.req("p50_ns")?)?,
+            p95: dur_from(j.req("p95_ns")?)?,
+            p99: dur_from(j.req("p99_ns")?)?,
+            throughput_rps: j.req("throughput_rps")?.as_f64()?,
+            uptime: dur_from(j.req("uptime_ns")?)?,
+            resident: resident_from_json(j.req("resident")?)?,
+            workers: j
+                .req("workers")?
+                .as_arr()?
+                .iter()
+                .map(WorkerSnapshot::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl WorkerSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("batches".into(), Json::Num(self.batches as f64)),
+            ("mean_fill".into(), Json::Num(self.mean_fill)),
+            (
+                "fill_hist".into(),
+                Json::Arr(
+                    self.fill_hist
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("p50_ns".into(), dur_json(self.p50)),
+            ("p99_ns".into(), dur_json(self.p99)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerSnapshot> {
+        Ok(WorkerSnapshot {
+            requests: j.req("requests")?.as_usize()?,
+            batches: j.req("batches")?.as_usize()?,
+            mean_fill: j.req("mean_fill")?.as_f64()?,
+            fill_hist: j
+                .req("fill_hist")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            p50: dur_from(j.req("p50_ns")?)?,
+            p99: dur_from(j.req("p99_ns")?)?,
+        })
+    }
+}
+
+fn resident_json(r: &ResidentReport) -> Json {
+    Json::Obj(vec![
+        ("backbone_bytes".into(), Json::Num(r.backbone_bytes as f64)),
+        (
+            "expert_accounted_bytes".into(),
+            Json::Num(r.expert_accounted_bytes as f64),
+        ),
+        (
+            "expert_heap_bytes".into(),
+            Json::Num(r.expert_heap_bytes as f64),
+        ),
+        (
+            "dense_expert_tensors".into(),
+            Json::Num(r.dense_expert_tensors as f64),
+        ),
+        ("shared_bytes".into(), Json::Num(r.shared_bytes as f64)),
+    ])
+}
+
+fn resident_from_json(j: &Json) -> Result<ResidentReport> {
+    Ok(ResidentReport {
+        backbone_bytes: j.req("backbone_bytes")?.as_usize()?,
+        expert_accounted_bytes: j.req("expert_accounted_bytes")?.as_usize()?,
+        expert_heap_bytes: j.req("expert_heap_bytes")?.as_usize()?,
+        dense_expert_tensors: j.req("dense_expert_tensors")?.as_usize()?,
+        shared_bytes: j.req("shared_bytes")?.as_usize()?,
+    })
 }
 
 /// Per-worker mutable log (one `Mutex` each — workers never contend
@@ -231,5 +370,86 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_fill, 0.0);
         assert_eq!(s.p99, Duration::ZERO);
+    }
+
+    /// A realistic populated snapshot (odd fills, non-integer mean_fill
+    /// and rps, empty + ragged fill histograms, non-zero residency).
+    fn busy_snapshot() -> MetricsSnapshot {
+        let m = Metrics::new(3);
+        for _ in 0..9 {
+            m.count_submitted();
+        }
+        m.count_busy();
+        m.count_busy();
+        m.count_deadline();
+        m.set_resident(ResidentReport {
+            backbone_bytes: 123_456,
+            expert_accounted_bytes: 7_890,
+            expert_heap_bytes: 8_000,
+            dense_expert_tensors: 0,
+            shared_bytes: 131_456,
+        });
+        let us = Duration::from_micros(1);
+        m.record_batch(0, 3, &[137 * us, 21 * us, 999 * us]);
+        m.record_batch(0, 1, &[5 * us]);
+        m.record_batch(2, 4, &[us, 2 * us, 3 * us, 4 * us]);
+        m.snapshot(2)
+    }
+
+    #[test]
+    fn snapshot_json_round_trip_is_byte_stable() {
+        // to_json → string → parse → from_json → to_json → string must
+        // reproduce the exact bytes: this is what `/metrics` returns and
+        // what the traffic-aware reallocation loop will diff
+        for s in [busy_snapshot(), Metrics::new(1).snapshot(0)] {
+            let wire = s.to_json().to_string();
+            let parsed = crate::jsonx::Json::parse(&wire).unwrap();
+            let back = MetricsSnapshot::from_json(&parsed).unwrap();
+            assert_eq!(
+                back.to_json().to_string(),
+                wire,
+                "metrics wire body must round-trip byte-for-byte"
+            );
+            // spot-check typed equality on the load-bearing fields
+            assert_eq!(back.requests, s.requests);
+            assert_eq!(back.submitted, s.submitted);
+            assert_eq!(back.rejected_busy, s.rejected_busy);
+            assert_eq!(back.p99, s.p99);
+            assert_eq!(back.mean_fill, s.mean_fill);
+            assert_eq!(back.throughput_rps, s.throughput_rps);
+            assert_eq!(back.workers.len(), s.workers.len());
+            for (a, b) in back.workers.iter().zip(&s.workers) {
+                assert_eq!(a.fill_hist, b.fill_hist);
+                assert_eq!(a.requests, b.requests);
+                assert_eq!(a.p50, b.p50);
+            }
+            assert_eq!(
+                back.resident.shared_bytes,
+                s.resident.shared_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_from_json_rejects_malformed_bodies() {
+        use crate::jsonx::Json;
+        // missing field
+        let mut j = busy_snapshot().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "requests");
+        }
+        assert!(MetricsSnapshot::from_json(&j).is_err());
+        // negative duration
+        let mut j = busy_snapshot().to_json();
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "p50_ns" {
+                    *v = Json::Num(-5.0);
+                }
+            }
+        }
+        assert!(MetricsSnapshot::from_json(&j).is_err());
+        // wrong shape entirely
+        assert!(MetricsSnapshot::from_json(&Json::Arr(vec![])).is_err());
     }
 }

@@ -53,10 +53,12 @@
 
 pub mod metrics;
 pub(crate) mod queue;
+pub mod serve_config;
 pub mod spec;
 mod worker;
 
 pub use metrics::{MetricsSnapshot, WorkerSnapshot};
+pub use serve_config::ServeConfig;
 pub use spec::{
     AllocPolicy, AvgBitsBudget, CalibSpec, PreparedWeights, Provenance,
     QuantSpec, SavedMap, SpecError,
@@ -149,6 +151,78 @@ pub enum Rejected {
     Deadline,
     /// the engine is shutting down (or has shut down)
     Closed,
+}
+
+impl Rejected {
+    /// Stable machine-readable code — the **wire contract** (DESIGN.md
+    /// §Network serving documents the full mapping table). These strings
+    /// are load-bearing for network clients: never rename them.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Rejected::Busy { .. } => "busy",
+            Rejected::Deadline => "deadline",
+            Rejected::Closed => "closed",
+        }
+    }
+
+    /// HTTP status the network front-end answers this rejection with:
+    /// 429 Too Many Requests / 504 Gateway Timeout / 503 Service
+    /// Unavailable.
+    pub fn status(&self) -> u16 {
+        match self {
+            Rejected::Busy { .. } => 429,
+            Rejected::Deadline => 504,
+            Rejected::Closed => 503,
+        }
+    }
+
+    /// Coarse client back-off hint for [`Rejected::Busy`]: the queue
+    /// must drain `depth` jobs before a retry can be admitted, so the
+    /// hint scales with the observed depth (5 ms per queued job, clamped
+    /// to [10 ms, 1 s]). `None` for the non-retryable rejections.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            Rejected::Busy { depth } => Some(Duration::from_millis(
+                (*depth as u64 * 5).clamp(10, 1_000),
+            )),
+            Rejected::Deadline | Rejected::Closed => None,
+        }
+    }
+
+    /// The machine-readable wire body (without the `{"error": …}`
+    /// envelope the HTTP front-end wraps it in): stable `code`, HTTP
+    /// `status`, the `Display` message, plus `depth` / `retry_after_ms`
+    /// for `Busy`.
+    pub fn to_json(&self) -> crate::jsonx::Json {
+        use crate::jsonx::Json;
+        let mut obj = vec![
+            ("code".to_string(), Json::Str(self.code().to_string())),
+            ("status".to_string(), Json::Num(self.status() as f64)),
+            ("message".to_string(), Json::Str(self.to_string())),
+        ];
+        if let Rejected::Busy { depth } = self {
+            obj.push(("depth".to_string(), Json::Num(*depth as f64)));
+        }
+        if let Some(hint) = self.retry_after() {
+            obj.push((
+                "retry_after_ms".to_string(),
+                Json::Num(hint.as_millis() as f64),
+            ));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse a wire body back into the typed rejection — what the
+    /// load-generator (and any Rust client) uses, so the in-process
+    /// matchers keep working across the network boundary.
+    pub fn from_json(j: &crate::jsonx::Json) -> Result<Rejected> {
+        Ok(match j.req("code")?.as_str()? {
+            "busy" => Rejected::Busy { depth: j.req("depth")?.as_usize()? },
+            "deadline" => Rejected::Deadline,
+            "closed" => Rejected::Closed,
+            code => bail!("unknown rejection code `{code}`"),
+        })
+    }
 }
 
 impl std::fmt::Display for Rejected {
@@ -492,6 +566,14 @@ impl Engine {
         self.shared.metrics.snapshot(self.shared.queue.len())
     }
 
+    /// A cheap `Send + Clone` handle onto the live telemetry (an `Arc`
+    /// clone, like [`client`](Engine::client)) — what the network
+    /// front-end's connection threads serve `GET /metrics` from without
+    /// borrowing the engine itself.
+    pub fn metrics_handle(&self) -> MetricsHandle {
+        MetricsHandle { shared: self.shared.clone() }
+    }
+
     /// Stop admissions, drain every queued job through the workers,
     /// join them, and return the final snapshot.
     pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
@@ -524,6 +606,21 @@ impl Drop for Engine {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// A live-telemetry handle detached from the [`Engine`]'s lifetime
+/// borrow: snapshots stay consistent while serving and keep working
+/// during shutdown drain (they read the same counters
+/// [`Engine::metrics`] does).
+#[derive(Clone)]
+pub struct MetricsHandle {
+    shared: Arc<Shared>,
+}
+
+impl MetricsHandle {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot(self.shared.queue.len())
     }
 }
 
@@ -587,5 +684,75 @@ impl Ticket {
             Ok(reply) => reply,
             Err(_) => Err(Rejected::Closed),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonx::Json;
+
+    #[test]
+    fn rejected_wire_contract_is_stable() {
+        // these (code, status) pairs are the published wire contract —
+        // a change here breaks deployed network clients
+        let cases = [
+            (Rejected::Busy { depth: 3 }, "busy", 429),
+            (Rejected::Deadline, "deadline", 504),
+            (Rejected::Closed, "closed", 503),
+        ];
+        for (r, code, status) in cases {
+            assert_eq!(r.code(), code);
+            assert_eq!(r.status(), status);
+        }
+    }
+
+    #[test]
+    fn rejected_json_round_trips_and_carries_the_busy_hint() {
+        for r in [
+            Rejected::Busy { depth: 7 },
+            Rejected::Busy { depth: 0 },
+            Rejected::Busy { depth: 100_000 },
+            Rejected::Deadline,
+            Rejected::Closed,
+        ] {
+            let j = r.to_json();
+            // in-process matchers survive the wire boundary
+            assert_eq!(Rejected::from_json(&j).unwrap(), r);
+            // the body re-parses from its own serialization
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Rejected::from_json(&reparsed).unwrap(), r);
+            assert_eq!(
+                reparsed.req("message").unwrap().as_str().unwrap(),
+                r.to_string(),
+                "Display strings stay the wire message"
+            );
+        }
+        let busy = Rejected::Busy { depth: 7 }.to_json();
+        let hint = busy.req("retry_after_ms").unwrap().as_f64().unwrap();
+        assert_eq!(hint, 35.0, "5 ms per queued job");
+        let floor = Rejected::Busy { depth: 0 }.to_json();
+        assert_eq!(
+            floor.req("retry_after_ms").unwrap().as_f64().unwrap(),
+            10.0,
+            "hint floor"
+        );
+        let ceil = Rejected::Busy { depth: 100_000 }.to_json();
+        assert_eq!(
+            ceil.req("retry_after_ms").unwrap().as_f64().unwrap(),
+            1000.0,
+            "hint ceiling"
+        );
+        assert!(Rejected::Deadline.to_json().get("retry_after_ms").is_none());
+        assert!(Rejected::Deadline.retry_after().is_none());
+    }
+
+    #[test]
+    fn rejected_from_json_fails_typed_on_garbage() {
+        let bad = Json::parse(r#"{"code":"explode"}"#).unwrap();
+        assert!(Rejected::from_json(&bad).is_err());
+        let busy_no_depth = Json::parse(r#"{"code":"busy"}"#).unwrap();
+        assert!(Rejected::from_json(&busy_no_depth).is_err());
+        assert!(Rejected::from_json(&Json::Null).is_err());
     }
 }

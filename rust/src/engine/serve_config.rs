@@ -1,0 +1,731 @@
+//! Declarative serving deployments: [`ServeConfig`] collapses the
+//! `mopeq serve` flag sprawl (`--packed/--map/--quantizer/--workers/
+//! --queue-depth/--linger-ms/…`) into one struct with jsonx load/save —
+//! `mopeq serve --config serve.json` (flags override the file), and
+//! [`EngineBuilder::from_config`] so the CLI, the tests, and the
+//! network front-end all construct engines through the **identical**
+//! decision tree:
+//!
+//! - `map` set → [`PrecisionSource::MapFile`] (conflicting allocation
+//!   fields fail typed — a map file IS the allocation);
+//! - `packed` or any allocation field set →
+//!   [`PrecisionSource::Allocated`] with the same flag semantics
+//!   `mopeq allocate` has (no field = the paper default);
+//! - otherwise the fp16 reference.
+//!
+//! Unknown JSON keys fail typed (the config-file equivalent of the
+//! CLI's `check_known` typo guard); missing keys take their defaults,
+//! so a hand-written `{"model": "molmoe", "packed": true}` is a
+//! complete config.
+
+use crate::cli::Args;
+use crate::cluster::Granularity;
+use crate::coordinator::{Quantizer, SignRoundConfig};
+use crate::engine::spec::{
+    AllocPolicy, AvgBitsBudget, CalibSpec, Estimator, Metric, QuantSpec,
+};
+use crate::engine::{Engine, EngineBuilder, PrecisionSource, WeightForm};
+use crate::jsonx::Json;
+use crate::serve::BatchPolicy;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// One serving deployment, declaratively: what `mopeq serve`'s flags
+/// describe, as a saveable/loadable value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub model: String,
+    pub seed: u64,
+    /// serve straight from bit-packed codes (`WeightForm::Packed`);
+    /// false with a quantizing source = the legacy qdq→f32 form
+    pub packed: bool,
+    /// a `SavedMap` JSON artifact (`mopeq allocate --out`) — exclusive
+    /// with the allocation fields below
+    pub map: Option<PathBuf>,
+    /// `rtn` | `signround` | `gptq` | `awq`
+    pub quantizer: String,
+    /// GPTQ relative dampening (used only by `quantizer = "gptq"`)
+    pub damp: f64,
+    /// AWQ scaling exponent (used only by `quantizer = "awq"`)
+    pub alpha: f64,
+    pub calib_batches: usize,
+    pub calib_rows: usize,
+    /// `frequency` | `hessian` | `hybrid`; `None` = the paper default
+    /// (closed-form Hessian)
+    pub metric: Option<String>,
+    /// `layer` | `model`; `None` = model-wise
+    pub granularity: Option<String>,
+    /// candidate bit widths; `None` = the paper's {2,3,4}
+    pub palette: Option<Vec<u8>>,
+    /// average-bits cap ([`AvgBitsBudget`])
+    pub budget: Option<f64>,
+    /// Hutchinson probes when `metric` uses the estimator
+    pub hutchinson_samples: usize,
+    /// use the exact closed-form trace instead of Hutchinson
+    pub closed_form_hessian: bool,
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub linger_ms: u64,
+    /// `addr:port` for the HTTP front-end (`mopeq serve --listen`);
+    /// `None` = the in-process demo loop
+    pub listen: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let calib = CalibSpec::default();
+        ServeConfig {
+            model: "dsvl2_tiny".into(),
+            seed: 0,
+            packed: false,
+            map: None,
+            quantizer: "rtn".into(),
+            damp: 0.01,
+            alpha: 0.5,
+            calib_batches: calib.batches,
+            calib_rows: calib.rows,
+            metric: None,
+            granularity: None,
+            palette: None,
+            budget: None,
+            hutchinson_samples: 8,
+            closed_form_hessian: false,
+            workers: 1,
+            queue_depth: 128,
+            linger_ms: 2,
+            listen: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Whether any allocation field is set — the config equivalent of
+    /// the CLI's "any allocation flag present means the user asked for
+    /// an allocated map".
+    pub fn has_alloc(&self) -> bool {
+        self.metric.is_some()
+            || self.granularity.is_some()
+            || self.palette.is_some()
+            || self.budget.is_some()
+    }
+
+    fn spec_metric(&self) -> Result<Metric> {
+        let estimator = if self.closed_form_hessian {
+            Estimator::ClosedForm
+        } else {
+            Estimator::Hutchinson { samples: self.hutchinson_samples }
+        };
+        Ok(match self.metric.as_deref() {
+            None => AllocPolicy::default().metric,
+            Some("frequency") | Some("af") => {
+                Metric::Frequency { batches: self.calib_batches }
+            }
+            Some("hessian") => Metric::Hessian(estimator),
+            Some("hybrid") => Metric::Hybrid {
+                batches: self.calib_batches,
+                estimator,
+            },
+            Some(m) => {
+                bail!("unknown metric `{m}` (frequency|hessian|hybrid)")
+            }
+        })
+    }
+
+    fn alloc_policy(&self) -> Result<AllocPolicy> {
+        let granularity = match self.granularity.as_deref() {
+            None | Some("model") => Granularity::ModelWise,
+            Some("layer") => Granularity::LayerWise,
+            Some(g) => bail!("unknown granularity `{g}` (layer|model)"),
+        };
+        Ok(AllocPolicy {
+            metric: self.spec_metric()?,
+            granularity,
+            palette: self
+                .palette
+                .clone()
+                .unwrap_or_else(|| AllocPolicy::default().palette),
+            budget: self
+                .budget
+                .map(|max_mean_bits| AvgBitsBudget { max_mean_bits }),
+        })
+    }
+
+    /// The precision source this config describes (the serve decision
+    /// tree — see the module docs).
+    pub fn precision(&self) -> Result<PrecisionSource> {
+        if let Some(map) = &self.map {
+            if self.has_alloc() {
+                bail!(
+                    "`map` loads a finished allocation; drop metric/\
+                     granularity/palette/budget (or drop `map` to \
+                     allocate from those fields)"
+                );
+            }
+            return Ok(PrecisionSource::MapFile(map.clone()));
+        }
+        if self.packed || self.has_alloc() {
+            return Ok(PrecisionSource::Allocated(self.alloc_policy()?));
+        }
+        Ok(PrecisionSource::Reference)
+    }
+
+    /// The weight form: packed when asked, fp16 for the bare reference,
+    /// qdq→f32 for a quantizing source without `packed`.
+    pub fn weight_form(&self) -> Result<WeightForm> {
+        Ok(if self.packed {
+            WeightForm::Packed
+        } else if matches!(self.precision()?, PrecisionSource::Reference) {
+            WeightForm::Fp16
+        } else {
+            WeightForm::DequantizedF32
+        })
+    }
+
+    /// The quantization spec (`quantizer` + calibration capture).
+    pub fn quant_spec(&self) -> Result<QuantSpec> {
+        let quantizer = match self.quantizer.as_str() {
+            "rtn" => Quantizer::Rtn,
+            "signround" => Quantizer::SignRound(SignRoundConfig::default()),
+            "gptq" => Quantizer::Gptq { damp: self.damp },
+            "awq" => Quantizer::Awq { alpha: self.alpha as f32 },
+            q => bail!("unknown quantizer `{q}` (rtn|signround|gptq|awq)"),
+        };
+        let calib = quantizer.needs_calib().then_some(CalibSpec {
+            batches: self.calib_batches,
+            rows: self.calib_rows,
+        });
+        Ok(QuantSpec { quantizer, calib })
+    }
+
+    /// Validate the whole config without building anything — every
+    /// error `EngineBuilder::from_config` would raise from the config
+    /// fields alone, raised eagerly.
+    pub fn validate(&self) -> Result<()> {
+        let precision = self.precision()?;
+        let quant = self.quant_spec()?;
+        if matches!(precision, PrecisionSource::Reference)
+            && !matches!(quant.quantizer, Quantizer::Rtn)
+        {
+            bail!(
+                "quantizer `{}` only applies to a quantized deployment — \
+                 set `packed`, `map`, or an allocation field \
+                 (metric/granularity/palette/budget)",
+                self.quantizer
+            );
+        }
+        self.weight_form()?;
+        quant.validate()?;
+        Ok(())
+    }
+
+    // --- jsonx (de)serialization -------------------------------------
+
+    /// Serialize every field (including defaults) in fixed key order —
+    /// the round-trip is byte-stable, so saved configs diff cleanly.
+    pub fn to_json(&self) -> Json {
+        fn opt_str(v: &Option<String>) -> Json {
+            v.as_ref().map_or(Json::Null, |s| Json::Str(s.clone()))
+        }
+        Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.clone())),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("packed".into(), Json::Bool(self.packed)),
+            (
+                "map".into(),
+                self.map.as_ref().map_or(Json::Null, |p| {
+                    Json::Str(p.display().to_string())
+                }),
+            ),
+            ("quantizer".into(), Json::Str(self.quantizer.clone())),
+            ("damp".into(), Json::Num(self.damp)),
+            ("alpha".into(), Json::Num(self.alpha)),
+            (
+                "calib_batches".into(),
+                Json::Num(self.calib_batches as f64),
+            ),
+            ("calib_rows".into(), Json::Num(self.calib_rows as f64)),
+            ("metric".into(), opt_str(&self.metric)),
+            ("granularity".into(), opt_str(&self.granularity)),
+            (
+                "palette".into(),
+                self.palette.as_ref().map_or(Json::Null, |p| {
+                    Json::Arr(
+                        p.iter().map(|&b| Json::Num(b as f64)).collect(),
+                    )
+                }),
+            ),
+            (
+                "budget".into(),
+                self.budget.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "hutchinson_samples".into(),
+                Json::Num(self.hutchinson_samples as f64),
+            ),
+            (
+                "closed_form_hessian".into(),
+                Json::Bool(self.closed_form_hessian),
+            ),
+            ("workers".into(), Json::Num(self.workers as f64)),
+            ("queue_depth".into(), Json::Num(self.queue_depth as f64)),
+            ("linger_ms".into(), Json::Num(self.linger_ms as f64)),
+            ("listen".into(), opt_str(&self.listen)),
+        ])
+    }
+
+    /// Deserialize: missing keys take their defaults (partial configs
+    /// are valid), unknown keys fail typed (the typo guard).
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        const KNOWN: [&str; 19] = [
+            "model",
+            "seed",
+            "packed",
+            "map",
+            "quantizer",
+            "damp",
+            "alpha",
+            "calib_batches",
+            "calib_rows",
+            "metric",
+            "granularity",
+            "palette",
+            "budget",
+            "hutchinson_samples",
+            "closed_form_hessian",
+            "workers",
+            "queue_depth",
+            "linger_ms",
+            "listen",
+        ];
+        for (k, _) in j.as_obj()? {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!(
+                    "unknown serve-config key `{k}` (known: {})",
+                    KNOWN.join(", ")
+                );
+            }
+        }
+        let mut sc = ServeConfig::default();
+        let get = |key: &str| match j.get(key) {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v),
+        };
+        if let Some(v) = get("model") {
+            sc.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("seed") {
+            sc.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = get("packed") {
+            sc.packed = as_bool(v)?;
+        }
+        if let Some(v) = get("map") {
+            sc.map = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = get("quantizer") {
+            sc.quantizer = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("damp") {
+            sc.damp = v.as_f64()?;
+        }
+        if let Some(v) = get("alpha") {
+            sc.alpha = v.as_f64()?;
+        }
+        if let Some(v) = get("calib_batches") {
+            sc.calib_batches = v.as_usize()?;
+        }
+        if let Some(v) = get("calib_rows") {
+            sc.calib_rows = v.as_usize()?;
+        }
+        if let Some(v) = get("metric") {
+            sc.metric = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = get("granularity") {
+            sc.granularity = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = get("palette") {
+            let widths = v
+                .as_arr()?
+                .iter()
+                .map(|b| {
+                    let b = b.as_usize()?;
+                    if b > u8::MAX as usize {
+                        bail!("palette width {b} out of range");
+                    }
+                    Ok(b as u8)
+                })
+                .collect::<Result<Vec<u8>>>()?;
+            sc.palette = Some(widths);
+        }
+        if let Some(v) = get("budget") {
+            sc.budget = Some(v.as_f64()?);
+        }
+        if let Some(v) = get("hutchinson_samples") {
+            sc.hutchinson_samples = v.as_usize()?;
+        }
+        if let Some(v) = get("closed_form_hessian") {
+            sc.closed_form_hessian = as_bool(v)?;
+        }
+        if let Some(v) = get("workers") {
+            sc.workers = v.as_usize()?;
+        }
+        if let Some(v) = get("queue_depth") {
+            sc.queue_depth = v.as_usize()?;
+        }
+        if let Some(v) = get("linger_ms") {
+            sc.linger_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = get("listen") {
+            sc.listen = Some(v.as_str()?.to_string());
+        }
+        Ok(sc)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        ServeConfig::from_json(&j)
+            .map_err(|e| anyhow!("in {}: {e}", path.display()))
+    }
+
+    // --- CLI merge ----------------------------------------------------
+
+    /// Overlay present CLI flags onto this config — the "flags override
+    /// file" contract of `mopeq serve --config`. Flag-level guards
+    /// (quantizer-specific knobs on the wrong quantizer) fire here,
+    /// after the merge, so `--damp` over a `"quantizer": "gptq"` file
+    /// is accepted while `--damp` over an RTN deployment still fails.
+    pub fn apply_flags(&mut self, args: &Args) -> Result<()> {
+        if let Some(m) = args.flags.get("model") {
+            self.model = m.clone();
+        }
+        self.seed = args.u64_flag("seed", self.seed)?;
+        if args.switch("packed") {
+            self.packed = true;
+        }
+        if let Some(m) = args.flags.get("map") {
+            self.map = Some(PathBuf::from(m));
+        }
+        if let Some(q) = args.flags.get("quantizer") {
+            self.quantizer = q.clone();
+        }
+        self.damp = args.f64_flag("damp", self.damp)?;
+        self.alpha = args.f64_flag("alpha", self.alpha)?;
+        self.calib_batches =
+            args.usize_flag("calib-batches", self.calib_batches)?;
+        self.calib_rows = args.usize_flag("calib-rows", self.calib_rows)?;
+        if let Some(m) = args.flags.get("metric") {
+            self.metric = Some(m.clone());
+        }
+        if let Some(g) = args.flags.get("granularity") {
+            self.granularity = Some(g.clone());
+        }
+        if let Some(csv) = args.flags.get("palette") {
+            let widths = csv
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<u8>()
+                        .map_err(|_| anyhow!("--palette: bad width `{s}`"))
+                })
+                .collect::<Result<Vec<u8>>>()?;
+            self.palette = Some(widths);
+        }
+        if args.flags.contains_key("budget") {
+            self.budget = Some(args.f64_flag("budget", 0.0)?);
+        }
+        self.hutchinson_samples =
+            args.usize_flag("hutchinson-samples", self.hutchinson_samples)?;
+        if args.switch("closed-form-hessian") {
+            self.closed_form_hessian = true;
+        }
+        // estimator knobs are a request for the estimator-backed metric
+        // (the CLI's historical semantics) — they must never be
+        // accepted-but-ignored under the default closed-form metric
+        if self.metric.is_none()
+            && (args.flags.contains_key("hutchinson-samples")
+                || args.switch("closed-form-hessian"))
+        {
+            self.metric = Some("hessian".into());
+        }
+        self.workers = args.usize_flag("workers", self.workers)?;
+        self.queue_depth = args.usize_flag("queue-depth", self.queue_depth)?;
+        self.linger_ms = args.u64_flag("linger-ms", self.linger_ms)?;
+        if let Some(l) = args.flags.get("listen") {
+            self.listen = Some(l.clone());
+        }
+        // quantizer-specific flags on the wrong (merged) quantizer
+        if args.flags.contains_key("damp") && self.quantizer != "gptq" {
+            bail!("--damp only applies to --quantizer gptq");
+        }
+        if args.flags.contains_key("alpha") && self.quantizer != "awq" {
+            bail!("--alpha only applies to --quantizer awq");
+        }
+        // a map file IS the allocation — reject a flag-level mix even
+        // when the map came from the file and the metric from a flag
+        if self.map.is_some() && self.has_alloc() {
+            bail!(
+                "--map loads a finished allocation; drop --metric/\
+                 --granularity/--palette/--budget (or drop --map to \
+                 allocate from those flags)"
+            );
+        }
+        Ok(())
+    }
+}
+
+fn as_bool(j: &Json) -> Result<bool> {
+    match j {
+        Json::Bool(b) => Ok(*b),
+        _ => bail!("not a bool: {j:?}"),
+    }
+}
+
+impl EngineBuilder {
+    /// One deployment decision tree for every consumer: the CLI's
+    /// `mopeq serve`, the network front-end, and the tests all turn a
+    /// [`ServeConfig`] into a builder here, so "the same config" can
+    /// never mean two different engines. Weights are threaded
+    /// separately ([`EngineBuilder::weights`]) — the config describes
+    /// the deployment shape, not the checkpoint.
+    pub fn from_config(sc: &ServeConfig) -> Result<EngineBuilder> {
+        sc.validate()?;
+        Ok(Engine::builder(&sc.model)
+            .seed(sc.seed)
+            .weight_form(sc.weight_form()?)
+            .precision(sc.precision()?)
+            .quantizer(sc.quant_spec()?)
+            .workers(sc.workers)
+            .queue_depth(sc.queue_depth)
+            .batch_policy(BatchPolicy {
+                max_linger: Duration::from_millis(sc.linger_ms),
+            }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_stable() {
+        let mut sc = ServeConfig {
+            model: "molmoe".into(),
+            seed: 9,
+            packed: true,
+            quantizer: "gptq".into(),
+            metric: Some("hybrid".into()),
+            granularity: Some("layer".into()),
+            palette: Some(vec![2, 4]),
+            budget: Some(3.25),
+            listen: Some("127.0.0.1:0".into()),
+            ..ServeConfig::default()
+        };
+        for cfg in [sc.clone(), ServeConfig::default(), {
+            sc.map = Some(PathBuf::from("maps/best.json"));
+            sc.metric = None;
+            sc.granularity = None;
+            sc.palette = None;
+            sc.budget = None;
+            sc
+        }] {
+            let wire = cfg.to_json().to_string();
+            let back =
+                ServeConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, cfg);
+            assert_eq!(back.to_json().to_string(), wire, "byte-stable");
+        }
+    }
+
+    #[test]
+    fn partial_configs_default_and_typos_fail_typed() {
+        let j = Json::parse(r#"{"model": "molmoe", "packed": true}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.model, "molmoe");
+        assert!(sc.packed);
+        assert_eq!(sc.workers, 1);
+        assert_eq!(sc.queue_depth, 128);
+
+        let typo = Json::parse(r#"{"worker": 4}"#).unwrap();
+        let err = ServeConfig::from_json(&typo).unwrap_err();
+        assert!(err.to_string().contains("worker"), "{err}");
+    }
+
+    #[test]
+    fn save_load_round_trips_through_a_file() {
+        let dir = std::env::temp_dir().join("mopeq_serve_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        let sc = ServeConfig {
+            packed: true,
+            workers: 2,
+            budget: Some(3.0),
+            ..ServeConfig::default()
+        };
+        sc.save(&path).unwrap();
+        assert_eq!(ServeConfig::load(&path).unwrap(), sc);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flags_override_file_values() {
+        let mut sc = ServeConfig {
+            workers: 2,
+            queue_depth: 64,
+            packed: true,
+            ..ServeConfig::default()
+        };
+        let args = crate::cli::parse(&argv(&[
+            "serve", "--workers", "4", "--linger-ms", "7", "--listen",
+            "127.0.0.1:0",
+        ]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.workers, 4, "flag overrides file");
+        assert_eq!(sc.queue_depth, 64, "absent flag keeps file value");
+        assert_eq!(sc.linger_ms, 7);
+        assert!(sc.packed);
+        assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:0"));
+    }
+
+    #[test]
+    fn estimator_knobs_select_the_estimator_metric() {
+        let mut sc = ServeConfig::default();
+        let args = crate::cli::parse(&argv(&[
+            "serve", "--packed", "--hutchinson-samples", "4",
+        ]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.metric.as_deref(), Some("hessian"));
+        assert_eq!(
+            sc.spec_metric().unwrap(),
+            Metric::Hessian(Estimator::Hutchinson { samples: 4 })
+        );
+        // without knobs, the default stays the paper's closed form
+        assert_eq!(
+            ServeConfig::default().spec_metric().unwrap(),
+            AllocPolicy::default().metric
+        );
+    }
+
+    #[test]
+    fn decision_tree_matches_the_serve_cli() {
+        // bare default = fp16 reference
+        let sc = ServeConfig::default();
+        assert!(matches!(
+            sc.precision().unwrap(),
+            PrecisionSource::Reference
+        ));
+        assert_eq!(sc.weight_form().unwrap(), WeightForm::Fp16);
+        // packed = the paper allocation
+        let sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        match sc.precision().unwrap() {
+            PrecisionSource::Allocated(p) => {
+                assert_eq!(p, AllocPolicy::default());
+            }
+            other => panic!("expected Allocated, got {other:?}"),
+        }
+        assert_eq!(sc.weight_form().unwrap(), WeightForm::Packed);
+        // allocation field without packed = qdq→f32
+        let sc = ServeConfig {
+            budget: Some(3.0),
+            ..ServeConfig::default()
+        };
+        assert!(matches!(
+            sc.precision().unwrap(),
+            PrecisionSource::Allocated(_)
+        ));
+        assert_eq!(sc.weight_form().unwrap(), WeightForm::DequantizedF32);
+        // map is exclusive with allocation fields
+        let sc = ServeConfig {
+            map: Some(PathBuf::from("m.json")),
+            budget: Some(3.0),
+            ..ServeConfig::default()
+        };
+        assert!(sc.precision().is_err());
+        // quantizer needs a quantizing deployment
+        let sc = ServeConfig {
+            quantizer: "gptq".into(),
+            ..ServeConfig::default()
+        };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("quantized deployment"), "{err}");
+        // quantizer typo is a typo error
+        let sc = ServeConfig {
+            packed: true,
+            quantizer: "gtpq".into(),
+            ..ServeConfig::default()
+        };
+        assert!(sc.validate().unwrap_err().to_string().contains("gtpq"));
+    }
+
+    #[test]
+    fn flag_guards_fire_after_the_merge() {
+        // --damp over a gptq config file is fine
+        let mut sc = ServeConfig {
+            packed: true,
+            quantizer: "gptq".into(),
+            ..ServeConfig::default()
+        };
+        let args =
+            crate::cli::parse(&argv(&["serve", "--damp", "0.05"]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.damp, 0.05);
+        // --damp over an RTN deployment still fails
+        let mut sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        let args =
+            crate::cli::parse(&argv(&["serve", "--damp", "0.05"]));
+        assert!(sc.apply_flags(&args).is_err());
+        // map from file + metric from flag is the same conflict as
+        // --map + --metric
+        let mut sc = ServeConfig {
+            map: Some(PathBuf::from("m.json")),
+            ..ServeConfig::default()
+        };
+        let args =
+            crate::cli::parse(&argv(&["serve", "--metric", "hessian"]));
+        assert!(sc.apply_flags(&args).is_err());
+    }
+
+    #[test]
+    fn from_config_builds_the_paper_packed_engine() {
+        let sc = ServeConfig {
+            packed: true,
+            workers: 2,
+            queue_depth: 16,
+            ..ServeConfig::default()
+        };
+        let engine = EngineBuilder::from_config(&sc)
+            .unwrap()
+            .build()
+            .expect("from_config engine build");
+        // identical to the hand-composed paper deployment
+        let manual = Engine::builder("dsvl2_tiny")
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::mopeq())
+            .build()
+            .unwrap();
+        assert_eq!(
+            engine.precision_map().unwrap().bits,
+            manual.precision_map().unwrap().bits,
+            "from_config and the manual builder must resolve the same map"
+        );
+        engine.shutdown().unwrap();
+        manual.shutdown().unwrap();
+    }
+}

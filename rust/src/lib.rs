@@ -34,6 +34,7 @@ pub mod importance;
 pub mod jsonx;
 pub mod linalg;
 pub mod moe;
+pub mod net;
 pub mod proptest_lite;
 pub mod quant;
 pub mod report;

@@ -26,13 +26,16 @@ use mopeq::data::Task;
 use mopeq::engine::spec::{
     AllocPolicy, AvgBitsBudget, CalibSpec, QuantSpec, SavedMap,
 };
-use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::engine::{
+    Engine, EngineBuilder, PrecisionSource, ServeConfig, WeightForm,
+};
+use mopeq::net::{LoadSpec, NetConfig, NetServer};
 use mopeq::moe::{model_size_mb, PrecisionMap, SizePolicy};
 use mopeq::report;
 use mopeq::search::{
     self, CostModel, Objective, SearchBudget, SearchSpec, ThroughputProfile,
 };
-use mopeq::serve::{simulate_offload, BatchPolicy, LinkModel, RoutingDist};
+use mopeq::serve::{simulate_offload, LinkModel, RoutingDist};
 use mopeq::train::{train, TrainConfig};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -52,6 +55,7 @@ fn main() -> Result<()> {
         Some("scorecard") => cmd_scorecard(&args),
         Some("offload") => cmd_offload(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("report") => cmd_report(&args),
         _ => {
             print_usage();
@@ -66,7 +70,7 @@ fn print_usage() {
          usage: mopeq <cmd> [--model <variant>] [flags]\n\
          cmds:  info | train | profile | assign | allocate | search |\n\
          \x20      eval | method | table | scorecard | offload | serve |\n\
-         \x20      report\n\
+         \x20      loadgen | report\n\
          allocate: --metric frequency|hessian|hybrid\n\
          \x20         [--closed-form-hessian] --granularity layer|model\n\
          \x20         --palette 2,3,4 [--budget <mean-bits>]\n\
@@ -79,6 +83,11 @@ fn print_usage() {
          \x20         [--serve-check] [--allow-init-weights]\n\
          serve:    [--packed] [--workers N] [--map map.json]\n\
          \x20         [--quantizer rtn|signround|gptq|awq] + allocate flags\n\
+         \x20         [--config serve.json] [--save-config serve.json]\n\
+         \x20         [--listen 127.0.0.1:0 [--addr-file f] [--serve-secs S]]\n\
+         loadgen:  --addr host:port [--concurrency N] [--duration S]\n\
+         \x20         [--deadline-ms N] [--min-ok N] [--expect-busy]\n\
+         \x20         [--check-metrics] [--bench-out name]\n\
          variants: dsvl2_tiny dsvl2_small dsvl2_base molmoe"
     );
 }
@@ -163,13 +172,6 @@ fn palette_flag(args: &Args) -> Result<Vec<u8>> {
     }
 }
 
-/// Any allocation flag present → the user asked for an allocated map.
-fn has_alloc_flags(args: &Args) -> bool {
-    ["metric", "granularity", "palette", "budget"]
-        .iter()
-        .any(|f| args.flags.contains_key(*f))
-}
-
 /// Estimator knobs — one definition shared by every site that must
 /// honor (never silently drop) them.
 fn estimator_knobs(args: &Args) -> bool {
@@ -192,39 +194,6 @@ fn warn_init_weights(p: &Pipeline, args: &Args) {
             name = p.cfg.name
         );
     }
-}
-
-/// Quantizer + calibration spec from `--quantizer` (+ `--calib-batches`
-/// / `--calib-rows`): rtn (default, calibration-free), signround, gptq,
-/// awq.
-fn quant_spec_flags(args: &Args, p: &Pipeline) -> Result<QuantSpec> {
-    let quantizer = match args.str_flag("quantizer", "rtn").as_str() {
-        "rtn" => Quantizer::Rtn,
-        // same SignRoundConfig the method/table rows use: a too-small
-        // --calib-rows fails typed (SpecError::CalibRows) instead of
-        // silently degrading the rounding search
-        "signround" => Quantizer::SignRound(p.signround),
-        "gptq" => Quantizer::Gptq { damp: args.f64_flag("damp", 0.01)? },
-        "awq" => {
-            Quantizer::Awq { alpha: args.f64_flag("alpha", 0.5)? as f32 }
-        }
-        q => bail!("unknown --quantizer {q} (rtn|signround|gptq|awq)"),
-    };
-    // quantizer-specific knobs must never be accepted-but-ignored
-    if args.flags.contains_key("damp")
-        && !matches!(quantizer, Quantizer::Gptq { .. })
-    {
-        bail!("--damp only applies to --quantizer gptq");
-    }
-    if args.flags.contains_key("alpha")
-        && !matches!(quantizer, Quantizer::Awq { .. })
-    {
-        bail!("--alpha only applies to --quantizer awq");
-    }
-    let calib = quantizer
-        .needs_calib()
-        .then_some(CalibSpec { batches: p.calib_batches, rows: p.calib_rows });
-    Ok(QuantSpec { quantizer, calib })
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -826,74 +795,25 @@ fn cmd_offload(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let p = pipeline(args)?;
-    let n = args.usize_flag("requests", 64)?;
-    let workers = args.usize_flag("workers", 1)?;
-    let queue_depth = args.usize_flag("queue-depth", 128)?;
-    let linger_ms = args.u64_flag("linger-ms", 2)?;
-
-    // one construction path for every deployment shape. The precision
-    // source: `--map file.json` loads a saved allocation (the
-    // allocate→serve round-trip); explicit allocation flags compute one
-    // at build with the same semantics those flags have on
-    // `allocate`/`method`/`table`; bare `--packed` is the paper's MoPEQ
-    // setting (`PrecisionSource::mopeq()`: closed-form Hessian,
-    // model-wise, {2,3,4} — exactly PR 3's behavior). `--quantizer`
-    // picks the quantization function (calibrated ones capture at
-    // build); `--packed` serves straight from the packed codes with no
-    // f32 expert copy.
-    let precision = if let Some(path) = args.flags.get("map") {
-        // a map file IS the allocation — computing a different one from
-        // flags at the same time would silently ignore one of the two
-        if has_alloc_flags(args) || estimator_knobs(args) {
-            bail!(
-                "--map loads a finished allocation; drop --metric/\
-                 --granularity/--palette/--budget/--hutchinson-samples/\
-                 --closed-form-hessian (or drop --map to allocate from \
-                 those flags)"
-            );
-        }
-        PrecisionSource::MapFile(PathBuf::from(path))
-    } else if args.switch("packed")
-        || has_alloc_flags(args)
-        || estimator_knobs(args)
-    {
-        // bare --packed: alloc_policy_flags with no flags is exactly
-        // AllocPolicy::default() — the paper's MoPEQ setting
-        PrecisionSource::Allocated(alloc_policy_flags(args, &p)?)
-    } else {
-        PrecisionSource::Reference
+    // one declarative deployment shape for every serve mode: a config
+    // file loads first, then present flags override it (so a saved
+    // `serve.json` is a baseline, not a straitjacket). The decision
+    // tree — map-file vs allocated vs reference precision, packed vs
+    // qdq weight form, quantizer guards — lives in
+    // `ServeConfig`/`EngineBuilder::from_config`, shared with the
+    // network front-end and the integration tests.
+    let mut sc = match args.flags.get("config") {
+        Some(path) => ServeConfig::load(Path::new(path))?,
+        None => ServeConfig::default(),
     };
-    // parse the quantizer first so a typo errors as a typo, not as a
-    // deployment-shape complaint
-    let quant = quant_spec_flags(args, &p)?;
-    if matches!(precision, PrecisionSource::Reference)
-        && !matches!(quant.quantizer, Quantizer::Rtn)
-    {
-        bail!(
-            "--quantizer only applies to a quantized deployment — add \
-             --packed, --map, or an allocation flag (--metric/\
-             --granularity/--palette/--budget)"
-        );
+    sc.apply_flags(args)?;
+    if let Some(path) = args.flags.get("save-config") {
+        sc.save(Path::new(path))?;
+        println!("wrote {path}");
     }
-    let form = if args.switch("packed") {
-        WeightForm::Packed
-    } else if matches!(precision, PrecisionSource::Reference) {
-        WeightForm::Fp16
-    } else {
-        WeightForm::DequantizedF32
-    };
-    let engine = Engine::builder(p.cfg.name)
+    let p = Pipeline::open(&sc.model, sc.seed)?;
+    let engine = EngineBuilder::from_config(&sc)?
         .weights(p.clone_weights())
-        .seed(p.seed)
-        .weight_form(form)
-        .precision(precision)
-        .quantizer(quant)
-        .workers(workers)
-        .queue_depth(queue_depth)
-        .batch_policy(BatchPolicy {
-            max_linger: Duration::from_millis(linger_ms),
-        })
         .build()?;
     let pmap = engine.precision_map().cloned();
     if let Some(prov) = engine.provenance() {
@@ -909,8 +829,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    // `--listen` switches to the network front-end: the same engine
+    // behind the HTTP/JSON wire protocol instead of the in-process
+    // demo loop.
+    if let Some(addr) = sc.listen.clone() {
+        return serve_network(args, &addr, engine);
+    }
+
+    let n = args.usize_flag("requests", 64)?;
     let client = engine.client();
-    let mut rng = mopeq::rng::Rng::new(p.seed).derive("serve-cli");
+    let mut rng = mopeq::rng::Rng::new(sc.seed).derive("serve-cli");
     let mut pending = Vec::new();
     let mut rejected = 0usize;
     for _ in 0..n {
@@ -1000,6 +928,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
             pmap.mean_bits()
         );
+    }
+    Ok(())
+}
+
+/// The network serving mode of `mopeq serve --listen`. Binds, prints
+/// (and optionally writes) the resolved address — port 0 picks an
+/// ephemeral port, so CI discovers the real one via `--addr-file` —
+/// then serves until `--serve-secs` elapses (forever without it).
+fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
+    let net = NetConfig { addr: addr.to_string(), ..NetConfig::default() };
+    let server = NetServer::spawn(engine, net)?;
+    let local = server.local_addr();
+    println!("listening on http://{local} (POST /v1/infer, GET /metrics, GET /healthz)");
+    if let Some(path) = args.flags.get("addr-file") {
+        std::fs::write(path, local.to_string())?;
+    }
+    let secs = args.f64_flag("serve-secs", 0.0)?;
+    if secs > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(secs));
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let stats = server.shutdown()?;
+    println!(
+        "served {} requests in {} batches (mean fill {:.2}); \
+         {} busy + {} deadline rejections; p50 {:?} p99 {:?} \
+         throughput {:.1} req/s",
+        stats.requests,
+        stats.batches,
+        stats.mean_fill,
+        stats.rejected_busy,
+        stats.rejected_deadline,
+        stats.p50,
+        stats.p99,
+        stats.throughput_rps
+    );
+    Ok(())
+}
+
+/// Closed-loop load generator against a running `mopeq serve --listen`
+/// server. The gating flags (`--min-ok`, `--expect-busy`,
+/// `--check-metrics`) turn it into a CI smoke check; `--bench-out`
+/// writes the run as a `reports/BENCH_serving_<name>.json` network row.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.req_flag("addr")?;
+    let spec = LoadSpec {
+        addr: addr.clone(),
+        concurrency: args.usize_flag("concurrency", 4)?,
+        duration: Duration::from_secs_f64(args.f64_flag("duration", 3.0)?),
+        deadline_ms: match args.flags.get("deadline-ms") {
+            Some(_) => Some(args.u64_flag("deadline-ms", 0)?),
+            None => None,
+        },
+        seed: args.u64_flag("seed", 0)?,
+    };
+    println!(
+        "loadgen: {} connection(s) for {:.1}s against {}",
+        spec.concurrency,
+        spec.duration.as_secs_f64(),
+        spec.addr
+    );
+    let report = mopeq::net::loadgen::run(&spec)?;
+    println!(
+        "ok {} (correct {}), busy {}, deadline {}, closed {}, \
+         transport errors {}",
+        report.ok,
+        report.correct,
+        report.busy,
+        report.deadline,
+        report.closed,
+        report.http_errors
+    );
+    println!(
+        "wire latency p50 {:?}  p95 {:?}  p99 {:?}  throughput {:.1} req/s",
+        report.p50, report.p95, report.p99, report.rps
+    );
+
+    if args.switch("check-metrics") {
+        let snap = mopeq::net::loadgen::fetch_metrics(&addr)?;
+        let per_worker: usize =
+            snap.workers.iter().map(|w| w.requests).sum();
+        if snap.requests != per_worker {
+            bail!(
+                "/metrics inconsistent: requests {} != Σ worker fills {}",
+                snap.requests,
+                per_worker
+            );
+        }
+        println!(
+            "metrics ok: {} served == Σ worker fills across {} worker(s)",
+            snap.requests,
+            snap.workers.len()
+        );
+    }
+    if let Some(name) = args.flags.get("bench-out") {
+        let mut log = mopeq::benchx::BenchLog::new(&format!("serving_{name}"));
+        log.put("loadgen", report.to_json());
+        log.put_num("concurrency", spec.concurrency as f64);
+        let path = log.save()?;
+        println!("wrote {}", path.display());
+    }
+    // gates last, so a failing run still printed its numbers
+    let min_ok = args.usize_flag("min-ok", 0)?;
+    if report.ok < min_ok {
+        bail!("only {} ok replies (wanted >= {min_ok})", report.ok);
+    }
+    if args.switch("expect-busy") && report.busy == 0 {
+        bail!("expected at least one 429 busy rejection, saw none");
     }
     Ok(())
 }

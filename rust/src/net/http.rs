@@ -1,0 +1,514 @@
+//! Minimal HTTP/1.1 framing over blocking `std::io` streams — exactly
+//! the subset the wire protocol needs (no chunked bodies, no
+//! pipelining), with hard limits on every frame so a malformed or
+//! hostile peer costs bounded memory and a typed error, never a panic:
+//! request/header lines ≤ [`MAX_LINE`] bytes, ≤ [`MAX_HEADERS`]
+//! headers, bodies require `Content-Length` ≤ [`MAX_BODY`].
+//! `Expect: 100-continue` is honored (curl sends it for JSON bodies
+//! over 1 KiB). Both directions live here: the server parses requests
+//! and writes responses; the load generator and tests write requests
+//! and parse responses through the same code.
+
+use std::io::{BufRead, Write};
+
+/// Hard cap on one request/status/header line.
+pub const MAX_LINE: usize = 8 * 1024;
+/// Hard cap on the header count of one message.
+pub const MAX_HEADERS: usize = 64;
+/// Hard cap on one message body.
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// Typed framing failure. The connection loop maps `Malformed` → 400
+/// and `TooLarge` → 413 (then closes — framing sync is lost);
+/// `Closed`/`Io` just end the connection.
+#[derive(Debug)]
+pub enum HttpError {
+    /// clean EOF before any bytes of a message (keep-alive close)
+    Closed,
+    /// transport failure, including the idle read timeout
+    Io(std::io::Error),
+    /// unparseable framing → 400
+    Malformed(String),
+    /// a frame over the hard limits → 413
+    TooLarge(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::Io(e) => write!(f, "i/o: {e}"),
+            HttpError::Malformed(m) => write!(f, "malformed http: {m}"),
+            HttpError::TooLarge(m) => write!(f, "oversized http: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// the peer asked for this to be the last message (`Connection:
+    /// close`, or HTTP/1.0 without `keep-alive`)
+    pub close: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one CRLF (or bare-LF) terminated line, capped. `Ok(None)` =
+/// EOF before any byte.
+fn read_line(
+    r: &mut impl BufRead,
+    cap: usize,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    // `take` bounds how much one line can cost before we call it
+    // oversized — `read_until` alone would buffer an unbounded line
+    let n = r
+        .take(cap as u64 + 2)
+        .read_until(b'\n', &mut buf)
+        .map_err(HttpError::Io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(if n > cap {
+            HttpError::TooLarge(format!("line exceeds {cap} bytes"))
+        } else {
+            HttpError::Malformed("connection closed mid-line".into())
+        });
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpError::Malformed("non-UTF-8 header bytes".into()))
+}
+
+/// Headers block shared by requests and responses.
+fn read_headers(
+    r: &mut impl BufRead,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    loop {
+        let Some(line) = read_line(r, MAX_LINE)? else {
+            return Err(HttpError::Malformed("EOF inside headers".into()));
+        };
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::TooLarge(format!(
+                "more than {MAX_HEADERS} headers"
+            )));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Malformed(format!("bad header `{line}`")));
+        };
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+}
+
+fn content_length(
+    headers: &[(String, String)],
+) -> Result<usize, HttpError> {
+    let Some((_, v)) = headers.iter().find(|(k, _)| k == "content-length")
+    else {
+        return Ok(0);
+    };
+    let len: usize = v.trim().parse().map_err(|_| {
+        HttpError::Malformed(format!("bad content-length `{v}`"))
+    })?;
+    if len > MAX_BODY {
+        return Err(HttpError::TooLarge(format!(
+            "body of {len} bytes exceeds the {MAX_BODY}-byte cap"
+        )));
+    }
+    Ok(len)
+}
+
+fn read_body(
+    r: &mut impl BufRead,
+    len: usize,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(HttpError::Io)?;
+    Ok(body)
+}
+
+/// Read one request off a keep-alive connection. `Ok(None)` = the peer
+/// closed cleanly between requests. `w` is the write half of the same
+/// socket, needed only to honor `Expect: 100-continue` before the body
+/// arrives.
+pub fn read_request(
+    r: &mut impl BufRead,
+    w: &mut impl Write,
+) -> Result<Option<Request>, HttpError> {
+    let Some(line) = read_line(r, MAX_LINE)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split(' ');
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && p.starts_with('/') =>
+            {
+                (m.to_string(), p.to_string(), v.to_string())
+            }
+            _ => {
+                return Err(HttpError::Malformed(format!(
+                    "bad request line `{line}`"
+                )))
+            }
+        };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::Malformed(format!(
+            "unsupported version `{version}`"
+        )));
+    }
+    let headers = read_headers(r)?;
+    let mut req = Request {
+        method,
+        path,
+        headers,
+        body: Vec::new(),
+        close: version == "HTTP/1.0",
+    };
+    if let Some(c) = req.header("connection") {
+        if c.eq_ignore_ascii_case("close") {
+            req.close = true;
+        } else if c.eq_ignore_ascii_case("keep-alive") {
+            req.close = false;
+        }
+    }
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::Malformed(
+            "transfer-encoding is not supported — send Content-Length"
+                .into(),
+        ));
+    }
+    let len = content_length(&req.headers)?;
+    if len > 0 {
+        if matches!(req.header("expect"),
+                    Some(e) if e.eq_ignore_ascii_case("100-continue"))
+        {
+            w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .and_then(|_| w.flush())
+                .map_err(HttpError::Io)?;
+        }
+        req.body = read_body(r, len)?;
+    }
+    Ok(Some(req))
+}
+
+/// One response: what the server writes and the client parses back.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response (the only body type the wire protocol emits).
+    pub fn json(status: u16, body: &crate::jsonx::Json) -> Response {
+        Response {
+            status,
+            headers: vec![(
+                "Content-Type".into(),
+                "application/json".into(),
+            )],
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn with_header(
+        mut self,
+        name: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Case-insensitive header lookup (client side: parsed responses
+    /// carry lowercased names, server-built ones whatever was set).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The body parsed as JSON.
+    pub fn json_body(&self) -> anyhow::Result<crate::jsonx::Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| anyhow::anyhow!("non-UTF-8 response body"))?;
+        crate::jsonx::Json::parse(text)
+    }
+
+    /// Serialize onto the wire (status line, headers, `Content-Length`,
+    /// body) and flush.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            status_text(self.status)
+        );
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", self.body.len()));
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrases for every status the wire protocol uses.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Client side: write one request. `body = Some((content_type, bytes))`
+/// adds the entity headers; `extra` rides along verbatim (e.g. the
+/// deadline header).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    host: &str,
+    body: Option<(&str, &[u8])>,
+    extra: &[(String, String)],
+) -> std::io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {host}\r\n");
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    match body {
+        None => head.push_str("\r\n"),
+        Some((ctype, bytes)) => head.push_str(&format!(
+            "Content-Type: {ctype}\r\nContent-Length: {}\r\n\r\n",
+            bytes.len()
+        )),
+    }
+    w.write_all(head.as_bytes())?;
+    if let Some((_, bytes)) = body {
+        w.write_all(bytes)?;
+    }
+    w.flush()
+}
+
+/// Client side: parse one response (status line + headers +
+/// `Content-Length` body). `Err(Closed)` = EOF before the status line.
+pub fn read_response(
+    r: &mut impl BufRead,
+) -> Result<Response, HttpError> {
+    let Some(line) = read_line(r, MAX_LINE)? else {
+        return Err(HttpError::Closed);
+    };
+    let mut parts = line.splitn(3, ' ');
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => {
+            code.parse::<u16>().map_err(|_| {
+                HttpError::Malformed(format!("bad status line `{line}`"))
+            })?
+        }
+        _ => {
+            return Err(HttpError::Malformed(format!(
+                "bad status line `{line}`"
+            )))
+        }
+    };
+    let headers = read_headers(r)?;
+    let len = content_length(&headers)?;
+    let body = read_body(r, len)?;
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonx::Json;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        let mut sink = Vec::new();
+        read_request(&mut Cursor::new(bytes.to_vec()), &mut sink)
+    }
+
+    #[test]
+    fn request_round_trip_with_body_and_headers() {
+        let mut wire = Vec::new();
+        write_request(
+            &mut wire,
+            "POST",
+            "/v1/infer",
+            "127.0.0.1:80",
+            Some(("application/json", br#"{"task":"BLINK","seed":7}"#)),
+            &[("X-Mopeq-Deadline-Ms".into(), "250".into())],
+        )
+        .unwrap();
+        let req = parse(&wire).unwrap().expect("one request");
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert_eq!(req.header("x-mopeq-deadline-ms"), Some("250"));
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body, br#"{"task":"BLINK","seed":7}"#);
+        assert!(!req.close, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn expect_100_continue_is_acknowledged_before_the_body() {
+        let wire = b"POST /v1/infer HTTP/1.1\r\nExpect: 100-continue\r\n\
+                     Content-Length: 2\r\n\r\n{}";
+        let mut sink = Vec::new();
+        let req = read_request(&mut Cursor::new(wire.to_vec()), &mut sink)
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body, b"{}");
+        assert_eq!(sink, b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    #[test]
+    fn eof_between_requests_is_a_clean_close() {
+        assert!(parse(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_fail_typed_never_panic() {
+        let cases: &[&[u8]] = &[
+            b"garbage\r\n\r\n",
+            b"GET\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"GET noslash HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/2.0\r\n\r\n",
+            b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"\xff\xfe / HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1\r\ntruncated",
+        ];
+        for c in cases {
+            assert!(
+                matches!(parse(c), Err(HttpError::Malformed(_))),
+                "expected Malformed for {:?}",
+                String::from_utf8_lossy(c)
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_frames_are_413_shaped() {
+        let long_line =
+            format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE));
+        assert!(matches!(
+            parse(long_line.as_bytes()),
+            Err(HttpError::TooLarge(_))
+        ));
+        let big_body = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        assert!(matches!(
+            parse(big_body.as_bytes()),
+            Err(HttpError::TooLarge(_))
+        ));
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..=MAX_HEADERS {
+            many.push_str(&format!("h{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert!(matches!(
+            parse(many.as_bytes()),
+            Err(HttpError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn connection_close_and_http10_are_detected() {
+        let req =
+            parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+                .unwrap()
+                .unwrap();
+        assert!(req.close);
+        let req = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(req.close, "HTTP/1.0 defaults to close");
+        let req = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.close);
+    }
+
+    #[test]
+    fn response_round_trip_preserves_status_headers_and_body() {
+        let body = Json::Obj(vec![(
+            "answer".into(),
+            Json::Num(17.0),
+        )]);
+        let resp = Response::json(429, &body)
+            .with_header("Retry-After", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        let back = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(back.status, 429);
+        assert_eq!(back.header("retry-after"), Some("1"));
+        assert_eq!(back.json_body().unwrap(), body);
+    }
+
+    #[test]
+    fn two_keepalive_requests_frame_cleanly() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "GET", "/healthz", "h", None, &[]).unwrap();
+        write_request(
+            &mut wire,
+            "POST",
+            "/v1/infer",
+            "h",
+            Some(("application/json", b"{}")),
+            &[],
+        )
+        .unwrap();
+        let mut r = Cursor::new(wire);
+        let mut sink = Vec::new();
+        let first = read_request(&mut r, &mut sink).unwrap().unwrap();
+        assert_eq!(first.path, "/healthz");
+        let second = read_request(&mut r, &mut sink).unwrap().unwrap();
+        assert_eq!(second.path, "/v1/infer");
+        assert_eq!(second.body, b"{}");
+        assert!(read_request(&mut r, &mut sink).unwrap().is_none());
+    }
+}

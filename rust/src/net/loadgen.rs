@@ -1,0 +1,327 @@
+//! Closed-loop load generator over the wire protocol. `concurrency`
+//! worker threads each hold one keep-alive connection (reconnecting on
+//! transport errors) and fire explicit-sample `POST /v1/infer` requests
+//! back-to-back until the clock runs out — so measured throughput is
+//! the server's, not the generator's pacing. Samples are generated
+//! client-side against the shape advertised by `GET /healthz`, which
+//! makes the server's `correct` bit an end-to-end oracle check: the
+//! answer travelled the wire both ways.
+//!
+//! This is both the `mopeq loadgen` subcommand's core and the driver
+//! behind the network rows of `reports/BENCH_serving.json`.
+
+use crate::config::{self, ModelConfig};
+use crate::data::{gen_sample, Task};
+use crate::engine::MetricsSnapshot;
+use crate::jsonx::Json;
+use crate::net::http::{read_response, write_request, Response};
+use crate::net::wire;
+use crate::rng::Rng;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// What to run: where, how hard, for how long.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// server address, e.g. `127.0.0.1:4917`
+    pub addr: String,
+    /// concurrent closed-loop connections
+    pub concurrency: usize,
+    /// wall-clock run length
+    pub duration: Duration,
+    /// per-request deadline to ship in the body, if any
+    pub deadline_ms: Option<u64>,
+    /// sample-stream seed (each worker derives its own stream)
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            addr: String::new(),
+            concurrency: 4,
+            duration: Duration::from_secs(3),
+            deadline_ms: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate outcome of one run. Latencies are client-observed
+/// round-trip times, so they include wire overhead on top of the
+/// engine's own queueing/batching latency.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub ok: usize,
+    pub busy: usize,
+    pub deadline: usize,
+    pub closed: usize,
+    pub http_errors: usize,
+    /// of the `ok` replies, how many the server judged correct
+    pub correct: usize,
+    pub wall: Duration,
+    pub rps: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("ok".into(), Json::Num(self.ok as f64)),
+            ("busy".into(), Json::Num(self.busy as f64)),
+            ("deadline".into(), Json::Num(self.deadline as f64)),
+            ("closed".into(), Json::Num(self.closed as f64)),
+            (
+                "http_errors".into(),
+                Json::Num(self.http_errors as f64),
+            ),
+            ("correct".into(), Json::Num(self.correct as f64)),
+            (
+                "wall_ns".into(),
+                Json::Num(self.wall.as_nanos() as f64),
+            ),
+            ("rps".into(), Json::Num(self.rps)),
+            ("p50_ns".into(), Json::Num(self.p50.as_nanos() as f64)),
+            ("p95_ns".into(), Json::Num(self.p95.as_nanos() as f64)),
+            ("p99_ns".into(), Json::Num(self.p99.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Per-worker tallies, merged after the scope joins.
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    busy: usize,
+    deadline: usize,
+    closed: usize,
+    http_errors: usize,
+    correct: usize,
+    latencies: Vec<Duration>,
+}
+
+/// One GET, parsed body back. Opens a fresh connection per call — these
+/// are control-plane fetches, not the measured path.
+fn fetch_json(addr: &str, path: &str) -> Result<Json> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    write_request(&mut writer, "GET", path, addr, None, &[])?;
+    let resp = read_response(&mut reader)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    if resp.status != 200 {
+        bail!("{path} answered {}", resp.status);
+    }
+    resp.json_body()
+}
+
+/// Discover the served model via `/healthz` (the generator must build
+/// samples of the right shape).
+pub fn fetch_health(addr: &str) -> Result<ModelConfig> {
+    let h = fetch_json(addr, "/healthz")?;
+    config::variant(h.req("variant")?.as_str()?)
+}
+
+/// Fetch and parse the live `/metrics` snapshot.
+pub fn fetch_metrics(addr: &str) -> Result<MetricsSnapshot> {
+    MetricsSnapshot::from_json(&fetch_json(addr, "/metrics")?)
+}
+
+/// Run the load, blocking until `spec.duration` elapses and all
+/// workers have drained.
+pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
+    if spec.concurrency == 0 {
+        bail!("concurrency must be at least 1");
+    }
+    let cfg = fetch_health(&spec.addr)
+        .with_context(|| format!("healthz on {}", spec.addr))?;
+    let started = Instant::now();
+    let end = started + spec.duration;
+    let mut tallies: Vec<Tally> = Vec::with_capacity(spec.concurrency);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(spec.concurrency);
+        for w in 0..spec.concurrency {
+            let cfg = &cfg;
+            joins.push(scope.spawn(move || {
+                worker_loop(spec, cfg, w, end)
+            }));
+        }
+        for j in joins {
+            // a panicked worker loses its tally but must not sink the run
+            if let Ok(t) = j.join() {
+                tallies.push(t);
+            }
+        }
+    });
+    let wall = started.elapsed();
+    let mut report = LoadReport::default();
+    let mut latencies = Vec::new();
+    for t in tallies {
+        report.ok += t.ok;
+        report.busy += t.busy;
+        report.deadline += t.deadline;
+        report.closed += t.closed;
+        report.http_errors += t.http_errors;
+        report.correct += t.correct;
+        latencies.extend(t.latencies);
+    }
+    latencies.sort();
+    report.wall = wall;
+    report.rps = report.ok as f64 / wall.as_secs_f64().max(1e-9);
+    report.p50 = percentile(&latencies, 0.50);
+    report.p95 = percentile(&latencies, 0.95);
+    report.p99 = percentile(&latencies, 0.99);
+    Ok(report)
+}
+
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+fn connect(addr: &str) -> Option<Conn> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone().ok()?);
+    Some(Conn { reader, writer: stream })
+}
+
+fn worker_loop(
+    spec: &LoadSpec,
+    cfg: &ModelConfig,
+    worker: usize,
+    end: Instant,
+) -> Tally {
+    let mut rng = Rng::new(spec.seed).derive(&format!("loadgen-{worker}"));
+    let mut tally = Tally::default();
+    let mut conn: Option<Conn> = None;
+    while Instant::now() < end {
+        if conn.is_none() {
+            conn = connect(&spec.addr);
+            if conn.is_none() {
+                tally.http_errors += 1;
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        }
+        let Some(c) = conn.as_mut() else { continue };
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        let sample = gen_sample(task, cfg, &mut rng);
+        let body =
+            wire::sample_json(&sample, spec.deadline_ms).to_string();
+        let sent = Instant::now();
+        let outcome = write_request(
+            &mut c.writer,
+            "POST",
+            "/v1/infer",
+            &spec.addr,
+            Some(("application/json", body.as_bytes())),
+            &[],
+        )
+        .map_err(|_| ())
+        .and_then(|_| read_response(&mut c.reader).map_err(|_| ()));
+        let resp = match outcome {
+            Ok(resp) => resp,
+            Err(()) => {
+                tally.http_errors += 1;
+                conn = None; // reconnect next round
+                continue;
+            }
+        };
+        record(&mut tally, &resp, sent.elapsed());
+    }
+    tally
+}
+
+fn record(tally: &mut Tally, resp: &Response, rtt: Duration) {
+    match resp.status {
+        200 => {
+            tally.ok += 1;
+            tally.latencies.push(rtt);
+            if let Ok(reply) = resp
+                .json_body()
+                .and_then(|j| wire::reply_from_json(&j))
+            {
+                if reply.correct {
+                    tally.correct += 1;
+                }
+            }
+        }
+        429 => {
+            tally.busy += 1;
+            // honor the server's backoff hint instead of hammering
+            if let Some(ms) = resp
+                .json_body()
+                .ok()
+                .and_then(|j| wire::parse_error(&j).ok())
+                .and_then(|r| r.retry_after())
+            {
+                std::thread::sleep(ms.min(Duration::from_millis(50)));
+            }
+        }
+        504 => tally.deadline += 1,
+        503 => tally.closed += 1,
+        _ => tally.http_errors += 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_monotone_and_empty_safe() {
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+        let lat: Vec<Duration> =
+            (1..=100).map(Duration::from_millis).collect();
+        let (p50, p95, p99) = (
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.95),
+            percentile(&lat, 0.99),
+        );
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(p50, Duration::from_millis(51));
+        assert_eq!(p99, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn report_json_carries_every_counter() {
+        let report = LoadReport {
+            ok: 10,
+            busy: 2,
+            deadline: 1,
+            closed: 0,
+            http_errors: 0,
+            correct: 9,
+            wall: Duration::from_secs(1),
+            rps: 10.0,
+            p50: Duration::from_millis(5),
+            p95: Duration::from_millis(9),
+            p99: Duration::from_millis(12),
+        };
+        let j = report.to_json();
+        assert_eq!(j.req("ok").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(j.req("busy").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("correct").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(
+            j.req("p99_ns").unwrap().as_f64().unwrap(),
+            12e6
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Network serving front-end: an HTTP/1.1 JSON server over
+//! [`Engine`](crate::engine::Engine), written against
+//! `std::net::TcpListener` — the build is hermetic (vendored deps only;
+//! no hyper, no tokio). This is the "door" in front of the admission
+//! control the engine already enforces: everything the wire adds is
+//! framing, the queue/batcher/worker topology underneath is unchanged.
+//!
+//! Endpoints (DESIGN.md §Network serving has the full wire tables):
+//!
+//! - `POST /v1/infer` — one sample in, one [`Reply`](crate::engine::Reply)
+//!   out. The body either carries the sample explicitly
+//!   (`tokens`/`vis_mask`/`answer`) or asks the server to generate one
+//!   (`task` + `seed`). A per-request deadline rides in the
+//!   `deadline_ms` body field or the `X-Mopeq-Deadline-Ms` header
+//!   (field wins) and maps onto
+//!   [`Client::with_deadline`](crate::engine::Client::with_deadline).
+//! - `GET /metrics` — the live
+//!   [`MetricsSnapshot`](crate::engine::MetricsSnapshot) as JSON
+//!   (byte-stable serialization; `requests == Σ fills` holds on the
+//!   wire exactly as in-process).
+//! - `GET /healthz` — liveness + the deployment's variant/worker shape,
+//!   which is how [`loadgen`] discovers the model it must generate
+//!   samples for.
+//!
+//! [`Rejected`](crate::engine::Rejected) maps onto HTTP statuses via
+//! its own stable wire contract (`Rejected::status`/`code`/`to_json`):
+//! `Busy` → 429 (with a `Retry-After` hint), `Deadline` → 504,
+//! `Closed` → 503. Malformed requests answer 400/404/405/413 with the
+//! same `{"error": {...}}` envelope and **never** panic the connection
+//! thread.
+//!
+//! Topology: one accept thread + thread-per-connection with a hard
+//! connection cap, each connection thread holding a cheap
+//! [`Client`](crate::engine::Client) clone onto the engine's shared
+//! bounded queue — the wire adds connections, not a second queueing
+//! discipline.
+
+pub mod http;
+pub mod loadgen;
+pub mod routes;
+pub mod server;
+pub mod wire;
+
+pub use loadgen::{LoadReport, LoadSpec};
+pub use routes::Router;
+pub use server::{NetConfig, NetServer};
+pub use wire::InferRequest;

@@ -1,0 +1,181 @@
+//! Request routing: one [`Router`] per server, shared across all
+//! connection threads. The router owns a [`Client`] clone onto the
+//! engine's bounded queue and a [`MetricsHandle`], so dispatching a
+//! request never touches the [`Engine`](crate::engine::Engine) itself
+//! — connections add no locking beyond what in-process clients already
+//! pay.
+//!
+//! Every path out of [`Router::handle`] is a `Response`; protocol
+//! errors become `{"error": {...}}` envelopes, never panics, so one
+//! hostile connection cannot take down its thread with a poisoned
+//! body.
+
+use crate::config::ModelConfig;
+use crate::engine::{Client, Engine, MetricsHandle, Rejected};
+use crate::jsonx::Json;
+use crate::net::http::{Request, Response};
+use crate::net::wire;
+
+/// Shared request dispatcher (wrap in `Arc` for the server's threads).
+pub struct Router {
+    client: Client,
+    metrics: MetricsHandle,
+    cfg: ModelConfig,
+    workers: usize,
+}
+
+impl Router {
+    pub fn new(engine: &Engine) -> Router {
+        Router {
+            client: engine.client(),
+            metrics: engine.metrics_handle(),
+            cfg: engine.config().clone(),
+            workers: engine.metrics().workers.len(),
+        }
+    }
+
+    /// Dispatch one request to its endpoint.
+    pub fn handle(&self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/infer") => self.infer(req),
+            ("GET", "/metrics") => {
+                Response::json(200, &self.metrics.snapshot().to_json())
+            }
+            ("GET", "/healthz") => Response::json(
+                200,
+                &wire::health_json(&self.cfg, self.workers),
+            ),
+            (_, "/v1/infer") => method_not_allowed(req, "POST"),
+            (_, "/metrics") | (_, "/healthz") => {
+                method_not_allowed(req, "GET")
+            }
+            _ => Response::json(
+                404,
+                &wire::error_envelope(
+                    "not_found",
+                    404,
+                    &format!("no route for {}", req.path),
+                ),
+            ),
+        }
+    }
+
+    fn infer(&self, req: &Request) -> Response {
+        let body = match std::str::from_utf8(&req.body)
+            .map_err(|_| anyhow::anyhow!("body is not UTF-8"))
+            .and_then(Json::parse)
+        {
+            Ok(j) => j,
+            Err(e) => return bad_request(&format!("bad JSON body: {e}")),
+        };
+        let infer = match wire::InferRequest::parse(
+            &body,
+            req.header(wire::DEADLINE_HEADER),
+            &self.cfg,
+        ) {
+            Ok(i) => i,
+            Err(e) => return bad_request(&e.to_string()),
+        };
+        let client = match infer.deadline {
+            Some(d) => self.client.clone().with_deadline(d),
+            None => self.client.clone(),
+        };
+        match client
+            .submit(infer.sample)
+            .and_then(|ticket| ticket.wait())
+        {
+            Ok(reply) => Response::json(200, &wire::reply_json(&reply)),
+            Err(r) => rejection_response(&r),
+        }
+    }
+}
+
+fn bad_request(message: &str) -> Response {
+    Response::json(
+        400,
+        &wire::error_envelope("bad_request", 400, message),
+    )
+}
+
+fn method_not_allowed(req: &Request, allow: &str) -> Response {
+    Response::json(
+        405,
+        &wire::error_envelope(
+            "method_not_allowed",
+            405,
+            &format!("{} does not accept {}", req.path, req.method),
+        ),
+    )
+    .with_header("Allow", allow)
+}
+
+/// Map an admission-control rejection onto the wire: the status comes
+/// from `Rejected::status()` (429/504/503) and `Busy` carries its
+/// backoff hint both in the body (`retry_after_ms`) and as a standard
+/// `Retry-After` header (ceiling seconds, so it never rounds to 0).
+pub fn rejection_response(r: &Rejected) -> Response {
+    let resp = Response::json(r.status(), &wire::rejected_envelope(r));
+    match r.retry_after() {
+        Some(d) => {
+            let secs = (d.as_millis() as u64).div_ceil(1000);
+            resp.with_header("Retry-After", secs.to_string())
+        }
+        None => resp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+            close: false,
+        }
+    }
+
+    #[test]
+    fn rejections_carry_status_and_retry_hint() {
+        let resp = rejection_response(&Rejected::Busy { depth: 128 });
+        assert_eq!(resp.status, 429);
+        // 128 * 5ms = 640ms → ceil to 1s
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        let body = resp.json_body().unwrap();
+        let back = wire::parse_error(&body).unwrap();
+        assert_eq!(back, Rejected::Busy { depth: 128 });
+
+        let resp = rejection_response(&Rejected::Deadline);
+        assert_eq!(resp.status, 504);
+        assert!(resp.header("retry-after").is_none());
+
+        let resp = rejection_response(&Rejected::Closed);
+        assert_eq!(resp.status, 503);
+    }
+
+    #[test]
+    fn unknown_routes_and_methods_answer_envelopes() {
+        // Router::handle needs an engine; the pure helpers are testable
+        // here and the full routing table is covered by
+        // tests/net_integration.rs over a live server.
+        let resp = method_not_allowed(&get("/v1/infer"), "POST");
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("allow"), Some("POST"));
+        let code = resp
+            .json_body()
+            .unwrap()
+            .req("error")
+            .unwrap()
+            .req("code")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_eq!(code, "method_not_allowed");
+        let resp = bad_request("nope");
+        assert_eq!(resp.status, 400);
+    }
+}

@@ -1,0 +1,238 @@
+//! The TCP front-end: bind, accept, thread-per-connection, clean
+//! shutdown. One accept thread owns the listener; each connection gets
+//! its own thread holding an `Arc<Router>`, so the engine's bounded
+//! queue remains the single point of admission control — the only
+//! back-pressure the wire layer adds is a hard connection cap (over it,
+//! new connections get an immediate 503 `overloaded` envelope and are
+//! closed, costing no thread).
+//!
+//! Shutdown is cooperative and never leaks a thread: the stop flag
+//! flips, a self-connect wakes the blocking `accept`, every registered
+//! connection stream is `shutdown(Both)` to unblock its read, and all
+//! threads are joined **before** the engine drains — so in-flight
+//! requests still get their replies (written to possibly-dead sockets,
+//! which is a per-connection error, not a panic).
+
+use crate::engine::{Engine, MetricsSnapshot};
+use crate::net::http::{
+    read_request, HttpError, Response,
+};
+use crate::net::routes::Router;
+use crate::net::wire;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Wire-level knobs, separate from the engine's [`ServeConfig`]
+/// deployment decisions.
+///
+/// [`ServeConfig`]: crate::engine::ServeConfig
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// bind address; port 0 picks an ephemeral port (read it back via
+    /// [`NetServer::local_addr`])
+    pub addr: String,
+    /// hard cap on concurrently served connections
+    pub max_connections: usize,
+    /// idle read timeout per keep-alive connection
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 64,
+            idle_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A running server: owns the engine and the accept thread.
+pub struct NetServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    engine: Option<Engine>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+}
+
+impl NetServer {
+    /// Bind and start serving `engine` on `net.addr`.
+    pub fn spawn(engine: Engine, net: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&net.addr)
+            .with_context(|| format!("binding {}", net.addr))?;
+        let local = listener.local_addr()?;
+        let router = Arc::new(Router::new(&engine));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(HashMap::new()));
+        let accept = {
+            let (stop, conns) = (stop.clone(), conns.clone());
+            std::thread::Builder::new()
+                .name("mopeq-net-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, router, stop, conns, net)
+                })?
+        };
+        Ok(NetServer {
+            local,
+            stop,
+            accept: Some(accept),
+            engine: Some(engine),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Live metrics of the underlying engine.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.engine.as_ref().expect("engine taken").metrics()
+    }
+
+    /// Stop accepting, drain connections, then shut the engine down and
+    /// return its final metrics.
+    pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
+        self.stop_net();
+        self.engine
+            .take()
+            .expect("engine taken")
+            .shutdown()
+    }
+
+    fn stop_net(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept(); the loop re-checks the flag first
+        let _ = TcpStream::connect(self.local);
+        // unblock every connection read so its thread can exit
+        if let Ok(conns) = self.conns.lock() {
+            for stream in conns.values() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // engine's own Drop closes the queue and joins workers
+        self.stop_net();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    net: NetConfig,
+) {
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut handles: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_id: u64 = 0;
+    for incoming in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(mut stream) = incoming else { continue };
+        handles.retain(|h| !h.is_finished());
+        if active.load(Ordering::SeqCst) >= net.max_connections {
+            let body = wire::error_envelope(
+                "overloaded",
+                503,
+                "connection limit reached",
+            );
+            let _ = Response::json(503, &body).write_to(&mut stream);
+            continue;
+        }
+        let id = next_id;
+        next_id += 1;
+        if let Ok(clone) = stream.try_clone() {
+            if let Ok(mut c) = conns.lock() {
+                c.insert(id, clone);
+            }
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let (router, conns, active, idle) = (
+            router.clone(),
+            conns.clone(),
+            active.clone(),
+            net.idle_timeout,
+        );
+        let spawned = std::thread::Builder::new()
+            .name(format!("mopeq-net-conn-{id}"))
+            .spawn(move || {
+                serve_connection(stream, &router, idle);
+                if let Ok(mut c) = conns.lock() {
+                    c.remove(&id);
+                }
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(_) => {
+                // thread spawn failed: undo the bookkeeping
+                active.fetch_sub(1, Ordering::SeqCst);
+                if let Ok(mut c) = conns.lock() {
+                    c.remove(&id);
+                }
+            }
+        }
+    }
+    // flag is set: unblock any reads that raced past stop_net's sweep
+    if let Ok(c) = conns.lock() {
+        for stream in c.values() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Serve keep-alive requests on one connection until the peer closes,
+/// errors, asks for close, or sends an unrecoverable frame.
+fn serve_connection(stream: TcpStream, router: &Router, idle: Duration) {
+    let _ = stream.set_read_timeout(Some(idle));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match read_request(&mut reader, &mut writer) {
+            Ok(None) | Err(HttpError::Closed) | Err(HttpError::Io(_)) => {
+                break
+            }
+            Ok(Some(req)) => {
+                let resp = router.handle(&req);
+                if resp.write_to(&mut writer).is_err() || req.close {
+                    break;
+                }
+            }
+            Err(HttpError::Malformed(m)) => {
+                let body = wire::error_envelope("bad_request", 400, &m);
+                let _ = Response::json(400, &body).write_to(&mut writer);
+                break; // framing sync is lost
+            }
+            Err(HttpError::TooLarge(m)) => {
+                let body =
+                    wire::error_envelope("payload_too_large", 413, &m);
+                let _ = Response::json(413, &body).write_to(&mut writer);
+                break;
+            }
+        }
+    }
+    let _ = writer.shutdown(Shutdown::Both);
+}

@@ -1,0 +1,384 @@
+//! Wire types for the JSON protocol: parsing `POST /v1/infer` bodies
+//! into [`Sample`]s, serializing [`Reply`]s and error envelopes, and
+//! the `GET /healthz` shape. Both sides of the wire go through this
+//! module — the server parses what the load generator writes — so the
+//! protocol cannot drift between them.
+//!
+//! Every parser here is total: malformed input yields a typed error
+//! (which the router turns into a 400 envelope), never a panic.
+
+use crate::config::ModelConfig;
+use crate::data::{gen_sample, Sample, Task};
+use crate::engine::{Rejected, Reply};
+use crate::jsonx::Json;
+use crate::rng::Rng;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::time::Duration;
+
+/// Request header carrying a per-request deadline in milliseconds.
+/// The `deadline_ms` body field wins when both are present.
+pub const DEADLINE_HEADER: &str = "x-mopeq-deadline-ms";
+
+/// One parsed `/v1/infer` request: the sample to run and the
+/// client-chosen deadline, if any.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub sample: Sample,
+    pub deadline: Option<Duration>,
+}
+
+impl InferRequest {
+    /// Parse a request body against the deployment's model shape.
+    ///
+    /// Two body shapes are accepted:
+    /// - **generated**: `{"task": "BLINK", "seed": 7}` — the server
+    ///   generates the sample deterministically from the seed, so the
+    ///   reply's `correct` bit is meaningful without the client knowing
+    ///   the oracle;
+    /// - **explicit**: `{"tokens": [...], "vis_mask": [...], "answer":
+    ///   17}` — the client ships the sample (the load generator does
+    ///   this so correctness is judged against *its* answer).
+    pub fn parse(
+        body: &Json,
+        header_deadline_ms: Option<&str>,
+        cfg: &ModelConfig,
+    ) -> Result<InferRequest> {
+        const KNOWN: [&str; 6] =
+            ["task", "seed", "tokens", "vis_mask", "answer", "deadline_ms"];
+        let obj = body.as_obj()?;
+        for (k, _) in obj {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown field `{k}` (known: {})", KNOWN.join(", "));
+            }
+        }
+        let sample = if body.get("tokens").is_some() {
+            parse_explicit(body, cfg)?
+        } else {
+            parse_generated(body, cfg)?
+        };
+        // body field wins over the transport header
+        let deadline = match body.get("deadline_ms") {
+            Some(j) => Some(j.as_usize().map_err(|_| {
+                anyhow!("deadline_ms must be a non-negative integer")
+            })? as u64),
+            None => match header_deadline_ms {
+                Some(text) => Some(text.trim().parse::<u64>().map_err(
+                    |_| {
+                        anyhow!(
+                            "bad {DEADLINE_HEADER} header `{text}` \
+                             (want integer milliseconds)"
+                        )
+                    },
+                )?),
+                None => None,
+            },
+        };
+        Ok(InferRequest {
+            sample,
+            deadline: deadline.map(Duration::from_millis),
+        })
+    }
+}
+
+fn parse_task(j: &Json) -> Result<Task> {
+    let label = j.as_str()?;
+    Task::from_label(label).ok_or_else(|| {
+        anyhow!(
+            "unknown task `{label}` (known: {})",
+            Task::ALL
+                .iter()
+                .map(|t| t.label())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })
+}
+
+fn parse_generated(body: &Json, cfg: &ModelConfig) -> Result<Sample> {
+    let task = parse_task(body.req("task").map_err(|_| {
+        anyhow!("a request without `tokens` must name a `task`")
+    })?)?;
+    let seed = match body.get("seed") {
+        Some(j) => j
+            .as_usize()
+            .map_err(|_| anyhow!("seed must be a non-negative integer"))?
+            as u64,
+        None => 0,
+    };
+    Ok(gen_sample(task, cfg, &mut Rng::new(seed)))
+}
+
+fn parse_explicit(body: &Json, cfg: &ModelConfig) -> Result<Sample> {
+    let toks = body.req("tokens")?.as_arr()?;
+    if toks.len() != cfg.seq {
+        bail!(
+            "tokens has length {} but variant `{}` wants seq={}",
+            toks.len(),
+            cfg.name,
+            cfg.seq
+        );
+    }
+    let mut tokens = Vec::with_capacity(cfg.seq);
+    for t in toks {
+        let id = t
+            .as_usize()
+            .map_err(|_| anyhow!("tokens must be non-negative integers"))?;
+        if id >= cfg.vocab {
+            bail!("token {id} out of range for vocab={}", cfg.vocab);
+        }
+        tokens.push(id as i32);
+    }
+    let mask = body
+        .req("vis_mask")
+        .map_err(|_| anyhow!("explicit samples must carry `vis_mask`"))?
+        .as_arr()?;
+    if mask.len() != cfg.seq {
+        bail!(
+            "vis_mask has length {} but seq={}",
+            mask.len(),
+            cfg.seq
+        );
+    }
+    let mut vis_mask = Vec::with_capacity(cfg.seq);
+    for m in mask {
+        let v = m.as_f64()?;
+        if !v.is_finite() {
+            bail!("vis_mask entries must be finite");
+        }
+        vis_mask.push(v as f32);
+    }
+    let answer = match body.get("answer") {
+        Some(j) => {
+            let a = j.as_f64()?;
+            if !a.is_finite() || a.fract() != 0.0 {
+                bail!("answer must be an integer");
+            }
+            a as i32
+        }
+        None => -1,
+    };
+    let task = match body.get("task") {
+        Some(j) => parse_task(j)?,
+        None => Task::Blink,
+    };
+    Ok(Sample { tokens, vis_mask, answer, task })
+}
+
+/// The 200 body for one reply. Latency travels as `latency_us` so the
+/// client can fold wire-level and engine-level timings together.
+pub fn reply_json(r: &Reply) -> Json {
+    Json::Obj(vec![
+        ("answer".into(), Json::Num(r.answer as f64)),
+        ("correct".into(), Json::Bool(r.correct)),
+        (
+            "latency_us".into(),
+            Json::Num(r.latency.as_secs_f64() * 1e6),
+        ),
+        ("batch_fill".into(), Json::Num(r.batch_fill as f64)),
+    ])
+}
+
+/// Parse a reply body back (client side).
+pub fn reply_from_json(j: &Json) -> Result<Reply> {
+    let us = j.req("latency_us")?.as_f64()?;
+    // Duration::from_secs_f64 panics on negative/non-finite input
+    if !us.is_finite() || us < 0.0 {
+        bail!("latency_us must be a finite non-negative number");
+    }
+    Ok(Reply {
+        answer: j.req("answer")?.as_usize()?,
+        correct: j.req("correct")?.as_bool()?,
+        latency: Duration::from_secs_f64(us / 1e6),
+        batch_fill: j.req("batch_fill")?.as_usize()?,
+    })
+}
+
+/// Serialize a sample in the explicit body shape (the load generator's
+/// request bodies).
+pub fn sample_json(s: &Sample, deadline_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("task".into(), Json::Str(s.task.label().into())),
+        (
+            "tokens".into(),
+            Json::Arr(
+                s.tokens.iter().map(|t| Json::Num(*t as f64)).collect(),
+            ),
+        ),
+        (
+            "vis_mask".into(),
+            Json::Arr(
+                s.vis_mask.iter().map(|m| Json::Num(*m as f64)).collect(),
+            ),
+        ),
+        ("answer".into(), Json::Num(s.answer as f64)),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms".into(), Json::Num(ms as f64)));
+    }
+    Json::Obj(fields)
+}
+
+/// The `{"error": {...}}` envelope for protocol-level failures (400,
+/// 404, 405, 413, 503-overloaded) — same shape as rejections so
+/// clients parse one thing.
+pub fn error_envelope(code: &str, status: u16, message: &str) -> Json {
+    Json::Obj(vec![(
+        "error".into(),
+        Json::Obj(vec![
+            ("code".into(), Json::Str(code.into())),
+            ("status".into(), Json::Num(status as f64)),
+            ("message".into(), Json::Str(message.into())),
+        ]),
+    )])
+}
+
+/// The envelope for an admission-control rejection, using `Rejected`'s
+/// own stable wire serialization.
+pub fn rejected_envelope(r: &Rejected) -> Json {
+    Json::Obj(vec![("error".into(), r.to_json())])
+}
+
+/// Client side: recover the `Rejected` from a 429/504/503 body.
+pub fn parse_error(j: &Json) -> Result<Rejected> {
+    Rejected::from_json(j.req("error")?)
+}
+
+/// The `GET /healthz` body: liveness plus the deployment shape a
+/// client needs to build explicit samples.
+pub fn health_json(cfg: &ModelConfig, workers: usize) -> Json {
+    Json::Obj(vec![
+        ("status".into(), Json::Str("ok".into())),
+        ("variant".into(), Json::Str(cfg.name.into())),
+        ("workers".into(), Json::Num(workers as f64)),
+        ("seq".into(), Json::Num(cfg.seq as f64)),
+        ("batch".into(), Json::Num(cfg.batch as f64)),
+        ("vocab".into(), Json::Num(cfg.vocab as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn cfg() -> ModelConfig {
+        config::variant("dsvl2_tiny").unwrap()
+    }
+
+    fn parse_body(text: &str) -> Result<InferRequest> {
+        InferRequest::parse(&Json::parse(text).unwrap(), None, &cfg())
+    }
+
+    #[test]
+    fn generated_shape_is_deterministic_in_the_seed() {
+        let a = parse_body(r#"{"task":"BLINK","seed":7}"#).unwrap();
+        let b = parse_body(r#"{"task":"blink","seed":7}"#).unwrap();
+        assert_eq!(a.sample.tokens, b.sample.tokens);
+        assert_eq!(a.sample.answer, b.sample.answer);
+        assert!(a.deadline.is_none());
+        let c = parse_body(r#"{"task":"BLINK","seed":8}"#).unwrap();
+        assert_ne!(a.sample.tokens, c.sample.tokens);
+    }
+
+    #[test]
+    fn explicit_shape_round_trips_through_sample_json() {
+        let sample = gen_sample(Task::DocVqa, &cfg(), &mut Rng::new(3));
+        let body = sample_json(&sample, Some(250));
+        let req =
+            InferRequest::parse(&body, None, &cfg()).unwrap();
+        assert_eq!(req.sample.tokens, sample.tokens);
+        assert_eq!(req.sample.vis_mask, sample.vis_mask);
+        assert_eq!(req.sample.answer, sample.answer);
+        assert_eq!(req.sample.task, Task::DocVqa);
+        assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn body_deadline_beats_the_header() {
+        let j = Json::parse(r#"{"task":"BLINK","deadline_ms":50}"#).unwrap();
+        let req = InferRequest::parse(&j, Some("900"), &cfg()).unwrap();
+        assert_eq!(req.deadline, Some(Duration::from_millis(50)));
+        let j = Json::parse(r#"{"task":"BLINK"}"#).unwrap();
+        let req = InferRequest::parse(&j, Some("900"), &cfg()).unwrap();
+        assert_eq!(req.deadline, Some(Duration::from_millis(900)));
+    }
+
+    #[test]
+    fn malformed_bodies_fail_typed_never_panic() {
+        let cases = [
+            r#"{}"#,                                  // no task, no tokens
+            r#"{"task":"NOPE"}"#,                     // unknown task
+            r#"{"task":7}"#,                          // wrong type
+            r#"{"task":"BLINK","seed":-1}"#,          // negative seed
+            r#"{"task":"BLINK","seed":1.5}"#,         // fractional seed
+            r#"{"task":"BLINK","bogus":1}"#,          // unknown field
+            r#"{"task":"BLINK","deadline_ms":-5}"#,   // negative deadline
+            r#"{"tokens":[1,2,3]}"#,                  // wrong seq len
+            r#"{"tokens":[1,2,3],"vis_mask":[0,0]}"#, // both wrong
+        ];
+        for c in cases {
+            assert!(parse_body(c).is_err(), "expected error for {c}");
+        }
+        // explicit with an out-of-vocab token
+        let mut sample = gen_sample(Task::Blink, &cfg(), &mut Rng::new(0));
+        sample.tokens[0] = cfg().vocab as i32;
+        let body = sample_json(&sample, None);
+        assert!(InferRequest::parse(&body, None, &cfg()).is_err());
+        // header garbage
+        let j = Json::parse(r#"{"task":"BLINK"}"#).unwrap();
+        assert!(InferRequest::parse(&j, Some("soon"), &cfg()).is_err());
+    }
+
+    #[test]
+    fn reply_round_trips_and_rejects_poison_latency() {
+        let reply = Reply {
+            answer: 17,
+            correct: true,
+            latency: Duration::from_micros(1234),
+            batch_fill: 4,
+        };
+        let back = reply_from_json(&reply_json(&reply)).unwrap();
+        assert_eq!(back.answer, 17);
+        assert!(back.correct);
+        assert_eq!(back.batch_fill, 4);
+        assert!(
+            (back.latency.as_secs_f64() - 1234e-6).abs() < 1e-9
+        );
+        for poison in ["-1", "1e400"] {
+            let j = Json::parse(&format!(
+                r#"{{"answer":1,"correct":true,"latency_us":{poison},"batch_fill":1}}"#
+            ))
+            .unwrap();
+            assert!(reply_from_json(&j).is_err());
+        }
+    }
+
+    #[test]
+    fn error_envelopes_round_trip_rejections() {
+        for r in [
+            Rejected::Busy { depth: 12 },
+            Rejected::Deadline,
+            Rejected::Closed,
+        ] {
+            let env = rejected_envelope(&r);
+            assert_eq!(parse_error(&env).unwrap(), r);
+        }
+        let env = error_envelope("bad_request", 400, "nope");
+        let e = env.req("error").unwrap();
+        assert_eq!(e.req("code").unwrap().as_str().unwrap(), "bad_request");
+        assert_eq!(e.req("status").unwrap().as_usize().unwrap(), 400);
+    }
+
+    #[test]
+    fn health_reports_the_deployment_shape() {
+        let h = health_json(&cfg(), 2);
+        assert_eq!(h.req("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(
+            h.req("variant").unwrap().as_str().unwrap(),
+            "dsvl2_tiny"
+        );
+        assert_eq!(h.req("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(h.req("seq").unwrap().as_usize().unwrap(), cfg().seq);
+    }
+}

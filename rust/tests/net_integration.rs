@@ -1,0 +1,448 @@
+//! Network serving integration: the HTTP/JSON front-end over a mixed
+//! {2,3,4}-bit **packed** engine, exercised by concurrent raw-TCP
+//! clients. Locks the wire contract end-to-end:
+//!
+//! - every 200 reply matches the offline oracle executor for that exact
+//!   sample (answers travelled the wire both ways, so this also proves
+//!   reply routing across connections),
+//! - `Rejected` maps onto statuses on a live socket: `Busy` → 429 with
+//!   a `Retry-After` hint, `Deadline` → 504, each carrying the
+//!   machine-readable `{"error": {...}}` envelope,
+//! - `GET /metrics` is the same byte-stable `MetricsSnapshot` JSON the
+//!   in-process API returns, self-consistent (`requests == Σ worker
+//!   fills`) and parseable back,
+//! - malformed requests (garbage bytes, bad JSON, wrong shapes,
+//!   unknown routes, oversized frames) answer typed envelopes and never
+//!   take the server down — it keeps serving afterwards,
+//! - a `ServeConfig`-built deployment serves over the wire exactly like
+//!   a hand-built one, and
+//! - shutdown drains cleanly and returns the final stats.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::ModelExecutor;
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::{
+    Engine, EngineBuilder, PrecisionSource, ServeConfig, WeightForm,
+};
+use mopeq::jsonx::Json;
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::net::http::{read_response, write_request, Response};
+use mopeq::net::{loadgen, wire, NetConfig, NetServer};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::serve::BatchPolicy;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A mixed {2,3,4}-bit allocation exercising every packed width.
+fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+    let mut pm = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+        }
+    }
+    pm
+}
+
+/// The prediction an offline executor over the same packed codes makes
+/// for each sample — the wire-correctness oracle.
+fn expected_answers(
+    cfg: &ModelConfig,
+    seed: u64,
+    pmap: &PrecisionMap,
+    samples: &[Sample],
+) -> Vec<usize> {
+    let ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    let store = PackedStore::rtn(cfg, &ws, pmap).unwrap();
+    let mut qdq = WeightStore::init(cfg, &local_meta(cfg), seed);
+    store.write_dequantized(&mut qdq).unwrap();
+    let session = Session::native();
+    let exec = ModelExecutor::new(&session, cfg, &qdq).unwrap();
+    samples
+        .iter()
+        .map(|s| {
+            let (tokens, vis) = pack_batch(std::slice::from_ref(s), cfg);
+            exec.predict(&tokens, &vis).unwrap()[0]
+        })
+        .collect()
+}
+
+/// One keep-alive wire client.
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    addr: String,
+}
+
+impl WireClient {
+    fn connect(addr: &str) -> WireClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            addr: addr.to_string(),
+        }
+    }
+
+    fn post_infer(&mut self, body: &Json) -> Response {
+        write_request(
+            &mut self.writer,
+            "POST",
+            "/v1/infer",
+            &self.addr,
+            Some(("application/json", body.to_string().as_bytes())),
+            &[],
+        )
+        .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> Response {
+        write_request(&mut self.writer, "GET", path, &self.addr, None, &[])
+            .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+}
+
+fn error_code(resp: &Response) -> String {
+    resp.json_body()
+        .unwrap()
+        .req("error")
+        .unwrap()
+        .req("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn packed_engine_over_the_wire_matches_the_oracle() {
+    const SEED: u64 = 33;
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 6;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let pmap = mixed_map(&cfg);
+
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(2 * CLIENTS * PER_CLIENT)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .build()
+        .unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // the health endpoint advertises the deployment shape
+    let health = WireClient::connect(&addr).get("/healthz");
+    assert_eq!(health.status, 200);
+    let h = health.json_body().unwrap();
+    assert_eq!(h.req("variant").unwrap().as_str().unwrap(), "dsvl2_tiny");
+    assert_eq!(h.req("workers").unwrap().as_usize().unwrap(), 2);
+
+    // distinct per-connection workloads + their oracle answers
+    let workloads: Vec<Vec<Sample>> = (0..CLIENTS)
+        .map(|c| {
+            let mut rng = Rng::new(SEED).derive(&format!("net-client-{c}"));
+            (0..PER_CLIENT)
+                .map(|i| {
+                    gen_sample(
+                        Task::ALL[(c + i) % Task::ALL.len()],
+                        &cfg,
+                        &mut rng,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let oracles: Vec<Vec<usize>> = workloads
+        .iter()
+        .map(|w| expected_answers(&cfg, SEED, &pmap, w))
+        .collect();
+
+    // concurrent keep-alive connections, each checking its own replies
+    std::thread::scope(|scope| {
+        for (samples, expect) in workloads.iter().zip(&oracles) {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = WireClient::connect(&addr);
+                for (s, want) in samples.iter().zip(expect) {
+                    let resp =
+                        client.post_infer(&wire::sample_json(s, None));
+                    assert_eq!(resp.status, 200);
+                    let reply =
+                        wire::reply_from_json(&resp.json_body().unwrap())
+                            .unwrap();
+                    assert_eq!(
+                        reply.answer, *want,
+                        "wire reply diverged from the offline oracle"
+                    );
+                    // `correct` was judged server-side against the
+                    // answer we shipped in the body
+                    assert_eq!(
+                        reply.correct,
+                        *want == s.answer as usize
+                    );
+                    assert!(reply.batch_fill >= 1);
+                }
+            });
+        }
+    });
+
+    // /metrics over the wire: parseable back and self-consistent with
+    // everything the clients saw
+    let snap = loadgen::fetch_metrics(&addr).unwrap();
+    let total = CLIENTS * PER_CLIENT;
+    assert_eq!(snap.requests, total);
+    assert_eq!(
+        snap.requests,
+        snap.workers.iter().map(|w| w.requests).sum::<usize>(),
+        "requests == Σ per-worker fills"
+    );
+    for w in &snap.workers {
+        assert_eq!(
+            w.requests,
+            w.fill_hist
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (i + 1) * n)
+                .sum::<usize>(),
+            "fill histogram inconsistent with fills"
+        );
+    }
+    assert_eq!(snap.rejected_busy, 0);
+    assert_eq!(snap.workers.len(), 2);
+
+    // clean shutdown returns the same final tallies
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, total);
+}
+
+#[test]
+fn busy_and_deadline_rejections_reach_the_wire_as_429_and_504() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    // depth-1 queue and a long linger: concurrent clients must overflow
+    let engine = Engine::builder(cfg.name)
+        .seed(1)
+        .queue_depth(1)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(5) })
+        .build()
+        .unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // 504: a deadline of 0 ms can never be met
+    let mut client = WireClient::connect(&addr);
+    let body = Json::parse(
+        r#"{"task":"BLINK","seed":1,"deadline_ms":0}"#,
+    )
+    .unwrap();
+    let resp = client.post_infer(&body);
+    assert_eq!(resp.status, 504);
+    let rej = wire::parse_error(&resp.json_body().unwrap()).unwrap();
+    assert_eq!(rej.code(), "deadline");
+
+    // 429: flood the depth-1 queue from many concurrent connections
+    let mut busy = 0usize;
+    let mut ok = 0usize;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..12 {
+            let addr = addr.clone();
+            joins.push(scope.spawn(move || {
+                let mut client = WireClient::connect(&addr);
+                let mut tally = (0usize, 0usize); // (ok, busy)
+                for i in 0..4 {
+                    let body = Json::parse(&format!(
+                        r#"{{"task":"BLINK","seed":{}}}"#,
+                        c * 100 + i
+                    ))
+                    .unwrap();
+                    let resp = client.post_infer(&body);
+                    match resp.status {
+                        200 => tally.0 += 1,
+                        429 => {
+                            tally.1 += 1;
+                            // the busy envelope carries the backoff
+                            // hint in the body and as a header
+                            let rej = wire::parse_error(
+                                &resp.json_body().unwrap(),
+                            )
+                            .unwrap();
+                            assert_eq!(rej.code(), "busy");
+                            assert!(rej.retry_after().is_some());
+                            let secs: u64 = resp
+                                .header("retry-after")
+                                .expect("429 must carry Retry-After")
+                                .parse()
+                                .unwrap();
+                            assert!(secs >= 1);
+                        }
+                        s => panic!("unexpected status {s}"),
+                    }
+                }
+                tally
+            }));
+        }
+        for j in joins {
+            let (o, b) = j.join().unwrap();
+            ok += o;
+            busy += b;
+        }
+    });
+    assert!(busy > 0, "12 clients vs a depth-1 queue never got a 429");
+    assert!(ok > 0, "some requests must still be admitted");
+
+    // the engine counted exactly the rejections the wire reported
+    let snap = loadgen::fetch_metrics(&addr).unwrap();
+    assert_eq!(snap.rejected_busy, busy);
+    assert_eq!(snap.requests, ok);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_envelopes_and_the_server_survives() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let engine = Engine::builder(cfg.name).seed(2).build().unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // raw garbage: typed 400, connection closed, server still up
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        stream.write_all(b"\x00\x01garbage\r\n\r\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let resp = read_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 400);
+        assert_eq!(error_code(&resp), "bad_request");
+    }
+
+    // an oversized Content-Length answers 413 before reading the body
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        stream
+            .write_all(
+                format!(
+                    "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                    2 * 1024 * 1024
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let resp = read_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 413);
+        assert_eq!(error_code(&resp), "payload_too_large");
+    }
+
+    // protocol-level misuse on one keep-alive connection, then a valid
+    // request on the same server: nothing panicked, nothing wedged
+    let mut client = WireClient::connect(&addr);
+    let resp = client.get("/nope");
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp), "not_found");
+    let resp = client.get("/v1/infer");
+    assert_eq!(resp.status, 405);
+    assert_eq!(error_code(&resp), "method_not_allowed");
+    assert_eq!(resp.header("allow"), Some("POST"));
+
+    let bad_bodies = [
+        "not json at all",
+        r#"{"seed":7}"#,                     // no task, no tokens
+        r#"{"task":"NOPE"}"#,                // unknown task
+        r#"{"task":"BLINK","bogus":1}"#,     // unknown field
+        r#"{"tokens":[1,2,3]}"#,             // wrong seq length
+        r#"{"task":"BLINK","deadline_ms":-1}"#,
+    ];
+    for body in bad_bodies {
+        write_request(
+            &mut client.writer,
+            "POST",
+            "/v1/infer",
+            &addr,
+            Some(("application/json", body.as_bytes())),
+            &[],
+        )
+        .unwrap();
+        let resp = read_response(&mut client.reader).unwrap();
+        assert_eq!(resp.status, 400, "for body {body}");
+        assert_eq!(error_code(&resp), "bad_request");
+    }
+
+    // a bad deadline header is a 400, not a dropped header
+    write_request(
+        &mut client.writer,
+        "POST",
+        "/v1/infer",
+        &addr,
+        Some(("application/json", br#"{"task":"BLINK"}"#)),
+        &[(wire::DEADLINE_HEADER.to_string(), "soonish".to_string())],
+    )
+    .unwrap();
+    let resp = read_response(&mut client.reader).unwrap();
+    assert_eq!(resp.status, 400);
+
+    // after all of that, real traffic still flows
+    let resp = client
+        .post_infer(&Json::parse(r#"{"task":"BLINK","seed":3}"#).unwrap());
+    assert_eq!(resp.status, 200);
+    let snap = loadgen::fetch_metrics(&addr).unwrap();
+    assert_eq!(snap.requests, 1, "only the one valid request reached \
+                                  the engine");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn serve_config_deployment_serves_like_a_hand_built_one() {
+    const SEED: u64 = 5;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let sc = ServeConfig {
+        seed: SEED,
+        packed: true,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let engine = EngineBuilder::from_config(&sc).unwrap().build().unwrap();
+    // the config path must produce the paper allocation
+    let pmap = engine.precision_map().unwrap().clone();
+    let manual = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::mopeq())
+        .build()
+        .unwrap();
+    assert_eq!(pmap.bits, manual.precision_map().unwrap().bits);
+    manual.shutdown().unwrap();
+
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut rng = Rng::new(SEED).derive("config-client");
+    let samples: Vec<Sample> = (0..4)
+        .map(|i| gen_sample(Task::ALL[i], &cfg, &mut rng))
+        .collect();
+    let expect = expected_answers(&cfg, SEED, &pmap, &samples);
+    let mut client = WireClient::connect(&addr);
+    for (s, want) in samples.iter().zip(&expect) {
+        let resp = client.post_infer(&wire::sample_json(s, None));
+        assert_eq!(resp.status, 200);
+        let reply =
+            wire::reply_from_json(&resp.json_body().unwrap()).unwrap();
+        assert_eq!(reply.answer, *want);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, samples.len());
+}
