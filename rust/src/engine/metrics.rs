@@ -8,6 +8,7 @@
 
 use crate::coordinator::executor::ResidentReport;
 use crate::jsonx::Json;
+use crate::obs::trace::TraceSummary;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -46,6 +47,11 @@ pub struct MetricsSnapshot {
     /// worker count.
     pub resident: ResidentReport,
     pub workers: Vec<WorkerSnapshot>,
+    /// per-stage trace percentiles over the trace ring's window.
+    /// `Metrics` itself cannot see the ring (it lives next to it on the
+    /// engine's shared state), so [`Metrics::snapshot`] leaves this at
+    /// default and the engine-level snapshot path fills it in.
+    pub trace: TraceSummary,
 }
 
 /// One worker's slice of the snapshot.
@@ -57,6 +63,7 @@ pub struct WorkerSnapshot {
     /// `fill_hist[k-1]` = batches that executed with k real requests
     pub fill_hist: Vec<usize>,
     pub p50: Duration,
+    pub p95: Duration,
     pub p99: Duration,
 }
 
@@ -103,6 +110,7 @@ impl MetricsSnapshot {
                 "workers".into(),
                 Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()),
             ),
+            ("trace".into(), self.trace.to_json()),
         ])
     }
 
@@ -127,6 +135,7 @@ impl MetricsSnapshot {
                 .iter()
                 .map(WorkerSnapshot::from_json)
                 .collect::<Result<_>>()?,
+            trace: TraceSummary::from_json(j.req("trace")?)?,
         })
     }
 }
@@ -147,6 +156,7 @@ impl WorkerSnapshot {
                 ),
             ),
             ("p50_ns".into(), dur_json(self.p50)),
+            ("p95_ns".into(), dur_json(self.p95)),
             ("p99_ns".into(), dur_json(self.p99)),
         ])
     }
@@ -163,6 +173,7 @@ impl WorkerSnapshot {
                 .map(|v| v.as_usize())
                 .collect::<Result<_>>()?,
             p50: dur_from(j.req("p50_ns")?)?,
+            p95: dur_from(j.req("p95_ns")?)?,
             p99: dur_from(j.req("p99_ns")?)?,
         })
     }
@@ -290,6 +301,7 @@ impl Metrics {
                 mean_fill: mean_fill(log.fills, log.batches),
                 fill_hist: log.fill_hist.clone(),
                 p50: percentile(&lat, 0.50),
+                p95: percentile(&lat, 0.95),
                 p99: percentile(&lat, 0.99),
             });
             batches += log.batches;
@@ -313,6 +325,7 @@ impl Metrics {
             uptime,
             resident: self.resident.lock().unwrap().unwrap_or_default(),
             workers,
+            trace: TraceSummary::default(),
         }
     }
 }
@@ -362,6 +375,10 @@ mod tests {
         assert!((s.mean_fill - 2.0).abs() < 1e-12);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
         assert_eq!(s.p99, 4 * ms);
+        for w in &s.workers {
+            assert!(w.p50 <= w.p95 && w.p95 <= w.p99);
+        }
+        assert_eq!(s.workers[0].p95, 3 * ms);
     }
 
     #[test]
@@ -422,7 +439,9 @@ mod tests {
                 assert_eq!(a.fill_hist, b.fill_hist);
                 assert_eq!(a.requests, b.requests);
                 assert_eq!(a.p50, b.p50);
+                assert_eq!(a.p95, b.p95);
             }
+            assert_eq!(back.trace, s.trace);
             assert_eq!(
                 back.resident.shared_bytes,
                 s.resident.shared_bytes

@@ -69,6 +69,8 @@ use crate::coordinator::executor::SharedArgs;
 use crate::coordinator::QuantStats;
 use crate::data::Sample;
 use crate::moe::{PackedStore, PrecisionMap, WeightStore};
+use crate::obs::routing::{RoutingStats, TrafficSnapshot};
+use crate::obs::trace::{TraceRing, TraceSpan, TraceSummary};
 use crate::search::SearchSpec;
 use crate::serve::BatchPolicy;
 use anyhow::{anyhow, bail, Result};
@@ -254,6 +256,9 @@ pub struct Reply {
 pub(crate) struct Job {
     pub sample: Sample,
     pub enqueued: Instant,
+    /// when a worker popped this job off the queue — set by the serve
+    /// loop, the trace's queue-wait / batch-linger boundary
+    pub popped: Option<Instant>,
     pub deadline: Option<Instant>,
     pub respond: mpsc::Sender<Result<Reply, Rejected>>,
 }
@@ -289,6 +294,21 @@ impl EngineWeights {
 pub(crate) struct Shared {
     pub(crate) queue: JobQueue,
     pub(crate) metrics: Metrics,
+    /// live `[moe_layer][expert]` activation histogram (atomics)
+    pub(crate) routing: RoutingStats,
+    /// bounded window of completed request traces
+    pub(crate) traces: TraceRing,
+}
+
+impl Shared {
+    /// The full snapshot every public path serves: counters + the trace
+    /// summary (which `Metrics` alone cannot see — the ring lives here,
+    /// beside it).
+    fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot(self.queue.len());
+        snap.trace = self.traces.summary();
+        snap
+    }
 }
 
 /// Builder for an [`Engine`] — the single construction path for every
@@ -304,6 +324,7 @@ pub struct EngineBuilder {
     policy: BatchPolicy,
     workers: usize,
     queue_depth: usize,
+    trace_buffer: usize,
 }
 
 impl EngineBuilder {
@@ -319,6 +340,7 @@ impl EngineBuilder {
             policy: BatchPolicy::default(),
             workers: 1,
             queue_depth: 128,
+            trace_buffer: 256,
         }
     }
 
@@ -395,6 +417,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Completed-trace ring capacity (default 256, clamped to ≥ 1):
+    /// how many recent requests keep their per-stage timing breakdown
+    /// for `GET /v1/traces` and the snapshot's trace summary.
+    pub fn trace_buffer(mut self, capacity: usize) -> Self {
+        self.trace_buffer = capacity;
+        self
+    }
+
     /// Resolve the deployment through the [`spec::PreparedWeights`]
     /// pipeline (resolve → calibrate → allocate → quantize/pack →
     /// strip), then spawn and warm the worker pool. Returns once every
@@ -433,6 +463,8 @@ impl EngineBuilder {
         let shared = Arc::new(Shared {
             queue: JobQueue::new(self.queue_depth),
             metrics: Metrics::new(self.workers),
+            routing: RoutingStats::new(cfg.moe_layers(), cfg.experts),
+            traces: TraceRing::new(self.trace_buffer),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::with_capacity(self.workers);
@@ -563,7 +595,7 @@ impl Engine {
     /// Live telemetry — queryable **while serving**, not only at
     /// shutdown.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot(self.shared.queue.len())
+        self.shared.snapshot()
     }
 
     /// A cheap `Send + Clone` handle onto the live telemetry (an `Arc`
@@ -572,6 +604,21 @@ impl Engine {
     /// borrowing the engine itself.
     pub fn metrics_handle(&self) -> MetricsHandle {
         MetricsHandle { shared: self.shared.clone() }
+    }
+
+    /// A cheap `Send + Clone` handle onto the observability state:
+    /// completed traces, the live routing histogram joined with the
+    /// precision map, and the trace summary. Like
+    /// [`metrics_handle`](Engine::metrics_handle) it outlives the
+    /// engine borrow — grab one before handing the engine to the
+    /// network server, and it keeps reading the same shared state
+    /// (including after shutdown, for `--traffic-out`).
+    pub fn observer(&self) -> ObsHandle {
+        ObsHandle {
+            shared: self.shared.clone(),
+            cfg: self.cfg.clone(),
+            pmap: self.pmap.clone(),
+        }
     }
 
     /// Stop admissions, drain every queued job through the workers,
@@ -593,7 +640,7 @@ impl Engine {
         if let Some(e) = first_err {
             return Err(e);
         }
-        Ok(self.shared.metrics.snapshot(self.shared.queue.len()))
+        Ok(self.shared.snapshot())
     }
 }
 
@@ -620,7 +667,67 @@ pub struct MetricsHandle {
 
 impl MetricsHandle {
     pub fn snapshot(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot(self.shared.queue.len())
+        self.shared.snapshot()
+    }
+}
+
+/// A `Send + Clone` handle onto the engine's observability state,
+/// detached from the engine's lifetime borrow (same pattern as
+/// [`MetricsHandle`]). Serves `GET /v1/traces` / `GET /v1/experts`
+/// and the `--traffic-out` export.
+#[derive(Clone)]
+pub struct ObsHandle {
+    shared: Arc<Shared>,
+    cfg: ModelConfig,
+    pmap: Option<PrecisionMap>,
+}
+
+impl ObsHandle {
+    /// The trace ring's current window, oldest first.
+    pub fn traces(&self) -> Vec<TraceSpan> {
+        self.shared.traces.snapshot()
+    }
+
+    /// Per-stage percentiles over that window.
+    pub fn trace_summary(&self) -> TraceSummary {
+        self.shared.traces.summary()
+    }
+
+    pub fn trace_capacity(&self) -> usize {
+        self.shared.traces.capacity()
+    }
+
+    /// The live routing histogram joined with the engine's precision
+    /// map — the `GET /v1/experts` body and the `--traffic-out` artifact.
+    pub fn traffic(&self) -> TrafficSnapshot {
+        TrafficSnapshot::capture(
+            &self.shared.routing,
+            &self.cfg,
+            self.pmap.as_ref(),
+        )
+    }
+
+    /// The `GET /v1/traces` wire body: ring shape + summary + spans.
+    pub fn traces_json(&self) -> crate::jsonx::Json {
+        use crate::jsonx::Json;
+        let summary = self.trace_summary();
+        Json::Obj(vec![
+            (
+                "capacity".into(),
+                Json::Num(self.trace_capacity() as f64),
+            ),
+            (
+                "completed".into(),
+                Json::Num(summary.completed as f64),
+            ),
+            ("summary".into(), summary.to_json()),
+            (
+                "traces".into(),
+                Json::Arr(
+                    self.traces().iter().map(TraceSpan::to_json).collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -647,6 +754,7 @@ impl Client {
         let job = Job {
             sample,
             enqueued: now,
+            popped: None,
             deadline: self.deadline.map(|d| now + d),
             respond: tx,
         };

@@ -67,6 +67,8 @@ pub struct ServeConfig {
     pub workers: usize,
     pub queue_depth: usize,
     pub linger_ms: u64,
+    /// request-trace ring capacity (`GET /v1/traces` window)
+    pub trace_buffer: usize,
     /// `addr:port` for the HTTP front-end (`mopeq serve --listen`);
     /// `None` = the in-process demo loop
     pub listen: Option<String>,
@@ -94,6 +96,7 @@ impl Default for ServeConfig {
             workers: 1,
             queue_depth: 128,
             linger_ms: 2,
+            trace_buffer: 256,
             listen: None,
         }
     }
@@ -270,6 +273,10 @@ impl ServeConfig {
             ("workers".into(), Json::Num(self.workers as f64)),
             ("queue_depth".into(), Json::Num(self.queue_depth as f64)),
             ("linger_ms".into(), Json::Num(self.linger_ms as f64)),
+            (
+                "trace_buffer".into(),
+                Json::Num(self.trace_buffer as f64),
+            ),
             ("listen".into(), opt_str(&self.listen)),
         ])
     }
@@ -277,7 +284,7 @@ impl ServeConfig {
     /// Deserialize: missing keys take their defaults (partial configs
     /// are valid), unknown keys fail typed (the typo guard).
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
-        const KNOWN: [&str; 19] = [
+        const KNOWN: [&str; 20] = [
             "model",
             "seed",
             "packed",
@@ -296,6 +303,7 @@ impl ServeConfig {
             "workers",
             "queue_depth",
             "linger_ms",
+            "trace_buffer",
             "listen",
         ];
         for (k, _) in j.as_obj()? {
@@ -375,6 +383,9 @@ impl ServeConfig {
         }
         if let Some(v) = get("linger_ms") {
             sc.linger_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = get("trace_buffer") {
+            sc.trace_buffer = v.as_usize()?;
         }
         if let Some(v) = get("listen") {
             sc.listen = Some(v.as_str()?.to_string());
@@ -464,6 +475,8 @@ impl ServeConfig {
         self.workers = args.usize_flag("workers", self.workers)?;
         self.queue_depth = args.usize_flag("queue-depth", self.queue_depth)?;
         self.linger_ms = args.u64_flag("linger-ms", self.linger_ms)?;
+        self.trace_buffer =
+            args.usize_flag("trace-buffer", self.trace_buffer)?;
         if let Some(l) = args.flags.get("listen") {
             self.listen = Some(l.clone());
         }
@@ -512,7 +525,8 @@ impl EngineBuilder {
             .queue_depth(sc.queue_depth)
             .batch_policy(BatchPolicy {
                 max_linger: Duration::from_millis(sc.linger_ms),
-            }))
+            })
+            .trace_buffer(sc.trace_buffer))
     }
 }
 
@@ -593,13 +607,14 @@ mod tests {
             ..ServeConfig::default()
         };
         let args = crate::cli::parse(&argv(&[
-            "serve", "--workers", "4", "--linger-ms", "7", "--listen",
-            "127.0.0.1:0",
+            "serve", "--workers", "4", "--linger-ms", "7",
+            "--trace-buffer", "32", "--listen", "127.0.0.1:0",
         ]));
         sc.apply_flags(&args).unwrap();
         assert_eq!(sc.workers, 4, "flag overrides file");
         assert_eq!(sc.queue_depth, 64, "absent flag keeps file value");
         assert_eq!(sc.linger_ms, 7);
+        assert_eq!(sc.trace_buffer, 32);
         assert!(sc.packed);
         assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:0"));
     }

@@ -11,6 +11,7 @@ use crate::config::ModelConfig;
 use crate::coordinator::executor::ModelExecutor;
 use crate::data::Sample;
 use crate::engine::{EngineWeights, Job, Rejected, Reply, Shared};
+use crate::obs::trace::TraceSpan;
 use crate::runtime::Session;
 use crate::serve::{BatchPolicy, Batcher};
 use anyhow::Result;
@@ -95,7 +96,8 @@ impl Drop for FailGuard<'_> {
 
 fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
     let mut batcher: Batcher<Job> = Batcher::new(wc.policy, wc.cfg.batch);
-    while let Some(first) = wc.shared.queue.pop() {
+    while let Some(mut first) = wc.shared.queue.pop() {
+        first.popped = Some(Instant::now());
         if batcher.push(first).is_err() {
             // flush() drains the batcher before every loop iteration,
             // and the fill loop below is guarded by !full() — a reject
@@ -106,7 +108,8 @@ fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
         let linger = Instant::now() + wc.policy.max_linger;
         while !batcher.full() {
             match wc.shared.queue.pop_before(linger) {
-                Some(job) => {
+                Some(mut job) => {
+                    job.popped = Some(Instant::now());
                     if batcher.push(job).is_err() {
                         unreachable!("push is guarded by !batcher.full()");
                     }
@@ -131,17 +134,21 @@ pub(crate) fn open_session(choice: Option<&str>) -> Result<Session> {
 
 /// Execute the pending batch: deadline-expired jobs are rejected with a
 /// typed reply (never silently dropped), the rest run as one static
-/// batch and every reply carries the batch's real occupancy.
+/// batch and every reply carries the batch's real occupancy. Along the
+/// way the batch feeds the observability plane: its per-expert routing
+/// counts fold into the shared atomic histogram, and every served job
+/// pushes a [`TraceSpan`] whose stages are disjoint sub-intervals of
+/// its end-to-end window (so their sum can never exceed `total`).
 fn flush(
     wc: &WorkerConfig,
     exec: &ModelExecutor,
     batcher: &mut Batcher<Job>,
 ) -> Result<()> {
-    let now = Instant::now();
+    let triage_start = Instant::now();
     let (live, expired): (Vec<Job>, Vec<Job>) = batcher
         .take()
         .into_iter()
-        .partition(|j| j.deadline.is_none_or(|d| now < d));
+        .partition(|j| j.deadline.is_none_or(|d| triage_start < d));
     for job in expired {
         wc.shared.metrics.count_deadline();
         let _ = job.respond.send(Err(Rejected::Deadline));
@@ -151,7 +158,13 @@ fn flush(
     }
     let samples: Vec<Sample> = live.iter().map(|j| j.sample.clone()).collect();
     let (tokens, vis) = crate::data::pack_batch(&samples, &wc.cfg);
-    let preds = exec.predict(&tokens, &vis)?;
+    let triage_done = Instant::now();
+    let out = exec.forward(&tokens, &vis, false)?;
+    let exec_done = Instant::now();
+    // fold this batch's routing telemetry into the live histogram —
+    // relaxed atomic adds into the preallocated grid, no allocation
+    wc.shared.routing.record(&out.counts, tokens.len(), live.len());
+    let preds = out.logits.argmax_rows();
     let fill = live.len();
     let latencies: Vec<_> =
         live.iter().map(|j| j.enqueued.elapsed()).collect();
@@ -162,12 +175,27 @@ fn flush(
     for ((job, &answer), latency) in
         live.into_iter().zip(preds.iter()).zip(latencies)
     {
+        let send_start = Instant::now();
         let _ = job.respond.send(Ok(Reply {
             answer,
             correct: answer == job.sample.answer as usize,
             latency,
             batch_fill: fill,
         }));
+        // trace stage boundaries: enqueued ≤ popped ≤ triage_start ≤
+        // triage_done ≤ exec_done ≤ send_start ≤ now. triage/execute
+        // are batch-shared; queue_wait/linger/reply_send are per-job.
+        let popped = job.popped.unwrap_or(triage_start);
+        wc.shared.traces.push(TraceSpan {
+            worker: wc.index,
+            batch_fill: fill,
+            queue_wait: popped.saturating_duration_since(job.enqueued),
+            linger: triage_start.saturating_duration_since(popped),
+            triage: triage_done.saturating_duration_since(triage_start),
+            execute: exec_done.saturating_duration_since(triage_done),
+            reply_send: send_start.elapsed(),
+            total: job.enqueued.elapsed(),
+        });
     }
     Ok(())
 }

@@ -35,6 +35,7 @@ pub mod jsonx;
 pub mod linalg;
 pub mod moe;
 pub mod net;
+pub mod obs;
 pub mod proptest_lite;
 pub mod quant;
 pub mod report;

@@ -42,6 +42,14 @@ use std::time::Duration;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // the leveled logger is process-global; configure it before any
+    // subcommand can emit (default: warn, no timestamps)
+    if let Some(lvl) = args.flags.get("log-level") {
+        mopeq::obs::log::set_level(mopeq::obs::log::Level::parse(lvl)?);
+    }
+    if args.switch("log-timestamps") {
+        mopeq::obs::log::set_timestamps(true);
+    }
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
@@ -85,9 +93,12 @@ fn print_usage() {
          \x20         [--quantizer rtn|signround|gptq|awq] + allocate flags\n\
          \x20         [--config serve.json] [--save-config serve.json]\n\
          \x20         [--listen 127.0.0.1:0 [--addr-file f] [--serve-secs S]]\n\
+         \x20         [--trace-buffer N] [--traffic-out traffic.json]\n\
          loadgen:  --addr host:port [--concurrency N] [--duration S]\n\
          \x20         [--deadline-ms N] [--min-ok N] [--expect-busy]\n\
          \x20         [--check-metrics] [--bench-out name]\n\
+         global:   [--log-level off|error|warn|info|debug]\n\
+         \x20         [--log-timestamps]\n\
          variants: dsvl2_tiny dsvl2_small dsvl2_base molmoe"
     );
 }
@@ -186,13 +197,13 @@ fn estimator_knobs(args: &Args) -> bool {
 /// silences.
 fn warn_init_weights(p: &Pipeline, args: &Args) {
     if !p.loaded_trained_weights && !args.switch("allow-init-weights") {
-        eprintln!(
-            "warning: weights/{name}.bin not found — this map derives \
+        mopeq::obs::log::warn(format!(
+            "weights/{name}.bin not found — this map derives \
              from deterministic init weights, not a trained checkpoint \
              (run `mopeq train --model {name}` first, or pass \
              --allow-init-weights to acknowledge)",
             name = p.cfg.name
-        );
+        ));
     }
 }
 
@@ -706,7 +717,7 @@ fn cmd_table(args: &Args) -> Result<()> {
     let p = pipeline(args)?;
     let mut results = Vec::new();
     for spec in MethodSpec::table_rows() {
-        eprintln!("… {}", spec.label());
+        mopeq::obs::log::info(format!("… {}", spec.label()));
         results.push(p.run_method(&spec)?);
     }
     let table = report::method_table(&p.cfg, &results);
@@ -848,7 +859,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(t) => pending.push(t),
             Err(r) => {
                 rejected += 1;
-                eprintln!("submit rejected: {r}");
+                mopeq::obs::log::debug(format!("submit rejected: {r}"));
             }
         }
     }
@@ -872,9 +883,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             Err(r) => {
                 rejected += 1;
-                eprintln!("request rejected: {r}");
+                mopeq::obs::log::debug(format!("request rejected: {r}"));
             }
         }
+    }
+    // every reply above has been waited on, so the routing histogram
+    // already holds this run's full traffic
+    if let Some(path) = args.flags.get("traffic-out") {
+        engine.observer().traffic().save(Path::new(path))?;
+        println!("wrote {path}");
     }
     let stats = engine.shutdown()?;
     println!(
@@ -890,8 +907,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (i, w) in stats.workers.iter().enumerate() {
         println!(
             "  worker {i}: {} reqs, {} batches, fill {:.2}, p50 {:?}, \
-             p99 {:?}",
-            w.requests, w.batches, w.mean_fill, w.p50, w.p99
+             p95 {:?}, p99 {:?}",
+            w.requests, w.batches, w.mean_fill, w.p50, w.p95, w.p99
         );
     }
     println!(
@@ -937,10 +954,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// ephemeral port, so CI discovers the real one via `--addr-file` —
 /// then serves until `--serve-secs` elapses (forever without it).
 fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
+    // the observer outlives the engine handle the server consumes — it
+    // holds its own Arc onto the telemetry plane, so the traffic export
+    // below works after shutdown
+    let obs = engine.observer();
     let net = NetConfig { addr: addr.to_string(), ..NetConfig::default() };
     let server = NetServer::spawn(engine, net)?;
     let local = server.local_addr();
-    println!("listening on http://{local} (POST /v1/infer, GET /metrics, GET /healthz)");
+    println!(
+        "listening on http://{local} (POST /v1/infer, \
+         GET /metrics[?format=prometheus], GET /v1/traces, \
+         GET /v1/experts, GET /healthz)"
+    );
     if let Some(path) = args.flags.get("addr-file") {
         std::fs::write(path, local.to_string())?;
     }
@@ -955,7 +980,7 @@ fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
     let stats = server.shutdown()?;
     println!(
         "served {} requests in {} batches (mean fill {:.2}); \
-         {} busy + {} deadline rejections; p50 {:?} p99 {:?} \
+         {} busy + {} deadline rejections; p50 {:?} p95 {:?} p99 {:?} \
          throughput {:.1} req/s",
         stats.requests,
         stats.batches,
@@ -963,9 +988,19 @@ fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
         stats.rejected_busy,
         stats.rejected_deadline,
         stats.p50,
+        stats.p95,
         stats.p99,
         stats.throughput_rps
     );
+    if let Some(path) = args.flags.get("traffic-out") {
+        let traffic = obs.traffic();
+        traffic.save(Path::new(path))?;
+        println!(
+            "wrote {path} ({} requests, {} routed expert hits)",
+            traffic.requests,
+            traffic.total_hits()
+        );
+    }
     Ok(())
 }
 
@@ -1001,6 +1036,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.deadline,
         report.closed,
         report.http_errors
+    );
+    println!(
+        "rejections by status: 429 (busy) {}, 503 (closed) {}, \
+         504 (deadline) {}",
+        report.busy, report.closed, report.deadline
     );
     println!(
         "wire latency p50 {:?}  p95 {:?}  p99 {:?}  throughput {:.1} req/s",

@@ -229,7 +229,7 @@ pub struct Response {
 }
 
 impl Response {
-    /// A JSON response (the only body type the wire protocol emits).
+    /// A JSON response (the wire protocol's default body type).
     pub fn json(status: u16, body: &crate::jsonx::Json) -> Response {
         Response {
             status,
@@ -238,6 +238,20 @@ impl Response {
                 "application/json".into(),
             )],
             body: body.to_string().into_bytes(),
+        }
+    }
+
+    /// A plain-text response with an explicit content type — the
+    /// Prometheus exposition body (`text/plain; version=0.0.4`).
+    pub fn text(
+        status: u16,
+        content_type: &str,
+        body: impl Into<String>,
+    ) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), content_type.into())],
+            body: body.into().into_bytes(),
         }
     }
 

@@ -89,6 +89,19 @@ impl LoadReport {
             ("p50_ns".into(), Json::Num(self.p50.as_nanos() as f64)),
             ("p95_ns".into(), Json::Num(self.p95.as_nanos() as f64)),
             ("p99_ns".into(), Json::Num(self.p99.as_nanos() as f64)),
+            ("rejections".into(), self.rejections_json()),
+        ])
+    }
+
+    /// The same rejection tallies keyed by the HTTP status the server
+    /// answered with (the wire contract: busy→429, closed→503,
+    /// deadline→504) — the per-status breakdown `mopeq loadgen` prints
+    /// and ships in `--bench-out`.
+    pub fn rejections_json(&self) -> Json {
+        Json::Obj(vec![
+            ("429".into(), Json::Num(self.busy as f64)),
+            ("503".into(), Json::Num(self.closed as f64)),
+            ("504".into(), Json::Num(self.deadline as f64)),
         ])
     }
 }
@@ -323,5 +336,10 @@ mod tests {
             j.req("p99_ns").unwrap().as_f64().unwrap(),
             12e6
         );
+        // per-status breakdown mirrors the wire contract's mapping
+        let rej = j.req("rejections").unwrap();
+        assert_eq!(rej.req("429").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rej.req("503").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(rej.req("504").unwrap().as_usize().unwrap(), 1);
     }
 }

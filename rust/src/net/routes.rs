@@ -1,9 +1,9 @@
 //! Request routing: one [`Router`] per server, shared across all
 //! connection threads. The router owns a [`Client`] clone onto the
-//! engine's bounded queue and a [`MetricsHandle`], so dispatching a
-//! request never touches the [`Engine`](crate::engine::Engine) itself
-//! — connections add no locking beyond what in-process clients already
-//! pay.
+//! engine's bounded queue plus [`MetricsHandle`] and [`ObsHandle`]
+//! telemetry handles, so dispatching a request never touches the
+//! [`Engine`](crate::engine::Engine) itself — connections add no
+//! locking beyond what in-process clients already pay.
 //!
 //! Every path out of [`Router::handle`] is a `Response`; protocol
 //! errors become `{"error": {...}}` envelopes, never panics, so one
@@ -11,15 +11,17 @@
 //! body.
 
 use crate::config::ModelConfig;
-use crate::engine::{Client, Engine, MetricsHandle, Rejected};
+use crate::engine::{Client, Engine, MetricsHandle, ObsHandle, Rejected};
 use crate::jsonx::Json;
 use crate::net::http::{Request, Response};
 use crate::net::wire;
+use crate::obs::{kern, prom};
 
 /// Shared request dispatcher (wrap in `Arc` for the server's threads).
 pub struct Router {
     client: Client,
     metrics: MetricsHandle,
+    obs: ObsHandle,
     cfg: ModelConfig,
     workers: usize,
 }
@@ -29,26 +31,35 @@ impl Router {
         Router {
             client: engine.client(),
             metrics: engine.metrics_handle(),
+            obs: engine.observer(),
             cfg: engine.config().clone(),
             workers: engine.metrics().workers.len(),
         }
     }
 
-    /// Dispatch one request to its endpoint.
+    /// Dispatch one request to its endpoint. The query string (if any)
+    /// is split off before route matching, so `/metrics?format=...`
+    /// reaches the `/metrics` arm.
     pub fn handle(&self, req: &Request) -> Response {
-        match (req.method.as_str(), req.path.as_str()) {
+        let (path, query) = split_query(&req.path);
+        match (req.method.as_str(), path) {
             ("POST", "/v1/infer") => self.infer(req),
-            ("GET", "/metrics") => {
-                Response::json(200, &self.metrics.snapshot().to_json())
+            ("GET", "/metrics") => self.metrics_response(query),
+            ("GET", "/v1/traces") => {
+                Response::json(200, &self.obs.traces_json())
+            }
+            ("GET", "/v1/experts") => {
+                Response::json(200, &self.obs.traffic().to_json())
             }
             ("GET", "/healthz") => Response::json(
                 200,
                 &wire::health_json(&self.cfg, self.workers),
             ),
             (_, "/v1/infer") => method_not_allowed(req, "POST"),
-            (_, "/metrics") | (_, "/healthz") => {
-                method_not_allowed(req, "GET")
-            }
+            (_, "/metrics")
+            | (_, "/healthz")
+            | (_, "/v1/traces")
+            | (_, "/v1/experts") => method_not_allowed(req, "GET"),
             _ => Response::json(
                 404,
                 &wire::error_envelope(
@@ -57,6 +68,28 @@ impl Router {
                     &format!("no route for {}", req.path),
                 ),
             ),
+        }
+    }
+
+    /// `GET /metrics`: JSON by default, Prometheus text exposition for
+    /// `?format=prometheus`, a typed 400 for anything else.
+    fn metrics_response(&self, query: Option<&str>) -> Response {
+        match query_param(query, "format") {
+            None | Some("json") => {
+                Response::json(200, &self.metrics.snapshot().to_json())
+            }
+            Some("prometheus") => Response::text(
+                200,
+                prom::CONTENT_TYPE,
+                prom::render(
+                    &self.metrics.snapshot(),
+                    Some(&self.obs.traffic()),
+                    &kern::snapshot(),
+                ),
+            ),
+            Some(other) => bad_request(&format!(
+                "unknown metrics format `{other}` (json|prometheus)"
+            )),
         }
     }
 
@@ -88,6 +121,24 @@ impl Router {
             Err(r) => rejection_response(&r),
         }
     }
+}
+
+/// Split a request target into (path, query): `Request::path` keeps
+/// the target verbatim, so `/metrics?format=prometheus` arrives whole.
+fn split_query(target: &str) -> (&str, Option<&str>) {
+    match target.split_once('?') {
+        Some((path, query)) => (path, Some(query)),
+        None => (target, None),
+    }
+}
+
+/// First value of `key` in an `a=b&c=d` query string. No percent
+/// decoding — the only recognized values are plain identifiers.
+fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
 }
 
 fn bad_request(message: &str) -> Response {
@@ -177,5 +228,21 @@ mod tests {
         assert_eq!(code, "method_not_allowed");
         let resp = bad_request("nope");
         assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn query_strings_split_off_and_parse() {
+        assert_eq!(split_query("/metrics"), ("/metrics", None));
+        assert_eq!(
+            split_query("/metrics?format=prometheus"),
+            ("/metrics", Some("format=prometheus"))
+        );
+        assert_eq!(split_query("/x?"), ("/x", Some("")));
+        let q = Some("a=1&format=prometheus&b");
+        assert_eq!(query_param(q, "format"), Some("prometheus"));
+        assert_eq!(query_param(q, "a"), Some("1"));
+        assert_eq!(query_param(q, "b"), Some(""));
+        assert_eq!(query_param(q, "missing"), None);
+        assert_eq!(query_param(None, "format"), None);
     }
 }

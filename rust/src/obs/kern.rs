@@ -1,0 +1,124 @@
+//! Process-global per-bit-width qmatmul counters.
+//!
+//! `quant::kernels::qmatmul` bumps three relaxed atomics per call
+//! (calls, weight bytes streamed, elapsed nanos) for its dispatch
+//! width, so live GB/s per width is always available — the serving-time
+//! counterpart of the offline `BENCH_quant_throughput.json` sweep.
+//! "Bytes streamed" is the packed words the kernel reads per
+//! activation-row pass (`rows × words × 4`), i.e. the same nominal
+//! wire-traffic the bench's GB/s column charges; zero-skip shortcuts
+//! make it a slight overcount, exactly as in the bench.
+//!
+//! The counters are process-global (a `static`, not engine state):
+//! every engine, test, and CLI invocation in the process folds into the
+//! same tallies, so consumers must only assert monotonicity, never
+//! absolute values. That is the right shape for Prometheus counters,
+//! which is what these feed.
+
+use crate::jsonx::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// The packed widths with fused kernels (`qmatmul{2,3,4,8}`).
+pub const WIDTHS: [u8; 4] = [2, 3, 4, 8];
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static CALLS: [AtomicU64; 4] = [ZERO; 4];
+static BYTES: [AtomicU64; 4] = [ZERO; 4];
+static NANOS: [AtomicU64; 4] = [ZERO; 4];
+
+fn slot(bits: u8) -> Option<usize> {
+    WIDTHS.iter().position(|&w| w == bits)
+}
+
+/// Fold one kernel invocation in. Unknown widths are ignored — the
+/// kernel layer rejects them before any work happens anyway.
+pub fn record(bits: u8, bytes: u64, elapsed: Duration) {
+    let Some(i) = slot(bits) else { return };
+    CALLS[i].fetch_add(1, Ordering::Relaxed);
+    BYTES[i].fetch_add(bytes, Ordering::Relaxed);
+    NANOS[i].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+}
+
+/// One width's running tallies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelStat {
+    pub bits: u8,
+    pub calls: u64,
+    /// packed weight bytes streamed across all calls
+    pub bytes: u64,
+    /// cumulative in-kernel wall time
+    pub nanos: u64,
+}
+
+impl KernelStat {
+    /// Lifetime-average streaming rate. Bytes per nanosecond *is*
+    /// GB/s (1e9/1e9 cancels), which keeps this comparable with the
+    /// `BENCH_quant_throughput.json` GB/s column.
+    pub fn gbps(&self) -> f64 {
+        if self.nanos == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.nanos as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("bits".into(), Json::Num(self.bits as f64)),
+            ("calls".into(), Json::Num(self.calls as f64)),
+            ("bytes".into(), Json::Num(self.bytes as f64)),
+            ("nanos".into(), Json::Num(self.nanos as f64)),
+            ("gbps".into(), Json::Num(self.gbps())),
+        ])
+    }
+}
+
+/// All four widths, in `WIDTHS` order, zeros included — a stable shape
+/// for renderers regardless of which widths traffic has exercised.
+pub fn snapshot() -> Vec<KernelStat> {
+    WIDTHS
+        .iter()
+        .enumerate()
+        .map(|(i, &bits)| KernelStat {
+            bits,
+            calls: CALLS[i].load(Ordering::Relaxed),
+            bytes: BYTES[i].load(Ordering::Relaxed),
+            nanos: NANOS[i].load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_is_monotone_and_ignores_unknown_widths() {
+        let before = snapshot();
+        record(3, 1024, Duration::from_micros(2));
+        record(3, 1024, Duration::from_micros(2));
+        record(7, 9999, Duration::from_secs(1)); // no 7-bit kernel
+        let after = snapshot();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(a.bits, b.bits);
+            assert!(a.calls >= b.calls && a.bytes >= b.bytes);
+        }
+        let i = WIDTHS.iter().position(|&w| w == 3).unwrap();
+        assert_eq!(after[i].calls, before[i].calls + 2);
+        assert_eq!(after[i].bytes, before[i].bytes + 2048);
+        // unknown width landed nowhere
+        let total_before: u64 = before.iter().map(|s| s.bytes).sum();
+        let total_after: u64 = after.iter().map(|s| s.bytes).sum();
+        assert_eq!(total_after, total_before + 2048);
+    }
+
+    #[test]
+    fn gbps_is_bytes_per_nano() {
+        let s = KernelStat { bits: 4, calls: 1, bytes: 3000, nanos: 1500 };
+        assert!((s.gbps() - 2.0).abs() < 1e-12);
+        let z = KernelStat { bits: 4, calls: 0, bytes: 0, nanos: 0 };
+        assert_eq!(z.gbps(), 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Tiny leveled stderr logger for serve-mode diagnostics.
+//!
+//! Grep-able (`[warn] ...`) and quiet by default: the level starts at
+//! `warn`, so info/debug chatter only appears when the operator asks
+//! for it via `--log-level`. Timestamps are off by default and opt-in
+//! via `--log-timestamps` (seconds.millis since the Unix epoch — no
+//! date formatting, it is a diagnostic stream, not an audit log).
+//!
+//! Process-global atomics, no locks: concurrent workers may interleave
+//! *lines*, never bytes within a line (each record is one `eprintln!`).
+
+use crate::Result;
+use anyhow::bail;
+use std::fmt::Display;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Verbosity, ordered so `level as u8` compares: every record at or
+/// below the configured level is emitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// emit nothing at all
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> Result<Level> {
+        Ok(match s {
+            "off" => Level::Off,
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            other => bail!(
+                "unknown log level `{other}` \
+                 (expected off|error|warn|info|debug)"
+            ),
+        })
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static TIMESTAMPS: AtomicBool = AtomicBool::new(false);
+
+/// Set the global verbosity (default `warn`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global verbosity.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Toggle epoch timestamps on each record (default off).
+pub fn set_timestamps(on: bool) {
+    TIMESTAMPS.store(on, Ordering::Relaxed);
+}
+
+fn emit(at: Level, msg: &dyn Display) {
+    if at as u8 > LEVEL.load(Ordering::Relaxed) || at == Level::Off {
+        return;
+    }
+    if TIMESTAMPS.load(Ordering::Relaxed) {
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        eprintln!(
+            "[{}] {}.{:03} {msg}",
+            at.label(),
+            now.as_secs(),
+            now.subsec_millis()
+        );
+    } else {
+        eprintln!("[{}] {msg}", at.label());
+    }
+}
+
+pub fn error(msg: impl Display) {
+    emit(Level::Error, &msg);
+}
+
+pub fn warn(msg: impl Display) {
+    emit(Level::Warn, &msg);
+}
+
+pub fn info(msg: impl Display) {
+    emit(Level::Info, &msg);
+}
+
+pub fn debug(msg: impl Display) {
+    emit(Level::Debug, &msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("off").unwrap(), Level::Off);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("verbose").is_err());
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_round_trips() {
+        let before = level();
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+        set_level(before);
+    }
+}

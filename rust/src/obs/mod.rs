@@ -1,0 +1,23 @@
+//! Serving observability: request traces, live routing telemetry,
+//! kernel counters, Prometheus exposition, and a leveled logger.
+//!
+//! This is the read-only side of the serving stack. Nothing here sits
+//! on a lock along the request path: the worker records per-expert
+//! routing counts into preallocated atomics ([`routing::RoutingStats`]),
+//! qmatmul bumps three atomics per call ([`kern`]), and a completed
+//! request takes one short mutex to push its [`trace::TraceSpan`] into
+//! a bounded ring. Everything aggregates into snapshots on demand —
+//! from `GET /v1/traces`, `GET /v1/experts`,
+//! `GET /metrics?format=prometheus`, or `mopeq serve --traffic-out`.
+//!
+//! The routing histogram is the data plane for the ROADMAP's
+//! traffic-aware allocation item: [`routing::TrafficSnapshot`] joins
+//! each expert's live hit count with its allocated bit-width and wire
+//! bytes, in a byte-stable jsonx schema a future `mopeq search
+//! --traffic` can consume directly.
+
+pub mod kern;
+pub mod log;
+pub mod prom;
+pub mod routing;
+pub mod trace;

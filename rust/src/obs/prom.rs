@@ -1,0 +1,384 @@
+//! Prometheus text exposition (format version 0.0.4) for the full
+//! observability surface: engine metrics snapshot + trace summary,
+//! routing telemetry, and kernel counters — the body behind
+//! `GET /metrics?format=prometheus`.
+//!
+//! One `# HELP` / `# TYPE` pair per family, one sample per line,
+//! durations in seconds (Prometheus base units), `_total` names for
+//! counters. Counters reset with the process/engine they come from,
+//! which is exactly the semantics scrapers expect.
+
+use crate::engine::MetricsSnapshot;
+use crate::obs::kern::KernelStat;
+use crate::obs::routing::TrafficSnapshot;
+use std::fmt::Write;
+use std::time::Duration;
+
+/// The standard Prometheus scrape content type.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+struct Exposition {
+    out: String,
+}
+
+impl Exposition {
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// One sample line. `labels` are `(name, value)` pairs; values are
+    /// emitted verbatim inside quotes (callers only pass numbers and
+    /// fixed identifiers, so no escaping is needed).
+    fn sample(&mut self, name: &str, labels: &[(&str, String)], v: f64) {
+        let _ = self.out.write_str(name);
+        if !labels.is_empty() {
+            let _ = self.out.write_str("{");
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    let _ = self.out.write_str(",");
+                }
+                let _ = write!(self.out, "{k}=\"{val}\"");
+            }
+            let _ = self.out.write_str("}");
+        }
+        let _ = writeln!(self.out, " {v}");
+    }
+}
+
+fn secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+/// Render the whole snapshot family-by-family. `traffic` is absent
+/// only when the caller has no routing state (e.g. unit tests building
+/// a bare snapshot); the serving path always joins it in.
+pub fn render(
+    snap: &MetricsSnapshot,
+    traffic: Option<&TrafficSnapshot>,
+    kernels: &[KernelStat],
+) -> String {
+    let mut e = Exposition { out: String::new() };
+
+    e.family("mopeq_uptime_seconds", "gauge", "Engine serving uptime.");
+    e.sample("mopeq_uptime_seconds", &[], secs(snap.uptime));
+
+    e.family(
+        "mopeq_queue_depth",
+        "gauge",
+        "Jobs admitted but not yet executed.",
+    );
+    e.sample("mopeq_queue_depth", &[], snap.queue_depth as f64);
+
+    e.family(
+        "mopeq_submitted_total",
+        "counter",
+        "Submits admitted past admission control.",
+    );
+    e.sample("mopeq_submitted_total", &[], snap.submitted as f64);
+
+    e.family(
+        "mopeq_requests_total",
+        "counter",
+        "Requests answered across all workers.",
+    );
+    e.sample("mopeq_requests_total", &[], snap.requests as f64);
+
+    e.family(
+        "mopeq_rejected_total",
+        "counter",
+        "Requests rejected, by reason.",
+    );
+    for (reason, n) in [
+        ("busy", snap.rejected_busy),
+        ("deadline", snap.rejected_deadline),
+    ] {
+        e.sample(
+            "mopeq_rejected_total",
+            &[("reason", reason.to_string())],
+            n as f64,
+        );
+    }
+
+    e.family(
+        "mopeq_batches_total",
+        "counter",
+        "Batches executed across all workers.",
+    );
+    e.sample("mopeq_batches_total", &[], snap.batches as f64);
+
+    e.family(
+        "mopeq_batch_fill_mean",
+        "gauge",
+        "Mean real requests per executed batch.",
+    );
+    e.sample("mopeq_batch_fill_mean", &[], snap.mean_fill);
+
+    e.family(
+        "mopeq_throughput_rps",
+        "gauge",
+        "Answered requests per second of uptime.",
+    );
+    e.sample("mopeq_throughput_rps", &[], snap.throughput_rps);
+
+    e.family(
+        "mopeq_request_latency_seconds",
+        "gauge",
+        "End-to-end request latency percentiles.",
+    );
+    for (q, d) in
+        [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)]
+    {
+        e.sample(
+            "mopeq_request_latency_seconds",
+            &[("quantile", q.to_string())],
+            secs(d),
+        );
+    }
+
+    e.family(
+        "mopeq_resident_bytes",
+        "gauge",
+        "Resident weight bytes of one worker's executor, by kind.",
+    );
+    for (kind, b) in [
+        ("backbone", snap.resident.backbone_bytes),
+        ("expert_accounted", snap.resident.expert_accounted_bytes),
+        ("expert_heap", snap.resident.expert_heap_bytes),
+        ("shared", snap.resident.shared_bytes),
+    ] {
+        e.sample(
+            "mopeq_resident_bytes",
+            &[("kind", kind.to_string())],
+            b as f64,
+        );
+    }
+
+    e.family(
+        "mopeq_worker_requests_total",
+        "counter",
+        "Requests answered, per worker.",
+    );
+    for (w, ws) in snap.workers.iter().enumerate() {
+        e.sample(
+            "mopeq_worker_requests_total",
+            &[("worker", w.to_string())],
+            ws.requests as f64,
+        );
+    }
+    e.family(
+        "mopeq_worker_batches_total",
+        "counter",
+        "Batches executed, per worker.",
+    );
+    for (w, ws) in snap.workers.iter().enumerate() {
+        e.sample(
+            "mopeq_worker_batches_total",
+            &[("worker", w.to_string())],
+            ws.batches as f64,
+        );
+    }
+    e.family(
+        "mopeq_worker_latency_seconds",
+        "gauge",
+        "Per-worker request latency percentiles.",
+    );
+    for (w, ws) in snap.workers.iter().enumerate() {
+        for (q, d) in
+            [("0.5", ws.p50), ("0.95", ws.p95), ("0.99", ws.p99)]
+        {
+            e.sample(
+                "mopeq_worker_latency_seconds",
+                &[("worker", w.to_string()), ("quantile", q.to_string())],
+                secs(d),
+            );
+        }
+    }
+
+    e.family(
+        "mopeq_traces_total",
+        "counter",
+        "Requests that completed with a recorded trace.",
+    );
+    e.sample("mopeq_traces_total", &[], snap.trace.completed as f64);
+
+    e.family(
+        "mopeq_trace_stage_seconds",
+        "gauge",
+        "Per-stage latency percentiles over the trace window.",
+    );
+    for (stage, pct) in snap.trace.stages() {
+        for (q, d) in
+            [("0.5", pct.p50), ("0.95", pct.p95), ("0.99", pct.p99)]
+        {
+            e.sample(
+                "mopeq_trace_stage_seconds",
+                &[
+                    ("stage", stage.to_string()),
+                    ("quantile", q.to_string()),
+                ],
+                secs(d),
+            );
+        }
+    }
+
+    if let Some(t) = traffic {
+        e.family(
+            "mopeq_routed_tokens_total",
+            "counter",
+            "Tokens routed through the MoE layers.",
+        );
+        e.sample("mopeq_routed_tokens_total", &[], t.tokens as f64);
+        e.family(
+            "mopeq_expert_tokens_total",
+            "counter",
+            "Routed (token, expert) hits per expert.",
+        );
+        for (l, row) in t.counts.iter().enumerate() {
+            for (x, &c) in row.iter().enumerate() {
+                e.sample(
+                    "mopeq_expert_tokens_total",
+                    &[
+                        ("layer", l.to_string()),
+                        ("expert", x.to_string()),
+                    ],
+                    c as f64,
+                );
+            }
+        }
+    }
+
+    e.family(
+        "mopeq_qmatmul_calls_total",
+        "counter",
+        "Fused packed qmatmul invocations, per bit width.",
+    );
+    for k in kernels {
+        e.sample(
+            "mopeq_qmatmul_calls_total",
+            &[("bits", k.bits.to_string())],
+            k.calls as f64,
+        );
+    }
+    e.family(
+        "mopeq_qmatmul_weight_bytes_total",
+        "counter",
+        "Packed weight bytes streamed by qmatmul, per bit width.",
+    );
+    for k in kernels {
+        e.sample(
+            "mopeq_qmatmul_weight_bytes_total",
+            &[("bits", k.bits.to_string())],
+            k.bytes as f64,
+        );
+    }
+    e.family(
+        "mopeq_qmatmul_seconds_total",
+        "counter",
+        "Cumulative in-kernel time, per bit width.",
+    );
+    for k in kernels {
+        e.sample(
+            "mopeq_qmatmul_seconds_total",
+            &[("bits", k.bits.to_string())],
+            k.nanos as f64 / 1e9,
+        );
+    }
+    e.family(
+        "mopeq_qmatmul_gbps",
+        "gauge",
+        "Lifetime-average streaming rate, per bit width.",
+    );
+    for k in kernels {
+        e.sample(
+            "mopeq_qmatmul_gbps",
+            &[("bits", k.bits.to_string())],
+            k.gbps(),
+        );
+    }
+
+    e.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::kern::KernelStat;
+    use std::collections::HashSet;
+
+    fn sample_lines(body: &str) -> Vec<&str> {
+        body.lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .collect()
+    }
+
+    #[test]
+    fn exposition_is_one_sample_per_line_no_duplicate_series() {
+        let snap = MetricsSnapshot::default();
+        let kernels = [KernelStat {
+            bits: 2,
+            calls: 3,
+            bytes: 4096,
+            nanos: 2000,
+        }];
+        let body = render(&snap, None, &kernels);
+        assert!(body.ends_with('\n'));
+        let mut seen = HashSet::new();
+        for line in sample_lines(&body) {
+            let (series, value) =
+                line.rsplit_once(' ').expect("sample has a value");
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable value in {line:?}"
+            );
+            assert!(
+                seen.insert(series.to_string()),
+                "duplicate series {series:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn type_and_help_appear_once_per_family() {
+        let body = render(&MetricsSnapshot::default(), None, &[]);
+        let mut typed = HashSet::new();
+        for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            assert!(typed.insert(name.to_string()), "double TYPE {name}");
+        }
+        // every sample's family name was declared
+        for line in sample_lines(&body) {
+            let name =
+                line.split(['{', ' ']).next().expect("metric name");
+            assert!(typed.contains(name), "undeclared family {name}");
+        }
+    }
+
+    #[test]
+    fn counters_carry_the_total_suffix_and_seconds_are_base_unit() {
+        let body = render(&MetricsSnapshot::default(), None, &[]);
+        for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let mut it = line.split_whitespace().skip(2);
+            let (name, kind) = (it.next().unwrap(), it.next().unwrap());
+            if kind == "counter" {
+                assert!(
+                    name.ends_with("_total"),
+                    "counter {name} lacks _total"
+                );
+            }
+        }
+        // a 1.5ms p50 renders as seconds, not nanos
+        let snap = MetricsSnapshot {
+            p50: Duration::from_micros(1500),
+            ..MetricsSnapshot::default()
+        };
+        let body = render(&snap, None, &[]);
+        let line = body
+            .lines()
+            .find(|l| {
+                l.starts_with("mopeq_request_latency_seconds{quantile=\"0.5\"")
+            })
+            .unwrap();
+        assert!(line.ends_with(" 0.0015"), "got {line:?}");
+    }
+}

@@ -1,0 +1,363 @@
+//! Live per-expert routing telemetry — the activation histogram MoPEQ's
+//! frequency-vs-sensitivity analysis needs, captured from real traffic.
+//!
+//! [`RoutingStats`] is a `[moe_layer][expert]` grid of atomic counters
+//! preallocated at engine build; the worker folds each forward's
+//! per-expert token counts in with relaxed `fetch_add`s — zero
+//! allocation and zero locks on the hot path. [`TrafficSnapshot`] is
+//! the exported view: the histogram joined with each expert's allocated
+//! bit-width and wire bytes from the precision map, in a byte-stable
+//! jsonx schema served at `GET /v1/experts` and written by
+//! `mopeq serve --traffic-out traffic.json` for the future
+//! `mopeq search --traffic` consumer.
+
+use crate::config::ModelConfig;
+use crate::jsonx::Json;
+use crate::moe::PrecisionMap;
+use crate::serve::expert_bytes;
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic `[moe_layer][expert]` activation grid plus traffic totals.
+pub struct RoutingStats {
+    counts: Vec<Vec<AtomicU64>>,
+    tokens: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl RoutingStats {
+    pub fn new(moe_layers: usize, experts: usize) -> RoutingStats {
+        RoutingStats {
+            counts: (0..moe_layers)
+                .map(|_| (0..experts).map(|_| AtomicU64::new(0)).collect())
+                .collect(),
+            tokens: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one forward's per-layer expert token counts in. `counts`
+    /// is the executor's `[moe_layer][expert]` grid (each routed
+    /// (token, expert) pair contributes exactly 1.0); `tokens` is the
+    /// batch's token total (B×S), `requests` the live jobs it served.
+    /// Layers/experts beyond the preallocated grid are ignored rather
+    /// than grown — the grid is sized from the model config, so a
+    /// mismatch is a bug upstream, not something to allocate around.
+    pub fn record(
+        &self,
+        counts: &[Vec<f32>],
+        tokens: usize,
+        requests: usize,
+    ) {
+        for (row, layer) in self.counts.iter().zip(counts) {
+            for (cell, &c) in row.iter().zip(layer) {
+                if c > 0.0 {
+                    cell.fetch_add(c as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// Plain copy of the grid.
+    pub fn counts(&self) -> Vec<Vec<u64>> {
+        self.counts
+            .iter()
+            .map(|row| {
+                row.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+            })
+            .collect()
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time export of the routing histogram, joined with the
+/// precision allocation. The jsonx schema is byte-stable: fixed key
+/// order, counts as plain numbers, `bits`/`wire_bytes` null for dense
+/// (f32) deployments where no map exists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficSnapshot {
+    /// model variant the traffic was served on
+    pub variant: String,
+    /// requests folded into the histogram
+    pub requests: u64,
+    /// tokens routed (each contributes `top_k` hits per MoE layer)
+    pub tokens: u64,
+    /// experts activated per token per layer
+    pub top_k: usize,
+    /// `[moe_layer][expert]` routed-token counts
+    pub counts: Vec<Vec<u64>>,
+    /// allocated width per expert, when serving a precision map
+    pub bits: Option<Vec<Vec<u8>>>,
+    /// wire bytes per expert at its allocated width
+    pub wire_bytes: Option<Vec<Vec<u64>>>,
+}
+
+impl TrafficSnapshot {
+    /// Join the live grid with the model config and (when packed) the
+    /// precision map.
+    pub fn capture(
+        stats: &RoutingStats,
+        cfg: &ModelConfig,
+        pmap: Option<&PrecisionMap>,
+    ) -> TrafficSnapshot {
+        TrafficSnapshot {
+            variant: cfg.name.to_string(),
+            requests: stats.requests(),
+            tokens: stats.tokens(),
+            top_k: cfg.top_k,
+            counts: stats.counts(),
+            bits: pmap.map(|pm| pm.bits.clone()),
+            wire_bytes: pmap.map(|pm| {
+                pm.bits
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .map(|&b| expert_bytes(cfg, b) as u64)
+                            .collect()
+                    })
+                    .collect()
+            }),
+        }
+    }
+
+    pub fn moe_layers(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn experts(&self) -> usize {
+        self.counts.first().map_or(0, Vec::len)
+    }
+
+    /// Grand total of routed (token, expert) hits — equals
+    /// `tokens × top_k × moe_layers` when every request was served.
+    pub fn total_hits(&self) -> u64 {
+        self.counts.iter().flatten().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num_grid = |g: &[Vec<u64>]| {
+            Json::Arr(
+                g.iter()
+                    .map(|row| {
+                        Json::Arr(
+                            row.iter()
+                                .map(|&c| Json::Num(c as f64))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("tokens".into(), Json::Num(self.tokens as f64)),
+            ("top_k".into(), Json::Num(self.top_k as f64)),
+            (
+                "moe_layers".into(),
+                Json::Num(self.moe_layers() as f64),
+            ),
+            ("experts".into(), Json::Num(self.experts() as f64)),
+            ("counts".into(), num_grid(&self.counts)),
+            (
+                "bits".into(),
+                match &self.bits {
+                    None => Json::Null,
+                    Some(bits) => Json::Arr(
+                        bits.iter()
+                            .map(|row| {
+                                Json::Arr(
+                                    row.iter()
+                                        .map(|&b| Json::Num(b as f64))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                },
+            ),
+            (
+                "wire_bytes".into(),
+                match &self.wire_bytes {
+                    None => Json::Null,
+                    Some(wb) => num_grid(wb),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrafficSnapshot> {
+        let u64_grid = |j: &Json| -> Result<Vec<Vec<u64>>> {
+            j.as_arr()?
+                .iter()
+                .map(|row| {
+                    row.as_arr()?
+                        .iter()
+                        .map(|c| Ok(c.as_f64()? as u64))
+                        .collect()
+                })
+                .collect()
+        };
+        let snap = TrafficSnapshot {
+            variant: j.req("variant")?.as_str()?.to_string(),
+            requests: j.req("requests")?.as_f64()? as u64,
+            tokens: j.req("tokens")?.as_f64()? as u64,
+            top_k: j.req("top_k")?.as_usize()?,
+            counts: u64_grid(j.req("counts")?)?,
+            bits: match j.req("bits")? {
+                Json::Null => None,
+                b => Some(
+                    b.as_arr()?
+                        .iter()
+                        .map(|row| {
+                            row.as_arr()?
+                                .iter()
+                                .map(|c| Ok(c.as_usize()? as u8))
+                                .collect()
+                        })
+                        .collect::<Result<_>>()?,
+                ),
+            },
+            wire_bytes: match j.req("wire_bytes")? {
+                Json::Null => None,
+                wb => Some(u64_grid(wb)?),
+            },
+        };
+        let (lm, e) = (
+            j.req("moe_layers")?.as_usize()?,
+            j.req("experts")?.as_usize()?,
+        );
+        if snap.moe_layers() != lm || snap.experts() != e {
+            bail!(
+                "traffic counts are {}x{}, header says {lm}x{e}",
+                snap.moe_layers(),
+                snap.experts()
+            );
+        }
+        if let Some(g) = &snap.wire_bytes {
+            if g.len() != lm || g.iter().any(|r| r.len() != e) {
+                bail!("wire_bytes grid does not match counts shape");
+            }
+        }
+        if let Some(bits) = &snap.bits {
+            if bits.len() != lm || bits.iter().any(|r| r.len() != e) {
+                bail!("bits grid does not match counts shape");
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Write the snapshot to `path` (the `--traffic-out` artifact).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrafficSnapshot> {
+        let text = std::fs::read_to_string(path)?;
+        TrafficSnapshot::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn record_accumulates_and_ignores_overflow_rows() {
+        let stats = RoutingStats::new(2, 3);
+        stats.record(
+            &[vec![1.0, 0.0, 2.0], vec![0.0, 3.0, 0.0]],
+            8,
+            2,
+        );
+        stats.record(
+            &[vec![1.0, 1.0, 0.0], vec![2.0, 0.0, 0.0]],
+            8,
+            2,
+        );
+        assert_eq!(stats.counts(), vec![vec![2, 1, 2], vec![2, 3, 0]]);
+        assert_eq!(stats.tokens(), 16);
+        assert_eq!(stats.requests(), 4);
+        // an extra layer and expert column are dropped, not grown
+        stats.record(
+            &[
+                vec![1.0, 0.0, 0.0, 9.0],
+                vec![0.0, 0.0, 0.0],
+                vec![7.0],
+            ],
+            1,
+            1,
+        );
+        assert_eq!(stats.counts()[0], vec![3, 1, 2]);
+        assert_eq!(stats.counts().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_joins_bits_and_round_trips_byte_stable() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
+        let grid = vec![vec![2.0; cfg.experts]; cfg.moe_layers()];
+        stats.record(&grid, 32, 4);
+        let pmap = PrecisionMap::uniform(&cfg, 3);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, Some(&pmap));
+        assert_eq!(snap.variant, cfg.name);
+        assert_eq!(snap.top_k, cfg.top_k);
+        assert_eq!(snap.total_hits(), 2 * cfg.total_experts() as u64);
+        let wb = snap.wire_bytes.as_ref().unwrap();
+        assert_eq!(wb[0][0], expert_bytes(&cfg, 3) as u64);
+        let wire = snap.to_json().to_string();
+        let back =
+            TrafficSnapshot::from_json(&Json::parse(&wire).unwrap())
+                .unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn dense_snapshot_serializes_null_bits() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, None);
+        assert!(snap.bits.is_none() && snap.wire_bytes.is_none());
+        let wire = snap.to_json().to_string();
+        assert!(wire.contains("\"bits\":null"));
+        let back =
+            TrafficSnapshot::from_json(&Json::parse(&wire).unwrap())
+                .unwrap();
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn from_json_rejects_shape_lies() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, None);
+        let mut j = snap.to_json();
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "experts" {
+                    *v = Json::Num(1.0);
+                }
+            }
+        }
+        assert!(TrafficSnapshot::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! Per-request stage traces and their bounded ring buffer.
+//!
+//! Each served request yields one [`TraceSpan`] decomposing its
+//! end-to-end latency into disjoint stages measured by the worker:
+//!
+//! - `queue_wait` — submit → popped off the bounded queue
+//! - `linger` — popped → batch triage starts (time spent waiting for
+//!   the batcher to fill, zero for jobs that arrived into a full batch)
+//! - `triage` — deadline partition + batch packing (shared per batch)
+//! - `execute` — the model forward (shared per batch)
+//! - `reply_send` — handing the reply back over the response channel
+//!
+//! The stages are sub-intervals of `[enqueued, trace-recorded]`, so
+//! their sum is ≤ `total` by construction — the gap is scheduling slack
+//! the worker did not attribute to any stage. Completed spans land in a
+//! [`TraceRing`]: a fixed-capacity window behind one short mutex (push
+//! = O(1) pop/push, snapshot = clone on demand) plus a monotone
+//! completion counter that never wraps.
+
+use crate::jsonx::Json;
+use crate::Result;
+use anyhow::bail;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn dur_json(d: Duration) -> Json {
+    Json::Num(d.as_nanos() as f64)
+}
+
+fn dur_from(j: &Json) -> Result<Duration> {
+    let ns = j.as_f64()?;
+    if !ns.is_finite() || ns < 0.0 {
+        bail!("duration must be a finite non-negative nanosecond count");
+    }
+    Ok(Duration::from_nanos(ns as u64))
+}
+
+/// One completed request's stage breakdown.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpan {
+    /// worker thread that served the request
+    pub worker: usize,
+    /// how many live jobs shared the batch (and its triage/execute)
+    pub batch_fill: usize,
+    pub queue_wait: Duration,
+    pub linger: Duration,
+    pub triage: Duration,
+    pub execute: Duration,
+    pub reply_send: Duration,
+    /// end-to-end: submit → trace recorded (≥ the stage sum)
+    pub total: Duration,
+}
+
+impl TraceSpan {
+    /// Sum of the attributed stages (≤ [`TraceSpan::total`]).
+    pub fn stage_sum(&self) -> Duration {
+        self.queue_wait
+            + self.linger
+            + self.triage
+            + self.execute
+            + self.reply_send
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("worker".into(), Json::Num(self.worker as f64)),
+            (
+                "batch_fill".into(),
+                Json::Num(self.batch_fill as f64),
+            ),
+            ("queue_wait_ns".into(), dur_json(self.queue_wait)),
+            ("linger_ns".into(), dur_json(self.linger)),
+            ("triage_ns".into(), dur_json(self.triage)),
+            ("execute_ns".into(), dur_json(self.execute)),
+            ("reply_send_ns".into(), dur_json(self.reply_send)),
+            ("total_ns".into(), dur_json(self.total)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceSpan> {
+        Ok(TraceSpan {
+            worker: j.req("worker")?.as_usize()?,
+            batch_fill: j.req("batch_fill")?.as_usize()?,
+            queue_wait: dur_from(j.req("queue_wait_ns")?)?,
+            linger: dur_from(j.req("linger_ns")?)?,
+            triage: dur_from(j.req("triage_ns")?)?,
+            execute: dur_from(j.req("execute_ns")?)?,
+            reply_send: dur_from(j.req("reply_send_ns")?)?,
+            total: dur_from(j.req("total_ns")?)?,
+        })
+    }
+}
+
+/// p50/p95/p99 of one stage across the ring's window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StagePct {
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+}
+
+impl StagePct {
+    fn of(mut samples: Vec<Duration>) -> StagePct {
+        samples.sort();
+        StagePct {
+            p50: percentile(&samples, 0.50),
+            p95: percentile(&samples, 0.95),
+            p99: percentile(&samples, 0.99),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("p50_ns".into(), dur_json(self.p50)),
+            ("p95_ns".into(), dur_json(self.p95)),
+            ("p99_ns".into(), dur_json(self.p99)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<StagePct> {
+        Ok(StagePct {
+            p50: dur_from(j.req("p50_ns")?)?,
+            p95: dur_from(j.req("p95_ns")?)?,
+            p99: dur_from(j.req("p99_ns")?)?,
+        })
+    }
+}
+
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Per-stage percentile summary over the ring's current window, plus
+/// the monotone completion total. Embedded in `MetricsSnapshot`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// spans in the summarized window (≤ ring capacity)
+    pub count: usize,
+    /// monotone total of traces ever completed (survives eviction)
+    pub completed: u64,
+    pub queue_wait: StagePct,
+    pub linger: StagePct,
+    pub triage: StagePct,
+    pub execute: StagePct,
+    pub reply_send: StagePct,
+    pub total: StagePct,
+}
+
+impl TraceSummary {
+    /// Stage names paired with their percentiles, in schema order —
+    /// the one list both the JSON codec and the Prometheus renderer
+    /// iterate, so the two expositions cannot drift.
+    pub fn stages(&self) -> [(&'static str, &StagePct); 6] {
+        [
+            ("queue_wait", &self.queue_wait),
+            ("linger", &self.linger),
+            ("triage", &self.triage),
+            ("execute", &self.execute),
+            ("reply_send", &self.reply_send),
+            ("total", &self.total),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("count".into(), Json::Num(self.count as f64)),
+            ("completed".into(), Json::Num(self.completed as f64)),
+        ];
+        for (name, pct) in self.stages() {
+            fields.push((name.into(), pct.to_json()));
+        }
+        Json::Obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceSummary> {
+        Ok(TraceSummary {
+            count: j.req("count")?.as_usize()?,
+            completed: j.req("completed")?.as_f64()? as u64,
+            queue_wait: StagePct::from_json(j.req("queue_wait")?)?,
+            linger: StagePct::from_json(j.req("linger")?)?,
+            triage: StagePct::from_json(j.req("triage")?)?,
+            execute: StagePct::from_json(j.req("execute")?)?,
+            reply_send: StagePct::from_json(j.req("reply_send")?)?,
+            total: StagePct::from_json(j.req("total")?)?,
+        })
+    }
+}
+
+/// Fixed-capacity window of the most recent completed traces.
+pub struct TraceRing {
+    capacity: usize,
+    completed: AtomicU64,
+    ring: Mutex<VecDeque<TraceSpan>>,
+}
+
+impl TraceRing {
+    /// `capacity` is clamped to ≥ 1 so the ring is never degenerate.
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        TraceRing {
+            capacity,
+            completed: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Monotone count of every trace ever pushed.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Record a completed request; evicts the oldest span at capacity.
+    pub fn push(&self, span: TraceSpan) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    /// The current window, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceSpan> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Per-stage percentiles over the current window.
+    pub fn summary(&self) -> TraceSummary {
+        let spans = self.snapshot();
+        let stage = |f: fn(&TraceSpan) -> Duration| {
+            StagePct::of(spans.iter().map(f).collect())
+        };
+        TraceSummary {
+            count: spans.len(),
+            completed: self.completed(),
+            queue_wait: stage(|s| s.queue_wait),
+            linger: stage(|s| s.linger),
+            triage: stage(|s| s.triage),
+            execute: stage(|s| s.execute),
+            reply_send: stage(|s| s.reply_send),
+            total: stage(|s| s.total),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(ms: u64) -> TraceSpan {
+        TraceSpan {
+            worker: 1,
+            batch_fill: 3,
+            queue_wait: Duration::from_millis(ms),
+            linger: Duration::from_micros(200),
+            triage: Duration::from_micros(30),
+            execute: Duration::from_millis(2),
+            reply_send: Duration::from_micros(5),
+            total: Duration::from_millis(ms + 3),
+        }
+    }
+
+    #[test]
+    fn span_json_round_trips_byte_stable() {
+        let s = span(7);
+        let wire = s.to_json().to_string();
+        let back = TraceSpan::from_json(&Json::parse(&wire).unwrap())
+            .unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn ring_caps_and_keeps_newest() {
+        let ring = TraceRing::new(4);
+        for ms in 0..10 {
+            ring.push(span(ms));
+        }
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(ring.completed(), 10);
+        // oldest evicted: the window is the last four pushes
+        assert_eq!(spans[0].queue_wait, Duration::from_millis(6));
+        assert_eq!(spans[3].queue_wait, Duration::from_millis(9));
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let ring = TraceRing::new(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.push(span(1));
+        ring.push(span(2));
+        assert_eq!(ring.snapshot().len(), 1);
+        assert_eq!(ring.completed(), 2);
+    }
+
+    #[test]
+    fn summary_percentiles_are_monotone_and_round_trip() {
+        let ring = TraceRing::new(64);
+        for ms in 1..=50 {
+            ring.push(span(ms));
+        }
+        let sum = ring.summary();
+        assert_eq!(sum.count, 50);
+        assert_eq!(sum.completed, 50);
+        for (_, pct) in sum.stages() {
+            assert!(pct.p50 <= pct.p95 && pct.p95 <= pct.p99);
+        }
+        let wire = sum.to_json().to_string();
+        let back =
+            TraceSummary::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, sum);
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn stage_sum_stays_within_total() {
+        let s = span(5);
+        assert!(s.stage_sum() <= s.total);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zero() {
+        let sum = TraceRing::new(8).summary();
+        assert_eq!(sum, TraceSummary::default());
+    }
+}

@@ -146,15 +146,25 @@ impl PackedMatrix {
 }
 
 /// Fused dequant-matmul `x[rows, din] @ W[din, dout]` where `W` stays
-/// bit-packed; dispatches to the width-specialized kernel.
+/// bit-packed; dispatches to the width-specialized kernel. Every call
+/// folds (calls, nominal weight bytes streamed, elapsed time) into the
+/// process-global [`crate::obs::kern`] counters for its width, so live
+/// per-width GB/s is visible at `/metrics?format=prometheus`.
 pub fn qmatmul(x: &[f32], rows: usize, pm: &PackedMatrix) -> Vec<f32> {
-    match pm.bits {
+    let start = std::time::Instant::now();
+    let out = match pm.bits {
         2 => qmatmul_bits::<2>(x, rows, pm),
         4 => qmatmul_bits::<4>(x, rows, pm),
         8 => qmatmul_bits::<8>(x, rows, pm),
         3 => qmatmul_bits::<3>(x, rows, pm),
         b => panic!("unsupported packed bit width {b}"),
-    }
+    };
+    crate::obs::kern::record(
+        pm.bits,
+        (rows * pm.words.len() * 4) as u64,
+        start.elapsed(),
+    );
+    out
 }
 
 /// The width-specialized fused kernel: ikj loop order, codes unpacked

@@ -1,0 +1,420 @@
+//! Observability integration: the serving telemetry plane over a real
+//! mixed {2,3,4}-bit packed engine.
+//!
+//! - the live per-expert routing histogram matches the **offline
+//!   routing oracle** exactly under concurrent load (same packed codes,
+//!   per-sample forwards, summed), and its grand total is the closed
+//!   form `tokens × top_k × moe_layers`,
+//! - the trace ring is bounded at `--trace-buffer`, every span's stage
+//!   sum nests inside its end-to-end latency, and the completion
+//!   counter survives eviction,
+//! - the HTTP endpoints serve it all live: `/metrics?format=prometheus`
+//!   parses (one sample per line, no duplicate series, TYPE declared
+//!   once) and its counters are monotone across two scrapes with
+//!   traffic in between; `/v1/experts` and `/v1/traces` round-trip
+//!   their schemas; `?format=bogus` is a typed 400.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::ModelExecutor;
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::{Engine, MetricsSnapshot, PrecisionSource, WeightForm};
+use mopeq::jsonx::Json;
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::net::http::{read_response, write_request, Response};
+use mopeq::net::{wire, NetConfig, NetServer};
+use mopeq::obs::routing::TrafficSnapshot;
+use mopeq::obs::trace::TraceSpan;
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::serve::{expert_bytes, BatchPolicy};
+use std::collections::{HashMap, HashSet};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A mixed {2,3,4}-bit allocation exercising every packed width.
+fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+    let mut pm = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+        }
+    }
+    pm
+}
+
+/// The offline routing oracle: per-sample forwards over an executor on
+/// the same packed codes (dequantized — routing is bit-exact between
+/// the packed and qdq lowerings), counts summed across samples.
+fn oracle_counts(
+    cfg: &ModelConfig,
+    seed: u64,
+    pmap: &PrecisionMap,
+    samples: &[Sample],
+) -> Vec<Vec<u64>> {
+    let ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    let store = PackedStore::rtn(cfg, &ws, pmap).unwrap();
+    let mut qdq = WeightStore::init(cfg, &local_meta(cfg), seed);
+    store.write_dequantized(&mut qdq).unwrap();
+    let session = Session::native();
+    let exec = ModelExecutor::new(&session, cfg, &qdq).unwrap();
+    let mut grid = vec![vec![0u64; cfg.experts]; cfg.moe_layers()];
+    for s in samples {
+        let (tokens, vis) = pack_batch(std::slice::from_ref(s), cfg);
+        let out = exec.forward(&tokens, &vis, false).unwrap();
+        for (row, layer) in grid.iter_mut().zip(&out.counts) {
+            for (cell, &c) in row.iter_mut().zip(layer) {
+                *cell += c as u64;
+            }
+        }
+    }
+    grid
+}
+
+#[test]
+fn expert_histogram_matches_the_offline_routing_oracle() {
+    const SEED: u64 = 41;
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 8;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let pmap = mixed_map(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(2 * CLIENTS * PER_CLIENT)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .build()
+        .unwrap();
+    let obs = engine.observer();
+
+    let workloads: Vec<Vec<Sample>> = (0..CLIENTS)
+        .map(|c| {
+            let mut rng = Rng::new(SEED).derive(&format!("obs-client-{c}"));
+            (0..PER_CLIENT)
+                .map(|i| {
+                    gen_sample(
+                        Task::ALL[(c + i) % Task::ALL.len()],
+                        &cfg,
+                        &mut rng,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    // concurrent load: the histogram folds batches from both workers
+    std::thread::scope(|scope| {
+        for samples in &workloads {
+            let client = engine.client();
+            scope.spawn(move || {
+                for s in samples {
+                    client.call(s.clone()).unwrap();
+                }
+            });
+        }
+    });
+
+    // counts are recorded before each reply is sent, so once every
+    // call returned the histogram is complete
+    let traffic = obs.traffic();
+    let all: Vec<Sample> = workloads.concat();
+    assert_eq!(
+        traffic.counts,
+        oracle_counts(&cfg, SEED, &pmap, &all),
+        "live histogram diverged from the offline routing oracle"
+    );
+    let total = CLIENTS * PER_CLIENT;
+    let tokens = total * cfg.seq;
+    assert_eq!(traffic.requests, total as u64);
+    assert_eq!(traffic.tokens, tokens as u64);
+    assert_eq!(
+        traffic.total_hits(),
+        (tokens * cfg.top_k * cfg.moe_layers()) as u64,
+        "Σ expert hits must equal tokens × top_k × moe_layers"
+    );
+
+    // the precision join: allocated widths and their wire bytes
+    assert_eq!(traffic.bits.as_ref().unwrap(), &pmap.bits);
+    let wire_bytes = traffic.wire_bytes.as_ref().unwrap();
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            assert_eq!(
+                wire_bytes[l][e],
+                expert_bytes(&cfg, pmap.bits[l][e]) as u64
+            );
+        }
+    }
+
+    // the exported artifact schema is byte-stable
+    let wire = traffic.to_json().to_string();
+    let back =
+        TrafficSnapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, traffic);
+    assert_eq!(back.to_json().to_string(), wire);
+
+    // every packed width in the map streamed through the counted kernel
+    for stat in mopeq::obs::kern::snapshot() {
+        if [2u8, 3, 4].contains(&stat.bits) {
+            assert!(
+                stat.calls > 0,
+                "{}-bit qmatmul served traffic but counted 0 calls",
+                stat.bits
+            );
+            assert!(stat.bytes > 0);
+        }
+    }
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn trace_ring_is_bounded_and_stage_sums_nest_inside_totals() {
+    const SEED: u64 = 7;
+    const REQUESTS: usize = 32;
+    const CAPACITY: usize = 8;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .trace_buffer(CAPACITY)
+        .queue_depth(4)
+        .build()
+        .unwrap();
+    let obs = engine.observer();
+    let client = engine.client();
+    let mut rng = Rng::new(SEED).derive("trace-client");
+    for i in 0..REQUESTS {
+        let task = Task::ALL[i % Task::ALL.len()];
+        client.call(gen_sample(task, &cfg, &mut rng)).unwrap();
+    }
+    // trace pushes happen after the reply is sent — shutdown joins the
+    // worker, so afterwards all 32 spans have landed deterministically
+    let stats = engine.shutdown().unwrap();
+
+    assert_eq!(obs.trace_capacity(), CAPACITY);
+    let spans = obs.traces();
+    assert_eq!(spans.len(), CAPACITY, "ring must hold exactly capacity");
+    for span in &spans {
+        assert!(
+            span.stage_sum() <= span.total,
+            "stage sum {:?} exceeds end-to-end {:?}",
+            span.stage_sum(),
+            span.total
+        );
+        assert!(span.batch_fill >= 1);
+        assert_eq!(span.worker, 0, "single-worker engine");
+    }
+    let summary = obs.trace_summary();
+    assert_eq!(summary.completed, REQUESTS as u64);
+    assert_eq!(summary.count, CAPACITY);
+    for (_, pct) in summary.stages() {
+        assert!(pct.p50 <= pct.p95 && pct.p95 <= pct.p99);
+    }
+    // the engine snapshot embeds the identical summary
+    assert_eq!(stats.trace, summary);
+    // satellite: per-worker p95 sits between p50 and p99 and survives
+    // the snapshot's JSON round-trip
+    for w in &stats.workers {
+        assert!(w.p50 <= w.p95 && w.p95 <= w.p99);
+    }
+    let back =
+        MetricsSnapshot::from_json(&stats.to_json()).unwrap();
+    assert_eq!(back.workers[0].p95, stats.workers[0].p95);
+    assert_eq!(back.trace, stats.trace);
+}
+
+/// One keep-alive wire client (same idiom as tests/net_integration.rs).
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    addr: String,
+}
+
+impl WireClient {
+    fn connect(addr: &str) -> WireClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            addr: addr.to_string(),
+        }
+    }
+
+    fn post_infer(&mut self, body: &Json) -> Response {
+        write_request(
+            &mut self.writer,
+            "POST",
+            "/v1/infer",
+            &self.addr,
+            Some(("application/json", body.to_string().as_bytes())),
+            &[],
+        )
+        .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> Response {
+        write_request(&mut self.writer, "GET", path, &self.addr, None, &[])
+            .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+}
+
+/// Parse a Prometheus text exposition, validating the format along the
+/// way: every non-comment line is `name{labels} value` with a float
+/// value, no series appears twice, and every family's TYPE is declared
+/// exactly once.
+fn parse_exposition(text: &str) -> HashMap<String, f64> {
+    let mut series = HashMap::new();
+    let mut typed = HashSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let family = rest.split_whitespace().next().unwrap().to_string();
+            assert!(
+                typed.insert(family.clone()),
+                "duplicate TYPE for {family}"
+            );
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("unparseable sample line: {line}"));
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("bad sample value in: {line}"));
+        assert!(
+            series.insert(key.to_string(), v).is_none(),
+            "duplicate series {key}"
+        );
+        let family = key.split('{').next().unwrap();
+        assert!(
+            typed.contains(family),
+            "sample {key} has no TYPE declaration"
+        );
+    }
+    series
+}
+
+#[test]
+fn telemetry_endpoints_serve_live_and_counters_stay_monotone() {
+    const SEED: u64 = 11;
+    const ROUND: usize = 4;
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let pmap = mixed_map(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(32)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .build()
+        .unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr);
+    let mut rng = Rng::new(SEED).derive("prom-client");
+    let mut drive = |client: &mut WireClient, rng: &mut Rng| {
+        for i in 0..ROUND {
+            let s = gen_sample(Task::ALL[i % Task::ALL.len()], &cfg, rng);
+            let resp = client.post_infer(&wire::sample_json(&s, None));
+            assert_eq!(resp.status, 200);
+        }
+    };
+
+    drive(&mut client, &mut rng);
+    let scrape1 = client.get("/metrics?format=prometheus");
+    assert_eq!(scrape1.status, 200);
+    assert!(scrape1
+        .header("content-type")
+        .unwrap()
+        .starts_with("text/plain"));
+    let series1 =
+        parse_exposition(&String::from_utf8(scrape1.body.clone()).unwrap());
+    assert!(series1.contains_key("mopeq_requests_total"));
+    assert!(series1
+        .keys()
+        .any(|k| k.starts_with("mopeq_expert_tokens_total{")));
+    assert!(series1
+        .keys()
+        .any(|k| k.starts_with("mopeq_qmatmul_calls_total{")));
+
+    // more traffic, second scrape: every counter is monotone and no
+    // series vanished
+    drive(&mut client, &mut rng);
+    let scrape2 = client.get("/metrics?format=prometheus");
+    let series2 =
+        parse_exposition(&String::from_utf8(scrape2.body.clone()).unwrap());
+    for (key, v1) in &series1 {
+        if key.split('{').next().unwrap().ends_with("_total") {
+            let v2 = series2
+                .get(key)
+                .unwrap_or_else(|| panic!("series {key} vanished"));
+            assert!(v2 >= v1, "counter {key} went backwards: {v1} → {v2}");
+        }
+    }
+    assert_eq!(
+        series2["mopeq_requests_total"], (2 * ROUND) as f64,
+        "requests counter must equal the served total"
+    );
+
+    // /v1/experts: the same traffic snapshot the in-process API exports
+    let experts = client.get("/v1/experts");
+    assert_eq!(experts.status, 200);
+    let t = TrafficSnapshot::from_json(&experts.json_body().unwrap())
+        .unwrap();
+    assert_eq!(t.moe_layers(), cfg.moe_layers());
+    assert_eq!(t.experts(), cfg.experts);
+    assert_eq!(t.bits.as_ref().unwrap(), &pmap.bits);
+    assert_eq!(t.requests, (2 * ROUND) as u64);
+    assert_eq!(
+        t.total_hits(),
+        (2 * ROUND * cfg.seq * cfg.top_k * cfg.moe_layers()) as u64
+    );
+
+    // /v1/traces: ring shape + summary + parseable spans
+    let traces = client.get("/v1/traces");
+    assert_eq!(traces.status, 200);
+    let j = traces.json_body().unwrap();
+    let capacity = j.req("capacity").unwrap().as_usize().unwrap();
+    assert_eq!(capacity, 256, "default --trace-buffer");
+    let spans = j.req("traces").unwrap().as_arr().unwrap();
+    assert!(spans.len() <= capacity);
+    for sj in spans {
+        let span = TraceSpan::from_json(sj).unwrap();
+        assert!(span.stage_sum() <= span.total);
+    }
+    j.req("summary").unwrap().req("queue_wait").unwrap();
+
+    // JSON metrics still the default, and a bogus format is a typed 400
+    let json_metrics = client.get("/metrics");
+    assert_eq!(json_metrics.status, 200);
+    let snap =
+        MetricsSnapshot::from_json(&json_metrics.json_body().unwrap())
+            .unwrap();
+    assert_eq!(snap.requests, 2 * ROUND);
+    let bogus = client.get("/metrics?format=xml");
+    assert_eq!(bogus.status, 400);
+    let code = bogus
+        .json_body()
+        .unwrap()
+        .req("error")
+        .unwrap()
+        .req("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(code, "bad_request");
+
+    server.shutdown().unwrap();
+}
