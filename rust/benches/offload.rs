@@ -3,14 +3,138 @@
 //! quantitative version of the paper's hardware-implications argument.
 //! Skewed (MolmoE-like) routing; hot experts are the sensitive ones
 //! under AF (high bits) but not under MoPEQ.
+//!
+//! The second half is **measured**, not simulated: a 2-worker packed
+//! engine on the tiered expert store, swept over `resident_bytes`
+//! caps, with real rps/p99/hit-rate per cap. Emits
+//! `reports/BENCH_offload.json` so the offload trajectory is diffable
+//! across PRs.
 
-use mopeq::benchx::section;
+use mopeq::benchx::{section, BenchLog};
 use mopeq::cluster::{assign_map, Granularity};
 use mopeq::config;
-use mopeq::moe::PrecisionMap;
+use mopeq::data::{gen_sample, Task};
+use mopeq::engine::{Engine, MetricsSnapshot, PrecisionSource, WeightForm};
+use mopeq::jsonx::Json;
+use mopeq::moe::{local_meta, PrecisionMap, WeightStore};
+use mopeq::rng::Rng;
 use mopeq::serve::{expert_bytes, simulate_offload, LinkModel, RoutingDist};
+use mopeq::store::StoreSnapshot;
 
-fn main() {
+fn drive(engine: Engine, n: usize) -> anyhow::Result<MetricsSnapshot> {
+    let cfg = engine.config().clone();
+    let client = engine.client();
+    let mut rng = Rng::new(11).derive("offload-bench");
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let task = Task::ALL[rng.below(Task::ALL.len())];
+        pending.push(client.submit(gen_sample(task, &cfg, &mut rng))?);
+    }
+    for t in pending {
+        t.wait()?;
+    }
+    engine.shutdown()
+}
+
+/// One measured sweep point as a BENCH_offload.json row.
+fn cap_row(
+    label: &str,
+    cap_bytes: usize,
+    s: &MetricsSnapshot,
+    st: Option<&StoreSnapshot>,
+) -> Json {
+    Json::Obj(vec![
+        ("label".into(), Json::Str(label.to_string())),
+        ("cap_bytes".into(), Json::Num(cap_bytes as f64)),
+        ("requests".into(), Json::Num(s.requests as f64)),
+        ("rps".into(), Json::Num(s.throughput_rps)),
+        ("p50_ns".into(), Json::Num(s.p50.as_nanos() as f64)),
+        ("p99_ns".into(), Json::Num(s.p99.as_nanos() as f64)),
+        (
+            "hit_rate".into(),
+            st.map_or(Json::Null, |st| Json::Num(st.hit_rate())),
+        ),
+        (
+            "resident_bytes".into(),
+            st.map_or(Json::Null, |st| Json::Num(st.resident_bytes as f64)),
+        ),
+        (
+            "evictions".into(),
+            st.map_or(Json::Null, |st| Json::Num(st.evictions as f64)),
+        ),
+        (
+            "bytes_paged".into(),
+            st.map_or(Json::Null, |st| Json::Num(st.bytes_paged as f64)),
+        ),
+    ])
+}
+
+fn measured_sweep(log: &mut BenchLog) -> anyhow::Result<()> {
+    section(
+        "measured tiered store (dsvl2_tiny, mixed {2,3,4} map, \
+         2 workers): rps/p99 vs resident-byte cap",
+    );
+    let cfg = config::variant("dsvl2_tiny")?;
+    let map = PrecisionMap {
+        bits: (0..cfg.moe_layers())
+            .map(|l| {
+                (0..cfg.experts)
+                    .map(|e| [2u8, 3, 4][(l + e) % 3])
+                    .collect()
+            })
+            .collect(),
+    };
+    let n = 48;
+    let build = |cap: Option<usize>| -> anyhow::Result<Engine> {
+        let mut b = Engine::builder(cfg.name)
+            .weights(WeightStore::init(&cfg, &local_meta(&cfg), 0))
+            .weight_form(WeightForm::Packed)
+            .precision(PrecisionSource::Map(map.clone()))
+            .workers(2)
+            .queue_depth(n);
+        if let Some(cap) = cap {
+            b = b.resident_bytes(cap);
+        }
+        b.build()
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    // fully-resident baseline — its measured expert heap is the 100% cap
+    let base = drive(build(None)?, n)?;
+    let full_heap = base.resident.expert_heap_bytes;
+    println!(
+        "resident    heap {:>8} B  p99 {:?}  {:>7.1} req/s",
+        full_heap, base.p99, base.throughput_rps
+    );
+    rows.push(cap_row("resident", full_heap, &base, None));
+    for frac in [0.25, 0.5, 1.0] {
+        let cap = (full_heap as f64 * frac) as usize;
+        let s = drive(build(Some(cap))?, n)?;
+        let st = s.store.clone().expect("tiered snapshot carries store");
+        println!(
+            "cap {:>4.0}%   heap {:>8} B  p99 {:?}  {:>7.1} req/s  \
+             hit rate {:.3}  {} evictions  {} B paged",
+            frac * 100.0,
+            st.resident_bytes,
+            s.p99,
+            s.throughput_rps,
+            st.hit_rate(),
+            st.evictions,
+            st.bytes_paged
+        );
+        rows.push(cap_row(
+            &format!("cap-{:.0}pct", frac * 100.0),
+            cap,
+            &s,
+            Some(&st),
+        ));
+    }
+    log.put_num("requests_per_row", n as f64);
+    log.put_num("full_heap_bytes", full_heap as f64);
+    log.put("measured_rows", Json::Arr(rows));
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
     let cfg = config::variant("molmoe").unwrap();
     let lm = cfg.moe_layers();
 
@@ -67,6 +191,7 @@ fn main() {
 
     section("hit rate + link time at 25% cache");
     let cache = full / 4;
+    let mut sim_rows: Vec<Json> = Vec::new();
     for (label, m) in [("AF-map", &af_map), ("MoPEQ-map", &mopeq_map),
                        ("uniform4", &uniform4)] {
         let r = simulate_offload(&cfg, m, &dist, &link, cache, requests, 7);
@@ -77,5 +202,21 @@ fn main() {
             r.transfer_secs * 1e3 / requests as f64,
             r.misses
         );
+        sim_rows.push(Json::Obj(vec![
+            ("label".into(), Json::Str(label.to_string())),
+            ("hit_rate".into(), Json::Num(r.hit_rate)),
+            (
+                "bytes_per_request".into(),
+                Json::Num(r.bytes_per_request),
+            ),
+            ("misses".into(), Json::Num(r.misses as f64)),
+        ]));
     }
+
+    let mut log = BenchLog::new("offload");
+    log.put("simulated_rows_25pct_cache", Json::Arr(sim_rows));
+    measured_sweep(&mut log)?;
+    let path = log.save()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
 }

@@ -18,9 +18,10 @@
 //! SignRound/GPTQ/AWQ calibration capture.
 
 use crate::config::ModelConfig;
-use crate::moe::packed::PackedStore;
+use crate::moe::packed::{PackedLayerExperts, PackedStore};
 use crate::moe::WeightStore;
 use crate::runtime::{Prepared, Session, Value};
+use crate::store::TieredStore;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -230,6 +231,14 @@ pub enum ExecWeights<'w> {
         backbone: &'w SharedArgs,
         experts: &'w PackedStore,
     },
+    /// packed experts paging in from a disk-backed
+    /// [`TieredStore`](crate::store::TieredStore) over an Arc-shared
+    /// backbone — the `--resident-bytes` deployment: expert heap is
+    /// bounded by the store's cap instead of holding every layer
+    SharedTiered {
+        backbone: &'w SharedArgs,
+        store: &'w Arc<TieredStore>,
+    },
 }
 
 /// Output of one forward pass.
@@ -274,6 +283,30 @@ fn check_packed(cfg: &ModelConfig, packed: &PackedStore) -> Result<()> {
             "packed store shape {}x{} != config {}x{}",
             packed.moe_layers(),
             packed.experts_per_layer(),
+            cfg.moe_layers(),
+            cfg.experts
+        );
+    }
+    Ok(())
+}
+
+/// Same validation for a tiered store (its shape lives in the artifact
+/// index rather than resident layers).
+fn check_tiered(cfg: &ModelConfig, store: &TieredStore) -> Result<()> {
+    if store.variant() != cfg.name {
+        bail!(
+            "tiered store is for `{}`, config is `{}`",
+            store.variant(),
+            cfg.name
+        );
+    }
+    if store.moe_layers() != cfg.moe_layers()
+        || store.experts_per_layer() != cfg.experts
+    {
+        bail!(
+            "tiered store shape {}x{} != config {}x{}",
+            store.moe_layers(),
+            store.experts_per_layer(),
             cfg.moe_layers(),
             cfg.experts
         );
@@ -361,6 +394,21 @@ impl<'a> ModelExecutor<'a> {
                     Ok(ExpertArgs::Packed(
                         session
                             .prepare_owned(Value::Packed(experts.layer(l)))?,
+                    ))
+                })
+            }
+            ExecWeights::SharedTiered { backbone, store } => {
+                check_tiered(cfg, store)?;
+                let entry =
+                    format!("{}/moe_layer_packed", cfg.moe_signature());
+                let source = ArgSource::Shared(backbone);
+                Self::build(session, cfg, &source, entry, |l| {
+                    let layer = Arc::new(PackedLayerExperts::tiered(
+                        store.clone(),
+                        l,
+                    ));
+                    Ok(ExpertArgs::Packed(
+                        session.prepare_owned(Value::Packed(layer))?,
                     ))
                 })
             }

@@ -9,6 +9,7 @@
 use crate::coordinator::executor::ResidentReport;
 use crate::jsonx::Json;
 use crate::obs::trace::TraceSummary;
+use crate::store::StoreSnapshot;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -52,6 +53,11 @@ pub struct MetricsSnapshot {
     /// engine's shared state), so [`Metrics::snapshot`] leaves this at
     /// default and the engine-level snapshot path fills it in.
     pub trace: TraceSummary,
+    /// tiered expert store counters when the engine runs with a
+    /// bounded resident set (`--resident-bytes`); `None` for fully
+    /// resident deployments. Filled by the engine-level snapshot path
+    /// like [`MetricsSnapshot::trace`].
+    pub store: Option<StoreSnapshot>,
 }
 
 /// One worker's slice of the snapshot.
@@ -111,6 +117,13 @@ impl MetricsSnapshot {
                 Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()),
             ),
             ("trace".into(), self.trace.to_json()),
+            (
+                "store".into(),
+                match &self.store {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -136,6 +149,10 @@ impl MetricsSnapshot {
                 .map(WorkerSnapshot::from_json)
                 .collect::<Result<_>>()?,
             trace: TraceSummary::from_json(j.req("trace")?)?,
+            store: match j.req("store")? {
+                Json::Null => None,
+                s => Some(StoreSnapshot::from_json(s)?),
+            },
         })
     }
 }
@@ -326,6 +343,7 @@ impl Metrics {
             resident: self.resident.lock().unwrap().unwrap_or_default(),
             workers,
             trace: TraceSummary::default(),
+            store: None,
         }
     }
 }
@@ -418,7 +436,22 @@ mod tests {
         // to_json → string → parse → from_json → to_json → string must
         // reproduce the exact bytes: this is what `/metrics` returns and
         // what the traffic-aware reallocation loop will diff
-        for s in [busy_snapshot(), Metrics::new(1).snapshot(0)] {
+        let mut tiered = busy_snapshot();
+        tiered.store = Some(StoreSnapshot {
+            capacity_bytes: 262_144,
+            resident_bytes: 258_048,
+            resident_experts: 60,
+            total_experts: 704,
+            artifact_bytes: 2_700_000,
+            prefetch_enabled: true,
+            hits: 900,
+            misses: 100,
+            prefetch_hits: 400,
+            prefetched: 450,
+            evictions: 80,
+            bytes_paged: 460_800,
+        });
+        for s in [busy_snapshot(), tiered, Metrics::new(1).snapshot(0)] {
             let wire = s.to_json().to_string();
             let parsed = crate::jsonx::Json::parse(&wire).unwrap();
             let back = MetricsSnapshot::from_json(&parsed).unwrap();
@@ -442,6 +475,7 @@ mod tests {
                 assert_eq!(a.p95, b.p95);
             }
             assert_eq!(back.trace, s.trace);
+            assert_eq!(back.store, s.store);
             assert_eq!(
                 back.resident.shared_bytes,
                 s.resident.shared_bytes

@@ -73,10 +73,12 @@ use crate::obs::routing::{RoutingStats, TrafficSnapshot};
 use crate::obs::trace::{TraceRing, TraceSpan, TraceSummary};
 use crate::search::SearchSpec;
 use crate::serve::BatchPolicy;
+use crate::store::TieredStore;
 use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
 use queue::JobQueue;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -273,6 +275,13 @@ pub(crate) enum EngineWeights {
         backbone: Arc<SharedArgs>,
         experts: Arc<PackedStore>,
     },
+    /// packed experts spilled to disk behind a bounded resident set
+    /// (`--resident-bytes`) — the in-RAM `PackedStore` is dropped at
+    /// build and every worker pages through the one shared store
+    Tiered {
+        backbone: Arc<SharedArgs>,
+        store: Arc<TieredStore>,
+    },
 }
 
 impl EngineWeights {
@@ -287,6 +296,12 @@ impl EngineWeights {
                     experts,
                 }
             }
+            EngineWeights::Tiered { backbone, store } => {
+                crate::coordinator::ExecWeights::SharedTiered {
+                    backbone,
+                    store,
+                }
+            }
         }
     }
 }
@@ -298,15 +313,18 @@ pub(crate) struct Shared {
     pub(crate) routing: RoutingStats,
     /// bounded window of completed request traces
     pub(crate) traces: TraceRing,
+    /// the tiered expert store, when serving under `--resident-bytes`
+    pub(crate) store: Option<Arc<TieredStore>>,
 }
 
 impl Shared {
     /// The full snapshot every public path serves: counters + the trace
-    /// summary (which `Metrics` alone cannot see — the ring lives here,
-    /// beside it).
+    /// summary and store accounting (which `Metrics` alone cannot see —
+    /// the ring and store live here, beside it).
     fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot(self.queue.len());
         snap.trace = self.traces.summary();
+        snap.store = self.store.as_ref().map(|s| s.snapshot());
         snap
     }
 }
@@ -325,6 +343,10 @@ pub struct EngineBuilder {
     workers: usize,
     queue_depth: usize,
     trace_buffer: usize,
+    trace_sample: usize,
+    resident_bytes: Option<usize>,
+    store_path: Option<PathBuf>,
+    prefetch: bool,
 }
 
 impl EngineBuilder {
@@ -341,6 +363,10 @@ impl EngineBuilder {
             workers: 1,
             queue_depth: 128,
             trace_buffer: 256,
+            trace_sample: 1,
+            resident_bytes: None,
+            store_path: None,
+            prefetch: true,
         }
     }
 
@@ -425,6 +451,40 @@ impl EngineBuilder {
         self
     }
 
+    /// Trace sampling: keep 1-in-`n` completed request traces
+    /// (clamped to ≥ 1, i.e. keep all). The completion counter still
+    /// counts every request, so high-QPS deployments keep a useful
+    /// ring window without the per-request push cost.
+    pub fn trace_sample(mut self, n: usize) -> Self {
+        self.trace_sample = n.max(1);
+        self
+    }
+
+    /// Serve the packed experts from a disk-backed tiered store whose
+    /// resident set is bounded by `bytes` of real expert heap
+    /// (u32-padded words + f32 scales) — the "model bigger than RAM"
+    /// deployment. Requires [`WeightForm::Packed`]. The cap must fit
+    /// the largest single expert.
+    pub fn resident_bytes(mut self, bytes: usize) -> Self {
+        self.resident_bytes = Some(bytes);
+        self
+    }
+
+    /// Where the tiered store's artifact file lives. Default: a
+    /// per-engine temp file, deleted on shutdown; an explicit path is
+    /// kept on disk for reuse.
+    pub fn store_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.store_path = Some(path.into());
+        self
+    }
+
+    /// Enable/disable the tiered store's background predictive
+    /// prefetch thread (default on; demand paging only when off).
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
     /// Resolve the deployment through the [`spec::PreparedWeights`]
     /// pipeline (resolve → calibrate → allocate → quantize/pack →
     /// strip), then spawn and warm the worker pool. Returns once every
@@ -459,12 +519,42 @@ impl EngineBuilder {
         )?;
         let PreparedWeights { weights, pmap, provenance, stats } = prepared;
 
+        // `--resident-bytes`: spill the packed experts to the tiered
+        // store's disk artifact and drop the in-RAM copy — from here on
+        // every worker pages experts through the bounded resident set
+        let mut store_handle: Option<Arc<TieredStore>> = None;
+        let weights = match (self.resident_bytes, weights) {
+            (Some(cap), EngineWeights::Packed { backbone, experts }) => {
+                let path = match &self.store_path {
+                    Some(p) => p.clone(),
+                    None => default_store_path(&self.variant),
+                };
+                let keep = self.store_path.is_some();
+                let store = Arc::new(TieredStore::build(
+                    &experts,
+                    &path,
+                    cap,
+                    self.prefetch,
+                    keep,
+                )?);
+                drop(experts);
+                store_handle = Some(store.clone());
+                EngineWeights::Tiered { backbone, store }
+            }
+            (Some(_), _) => bail!(
+                "resident_bytes bounds the packed expert store — it \
+                 requires WeightForm::Packed"
+            ),
+            (None, w) => w,
+        };
+
         let weights = Arc::new(weights);
         let shared = Arc::new(Shared {
             queue: JobQueue::new(self.queue_depth),
             metrics: Metrics::new(self.workers),
             routing: RoutingStats::new(cfg.moe_layers(), cfg.experts),
-            traces: TraceRing::new(self.trace_buffer),
+            traces: TraceRing::sampled(self.trace_buffer, self.trace_sample),
+            store: store_handle,
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::with_capacity(self.workers);
@@ -530,6 +620,18 @@ impl EngineBuilder {
         shared.metrics.mark_started();
         Ok(Engine { shared, workers: handles, cfg, pmap, provenance, stats })
     }
+}
+
+/// Unique per-engine artifact path for an auto-created tiered store
+/// (pid + a process-wide sequence, so concurrent engines in one test
+/// binary never collide). The file is deleted when the store drops.
+fn default_store_path(variant: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "mopeq_store_{variant}_{}_{n}.bin",
+        std::process::id()
+    ))
 }
 
 /// A running deployment: worker pool + shared queue + live metrics.
@@ -704,6 +806,7 @@ impl ObsHandle {
             &self.shared.routing,
             &self.cfg,
             self.pmap.as_ref(),
+            self.shared.store.as_ref().map(|s| s.snapshot()),
         )
     }
 

@@ -69,6 +69,19 @@ pub struct ServeConfig {
     pub linger_ms: u64,
     /// request-trace ring capacity (`GET /v1/traces` window)
     pub trace_buffer: usize,
+    /// keep 1 in `trace_sample` completed request traces (1 = all)
+    pub trace_sample: usize,
+    /// bound the packed expert resident set to this many heap bytes —
+    /// experts spill to the tiered store's disk artifact and page in
+    /// on demand. Requires `packed`.
+    pub resident_bytes: Option<usize>,
+    /// where the tiered store's artifact file lives (kept on disk for
+    /// reuse); `None` = a per-engine temp file, deleted on shutdown.
+    /// Only applies with `resident_bytes`.
+    pub store_path: Option<PathBuf>,
+    /// background predictive prefetch for the tiered store (default
+    /// on; `false` = demand paging only)
+    pub prefetch: bool,
     /// `addr:port` for the HTTP front-end (`mopeq serve --listen`);
     /// `None` = the in-process demo loop
     pub listen: Option<String>,
@@ -97,6 +110,10 @@ impl Default for ServeConfig {
             queue_depth: 128,
             linger_ms: 2,
             trace_buffer: 256,
+            trace_sample: 1,
+            resident_bytes: None,
+            store_path: None,
+            prefetch: true,
             listen: None,
         }
     }
@@ -217,6 +234,23 @@ impl ServeConfig {
                 self.quantizer
             );
         }
+        if self.resident_bytes.is_some()
+            && self.weight_form()? != WeightForm::Packed
+        {
+            bail!(
+                "`resident_bytes` bounds the packed expert store — it \
+                 requires a packed deployment (set `packed`)"
+            );
+        }
+        if self.store_path.is_some() && self.resident_bytes.is_none() {
+            bail!(
+                "`store_path` places the tiered store's artifact — it \
+                 only applies with `resident_bytes`"
+            );
+        }
+        if self.trace_sample == 0 {
+            bail!("`trace_sample` keeps 1 in N traces — N must be ≥ 1");
+        }
         self.weight_form()?;
         quant.validate()?;
         Ok(())
@@ -277,6 +311,22 @@ impl ServeConfig {
                 "trace_buffer".into(),
                 Json::Num(self.trace_buffer as f64),
             ),
+            (
+                "trace_sample".into(),
+                Json::Num(self.trace_sample as f64),
+            ),
+            (
+                "resident_bytes".into(),
+                self.resident_bytes
+                    .map_or(Json::Null, |b| Json::Num(b as f64)),
+            ),
+            (
+                "store_path".into(),
+                self.store_path.as_ref().map_or(Json::Null, |p| {
+                    Json::Str(p.display().to_string())
+                }),
+            ),
+            ("prefetch".into(), Json::Bool(self.prefetch)),
             ("listen".into(), opt_str(&self.listen)),
         ])
     }
@@ -284,7 +334,7 @@ impl ServeConfig {
     /// Deserialize: missing keys take their defaults (partial configs
     /// are valid), unknown keys fail typed (the typo guard).
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
-        const KNOWN: [&str; 20] = [
+        const KNOWN: [&str; 24] = [
             "model",
             "seed",
             "packed",
@@ -304,6 +354,10 @@ impl ServeConfig {
             "queue_depth",
             "linger_ms",
             "trace_buffer",
+            "trace_sample",
+            "resident_bytes",
+            "store_path",
+            "prefetch",
             "listen",
         ];
         for (k, _) in j.as_obj()? {
@@ -386,6 +440,18 @@ impl ServeConfig {
         }
         if let Some(v) = get("trace_buffer") {
             sc.trace_buffer = v.as_usize()?;
+        }
+        if let Some(v) = get("trace_sample") {
+            sc.trace_sample = v.as_usize()?;
+        }
+        if let Some(v) = get("resident_bytes") {
+            sc.resident_bytes = Some(v.as_usize()?);
+        }
+        if let Some(v) = get("store_path") {
+            sc.store_path = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = get("prefetch") {
+            sc.prefetch = as_bool(v)?;
         }
         if let Some(v) = get("listen") {
             sc.listen = Some(v.as_str()?.to_string());
@@ -477,6 +543,18 @@ impl ServeConfig {
         self.linger_ms = args.u64_flag("linger-ms", self.linger_ms)?;
         self.trace_buffer =
             args.usize_flag("trace-buffer", self.trace_buffer)?;
+        self.trace_sample =
+            args.usize_flag("trace-sample", self.trace_sample)?;
+        if args.flags.contains_key("resident-bytes") {
+            self.resident_bytes =
+                Some(args.usize_flag("resident-bytes", 0)?);
+        }
+        if let Some(p) = args.flags.get("store-path") {
+            self.store_path = Some(PathBuf::from(p));
+        }
+        if args.switch("no-prefetch") {
+            self.prefetch = false;
+        }
         if let Some(l) = args.flags.get("listen") {
             self.listen = Some(l.clone());
         }
@@ -516,7 +594,7 @@ impl EngineBuilder {
     /// the deployment shape, not the checkpoint.
     pub fn from_config(sc: &ServeConfig) -> Result<EngineBuilder> {
         sc.validate()?;
-        Ok(Engine::builder(&sc.model)
+        let mut b = Engine::builder(&sc.model)
             .seed(sc.seed)
             .weight_form(sc.weight_form()?)
             .precision(sc.precision()?)
@@ -526,7 +604,16 @@ impl EngineBuilder {
             .batch_policy(BatchPolicy {
                 max_linger: Duration::from_millis(sc.linger_ms),
             })
-            .trace_buffer(sc.trace_buffer))
+            .trace_buffer(sc.trace_buffer)
+            .trace_sample(sc.trace_sample)
+            .prefetch(sc.prefetch);
+        if let Some(cap) = sc.resident_bytes {
+            b = b.resident_bytes(cap);
+        }
+        if let Some(p) = &sc.store_path {
+            b = b.store_path(p.clone());
+        }
+        Ok(b)
     }
 }
 
@@ -549,6 +636,10 @@ mod tests {
             granularity: Some("layer".into()),
             palette: Some(vec![2, 4]),
             budget: Some(3.25),
+            trace_sample: 8,
+            resident_bytes: Some(262_144),
+            store_path: Some(PathBuf::from("stores/a.bin")),
+            prefetch: false,
             listen: Some("127.0.0.1:0".into()),
             ..ServeConfig::default()
         };
@@ -617,6 +708,40 @@ mod tests {
         assert_eq!(sc.trace_buffer, 32);
         assert!(sc.packed);
         assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:0"));
+    }
+
+    #[test]
+    fn store_knobs_merge_and_guard() {
+        // flags overlay the file values
+        let mut sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        let args = crate::cli::parse(&argv(&[
+            "serve", "--resident-bytes", "262144", "--store-path",
+            "s.bin", "--no-prefetch", "--trace-sample", "10",
+        ]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.resident_bytes, Some(262_144));
+        assert_eq!(sc.store_path.as_deref(), Some(Path::new("s.bin")));
+        assert!(!sc.prefetch);
+        assert_eq!(sc.trace_sample, 10);
+        sc.validate().unwrap();
+        // resident_bytes without packed is a typed error
+        let sc = ServeConfig {
+            resident_bytes: Some(1 << 20),
+            ..ServeConfig::default()
+        };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("packed"), "{err}");
+        // store_path without resident_bytes is a typed error
+        let sc = ServeConfig {
+            packed: true,
+            store_path: Some(PathBuf::from("s.bin")),
+            ..ServeConfig::default()
+        };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("resident_bytes"), "{err}");
+        // trace_sample 0 is a typed error
+        let sc = ServeConfig { trace_sample: 0, ..ServeConfig::default() };
+        assert!(sc.validate().is_err());
     }
 
     #[test]

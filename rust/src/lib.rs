@@ -43,6 +43,7 @@ pub mod rng;
 pub mod runtime;
 pub mod search;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod train;
 

@@ -93,7 +93,10 @@ fn print_usage() {
          \x20         [--quantizer rtn|signround|gptq|awq] + allocate flags\n\
          \x20         [--config serve.json] [--save-config serve.json]\n\
          \x20         [--listen 127.0.0.1:0 [--addr-file f] [--serve-secs S]]\n\
-         \x20         [--trace-buffer N] [--traffic-out traffic.json]\n\
+         \x20         [--resident-bytes B [--store-path f.bin]\n\
+         \x20          [--no-prefetch]]\n\
+         \x20         [--trace-buffer N] [--trace-sample N]\n\
+         \x20         [--traffic-out traffic.json]\n\
          loadgen:  --addr host:port [--concurrency N] [--duration S]\n\
          \x20         [--deadline-ms N] [--min-ok N] [--expect-busy]\n\
          \x20         [--check-metrics] [--bench-out name]\n\
@@ -929,6 +932,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.workers.len(),
         r.process_bytes(stats.workers.len().max(1)),
     );
+    if let Some(st) = &stats.store {
+        println!(
+            "tiered store: {}/{} experts resident ({} B of {} B cap, \
+             artifact {} B); {} hits ({} via prefetch) / {} misses \
+             (hit rate {:.3}), {} staged, {} evictions, {} B paged in",
+            st.resident_experts,
+            st.total_experts,
+            st.resident_bytes,
+            st.capacity_bytes,
+            st.artifact_bytes,
+            st.hits,
+            st.prefetch_hits,
+            st.misses,
+            st.hit_rate(),
+            st.prefetched,
+            st.evictions,
+            st.bytes_paged
+        );
+    }
     if let Some(pmap) = &pmap {
         let accounted: usize = pmap
             .iter_experts()
@@ -992,6 +1014,19 @@ fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
         stats.p99,
         stats.throughput_rps
     );
+    if let Some(st) = &stats.store {
+        println!(
+            "tiered store: {}/{} experts resident ({} B of {} B cap); \
+             hit rate {:.3}, {} evictions, {} B paged in",
+            st.resident_experts,
+            st.total_experts,
+            st.resident_bytes,
+            st.capacity_bytes,
+            st.hit_rate(),
+            st.evictions,
+            st.bytes_paged
+        );
+    }
     if let Some(path) = args.flags.get("traffic-out") {
         let traffic = obs.traffic();
         traffic.save(Path::new(path))?;

@@ -5,7 +5,9 @@
 pub mod packed;
 pub mod size;
 
-pub use packed::{PackedExpert, PackedLayerExperts, PackedMat, PackedStore};
+pub use packed::{
+    ExpertHandle, PackedExpert, PackedLayerExperts, PackedMat, PackedStore,
+};
 pub use size::{
     expert_size_bits, model_size_bits, model_size_mb, SizePolicy,
 };

@@ -121,31 +121,144 @@ impl PackedExpert {
     }
 }
 
+/// Where one layer's experts physically live.
+#[derive(Debug)]
+enum ExpertProvider {
+    /// all experts on the heap (the always-resident deployment)
+    Resident(Vec<PackedExpert>),
+    /// experts page in from a disk artifact through a bounded
+    /// resident set ([`crate::store::TieredStore`])
+    Tiered { store: Arc<crate::store::TieredStore>, layer: usize },
+}
+
+/// A borrowed-or-paged expert reference. Resident layers hand out
+/// plain borrows; tiered layers hand out the `Arc` the store's
+/// resident set retains, so eviction can never invalidate a reader
+/// mid-FFN. `Deref` makes both arms read like `&PackedExpert`.
+pub enum ExpertHandle<'a> {
+    Resident(&'a PackedExpert),
+    Paged(Arc<PackedExpert>),
+}
+
+impl std::ops::Deref for ExpertHandle<'_> {
+    type Target = PackedExpert;
+
+    fn deref(&self) -> &PackedExpert {
+        match self {
+            ExpertHandle::Resident(e) => e,
+            ExpertHandle::Paged(a) => a,
+        }
+    }
+}
+
 /// All experts of one MoE layer — the unit the executor prepares and
-/// the backend consumes as a single `Value::Packed` argument.
+/// the backend consumes as a single `Value::Packed` argument. The
+/// backend goes through [`PackedLayerExperts::expert`] and never sees
+/// whether the expert was resident or paged in from disk.
 #[derive(Debug)]
 pub struct PackedLayerExperts {
     /// registry-visible shape (`[n_experts]`) reported by
     /// `Value::shape`
     pub shape: Vec<usize>,
-    pub experts: Vec<PackedExpert>,
+    provider: ExpertProvider,
 }
 
 impl PackedLayerExperts {
     pub fn new(experts: Vec<PackedExpert>) -> PackedLayerExperts {
-        PackedLayerExperts { shape: vec![experts.len()], experts }
+        PackedLayerExperts {
+            shape: vec![experts.len()],
+            provider: ExpertProvider::Resident(experts),
+        }
+    }
+
+    /// A layer view over a tiered store: experts page in on demand.
+    pub fn tiered(
+        store: Arc<crate::store::TieredStore>,
+        layer: usize,
+    ) -> PackedLayerExperts {
+        PackedLayerExperts {
+            shape: vec![store.experts_per_layer()],
+            provider: ExpertProvider::Tiered { store, layer },
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn is_tiered(&self) -> bool {
+        matches!(self.provider, ExpertProvider::Tiered { .. })
+    }
+
+    /// Fetch one expert for evaluation — a borrow when resident, a
+    /// demand page-in (hit or disk read) when tiered.
+    pub fn expert(&self, ei: usize) -> Result<ExpertHandle<'_>> {
+        match &self.provider {
+            ExpertProvider::Resident(v) => {
+                v.get(ei).map(ExpertHandle::Resident).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "expert {ei} out of range ({} in layer)",
+                        v.len()
+                    )
+                })
+            }
+            ExpertProvider::Tiered { store, layer } => {
+                let id = ExpertId { layer: *layer, expert: ei };
+                Ok(ExpertHandle::Paged(store.get(id)?))
+            }
+        }
+    }
+
+    /// Routing lookahead: hand the store the expert ids routing just
+    /// selected so the prefetcher can stage upcoming work. No-op for
+    /// resident layers.
+    pub fn will_need(&self, experts: &[usize]) {
+        if let ExpertProvider::Tiered { store, layer } = &self.provider {
+            store.will_need(*layer, experts);
+        }
+    }
+
+    /// The resident expert slice, when this layer holds one (always
+    /// the case for layers inside a [`PackedStore`]).
+    pub fn resident_experts(&self) -> Option<&[PackedExpert]> {
+        match &self.provider {
+            ExpertProvider::Resident(v) => Some(v),
+            ExpertProvider::Tiered { .. } => None,
+        }
     }
 
     pub fn accounted_bytes(&self) -> usize {
-        self.experts.iter().map(|e| e.accounted_bytes()).sum()
+        match &self.provider {
+            ExpertProvider::Resident(v) => {
+                v.iter().map(|e| e.accounted_bytes()).sum()
+            }
+            ExpertProvider::Tiered { store, layer } => {
+                store.layer_accounted_bytes(*layer)
+            }
+        }
     }
 
+    /// Heap bytes pinned by this layer handle itself. A tiered layer
+    /// pins none — its residency lives in (and is bounded/reported
+    /// by) the shared store.
     pub fn heap_bytes(&self) -> usize {
-        self.experts.iter().map(|e| e.heap_bytes()).sum()
+        match &self.provider {
+            ExpertProvider::Resident(v) => {
+                v.iter().map(|e| e.heap_bytes()).sum()
+            }
+            ExpertProvider::Tiered { .. } => 0,
+        }
     }
 
     pub fn dense_mats(&self) -> usize {
-        self.experts.iter().map(|e| e.dense_mats()).sum()
+        match &self.provider {
+            ExpertProvider::Resident(v) => {
+                v.iter().map(|e| e.dense_mats()).sum()
+            }
+            ExpertProvider::Tiered { store, layer } => {
+                store.layer_dense_mats(*layer)
+            }
+        }
     }
 }
 
@@ -221,7 +334,16 @@ impl PackedStore {
     }
 
     pub fn experts_per_layer(&self) -> usize {
-        self.layers.first().map_or(0, |l| l.experts.len())
+        self.layers.first().map_or(0, |l| l.n_experts())
+    }
+
+    /// The resident expert slice of one layer (a `PackedStore` always
+    /// holds its experts on the heap; tiered views are built *from* it
+    /// by `store::TieredStore`).
+    fn resident(&self, l: usize) -> &[PackedExpert] {
+        self.layers[l]
+            .resident_experts()
+            .expect("PackedStore layers are always resident")
     }
 
     /// One layer's experts as the shared handle the executor prepares.
@@ -230,7 +352,7 @@ impl PackedStore {
     }
 
     pub fn expert(&self, id: ExpertId) -> &PackedExpert {
-        &self.layers[id.layer].experts[id.expert]
+        &self.resident(id.layer)[id.expert]
     }
 
     pub fn bits(&self, id: ExpertId) -> u8 {
@@ -240,10 +362,8 @@ impl PackedStore {
     /// The precision map this store realizes.
     pub fn precision_map(&self) -> PrecisionMap {
         PrecisionMap {
-            bits: self
-                .layers
-                .iter()
-                .map(|l| l.experts.iter().map(|e| e.bits).collect())
+            bits: (0..self.layers.len())
+                .map(|l| self.resident(l).iter().map(|e| e.bits).collect())
                 .collect(),
         }
     }
@@ -252,9 +372,8 @@ impl PackedStore {
     /// width outside the packed u32 layout); 0 for a fully mixed
     /// 2/3/4-bit MoPEQ allocation.
     pub fn dense_expert_count(&self) -> usize {
-        self.layers
-            .iter()
-            .flat_map(|l| l.experts.iter())
+        (0..self.layers.len())
+            .flat_map(|l| self.resident(l).iter())
             .filter(|e| e.dense_mats() > 0)
             .count()
     }
@@ -286,8 +405,8 @@ impl PackedStore {
                 ws.variant
             );
         }
-        for (layer, pl) in self.layers.iter().enumerate() {
-            for (expert, pe) in pl.experts.iter().enumerate() {
+        for layer in 0..self.layers.len() {
+            for (expert, pe) in self.resident(layer).iter().enumerate() {
                 let id = ExpertId { layer, expert };
                 for (which, mat) in ExpertMat::ALL.iter().zip(pe.mats()) {
                     match mat {

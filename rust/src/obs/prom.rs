@@ -248,6 +248,85 @@ pub fn render(
         }
     }
 
+    if let Some(st) = &snap.store {
+        e.family(
+            "mopeq_store_accesses_total",
+            "counter",
+            "Tiered expert store serving-path accesses, by result.",
+        );
+        for (result, n) in [
+            ("demand_hit", st.hits.saturating_sub(st.prefetch_hits)),
+            ("prefetch_hit", st.prefetch_hits),
+            ("miss", st.misses),
+        ] {
+            e.sample(
+                "mopeq_store_accesses_total",
+                &[("result", result.to_string())],
+                n as f64,
+            );
+        }
+        e.family(
+            "mopeq_store_prefetched_total",
+            "counter",
+            "Experts staged by the background prefetcher.",
+        );
+        e.sample(
+            "mopeq_store_prefetched_total",
+            &[],
+            st.prefetched as f64,
+        );
+        e.family(
+            "mopeq_store_evictions_total",
+            "counter",
+            "Experts evicted from the bounded resident set.",
+        );
+        e.sample(
+            "mopeq_store_evictions_total",
+            &[],
+            st.evictions as f64,
+        );
+        e.family(
+            "mopeq_store_bytes_paged_total",
+            "counter",
+            "Expert heap bytes paged in from the disk artifact.",
+        );
+        e.sample(
+            "mopeq_store_bytes_paged_total",
+            &[],
+            st.bytes_paged as f64,
+        );
+        e.family(
+            "mopeq_store_resident_bytes",
+            "gauge",
+            "Expert heap bytes currently resident in the store.",
+        );
+        e.sample(
+            "mopeq_store_resident_bytes",
+            &[],
+            st.resident_bytes as f64,
+        );
+        e.family(
+            "mopeq_store_capacity_bytes",
+            "gauge",
+            "Configured resident-set byte cap.",
+        );
+        e.sample(
+            "mopeq_store_capacity_bytes",
+            &[],
+            st.capacity_bytes as f64,
+        );
+        e.family(
+            "mopeq_store_resident_experts",
+            "gauge",
+            "Experts currently resident in the store.",
+        );
+        e.sample(
+            "mopeq_store_resident_experts",
+            &[],
+            st.resident_experts as f64,
+        );
+    }
+
     e.family(
         "mopeq_qmatmul_calls_total",
         "counter",
@@ -352,6 +431,56 @@ mod tests {
                 line.split(['{', ' ']).next().expect("metric name");
             assert!(typed.contains(name), "undeclared family {name}");
         }
+    }
+
+    #[test]
+    fn store_families_render_with_disjoint_access_labels() {
+        use crate::store::StoreSnapshot;
+        let snap = MetricsSnapshot {
+            store: Some(StoreSnapshot {
+                capacity_bytes: 262_144,
+                resident_bytes: 258_048,
+                resident_experts: 60,
+                total_experts: 704,
+                artifact_bytes: 2_700_000,
+                prefetch_enabled: true,
+                hits: 900,
+                misses: 100,
+                prefetch_hits: 400,
+                prefetched: 450,
+                evictions: 80,
+                bytes_paged: 460_800,
+            }),
+            ..MetricsSnapshot::default()
+        };
+        let body = render(&snap, None, &[]);
+        // demand_hit + prefetch_hit == hits: labels partition accesses
+        let line = |series: &str| -> f64 {
+            body.lines()
+                .find(|l| l.starts_with(series))
+                .unwrap_or_else(|| panic!("missing {series}"))
+                .rsplit_once(' ')
+                .unwrap()
+                .1
+                .parse()
+                .unwrap()
+        };
+        let demand =
+            line("mopeq_store_accesses_total{result=\"demand_hit\"}");
+        let pref =
+            line("mopeq_store_accesses_total{result=\"prefetch_hit\"}");
+        let miss = line("mopeq_store_accesses_total{result=\"miss\"}");
+        assert_eq!(demand + pref, 900.0);
+        assert_eq!(miss, 100.0);
+        assert_eq!(line("mopeq_store_prefetched_total"), 450.0);
+        assert_eq!(line("mopeq_store_evictions_total"), 80.0);
+        assert_eq!(line("mopeq_store_bytes_paged_total"), 460_800.0);
+        assert_eq!(line("mopeq_store_resident_bytes"), 258_048.0);
+        assert_eq!(line("mopeq_store_capacity_bytes"), 262_144.0);
+        assert_eq!(line("mopeq_store_resident_experts"), 60.0);
+        // absent store renders no store families at all
+        let none = render(&MetricsSnapshot::default(), None, &[]);
+        assert!(!none.contains("mopeq_store_"));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::config::ModelConfig;
 use crate::jsonx::Json;
 use crate::moe::PrecisionMap;
 use crate::serve::expert_bytes;
+use crate::store::StoreSnapshot;
 use crate::Result;
 use anyhow::bail;
 use std::path::Path;
@@ -101,6 +102,9 @@ pub struct TrafficSnapshot {
     pub bits: Option<Vec<Vec<u8>>>,
     /// wire bytes per expert at its allocated width
     pub wire_bytes: Option<Vec<Vec<u64>>>,
+    /// tiered expert store counters, when the deployment bounds its
+    /// resident set (`--resident-bytes`); `None` when fully resident
+    pub store: Option<StoreSnapshot>,
 }
 
 impl TrafficSnapshot {
@@ -110,6 +114,7 @@ impl TrafficSnapshot {
         stats: &RoutingStats,
         cfg: &ModelConfig,
         pmap: Option<&PrecisionMap>,
+        store: Option<StoreSnapshot>,
     ) -> TrafficSnapshot {
         TrafficSnapshot {
             variant: cfg.name.to_string(),
@@ -128,6 +133,7 @@ impl TrafficSnapshot {
                     })
                     .collect()
             }),
+            store,
         }
     }
 
@@ -194,6 +200,13 @@ impl TrafficSnapshot {
                     Some(wb) => num_grid(wb),
                 },
             ),
+            (
+                "store".into(),
+                match &self.store {
+                    None => Json::Null,
+                    Some(s) => s.to_json(),
+                },
+            ),
         ])
     }
 
@@ -232,6 +245,10 @@ impl TrafficSnapshot {
             wire_bytes: match j.req("wire_bytes")? {
                 Json::Null => None,
                 wb => Some(u64_grid(wb)?),
+            },
+            store: match j.req("store")? {
+                Json::Null => None,
+                s => Some(StoreSnapshot::from_json(s)?),
             },
         };
         let (lm, e) = (
@@ -317,7 +334,27 @@ mod tests {
         let grid = vec![vec![2.0; cfg.experts]; cfg.moe_layers()];
         stats.record(&grid, 32, 4);
         let pmap = PrecisionMap::uniform(&cfg, 3);
-        let snap = TrafficSnapshot::capture(&stats, &cfg, Some(&pmap));
+        let st = StoreSnapshot {
+            capacity_bytes: 262_144,
+            resident_bytes: 250_000,
+            resident_experts: 65,
+            total_experts: cfg.total_experts(),
+            artifact_bytes: 2_700_000,
+            prefetch_enabled: true,
+            hits: 1000,
+            misses: 50,
+            prefetch_hits: 400,
+            prefetched: 420,
+            evictions: 30,
+            bytes_paged: 192_000,
+        };
+        let snap = TrafficSnapshot::capture(
+            &stats,
+            &cfg,
+            Some(&pmap),
+            Some(st.clone()),
+        );
+        assert_eq!(snap.store.as_ref(), Some(&st));
         assert_eq!(snap.variant, cfg.name);
         assert_eq!(snap.top_k, cfg.top_k);
         assert_eq!(snap.total_hits(), 2 * cfg.total_experts() as u64);
@@ -335,10 +372,12 @@ mod tests {
     fn dense_snapshot_serializes_null_bits() {
         let cfg = config::variant("dsvl2_tiny").unwrap();
         let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
-        let snap = TrafficSnapshot::capture(&stats, &cfg, None);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, None, None);
         assert!(snap.bits.is_none() && snap.wire_bytes.is_none());
+        assert!(snap.store.is_none());
         let wire = snap.to_json().to_string();
         assert!(wire.contains("\"bits\":null"));
+        assert!(wire.contains("\"store\":null"));
         let back =
             TrafficSnapshot::from_json(&Json::parse(&wire).unwrap())
                 .unwrap();
@@ -349,7 +388,7 @@ mod tests {
     fn from_json_rejects_shape_lies() {
         let cfg = config::variant("dsvl2_tiny").unwrap();
         let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
-        let snap = TrafficSnapshot::capture(&stats, &cfg, None);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, None, None);
         let mut j = snap.to_json();
         if let Json::Obj(fields) = &mut j {
             for (k, v) in fields.iter_mut() {

@@ -193,8 +193,14 @@ impl TraceSummary {
 }
 
 /// Fixed-capacity window of the most recent completed traces.
+///
+/// With a `sample` stride of N (see [`TraceRing::sampled`]) only every
+/// N-th completed request is retained in the window; the monotone
+/// `completed` counter still counts all of them, so throughput math
+/// stays exact while per-span bookkeeping cost drops by ~N×.
 pub struct TraceRing {
     capacity: usize,
+    sample: u64,
     completed: AtomicU64,
     ring: Mutex<VecDeque<TraceSpan>>,
 }
@@ -202,9 +208,16 @@ pub struct TraceRing {
 impl TraceRing {
     /// `capacity` is clamped to ≥ 1 so the ring is never degenerate.
     pub fn new(capacity: usize) -> TraceRing {
+        TraceRing::sampled(capacity, 1)
+    }
+
+    /// Keep one span in every `sample` completions (clamped to ≥ 1).
+    /// `sampled(cap, 1)` behaves exactly like [`TraceRing::new`].
+    pub fn sampled(capacity: usize, sample: usize) -> TraceRing {
         let capacity = capacity.max(1);
         TraceRing {
             capacity,
+            sample: sample.max(1) as u64,
             completed: AtomicU64::new(0),
             ring: Mutex::new(VecDeque::with_capacity(capacity)),
         }
@@ -214,14 +227,23 @@ impl TraceRing {
         self.capacity
     }
 
+    /// The sampling stride: 1 in `sample` completions is retained.
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
     /// Monotone count of every trace ever pushed.
     pub fn completed(&self) -> u64 {
         self.completed.load(Ordering::Relaxed)
     }
 
     /// Record a completed request; evicts the oldest span at capacity.
+    /// Under sampling, spans off-stride are counted but not retained.
     pub fn push(&self, span: TraceSpan) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
+        let n = self.completed.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample != 0 {
+            return;
+        }
         let mut ring = self.ring.lock().unwrap();
         if ring.len() == self.capacity {
             ring.pop_front();
@@ -327,6 +349,35 @@ mod tests {
     fn stage_sum_stays_within_total() {
         let s = span(5);
         assert!(s.stage_sum() <= s.total);
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n_within_ring_bound() {
+        let ring = TraceRing::sampled(8, 5);
+        assert_eq!(ring.sample(), 5);
+        for ms in 0..23 {
+            ring.push(span(ms));
+        }
+        // completed counts every push; only pushes 0,5,10,15,20 retained
+        assert_eq!(ring.completed(), 23);
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 5);
+        assert!(spans.len() <= ring.capacity());
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.queue_wait, Duration::from_millis(5 * i as u64));
+        }
+        // a flood still respects the ring bound
+        for ms in 23..1000 {
+            ring.push(span(ms));
+        }
+        assert_eq!(ring.snapshot().len(), ring.capacity());
+        assert_eq!(ring.completed(), 1000);
+        // stride 0 clamps to 1 (keep everything)
+        let all = TraceRing::sampled(4, 0);
+        assert_eq!(all.sample(), 1);
+        all.push(span(1));
+        all.push(span(2));
+        assert_eq!(all.snapshot().len(), 2);
     }
 
     #[test]

@@ -586,10 +586,14 @@ fn moe_ffn_packed_all(inputs: &[&Value]) -> Result<Vec<Value>> {
     let h = inputs[0].as_f32()?;
     let pl = inputs[1].as_packed()?;
     let (t, d) = (h.shape[0], h.shape[1]);
-    let e = pl.experts.len();
+    let e = pl.n_experts();
+    // every expert is about to evaluate — let a tiered layer stage the
+    // whole set before the first fetch
+    let all: Vec<usize> = (0..e).collect();
+    pl.will_need(&all);
     let mut out = vec![0.0f32; e * t * d];
-    for (ei, ex) in pl.experts.iter().enumerate() {
-        let y = ex.ffn(&h.data, t);
+    for ei in 0..e {
+        let y = pl.expert(ei)?.ffn(&h.data, t);
         out[ei * t * d..(ei + 1) * t * d].copy_from_slice(&y);
     }
     Ok(vec![Value::F32(Tensor::new(&[e, t, d], out))])
@@ -608,8 +612,8 @@ fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
         None
     };
     let (d, m) = (gate.shape[1], gate.shape[2]);
-    moe_layer_common(&inputs[..4], shared, top_k, |hrow, ei| {
-        expert_ffn(
+    moe_layer_common(&inputs[..4], shared, top_k, None, |hrow, ei| {
+        Ok(expert_ffn(
             hrow,
             1,
             d,
@@ -618,7 +622,7 @@ fn moe_layer(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
             m,
             &down.data[ei * m * d..(ei + 1) * m * d],
             d,
-        )
+        ))
     })
 }
 
@@ -635,28 +639,40 @@ fn moe_layer_packed(inputs: &[&Value], top_k: usize) -> Result<Vec<Value>> {
         None
     };
     let e = inputs[3].as_f32()?.shape[0];
-    if pl.experts.len() != e {
+    if pl.n_experts() != e {
         bail!(
             "packed expert handle has {} experts, router expects {e}",
-            pl.experts.len()
+            pl.n_experts()
         );
     }
-    moe_layer_common(&inputs[..4], shared, top_k, |hrow, ei| {
-        pl.experts[ei].ffn(hrow, 1)
+    // the lookahead hook: once the whole batch is routed, a tiered
+    // layer learns its demand set and stages it (plus the predicted
+    // next layer) while the expert FFNs below run
+    let hook = |ids: &[usize]| pl.will_need(ids);
+    moe_layer_common(&inputs[..4], shared, top_k, Some(&hook), |hrow, ei| {
+        Ok(pl.expert(ei)?.ffn(hrow, 1))
     })
 }
 
 /// The routing body shared by the dense and packed MoE-layer lowerings:
 /// `head` is `[x, vis_mask, ln, router]`; `eval_expert(hrow, ei)`
 /// computes one expert's SwiGLU output on a single token row.
+///
+/// Two passes: routing (cheap dot products) runs for **every** token
+/// first, then the expert evaluations. The split is numerically
+/// invisible — per-token weights are fixed in pass 1 and the `y`
+/// accumulation order is unchanged — but it means the full demand set
+/// of the layer is known before the first expert evaluates, which is
+/// what `on_routed` hands to the tiered store's prefetcher.
 fn moe_layer_common<F>(
     head: &[&Value],
     shared: Option<(&Tensor<f32>, &Tensor<f32>, &Tensor<f32>)>,
     top_k: usize,
+    on_routed: Option<&dyn Fn(&[usize])>,
     eval_expert: F,
 ) -> Result<Vec<Value>>
 where
-    F: Fn(&[f32], usize) -> Vec<f32>,
+    F: Fn(&[f32], usize) -> Result<Vec<f32>>,
 {
     let x = head[0].as_f32()?;
     let vis = head[1].as_f32()?;
@@ -680,6 +696,9 @@ where
     let mut vis_counts = vec![0.0f32; e];
     let mut probs = vec![0.0f32; e];
     let mut order: Vec<usize> = Vec::with_capacity(e);
+    // pass 1 — route every token: (expert, gate coefficient) per
+    // token, flattened `[t * top_k]` in evaluation order
+    let mut routed: Vec<(usize, f32)> = Vec::with_capacity(t * top_k);
     for i in 0..t {
         let hrow = &h[i * d..(i + 1) * d];
         // router softmax
@@ -703,12 +722,24 @@ where
         order.sort_by(|&a, &c| probs[c].partial_cmp(&probs[a]).unwrap());
         let topi = &order[..top_k];
         let tsum: f32 = topi.iter().map(|&j| probs[j]).sum();
-        let yrow = &mut y[i * d..(i + 1) * d];
         for &ei in topi {
             counts[ei] += 1.0;
             vis_counts[ei] += vis.data[i];
-            let coef = probs[ei] / tsum;
-            let out = eval_expert(hrow, ei);
+            routed.push((ei, probs[ei] / tsum));
+        }
+    }
+    if let Some(hook) = on_routed {
+        let mut uniq: Vec<usize> = routed.iter().map(|&(ei, _)| ei).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        hook(&uniq);
+    }
+    // pass 2 — evaluate experts in the same token-major order
+    for i in 0..t {
+        let hrow = &h[i * d..(i + 1) * d];
+        let yrow = &mut y[i * d..(i + 1) * d];
+        for &(ei, coef) in &routed[i * top_k..(i + 1) * top_k] {
+            let out = eval_expert(hrow, ei)?;
             for j in 0..d {
                 yrow[j] += coef * out[j];
             }

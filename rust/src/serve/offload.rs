@@ -61,6 +61,11 @@ impl ExpertCache {
             e.1 = self.tick;
             return 0;
         }
+        // an entry larger than the whole cache can never become a hit:
+        // stream it through without evicting everything else for nothing
+        if bytes > self.capacity {
+            return bytes;
+        }
         // evict LRU until it fits
         while self.used + bytes > self.capacity && !self.entries.is_empty() {
             let victim = *self
@@ -218,6 +223,58 @@ mod tests {
         assert_eq!(c.access(id(1), 60), 60); // miss, evicts 0
         assert!(c.resident_bytes() <= 100);
         assert_eq!(c.access(id(0), 60), 60); // 0 was evicted
+    }
+
+    #[test]
+    fn oversized_entry_streams_through_without_evicting() {
+        // regression: an entry larger than the whole cache used to be
+        // inserted after the evict loop drained every resident expert,
+        // leaving used > capacity and the cache empty
+        let mut c = ExpertCache::new(100);
+        let id = |e| ExpertId { layer: 0, expert: e };
+        assert_eq!(c.access(id(0), 60), 60);
+        assert_eq!(c.access(id(1), 40), 40);
+        assert_eq!(c.resident_bytes(), 100);
+        // oversized access transfers but neither caches nor evicts
+        assert_eq!(c.access(id(2), 150), 150);
+        assert_eq!(c.resident_bytes(), 100, "residents survive");
+        assert!(c.resident_bytes() <= 100, "cap never exceeded");
+        assert_eq!(c.access(id(0), 60), 0, "still a hit");
+        assert_eq!(c.access(id(1), 40), 0, "still a hit");
+        // and the oversized expert misses every time
+        assert_eq!(c.access(id(2), 150), 150);
+    }
+
+    #[test]
+    fn draw_handles_degenerate_distributions() {
+        let mut rng = crate::rng::Rng::new(7).derive("degenerate");
+        // all-zero weights: clamped to a uniform floor, still draws k
+        // distinct in-range experts
+        let dist = RoutingDist::from_weights(&[vec![0.0; 8]]);
+        let picked = dist.draw(0, 3, &mut rng);
+        assert_eq!(picked.len(), 3);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "distinct");
+        assert!(picked.iter().all(|&e| e < 8));
+        // k == experts: every expert exactly once
+        let dist = RoutingDist::uniform(1, 6);
+        let mut all = dist.draw(0, 6, &mut rng);
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+        // single-expert layer: k=1 always picks expert 0
+        let dist = RoutingDist::from_weights(&[vec![5.0]]);
+        for _ in 0..10 {
+            assert_eq!(dist.draw(0, 1, &mut rng), vec![0]);
+        }
+        // fully-degenerate mass on one expert still fills k distinct
+        let mut w = vec![0.0; 4];
+        w[2] = 1.0;
+        let dist = RoutingDist::from_weights(&[w]);
+        let mut picked = dist.draw(0, 4, &mut rng);
+        picked.sort_unstable();
+        assert_eq!(picked, vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! On-disk artifact for a tiered expert store: one file holding every
+//! packed expert of a [`crate::moe::PackedStore`], offset-indexed by
+//! `(layer, expert)` so a miss pages in exactly one expert with a
+//! single positioned read.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic     b"MOPEQST1"                                  (8 bytes)
+//! variant   u32 length + utf-8 bytes
+//! layers    u32   (MoE layers)
+//! experts   u32   (experts per layer)
+//! index     layers*experts fixed-size entries, layer-major:
+//!             offset u64 | len u64 | bits u32 |
+//!             accounted u64 | heap u64 | dense_mats u32
+//! blobs     concatenated expert records at the indexed offsets
+//! ```
+//!
+//! An expert record is `bits u8` followed by its gate/up/down matrices.
+//! Each matrix starts with a tag (`0` packed, `1` dense). f32 values
+//! are stored as their IEEE-754 bit patterns (`to_bits`/`from_bits`),
+//! so a decode round-trip is **bit-exact** — the paged expert computes
+//! the same floats as the resident one, which is what lets the tiered
+//! engine promise byte-identical replies.
+
+use crate::moe::{ExpertId, PackedExpert, PackedMat, PackedStore};
+use crate::quant::kernels::PackedMatrix;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MOPEQST1";
+/// Fixed byte size of one index entry.
+const ENTRY_BYTES: usize = 8 + 8 + 4 + 8 + 8 + 4;
+
+/// Where one expert's record lives plus its precomputed accounting
+/// (kept in RAM so size queries never touch the disk).
+#[derive(Clone, Debug)]
+pub(crate) struct IndexEntry {
+    pub offset: u64,
+    pub len: u64,
+    pub bits: u8,
+    pub accounted_bytes: usize,
+    pub heap_bytes: usize,
+    pub dense_mats: usize,
+}
+
+/// The decoded header + index of an artifact file.
+#[derive(Clone, Debug)]
+pub(crate) struct ArtifactIndex {
+    pub variant: String,
+    pub moe_layers: usize,
+    pub experts: usize,
+    /// layer-major: `entries[layer * experts + expert]`
+    pub entries: Vec<IndexEntry>,
+}
+
+impl ArtifactIndex {
+    pub fn entry(&self, id: ExpertId) -> &IndexEntry {
+        &self.entries[id.layer * self.experts + id.expert]
+    }
+}
+
+// --- little-endian put/take helpers -------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_u32_slice(buf: &mut Vec<u8>, vs: &[u32]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a decoded record.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "store artifact record truncated: need {} bytes at {}, \
+                 have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len_of(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64()? as usize;
+        // a length can never exceed the remaining record bytes (each
+        // element is ≥ 1 byte) — reject early so a corrupt length does
+        // not drive a huge allocation
+        if n > self.buf.len().saturating_sub(self.pos) {
+            bail!("store artifact: {what} length {n} exceeds record");
+        }
+        Ok(n)
+    }
+
+    fn u32_slice(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_of("u32 vector")?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_slice(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_of("f32 vector")?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+// --- expert record codec ------------------------------------------------
+
+fn encode_mat(buf: &mut Vec<u8>, mat: &PackedMat) {
+    match mat {
+        PackedMat::Packed(pm) => {
+            put_u8(buf, 0);
+            put_u32(buf, pm.din as u32);
+            put_u32(buf, pm.dout as u32);
+            put_u8(buf, pm.bits);
+            put_u32(buf, pm.group as u32);
+            put_u32_slice(buf, &pm.words);
+            put_f32_slice(buf, &pm.scales);
+            put_f32_slice(buf, &pm.zps);
+            match &pm.row_scale {
+                Some(rs) => {
+                    put_u8(buf, 1);
+                    put_f32_slice(buf, rs);
+                }
+                None => put_u8(buf, 0),
+            }
+        }
+        PackedMat::Dense(t) => {
+            put_u8(buf, 1);
+            put_u32(buf, t.shape.len() as u32);
+            for &d in &t.shape {
+                put_u64(buf, d as u64);
+            }
+            put_f32_slice(buf, &t.data);
+        }
+    }
+}
+
+fn decode_mat(cur: &mut Cur) -> Result<PackedMat> {
+    match cur.u8()? {
+        0 => {
+            let din = cur.u32()? as usize;
+            let dout = cur.u32()? as usize;
+            let bits = cur.u8()?;
+            let group = cur.u32()? as usize;
+            let words = cur.u32_slice()?;
+            let scales = cur.f32_slice()?;
+            let zps = cur.f32_slice()?;
+            let row_scale = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.f32_slice()?),
+                t => bail!("store artifact: bad row-scale tag {t}"),
+            };
+            Ok(PackedMat::Packed(PackedMatrix {
+                din,
+                dout,
+                bits,
+                group,
+                words,
+                scales,
+                zps,
+                row_scale,
+            }))
+        }
+        1 => {
+            let rank = cur.u32()? as usize;
+            if rank > 8 {
+                bail!("store artifact: dense matrix rank {rank} > 8");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(cur.u64()? as usize);
+            }
+            let data = cur.f32_slice()?;
+            if shape.iter().product::<usize>() != data.len() {
+                bail!("store artifact: dense matrix shape/data mismatch");
+            }
+            Ok(PackedMat::Dense(Tensor::new(&shape, data)))
+        }
+        t => bail!("store artifact: bad matrix tag {t}"),
+    }
+}
+
+fn encode_expert(pe: &PackedExpert) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u8(&mut buf, pe.bits);
+    encode_mat(&mut buf, &pe.gate);
+    encode_mat(&mut buf, &pe.up);
+    encode_mat(&mut buf, &pe.down);
+    buf
+}
+
+/// Decode one expert record (the byte range the index points at).
+pub(crate) fn decode_expert(buf: &[u8]) -> Result<PackedExpert> {
+    let mut cur = Cur { buf, pos: 0 };
+    let bits = cur.u8()?;
+    let gate = decode_mat(&mut cur)?;
+    let up = decode_mat(&mut cur)?;
+    let down = decode_mat(&mut cur)?;
+    if cur.pos != buf.len() {
+        bail!(
+            "store artifact record has {} trailing bytes",
+            buf.len() - cur.pos
+        );
+    }
+    Ok(PackedExpert { bits, gate, up, down })
+}
+
+// --- file writer / header reader ----------------------------------------
+
+fn header_bytes(variant: &str, n_entries: usize) -> usize {
+    MAGIC.len() + 4 + variant.len() + 4 + 4 + n_entries * ENTRY_BYTES
+}
+
+/// Spill every expert of `store` into the artifact file at `path`
+/// (created or truncated), returning the in-RAM index.
+pub(crate) fn write_artifact(
+    path: &Path,
+    store: &PackedStore,
+) -> Result<ArtifactIndex> {
+    let moe_layers = store.moe_layers();
+    let experts = store.experts_per_layer();
+    let n = moe_layers * experts;
+    let mut entries = Vec::with_capacity(n);
+    let mut blobs = Vec::with_capacity(n);
+    let mut offset = header_bytes(&store.variant, n) as u64;
+    for layer in 0..moe_layers {
+        for expert in 0..experts {
+            let id = ExpertId { layer, expert };
+            let pe = store.expert(id);
+            let blob = encode_expert(pe);
+            entries.push(IndexEntry {
+                offset,
+                len: blob.len() as u64,
+                bits: pe.bits,
+                accounted_bytes: pe.accounted_bytes(),
+                heap_bytes: pe.heap_bytes(),
+                dense_mats: pe.dense_mats(),
+            });
+            offset += blob.len() as u64;
+            blobs.push(blob);
+        }
+    }
+
+    let mut head = Vec::with_capacity(header_bytes(&store.variant, n));
+    head.extend_from_slice(MAGIC);
+    put_u32(&mut head, store.variant.len() as u32);
+    head.extend_from_slice(store.variant.as_bytes());
+    put_u32(&mut head, moe_layers as u32);
+    put_u32(&mut head, experts as u32);
+    for e in &entries {
+        put_u64(&mut head, e.offset);
+        put_u64(&mut head, e.len);
+        put_u32(&mut head, e.bits as u32);
+        put_u64(&mut head, e.accounted_bytes as u64);
+        put_u64(&mut head, e.heap_bytes as u64);
+        put_u32(&mut head, e.dense_mats as u32);
+    }
+    debug_assert_eq!(head.len(), header_bytes(&store.variant, n));
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| {
+                format!("creating store artifact dir {}", dir.display())
+            })?;
+        }
+    }
+    let mut f = File::create(path).with_context(|| {
+        format!("creating store artifact {}", path.display())
+    })?;
+    f.write_all(&head)?;
+    for blob in &blobs {
+        f.write_all(blob)?;
+    }
+    f.sync_all()?;
+
+    Ok(ArtifactIndex {
+        variant: store.variant.clone(),
+        moe_layers,
+        experts,
+        entries,
+    })
+}
+
+/// Read and validate the header + index of an existing artifact.
+pub(crate) fn read_index(file: &mut File) -> Result<ArtifactIndex> {
+    let mut magic = [0u8; 8];
+    file.read_exact(&mut magic)
+        .context("store artifact: reading magic")?;
+    if &magic != MAGIC {
+        bail!(
+            "not a tiered-store artifact (magic {:?}, want {:?})",
+            magic,
+            MAGIC
+        );
+    }
+    let mut word = [0u8; 4];
+    file.read_exact(&mut word)?;
+    let vlen = u32::from_le_bytes(word) as usize;
+    if vlen > 256 {
+        bail!("store artifact: variant name length {vlen} > 256");
+    }
+    let mut vbytes = vec![0u8; vlen];
+    file.read_exact(&mut vbytes)?;
+    let variant = String::from_utf8(vbytes)
+        .context("store artifact: variant is not utf-8")?;
+    file.read_exact(&mut word)?;
+    let moe_layers = u32::from_le_bytes(word) as usize;
+    file.read_exact(&mut word)?;
+    let experts = u32::from_le_bytes(word) as usize;
+    let n = moe_layers
+        .checked_mul(experts)
+        .filter(|&n| n > 0 && n <= 1 << 24)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "store artifact: implausible index {moe_layers}x{experts}"
+            )
+        })?;
+    let mut raw = vec![0u8; n * ENTRY_BYTES];
+    file.read_exact(&mut raw)
+        .context("store artifact: index truncated")?;
+    let mut cur = Cur { buf: &raw, pos: 0 };
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        entries.push(IndexEntry {
+            offset: cur.u64()?,
+            len: cur.u64()?,
+            bits: cur.u32()? as u8,
+            accounted_bytes: cur.u64()? as usize,
+            heap_bytes: cur.u64()? as usize,
+            dense_mats: cur.u32()? as usize,
+        });
+    }
+    Ok(ArtifactIndex { variant, moe_layers, experts, entries })
+}

@@ -1,0 +1,733 @@
+//! Tiered expert store: serve a packed MoE model whose expert weights
+//! live on **disk**, keeping only a bounded resident set on the heap —
+//! the paper's §5.4 deployment story (sensitivity-assigned bit widths
+//! shrink host↔device traffic under offloading) made real instead of
+//! simulated by `serve::offload`.
+//!
+//! Three pieces:
+//!
+//! - [`artifact`] — one offset-indexed file holding every packed
+//!   expert, written once at engine build from the in-RAM
+//!   [`PackedStore`], decoded bit-exactly on demand.
+//! - [`resident`] — an LRU set bounded by a real heap-byte cap
+//!   (`--resident-bytes`), charging `PackedExpert::heap_bytes`
+//!   (u32-padded words + f32 scales), not wire bytes.
+//! - a background **prefetch thread**: routing runs before the expert
+//!   FFN, so the executor calls [`TieredStore::will_need`] with the
+//!   layer's routed expert ids the moment they are known; the thread
+//!   stages them plus the predicted hot set of the *next* MoE layer
+//!   (a per-layer routing-frequency histogram) while compute proceeds.
+//!
+//! Concurrency protocol (deadlock-free by construction): the resident
+//! mutex and the sync mutex are never held at the same time, and no
+//! disk IO happens under either. A miss claims the id in
+//! `SyncState::in_flight` (readers racing for the same expert wait on
+//! the condvar instead of reading the record twice), pages in with no
+//! locks held — positioned reads, so concurrent misses read the file
+//! simultaneously on unix — then inserts and wakes waiters. Evicted
+//! entries are `Arc`s, so a reader holding a paged expert is never
+//! invalidated by eviction.
+
+mod artifact;
+mod resident;
+
+use crate::jsonx::Json;
+use crate::moe::{ExpertId, PackedExpert, PackedStore, PrecisionMap};
+use anyhow::{bail, Context, Result};
+use std::collections::{HashSet, VecDeque};
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use artifact::ArtifactIndex;
+use resident::ResidentSet;
+
+/// Prefetch/demand coordination state behind [`StoreInner::sync`].
+#[derive(Default)]
+struct SyncState {
+    /// batches of ids awaiting the prefetch thread
+    queue: VecDeque<Vec<ExpertId>>,
+    /// ids currently being paged in (demand or prefetch)
+    in_flight: HashSet<ExpertId>,
+    /// the prefetch thread is mid-batch (popped, not yet done)
+    staging: bool,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetched: AtomicU64,
+    evictions: AtomicU64,
+    bytes_paged: AtomicU64,
+}
+
+struct StoreInner {
+    variant: String,
+    moe_layers: usize,
+    experts: usize,
+    capacity: usize,
+    artifact_bytes: u64,
+    prefetch_enabled: bool,
+    file: File,
+    /// non-unix fallback: positioned reads via seek need serialization
+    #[cfg(not(unix))]
+    io_lock: Mutex<()>,
+    index: ArtifactIndex,
+    resident: Mutex<ResidentSet>,
+    /// lock-free mirrors of the set's post-insert accounting, for
+    /// snapshots; only written under the resident lock's critical
+    /// section result, so they never exceed the cap
+    resident_bytes: AtomicUsize,
+    resident_count: AtomicUsize,
+    sync: Mutex<SyncState>,
+    cv: Condvar,
+    counters: Counters,
+    /// routed-count histogram `[layer][expert]` feeding the predictor
+    routed: Vec<Vec<AtomicU64>>,
+}
+
+/// Point-in-time store accounting, embedded in `MetricsSnapshot` and
+/// `TrafficSnapshot` and rendered by the Prometheus exposition.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StoreSnapshot {
+    pub capacity_bytes: usize,
+    pub resident_bytes: usize,
+    pub resident_experts: usize,
+    pub total_experts: usize,
+    pub artifact_bytes: usize,
+    pub prefetch_enabled: bool,
+    /// demand fetches answered from the resident set
+    pub hits: u64,
+    /// demand fetches that paid a disk read
+    pub misses: u64,
+    /// hits whose entry was staged by the prefetcher (first touch)
+    pub prefetch_hits: u64,
+    /// experts staged by the background prefetcher
+    pub prefetched: u64,
+    pub evictions: u64,
+    pub bytes_paged: u64,
+}
+
+impl StoreSnapshot {
+    /// Demand hit rate in `[0, 1]`; 1.0 when nothing was fetched yet.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "capacity_bytes".into(),
+                Json::Num(self.capacity_bytes as f64),
+            ),
+            (
+                "resident_bytes".into(),
+                Json::Num(self.resident_bytes as f64),
+            ),
+            (
+                "resident_experts".into(),
+                Json::Num(self.resident_experts as f64),
+            ),
+            (
+                "total_experts".into(),
+                Json::Num(self.total_experts as f64),
+            ),
+            (
+                "artifact_bytes".into(),
+                Json::Num(self.artifact_bytes as f64),
+            ),
+            ("prefetch_enabled".into(), Json::Bool(self.prefetch_enabled)),
+            ("hits".into(), Json::Num(self.hits as f64)),
+            ("misses".into(), Json::Num(self.misses as f64)),
+            ("prefetch_hits".into(), Json::Num(self.prefetch_hits as f64)),
+            ("prefetched".into(), Json::Num(self.prefetched as f64)),
+            ("evictions".into(), Json::Num(self.evictions as f64)),
+            ("bytes_paged".into(), Json::Num(self.bytes_paged as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<StoreSnapshot> {
+        let num = |key: &str| -> Result<u64> {
+            let v = j.req(key)?.as_f64()?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("store snapshot: {key} must be a non-negative number");
+            }
+            Ok(v as u64)
+        };
+        Ok(StoreSnapshot {
+            capacity_bytes: num("capacity_bytes")? as usize,
+            resident_bytes: num("resident_bytes")? as usize,
+            resident_experts: num("resident_experts")? as usize,
+            total_experts: num("total_experts")? as usize,
+            artifact_bytes: num("artifact_bytes")? as usize,
+            prefetch_enabled: j.req("prefetch_enabled")?.as_bool()?,
+            hits: num("hits")?,
+            misses: num("misses")?,
+            prefetch_hits: num("prefetch_hits")?,
+            prefetched: num("prefetched")?,
+            evictions: num("evictions")?,
+            bytes_paged: num("bytes_paged")?,
+        })
+    }
+}
+
+/// Disk-backed expert store with a bounded resident set and an
+/// optional background prefetcher. Cloned via `Arc` into every layer
+/// handle and every worker; dropping the last handle joins the
+/// prefetch thread and removes an auto-created artifact file.
+pub struct TieredStore {
+    inner: Arc<StoreInner>,
+    worker: Option<JoinHandle<()>>,
+    /// delete the artifact on drop (engine-created temp files only;
+    /// a user-supplied `--store-path` artifact is kept for reuse)
+    own_file: bool,
+    path: PathBuf,
+}
+
+impl std::fmt::Debug for TieredStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TieredStore")
+            .field("variant", &self.inner.variant)
+            .field("capacity", &self.inner.capacity)
+            .field("path", &self.path)
+            .field("prefetch", &self.inner.prefetch_enabled)
+            .finish()
+    }
+}
+
+impl TieredStore {
+    /// Spill `packed` to an artifact at `path` and open a store over
+    /// it. `capacity` bounds resident heap bytes; it must fit the
+    /// largest single expert or no demand fetch could ever succeed.
+    /// With `keep_artifact` false the file is deleted on drop.
+    pub fn build(
+        packed: &PackedStore,
+        path: &Path,
+        capacity: usize,
+        prefetch: bool,
+        keep_artifact: bool,
+    ) -> Result<TieredStore> {
+        artifact::write_artifact(path, packed).with_context(|| {
+            format!("spilling packed experts to {}", path.display())
+        })?;
+        TieredStore::open_impl(path, capacity, prefetch, !keep_artifact)
+    }
+
+    /// Open an existing artifact file (written by a previous
+    /// [`TieredStore::build`] with `keep_artifact`).
+    pub fn open(
+        path: &Path,
+        capacity: usize,
+        prefetch: bool,
+    ) -> Result<TieredStore> {
+        TieredStore::open_impl(path, capacity, prefetch, false)
+    }
+
+    fn open_impl(
+        path: &Path,
+        capacity: usize,
+        prefetch: bool,
+        own_file: bool,
+    ) -> Result<TieredStore> {
+        let mut file = File::open(path).with_context(|| {
+            format!("opening store artifact {}", path.display())
+        })?;
+        let index = artifact::read_index(&mut file)?;
+        let artifact_bytes = file.metadata()?.len();
+        let largest =
+            index.entries.iter().map(|e| e.heap_bytes).max().unwrap_or(0);
+        if capacity < largest {
+            bail!(
+                "resident-bytes cap {capacity} B is below the largest \
+                 packed expert ({largest} B heap) — the store could never \
+                 satisfy a demand fetch; raise the cap"
+            );
+        }
+        let routed = (0..index.moe_layers)
+            .map(|_| {
+                (0..index.experts).map(|_| AtomicU64::new(0)).collect()
+            })
+            .collect();
+        let inner = Arc::new(StoreInner {
+            variant: index.variant.clone(),
+            moe_layers: index.moe_layers,
+            experts: index.experts,
+            capacity,
+            artifact_bytes,
+            prefetch_enabled: prefetch,
+            file,
+            #[cfg(not(unix))]
+            io_lock: Mutex::new(()),
+            index,
+            resident: Mutex::new(ResidentSet::new(capacity)),
+            resident_bytes: AtomicUsize::new(0),
+            resident_count: AtomicUsize::new(0),
+            sync: Mutex::new(SyncState::default()),
+            cv: Condvar::new(),
+            counters: Counters::default(),
+            routed,
+        });
+        let worker = if prefetch {
+            let for_thread = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("mopeq-prefetch".into())
+                    .spawn(move || prefetch_loop(for_thread))
+                    .context("spawning store prefetch thread")?,
+            )
+        } else {
+            None
+        };
+        Ok(TieredStore {
+            inner,
+            worker,
+            own_file,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.inner.variant
+    }
+
+    pub fn moe_layers(&self) -> usize {
+        self.inner.moe_layers
+    }
+
+    pub fn experts_per_layer(&self) -> usize {
+        self.inner.experts
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Heap bytes currently retained by the resident set — never
+    /// exceeds [`TieredStore::capacity_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes.load(Ordering::Acquire)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The precision map realized by the spilled experts (from the
+    /// artifact index — no disk reads).
+    pub fn precision_map(&self) -> PrecisionMap {
+        let idx = &self.inner.index;
+        PrecisionMap {
+            bits: (0..idx.moe_layers)
+                .map(|l| {
+                    (0..idx.experts)
+                        .map(|e| {
+                            idx.entry(ExpertId { layer: l, expert: e }).bits
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Wire-accounted bytes of one layer's experts (index metadata).
+    pub fn layer_accounted_bytes(&self, layer: usize) -> usize {
+        (0..self.inner.experts)
+            .map(|e| {
+                self.inner.index.entry(ExpertId { layer, expert: e })
+                    .accounted_bytes
+            })
+            .sum()
+    }
+
+    /// Dense-matrix count of one layer's experts (index metadata).
+    pub fn layer_dense_mats(&self, layer: usize) -> usize {
+        (0..self.inner.experts)
+            .map(|e| {
+                self.inner.index.entry(ExpertId { layer, expert: e })
+                    .dense_mats
+            })
+            .sum()
+    }
+
+    fn check_id(&self, id: ExpertId) -> Result<()> {
+        if id.layer >= self.inner.moe_layers || id.expert >= self.inner.experts
+        {
+            bail!(
+                "expert ({}, {}) outside store index {}x{}",
+                id.layer,
+                id.expert,
+                self.inner.moe_layers,
+                self.inner.experts
+            );
+        }
+        Ok(())
+    }
+
+    /// Fetch one expert: resident hit, or demand page-in (waiting on a
+    /// concurrent fetch of the same id rather than reading twice).
+    pub fn get(&self, id: ExpertId) -> Result<Arc<PackedExpert>> {
+        self.check_id(id)?;
+        let inner = &self.inner;
+        loop {
+            if let Some(e) = inner.demand_hit(id) {
+                return Ok(e);
+            }
+            {
+                let mut sync = inner.sync.lock().unwrap();
+                if sync.in_flight.contains(&id) {
+                    // someone is paging this id in right now — wait for
+                    // their insert instead of duplicating the read
+                    let _g = inner.cv.wait(sync).unwrap();
+                    continue;
+                }
+                sync.in_flight.insert(id);
+            }
+            // a prefetch may have landed between the miss above and the
+            // claim — re-check before paying a disk read
+            if let Some(e) = inner.demand_hit(id) {
+                inner.release_claim(id);
+                return Ok(e);
+            }
+            return inner.page_in(id, false);
+        }
+    }
+
+    /// Routing lookahead: the executor reports the expert ids routing
+    /// just selected for `layer`. The histogram always learns from the
+    /// report; with prefetch enabled the ids (plus the predicted hot
+    /// set of the next MoE layer) are queued for background staging.
+    pub fn will_need(&self, layer: usize, experts: &[usize]) {
+        let inner = &self.inner;
+        if layer >= inner.moe_layers {
+            return;
+        }
+        let mut batch: Vec<ExpertId> = Vec::with_capacity(experts.len() * 2);
+        for &e in experts {
+            if e < inner.experts {
+                inner.routed[layer][e].fetch_add(1, Ordering::Relaxed);
+                let id = ExpertId { layer, expert: e };
+                if !batch.contains(&id) {
+                    batch.push(id);
+                }
+            }
+        }
+        if !inner.prefetch_enabled || batch.is_empty() {
+            return;
+        }
+        // lookahead: decode walks MoE layers in order (wrapping to the
+        // next token), so stage the observed hot set of the next layer
+        let next = (layer + 1) % inner.moe_layers;
+        if next != layer {
+            for e in inner.predict(next, experts.len().max(1)) {
+                let id = ExpertId { layer: next, expert: e };
+                if !batch.contains(&id) {
+                    batch.push(id);
+                }
+            }
+        }
+        let mut sync = inner.sync.lock().unwrap();
+        if sync.shutdown {
+            return;
+        }
+        sync.queue.push_back(batch);
+        inner.cv.notify_all();
+    }
+
+    /// Block until the prefetch queue is drained and no page-in
+    /// (prefetch or demand) is in flight — deterministic test barrier.
+    pub fn quiesce(&self) {
+        let inner = &self.inner;
+        let mut sync = inner.sync.lock().unwrap();
+        while !sync.shutdown
+            && (!sync.queue.is_empty()
+                || sync.staging
+                || !sync.in_flight.is_empty())
+        {
+            sync = inner.cv.wait(sync).unwrap();
+        }
+    }
+
+    pub fn snapshot(&self) -> StoreSnapshot {
+        let inner = &self.inner;
+        let c = &inner.counters;
+        StoreSnapshot {
+            capacity_bytes: inner.capacity,
+            resident_bytes: inner.resident_bytes.load(Ordering::Acquire),
+            resident_experts: inner.resident_count.load(Ordering::Relaxed),
+            total_experts: inner.moe_layers * inner.experts,
+            artifact_bytes: inner.artifact_bytes as usize,
+            prefetch_enabled: inner.prefetch_enabled,
+            hits: c.hits.load(Ordering::Relaxed),
+            misses: c.misses.load(Ordering::Relaxed),
+            prefetch_hits: c.prefetch_hits.load(Ordering::Relaxed),
+            prefetched: c.prefetched.load(Ordering::Relaxed),
+            evictions: c.evictions.load(Ordering::Relaxed),
+            bytes_paged: c.bytes_paged.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        {
+            let mut sync = self.inner.sync.lock().unwrap();
+            sync.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        if self.own_file {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+impl StoreInner {
+    /// Resident lookup counting hit/prefetch-hit.
+    fn demand_hit(&self, id: ExpertId) -> Option<Arc<PackedExpert>> {
+        let hit = self.resident.lock().unwrap().get(id);
+        if let Some((e, first_prefetch_touch)) = hit {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            if first_prefetch_touch {
+                self.counters.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(e)
+        } else {
+            None
+        }
+    }
+
+    fn release_claim(&self, id: ExpertId) {
+        let mut sync = self.sync.lock().unwrap();
+        sync.in_flight.remove(&id);
+        drop(sync);
+        self.cv.notify_all();
+    }
+
+    /// Read one expert record with no locks held (positioned read on
+    /// unix; a short seek mutex elsewhere).
+    fn read_record(&self, id: ExpertId) -> Result<PackedExpert> {
+        let entry = self.index.entry(id);
+        let mut buf = vec![0u8; entry.len as usize];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(&mut buf, entry.offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _io = self.io_lock.lock().unwrap();
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(entry.offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        artifact::decode_expert(&buf).with_context(|| {
+            format!("decoding expert ({}, {})", id.layer, id.expert)
+        })
+    }
+
+    /// Page an id in from disk. The caller must hold the `in_flight`
+    /// claim for it; the claim is released here in every path.
+    fn page_in(&self, id: ExpertId, prefetched: bool) -> Result<Arc<PackedExpert>> {
+        let result = self.read_record(id);
+        let out = match result {
+            Ok(pe) => {
+                let bytes = pe.heap_bytes();
+                let arc = Arc::new(pe);
+                let (evicted, used, count) = {
+                    let mut rs = self.resident.lock().unwrap();
+                    let ev = rs.insert(id, arc.clone(), bytes, prefetched);
+                    (ev, rs.used(), rs.len())
+                };
+                self.resident_bytes.store(used, Ordering::Release);
+                self.resident_count.store(count, Ordering::Relaxed);
+                self.counters
+                    .evictions
+                    .fetch_add(evicted as u64, Ordering::Relaxed);
+                self.counters
+                    .bytes_paged
+                    .fetch_add(bytes as u64, Ordering::Relaxed);
+                if prefetched {
+                    self.counters.prefetched.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(arc)
+            }
+            Err(e) => Err(e),
+        };
+        self.release_claim(id);
+        out
+    }
+
+    /// Top-`n` experts of `layer` by observed routing frequency
+    /// (deterministic: count desc, then index asc; zero-count experts
+    /// are never predicted).
+    fn predict(&self, layer: usize, n: usize) -> Vec<usize> {
+        let mut ranked: Vec<(u64, usize)> = self.routed[layer]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((c, i))
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ranked.truncate(n);
+        ranked.into_iter().map(|(_, i)| i).collect()
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.sync.lock().unwrap().shutdown
+    }
+
+    /// Stage one prefetch target; never propagates IO errors (a demand
+    /// fetch will surface them with context if the id is ever used).
+    fn stage(&self, id: ExpertId) {
+        // already resident? skip without bumping recency — prefetch
+        // must not distort the LRU order demand accesses establish
+        if self.resident.lock().unwrap().contains(id) {
+            return;
+        }
+        {
+            let mut sync = self.sync.lock().unwrap();
+            if sync.shutdown || sync.in_flight.contains(&id) {
+                return;
+            }
+            sync.in_flight.insert(id);
+        }
+        // a demand fetch may have completed between the peek and the
+        // claim — re-check before the disk read
+        if self.resident.lock().unwrap().contains(id) {
+            self.release_claim(id);
+            return;
+        }
+        let _ = self.page_in(id, true);
+    }
+}
+
+fn prefetch_loop(inner: Arc<StoreInner>) {
+    loop {
+        let batch = {
+            let mut sync = inner.sync.lock().unwrap();
+            loop {
+                if sync.shutdown {
+                    return;
+                }
+                if let Some(b) = sync.queue.pop_front() {
+                    sync.staging = true;
+                    break b;
+                }
+                sync = inner.cv.wait(sync).unwrap();
+            }
+        };
+        for id in batch {
+            if inner.shutting_down() {
+                break;
+            }
+            inner.stage(id);
+        }
+        {
+            let mut sync = inner.sync.lock().unwrap();
+            sync.staging = false;
+        }
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::moe::{local_meta, WeightStore};
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "mopeq_store_unit_{}_{tag}_{n}.bin",
+            std::process::id()
+        ))
+    }
+
+    fn tiny_store() -> PackedStore {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let ws = WeightStore::init(&cfg, &local_meta(&cfg), 0);
+        let mut pmap = PrecisionMap::uniform(&cfg, 2);
+        for l in 0..cfg.moe_layers() {
+            for e in 0..cfg.experts {
+                pmap.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+            }
+        }
+        PackedStore::rtn(&cfg, &ws, &pmap).unwrap()
+    }
+
+    #[test]
+    fn cap_below_largest_expert_is_a_typed_error() {
+        let packed = tiny_store();
+        let path = tmp_path("cap");
+        let err = TieredStore::build(&packed, &path, 1, false, false)
+            .err()
+            .expect("1-byte cap must fail");
+        assert!(err.to_string().contains("largest"), "{err}");
+        // build wrote the artifact before the cap check; clean up
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_byte_stable() {
+        let snap = StoreSnapshot {
+            capacity_bytes: 1 << 20,
+            resident_bytes: 12345,
+            resident_experts: 7,
+            total_experts: 704,
+            artifact_bytes: 999,
+            prefetch_enabled: true,
+            hits: 100,
+            misses: 9,
+            prefetch_hits: 42,
+            prefetched: 50,
+            evictions: 3,
+            bytes_paged: 54321,
+        };
+        let wire = snap.to_json().to_string();
+        let back =
+            StoreSnapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn artifact_round_trip_preserves_precision_map_and_accounting() {
+        let packed = tiny_store();
+        let path = tmp_path("map");
+        let store = TieredStore::build(
+            &packed,
+            &path,
+            packed.heap_bytes(),
+            false,
+            false,
+        )
+        .unwrap();
+        assert_eq!(store.precision_map(), packed.precision_map());
+        assert_eq!(store.variant(), packed.variant);
+        let acc: usize = (0..store.moe_layers())
+            .map(|l| store.layer_accounted_bytes(l))
+            .sum();
+        assert_eq!(acc, packed.accounted_bytes());
+        drop(store);
+        assert!(!path.exists(), "auto-created artifact removed on drop");
+    }
+}

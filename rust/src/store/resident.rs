@@ -1,0 +1,161 @@
+//! The bounded resident set: which paged-in experts currently live on
+//! the heap, charged at their **actual heap bytes** (u32-padded words
+//! plus f32 scale/zp vectors — `PackedExpert::heap_bytes`), not the
+//! wire-formula bytes the offload simulator uses.
+//!
+//! Eviction is LRU over a monotone access tick. Entries are
+//! `Arc<PackedExpert>`, so evicting one never invalidates a reader
+//! that already fetched it — the bytes are freed when the last
+//! in-flight reference drops, but the *cap accounting* tracks what the
+//! set itself retains, which is the quantity the store bounds.
+
+use crate::moe::{ExpertId, PackedExpert};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+struct Entry {
+    expert: Arc<PackedExpert>,
+    bytes: usize,
+    /// last-access tick; prefetch staging does not bump it
+    tick: u64,
+    /// staged by the prefetcher and not yet demanded — the first
+    /// demand hit on such an entry counts as a prefetch hit
+    prefetched: bool,
+}
+
+pub(crate) struct ResidentSet {
+    capacity: usize,
+    used: usize,
+    tick: u64,
+    entries: HashMap<ExpertId, Entry>,
+}
+
+impl ResidentSet {
+    pub fn new(capacity: usize) -> ResidentSet {
+        ResidentSet { capacity, used: 0, tick: 0, entries: HashMap::new() }
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Demand lookup: bumps recency and consumes the prefetched flag.
+    /// Returns the expert and whether this was the first demand touch
+    /// of a prefetched entry.
+    pub fn get(&mut self, id: ExpertId) -> Option<(Arc<PackedExpert>, bool)> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.entries.get_mut(&id)?;
+        e.tick = tick;
+        let first_prefetch_touch = e.prefetched;
+        e.prefetched = false;
+        Some((e.expert.clone(), first_prefetch_touch))
+    }
+
+    /// Presence check without touching recency (prefetcher peek).
+    pub fn contains(&self, id: ExpertId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Insert a paged-in expert, evicting LRU entries until it fits.
+    /// Returns how many entries were evicted. An entry that could
+    /// never fit (`bytes > capacity`) is **not** inserted — the caller
+    /// still hands its `Arc` to the reader, but the set stays within
+    /// its cap (the store's open-time guard makes this unreachable in
+    /// practice).
+    pub fn insert(
+        &mut self,
+        id: ExpertId,
+        expert: Arc<PackedExpert>,
+        bytes: usize,
+        prefetched: bool,
+    ) -> usize {
+        if self.entries.contains_key(&id) || bytes > self.capacity {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.used + bytes > self.capacity && !self.entries.is_empty() {
+            // LRU victim; ties (equal tick) break on the smaller id so
+            // eviction order is deterministic despite HashMap iteration
+            let victim = self
+                .entries
+                .iter()
+                .map(|(&vid, e)| (e.tick, vid))
+                .min()
+                .map(|(_, vid)| vid)
+                .unwrap();
+            let gone = self.entries.remove(&victim).unwrap();
+            self.used -= gone.bytes;
+            evicted += 1;
+        }
+        self.tick += 1;
+        self.entries.insert(
+            id,
+            Entry { expert, bytes, tick: self.tick, prefetched },
+        );
+        self.used += bytes;
+        debug_assert!(self.used <= self.capacity);
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::PackedMat;
+    use crate::tensor::Tensor;
+
+    fn expert(elems: usize) -> Arc<PackedExpert> {
+        let t = Tensor::new(&[1, elems], vec![0.0; elems]);
+        Arc::new(PackedExpert {
+            bits: 4,
+            gate: PackedMat::Dense(t.clone()),
+            up: PackedMat::Dense(t.clone()),
+            down: PackedMat::Dense(t),
+        })
+    }
+
+    fn id(expert: usize) -> ExpertId {
+        ExpertId { layer: 0, expert }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_demanded() {
+        let mut rs = ResidentSet::new(300);
+        rs.insert(id(0), expert(1), 100, false);
+        rs.insert(id(1), expert(1), 100, false);
+        rs.insert(id(2), expert(1), 100, false);
+        // touch 0 so 1 becomes the LRU victim
+        assert!(rs.get(id(0)).is_some());
+        let evicted = rs.insert(id(3), expert(1), 100, false);
+        assert_eq!(evicted, 1);
+        assert!(!rs.contains(id(1)));
+        assert!(rs.contains(id(0)) && rs.contains(id(2)));
+        assert_eq!(rs.used(), 300);
+    }
+
+    #[test]
+    fn oversized_entry_is_rejected_not_cached() {
+        let mut rs = ResidentSet::new(100);
+        rs.insert(id(0), expert(1), 60, false);
+        let evicted = rs.insert(id(1), expert(1), 101, false);
+        assert_eq!(evicted, 0);
+        assert!(!rs.contains(id(1)));
+        assert!(rs.contains(id(0)));
+        assert_eq!(rs.used(), 60);
+    }
+
+    #[test]
+    fn prefetched_flag_consumed_on_first_demand() {
+        let mut rs = ResidentSet::new(100);
+        rs.insert(id(0), expert(1), 10, true);
+        let (_, first) = rs.get(id(0)).unwrap();
+        assert!(first);
+        let (_, again) = rs.get(id(0)).unwrap();
+        assert!(!again);
+    }
+}

@@ -1,0 +1,312 @@
+//! Tiered expert store acceptance: the `--resident-bytes` deployment
+//! must be a pure memory/latency trade, never a correctness trade.
+//!
+//! - the disk artifact round-trips every packed expert bit-exactly
+//!   (same FFN output as the in-RAM store it was spilled from);
+//! - a mixed {2,3,4}-bit packed engine capped well below its packed
+//!   heap answers identically to a fully-resident engine under
+//!   concurrent multi-worker load, and its resident heap never
+//!   exceeds the cap at any metrics snapshot;
+//! - routing-lookahead prefetch strictly beats demand-only LRU on a
+//!   skewed (rolling-pair) trace;
+//! - eviction under concurrent readers never hands out a wrong or
+//!   torn expert, and the hit/miss accounting stays exact.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::data::{gen_sample, Task};
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::moe::{
+    local_meta, ExpertId, PackedStore, PrecisionMap, WeightStore,
+};
+use mopeq::rng::Rng;
+use mopeq::store::TieredStore;
+use mopeq::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "mopeq_store_it_{}_{tag}_{n}.bin",
+        std::process::id()
+    ))
+}
+
+/// A mixed {2,3,4}-bit allocation exercising every packed width.
+fn mixed_map(cfg: &ModelConfig) -> PrecisionMap {
+    let mut pm = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            pm.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+        }
+    }
+    pm
+}
+
+#[test]
+fn artifact_round_trips_bit_exact_expert_outputs() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 8);
+    let pmap = mixed_map(&cfg);
+    let packed = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+    let path = tmp_path("roundtrip");
+    // cap == total heap: everything pages in once and stays resident
+    let store =
+        TieredStore::build(&packed, &path, packed.heap_bytes(), false, false)
+            .unwrap();
+    assert_eq!(store.variant(), cfg.name);
+    assert_eq!(store.moe_layers(), cfg.moe_layers());
+    assert_eq!(store.experts_per_layer(), cfg.experts);
+    assert_eq!(store.precision_map().bits, pmap.bits);
+
+    let mut rng = Rng::new(4).derive("store-probe");
+    let probe = Tensor::randn(&mut rng, &[1, cfg.d_model], 1.0);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            let id = ExpertId { layer: l, expert: e };
+            let got = store.get(id).unwrap();
+            assert_eq!(got.bits, packed.expert(id).bits, "({l}, {e}) bits");
+            assert_eq!(
+                got.ffn(&probe.data, 1),
+                packed.expert(id).ffn(&probe.data, 1),
+                "expert ({l}, {e}) FFN diverged after disk round-trip"
+            );
+        }
+    }
+    let st = store.snapshot();
+    assert_eq!(st.resident_experts, cfg.total_experts());
+    assert_eq!(st.evictions, 0, "full-heap cap must never evict");
+    assert_eq!(st.misses, cfg.total_experts() as u64);
+    drop(store);
+    assert!(!path.exists(), "auto-created artifact removed on drop");
+}
+
+#[test]
+fn tiered_engine_matches_resident_engine_under_concurrent_load() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let pmap = mixed_map(&cfg);
+    // heap size depends only on (config, map), so any seed gives the
+    // reference byte count for the cap
+    let heap_ref = PackedStore::rtn(
+        &cfg,
+        &WeightStore::init(&cfg, &local_meta(&cfg), 0),
+        &pmap,
+    )
+    .unwrap()
+    .heap_bytes();
+    let cap = heap_ref * 2 / 5; // 40% of the packed expert heap
+
+    // same seed + same map → identical internal RTN codes; the tiered
+    // engine differs only in where the experts live
+    let resident = Engine::builder(cfg.name)
+        .seed(77)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .build()
+        .unwrap();
+    let tiered = Engine::builder(cfg.name)
+        .seed(77)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap))
+        .workers(2)
+        .resident_bytes(cap)
+        .build()
+        .unwrap();
+
+    let stop = AtomicBool::new(false);
+    let handle = tiered.metrics_handle();
+    std::thread::scope(|s| {
+        // sampler: the cap invariant must hold at *every* snapshot
+        // taken while workers are actively paging experts in and out
+        let sampler = s.spawn(|| {
+            let mut seen = false;
+            while !stop.load(Ordering::Relaxed) {
+                let m = handle.snapshot();
+                if let Some(st) = &m.store {
+                    seen = true;
+                    assert!(
+                        st.resident_bytes <= st.capacity_bytes,
+                        "resident {} B exceeded cap {} B mid-serve",
+                        st.resident_bytes,
+                        st.capacity_bytes
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            seen
+        });
+        let mut clients = Vec::new();
+        for t in 0..3 {
+            let rc = resident.client();
+            let tc = tiered.client();
+            let cfg = &cfg;
+            clients.push(s.spawn(move || {
+                let mut rng = Rng::new(21).derive(&format!("store-par-{t}"));
+                for i in 0..12 {
+                    let task = Task::ALL[(t + i) % Task::ALL.len()];
+                    let sample = gen_sample(task, cfg, &mut rng);
+                    let a = rc.call(sample.clone()).unwrap();
+                    let b = tc.call(sample).unwrap();
+                    assert_eq!(
+                        a.answer, b.answer,
+                        "thread {t} request {i}: tiered reply diverged"
+                    );
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(
+            sampler.join().unwrap(),
+            "sampler never observed a store snapshot"
+        );
+    });
+
+    let rstats = resident.shutdown().unwrap();
+    let tstats = tiered.shutdown().unwrap();
+    assert_eq!(tstats.requests, 36);
+    assert!(rstats.store.is_none(), "resident engine must not report a store");
+    assert!(rstats.resident.expert_heap_bytes > cap);
+    let st = tstats.store.expect("tiered engine must report its store");
+    assert_eq!(st.capacity_bytes, cap);
+    assert!(st.misses > 0, "a 40% cap must page in from disk");
+    assert!(st.evictions > 0, "a 40% cap must evict");
+    assert!(st.resident_bytes <= st.capacity_bytes);
+    // the layer handles pin no expert heap — residency lives in (and
+    // is bounded by) the store
+    assert_eq!(tstats.resident.expert_heap_bytes, 0);
+}
+
+#[test]
+fn prefetch_beats_demand_only_on_skewed_trace() {
+    // uniform width so every expert charges the same heap bytes and
+    // both stores see byte-identical eviction pressure
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 9);
+    let pmap = PrecisionMap::uniform(&cfg, 3);
+    let packed = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+    let per_expert =
+        packed.expert(ExpertId { layer: 0, expert: 0 }).heap_bytes();
+    let cap = per_expert * 9 / 2; // ~4.5 experts resident
+    let pre = TieredStore::build(&packed, &tmp_path("pre"), cap, true, false)
+        .unwrap();
+    let dem = TieredStore::build(&packed, &tmp_path("dem"), cap, false, false)
+        .unwrap();
+
+    // rolling-pair trace: each step needs a fresh expert pair in every
+    // layer — hostile to a 4.5-expert LRU, trivial for a prefetcher
+    // that is told the pair the moment routing picks it
+    for step in 0..40 {
+        let ids = [(2 * step) % cfg.experts, (2 * step + 1) % cfg.experts];
+        for layer in 0..cfg.moe_layers() {
+            pre.will_need(layer, &ids);
+            pre.quiesce();
+            for &e in &ids {
+                let id = ExpertId { layer, expert: e };
+                pre.get(id).unwrap();
+                dem.get(id).unwrap();
+            }
+        }
+    }
+    let p = pre.snapshot();
+    let d = dem.snapshot();
+    assert_eq!(p.hits + p.misses, d.hits + d.misses, "same demand traffic");
+    assert!(p.prefetched > 0, "prefetcher never staged anything");
+    assert!(p.prefetch_hits > 0, "no demand fetch was answered by prefetch");
+    assert!(d.misses > 0, "demand-only LRU must thrash on this trace");
+    assert!(
+        p.hit_rate() > d.hit_rate(),
+        "prefetch hit rate {:.3} must strictly beat demand-only {:.3}",
+        p.hit_rate(),
+        d.hit_rate()
+    );
+    // and not marginally: lookahead staging converts nearly every
+    // would-be miss
+    assert!(
+        p.hit_rate() > d.hit_rate() + 0.5,
+        "prefetch {:.3} vs demand {:.3}",
+        p.hit_rate(),
+        d.hit_rate()
+    );
+}
+
+#[test]
+fn eviction_under_concurrent_readers_returns_correct_experts() {
+    let cfg = config::variant("dsvl2_tiny").unwrap();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), 10);
+    let pmap = mixed_map(&cfg);
+    let packed = PackedStore::rtn(&cfg, &ws, &pmap).unwrap();
+
+    let mut rng = Rng::new(6).derive("evict-probe");
+    let probe = Tensor::randn(&mut rng, &[1, cfg.d_model], 1.0);
+    // oracle: every expert's FFN output from the in-RAM store
+    let oracle: Vec<Vec<Vec<f32>>> = (0..cfg.moe_layers())
+        .map(|l| {
+            (0..cfg.experts)
+                .map(|e| {
+                    packed
+                        .expert(ExpertId { layer: l, expert: e })
+                        .ffn(&probe.data, 1)
+                })
+                .collect()
+        })
+        .collect();
+
+    let largest = (0..cfg.moe_layers())
+        .flat_map(|l| {
+            (0..cfg.experts).map(move |e| ExpertId { layer: l, expert: e })
+        })
+        .map(|id| packed.expert(id).heap_bytes())
+        .max()
+        .unwrap();
+    // ~6 experts resident out of 704: every thread constantly evicts
+    // entries other threads may still be reading through their Arcs
+    let store = TieredStore::build(
+        &packed,
+        &tmp_path("evict"),
+        largest * 6,
+        false,
+        false,
+    )
+    .unwrap();
+
+    const THREADS: usize = 4;
+    const GETS: usize = 200;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let store = &store;
+            let oracle = &oracle;
+            let probe = &probe;
+            let cfg = &cfg;
+            s.spawn(move || {
+                let mut rng = Rng::new(33).derive(&format!("evict-{t}"));
+                for _ in 0..GETS {
+                    let layer = rng.below(cfg.moe_layers());
+                    let expert = rng.below(cfg.experts);
+                    let got = store
+                        .get(ExpertId { layer, expert })
+                        .unwrap()
+                        .ffn(&probe.data, 1);
+                    assert_eq!(
+                        got, oracle[layer][expert],
+                        "expert ({layer}, {expert}) corrupted under eviction"
+                    );
+                }
+            });
+        }
+    });
+
+    let st = store.snapshot();
+    // every get resolved as exactly one hit or one miss — concurrent
+    // fetches of the same id must not double-count or lose accesses
+    assert_eq!(st.hits + st.misses, (THREADS * GETS) as u64);
+    assert!(st.evictions > 0, "a 6-expert cap must evict constantly");
+    assert!(st.misses > 0);
+    assert!(st.resident_bytes <= st.capacity_bytes);
+    assert!(store.resident_bytes() <= store.capacity_bytes());
+}
