@@ -1,0 +1,213 @@
+//! The background adaptation loop behind `mopeq serve --adapt`.
+//!
+//! Every `interval` the controller snapshots the engine's cumulative
+//! routing histogram, differences it against the previous snapshot to
+//! get the *window's* traffic (cumulative counts would dilute drift
+//! forever), and feeds the window's per-layer shares to the
+//! [`DriftDetector`]. The first non-empty window becomes the baseline
+//! — the traffic the active map is presumed matched to. When drift
+//! fires, [`select_candidate`] ranks the preloaded frontier maps under
+//! the window's shares and the winner (if any beats the live map by
+//! the configured margin) is hot-swapped through the engine's
+//! [`ReloadHandle`] — zero requests dropped, see
+//! `crate::engine`'s swap protocol. Every observation's distance is
+//! recorded into the metrics snapshot (`adapt_last_drift`), so the
+//! decision signal is visible in `/metrics` and Prometheus even when
+//! no swap happens.
+
+use crate::adapt::drift::{select_candidate, DriftConfig, DriftDetector};
+use crate::adapt::traffic::layer_shares;
+use crate::engine::ReloadHandle;
+use crate::obs::log;
+use crate::search::FrontierSet;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Controller tuning — what `--adapt` / `--adapt-interval-secs` set.
+#[derive(Clone, Debug)]
+pub struct AdaptConfig {
+    /// frontier artifact directory (`mopeq search --frontier-out`)
+    pub frontier_dir: PathBuf,
+    /// time between routing-histogram observations
+    pub interval: Duration,
+    pub drift: DriftConfig,
+    /// relative score improvement a candidate must show to swap
+    pub margin: f64,
+}
+
+impl AdaptConfig {
+    pub fn new(frontier_dir: PathBuf, interval: Duration) -> AdaptConfig {
+        AdaptConfig {
+            frontier_dir,
+            interval,
+            drift: DriftConfig::default(),
+            margin: 0.05,
+        }
+    }
+}
+
+/// Difference the cumulative grid against `prev` (which is advanced to
+/// `now`) and return the window's shares — `None` for an empty window,
+/// which carries no routing information.
+fn window_shares(
+    prev: &mut Vec<Vec<u64>>,
+    now: Vec<Vec<u64>>,
+) -> Option<Vec<Vec<f64>>> {
+    let window: Vec<Vec<u64>> = now
+        .iter()
+        .zip(prev.iter())
+        .map(|(n, p)| {
+            n.iter()
+                .zip(p)
+                .map(|(&n, &p)| n.saturating_sub(p))
+                .collect()
+        })
+        .collect();
+    *prev = now;
+    if window.iter().flatten().all(|&c| c == 0) {
+        return None;
+    }
+    Some(layer_shares(&window))
+}
+
+/// Handle on the spawned adaptation thread.
+pub struct AdaptController {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl AdaptController {
+    /// Load the frontier (fail-fast: a corrupt candidate directory is
+    /// a deployment error, not something to discover mid-drift) and
+    /// start the observation loop.
+    pub fn spawn(
+        reload: ReloadHandle,
+        cfg: AdaptConfig,
+    ) -> Result<AdaptController> {
+        let set = FrontierSet::load(&cfg.frontier_dir)?;
+        log::info(format!(
+            "adapt: watching {} frontier candidates every {:?}",
+            set.maps.len(),
+            cfg.interval
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("mopeq-adapt".into())
+            .spawn(move || run_loop(&reload, &set, &cfg, &stop2))?;
+        Ok(AdaptController { stop, handle: Some(handle) })
+    }
+
+    /// Stop the loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AdaptController {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_loop(
+    reload: &ReloadHandle,
+    set: &FrontierSet,
+    cfg: &AdaptConfig,
+    stop: &AtomicBool,
+) {
+    let mut prev = reload.routing_counts();
+    let mut detector: Option<DriftDetector> = None;
+    'outer: loop {
+        // sleep in short slices so stop() returns promptly
+        let mut slept = Duration::ZERO;
+        while slept < cfg.interval {
+            if stop.load(Ordering::Relaxed) || !reload.is_open() {
+                break 'outer;
+            }
+            let slice = Duration::from_millis(50).min(cfg.interval - slept);
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        let Some(shares) = window_shares(&mut prev, reload.routing_counts())
+        else {
+            continue; // idle window: nothing observed, nothing to judge
+        };
+        let det = match &mut detector {
+            None => {
+                // first traffic = the baseline the live map serves
+                detector =
+                    Some(DriftDetector::new(cfg.drift, shares.clone()));
+                continue;
+            }
+            Some(det) => det,
+        };
+        let fired = det.observe(&shares);
+        reload.record_drift(det.last_distance());
+        if !fired {
+            continue;
+        }
+        log::info(format!(
+            "adapt: drift {:.3} over threshold {:.3}",
+            det.last_distance(),
+            cfg.drift.threshold
+        ));
+        let current = reload.live_map();
+        match select_candidate(set, &shares, &current, cfg.margin) {
+            Some((i, saved)) => match reload.reload(saved) {
+                Ok(generation) => log::info(format!(
+                    "adapt: swapped to frontier point {i} \
+                     (mean {:.3} bits, generation {generation})",
+                    saved.map.mean_bits()
+                )),
+                Err(e) => log::warn(format!("adapt: swap failed: {e}")),
+            },
+            None => log::info(
+                "adapt: drift confirmed but no frontier candidate beats \
+                 the live map under the current traffic",
+            ),
+        }
+        // whichever way it went, the decision was taken under these
+        // shares — measure future drift from here, not the stale
+        // baseline (anti-flap)
+        det.reset(shares);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_shares_differences_cumulative_grids() {
+        let mut prev = vec![vec![10u64, 0], vec![5, 5]];
+        // no new traffic → None, prev unchanged in value
+        assert!(window_shares(
+            &mut prev,
+            vec![vec![10, 0], vec![5, 5]]
+        )
+        .is_none());
+        // 30 new hits on layer 0 expert 1 only
+        let sh = window_shares(&mut prev, vec![vec![10, 30], vec![5, 5]])
+            .unwrap();
+        assert_eq!(sh[0], vec![0.0, 1.0]);
+        assert_eq!(sh[1], vec![0.5, 0.5], "idle layer → uniform");
+        // prev advanced: the same grid again is an empty window
+        assert!(window_shares(
+            &mut prev,
+            vec![vec![10, 30], vec![5, 5]]
+        )
+        .is_none());
+    }
+}

@@ -1,0 +1,248 @@
+//! Workload-drift detection and candidate-map selection.
+//!
+//! The detector compares the live per-layer routing distribution with
+//! the baseline the active map was allocated under, using
+//! **total-variation distance** per MoE layer (`½ Σ |p − q|`, the
+//! probability mass that moved) and taking the worst layer — one
+//! drifted layer is enough to misprice its experts. Two guards keep a
+//! noisy workload from flapping the allocation:
+//!
+//! - **min-dwell**: at least `min_dwell` observations must pass after
+//!   every (re)baseline before the detector may fire again;
+//! - **hysteresis**: after firing, the detector re-arms only once the
+//!   distance has fallen back below `threshold − hysteresis` — a
+//!   workload hovering exactly at the threshold triggers once, not
+//!   every observation.
+//!
+//! Both are counted in *observations*, not wall time, so the detector
+//! is deterministic under test and its cadence is set entirely by the
+//! caller's sampling interval.
+
+use crate::engine::spec::SavedMap;
+use crate::moe::PrecisionMap;
+use crate::search::FrontierSet;
+
+/// Drift-detector tuning.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftConfig {
+    /// fire when the max per-layer TV distance reaches this
+    pub threshold: f64,
+    /// re-arm only below `threshold - hysteresis`
+    pub hysteresis: f64,
+    /// observations that must pass after a (re)baseline before firing
+    pub min_dwell: u32,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { threshold: 0.15, hysteresis: 0.05, min_dwell: 3 }
+    }
+}
+
+/// Max-over-layers total-variation distance between two per-layer
+/// share grids (rows assumed normalized to sum 1.0).
+pub fn tv_distance(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(pa, pb)| {
+            0.5 * pa
+                .iter()
+                .zip(pb)
+                .map(|(x, y)| (x - y).abs())
+                .sum::<f64>()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// The drift state machine (see the module docs).
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    /// the shares the active map was allocated under
+    baseline: Vec<Vec<f64>>,
+    /// may the detector fire? (false between firing and re-arm)
+    armed: bool,
+    /// observations since the last (re)baseline
+    since_reset: u32,
+    last_distance: f64,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig, baseline: Vec<Vec<f64>>) -> Self {
+        DriftDetector {
+            cfg,
+            baseline,
+            armed: true,
+            since_reset: 0,
+            last_distance: 0.0,
+        }
+    }
+
+    /// Feed one observation of the live per-layer shares. Returns
+    /// `true` when drift fires (the caller should select a candidate
+    /// and, after swapping, [`DriftDetector::reset`] to the new
+    /// baseline).
+    pub fn observe(&mut self, live: &[Vec<f64>]) -> bool {
+        self.since_reset = self.since_reset.saturating_add(1);
+        let d = tv_distance(&self.baseline, live);
+        self.last_distance = d;
+        if !self.armed && d <= self.cfg.threshold - self.cfg.hysteresis {
+            self.armed = true;
+        }
+        if self.armed
+            && self.since_reset >= self.cfg.min_dwell
+            && d >= self.cfg.threshold
+        {
+            self.armed = false;
+            return true;
+        }
+        false
+    }
+
+    /// Re-baseline after a swap: the new map was chosen under these
+    /// shares, so drift is measured against them from now on. The
+    /// hysteresis latch clears too — it guarded the *old* baseline —
+    /// and `min_dwell` alone paces the post-swap quiet period.
+    pub fn reset(&mut self, baseline: Vec<Vec<f64>>) {
+        self.baseline = baseline;
+        self.armed = true;
+        self.since_reset = 0;
+        self.last_distance = 0.0;
+    }
+
+    /// The max per-layer TV distance of the latest observation.
+    pub fn last_distance(&self) -> f64 {
+        self.last_distance
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+}
+
+/// Traffic-weighted quality proxy of a map: `Σ share × 4^(−bits)`
+/// (uniform-quantization MSE falls ~4× per added bit), summed over
+/// layers. Lower is better; weighting by the live shares makes a map
+/// that spends its bits on the *currently hot* experts score best.
+pub fn map_score(bits: &[Vec<u8>], shares: &[Vec<f64>]) -> f64 {
+    bits.iter()
+        .zip(shares)
+        .map(|(row, sh)| {
+            row.iter()
+                .zip(sh)
+                .map(|(&b, &s)| s * 4f64.powi(-(b as i32)))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+/// Pick the frontier map worth swapping to under the live shares, or
+/// `None` when the current map is already (near-)best.
+///
+/// Candidates are restricted to maps **no larger than the current
+/// one** (`mean_bits ≤ current + ε`) — adaptation reallocates the
+/// existing bit budget toward hot experts; growing the model is an
+/// operator decision, not a drift response. The winner must beat the
+/// current map's score by the relative `margin` to justify a swap.
+pub fn select_candidate<'a>(
+    set: &'a FrontierSet,
+    shares: &[Vec<f64>],
+    current: &PrecisionMap,
+    margin: f64,
+) -> Option<(usize, &'a SavedMap)> {
+    let current_score = map_score(&current.bits, shares);
+    let budget = current.mean_bits() + 1e-9;
+    let mut best: Option<(usize, f64)> = None;
+    for (i, saved) in set.maps.iter().enumerate() {
+        if saved.map.mean_bits() > budget || saved.map.bits == current.bits
+        {
+            continue;
+        }
+        let score = map_score(&saved.map.bits, shares);
+        if best.is_none_or(|(_, s)| score < s) {
+            best = Some((i, score));
+        }
+    }
+    let (i, score) = best?;
+    if score < current_score * (1.0 - margin) {
+        Some((i, &set.maps[i]))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shares(rows: &[&[f64]]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| r.to_vec()).collect()
+    }
+
+    #[test]
+    fn tv_distance_is_max_over_layers() {
+        let a = shares(&[&[0.5, 0.5], &[1.0, 0.0]]);
+        let b = shares(&[&[0.5, 0.5], &[0.6, 0.4]]);
+        assert!((tv_distance(&a, &b) - 0.4).abs() < 1e-12);
+        assert_eq!(tv_distance(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn detector_fires_after_dwell_and_holds_when_stable() {
+        let base = shares(&[&[0.5, 0.5]]);
+        let cfg =
+            DriftConfig { threshold: 0.2, hysteresis: 0.05, min_dwell: 3 };
+        let mut det = DriftDetector::new(cfg, base.clone());
+        // stable traffic: never fires, stays armed
+        for _ in 0..10 {
+            assert!(!det.observe(&base));
+        }
+        assert!(det.armed());
+        // shifted traffic fires only once the dwell is irrelevant
+        // (already past) — first shifted observation fires
+        let hot = shares(&[&[0.9, 0.1]]);
+        assert!(det.observe(&hot));
+        assert!((det.last_distance() - 0.4).abs() < 1e-12);
+        // disarmed: the same shifted traffic does not re-fire
+        assert!(!det.observe(&hot));
+        // re-arm requires falling below threshold - hysteresis
+        assert!(!det.observe(&shares(&[&[0.66, 0.34]]))); // d=0.16 > 0.15
+        assert!(!det.armed());
+        assert!(!det.observe(&base)); // d=0 → re-arms
+        assert!(det.armed());
+        assert!(det.observe(&hot), "armed again → fires again");
+    }
+
+    #[test]
+    fn min_dwell_blocks_early_firing_after_reset() {
+        let base = shares(&[&[0.5, 0.5]]);
+        let hot = shares(&[&[1.0, 0.0]]);
+        let cfg =
+            DriftConfig { threshold: 0.2, hysteresis: 0.05, min_dwell: 3 };
+        let mut det = DriftDetector::new(cfg, base);
+        // observations 1 and 2 are inside the dwell even though the
+        // distance is far over threshold; the 3rd fires
+        assert!(!det.observe(&hot));
+        assert!(!det.observe(&hot));
+        assert!(det.observe(&hot));
+        // reset re-starts the dwell
+        det.reset(shares(&[&[1.0, 0.0]]));
+        let back = shares(&[&[0.0, 1.0]]);
+        assert!(!det.observe(&back));
+        assert!(!det.observe(&back));
+        assert!(det.observe(&back));
+    }
+
+    #[test]
+    fn map_score_prefers_bits_on_hot_experts() {
+        let sh = shares(&[&[0.9, 0.1]]);
+        let hot_heavy = vec![vec![4u8, 2u8]];
+        let cold_heavy = vec![vec![2u8, 4u8]];
+        assert!(map_score(&hot_heavy, &sh) < map_score(&cold_heavy, &sh));
+        // same mean bits, so only the placement differs
+        assert_eq!(
+            hot_heavy.iter().flatten().sum::<u8>(),
+            cold_heavy.iter().flatten().sum::<u8>()
+        );
+    }
+}

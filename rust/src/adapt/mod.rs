@@ -1,0 +1,75 @@
+//! Adaptive precision control — the loop from measured traffic back
+//! into allocation, and from allocation back into a *running* engine.
+//!
+//! Three parts (DESIGN.md §Adaptive precision control):
+//!
+//! - [`traffic::TrafficPrior`] — a measured per-expert activation
+//!   prior, loaded from a `traffic.json` snapshot (`mopeq serve
+//!   --traffic-out`, `GET /v1/experts`) and threaded into
+//!   [`crate::search::CostModel`] so every expert's error and
+//!   throughput terms are weighted by how hot it actually runs
+//!   (`mopeq search --traffic profile.json`). The weighting happens
+//!   inside the cost table, so the DP, the greedy baseline, and the
+//!   refiner all benefit unchanged.
+//! - [`drift::DriftDetector`] — compares the live routing histogram
+//!   against the prior the active map was searched under
+//!   (total-variation distance per MoE layer, max over layers) with
+//!   hysteresis and a minimum dwell so a noisy workload cannot flap
+//!   the allocation; [`drift::select_candidate`] ranks a frontier
+//!   directory's maps under the *current* traffic and picks the one
+//!   worth swapping to.
+//! - [`controller::AdaptController`] — the background loop behind
+//!   `mopeq serve --adapt frontier_dir/`: windowed routing deltas →
+//!   drift detection → candidate selection → a zero-downtime hot-swap
+//!   through the engine's [`crate::engine::ReloadHandle`].
+//!
+//! The swap mechanics themselves (generation counter, staged
+//! `Arc<EngineWeights>`, per-worker acknowledgement at a request
+//! boundary) live in [`crate::engine`] — they need the engine's
+//! internals; this module only decides *when* and *to what*.
+
+pub mod controller;
+pub mod drift;
+pub mod traffic;
+
+pub use controller::{AdaptConfig, AdaptController};
+pub use drift::{select_candidate, tv_distance, DriftConfig, DriftDetector};
+pub use traffic::TrafficPrior;
+
+/// Typed errors of the adaptive-control subsystem.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdaptError {
+    /// a traffic profile measured on a different model variant
+    TrafficVariant { expected: String, found: String },
+    /// a traffic grid whose shape does not match the model
+    TrafficShape {
+        model_layers: usize,
+        model_experts: usize,
+        traffic_layers: usize,
+        traffic_experts: usize,
+    },
+}
+
+impl std::fmt::Display for AdaptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdaptError::TrafficVariant { expected, found } => write!(
+                f,
+                "traffic profile was measured on `{found}`, the model \
+                 is `{expected}`"
+            ),
+            AdaptError::TrafficShape {
+                model_layers,
+                model_experts,
+                traffic_layers,
+                traffic_experts,
+            } => write!(
+                f,
+                "traffic grid is {traffic_layers}x{traffic_experts}, \
+                 the model routes {model_layers}x{model_experts}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdaptError {}

@@ -1,0 +1,210 @@
+//! Measured expert-activation prior for the allocation search.
+//!
+//! A [`TrafficPrior`] is the `[moe_layer][expert]` hit histogram of a
+//! real (or replayed) workload, normalized two ways:
+//!
+//! - `weights` — each layer's row scaled so its **mean is exactly 1.0**
+//!   (`count × experts / layer_total`). This is the factor the
+//!   [`crate::search::CostModel`] multiplies into an expert's
+//!   sensitivity-weighted error and throughput surcharge: a uniform
+//!   workload leaves every weight at exactly `1.0`, so the traffic-less
+//!   cost table is reproduced bit-for-bit and the prior is a strict
+//!   generalization, not a new code path.
+//! - `shares` — each layer's row normalized to **sum 1.0** (a
+//!   probability distribution), the form the drift detector's
+//!   total-variation distance and the candidate scorer consume.
+//!
+//! A layer that saw no traffic gets all-`1.0` weights and uniform
+//! shares — no information means no reweighting, not a zero-cost
+//! expert the solver would starve to 2 bits for free.
+
+use crate::adapt::AdaptError;
+use crate::config::ModelConfig;
+use crate::obs::routing::TrafficSnapshot;
+use crate::Result;
+use std::path::Path;
+
+/// Per-layer activation shares of a counts grid: each row normalized
+/// to sum 1.0; a row with no traffic becomes uniform (`1/experts`).
+pub fn layer_shares(counts: &[Vec<u64>]) -> Vec<Vec<f64>> {
+    counts
+        .iter()
+        .map(|row| {
+            let total: u64 = row.iter().sum();
+            if total == 0 {
+                let n = row.len().max(1);
+                vec![1.0 / n as f64; row.len()]
+            } else {
+                row.iter()
+                    .map(|&c| c as f64 / total as f64)
+                    .collect()
+            }
+        })
+        .collect()
+}
+
+/// A measured activation-frequency prior (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficPrior {
+    /// model variant the traffic was measured on
+    pub variant: String,
+    /// `[moe_layer][expert]`, layer mean exactly 1.0
+    pub weights: Vec<Vec<f64>>,
+    /// `[moe_layer][expert]`, layer sum exactly 1.0
+    pub shares: Vec<Vec<f64>>,
+    /// total routed (token, expert) hits behind the prior
+    pub hits: u64,
+}
+
+impl TrafficPrior {
+    /// Build the prior from a raw counts grid.
+    pub fn from_counts(
+        variant: impl Into<String>,
+        counts: &[Vec<u64>],
+    ) -> TrafficPrior {
+        let weights = counts
+            .iter()
+            .map(|row| {
+                let total: u64 = row.iter().sum();
+                if total == 0 {
+                    vec![1.0; row.len()]
+                } else {
+                    let experts = row.len() as f64;
+                    row.iter()
+                        .map(|&c| c as f64 * experts / total as f64)
+                        .collect()
+                }
+            })
+            .collect();
+        TrafficPrior {
+            variant: variant.into(),
+            weights,
+            shares: layer_shares(counts),
+            hits: counts.iter().flatten().sum(),
+        }
+    }
+
+    /// Build the prior from an exported [`TrafficSnapshot`] (the
+    /// `traffic.json` schema — `serve --traffic-out`, `/v1/experts`).
+    pub fn from_snapshot(snap: &TrafficSnapshot) -> TrafficPrior {
+        TrafficPrior::from_counts(snap.variant.clone(), &snap.counts)
+    }
+
+    /// Load a `traffic.json` profile from disk.
+    pub fn load(path: &Path) -> Result<TrafficPrior> {
+        Ok(TrafficPrior::from_snapshot(&TrafficSnapshot::load(path)?))
+    }
+
+    /// The no-information prior: every weight 1.0, uniform shares.
+    pub fn uniform(
+        variant: impl Into<String>,
+        moe_layers: usize,
+        experts: usize,
+    ) -> TrafficPrior {
+        TrafficPrior::from_counts(
+            variant,
+            &vec![vec![0u64; experts]; moe_layers],
+        )
+    }
+
+    pub fn moe_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn experts(&self) -> usize {
+        self.weights.first().map_or(0, Vec::len)
+    }
+
+    /// The cost-model multiplier for one expert.
+    pub fn weight(&self, layer: usize, expert: usize) -> f64 {
+        self.weights[layer][expert]
+    }
+
+    /// Typed variant + shape check against a model config — the guard
+    /// every consumer (search CLI, cost model, controller) runs before
+    /// trusting the grid.
+    pub fn check_model(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.variant != cfg.name {
+            return Err(AdaptError::TrafficVariant {
+                expected: cfg.name.to_string(),
+                found: self.variant.clone(),
+            }
+            .into());
+        }
+        let (lm, e) = (cfg.moe_layers(), cfg.experts);
+        if self.moe_layers() != lm
+            || self.weights.iter().any(|r| r.len() != e)
+        {
+            return Err(AdaptError::TrafficShape {
+                model_layers: lm,
+                model_experts: e,
+                traffic_layers: self.moe_layers(),
+                traffic_experts: self.experts(),
+            }
+            .into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::obs::routing::RoutingStats;
+
+    #[test]
+    fn weights_are_layer_mean_one_and_shares_sum_one() {
+        let counts = vec![vec![30, 10, 0, 0], vec![5, 5, 5, 5]];
+        let p = TrafficPrior::from_counts("m", &counts);
+        assert_eq!(p.hits, 60);
+        // layer 0: 40 hits over 4 experts → weight = count / 10
+        assert_eq!(p.weights[0], vec![3.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.shares[0], vec![0.75, 0.25, 0.0, 0.0]);
+        // a uniform layer is *exactly* 1.0 (bit-identity with no prior)
+        assert_eq!(p.weights[1], vec![1.0; 4]);
+        for row in &p.shares {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_traffic_layer_is_uninformative_not_free() {
+        let p = TrafficPrior::from_counts("m", &[vec![0, 0, 0]]);
+        assert_eq!(p.weights[0], vec![1.0; 3]);
+        assert_eq!(p.shares[0], vec![1.0 / 3.0; 3]);
+        assert_eq!(p.hits, 0);
+        let u = TrafficPrior::uniform("m", 1, 3);
+        assert_eq!(u, p);
+    }
+
+    #[test]
+    fn snapshot_round_trip_and_model_check() {
+        let cfg = config::variant("dsvl2_tiny").unwrap();
+        let stats = RoutingStats::new(cfg.moe_layers(), cfg.experts);
+        let mut grid = vec![vec![0.0; cfg.experts]; cfg.moe_layers()];
+        grid[0][1] = 7.0;
+        stats.record(&grid, 4, 1);
+        let snap = TrafficSnapshot::capture(&stats, &cfg, None, None);
+        let p = TrafficPrior::from_snapshot(&snap);
+        p.check_model(&cfg).unwrap();
+        assert_eq!(p.weights[0][1], cfg.experts as f64);
+
+        // wrong variant is typed
+        let mut q = p.clone();
+        q.variant = "other".into();
+        let err = q.check_model(&cfg).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AdaptError>(),
+            Some(AdaptError::TrafficVariant { .. })
+        ));
+        // wrong shape is typed
+        let mut q = p.clone();
+        q.weights[0].pop();
+        let err = q.check_model(&cfg).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AdaptError>(),
+            Some(AdaptError::TrafficShape { .. })
+        ));
+    }
+}

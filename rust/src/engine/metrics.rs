@@ -15,6 +15,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Upper bounds (seconds) of the request-latency histogram buckets —
+/// the Prometheus `mopeq_request_duration_seconds_bucket` `le` ladder.
+/// Counts are **cumulative** per the exposition format (each bucket
+/// counts every request at or under its bound; `+Inf` is the request
+/// total and is not stored, it's appended at render).
+pub const LATENCY_BUCKETS: [f64; 12] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5,
+];
+
 /// Point-in-time view of a running (or just-shut-down) engine.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
@@ -58,6 +68,20 @@ pub struct MetricsSnapshot {
     /// resident deployments. Filled by the engine-level snapshot path
     /// like [`MetricsSnapshot::trace`].
     pub store: Option<StoreSnapshot>,
+    /// cumulative request-latency histogram over [`LATENCY_BUCKETS`]
+    /// (`latency_buckets[i]` = requests with latency ≤ bucket `i`'s
+    /// bound; the implicit `+Inf` count is `requests`)
+    pub latency_buckets: Vec<usize>,
+    /// total answered-request latency (the histogram's `_sum`)
+    pub latency_sum: Duration,
+    /// current hot-swap weight generation (0 = the build-time weights).
+    /// Filled by the engine-level snapshot path.
+    pub adapt_generation: u64,
+    /// completed zero-downtime map swaps
+    pub adapt_swaps: u64,
+    /// last routing-drift distance the adapt controller observed
+    /// (max-over-layers total variation, 0 when no controller runs)
+    pub adapt_last_drift: f64,
 }
 
 /// One worker's slice of the snapshot.
@@ -124,6 +148,25 @@ impl MetricsSnapshot {
                     None => Json::Null,
                 },
             ),
+            (
+                "latency_buckets".into(),
+                Json::Arr(
+                    self.latency_buckets
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("latency_sum_ns".into(), dur_json(self.latency_sum)),
+            (
+                "adapt_generation".into(),
+                Json::Num(self.adapt_generation as f64),
+            ),
+            ("adapt_swaps".into(), Json::Num(self.adapt_swaps as f64)),
+            (
+                "adapt_last_drift".into(),
+                Json::Num(self.adapt_last_drift),
+            ),
         ])
     }
 
@@ -153,6 +196,16 @@ impl MetricsSnapshot {
                 Json::Null => None,
                 s => Some(StoreSnapshot::from_json(s)?),
             },
+            latency_buckets: j
+                .req("latency_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            latency_sum: dur_from(j.req("latency_sum_ns")?)?,
+            adapt_generation: j.req("adapt_generation")?.as_usize()? as u64,
+            adapt_swaps: j.req("adapt_swaps")?.as_usize()? as u64,
+            adapt_last_drift: j.req("adapt_last_drift")?.as_f64()?,
         })
     }
 }
@@ -326,6 +379,15 @@ impl Metrics {
             all.extend_from_slice(&lat);
         }
         all.sort();
+        // cumulative `le` buckets over the fixed ladder, plus the sum —
+        // everything a real Prometheus histogram family needs
+        let latency_buckets = LATENCY_BUCKETS
+            .iter()
+            .map(|&le| {
+                all.iter().filter(|d| d.as_secs_f64() <= le).count()
+            })
+            .collect();
+        let latency_sum = all.iter().sum();
         let uptime = self.started.lock().unwrap().elapsed();
         MetricsSnapshot {
             queue_depth,
@@ -344,6 +406,11 @@ impl Metrics {
             workers,
             trace: TraceSummary::default(),
             store: None,
+            latency_buckets,
+            latency_sum,
+            adapt_generation: 0,
+            adapt_swaps: 0,
+            adapt_last_drift: 0.0,
         }
     }
 }
@@ -397,6 +464,16 @@ mod tests {
             assert!(w.p50 <= w.p95 && w.p95 <= w.p99);
         }
         assert_eq!(s.workers[0].p95, 3 * ms);
+        // the latency histogram is cumulative over the fixed ladder and
+        // tops out at the request count (the +Inf bucket)
+        assert_eq!(s.latency_buckets.len(), LATENCY_BUCKETS.len());
+        assert!(s.latency_buckets.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*s.latency_buckets.last().unwrap(), s.requests);
+        // 1 ms ≤ all four latencies ≤ 4 ms: nothing under the 0.5 ms
+        // bucket, everything at or under the 5 ms bucket
+        assert_eq!(s.latency_buckets[0], 0);
+        assert_eq!(s.latency_buckets[3], 4);
+        assert_eq!(s.latency_sum, 10 * ms);
     }
 
     #[test]
@@ -451,6 +528,9 @@ mod tests {
             evictions: 80,
             bytes_paged: 460_800,
         });
+        tiered.adapt_generation = 2;
+        tiered.adapt_swaps = 2;
+        tiered.adapt_last_drift = 0.375;
         for s in [busy_snapshot(), tiered, Metrics::new(1).snapshot(0)] {
             let wire = s.to_json().to_string();
             let parsed = crate::jsonx::Json::parse(&wire).unwrap();
@@ -480,6 +560,11 @@ mod tests {
                 back.resident.shared_bytes,
                 s.resident.shared_bytes
             );
+            assert_eq!(back.latency_buckets, s.latency_buckets);
+            assert_eq!(back.latency_sum, s.latency_sum);
+            assert_eq!(back.adapt_generation, s.adapt_generation);
+            assert_eq!(back.adapt_swaps, s.adapt_swaps);
+            assert_eq!(back.adapt_last_drift, s.adapt_last_drift);
         }
     }
 

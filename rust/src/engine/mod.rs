@@ -50,6 +50,22 @@
 //! (admission control), and a request whose per-client deadline expires
 //! while queued is answered with [`Rejected::Deadline`] instead of
 //! being served stale or dropped.
+//!
+//! **Hot-swap.** A packed engine built with
+//! [`EngineBuilder::reloadable`] can atomically re-point its expert
+//! weights at a different precision map **while serving** — zero
+//! requests dropped or rejected by the swap itself. The protocol
+//! (driven by [`ReloadHandle::reload`]): re-pack the target map from
+//! the retained reference weights, stage the new [`EngineWeights`]
+//! beside the live ones, bump a generation counter, and nudge the
+//! worker pool. Each worker observes the new generation at its next
+//! queue pop (a request boundary — never mid-batch), rebuilds its
+//! executor replica on the staged weights, acknowledges, and resumes;
+//! queued jobs stay queued across the rebuild and are served by the
+//! new weights. `reload` returns once every worker acknowledged, so a
+//! reply obtained after it returns is bit-identical to an engine built
+//! directly on the target map. The old store drains naturally as
+//! workers drop their `Arc` clones.
 
 pub mod metrics;
 pub(crate) mod queue;
@@ -65,7 +81,7 @@ pub use spec::{
 };
 
 use crate::config::{self, ModelConfig};
-use crate::coordinator::executor::SharedArgs;
+use crate::coordinator::executor::{MoeKernel, SharedArgs};
 use crate::coordinator::QuantStats;
 use crate::data::Sample;
 use crate::moe::{PackedStore, PrecisionMap, WeightStore};
@@ -79,7 +95,7 @@ use metrics::Metrics;
 use queue::JobQueue;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How the engine holds (and executes) expert weights.
@@ -306,6 +322,35 @@ impl EngineWeights {
     }
 }
 
+/// Swap-protocol state shared between the reload path and the worker
+/// pool. `generation` monotonically counts staged swaps; a worker whose
+/// seen generation lags rebuilds on `staged` (kept — **every** worker
+/// clones it, the slot is only replaced by the next stage) and records
+/// its new generation in `acks[index]` so [`ReloadHandle::reload`] can
+/// wait for the whole pool.
+pub(crate) struct SwapState {
+    pub(crate) generation: AtomicU64,
+    pub(crate) staged: Mutex<Option<Arc<EngineWeights>>>,
+    pub(crate) acks: Vec<AtomicU64>,
+    /// completed swaps (every worker acknowledged)
+    pub(crate) swaps: AtomicU64,
+    /// last observed routing drift (f64 bits) — written by the adapt
+    /// controller on every observation, swap or not
+    pub(crate) last_drift: AtomicU64,
+}
+
+impl SwapState {
+    fn new(workers: usize) -> SwapState {
+        SwapState {
+            generation: AtomicU64::new(0),
+            staged: Mutex::new(None),
+            acks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            swaps: AtomicU64::new(0),
+            last_drift: AtomicU64::new(0),
+        }
+    }
+}
+
 pub(crate) struct Shared {
     pub(crate) queue: JobQueue,
     pub(crate) metrics: Metrics,
@@ -314,7 +359,14 @@ pub(crate) struct Shared {
     /// bounded window of completed request traces
     pub(crate) traces: TraceRing,
     /// the tiered expert store, when serving under `--resident-bytes`
-    pub(crate) store: Option<Arc<TieredStore>>,
+    /// (behind a mutex so a hot-swap can re-point it)
+    pub(crate) store: Mutex<Option<Arc<TieredStore>>>,
+    /// hot-swap protocol state (generation, staged weights, acks)
+    pub(crate) swap: SwapState,
+    /// the precision map the pool currently serves — starts as the
+    /// build-time map, advanced by each completed swap; what the
+    /// observability plane joins traffic against
+    pub(crate) pmap: Mutex<Option<PrecisionMap>>,
 }
 
 impl Shared {
@@ -324,7 +376,12 @@ impl Shared {
     fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot(self.queue.len());
         snap.trace = self.traces.summary();
-        snap.store = self.store.as_ref().map(|s| s.snapshot());
+        snap.store =
+            self.store.lock().unwrap().as_ref().map(|s| s.snapshot());
+        snap.adapt_generation = self.swap.generation.load(Ordering::Acquire);
+        snap.adapt_swaps = self.swap.swaps.load(Ordering::Relaxed);
+        snap.adapt_last_drift =
+            f64::from_bits(self.swap.last_drift.load(Ordering::Relaxed));
         snap
     }
 }
@@ -347,6 +404,7 @@ pub struct EngineBuilder {
     resident_bytes: Option<usize>,
     store_path: Option<PathBuf>,
     prefetch: bool,
+    reloadable: bool,
 }
 
 impl EngineBuilder {
@@ -367,6 +425,7 @@ impl EngineBuilder {
             resident_bytes: None,
             store_path: None,
             prefetch: true,
+            reloadable: false,
         }
     }
 
@@ -485,6 +544,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Keep what a live precision-map hot-swap needs: the reference
+    /// weights (experts included) and the quantization spec, so
+    /// [`Engine::reloader`] can re-pack a new map and swap the pool
+    /// onto it without a restart. Opt-in because retaining the dense
+    /// expert weights costs exactly the memory the packed form
+    /// otherwise saves. Requires [`WeightForm::Packed`].
+    pub fn reloadable(mut self, on: bool) -> Self {
+        self.reloadable = on;
+        self
+    }
+
     /// Resolve the deployment through the [`spec::PreparedWeights`]
     /// pipeline (resolve → calibrate → allocate → quantize/pack →
     /// strip), then spawn and warm the worker pool. Returns once every
@@ -506,6 +576,17 @@ impl EngineBuilder {
             }
             None => WeightStore::init(&cfg, &crate::moe::local_meta(&cfg), self.seed),
         };
+        if self.reloadable && self.form != WeightForm::Packed {
+            bail!(
+                "reloadable swaps the packed expert store — it requires \
+                 WeightForm::Packed, not {}",
+                self.form.label()
+            );
+        }
+        // the reload path re-packs new maps from the reference weights,
+        // which the packed prepare pipeline otherwise strips — retain a
+        // full copy only when the deployment opted in
+        let retained = self.reloadable.then(|| ws.clone());
 
         let backend = self.backend.clone();
         let prepared = PreparedWeights::prepare(
@@ -549,12 +630,34 @@ impl EngineBuilder {
         };
 
         let weights = Arc::new(weights);
+        let reload = retained.map(|ws_full| {
+            let backbone = match weights.as_ref() {
+                EngineWeights::Packed { backbone, .. }
+                | EngineWeights::Tiered { backbone, .. } => backbone.clone(),
+                EngineWeights::Dense(_) => {
+                    unreachable!("reloadable requires WeightForm::Packed")
+                }
+            };
+            Arc::new(ReloadCtx {
+                cfg: cfg.clone(),
+                ws: ws_full,
+                quant: self.quant.clone(),
+                seed: self.seed,
+                backend: self.backend.clone(),
+                backbone,
+                resident_bytes: self.resident_bytes,
+                prefetch: self.prefetch,
+                lock: Mutex::new(()),
+            })
+        });
         let shared = Arc::new(Shared {
             queue: JobQueue::new(self.queue_depth),
             metrics: Metrics::new(self.workers),
             routing: RoutingStats::new(cfg.moe_layers(), cfg.experts),
             traces: TraceRing::sampled(self.trace_buffer, self.trace_sample),
-            store: store_handle,
+            store: Mutex::new(store_handle),
+            swap: SwapState::new(self.workers),
+            pmap: Mutex::new(pmap.clone()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::with_capacity(self.workers);
@@ -618,7 +721,15 @@ impl EngineBuilder {
         // every worker is warm: start the serving clock now so
         // throughput never includes compile/warmup cost
         shared.metrics.mark_started();
-        Ok(Engine { shared, workers: handles, cfg, pmap, provenance, stats })
+        Ok(Engine {
+            shared,
+            workers: handles,
+            cfg,
+            pmap,
+            provenance,
+            stats,
+            reload,
+        })
     }
 }
 
@@ -646,6 +757,9 @@ pub struct Engine {
     provenance: Option<Provenance>,
     /// quantization stats from the build (None for fp16)
     stats: Option<QuantStats>,
+    /// everything a live map hot-swap needs (builds with
+    /// [`EngineBuilder::reloadable`] only)
+    reload: Option<Arc<ReloadCtx>>,
 }
 
 impl Engine {
@@ -716,11 +830,20 @@ impl Engine {
     /// network server, and it keeps reading the same shared state
     /// (including after shutdown, for `--traffic-out`).
     pub fn observer(&self) -> ObsHandle {
-        ObsHandle {
+        ObsHandle { shared: self.shared.clone(), cfg: self.cfg.clone() }
+    }
+
+    /// A cheap `Send + Clone` handle onto the hot-swap path — `Some`
+    /// only for builds that opted in via
+    /// [`EngineBuilder::reloadable`]. Like the other handles it
+    /// outlives the engine borrow: grab it before handing the engine
+    /// to the network server, hand clones to the adapt controller and
+    /// the `/v1/reload` route.
+    pub fn reloader(&self) -> Option<ReloadHandle> {
+        self.reload.as_ref().map(|ctx| ReloadHandle {
             shared: self.shared.clone(),
-            cfg: self.cfg.clone(),
-            pmap: self.pmap.clone(),
-        }
+            ctx: ctx.clone(),
+        })
     }
 
     /// Stop admissions, drain every queued job through the workers,
@@ -758,6 +881,156 @@ impl Drop for Engine {
     }
 }
 
+/// What a [`ReloadHandle`] needs to re-pack and swap a new precision
+/// map: the reference weights (experts retained), the build's
+/// quantization spec and seed, and the Arc-shared backbone the swap
+/// reuses unchanged (only expert stores are replaced — the backbone
+/// never re-quantizes, so it stays shared across generations).
+pub(crate) struct ReloadCtx {
+    cfg: ModelConfig,
+    ws: WeightStore,
+    quant: QuantSpec,
+    seed: u64,
+    backend: Option<String>,
+    backbone: Arc<SharedArgs>,
+    resident_bytes: Option<usize>,
+    prefetch: bool,
+    /// serializes concurrent reloads (controller + `/v1/reload`)
+    lock: Mutex<()>,
+}
+
+/// A `Send + Clone` handle onto the hot-swap path, detached from the
+/// engine's lifetime borrow (same pattern as [`MetricsHandle`]).
+/// Drives zero-downtime precision-map swaps and feeds the adapt
+/// controller its routing observations.
+#[derive(Clone)]
+pub struct ReloadHandle {
+    shared: Arc<Shared>,
+    ctx: Arc<ReloadCtx>,
+}
+
+impl ReloadHandle {
+    /// Atomically re-point the serving pool at `saved`'s precision map
+    /// without dropping a request (the module docs describe the
+    /// protocol). Returns the new weight generation once **every**
+    /// worker serves the new map; concurrent reloads serialize.
+    pub fn reload(&self, saved: &SavedMap) -> Result<u64> {
+        let _serialized = self.ctx.lock.lock().unwrap();
+        if !self.shared.queue.is_open() {
+            bail!("engine is shut down; nothing to reload");
+        }
+        if saved.variant != self.ctx.cfg.name {
+            return Err(SpecError::VariantMismatch {
+                expected: self.ctx.cfg.name.to_string(),
+                found: saved.variant.clone(),
+            }
+            .into());
+        }
+        spec::check_map(&self.ctx.cfg, &saved.map)?;
+        // re-pack the target map through the same quantize stage the
+        // build ran — bit-exact with an engine built on this map
+        let session = if self.ctx.quant.quantizer.needs_calib() {
+            Some(worker::open_session(self.ctx.backend.as_deref())?)
+        } else {
+            None
+        };
+        let (store, _stats) = self.ctx.quant.pack(
+            session.as_ref(),
+            &self.ctx.cfg,
+            &self.ctx.ws,
+            &saved.map,
+            MoeKernel::default(),
+            self.ctx.seed,
+        )?;
+        let mut tiered_handle: Option<Arc<TieredStore>> = None;
+        let staged = match self.ctx.resident_bytes {
+            Some(cap) => {
+                let path = default_store_path(self.ctx.cfg.name);
+                let tiered = Arc::new(TieredStore::build(
+                    &store,
+                    &path,
+                    cap,
+                    self.ctx.prefetch,
+                    false,
+                )?);
+                tiered_handle = Some(tiered.clone());
+                EngineWeights::Tiered {
+                    backbone: self.ctx.backbone.clone(),
+                    store: tiered,
+                }
+            }
+            None => EngineWeights::Packed {
+                backbone: self.ctx.backbone.clone(),
+                experts: Arc::new(store),
+            },
+        };
+        // stage → bump → nudge: every worker rebuilds at its next
+        // request boundary; queued jobs wait and are served by the new
+        // weights, never dropped
+        *self.shared.swap.staged.lock().unwrap() = Some(Arc::new(staged));
+        let generation =
+            self.shared.swap.generation.fetch_add(1, Ordering::AcqRel) + 1;
+        self.shared.queue.nudge();
+        loop {
+            let all_acked = self
+                .shared
+                .swap
+                .acks
+                .iter()
+                .all(|a| a.load(Ordering::Acquire) >= generation);
+            if all_acked {
+                break;
+            }
+            if !self.shared.queue.is_open() {
+                bail!("engine closed while a reload was in flight");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // the pool serves the new map everywhere: flip the
+        // observability plane over to it
+        *self.shared.pmap.lock().unwrap() = Some(saved.map.clone());
+        *self.shared.store.lock().unwrap() = tiered_handle;
+        self.shared.swap.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// The precision map the pool currently serves.
+    pub fn live_map(&self) -> PrecisionMap {
+        self.shared
+            .pmap
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("a reloadable engine always serves a precision map")
+    }
+
+    /// Current weight generation (0 until the first completed swap).
+    pub fn generation(&self) -> u64 {
+        self.shared.swap.generation.load(Ordering::Acquire)
+    }
+
+    /// The live cumulative routing histogram — what the adapt
+    /// controller windows into drift observations.
+    pub fn routing_counts(&self) -> Vec<Vec<u64>> {
+        self.shared.routing.counts()
+    }
+
+    /// Whether the engine still admits work (false once shutdown
+    /// began) — the controller's exit signal.
+    pub fn is_open(&self) -> bool {
+        self.shared.queue.is_open()
+    }
+
+    /// Record the controller's latest observed drift distance into the
+    /// metrics plane (`adapt_last_drift`, `mopeq_adapt_drift`).
+    pub fn record_drift(&self, distance: f64) {
+        self.shared
+            .swap
+            .last_drift
+            .store(distance.to_bits(), Ordering::Relaxed);
+    }
+}
+
 /// A live-telemetry handle detached from the [`Engine`]'s lifetime
 /// borrow: snapshots stay consistent while serving and keep working
 /// during shutdown drain (they read the same counters
@@ -781,7 +1054,6 @@ impl MetricsHandle {
 pub struct ObsHandle {
     shared: Arc<Shared>,
     cfg: ModelConfig,
-    pmap: Option<PrecisionMap>,
 }
 
 impl ObsHandle {
@@ -799,14 +1071,17 @@ impl ObsHandle {
         self.shared.traces.capacity()
     }
 
-    /// The live routing histogram joined with the engine's precision
-    /// map — the `GET /v1/experts` body and the `--traffic-out` artifact.
+    /// The live routing histogram joined with the **currently served**
+    /// precision map (hot-swaps included) — the `GET /v1/experts` body
+    /// and the `--traffic-out` artifact.
     pub fn traffic(&self) -> TrafficSnapshot {
+        let pmap = self.shared.pmap.lock().unwrap().clone();
+        let store = self.shared.store.lock().unwrap().as_ref().map(|s| s.snapshot());
         TrafficSnapshot::capture(
             &self.shared.routing,
             &self.cfg,
-            self.pmap.as_ref(),
-            self.shared.store.as_ref().map(|s| s.snapshot()),
+            pmap.as_ref(),
+            store,
         )
     }
 

@@ -9,8 +9,19 @@
 
 use crate::engine::{Job, Rejected};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+/// What a swap-aware blocking pop yields.
+pub(crate) enum Popped {
+    Job(Job),
+    /// the staged-weights generation advanced past the worker's —
+    /// rebuild on the new weights before serving anything else
+    Swap,
+    /// closed **and** drained
+    Closed,
+}
 
 struct QueueState {
     jobs: VecDeque<Job>,
@@ -71,6 +82,30 @@ impl JobQueue {
         }
     }
 
+    /// Swap-aware blocking pop — the worker's main loop. Returns
+    /// [`Popped::Swap`] as soon as `generation` differs from the
+    /// caller's `seen` value, **before** taking another job: a staged
+    /// weight swap preempts queued work (the jobs stay queued and are
+    /// served by the rebuilt executor, never dropped). The generation
+    /// check lives inside the condvar loop, so an idle worker parked
+    /// here is woken by [`JobQueue::nudge`] and observes the swap
+    /// without a job ever arriving.
+    pub fn pop_or_swap(&self, generation: &AtomicU64, seen: u64) -> Popped {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if generation.load(Ordering::Acquire) != seen {
+                return Popped::Swap;
+            }
+            if let Some(job) = st.jobs.pop_front() {
+                return Popped::Job(job);
+            }
+            if !st.open {
+                return Popped::Closed;
+            }
+            st = self.notify.wait(st).unwrap();
+        }
+    }
+
     /// Pop with a deadline (the batch-linger fill path): returns `None`
     /// when the deadline passes, or immediately when the queue is closed
     /// and drained — a draining worker never lingers on an empty queue.
@@ -103,6 +138,20 @@ impl JobQueue {
         self.state.lock().unwrap().jobs.len()
     }
 
+    /// Whether submits are still admitted (false once shutdown began).
+    pub fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open
+    }
+
+    /// Wake every parked worker without closing or enqueueing — the
+    /// swap path's kick after staging a new generation. Taking the
+    /// lock first means any worker that read the old generation is
+    /// already inside `wait()` and receives the notification.
+    pub fn nudge(&self) {
+        drop(self.state.lock().unwrap());
+        self.notify.notify_all();
+    }
+
     /// Begin shutdown: reject new submits, wake every worker so the
     /// remaining jobs drain.
     pub fn close(&self) {
@@ -127,6 +176,7 @@ mod tests {
         Job {
             sample: gen_sample(Task::Blink, &cfg, &mut rng),
             enqueued: Instant::now(),
+            popped: None,
             deadline: None,
             respond: tx,
         }
@@ -157,6 +207,40 @@ mod tests {
         assert!(q.pop().is_some());
         assert!(q.pop().is_some());
         assert!(q.pop().is_none(), "closed + drained must return None");
+    }
+
+    #[test]
+    fn pop_or_swap_preempts_on_generation() {
+        let q = JobQueue::new(4);
+        let generation = AtomicU64::new(0);
+        q.push(job()).unwrap();
+        // generation unchanged → jobs come out as usual
+        assert!(matches!(q.pop_or_swap(&generation, 0), Popped::Job(_)));
+        // a staged generation preempts even a non-empty queue…
+        q.push(job()).unwrap();
+        generation.store(1, Ordering::Release);
+        assert!(matches!(q.pop_or_swap(&generation, 0), Popped::Swap));
+        // …and the queued job survives for the rebuilt worker
+        assert!(matches!(q.pop_or_swap(&generation, 1), Popped::Job(_)));
+        assert!(q.is_open());
+        q.close();
+        assert!(!q.is_open());
+        assert!(matches!(q.pop_or_swap(&generation, 1), Popped::Closed));
+    }
+
+    #[test]
+    fn nudge_wakes_an_idle_worker_into_the_swap() {
+        use std::sync::Arc;
+        let q = Arc::new(JobQueue::new(1));
+        let generation = Arc::new(AtomicU64::new(0));
+        let (q2, g2) = (Arc::clone(&q), Arc::clone(&generation));
+        let h = std::thread::spawn(move || {
+            matches!(q2.pop_or_swap(&g2, 0), Popped::Swap)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        generation.store(1, Ordering::Release);
+        q.nudge();
+        assert!(h.join().unwrap(), "parked worker must see the swap");
     }
 
     #[test]

@@ -85,6 +85,16 @@ pub struct ServeConfig {
     /// `addr:port` for the HTTP front-end (`mopeq serve --listen`);
     /// `None` = the in-process demo loop
     pub listen: Option<String>,
+    /// retain what a live precision-map hot-swap needs
+    /// (`EngineBuilder::reloadable`) so `POST /v1/reload` works.
+    /// Requires `packed`; implied by `adapt_dir`.
+    pub reloadable: bool,
+    /// frontier candidate directory (`mopeq search --frontier-out`) for
+    /// the background adapt controller (`mopeq serve --adapt`); implies
+    /// `reloadable`
+    pub adapt_dir: Option<PathBuf>,
+    /// seconds between the adapt controller's routing observations
+    pub adapt_interval_secs: u64,
 }
 
 impl Default for ServeConfig {
@@ -115,6 +125,9 @@ impl Default for ServeConfig {
             store_path: None,
             prefetch: true,
             listen: None,
+            reloadable: false,
+            adapt_dir: None,
+            adapt_interval_secs: 10,
         }
     }
 }
@@ -218,6 +231,12 @@ impl ServeConfig {
         Ok(QuantSpec { quantizer, calib })
     }
 
+    /// Whether the engine must be built reloadable: asked for directly
+    /// or implied by the adapt controller (which hot-swaps maps).
+    pub fn wants_reload(&self) -> bool {
+        self.reloadable || self.adapt_dir.is_some()
+    }
+
     /// Validate the whole config without building anything — every
     /// error `EngineBuilder::from_config` would raise from the config
     /// fields alone, raised eagerly.
@@ -250,6 +269,16 @@ impl ServeConfig {
         }
         if self.trace_sample == 0 {
             bail!("`trace_sample` keeps 1 in N traces — N must be ≥ 1");
+        }
+        if self.wants_reload() && self.weight_form()? != WeightForm::Packed
+        {
+            bail!(
+                "`reloadable`/`adapt_dir` hot-swap the packed expert \
+                 store — they require a packed deployment (set `packed`)"
+            );
+        }
+        if self.adapt_interval_secs == 0 {
+            bail!("`adapt_interval_secs` must be ≥ 1");
         }
         self.weight_form()?;
         quant.validate()?;
@@ -328,13 +357,24 @@ impl ServeConfig {
             ),
             ("prefetch".into(), Json::Bool(self.prefetch)),
             ("listen".into(), opt_str(&self.listen)),
+            ("reloadable".into(), Json::Bool(self.reloadable)),
+            (
+                "adapt_dir".into(),
+                self.adapt_dir.as_ref().map_or(Json::Null, |p| {
+                    Json::Str(p.display().to_string())
+                }),
+            ),
+            (
+                "adapt_interval_secs".into(),
+                Json::Num(self.adapt_interval_secs as f64),
+            ),
         ])
     }
 
     /// Deserialize: missing keys take their defaults (partial configs
     /// are valid), unknown keys fail typed (the typo guard).
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
-        const KNOWN: [&str; 24] = [
+        const KNOWN: [&str; 27] = [
             "model",
             "seed",
             "packed",
@@ -359,6 +399,9 @@ impl ServeConfig {
             "store_path",
             "prefetch",
             "listen",
+            "reloadable",
+            "adapt_dir",
+            "adapt_interval_secs",
         ];
         for (k, _) in j.as_obj()? {
             if !KNOWN.contains(&k.as_str()) {
@@ -455,6 +498,15 @@ impl ServeConfig {
         }
         if let Some(v) = get("listen") {
             sc.listen = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = get("reloadable") {
+            sc.reloadable = as_bool(v)?;
+        }
+        if let Some(v) = get("adapt_dir") {
+            sc.adapt_dir = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = get("adapt_interval_secs") {
+            sc.adapt_interval_secs = v.as_usize()? as u64;
         }
         Ok(sc)
     }
@@ -558,6 +610,14 @@ impl ServeConfig {
         if let Some(l) = args.flags.get("listen") {
             self.listen = Some(l.clone());
         }
+        if args.switch("reloadable") {
+            self.reloadable = true;
+        }
+        if let Some(d) = args.flags.get("adapt") {
+            self.adapt_dir = Some(PathBuf::from(d));
+        }
+        self.adapt_interval_secs = args
+            .u64_flag("adapt-interval-secs", self.adapt_interval_secs)?;
         // quantizer-specific flags on the wrong (merged) quantizer
         if args.flags.contains_key("damp") && self.quantizer != "gptq" {
             bail!("--damp only applies to --quantizer gptq");
@@ -606,7 +666,8 @@ impl EngineBuilder {
             })
             .trace_buffer(sc.trace_buffer)
             .trace_sample(sc.trace_sample)
-            .prefetch(sc.prefetch);
+            .prefetch(sc.prefetch)
+            .reloadable(sc.wants_reload());
         if let Some(cap) = sc.resident_bytes {
             b = b.resident_bytes(cap);
         }
@@ -641,6 +702,9 @@ mod tests {
             store_path: Some(PathBuf::from("stores/a.bin")),
             prefetch: false,
             listen: Some("127.0.0.1:0".into()),
+            reloadable: true,
+            adapt_dir: Some(PathBuf::from("frontier")),
+            adapt_interval_secs: 3,
             ..ServeConfig::default()
         };
         for cfg in [sc.clone(), ServeConfig::default(), {
@@ -741,6 +805,39 @@ mod tests {
         assert!(err.to_string().contains("resident_bytes"), "{err}");
         // trace_sample 0 is a typed error
         let sc = ServeConfig { trace_sample: 0, ..ServeConfig::default() };
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn adapt_knobs_merge_and_guard() {
+        // flags overlay the file values, --adapt implies reloadable
+        let mut sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        let args = crate::cli::parse(&argv(&[
+            "serve", "--adapt", "frontier", "--adapt-interval-secs", "2",
+        ]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.adapt_dir.as_deref(), Some(Path::new("frontier")));
+        assert_eq!(sc.adapt_interval_secs, 2);
+        assert!(!sc.reloadable, "--adapt implies, not sets, reloadable");
+        assert!(sc.wants_reload());
+        sc.validate().unwrap();
+        // --reloadable alone also wants the reload path
+        let mut sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        let args = crate::cli::parse(&argv(&["serve", "--reloadable"]));
+        sc.apply_flags(&args).unwrap();
+        assert!(sc.reloadable && sc.wants_reload());
+        sc.validate().unwrap();
+        // hot-swap without a packed deployment is a typed error
+        let sc = ServeConfig { reloadable: true, ..ServeConfig::default() };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("packed"), "{err}");
+        // a zero observation interval is a typed error
+        let sc = ServeConfig {
+            packed: true,
+            adapt_dir: Some(PathBuf::from("frontier")),
+            adapt_interval_secs: 0,
+            ..ServeConfig::default()
+        };
         assert!(sc.validate().is_err());
     }
 

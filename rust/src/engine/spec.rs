@@ -880,7 +880,8 @@ impl PreparedWeights {
 /// Shape + width validation of a supplied/loaded precision map: a
 /// corrupt artifact (e.g. a 0-bit entry, which would quantize every
 /// weight to its zero-point) must fail at build, not serve garbage.
-fn check_map(cfg: &ModelConfig, pmap: &PrecisionMap) -> Result<()> {
+/// Also the reload path's admission gate (`ReloadHandle::reload`).
+pub(crate) fn check_map(cfg: &ModelConfig, pmap: &PrecisionMap) -> Result<()> {
     if pmap.bits.len() != cfg.moe_layers()
         || pmap.bits.iter().any(|l| l.len() != cfg.experts)
     {

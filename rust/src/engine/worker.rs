@@ -10,11 +10,13 @@
 use crate::config::ModelConfig;
 use crate::coordinator::executor::ModelExecutor;
 use crate::data::Sample;
+use crate::engine::queue::Popped;
 use crate::engine::{EngineWeights, Job, Rejected, Reply, Shared};
 use crate::obs::trace::TraceSpan;
 use crate::runtime::Session;
 use crate::serve::{BatchPolicy, Batcher};
 use anyhow::Result;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -27,9 +29,21 @@ pub(crate) struct WorkerConfig {
     pub shared: Arc<Shared>,
 }
 
+/// Why one executor's serve phase ended.
+enum LoopExit {
+    /// queue closed **and** drained — the worker is done
+    Closed,
+    /// a staged weight generation preempted serving — rebuild and
+    /// resume
+    Swap,
+}
+
 /// Worker body: open a session, build + warm the executor replica,
 /// report readiness, then serve until the queue is closed **and**
-/// drained.
+/// drained. A staged hot-swap re-enters the build step: the worker
+/// rebuilds its replica on the staged weights at a request boundary,
+/// acknowledges the generation, and keeps serving — jobs queued across
+/// the rebuild are served by the new weights, never dropped.
 pub(crate) fn run(wc: WorkerConfig, ready: mpsc::Sender<Result<()>>) -> Result<()> {
     let session = match open_session(wc.backend.as_deref()) {
         Ok(s) => s,
@@ -39,33 +53,69 @@ pub(crate) fn run(wc: WorkerConfig, ready: mpsc::Sender<Result<()>>) -> Result<(
             anyhow::bail!("worker {}: session open failed: {msg}", wc.index);
         }
     };
-    let exec = match ModelExecutor::with_weights(
-        &session,
-        &wc.cfg,
-        wc.weights.exec_weights(),
-    )
-    .and_then(|ex| ex.warm().map(|_| ex))
-    {
-        Ok(ex) => {
-            wc.shared.metrics.set_resident(ex.resident_report());
+    // a failure past this point — Err *or panic* — must not strand
+    // callers: the guard stops admissions and rejects whatever is still
+    // queued so no Ticket::wait blocks forever on a queue nobody will
+    // drain (healthy workers of a multi-worker pool may still race the
+    // drain for some of these jobs — those get served, the rest get a
+    // typed rejection). Disarmed on the clean exit path.
+    let mut guard = FailGuard { shared: wc.shared.as_ref(), armed: true };
+    let mut weights = wc.weights.clone();
+    let mut generation =
+        wc.shared.swap.generation.load(Ordering::Acquire);
+    let mut announced = false;
+    let result = loop {
+        let exec = match ModelExecutor::with_weights(
+            &session,
+            &wc.cfg,
+            weights.exec_weights(),
+        )
+        .and_then(|ex| ex.warm().map(|_| ex))
+        {
+            Ok(ex) => ex,
+            Err(e) => {
+                if announced {
+                    // a mid-swap rebuild failure: the guard drains
+                    break Err(e);
+                }
+                let msg = format!("{e}");
+                let _ = ready.send(Err(e));
+                break Err(anyhow::anyhow!(
+                    "worker {}: executor build failed: {msg}",
+                    wc.index
+                ));
+            }
+        };
+        wc.shared.metrics.set_resident(exec.resident_report());
+        if !announced {
             let _ = ready.send(Ok(()));
-            ex
+            announced = true;
         }
-        Err(e) => {
-            let msg = format!("{e}");
-            let _ = ready.send(Err(e));
-            anyhow::bail!("worker {}: executor build failed: {msg}", wc.index);
+        // acknowledge only after the replica is built and warm: a
+        // reload returns when every ack reaches its generation, and
+        // from that point every reply must come from the new weights
+        wc.shared.swap.acks[wc.index]
+            .store(generation, Ordering::Release);
+        match serve_loop(&wc, &exec, generation) {
+            Err(e) => break Err(e),
+            Ok(LoopExit::Closed) => break Ok(()),
+            Ok(LoopExit::Swap) => {
+                drop(exec);
+                // load the generation BEFORE cloning the staged slot:
+                // stage happens-before bump, so the clone is at least
+                // as new as the generation acknowledged for it (a
+                // racing second swap costs one harmless extra rebuild,
+                // never a stale ack)
+                generation =
+                    wc.shared.swap.generation.load(Ordering::Acquire);
+                if let Some(w) =
+                    wc.shared.swap.staged.lock().unwrap().clone()
+                {
+                    weights = w;
+                }
+            }
         }
     };
-
-    // a mid-serve failure — Err *or panic* — must not strand callers:
-    // the guard stops admissions and rejects whatever is still queued so
-    // no Ticket::wait blocks forever on a queue nobody will drain
-    // (healthy workers of a multi-worker pool may still race the drain
-    // for some of these jobs — those get served, the rest get a typed
-    // rejection). Disarmed on the clean exit path.
-    let mut guard = FailGuard { shared: wc.shared.as_ref(), armed: true };
-    let result = serve_loop(&wc, &exec);
     if result.is_ok() {
         guard.armed = false;
     }
@@ -94,9 +144,22 @@ impl Drop for FailGuard<'_> {
     }
 }
 
-fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
+fn serve_loop(
+    wc: &WorkerConfig,
+    exec: &ModelExecutor,
+    generation: u64,
+) -> Result<LoopExit> {
     let mut batcher: Batcher<Job> = Batcher::new(wc.policy, wc.cfg.batch);
-    while let Some(mut first) = wc.shared.queue.pop() {
+    loop {
+        let mut first = match wc
+            .shared
+            .queue
+            .pop_or_swap(&wc.shared.swap.generation, generation)
+        {
+            Popped::Job(job) => job,
+            Popped::Swap => return Ok(LoopExit::Swap),
+            Popped::Closed => return Ok(LoopExit::Closed),
+        };
         first.popped = Some(Instant::now());
         if batcher.push(first).is_err() {
             // flush() drains the batcher before every loop iteration,
@@ -119,7 +182,6 @@ fn serve_loop(wc: &WorkerConfig, exec: &ModelExecutor) -> Result<()> {
         }
         flush(wc, exec, &mut batcher)?;
     }
-    Ok(())
 }
 
 /// Backend selection shared by the workers and the builder's

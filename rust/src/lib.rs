@@ -22,6 +22,7 @@
 //! self-contained out of the box, and stays so after `make artifacts`
 //! on the XLA path.
 
+pub mod adapt;
 pub mod benchx;
 pub mod cli;
 pub mod cluster;

@@ -87,6 +87,7 @@ fn print_usage() {
          \x20         [--objective accuracy|balanced [--lambda X]]\n\
          \x20         [--probe rtn|gptq|awq|signround] [--palette 2,3,4]\n\
          \x20         [--profile BENCH_quant_throughput.json]\n\
+         \x20         [--traffic traffic.json | --allow-uniform-traffic]\n\
          \x20         [--frontier-out dir [--points N]] [--no-refine]\n\
          \x20         [--serve-check] [--allow-init-weights]\n\
          serve:    [--packed] [--workers N] [--map map.json]\n\
@@ -96,7 +97,8 @@ fn print_usage() {
          \x20         [--resident-bytes B [--store-path f.bin]\n\
          \x20          [--no-prefetch]]\n\
          \x20         [--trace-buffer N] [--trace-sample N]\n\
-         \x20         [--traffic-out traffic.json]\n\
+         \x20         [--traffic-out traffic.json] [--reloadable]\n\
+         \x20         [--adapt frontier_dir [--adapt-interval-secs N]]\n\
          loadgen:  --addr host:port [--concurrency N] [--duration S]\n\
          \x20         [--deadline-ms N] [--min-ok N] [--expect-busy]\n\
          \x20         [--check-metrics] [--bench-out name]\n\
@@ -459,6 +461,12 @@ fn search_spec_flags(args: &Args, p: &Pipeline) -> Result<SearchSpec> {
         None => ThroughputProfile::builtin(),
         Some(path) => ThroughputProfile::from_bench_json(Path::new(path))?,
     };
+    let traffic = match args.flags.get("traffic") {
+        None => None,
+        Some(path) => {
+            Some(mopeq::adapt::TrafficPrior::load(Path::new(path))?)
+        }
+    };
     Ok(SearchSpec {
         metric,
         palette: palette_flag(args)?,
@@ -467,6 +475,7 @@ fn search_spec_flags(args: &Args, p: &Pipeline) -> Result<SearchSpec> {
         probe,
         refine: !args.switch("no-refine"),
         profile,
+        traffic,
     })
 }
 
@@ -475,6 +484,17 @@ fn cmd_search(args: &Args) -> Result<()> {
     warn_init_weights(&p, args);
     let spec = search_spec_flags(args, &p)?;
     spec.validate()?;
+    // uniform-hotness pricing should be an explicit choice, not a
+    // silent default: without a measured traffic prior the cost model
+    // weights every expert equally, which misprices skewed workloads
+    if spec.traffic.is_none() && !args.switch("allow-uniform-traffic") {
+        eprintln!(
+            "warning: no --traffic profile — every expert is priced at \
+             uniform hotness. Capture one with `mopeq serve --listen \
+             ... --traffic-out traffic.json` (or pass \
+             --allow-uniform-traffic to silence this)."
+        );
+    }
     let avg_budget = spec.budget_avg_bits(&p.cfg)?;
     let cap_bits = spec.cap_bits(&p.cfg)?;
 
@@ -491,6 +511,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         &p.cfg,
         &p.ws,
         &imp,
+        spec.traffic.as_ref(),
         &spec.palette,
         &spec.probe,
         &spec.profile,
@@ -847,7 +868,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // behind the HTTP/JSON wire protocol instead of the in-process
     // demo loop.
     if let Some(addr) = sc.listen.clone() {
-        return serve_network(args, &addr, engine);
+        return serve_network(args, &sc, &addr, engine);
     }
 
     let n = args.usize_flag("requests", 64)?;
@@ -975,19 +996,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// (and optionally writes) the resolved address — port 0 picks an
 /// ephemeral port, so CI discovers the real one via `--addr-file` —
 /// then serves until `--serve-secs` elapses (forever without it).
-fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
+/// With `--adapt frontier_dir/` a drift controller watches the live
+/// routing histogram and hot-swaps toward better frontier candidates.
+fn serve_network(
+    args: &Args,
+    sc: &ServeConfig,
+    addr: &str,
+    engine: Engine,
+) -> Result<()> {
     // the observer outlives the engine handle the server consumes — it
     // holds its own Arc onto the telemetry plane, so the traffic export
-    // below works after shutdown
+    // below works after shutdown. The reload handle must likewise be
+    // grabbed before NetServer::spawn takes the engine.
     let obs = engine.observer();
+    let reloader = engine.reloader();
     let net = NetConfig { addr: addr.to_string(), ..NetConfig::default() };
     let server = NetServer::spawn(engine, net)?;
     let local = server.local_addr();
     println!(
         "listening on http://{local} (POST /v1/infer, \
-         GET /metrics[?format=prometheus], GET /v1/traces, \
-         GET /v1/experts, GET /healthz)"
+         POST /v1/reload, GET /metrics[?format=prometheus], \
+         GET /v1/traces, GET /v1/experts, GET /healthz)"
     );
+    let controller = match &sc.adapt_dir {
+        Some(dir) => {
+            let reload = reloader.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--adapt requires a reloadable engine (packed \
+                     weight form)"
+                )
+            })?;
+            Some(mopeq::adapt::AdaptController::spawn(
+                reload,
+                mopeq::adapt::AdaptConfig::new(
+                    dir.clone(),
+                    Duration::from_secs(sc.adapt_interval_secs),
+                ),
+            )?)
+        }
+        None => None,
+    };
     if let Some(path) = args.flags.get("addr-file") {
         std::fs::write(path, local.to_string())?;
     }
@@ -998,6 +1046,9 @@ fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
         loop {
             std::thread::sleep(Duration::from_secs(3600));
         }
+    }
+    if let Some(c) = controller {
+        c.stop();
     }
     let stats = server.shutdown()?;
     println!(
@@ -1014,6 +1065,13 @@ fn serve_network(args: &Args, addr: &str, engine: Engine) -> Result<()> {
         stats.p99,
         stats.throughput_rps
     );
+    if sc.wants_reload() {
+        println!(
+            "adapt: {} hot-swap(s), weight generation {}, last drift \
+             {:.4}",
+            stats.adapt_swaps, stats.adapt_generation, stats.adapt_last_drift
+        );
+    }
     if let Some(st) = &stats.store {
         println!(
             "tiered store: {}/{} experts resident ({} B of {} B cap); \
@@ -1064,13 +1122,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let report = mopeq::net::loadgen::run(&spec)?;
     println!(
         "ok {} (correct {}), busy {}, deadline {}, closed {}, \
-         transport errors {}",
+         transport errors {}, reconnects {}",
         report.ok,
         report.correct,
         report.busy,
         report.deadline,
         report.closed,
-        report.http_errors
+        report.http_errors,
+        report.reconnects
     );
     println!(
         "rejections by status: 429 (busy) {}, 503 (closed) {}, \

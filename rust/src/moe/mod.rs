@@ -52,6 +52,10 @@ impl ExpertMat {
 
 /// All model parameters, stored stacked exactly as `param_specs` defines
 /// (e.g. `moe.gate` is `[Lm, E, d, m]`).
+///
+/// `Clone` exists for the reload path: a reloadable engine retains the
+/// reference weights so later maps can be re-packed without a rebuild.
+#[derive(Clone)]
 pub struct WeightStore {
     pub variant: String,
     params: Vec<(String, Tensor<f32>)>,

@@ -1,8 +1,14 @@
 //! Closed-loop load generator over the wire protocol. `concurrency`
-//! worker threads each hold one keep-alive connection (reconnecting on
-//! transport errors) and fire explicit-sample `POST /v1/infer` requests
-//! back-to-back until the clock runs out — so measured throughput is
-//! the server's, not the generator's pacing. Samples are generated
+//! worker threads each hold one pooled keep-alive connection for the
+//! whole run — error replies (429/503/504/4xx) ride the same socket,
+//! and the generator re-dials only when the transport actually fails
+//! or the server explicitly answers `Connection: close`. Re-dials are
+//! tallied per slot and surface as `reconnects` in the report, so a
+//! run that silently degraded to connection-per-request is visible in
+//! the summary instead of masquerading as slow serving. Each slot
+//! fires explicit-sample `POST /v1/infer` requests back-to-back until
+//! the clock runs out — so measured throughput is the server's, not
+//! the generator's pacing. Samples are generated
 //! client-side against the shape advertised by `GET /healthz`, which
 //! makes the server's `correct` bit an end-to-end oracle check: the
 //! answer travelled the wire both ways.
@@ -60,6 +66,9 @@ pub struct LoadReport {
     pub deadline: usize,
     pub closed: usize,
     pub http_errors: usize,
+    /// connection re-dials beyond each slot's initial connect — 0 on a
+    /// healthy keep-alive run
+    pub reconnects: usize,
     /// of the `ok` replies, how many the server judged correct
     pub correct: usize,
     pub wall: Duration,
@@ -79,6 +88,10 @@ impl LoadReport {
             (
                 "http_errors".into(),
                 Json::Num(self.http_errors as f64),
+            ),
+            (
+                "reconnects".into(),
+                Json::Num(self.reconnects as f64),
             ),
             ("correct".into(), Json::Num(self.correct as f64)),
             (
@@ -114,6 +127,9 @@ struct Tally {
     deadline: usize,
     closed: usize,
     http_errors: usize,
+    /// successful dials — the first is the slot's pooled connection,
+    /// every further one is a reconnect
+    connects: usize,
     correct: usize,
     latencies: Vec<Duration>,
 }
@@ -182,6 +198,7 @@ pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
         report.deadline += t.deadline;
         report.closed += t.closed;
         report.http_errors += t.http_errors;
+        report.reconnects += t.connects.saturating_sub(1);
         report.correct += t.correct;
         latencies.extend(t.latencies);
     }
@@ -227,10 +244,13 @@ fn worker_loop(
     while Instant::now() < end {
         if conn.is_none() {
             conn = connect(&spec.addr);
-            if conn.is_none() {
-                tally.http_errors += 1;
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
+            match conn {
+                Some(_) => tally.connects += 1,
+                None => {
+                    tally.http_errors += 1;
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
             }
         }
         let Some(c) = conn.as_mut() else { continue };
@@ -258,6 +278,15 @@ fn worker_loop(
             }
         };
         record(&mut tally, &resp, sent.elapsed());
+        // the pooled connection survives error replies — only an
+        // explicit server close retires it (cleanly, before the next
+        // write would hit the dead socket and read as an http_error)
+        if resp
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+        {
+            conn = None;
+        }
     }
     tally
 }
@@ -321,6 +350,7 @@ mod tests {
             deadline: 1,
             closed: 0,
             http_errors: 0,
+            reconnects: 3,
             correct: 9,
             wall: Duration::from_secs(1),
             rps: 10.0,
@@ -331,6 +361,10 @@ mod tests {
         let j = report.to_json();
         assert_eq!(j.req("ok").unwrap().as_usize().unwrap(), 10);
         assert_eq!(j.req("busy").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            j.req("reconnects").unwrap().as_usize().unwrap(),
+            3
+        );
         assert_eq!(j.req("correct").unwrap().as_usize().unwrap(), 9);
         assert_eq!(
             j.req("p99_ns").unwrap().as_f64().unwrap(),

@@ -1,8 +1,9 @@
 //! Request routing: one [`Router`] per server, shared across all
 //! connection threads. The router owns a [`Client`] clone onto the
 //! engine's bounded queue plus [`MetricsHandle`] and [`ObsHandle`]
-//! telemetry handles, so dispatching a request never touches the
-//! [`Engine`](crate::engine::Engine) itself — connections add no
+//! telemetry handles (and, for reloadable engines, a [`ReloadHandle`]
+//! serving `POST /v1/reload`), so dispatching a request never touches
+//! the [`Engine`](crate::engine::Engine) itself — connections add no
 //! locking beyond what in-process clients already pay.
 //!
 //! Every path out of [`Router::handle`] is a `Response`; protocol
@@ -11,7 +12,10 @@
 //! body.
 
 use crate::config::ModelConfig;
-use crate::engine::{Client, Engine, MetricsHandle, ObsHandle, Rejected};
+use crate::engine::{
+    Client, Engine, MetricsHandle, ObsHandle, Rejected, ReloadHandle,
+    SavedMap,
+};
 use crate::jsonx::Json;
 use crate::net::http::{Request, Response};
 use crate::net::wire;
@@ -24,6 +28,10 @@ pub struct Router {
     obs: ObsHandle,
     cfg: ModelConfig,
     workers: usize,
+    /// `Some` only for engines built with
+    /// [`EngineBuilder::reloadable`](crate::engine::EngineBuilder::reloadable)
+    /// — gates `POST /v1/reload`
+    reload: Option<ReloadHandle>,
 }
 
 impl Router {
@@ -34,6 +42,7 @@ impl Router {
             obs: engine.observer(),
             cfg: engine.config().clone(),
             workers: engine.metrics().workers.len(),
+            reload: engine.reloader(),
         }
     }
 
@@ -44,6 +53,7 @@ impl Router {
         let (path, query) = split_query(&req.path);
         match (req.method.as_str(), path) {
             ("POST", "/v1/infer") => self.infer(req),
+            ("POST", "/v1/reload") => self.reload_map(req),
             ("GET", "/metrics") => self.metrics_response(query),
             ("GET", "/v1/traces") => {
                 Response::json(200, &self.obs.traces_json())
@@ -55,7 +65,9 @@ impl Router {
                 200,
                 &wire::health_json(&self.cfg, self.workers),
             ),
-            (_, "/v1/infer") => method_not_allowed(req, "POST"),
+            (_, "/v1/infer") | (_, "/v1/reload") => {
+                method_not_allowed(req, "POST")
+            }
             (_, "/metrics")
             | (_, "/healthz")
             | (_, "/v1/traces")
@@ -119,6 +131,78 @@ impl Router {
         {
             Ok(reply) => Response::json(200, &wire::reply_json(&reply)),
             Err(r) => rejection_response(&r),
+        }
+    }
+
+    /// `POST /v1/reload`: hot-swap the serving precision map. The body
+    /// is either `{"map": "<path>"}` (a `SavedMap` artifact on the
+    /// server's filesystem, as written by `mopeq allocate --out`) or an
+    /// inline `SavedMap` JSON object. Blocks until every worker serves
+    /// the new map, then answers the new generation — zero requests are
+    /// dropped across the swap. Engines not built `--reloadable` answer
+    /// a typed 400 `reload_unsupported`.
+    fn reload_map(&self, req: &Request) -> Response {
+        let Some(reload) = &self.reload else {
+            return Response::json(
+                400,
+                &wire::error_envelope(
+                    "reload_unsupported",
+                    400,
+                    "engine was not started with --reloadable or --adapt",
+                ),
+            );
+        };
+        let body = match std::str::from_utf8(&req.body)
+            .map_err(|_| anyhow::anyhow!("body is not UTF-8"))
+            .and_then(Json::parse)
+        {
+            Ok(j) => j,
+            Err(e) => return bad_request(&format!("bad JSON body: {e}")),
+        };
+        // `{"map": "<path>"}` loads an artifact; anything else must be
+        // an inline SavedMap object
+        let saved = match body.get("map") {
+            Some(path) => match path
+                .as_str()
+                .and_then(|p| SavedMap::load(std::path::Path::new(p)))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    return bad_request(&format!("loading map: {e:#}"))
+                }
+            },
+            None => match SavedMap::from_json(&body) {
+                Ok(s) => s,
+                Err(e) => {
+                    return bad_request(&format!(
+                        "body is neither {{\"map\": path}} nor an \
+                         inline SavedMap: {e:#}"
+                    ))
+                }
+            },
+        };
+        match reload.reload(&saved) {
+            Ok(generation) => Response::json(
+                200,
+                &Json::Obj(vec![
+                    (
+                        "generation".into(),
+                        Json::Num(generation as f64),
+                    ),
+                    (
+                        "mean_bits".into(),
+                        Json::Num(saved.map.mean_bits()),
+                    ),
+                ]),
+            ),
+            Err(e) => Response::json(
+                400,
+                &wire::error_envelope(
+                    "reload_failed",
+                    400,
+                    &format!("{e:#}"),
+                ),
+            ),
         }
     }
 }

@@ -6,8 +6,14 @@
 //! One `# HELP` / `# TYPE` pair per family, one sample per line,
 //! durations in seconds (Prometheus base units), `_total` names for
 //! counters. Counters reset with the process/engine they come from,
-//! which is exactly the semantics scrapers expect.
+//! which is exactly the semantics scrapers expect. Request latency is
+//! a real histogram family (`mopeq_request_duration_seconds` with
+//! cumulative `le` buckets + `_sum`/`_count`), so scrapers can
+//! aggregate across instances and compute their own quantiles —
+//! per-worker percentiles stay gauges because pre-computed quantiles
+//! can't aggregate anyway.
 
+use crate::engine::metrics::LATENCY_BUCKETS;
 use crate::engine::MetricsSnapshot;
 use crate::obs::kern::KernelStat;
 use crate::obs::routing::TrafficSnapshot;
@@ -121,20 +127,59 @@ pub fn render(
     );
     e.sample("mopeq_throughput_rps", &[], snap.throughput_rps);
 
+    // a real histogram family: cumulative `le` buckets over the fixed
+    // ladder, closed by the mandatory `+Inf` bucket == `_count`
     e.family(
-        "mopeq_request_latency_seconds",
-        "gauge",
-        "End-to-end request latency percentiles.",
+        "mopeq_request_duration_seconds",
+        "histogram",
+        "End-to-end request latency distribution.",
     );
-    for (q, d) in
-        [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)]
-    {
+    for (i, &le) in LATENCY_BUCKETS.iter().enumerate() {
+        let n = snap.latency_buckets.get(i).copied().unwrap_or(0);
         e.sample(
-            "mopeq_request_latency_seconds",
-            &[("quantile", q.to_string())],
-            secs(d),
+            "mopeq_request_duration_seconds_bucket",
+            &[("le", le.to_string())],
+            n as f64,
         );
     }
+    e.sample(
+        "mopeq_request_duration_seconds_bucket",
+        &[("le", "+Inf".to_string())],
+        snap.requests as f64,
+    );
+    e.sample(
+        "mopeq_request_duration_seconds_sum",
+        &[],
+        secs(snap.latency_sum),
+    );
+    e.sample(
+        "mopeq_request_duration_seconds_count",
+        &[],
+        snap.requests as f64,
+    );
+
+    e.family(
+        "mopeq_adapt_generation",
+        "gauge",
+        "Current hot-swap weight generation (0 = build-time weights).",
+    );
+    e.sample(
+        "mopeq_adapt_generation",
+        &[],
+        snap.adapt_generation as f64,
+    );
+    e.family(
+        "mopeq_adapt_swaps_total",
+        "counter",
+        "Completed zero-downtime precision-map swaps.",
+    );
+    e.sample("mopeq_adapt_swaps_total", &[], snap.adapt_swaps as f64);
+    e.family(
+        "mopeq_adapt_drift",
+        "gauge",
+        "Last observed routing drift (max-over-layers total variation).",
+    );
+    e.sample("mopeq_adapt_drift", &[], snap.adapt_last_drift);
 
     e.family(
         "mopeq_resident_bytes",
@@ -425,11 +470,20 @@ mod tests {
             let name = line.split_whitespace().nth(2).unwrap();
             assert!(typed.insert(name.to_string()), "double TYPE {name}");
         }
-        // every sample's family name was declared
+        // every sample's family name was declared — histogram samples
+        // carry the `_bucket`/`_sum`/`_count` suffixes of their one
+        // declared family
         for line in sample_lines(&body) {
             let name =
                 line.split(['{', ' ']).next().expect("metric name");
-            assert!(typed.contains(name), "undeclared family {name}");
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| {
+                    name.strip_suffix(suf)
+                        .filter(|base| typed.contains(*base))
+                })
+                .unwrap_or(name);
+            assert!(typed.contains(family), "undeclared family {name}");
         }
     }
 
@@ -496,18 +550,61 @@ mod tests {
                 );
             }
         }
-        // a 1.5ms p50 renders as seconds, not nanos
+        // a 1.5ms latency sum renders as seconds, not nanos
         let snap = MetricsSnapshot {
-            p50: Duration::from_micros(1500),
+            latency_sum: Duration::from_micros(1500),
             ..MetricsSnapshot::default()
         };
         let body = render(&snap, None, &[]);
         let line = body
             .lines()
-            .find(|l| {
-                l.starts_with("mopeq_request_latency_seconds{quantile=\"0.5\"")
-            })
+            .find(|l| l.starts_with("mopeq_request_duration_seconds_sum"))
             .unwrap();
         assert!(line.ends_with(" 0.0015"), "got {line:?}");
+    }
+
+    #[test]
+    fn latency_histogram_has_cumulative_buckets_and_inf_closure() {
+        let snap = MetricsSnapshot {
+            requests: 9,
+            // one per ladder step, cumulative
+            latency_buckets: vec![1, 2, 3, 4, 5, 6, 7, 8, 8, 8, 8, 8],
+            latency_sum: Duration::from_millis(90),
+            adapt_generation: 3,
+            adapt_swaps: 2,
+            adapt_last_drift: 0.25,
+            ..MetricsSnapshot::default()
+        };
+        let body = render(&snap, None, &[]);
+        let bucket_lines: Vec<&str> = body
+            .lines()
+            .filter(|l| {
+                l.starts_with("mopeq_request_duration_seconds_bucket")
+            })
+            .collect();
+        // one line per ladder bound plus the mandatory +Inf closure
+        assert_eq!(bucket_lines.len(), LATENCY_BUCKETS.len() + 1);
+        let values: Vec<f64> = bucket_lines
+            .iter()
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(
+            values.windows(2).all(|w| w[0] <= w[1]),
+            "le buckets must be cumulative: {values:?}"
+        );
+        let inf = bucket_lines.last().unwrap();
+        assert!(inf.contains("le=\"+Inf\""), "got {inf:?}");
+        assert!(inf.ends_with(" 9"), "+Inf bucket == _count: {inf:?}");
+        assert!(body
+            .contains("mopeq_request_duration_seconds_count 9\n"));
+        assert!(body.contains("mopeq_request_duration_seconds_sum 0.09\n"));
+        // the first ladder bound renders in seconds
+        assert!(body.contains("le=\"0.0005\""), "{body}");
+        // adapt telemetry rides along
+        assert!(body.contains("mopeq_adapt_generation 3\n"));
+        assert!(body.contains("mopeq_adapt_swaps_total 2\n"));
+        assert!(body.contains("mopeq_adapt_drift 0.25\n"));
+        // and the old quantile-gauge family is gone
+        assert!(!body.contains("mopeq_request_latency_seconds"));
     }
 }

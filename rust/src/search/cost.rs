@@ -18,7 +18,16 @@
 //! The scalarization ([`Objective`]) collapses error + throughput into
 //! the single `cost[i][p]` table the solvers optimize; size is enforced
 //! as the budget constraint, not scalarized.
+//!
+//! A measured [`TrafficPrior`] (`mopeq search --traffic`) multiplies
+//! both the error and throughput terms per expert by its layer-mean-1
+//! activation weight — a cold expert's quantization error barely
+//! matters and its weights are rarely streamed, so the solver spends
+//! the budget on the experts the workload actually routes to. With no
+//! prior (or a uniform one, weight exactly 1.0) the table is
+//! bit-identical to the traffic-less model.
 
+use crate::adapt::TrafficPrior;
 use crate::config::ModelConfig;
 use crate::coordinator::quantize::probe_expert_mse;
 use crate::engine::spec::QuantSpec;
@@ -79,6 +88,7 @@ impl CostModel {
         cfg: &ModelConfig,
         ws: &WeightStore,
         importance: &ImportanceMap,
+        traffic: Option<&TrafficPrior>,
         palette: &[u8],
         probe: &QuantSpec,
         profile: &ThroughputProfile,
@@ -95,6 +105,9 @@ impl CostModel {
                 layers,
                 experts
             );
+        }
+        if let Some(t) = traffic {
+            t.check_model(cfg)?;
         }
         profile.check_palette(palette)?;
 
@@ -119,8 +132,9 @@ impl CostModel {
             )?;
             for l in 0..layers {
                 for e in 0..experts {
+                    let w = traffic.map_or(1.0, |t| t.weight(l, e));
                     weighted_err[l * experts + e]
-                        .push(importance.values[l][e] * mse[l][e]);
+                        .push(importance.values[l][e] * mse[l][e] * w);
                 }
             }
             // the canonical byte accounting shared with the offload
@@ -152,13 +166,20 @@ impl CostModel {
                 .cloned()
                 .fold(f64::MIN, f64::max)
                 .max(1e-12);
+            // the time surcharge scales with the expert's traffic too:
+            // a hot expert's packed weights are streamed on nearly
+            // every token, a cold one's almost never
             weighted_err
                 .iter()
-                .map(|row| {
+                .enumerate()
+                .map(|(i, row)| {
+                    let w = traffic.map_or(1.0, |t| {
+                        t.weight(i / experts, i % experts)
+                    });
                     row.iter()
                         .zip(&read_us)
                         .map(|(&werr, &t)| {
-                            werr + lambda * err_span * (t / t_max)
+                            werr + lambda * err_span * (t / t_max) * w
                         })
                         .collect()
                 })
@@ -327,6 +348,7 @@ mod tests {
             &cfg,
             &ws,
             &imp,
+            None,
             &[2, 3, 4],
             &QuantSpec::rtn(),
             &ThroughputProfile::builtin(),
@@ -399,6 +421,73 @@ mod tests {
             err.downcast_ref::<SearchError>(),
             Some(&SearchError::OffPaletteWidth { bits: 8 })
         );
+    }
+
+    #[test]
+    fn uniform_traffic_prior_is_bit_identical_and_skew_reweights() {
+        use crate::adapt::TrafficPrior;
+        let (cfg, ws) = tiny();
+        let imp = hessian_closed_form(&ws, &cfg).unwrap();
+        let build = |traffic: Option<&TrafficPrior>| {
+            CostModel::build(
+                None,
+                &cfg,
+                &ws,
+                &imp,
+                traffic,
+                &[2, 3, 4],
+                &QuantSpec::rtn(),
+                &ThroughputProfile::builtin(),
+                Objective::Balanced { lambda: 1.0 },
+                5,
+            )
+            .unwrap()
+        };
+        let plain = build(None);
+        // a uniform prior (every weight exactly 1.0) reproduces the
+        // traffic-less table bit-for-bit
+        let uni = TrafficPrior::uniform(
+            cfg.name.to_string(),
+            cfg.moe_layers(),
+            cfg.experts,
+        );
+        let with_uni = build(Some(&uni));
+        assert_eq!(with_uni.cost, plain.cost);
+        assert_eq!(with_uni.weighted_err, plain.weighted_err);
+        // a skewed prior scales one expert's error AND surcharge
+        let mut counts = vec![vec![1u64; cfg.experts]; cfg.moe_layers()];
+        counts[0][0] = 1 + 2 * (cfg.experts as u64 - 1); // weight 2ish
+        let skew = TrafficPrior::from_counts(cfg.name.to_string(), &counts);
+        let w = skew.weight(0, 0);
+        assert!(w > 1.0);
+        let with_skew = build(Some(&skew));
+        for p in 0..3 {
+            assert!(
+                (with_skew.weighted_err[0][p]
+                    - w * plain.weighted_err[0][p])
+                    .abs()
+                    <= 1e-9 * plain.weighted_err[0][p].abs().max(1.0)
+            );
+        }
+        // wrong variant / shape fail typed before probing anything
+        let bad = TrafficPrior::uniform("other", cfg.moe_layers(), cfg.experts);
+        let err = CostModel::build(
+            None,
+            &cfg,
+            &ws,
+            &imp,
+            Some(&bad),
+            &[2, 3, 4],
+            &QuantSpec::rtn(),
+            &ThroughputProfile::builtin(),
+            Objective::Accuracy,
+            5,
+        )
+        .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<crate::adapt::AdaptError>(),
+            Some(crate::adapt::AdaptError::TrafficVariant { .. })
+        ));
     }
 
     #[test]

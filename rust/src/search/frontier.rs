@@ -360,6 +360,7 @@ mod tests {
             &cfg,
             &ws,
             &imp,
+            None,
             &[2, 3, 4],
             &QuantSpec::rtn(),
             &ThroughputProfile::builtin(),

@@ -95,6 +95,10 @@ pub struct SearchSpec {
     /// packed-kernel throughput profile (built-in table or a measured
     /// `BENCH_quant_throughput.json`)
     pub profile: ThroughputProfile,
+    /// measured activation-frequency prior (`mopeq search --traffic`);
+    /// `None` prices every expert as equally hot — identical tables to
+    /// a uniform prior, bit-for-bit
+    pub traffic: Option<crate::adapt::TrafficPrior>,
 }
 
 impl SearchSpec {
@@ -109,6 +113,7 @@ impl SearchSpec {
             probe: QuantSpec::rtn(),
             refine: true,
             profile: ThroughputProfile::builtin(),
+            traffic: None,
         }
     }
 
@@ -199,6 +204,7 @@ pub fn run_search(
         cfg,
         ws,
         &importance,
+        spec.traffic.as_ref(),
         &spec.palette,
         &spec.probe,
         &spec.profile,
@@ -213,7 +219,12 @@ pub fn run_search(
     let summary = cm.summary(&assign);
     let map = cm.assignment_map(&assign);
     let provenance = Provenance {
-        metric: spec.metric.label(),
+        // record that the map was priced under a measured prior — a
+        // traffic-weighted map is not interchangeable with a uniform one
+        metric: match &spec.traffic {
+            Some(_) => format!("{}+traffic", spec.metric.label()),
+            None => spec.metric.label(),
+        },
         granularity: if spec.refine {
             "search(dp+refine)".into()
         } else {

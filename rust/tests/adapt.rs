@@ -1,0 +1,523 @@
+//! Adaptive precision control integration suite. Locks the PR's
+//! acceptance criteria end to end:
+//!
+//! - a traffic-weighted `mopeq search` run provably **changes the
+//!   chosen allocation** vs uniform-hotness pricing on a skewed
+//!   profile — the hot expert gains width, the budget still holds, and
+//!   the provenance records the prior;
+//! - the drift detector fires on a synthetically shifted routing
+//!   distribution, holds (hysteresis + min-dwell) on a stable one, and
+//!   re-arms after a re-baseline;
+//! - a running 2-worker packed engine **hot-swaps** between two maps
+//!   under concurrent client load with zero dropped or rejected
+//!   requests, every reply bit-identical to an engine built directly
+//!   on whichever map was live, and the swap lands in the metrics
+//!   plane (`adapt_generation`/`adapt_swaps`, live `/v1/experts` bits);
+//! - `POST /v1/reload` round-trips over raw TCP — artifact path and
+//!   inline-map bodies swap a live server, Prometheus exports
+//!   `mopeq_adapt_swaps_total`, and a non-reloadable engine answers a
+//!   typed `reload_unsupported` envelope.
+
+use mopeq::adapt::{DriftConfig, DriftDetector, TrafficPrior};
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::ModelExecutor;
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::spec::SavedMap;
+use mopeq::engine::{Engine, PrecisionSource, WeightForm};
+use mopeq::jsonx::Json;
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::net::http::{read_response, write_request, Response};
+use mopeq::net::{loadgen, wire, NetConfig, NetServer};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::search::{self, Objective, SearchSpec};
+use mopeq::serve::BatchPolicy;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+const SEED: u64 = 77;
+
+fn cfg() -> ModelConfig {
+    config::variant("dsvl2_tiny").unwrap()
+}
+
+/// Two distinct mixed {2,3,4}-bit maps with the same per-layer shape —
+/// the swap source and target.
+fn map_pair(cfg: &ModelConfig) -> (PrecisionMap, PrecisionMap) {
+    let mut a = PrecisionMap::uniform(cfg, 2);
+    let mut b = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            a.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+            b.bits[l][e] = [4u8, 3, 2][(l + e) % 3];
+        }
+    }
+    (a, b)
+}
+
+/// The prediction an offline executor over the same packed codes makes
+/// for each sample — the bit-identical oracle for one map.
+fn expected_answers(
+    cfg: &ModelConfig,
+    seed: u64,
+    pmap: &PrecisionMap,
+    samples: &[Sample],
+) -> Vec<usize> {
+    let ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    let store = PackedStore::rtn(cfg, &ws, pmap).unwrap();
+    let mut qdq = WeightStore::init(cfg, &local_meta(cfg), seed);
+    store.write_dequantized(&mut qdq).unwrap();
+    let session = Session::native();
+    let exec = ModelExecutor::new(&session, cfg, &qdq).unwrap();
+    samples
+        .iter()
+        .map(|s| {
+            let (tokens, vis) = pack_batch(std::slice::from_ref(s), cfg);
+            exec.predict(&tokens, &vis).unwrap()[0]
+        })
+        .collect()
+}
+
+fn saved(cfg: &ModelConfig, map: &PrecisionMap) -> SavedMap {
+    SavedMap {
+        variant: cfg.name.to_string(),
+        map: map.clone(),
+        provenance: None,
+    }
+}
+
+// --- traffic-weighted search -------------------------------------------
+
+/// Acceptance criterion: the same `SearchSpec` with a skewed traffic
+/// prior picks a different map than uniform-hotness pricing, moving
+/// width onto the hot expert while honoring the bit budget.
+#[test]
+fn traffic_prior_changes_the_searched_allocation() {
+    let cfg = cfg();
+    let ws = WeightStore::init(&cfg, &local_meta(&cfg), SEED);
+    let mut spec = SearchSpec::avg_bits(3.0);
+    spec.objective = Objective::Accuracy;
+
+    let uniform = search::run_search(None, &cfg, &ws, &spec, SEED).unwrap();
+    assert!(uniform.map.mean_bits() <= 3.0 + 1e-9);
+
+    // hot expert: the column uniform pricing gave the fewest bits —
+    // mean ≤ 3.0 guarantees it sits below the 4-bit ceiling somewhere
+    let hot = (0..cfg.experts)
+        .min_by_key(|&e| {
+            (0..cfg.moe_layers())
+                .map(|l| uniform.map.bits[l][e] as usize)
+                .sum::<usize>()
+        })
+        .unwrap();
+    let col = |map: &PrecisionMap| -> usize {
+        (0..cfg.moe_layers()).map(|l| map.bits[l][hot] as usize).sum()
+    };
+    assert!(col(&uniform.map) < 4 * cfg.moe_layers());
+
+    // a heavily skewed measured workload: ~all traffic hits `hot`
+    let mut counts = vec![vec![1u64; cfg.experts]; cfg.moe_layers()];
+    for row in &mut counts {
+        row[hot] = 100_000;
+    }
+    spec.traffic = Some(TrafficPrior::from_counts(cfg.name, &counts));
+    let skewed = search::run_search(None, &cfg, &ws, &spec, SEED).unwrap();
+
+    assert_ne!(
+        uniform.map.bits, skewed.map.bits,
+        "a skewed prior must change the chosen allocation"
+    );
+    assert!(
+        col(&skewed.map) > col(&uniform.map),
+        "the hot expert must gain width: {} bits !> {} bits",
+        col(&skewed.map),
+        col(&uniform.map)
+    );
+    assert!(skewed.map.mean_bits() <= 3.0 + 1e-9, "budget still holds");
+    assert!(
+        skewed.provenance.metric.ends_with("+traffic"),
+        "provenance must record the prior: {}",
+        skewed.provenance.metric
+    );
+
+    // an explicitly uniform prior is a no-op, not merely similar
+    spec.traffic = Some(TrafficPrior::uniform(
+        cfg.name,
+        cfg.moe_layers(),
+        cfg.experts,
+    ));
+    let unit = search::run_search(None, &cfg, &ws, &spec, SEED).unwrap();
+    assert_eq!(unit.map.bits, uniform.map.bits);
+}
+
+// --- drift detection ---------------------------------------------------
+
+/// The detector fires on a synthetically shifted routing distribution
+/// and holds on a stable one (hysteresis keeps it from flapping).
+#[test]
+fn drift_detector_fires_on_shift_and_holds_when_stable() {
+    let experts = 4;
+    let stable = vec![vec![100u64; experts]; 2];
+    let mut moved = stable.clone();
+    moved[1] = vec![400, 50, 25, 25]; // one drifted layer suffices
+    let base = TrafficPrior::from_counts("t", &stable).shares;
+    let shifted = TrafficPrior::from_counts("t", &moved).shares;
+
+    let mut det = DriftDetector::new(DriftConfig::default(), base.clone());
+    // a stable workload never fires, however long it runs
+    for _ in 0..16 {
+        assert!(!det.observe(&base), "stable traffic must not fire");
+    }
+    assert!(det.armed());
+    // the shift fires exactly once, then hysteresis holds it down
+    assert!(det.observe(&shifted));
+    assert!(det.last_distance() > DriftConfig::default().threshold);
+    assert!(!det.observe(&shifted), "disarmed until traffic settles");
+    // post-swap re-baseline: quiet through the dwell, then live again
+    det.reset(shifted.clone());
+    assert!(!det.observe(&base));
+    assert!(!det.observe(&base));
+    assert!(det.observe(&base), "re-armed after dwell on the new baseline");
+}
+
+// --- hot-swap under load ----------------------------------------------
+
+/// Acceptance criterion: a 2-worker packed engine hot-swaps between
+/// two maps under concurrent client load — zero rejected requests,
+/// every in-flight reply bit-identical to an engine built directly on
+/// map A or map B, every post-swap reply bit-identical to map B.
+#[test]
+fn hot_swap_under_load_is_lossless_and_bit_identical() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 8;
+    let cfg = cfg();
+    let (map_a, map_b) = map_pair(&cfg);
+
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map_a.clone()))
+        .workers(2)
+        .queue_depth(64)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .reloadable(true)
+        .build()
+        .unwrap();
+    let reloader = engine.reloader().expect("reloadable build");
+    assert_eq!(reloader.generation(), 0);
+    assert_eq!(reloader.live_map().bits, map_a.bits);
+
+    // per-client workloads + both oracles, computed before any traffic
+    let workloads: Vec<Vec<Sample>> = (0..CLIENTS)
+        .map(|c| {
+            let mut rng = Rng::new(SEED).derive(&format!("swap-client-{c}"));
+            (0..PER_CLIENT)
+                .map(|i| {
+                    gen_sample(
+                        Task::ALL[(c + i) % Task::ALL.len()],
+                        &cfg,
+                        &mut rng,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let oracle_a: Vec<Vec<usize>> = workloads
+        .iter()
+        .map(|w| expected_answers(&cfg, SEED, &map_a, w))
+        .collect();
+    let oracle_b: Vec<Vec<usize>> = workloads
+        .iter()
+        .map(|w| expected_answers(&cfg, SEED, &map_b, w))
+        .collect();
+    assert!(
+        workloads
+            .iter()
+            .zip(oracle_a.iter().zip(&oracle_b))
+            .any(|(_, (a, b))| a != b),
+        "the two maps must be distinguishable through replies \
+         somewhere, or the bit-identity check proves nothing"
+    );
+
+    // clients hammer across the swap; every reply must match one of
+    // the two oracles and nothing may be rejected
+    let stop = AtomicBool::new(false);
+    let generation = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for ((samples, ans_a), ans_b) in
+            workloads.iter().zip(&oracle_a).zip(&oracle_b)
+        {
+            let client = engine.client();
+            let stop = &stop;
+            joins.push(scope.spawn(move || {
+                let mut served = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    for ((s, a), b) in
+                        samples.iter().zip(ans_a).zip(ans_b)
+                    {
+                        let reply = client
+                            .call(s.clone())
+                            .expect("zero rejections across the swap");
+                        assert!(
+                            reply.answer == *a || reply.answer == *b,
+                            "reply {} matches neither map A ({a}) nor \
+                             map B ({b})",
+                            reply.answer
+                        );
+                        served += 1;
+                    }
+                }
+                served
+            }));
+        }
+        // let pre-swap traffic flow, then swap while they hammer
+        std::thread::sleep(Duration::from_millis(50));
+        let generation = reloader.reload(&saved(&cfg, &map_b)).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::Relaxed);
+        for j in joins {
+            assert!(j.join().unwrap() > 0, "each client must see traffic");
+        }
+        generation
+    });
+    assert_eq!(generation, 1);
+    assert_eq!(reloader.generation(), 1);
+    assert_eq!(reloader.live_map().bits, map_b.bits);
+
+    // reload() returned before the post-swap phase began, so every
+    // reply now must be bit-identical to a fresh engine on map B
+    let client = engine.client();
+    for (samples, ans_b) in workloads.iter().zip(&oracle_b) {
+        for (s, b) in samples.iter().zip(ans_b) {
+            assert_eq!(client.call(s.clone()).unwrap().answer, *b);
+        }
+    }
+
+    // the observability plane follows the live map, not the build-time
+    // one, and the swap is counted
+    let obs = engine.observer();
+    assert_eq!(obs.traffic().bits, Some(map_b.bits.clone()));
+    let snap = engine.metrics();
+    assert_eq!(snap.adapt_generation, 1);
+    assert_eq!(snap.adapt_swaps, 1);
+    assert_eq!(snap.rejected_busy, 0);
+    assert_eq!(snap.rejected_deadline, 0);
+
+    // swapping back works too (repeated swaps, monotone generations)
+    assert_eq!(reloader.reload(&saved(&cfg, &map_a)).unwrap(), 2);
+    let client = engine.client();
+    for (samples, ans_a) in workloads.iter().zip(&oracle_a) {
+        for (s, a) in samples.iter().zip(ans_a) {
+            assert_eq!(client.call(s.clone()).unwrap().answer, *a);
+        }
+    }
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.adapt_swaps, 2);
+    assert_eq!(stats.adapt_generation, 2);
+}
+
+/// Guard rails around the reload capability itself.
+#[test]
+fn reload_capability_is_gated_and_typed() {
+    let cfg = cfg();
+    let (map_a, _) = map_pair(&cfg);
+    // a non-reloadable engine exposes no handle
+    let plain = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map_a.clone()))
+        .build()
+        .unwrap();
+    assert!(plain.reloader().is_none());
+    plain.shutdown().unwrap();
+
+    // reloadable requires the packed weight form
+    let err = Engine::builder(cfg.name)
+        .seed(SEED)
+        .reloadable(true)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("Packed"), "{err}");
+
+    // a reload for the wrong variant is refused before any packing
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map_a.clone()))
+        .reloadable(true)
+        .build()
+        .unwrap();
+    let reloader = engine.reloader().unwrap();
+    let mut wrong = saved(&cfg, &map_a);
+    wrong.variant = "molmoe".into();
+    let err = reloader.reload(&wrong).unwrap_err();
+    assert!(err.to_string().contains("molmoe"), "{err}");
+    assert_eq!(reloader.generation(), 0, "failed reloads do not bump");
+    engine.shutdown().unwrap();
+}
+
+// --- POST /v1/reload over raw TCP --------------------------------------
+
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    addr: String,
+}
+
+impl WireClient {
+    fn connect(addr: &str) -> WireClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            addr: addr.to_string(),
+        }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> Response {
+        write_request(
+            &mut self.writer,
+            "POST",
+            path,
+            &self.addr,
+            Some(("application/json", body.as_bytes())),
+            &[],
+        )
+        .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> Response {
+        write_request(&mut self.writer, "GET", path, &self.addr, None, &[])
+            .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+}
+
+fn error_code(resp: &Response) -> String {
+    resp.json_body()
+        .unwrap()
+        .req("error")
+        .unwrap()
+        .req("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+fn tmp_map(tag: &str, saved: &SavedMap) -> PathBuf {
+    let path = std::env::temp_dir().join(format!(
+        "mopeq_adapt_{tag}_{}.json",
+        std::process::id()
+    ));
+    saved.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn reload_round_trips_over_raw_tcp() {
+    let cfg = cfg();
+    let (map_a, map_b) = map_pair(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map_a.clone()))
+        .workers(2)
+        .reloadable(true)
+        .build()
+        .unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr);
+
+    // swap via an artifact path on the server's filesystem
+    let map_path = tmp_map("wire_b", &saved(&cfg, &map_b));
+    let body = Json::Obj(vec![(
+        "map".into(),
+        Json::Str(map_path.display().to_string()),
+    )])
+    .to_string();
+    let resp = client.post("/v1/reload", &body);
+    assert_eq!(resp.status, 200);
+    let j = resp.json_body().unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize().unwrap(), 1);
+    assert!(
+        (j.req("mean_bits").unwrap().as_f64().unwrap()
+            - map_b.mean_bits())
+        .abs()
+            < 1e-12
+    );
+
+    // the swap is visible in both metrics formats on the same socket
+    let snap = loadgen::fetch_metrics(&addr).unwrap();
+    assert_eq!(snap.adapt_generation, 1);
+    assert_eq!(snap.adapt_swaps, 1);
+    let prom = client.get("/metrics?format=prometheus");
+    assert_eq!(prom.status, 200);
+    let text = String::from_utf8(prom.body.clone()).unwrap();
+    assert!(
+        text.contains("mopeq_adapt_swaps_total 1\n"),
+        "prometheus export must count the swap"
+    );
+    assert!(text.contains("mopeq_adapt_generation 1\n"));
+
+    // an inline SavedMap body swaps without touching the filesystem
+    let resp = client
+        .post("/v1/reload", &saved(&cfg, &map_a).to_json().to_string());
+    assert_eq!(resp.status, 200);
+    let j = resp.json_body().unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize().unwrap(), 2);
+
+    // the server still serves inference, bit-identical to the now-live
+    // map A
+    let mut rng = Rng::new(SEED).derive("wire-reload");
+    let samples: Vec<Sample> = (0..3)
+        .map(|i| gen_sample(Task::ALL[i], &cfg, &mut rng))
+        .collect();
+    let expect = expected_answers(&cfg, SEED, &map_a, &samples);
+    for (s, want) in samples.iter().zip(&expect) {
+        let resp = client
+            .post("/v1/infer", &wire::sample_json(s, None).to_string());
+        assert_eq!(resp.status, 200);
+        let reply =
+            wire::reply_from_json(&resp.json_body().unwrap()).unwrap();
+        assert_eq!(reply.answer, *want);
+    }
+
+    // protocol edges: wrong method, unusable bodies
+    let resp = client.get("/v1/reload");
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("POST"));
+    let resp = client.post("/v1/reload", "{}");
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "bad_request");
+    let resp = client.post("/v1/reload", "not json");
+    assert_eq!(resp.status, 400);
+    // a map file that does not exist is a reload error, not a panic
+    let resp = client
+        .post("/v1/reload", r#"{"map": "/nonexistent/frontier.json"}"#);
+    assert_eq!(resp.status, 400);
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.adapt_swaps, 2);
+    std::fs::remove_file(&map_path).ok();
+}
+
+#[test]
+fn reload_on_a_non_reloadable_server_is_a_typed_400() {
+    let cfg = cfg();
+    let engine = Engine::builder(cfg.name).seed(SEED).build().unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let mut client = WireClient::connect(&server.local_addr().to_string());
+    let resp = client.post("/v1/reload", r#"{"map": "x.json"}"#);
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "reload_unsupported");
+    server.shutdown().unwrap();
+}

@@ -67,6 +67,7 @@ fn cost_model(cfg: &ModelConfig, ws: &WeightStore) -> CostModel {
         cfg,
         ws,
         &imp,
+        None,
         &[2, 3, 4],
         &QuantSpec::rtn(),
         &ThroughputProfile::builtin(),
@@ -367,6 +368,7 @@ fn searched_engine_matches_the_frontier_best_map_bit_exact() {
         &cfg,
         &ws,
         &imp,
+        spec.traffic.as_ref(),
         &spec.palette,
         &spec.probe,
         &spec.profile,
