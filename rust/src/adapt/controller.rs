@@ -163,6 +163,16 @@ fn run_loop(
             det.last_distance(),
             cfg.drift.threshold
         ));
+        // drift decisions go to the event log too, so `GET /v1/events`
+        // explains *why* a generation changed (or didn't)
+        reload.note(
+            "drift",
+            &format!(
+                "routing drift {:.3} over threshold {:.3}",
+                det.last_distance(),
+                cfg.drift.threshold
+            ),
+        );
         let current = reload.live_map();
         match select_candidate(set, &shares, &current, cfg.margin) {
             Some((i, saved)) => match reload.reload(saved) {
@@ -171,7 +181,13 @@ fn run_loop(
                      (mean {:.3} bits, generation {generation})",
                     saved.map.mean_bits()
                 )),
-                Err(e) => log::warn(format!("adapt: swap failed: {e}")),
+                Err(e) => {
+                    reload.note(
+                        "swap_failed",
+                        &format!("frontier point {i}: {e}"),
+                    );
+                    log::warn(format!("adapt: swap failed: {e}"));
+                }
             },
             None => log::info(
                 "adapt: drift confirmed but no frontier candidate beats \

@@ -110,6 +110,25 @@ fn dur_from(j: &Json) -> Result<Duration> {
 }
 
 impl MetricsSnapshot {
+    /// Rejections of every kind (busy + deadline).
+    pub fn rejected_total(&self) -> usize {
+        self.rejected_busy + self.rejected_deadline
+    }
+
+    /// Fraction of admission attempts that were rejected, in `[0, 1]`.
+    /// `submitted` already counts deadline-rejected jobs (they were
+    /// admitted) but not busy-rejected ones (uncounted at rejection),
+    /// so attempts = submitted + rejected_busy — a busy flood can't
+    /// hide behind a small `submitted`.
+    pub fn reject_rate(&self) -> f64 {
+        let attempts = self.submitted + self.rejected_busy;
+        if attempts == 0 {
+            0.0
+        } else {
+            self.rejected_total() as f64 / attempts as f64
+        }
+    }
+
     /// The `GET /metrics` wire body — every field, durations in
     /// nanoseconds, per-worker slices included. Key order is fixed, so
     /// the serialization is byte-stable across a
@@ -482,6 +501,25 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_fill, 0.0);
         assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.rejected_total(), 0);
+        assert_eq!(s.reject_rate(), 0.0);
+    }
+
+    #[test]
+    fn reject_rate_counts_busy_attempts_without_double_counting() {
+        let m = Metrics::new(1);
+        // 4 admitted (one of which later misses its deadline) + 1
+        // busy-rejected push that was uncounted = 5 attempts total
+        for _ in 0..5 {
+            m.count_submitted();
+        }
+        m.uncount_submitted();
+        m.count_busy();
+        m.count_deadline();
+        let s = m.snapshot(0);
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.rejected_total(), 2);
+        assert!((s.reject_rate() - 2.0 / 5.0).abs() < 1e-12);
     }
 
     /// A realistic populated snapshot (odd fills, non-integer mean_fill

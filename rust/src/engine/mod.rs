@@ -81,10 +81,17 @@ pub use spec::{
 };
 
 use crate::config::{self, ModelConfig};
-use crate::coordinator::executor::{MoeKernel, SharedArgs};
+use crate::coordinator::executor::{ModelExecutor, MoeKernel, SharedArgs};
 use crate::coordinator::QuantStats;
 use crate::data::Sample;
 use crate::moe::{PackedStore, PrecisionMap, WeightStore};
+use crate::obs::health::{
+    EventLog, HealthReport, HealthState, SloConfig, EVENT_CAPACITY,
+};
+use crate::obs::kern::{KernelEpoch, KernelStat};
+use crate::obs::quality::{
+    self, ProbeJob, QualitySnapshot, QualityStats, QualityTap,
+};
 use crate::obs::routing::{RoutingStats, TrafficSnapshot};
 use crate::obs::trace::{TraceRing, TraceSpan, TraceSummary};
 use crate::search::SearchSpec;
@@ -367,6 +374,18 @@ pub(crate) struct Shared {
     /// build-time map, advanced by each completed swap; what the
     /// observability plane joins traffic against
     pub(crate) pmap: Mutex<Option<PrecisionMap>>,
+    /// engine epoch: the zero point of every trace `start_ns`,
+    /// event and timeline timestamp
+    pub(crate) epoch: Instant,
+    /// kernel-counter baseline snapshotted at build, so per-engine
+    /// views subtract other engines' (earlier tests') traffic out
+    pub(crate) kern_epoch: KernelEpoch,
+    /// bounded structured log of lifecycle events and SLO crossings
+    pub(crate) events: EventLog,
+    /// shadow-probe statistics (`--quality-sample` builds only)
+    pub(crate) quality: Option<Arc<QualityStats>>,
+    /// declared SLOs + per-check crossing memory
+    pub(crate) health: HealthState,
 }
 
 impl Shared {
@@ -405,6 +424,8 @@ pub struct EngineBuilder {
     store_path: Option<PathBuf>,
     prefetch: bool,
     reloadable: bool,
+    quality_sample: usize,
+    slo: SloConfig,
 }
 
 impl EngineBuilder {
@@ -426,6 +447,8 @@ impl EngineBuilder {
             store_path: None,
             prefetch: true,
             reloadable: false,
+            quality_sample: 0,
+            slo: SloConfig::default(),
         }
     }
 
@@ -555,6 +578,27 @@ impl EngineBuilder {
         self
     }
 
+    /// Shadow-reference quality probes: re-execute 1-in-`n` completed
+    /// requests on the retained dense reference in a background
+    /// thread, recording logit MSE, top-1 agreement, and per-(layer,
+    /// expert) error attribution (`GET /v1/quality`). `0` disables
+    /// (default). Requires [`reloadable`](Self::reloadable) — the
+    /// probes execute on exactly the dense weights the reload path
+    /// already retains.
+    pub fn quality_sample(mut self, n: usize) -> Self {
+        self.quality_sample = n;
+        self
+    }
+
+    /// Declared service objectives for the health engine: `GET
+    /// /healthz` grades every check against these (missed = degraded,
+    /// missed 2× = unhealthy → 503) and threshold crossings land in
+    /// the `GET /v1/events` log.
+    pub fn slo(mut self, slo: SloConfig) -> Self {
+        self.slo = slo;
+        self
+    }
+
     /// Resolve the deployment through the [`spec::PreparedWeights`]
     /// pipeline (resolve → calibrate → allocate → quantize/pack →
     /// strip), then spawn and warm the worker pool. Returns once every
@@ -581,6 +625,13 @@ impl EngineBuilder {
                 "reloadable swaps the packed expert store — it requires \
                  WeightForm::Packed, not {}",
                 self.form.label()
+            );
+        }
+        if self.quality_sample > 0 && !self.reloadable {
+            bail!(
+                "quality probes re-execute sampled requests on the \
+                 retained dense reference — quality_sample requires \
+                 reloadable(true)"
             );
         }
         // the reload path re-packs new maps from the reference weights,
@@ -650,6 +701,23 @@ impl EngineBuilder {
                 lock: Mutex::new(()),
             })
         });
+        // the quality plane: preallocated stats + a bounded probe
+        // channel whose worker-side taps never block the serving path
+        let epoch = Instant::now();
+        let quality_stats = (self.quality_sample > 0).then(|| {
+            Arc::new(QualityStats::new(
+                cfg.moe_layers(),
+                cfg.experts,
+                self.quality_sample,
+            ))
+        });
+        let (quality_tap, probe_rx) = match &quality_stats {
+            Some(stats) => {
+                let (tx, rx) = mpsc::sync_channel::<ProbeJob>(64);
+                (Some(QualityTap::new(stats.clone(), tx)), Some(rx))
+            }
+            None => (None, None),
+        };
         let shared = Arc::new(Shared {
             queue: JobQueue::new(self.queue_depth),
             metrics: Metrics::new(self.workers),
@@ -658,6 +726,11 @@ impl EngineBuilder {
             store: Mutex::new(store_handle),
             swap: SwapState::new(self.workers),
             pmap: Mutex::new(pmap.clone()),
+            epoch,
+            kern_epoch: KernelEpoch::capture(),
+            events: EventLog::new(EVENT_CAPACITY, epoch),
+            quality: quality_stats,
+            health: HealthState::new(self.slo.clone()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::with_capacity(self.workers);
@@ -669,6 +742,7 @@ impl EngineBuilder {
                 backend: self.backend.clone(),
                 policy: self.policy,
                 shared: shared.clone(),
+                quality: quality_tap.clone(),
             };
             let tx = ready_tx.clone();
             handles.push(
@@ -678,6 +752,10 @@ impl EngineBuilder {
             );
         }
         drop(ready_tx);
+        // the workers hold the only remaining senders: when the pool
+        // drains at shutdown the probe channel disconnects and the
+        // probe thread exits its recv loop
+        drop(quality_tap);
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..self.workers {
             let outcome = ready_rx
@@ -721,6 +799,29 @@ impl EngineBuilder {
         // every worker is warm: start the serving clock now so
         // throughput never includes compile/warmup cost
         shared.metrics.mark_started();
+        // the probe thread owns its own session + dense reference
+        // executor, so probing never contends with a serving replica
+        let probe = match (probe_rx, &reload) {
+            (Some(rx), Some(ctx)) => {
+                let shared_p = shared.clone();
+                let ctx = ctx.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("mopeq-quality".to_string())
+                        .spawn(move || probe_loop(rx, shared_p, ctx))?,
+                )
+            }
+            _ => None,
+        };
+        shared.events.push(
+            "engine_start",
+            &format!(
+                "{} worker(s) serving {} ({})",
+                self.workers,
+                cfg.name,
+                self.form.label()
+            ),
+        );
         Ok(Engine {
             shared,
             workers: handles,
@@ -729,8 +830,103 @@ impl EngineBuilder {
             provenance,
             stats,
             reload,
+            probe,
         })
     }
+}
+
+/// Probe-thread body: drain sampled requests off the bounded channel
+/// and re-execute each on the dense f32 reference (the same retained
+/// weights the reload path repacks from), folding logit MSE, top-1
+/// agreement, and per-(layer, expert) error attribution into
+/// [`QualityStats`]. Exits when every worker tap has dropped. A probe
+/// that fails counts `failed` and logs a `probe_failure` event — it
+/// never takes the engine down.
+fn probe_loop(
+    rx: mpsc::Receiver<ProbeJob>,
+    shared: Arc<Shared>,
+    ctx: Arc<ReloadCtx>,
+) {
+    let Some(stats) = shared.quality.clone() else { return };
+    let session = match worker::open_session(ctx.backend.as_deref()) {
+        Ok(s) => s,
+        Err(e) => {
+            probe_sink(&rx, &shared, &stats, &e);
+            return;
+        }
+    };
+    let exec = match ModelExecutor::new(&session, &ctx.cfg, &ctx.ws) {
+        Ok(ex) => ex,
+        Err(e) => {
+            probe_sink(&rx, &shared, &stats, &e);
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let start = Instant::now();
+        let start_ns =
+            start.saturating_duration_since(shared.epoch).as_nanos() as u64;
+        match run_probe(&exec, &ctx.cfg, &job) {
+            Ok((mse, agree, contributions)) => {
+                stats.record_probe(
+                    quality::ProbeRecord {
+                        key: quality::sample_key(&job.sample.tokens),
+                        task: job.sample.task.label().to_string(),
+                        generation: job.generation,
+                        mse,
+                        agree,
+                        start_ns,
+                        dur_ns: start.elapsed().as_nanos() as u64,
+                    },
+                    &contributions,
+                );
+            }
+            Err(e) => {
+                stats.count_failed();
+                shared.events.push("probe_failure", &format!("{e}"));
+            }
+        }
+    }
+}
+
+/// A probe thread that could not build its reference executor still
+/// drains the channel (so worker `try_send`s disconnect-drop instead
+/// of filling up) and counts every job failed.
+fn probe_sink(
+    rx: &mpsc::Receiver<ProbeJob>,
+    shared: &Shared,
+    stats: &QualityStats,
+    err: &anyhow::Error,
+) {
+    shared
+        .events
+        .push("probe_failure", &format!("probe thread disabled: {err}"));
+    while rx.recv().is_ok() {
+        stats.count_failed();
+    }
+}
+
+/// One shadow probe: forward the sampled request through the dense
+/// reference and compare against what the packed path served.
+fn run_probe(
+    exec: &ModelExecutor,
+    cfg: &ModelConfig,
+    job: &ProbeJob,
+) -> Result<(f64, bool, Vec<Vec<f64>>)> {
+    let samples = [job.sample.clone()];
+    let (tokens, vis) = crate::data::pack_batch(&samples, cfg);
+    let out = exec.forward(&tokens, &vis, false)?;
+    let dense = out.logits.index0(0).data;
+    if dense.len() != job.logits.len() {
+        bail!(
+            "probe logits width {} != served width {}",
+            dense.len(),
+            job.logits.len()
+        );
+    }
+    let mse = quality::probe_mse(&job.logits, &dense);
+    let agree = out.logits.argmax_rows()[0] == job.pred;
+    Ok((mse, agree, quality::attribute(mse, &out.counts)))
 }
 
 /// Unique per-engine artifact path for an auto-created tiered store
@@ -760,6 +956,9 @@ pub struct Engine {
     /// everything a live map hot-swap needs (builds with
     /// [`EngineBuilder::reloadable`] only)
     reload: Option<Arc<ReloadCtx>>,
+    /// the shadow-probe thread (`--quality-sample` builds only),
+    /// joined at shutdown once every worker tap has dropped
+    probe: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Engine {
@@ -862,6 +1061,11 @@ impl Engine {
                 }
             }
         }
+        // the joined workers dropped the last probe senders: the probe
+        // thread's recv loop has ended, so this join cannot hang
+        if let Some(h) = self.probe.take() {
+            let _ = h.join();
+        }
         if let Some(e) = first_err {
             return Err(e);
         }
@@ -876,6 +1080,9 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.queue.close();
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.probe.take() {
             let _ = h.join();
         }
     }
@@ -991,6 +1198,15 @@ impl ReloadHandle {
         *self.shared.pmap.lock().unwrap() = Some(saved.map.clone());
         *self.shared.store.lock().unwrap() = tiered_handle;
         self.shared.swap.swaps.fetch_add(1, Ordering::Relaxed);
+        // the swap is live: close the old map's quality window so the
+        // new generation's agreement/MSE reads separately, and log it
+        if let Some(q) = &self.shared.quality {
+            q.rotate(generation);
+        }
+        self.shared.events.push(
+            "swap",
+            &format!("weight generation {generation} live"),
+        );
         Ok(generation)
     }
 
@@ -1028,6 +1244,12 @@ impl ReloadHandle {
             .swap
             .last_drift
             .store(distance.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Append a structured lifecycle event (`drift`, `swap_failed`, …)
+    /// to the engine's bounded event log (`GET /v1/events`).
+    pub fn note(&self, kind: &str, detail: &str) {
+        self.shared.events.push(kind, detail);
     }
 }
 
@@ -1087,8 +1309,26 @@ impl ObsHandle {
 
     /// The `GET /v1/traces` wire body: ring shape + summary + spans.
     pub fn traces_json(&self) -> crate::jsonx::Json {
+        self.traces_json_with(None, None)
+    }
+
+    /// `traces_json` with the `?limit=N` / `?stage=<name>` query
+    /// filters applied: `limit` keeps only the newest N spans, `stage`
+    /// projects each span down to that one stage's duration (callers
+    /// validate the stage name against
+    /// [`STAGE_NAMES`](crate::obs::trace::STAGE_NAMES) + `total`).
+    pub fn traces_json_with(
+        &self,
+        limit: Option<usize>,
+        stage: Option<&str>,
+    ) -> crate::jsonx::Json {
         use crate::jsonx::Json;
         let summary = self.trace_summary();
+        let mut spans = self.traces();
+        if let Some(n) = limit {
+            let skip = spans.len().saturating_sub(n);
+            spans.drain(..skip);
+        }
         Json::Obj(vec![
             (
                 "capacity".into(),
@@ -1102,10 +1342,120 @@ impl ObsHandle {
             (
                 "traces".into(),
                 Json::Arr(
-                    self.traces().iter().map(TraceSpan::to_json).collect(),
+                    spans
+                        .iter()
+                        .map(|s| match stage {
+                            None => s.to_json(),
+                            Some(name) => project_stage(s, name),
+                        })
+                        .collect(),
                 ),
             ),
         ])
+    }
+
+    /// Per-engine kernel counters: the process-global per-width
+    /// tallies minus the baseline snapshotted when this engine was
+    /// built, so two engines in one process never cross-contaminate.
+    pub fn kernels(&self) -> Vec<KernelStat> {
+        self.shared.kern_epoch.delta()
+    }
+
+    /// The quality plane's snapshot, joined with the currently served
+    /// precision map's bits (hot-swaps included) — `None` unless the
+    /// engine was built with a quality sample rate.
+    pub fn quality(&self) -> Option<QualitySnapshot> {
+        self.shared.quality.as_ref().map(|q| {
+            let bits = self
+                .shared
+                .pmap
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|m| m.bits.clone());
+            q.snapshot(self.cfg.name, bits)
+        })
+    }
+
+    /// The `GET /v1/quality` wire body.
+    pub fn quality_json(&self) -> Option<crate::jsonx::Json> {
+        self.quality().map(|s| s.to_json())
+    }
+
+    /// The `GET /v1/events` wire body: the bounded structured log of
+    /// lifecycle events and SLO crossings.
+    pub fn events_json(&self) -> crate::jsonx::Json {
+        self.shared.events.to_json()
+    }
+
+    /// Evaluate the declared SLOs against a live snapshot; status
+    /// changes land one crossing event each in the event log. The
+    /// upgraded `GET /healthz` body.
+    pub fn health(&self) -> HealthReport {
+        let snap = self.shared.snapshot();
+        let window = self.shared.quality.as_ref().map(|q| q.window());
+        self.shared.health.check(
+            &snap,
+            window.as_ref(),
+            &self.shared.events,
+        )
+    }
+
+    /// The `GET /v1/timeline` wire body: trace spans, probe records,
+    /// lifecycle events, and kernel/store counters rendered as one
+    /// Chrome Trace Event JSON array (Perfetto-loadable).
+    pub fn timeline_json(&self) -> crate::jsonx::Json {
+        let spans = self.traces();
+        let probes = self
+            .shared
+            .quality
+            .as_ref()
+            .map(|q| q.snapshot(self.cfg.name, None).probes)
+            .unwrap_or_default();
+        let events = self.shared.events.events();
+        let kernels = self.kernels();
+        let store = self
+            .shared
+            .store
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|s| s.snapshot());
+        crate::obs::timeline::chrome_trace(
+            &spans,
+            &probes,
+            &events,
+            &kernels,
+            store.as_ref(),
+            self.shared.epoch.elapsed().as_nanos() as u64,
+        )
+    }
+}
+
+/// Project one span down to a single stage:
+/// `{worker, batch_fill, start_ns, <stage>_ns}`. Unknown names fall
+/// back to the full span (route-level validation rejects them first).
+fn project_stage(s: &TraceSpan, name: &str) -> crate::jsonx::Json {
+    use crate::jsonx::Json;
+    let d = if name == "total" {
+        Some(s.total)
+    } else {
+        s.stages()
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, d)| d)
+    };
+    match d {
+        None => s.to_json(),
+        Some(d) => Json::Obj(vec![
+            ("worker".into(), Json::Num(s.worker as f64)),
+            ("batch_fill".into(), Json::Num(s.batch_fill as f64)),
+            ("start_ns".into(), Json::Num(s.start_ns as f64)),
+            (
+                format!("{name}_ns"),
+                Json::Num(d.as_nanos() as f64),
+            ),
+        ]),
     }
 }
 

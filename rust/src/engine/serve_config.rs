@@ -95,6 +95,17 @@ pub struct ServeConfig {
     pub adapt_dir: Option<PathBuf>,
     /// seconds between the adapt controller's routing observations
     pub adapt_interval_secs: u64,
+    /// shadow-probe 1 in N completed requests on the retained dense
+    /// reference (`GET /v1/quality`); 0 = off. Requires a packed
+    /// deployment (the dense weights are retained via the reload path).
+    pub quality_sample: usize,
+    /// SLO: p99 latency objective in milliseconds (`/healthz` grading)
+    pub slo_p99_ms: Option<f64>,
+    /// SLO: highest acceptable rejection rate, 0..=1
+    pub slo_max_reject: Option<f64>,
+    /// SLO: lowest acceptable shadow-probe top-1 agreement, 0..=1
+    /// (needs `quality_sample`)
+    pub slo_min_agreement: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -128,6 +139,10 @@ impl Default for ServeConfig {
             reloadable: false,
             adapt_dir: None,
             adapt_interval_secs: 10,
+            quality_sample: 0,
+            slo_p99_ms: None,
+            slo_max_reject: None,
+            slo_min_agreement: None,
         }
     }
 }
@@ -280,6 +295,38 @@ impl ServeConfig {
         if self.adapt_interval_secs == 0 {
             bail!("`adapt_interval_secs` must be ≥ 1");
         }
+        if self.quality_sample > 0
+            && self.weight_form()? != WeightForm::Packed
+        {
+            bail!(
+                "`quality_sample` shadow-probes against the retained \
+                 dense reference — it requires a packed deployment \
+                 (set `packed`)"
+            );
+        }
+        if let Some(p99) = self.slo_p99_ms {
+            if !p99.is_finite() || p99 <= 0.0 {
+                bail!("`slo_p99_ms` must be a positive objective");
+            }
+        }
+        if let Some(r) = self.slo_max_reject {
+            if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                bail!("`slo_max_reject` is a rate — it must be in 0..=1");
+            }
+        }
+        if let Some(a) = self.slo_min_agreement {
+            if !a.is_finite() || !(0.0..=1.0).contains(&a) {
+                bail!(
+                    "`slo_min_agreement` is a share — it must be in 0..=1"
+                );
+            }
+            if self.quality_sample == 0 {
+                bail!(
+                    "`slo_min_agreement` grades shadow-probe top-1 \
+                     agreement — it needs `quality_sample` ≥ 1"
+                );
+            }
+        }
         self.weight_form()?;
         quant.validate()?;
         Ok(())
@@ -368,13 +415,29 @@ impl ServeConfig {
                 "adapt_interval_secs".into(),
                 Json::Num(self.adapt_interval_secs as f64),
             ),
+            (
+                "quality_sample".into(),
+                Json::Num(self.quality_sample as f64),
+            ),
+            (
+                "slo_p99_ms".into(),
+                self.slo_p99_ms.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "slo_max_reject".into(),
+                self.slo_max_reject.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "slo_min_agreement".into(),
+                self.slo_min_agreement.map_or(Json::Null, Json::Num),
+            ),
         ])
     }
 
     /// Deserialize: missing keys take their defaults (partial configs
     /// are valid), unknown keys fail typed (the typo guard).
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
-        const KNOWN: [&str; 27] = [
+        const KNOWN: [&str; 31] = [
             "model",
             "seed",
             "packed",
@@ -402,6 +465,10 @@ impl ServeConfig {
             "reloadable",
             "adapt_dir",
             "adapt_interval_secs",
+            "quality_sample",
+            "slo_p99_ms",
+            "slo_max_reject",
+            "slo_min_agreement",
         ];
         for (k, _) in j.as_obj()? {
             if !KNOWN.contains(&k.as_str()) {
@@ -507,6 +574,18 @@ impl ServeConfig {
         }
         if let Some(v) = get("adapt_interval_secs") {
             sc.adapt_interval_secs = v.as_usize()? as u64;
+        }
+        if let Some(v) = get("quality_sample") {
+            sc.quality_sample = v.as_usize()?;
+        }
+        if let Some(v) = get("slo_p99_ms") {
+            sc.slo_p99_ms = Some(v.as_f64()?);
+        }
+        if let Some(v) = get("slo_max_reject") {
+            sc.slo_max_reject = Some(v.as_f64()?);
+        }
+        if let Some(v) = get("slo_min_agreement") {
+            sc.slo_min_agreement = Some(v.as_f64()?);
         }
         Ok(sc)
     }
@@ -618,6 +697,19 @@ impl ServeConfig {
         }
         self.adapt_interval_secs = args
             .u64_flag("adapt-interval-secs", self.adapt_interval_secs)?;
+        self.quality_sample =
+            args.usize_flag("quality-sample", self.quality_sample)?;
+        if args.flags.contains_key("slo-p99-ms") {
+            self.slo_p99_ms = Some(args.f64_flag("slo-p99-ms", 0.0)?);
+        }
+        if args.flags.contains_key("slo-max-reject") {
+            self.slo_max_reject =
+                Some(args.f64_flag("slo-max-reject", 0.0)?);
+        }
+        if args.flags.contains_key("slo-min-agreement") {
+            self.slo_min_agreement =
+                Some(args.f64_flag("slo-min-agreement", 0.0)?);
+        }
         // quantizer-specific flags on the wrong (merged) quantizer
         if args.flags.contains_key("damp") && self.quantizer != "gptq" {
             bail!("--damp only applies to --quantizer gptq");
@@ -667,7 +759,15 @@ impl EngineBuilder {
             .trace_buffer(sc.trace_buffer)
             .trace_sample(sc.trace_sample)
             .prefetch(sc.prefetch)
-            .reloadable(sc.wants_reload());
+            // quality probes re-execute on the retained dense weights,
+            // which is exactly what the reload path keeps around
+            .reloadable(sc.wants_reload() || sc.quality_sample > 0)
+            .quality_sample(sc.quality_sample)
+            .slo(crate::obs::health::SloConfig {
+                p99_ms: sc.slo_p99_ms,
+                max_reject: sc.slo_max_reject,
+                min_agreement: sc.slo_min_agreement,
+            });
         if let Some(cap) = sc.resident_bytes {
             b = b.resident_bytes(cap);
         }
@@ -839,6 +939,72 @@ mod tests {
             ..ServeConfig::default()
         };
         assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn quality_and_slo_knobs_merge_and_guard() {
+        // flags overlay the file values
+        let mut sc = ServeConfig { packed: true, ..ServeConfig::default() };
+        let args = crate::cli::parse(&argv(&[
+            "serve", "--quality-sample", "4", "--slo-p99-ms", "250",
+            "--slo-max-reject", "0.05", "--slo-min-agreement", "0.9",
+        ]));
+        sc.apply_flags(&args).unwrap();
+        assert_eq!(sc.quality_sample, 4);
+        assert_eq!(sc.slo_p99_ms, Some(250.0));
+        assert_eq!(sc.slo_max_reject, Some(0.05));
+        assert_eq!(sc.slo_min_agreement, Some(0.9));
+        sc.validate().unwrap();
+        // probes without a packed deployment are a typed error
+        let sc = ServeConfig {
+            quality_sample: 4,
+            ..ServeConfig::default()
+        };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("packed"), "{err}");
+        // an agreement SLO without probes can never be graded
+        let sc = ServeConfig {
+            packed: true,
+            slo_min_agreement: Some(0.9),
+            ..ServeConfig::default()
+        };
+        let err = sc.validate().unwrap_err();
+        assert!(err.to_string().contains("quality_sample"), "{err}");
+        // rates outside 0..=1 are typed errors
+        for bad in [
+            ServeConfig {
+                packed: true,
+                slo_max_reject: Some(1.5),
+                ..ServeConfig::default()
+            },
+            ServeConfig {
+                packed: true,
+                quality_sample: 2,
+                slo_min_agreement: Some(-0.1),
+                ..ServeConfig::default()
+            },
+            ServeConfig {
+                packed: true,
+                slo_p99_ms: Some(0.0),
+                ..ServeConfig::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+        // round trip keeps the new fields byte-stable
+        let sc = ServeConfig {
+            packed: true,
+            quality_sample: 8,
+            slo_p99_ms: Some(100.0),
+            slo_max_reject: Some(0.01),
+            slo_min_agreement: Some(0.95),
+            ..ServeConfig::default()
+        };
+        let wire = sc.to_json().to_string();
+        let back =
+            ServeConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.to_json().to_string(), wire);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::coordinator::executor::ModelExecutor;
 use crate::data::Sample;
 use crate::engine::queue::Popped;
 use crate::engine::{EngineWeights, Job, Rejected, Reply, Shared};
+use crate::obs::quality::{ProbeJob, QualityTap};
 use crate::obs::trace::TraceSpan;
 use crate::runtime::Session;
 use crate::serve::{BatchPolicy, Batcher};
@@ -27,6 +28,9 @@ pub(crate) struct WorkerConfig {
     pub backend: Option<String>,
     pub policy: BatchPolicy,
     pub shared: Arc<Shared>,
+    /// shadow-probe hand-off (`--quality-sample`): sampled completed
+    /// requests go to the probe thread via a never-blocking `try_send`
+    pub quality: Option<QualityTap>,
 }
 
 /// Why one executor's serve phase ended.
@@ -180,7 +184,7 @@ fn serve_loop(
                 None => break,
             }
         }
-        flush(wc, exec, &mut batcher)?;
+        flush(wc, exec, &mut batcher, generation)?;
     }
 }
 
@@ -205,6 +209,7 @@ fn flush(
     wc: &WorkerConfig,
     exec: &ModelExecutor,
     batcher: &mut Batcher<Job>,
+    generation: u64,
 ) -> Result<()> {
     let triage_start = Instant::now();
     let (live, expired): (Vec<Job>, Vec<Job>) = batcher
@@ -234,8 +239,11 @@ fn flush(
     // already visible in a metrics snapshot (requests == Σ fills holds
     // at every observable instant)
     wc.shared.metrics.record_batch(wc.index, fill, &latencies);
-    for ((job, &answer), latency) in
-        live.into_iter().zip(preds.iter()).zip(latencies)
+    for (i, ((job, &answer), latency)) in live
+        .into_iter()
+        .zip(preds.iter())
+        .zip(latencies)
+        .enumerate()
     {
         let send_start = Instant::now();
         let _ = job.respond.send(Ok(Reply {
@@ -244,6 +252,18 @@ fn flush(
             latency,
             batch_fill: fill,
         }));
+        // the reply is on its way — only now consider shadow-probing
+        // this request, and only through a never-blocking try_send
+        if let Some(tap) = &wc.quality {
+            if tap.sampled() {
+                tap.send(ProbeJob {
+                    sample: samples[i].clone(),
+                    logits: out.logits.index0(i).data,
+                    pred: answer,
+                    generation,
+                });
+            }
+        }
         // trace stage boundaries: enqueued ≤ popped ≤ triage_start ≤
         // triage_done ≤ exec_done ≤ send_start ≤ now. triage/execute
         // are batch-shared; queue_wait/linger/reply_send are per-job.
@@ -251,6 +271,10 @@ fn flush(
         wc.shared.traces.push(TraceSpan {
             worker: wc.index,
             batch_fill: fill,
+            start_ns: job
+                .enqueued
+                .saturating_duration_since(wc.shared.epoch)
+                .as_nanos() as u64,
             queue_wait: popped.saturating_duration_since(job.enqueued),
             linger: triage_start.saturating_duration_since(popped),
             triage: triage_done.saturating_duration_since(triage_start),

@@ -99,6 +99,8 @@ fn print_usage() {
          \x20         [--trace-buffer N] [--trace-sample N]\n\
          \x20         [--traffic-out traffic.json] [--reloadable]\n\
          \x20         [--adapt frontier_dir [--adapt-interval-secs N]]\n\
+         \x20         [--quality-sample N] [--slo-p99-ms X]\n\
+         \x20         [--slo-max-reject X] [--slo-min-agreement X]\n\
          loadgen:  --addr host:port [--concurrency N] [--duration S]\n\
          \x20         [--deadline-ms N] [--min-ok N] [--expect-busy]\n\
          \x20         [--check-metrics] [--bench-out name]\n\
@@ -1016,7 +1018,8 @@ fn serve_network(
     println!(
         "listening on http://{local} (POST /v1/infer, \
          POST /v1/reload, GET /metrics[?format=prometheus], \
-         GET /v1/traces, GET /v1/experts, GET /healthz)"
+         GET /v1/traces, GET /v1/experts, GET /v1/quality, \
+         GET /v1/events, GET /v1/timeline, GET /healthz)"
     );
     let controller = match &sc.adapt_dir {
         Some(dir) => {
@@ -1051,6 +1054,9 @@ fn serve_network(
         c.stop();
     }
     let stats = server.shutdown()?;
+    // final probe tallies: the probe thread is joined during shutdown,
+    // so this snapshot is complete, not racing a late probe
+    let quality = obs.quality();
     println!(
         "served {} requests in {} batches (mean fill {:.2}); \
          {} busy + {} deadline rejections; p50 {:?} p95 {:?} p99 {:?} \
@@ -1070,6 +1076,21 @@ fn serve_network(
             "adapt: {} hot-swap(s), weight generation {}, last drift \
              {:.4}",
             stats.adapt_swaps, stats.adapt_generation, stats.adapt_last_drift
+        );
+    }
+    if let Some(q) = quality {
+        println!(
+            "quality: {} probe(s) at 1-in-{} ({} dropped, {} failed, \
+             {} stale); window gen {}: top-1 agreement {:.3}, mean MSE \
+             {:.3e}",
+            q.probed,
+            q.sample,
+            q.dropped,
+            q.failed,
+            q.stale,
+            q.window.generation,
+            q.window.top1_agreement(),
+            q.window.mse_mean()
         );
     }
     if let Some(st) = &stats.store {

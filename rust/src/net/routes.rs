@@ -19,7 +19,8 @@ use crate::engine::{
 use crate::jsonx::Json;
 use crate::net::http::{Request, Response};
 use crate::net::wire;
-use crate::obs::{kern, prom};
+use crate::obs::prom;
+use crate::obs::trace::STAGE_NAMES;
 
 /// Shared request dispatcher (wrap in `Arc` for the server's threads).
 pub struct Router {
@@ -55,23 +56,28 @@ impl Router {
             ("POST", "/v1/infer") => self.infer(req),
             ("POST", "/v1/reload") => self.reload_map(req),
             ("GET", "/metrics") => self.metrics_response(query),
-            ("GET", "/v1/traces") => {
-                Response::json(200, &self.obs.traces_json())
-            }
+            ("GET", "/v1/traces") => self.traces_response(query),
             ("GET", "/v1/experts") => {
                 Response::json(200, &self.obs.traffic().to_json())
             }
-            ("GET", "/healthz") => Response::json(
-                200,
-                &wire::health_json(&self.cfg, self.workers),
-            ),
+            ("GET", "/v1/quality") => self.quality_response(),
+            ("GET", "/v1/events") => {
+                Response::json(200, &self.obs.events_json())
+            }
+            ("GET", "/v1/timeline") => {
+                Response::json(200, &self.obs.timeline_json())
+            }
+            ("GET", "/healthz") => self.health_response(),
             (_, "/v1/infer") | (_, "/v1/reload") => {
                 method_not_allowed(req, "POST")
             }
             (_, "/metrics")
             | (_, "/healthz")
             | (_, "/v1/traces")
-            | (_, "/v1/experts") => method_not_allowed(req, "GET"),
+            | (_, "/v1/experts")
+            | (_, "/v1/quality")
+            | (_, "/v1/events")
+            | (_, "/v1/timeline") => method_not_allowed(req, "GET"),
             _ => Response::json(
                 404,
                 &wire::error_envelope(
@@ -96,13 +102,77 @@ impl Router {
                 prom::render(
                     &self.metrics.snapshot(),
                     Some(&self.obs.traffic()),
-                    &kern::snapshot(),
+                    &self.obs.kernels(),
+                    self.obs.quality().as_ref(),
                 ),
             ),
             Some(other) => bad_request(&format!(
                 "unknown metrics format `{other}` (json|prometheus)"
             )),
         }
+    }
+
+    /// `GET /v1/traces`: the request-trace window, optionally narrowed.
+    /// `?limit=N` keeps the newest N spans (N ≥ 1); `?stage=<name>`
+    /// projects each span down to one stage's duration (a name from
+    /// [`STAGE_NAMES`] or `total`). Bad values answer typed 400s rather
+    /// than a silently-unfiltered window.
+    fn traces_response(&self, query: Option<&str>) -> Response {
+        let limit = match query_param(query, "limit") {
+            None => None,
+            Some(raw) => match raw.parse::<usize>() {
+                Ok(n) if n >= 1 => Some(n),
+                _ => {
+                    return bad_request(&format!(
+                        "bad trace limit `{raw}` (an integer ≥ 1)"
+                    ))
+                }
+            },
+        };
+        let stage = match query_param(query, "stage") {
+            None => None,
+            Some(s)
+                if s == "total" || STAGE_NAMES.contains(&s) =>
+            {
+                Some(s)
+            }
+            Some(other) => {
+                return bad_request(&format!(
+                    "unknown trace stage `{other}` ({}|total)",
+                    STAGE_NAMES.join("|")
+                ))
+            }
+        };
+        Response::json(200, &self.obs.traces_json_with(limit, stage))
+    }
+
+    /// `GET /v1/quality`: the shadow-probe snapshot. Engines running
+    /// without `--quality-sample` answer a typed 400 — there is no
+    /// probe thread, so an empty report would read as "perfect
+    /// quality" instead of "not measured".
+    fn quality_response(&self) -> Response {
+        match self.obs.quality_json() {
+            Some(j) => Response::json(200, &j),
+            None => Response::json(
+                400,
+                &wire::error_envelope(
+                    "quality_disabled",
+                    400,
+                    "engine was not started with --quality-sample",
+                ),
+            ),
+        }
+    }
+
+    /// `GET /healthz`: the deployment shape plus graded SLO checks.
+    /// `503` only when a check is unhealthy, so orchestrators can stop
+    /// routing without treating `degraded` as dead.
+    fn health_response(&self) -> Response {
+        let report = self.obs.health();
+        Response::json(
+            report.http_status(),
+            &wire::health_detail_json(&self.cfg, self.workers, &report),
+        )
     }
 
     fn infer(&self, req: &Request) -> Response {

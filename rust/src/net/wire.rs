@@ -257,6 +257,29 @@ pub fn health_json(cfg: &ModelConfig, workers: usize) -> Json {
     ])
 }
 
+/// The graded `GET /healthz` body: the same deployment-shape keys as
+/// [`health_json`] (clients keyed on `variant`/`seq`/`batch` keep
+/// working), but `status` carries the SLO engine's verdict
+/// (`ok`/`degraded`/`unhealthy`) and a `checks` array details every
+/// graded objective.
+pub fn health_detail_json(
+    cfg: &ModelConfig,
+    workers: usize,
+    report: &crate::obs::health::HealthReport,
+) -> Json {
+    let mut fields = match health_json(cfg, workers) {
+        Json::Obj(fields) => fields,
+        _ => unreachable!("health_json is an object"),
+    };
+    for (k, v) in fields.iter_mut() {
+        if k == "status" {
+            *v = Json::Str(report.status.as_str().into());
+        }
+    }
+    fields.push(("checks".into(), report.checks_json()));
+    Json::Obj(fields)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,5 +403,39 @@ mod tests {
         );
         assert_eq!(h.req("workers").unwrap().as_usize().unwrap(), 2);
         assert_eq!(h.req("seq").unwrap().as_usize().unwrap(), cfg().seq);
+    }
+
+    #[test]
+    fn health_detail_keeps_the_shape_and_grades_the_status() {
+        use crate::obs::health::{HealthCheck, HealthReport, Status};
+        let report = HealthReport {
+            status: Status::Degraded,
+            checks: vec![HealthCheck {
+                name: "p99_latency_ms",
+                status: Status::Degraded,
+                value: 120.0,
+                threshold: Some(100.0),
+                detail: "p99 120.0ms against a 100ms objective".into(),
+            }],
+        };
+        let h = health_detail_json(&cfg(), 2, &report);
+        // base deployment-shape keys survive untouched…
+        assert_eq!(
+            h.req("variant").unwrap().as_str().unwrap(),
+            "dsvl2_tiny"
+        );
+        assert_eq!(h.req("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(h.req("batch").unwrap().as_usize().unwrap(), cfg().batch);
+        // …while status carries the verdict and checks carry detail
+        assert_eq!(
+            h.req("status").unwrap().as_str().unwrap(),
+            "degraded"
+        );
+        let checks = h.req("checks").unwrap().as_arr().unwrap();
+        assert_eq!(checks.len(), 1);
+        assert_eq!(
+            checks[0].req("name").unwrap().as_str().unwrap(),
+            "p99_latency_ms"
+        );
     }
 }

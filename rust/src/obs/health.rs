@@ -1,0 +1,544 @@
+//! SLO health engine: rolling evaluation of declared service
+//! objectives (p99 latency, rejection rate, top-1 agreement floor)
+//! over the live [`MetricsSnapshot`] + quality window, plus a bounded
+//! structured [`EventLog`] of threshold crossings and lifecycle events
+//! (engine start, hot-swap, drift, probe failure) served at
+//! `GET /v1/events`.
+//!
+//! Grading: a configured objective that is missed is `degraded`;
+//! missed by more than 2× (or, for the agreement floor, below half
+//! the floor) it is `unhealthy`. The overall status is the worst
+//! check, and `GET /healthz` answers 503 only for `unhealthy` — a
+//! degraded deployment still serves.
+
+use crate::engine::MetricsSnapshot;
+use crate::jsonx::Json;
+use crate::obs::quality::QualityWindow;
+use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Bound on retained events (newest kept); `seq` keeps counting.
+pub const EVENT_CAPACITY: usize = 256;
+
+/// Declared service objectives — all optional; an empty config grades
+/// every check `ok`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloConfig {
+    /// p99 end-to-end latency ceiling, milliseconds
+    pub p99_ms: Option<f64>,
+    /// ceiling on rejected/submitted (busy + deadline), 0..=1
+    pub max_reject: Option<f64>,
+    /// floor on the live window's top-1 agreement, 0..=1
+    pub min_agreement: Option<f64>,
+}
+
+impl SloConfig {
+    pub fn is_empty(&self) -> bool {
+        self.p99_ms.is_none()
+            && self.max_reject.is_none()
+            && self.min_agreement.is_none()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Status {
+    Ok,
+    Degraded,
+    Unhealthy,
+}
+
+impl Status {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Degraded => "degraded",
+            Status::Unhealthy => "unhealthy",
+        }
+    }
+}
+
+/// One evaluated objective.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthCheck {
+    pub name: &'static str,
+    pub status: Status,
+    pub value: f64,
+    /// the configured objective, when one is declared
+    pub threshold: Option<f64>,
+    pub detail: String,
+}
+
+impl HealthCheck {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.into())),
+            (
+                "status".into(),
+                Json::Str(self.status.as_str().into()),
+            ),
+            ("value".into(), Json::Num(self.value)),
+            (
+                "threshold".into(),
+                match self.threshold {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+            ("detail".into(), Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Readiness verdict: worst check wins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthReport {
+    pub status: Status,
+    pub checks: Vec<HealthCheck>,
+}
+
+impl HealthReport {
+    pub fn http_status(&self) -> u16 {
+        if self.status == Status::Unhealthy {
+            503
+        } else {
+            200
+        }
+    }
+
+    pub fn checks_json(&self) -> Json {
+        Json::Arr(self.checks.iter().map(|c| c.to_json()).collect())
+    }
+}
+
+/// Missed-high grading: `value` should stay at or under `limit`.
+fn grade_high(value: f64, limit: Option<f64>) -> Status {
+    match limit {
+        None => Status::Ok,
+        Some(t) if value <= t => Status::Ok,
+        Some(t) if value <= 2.0 * t => Status::Degraded,
+        Some(_) => Status::Unhealthy,
+    }
+}
+
+/// Missed-low grading: `value` should stay at or above `floor`.
+fn grade_low(value: f64, floor: Option<f64>) -> Status {
+    match floor {
+        None => Status::Ok,
+        Some(t) if value >= t => Status::Ok,
+        Some(t) if value >= 0.5 * t => Status::Degraded,
+        Some(_) => Status::Unhealthy,
+    }
+}
+
+/// Evaluate the declared objectives against a live snapshot. Pure —
+/// crossing detection and event emission live in [`HealthState`].
+pub fn evaluate(
+    slo: &SloConfig,
+    snap: &MetricsSnapshot,
+    quality: Option<&QualityWindow>,
+) -> HealthReport {
+    let mut checks = Vec::new();
+
+    checks.push(HealthCheck {
+        name: "workers",
+        status: if snap.workers.is_empty() {
+            Status::Unhealthy
+        } else {
+            Status::Ok
+        },
+        value: snap.workers.len() as f64,
+        threshold: None,
+        detail: format!("{} worker(s) serving", snap.workers.len()),
+    });
+
+    let p99_ms = snap.p99.as_secs_f64() * 1000.0;
+    checks.push(HealthCheck {
+        name: "p99_latency_ms",
+        status: grade_high(p99_ms, slo.p99_ms),
+        value: p99_ms,
+        threshold: slo.p99_ms,
+        detail: match slo.p99_ms {
+            Some(t) => format!("p99 {p99_ms:.3} ms vs ceiling {t} ms"),
+            None => format!("p99 {p99_ms:.3} ms (no objective)"),
+        },
+    });
+
+    let rate = snap.reject_rate();
+    checks.push(HealthCheck {
+        name: "rejection_rate",
+        status: grade_high(rate, slo.max_reject),
+        value: rate,
+        threshold: slo.max_reject,
+        detail: format!(
+            "{} rejection(s) / {} submitted",
+            snap.rejected_total(),
+            snap.submitted
+        ),
+    });
+
+    match quality {
+        None => checks.push(HealthCheck {
+            name: "top1_agreement",
+            status: Status::Ok,
+            value: 0.0,
+            threshold: slo.min_agreement,
+            detail: "quality probes disabled".into(),
+        }),
+        Some(w) => {
+            let (status, value) = if w.probes == 0 {
+                (Status::Ok, 0.0)
+            } else {
+                (
+                    grade_low(w.top1_agreement(), slo.min_agreement),
+                    w.top1_agreement(),
+                )
+            };
+            checks.push(HealthCheck {
+                name: "top1_agreement",
+                status,
+                value,
+                threshold: slo.min_agreement,
+                detail: format!(
+                    "{}/{} probes agree in generation {}",
+                    w.agree, w.probes, w.generation
+                ),
+            });
+        }
+    }
+
+    let status = checks
+        .iter()
+        .map(|c| c.status)
+        .max()
+        .unwrap_or(Status::Ok);
+    HealthReport { status, checks }
+}
+
+/// The engine's resident health state: the declared objectives plus
+/// per-check status memory, so only *crossings* land in the event log
+/// (a degraded scrape repeated 100× is one event, not 100).
+pub struct HealthState {
+    slo: SloConfig,
+    last: Mutex<Vec<(&'static str, Status)>>,
+}
+
+impl HealthState {
+    pub fn new(slo: SloConfig) -> HealthState {
+        HealthState { slo, last: Mutex::new(Vec::new()) }
+    }
+
+    pub fn slo(&self) -> &SloConfig {
+        &self.slo
+    }
+
+    /// Evaluate, and push one event per check whose status changed
+    /// since the previous evaluation (or first lands non-ok).
+    pub fn check(
+        &self,
+        snap: &MetricsSnapshot,
+        quality: Option<&QualityWindow>,
+        events: &EventLog,
+    ) -> HealthReport {
+        let report = evaluate(&self.slo, snap, quality);
+        let mut last = self.last.lock().unwrap();
+        for c in &report.checks {
+            match last.iter_mut().find(|(n, _)| *n == c.name) {
+                Some((_, s)) => {
+                    if *s != c.status {
+                        events.push(
+                            "slo",
+                            &format!(
+                                "{} {} -> {}: {}",
+                                c.name,
+                                s.as_str(),
+                                c.status.as_str(),
+                                c.detail
+                            ),
+                        );
+                        *s = c.status;
+                    }
+                }
+                None => {
+                    if c.status != Status::Ok {
+                        events.push(
+                            "slo",
+                            &format!(
+                                "{} enters {}: {}",
+                                c.name,
+                                c.status.as_str(),
+                                c.detail
+                            ),
+                        );
+                    }
+                    last.push((c.name, c.status));
+                }
+            }
+        }
+        report
+    }
+}
+
+/// One structured lifecycle or threshold-crossing event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// monotone sequence number (survives ring eviction)
+    pub seq: u64,
+    /// nanoseconds since the engine epoch
+    pub at_ns: u64,
+    pub kind: String,
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("seq".into(), Json::Num(self.seq as f64)),
+            ("at_ns".into(), Json::Num(self.at_ns as f64)),
+            ("kind".into(), Json::Str(self.kind.clone())),
+            ("detail".into(), Json::Str(self.detail.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Event> {
+        Ok(Event {
+            seq: j.req("seq")?.as_usize()? as u64,
+            at_ns: j.req("at_ns")?.as_f64()? as u64,
+            kind: j.req("kind")?.as_str()?.to_string(),
+            detail: j.req("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Bounded structured event ring: lifecycle events (`engine_start`,
+/// `swap`, `drift`, `swap_failed`, `probe_failure`) and SLO crossings.
+pub struct EventLog {
+    epoch: Instant,
+    seq: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<Event>>,
+}
+
+impl EventLog {
+    pub fn new(capacity: usize, epoch: Instant) -> EventLog {
+        EventLog {
+            epoch,
+            seq: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn push(&self, kind: &str, detail: &str) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let at_ns = self.epoch.elapsed().as_nanos() as u64;
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(Event {
+            seq,
+            at_ns,
+            kind: kind.to_string(),
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Events ever pushed (evicted ones included).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn events(&self) -> Vec<Event> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The `GET /v1/events` wire body.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("capacity".into(), Json::Num(self.capacity as f64)),
+            ("total".into(), Json::Num(self.total() as f64)),
+            (
+                "events".into(),
+                Json::Arr(
+                    self.events().iter().map(|e| e.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn snap(p99: Duration, submitted: usize, rejected: usize) -> MetricsSnapshot {
+        MetricsSnapshot {
+            p99,
+            submitted,
+            rejected_busy: rejected,
+            workers: vec![Default::default()],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grading_brackets_ok_degraded_unhealthy() {
+        let slo = SloConfig {
+            p99_ms: Some(10.0),
+            max_reject: Some(0.1),
+            min_agreement: Some(0.9),
+        };
+        assert!(!slo.is_empty());
+        assert!(SloConfig::default().is_empty());
+
+        // within every objective → ok
+        let window = QualityWindow {
+            generation: 0,
+            probes: 10,
+            agree: 10,
+            mse_sum: 0.0,
+        };
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(5), 100, 2),
+            Some(&window),
+        );
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.http_status(), 200);
+        assert_eq!(r.checks.len(), 4);
+
+        // p99 at 1–2× the ceiling → degraded overall
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(15), 100, 2),
+            Some(&window),
+        );
+        assert_eq!(r.status, Status::Degraded);
+        assert_eq!(r.http_status(), 200);
+
+        // rejection rate past 2× the ceiling → unhealthy, 503
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(5), 100, 30),
+            Some(&window),
+        );
+        assert_eq!(r.status, Status::Unhealthy);
+        assert_eq!(r.http_status(), 503);
+
+        // agreement between half the floor and the floor → degraded;
+        // below half → unhealthy
+        let low = QualityWindow { probes: 10, agree: 6, ..window.clone() };
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(5), 100, 2),
+            Some(&low),
+        );
+        assert_eq!(r.status, Status::Degraded);
+        let bad = QualityWindow { probes: 10, agree: 2, ..window.clone() };
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(5), 100, 2),
+            Some(&bad),
+        );
+        assert_eq!(r.status, Status::Unhealthy);
+
+        // an empty window is ok (nothing measured yet), as is a
+        // quality-disabled deployment
+        let empty = QualityWindow::default();
+        let r = evaluate(
+            &slo,
+            &snap(Duration::from_millis(5), 100, 2),
+            Some(&empty),
+        );
+        assert_eq!(r.status, Status::Ok);
+        let r =
+            evaluate(&slo, &snap(Duration::from_millis(5), 100, 2), None);
+        assert_eq!(r.status, Status::Ok);
+
+        // no declared objectives → everything ok at any load
+        let r = evaluate(
+            &SloConfig::default(),
+            &snap(Duration::from_secs(10), 10, 10),
+            None,
+        );
+        assert_eq!(r.status, Status::Ok);
+    }
+
+    #[test]
+    fn crossings_log_once_not_per_scrape() {
+        let state = HealthState::new(SloConfig {
+            p99_ms: Some(10.0),
+            ..SloConfig::default()
+        });
+        let events = EventLog::new(16, Instant::now());
+        let ok = snap(Duration::from_millis(5), 10, 0);
+        let slow = snap(Duration::from_millis(15), 10, 0);
+
+        state.check(&ok, None, &events);
+        assert_eq!(events.total(), 0, "ok start logs nothing");
+        state.check(&slow, None, &events);
+        state.check(&slow, None, &events);
+        state.check(&slow, None, &events);
+        assert_eq!(events.total(), 1, "one crossing, one event");
+        let e = &events.events()[0];
+        assert_eq!(e.kind, "slo");
+        assert!(e.detail.contains("p99_latency_ms"), "{}", e.detail);
+        assert!(e.detail.contains("ok -> degraded"), "{}", e.detail);
+        state.check(&ok, None, &events);
+        assert_eq!(events.total(), 2, "recovery is a crossing too");
+    }
+
+    #[test]
+    fn event_ring_bounds_and_round_trips() {
+        let log = EventLog::new(4, Instant::now());
+        for i in 0..7 {
+            log.push("swap", &format!("generation {i}"));
+        }
+        assert_eq!(log.total(), 7);
+        let events = log.events();
+        assert_eq!(events.len(), 4, "ring bounded");
+        assert_eq!(events[0].seq, 3, "oldest evicted");
+        assert!(
+            events.windows(2).all(|w| w[0].seq < w[1].seq),
+            "seq monotone"
+        );
+        let j = log.to_json();
+        assert_eq!(j.req("capacity").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.req("total").unwrap().as_usize().unwrap(), 7);
+        let first = &j.req("events").unwrap().as_arr().unwrap()[0];
+        let back = Event::from_json(first).unwrap();
+        assert_eq!(back, events[0]);
+    }
+
+    #[test]
+    fn report_json_carries_per_check_detail() {
+        let slo = SloConfig {
+            max_reject: Some(0.0),
+            ..SloConfig::default()
+        };
+        let r = evaluate(&slo, &snap(Duration::ZERO, 10, 1), None);
+        assert_eq!(r.status, Status::Unhealthy);
+        let j = r.checks_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        let reject = arr
+            .iter()
+            .find(|c| {
+                c.req("name").unwrap().as_str().unwrap()
+                    == "rejection_rate"
+            })
+            .unwrap();
+        assert_eq!(
+            reject.req("status").unwrap().as_str().unwrap(),
+            "unhealthy"
+        );
+        assert_eq!(
+            reject.req("threshold").unwrap().as_f64().unwrap(),
+            0.0
+        );
+    }
+}

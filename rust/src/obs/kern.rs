@@ -14,6 +14,12 @@
 //! same tallies, so consumers must only assert monotonicity, never
 //! absolute values. That is the right shape for Prometheus counters,
 //! which is what these feed.
+//!
+//! Per-engine views must NOT read the globals directly — two engines
+//! in one process (every integration test) would cross-contaminate
+//! each other's GB/s. [`KernelEpoch`] fixes that: snapshot the globals
+//! at engine build and serve `delta()` — the activity since *this*
+//! engine started — instead of process-lifetime totals.
 
 use crate::jsonx::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -90,6 +96,38 @@ pub fn snapshot() -> Vec<KernelStat> {
         .collect()
 }
 
+/// A baseline snapshot of the process-global counters, captured when
+/// an engine is built. `delta()` subtracts it back out, yielding this
+/// engine's own activity even when other engines (earlier tests, a
+/// warm-up run) already bumped the globals.
+#[derive(Clone, Debug)]
+pub struct KernelEpoch {
+    base: Vec<KernelStat>,
+}
+
+impl KernelEpoch {
+    /// Snapshot "now" as the zero point.
+    pub fn capture() -> KernelEpoch {
+        KernelEpoch { base: snapshot() }
+    }
+
+    /// Global tallies minus the epoch baseline, in `WIDTHS` order.
+    /// Saturating per field: a fresh epoch against stale globals can
+    /// never produce a negative (wrapped) count.
+    pub fn delta(&self) -> Vec<KernelStat> {
+        snapshot()
+            .iter()
+            .zip(&self.base)
+            .map(|(now, base)| KernelStat {
+                bits: now.bits,
+                calls: now.calls.saturating_sub(base.calls),
+                bytes: now.bytes.saturating_sub(base.bytes),
+                nanos: now.nanos.saturating_sub(base.nanos),
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +150,35 @@ mod tests {
         let total_before: u64 = before.iter().map(|s| s.bytes).sum();
         let total_after: u64 = after.iter().map(|s| s.bytes).sum();
         assert_eq!(total_after, total_before + 2048);
+    }
+
+    #[test]
+    fn epoch_isolates_one_engines_activity_from_the_globals() {
+        // Other unit tests in this binary hit the same globals
+        // concurrently, so assert interleaving-robust inequalities:
+        // traffic recorded BEFORE capture must be excluded from the
+        // delta, traffic recorded AFTER must be included.
+        let i2 = WIDTHS.iter().position(|&w| w == 2).unwrap();
+        let g0 = snapshot();
+        record(2, 1_000_000, Duration::from_micros(4)); // "engine A"
+        let epoch = KernelEpoch::capture(); // "engine B" built here
+        record(2, 512, Duration::from_micros(1)); // B's own traffic
+        let d = epoch.delta();
+        let g1 = snapshot();
+        // B sees its own call…
+        assert!(d[i2].calls >= 1);
+        assert!(d[i2].bytes >= 512);
+        // …but not A's megabyte: the pre-capture record is subtracted
+        // out, whatever concurrent traffic interleaved
+        assert!(
+            d[i2].bytes + 1_000_000 <= g1[i2].bytes - g0[i2].bytes,
+            "pre-epoch traffic leaked into the per-engine delta"
+        );
+        // shape is stable: all four widths in WIDTHS order
+        assert_eq!(
+            d.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            WIDTHS.to_vec()
+        );
     }
 
     #[test]

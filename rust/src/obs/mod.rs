@@ -15,9 +15,21 @@
 //! each expert's live hit count with its allocated bit-width and wire
 //! bytes, in a byte-stable jsonx schema a future `mopeq search
 //! --traffic` can consume directly.
+//!
+//! PR 10 adds the quality-and-health plane: [`quality`] shadows a
+//! 1-in-N sample of completed requests onto the retained dense
+//! reference and attributes logit error per (layer, expert)
+//! (`GET /v1/quality`), [`health`] grades declared SLOs into a
+//! readiness report and a bounded lifecycle event log (`GET /healthz`,
+//! `GET /v1/events`), and [`timeline`] renders traces, probes, events,
+//! and counters as Chrome Trace Event JSON for Perfetto
+//! (`GET /v1/timeline`).
 
+pub mod health;
 pub mod kern;
 pub mod log;
 pub mod prom;
+pub mod quality;
 pub mod routing;
+pub mod timeline;
 pub mod trace;

@@ -16,7 +16,10 @@
 use crate::engine::metrics::LATENCY_BUCKETS;
 use crate::engine::MetricsSnapshot;
 use crate::obs::kern::KernelStat;
+use crate::obs::quality::QualitySnapshot;
 use crate::obs::routing::TrafficSnapshot;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
 use std::fmt::Write;
 use std::time::Duration;
 
@@ -63,6 +66,7 @@ pub fn render(
     snap: &MetricsSnapshot,
     traffic: Option<&TrafficSnapshot>,
     kernels: &[KernelStat],
+    quality: Option<&QualitySnapshot>,
 ) -> String {
     let mut e = Exposition { out: String::new() };
 
@@ -421,7 +425,210 @@ pub fn render(
         );
     }
 
+    if let Some(q) = quality {
+        e.family(
+            "mopeq_quality_probes_total",
+            "counter",
+            "Shadow probes completed against the dense reference.",
+        );
+        e.sample("mopeq_quality_probes_total", &[], q.probed as f64);
+        e.family(
+            "mopeq_quality_dropped_total",
+            "counter",
+            "Sampled requests dropped because the probe queue was full.",
+        );
+        e.sample("mopeq_quality_dropped_total", &[], q.dropped as f64);
+        e.family(
+            "mopeq_quality_failures_total",
+            "counter",
+            "Probes that failed to execute on the dense reference.",
+        );
+        e.sample("mopeq_quality_failures_total", &[], q.failed as f64);
+        e.family(
+            "mopeq_quality_stale_total",
+            "counter",
+            "Probes landing after their weight generation was swapped out.",
+        );
+        e.sample("mopeq_quality_stale_total", &[], q.stale as f64);
+        e.family(
+            "mopeq_quality_generation",
+            "gauge",
+            "Weight generation of the live quality window.",
+        );
+        e.sample(
+            "mopeq_quality_generation",
+            &[],
+            q.generation as f64,
+        );
+        e.family(
+            "mopeq_quality_window_probes",
+            "gauge",
+            "Probes folded into the live generation's window.",
+        );
+        e.sample(
+            "mopeq_quality_window_probes",
+            &[],
+            q.window.probes as f64,
+        );
+        e.family(
+            "mopeq_quality_top1_agreement",
+            "gauge",
+            "Share of window probes whose dense top-1 matched serving.",
+        );
+        e.sample(
+            "mopeq_quality_top1_agreement",
+            &[],
+            q.window.top1_agreement(),
+        );
+        e.family(
+            "mopeq_quality_mse_mean",
+            "gauge",
+            "Mean served-vs-dense logit MSE over the window.",
+        );
+        e.sample("mopeq_quality_mse_mean", &[], q.window.mse_mean());
+        e.family(
+            "mopeq_quality_expert_error",
+            "gauge",
+            "Cumulative attributed logit error per (layer, expert).",
+        );
+        for (l, row) in q.grid.iter().enumerate() {
+            for (x, &err) in row.iter().enumerate() {
+                e.sample(
+                    "mopeq_quality_expert_error",
+                    &[
+                        ("layer", l.to_string()),
+                        ("expert", x.to_string()),
+                    ],
+                    err,
+                );
+            }
+        }
+    }
+
     e.out
+}
+
+// --- exposition lint ---------------------------------------------------
+
+/// Structural lint for one scrape body — the checks every consumer of
+/// this module's output relies on, reusable by integration tests over
+/// the wire:
+///
+/// - every sample's family has exactly one `# TYPE` declaration
+///   (histogram `_bucket`/`_sum`/`_count` suffixes resolve to their
+///   base family);
+/// - no duplicate series (same name + same label set twice);
+/// - every sample value parses as a float;
+/// - counter families end in `_total` (histograms excepted: their
+///   suffixed samples are cumulative by construction);
+/// - every histogram's `le` ladder is cumulative and closed by `+Inf`.
+pub fn lint(body: &str) -> Result<()> {
+    let mut types: HashMap<String, String> = HashMap::new();
+    for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let mut it = line.split_whitespace().skip(2);
+        let (Some(name), Some(kind)) = (it.next(), it.next()) else {
+            bail!("malformed TYPE line: {line:?}");
+        };
+        if kind == "counter" && !name.ends_with("_total") {
+            bail!("counter {name} lacks the _total suffix");
+        }
+        if types.insert(name.into(), kind.into()).is_some() {
+            bail!("family {name} declared TYPE twice");
+        }
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut ladders: HashMap<String, Vec<(f64, f64)>> = HashMap::new();
+    for line in body
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.is_empty())
+    {
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            bail!("sample without a value: {line:?}");
+        };
+        let Ok(v) = value.parse::<f64>() else {
+            bail!("unparseable value in {line:?}");
+        };
+        if !seen.insert(series.to_string()) {
+            bail!("duplicate series {series:?}");
+        }
+        let name = series
+            .split(['{', ' '])
+            .next()
+            .expect("split yields at least one piece");
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf).filter(|base| {
+                    types.get(*base).map(String::as_str)
+                        == Some("histogram")
+                })
+            })
+            .unwrap_or(name);
+        if !types.contains_key(family) {
+            bail!("sample {name} has no TYPE declaration");
+        }
+        if name.ends_with("_bucket") {
+            let le = match series
+                .split("le=\"")
+                .nth(1)
+                .and_then(|rest| rest.split('"').next())
+            {
+                Some("+Inf") => f64::INFINITY,
+                Some(raw) => raw.parse().map_err(|_| {
+                    anyhow::anyhow!("bad le bound in {series:?}")
+                })?,
+                None => bail!("bucket sample {series:?} lacks an le label"),
+            };
+            ladders.entry(family.into()).or_default().push((le, v));
+        }
+    }
+    for (family, ladder) in &ladders {
+        if ladder.last().map(|(le, _)| *le) != Some(f64::INFINITY) {
+            bail!("histogram {family} ladder is not closed by +Inf");
+        }
+        if ladder.windows(2).any(|w| w[0].0 >= w[1].0 || w[0].1 > w[1].1)
+        {
+            bail!(
+                "histogram {family} buckets are not cumulative over an \
+                 increasing ladder"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Lint two consecutive scrapes of the same target: each passes
+/// [`lint`] alone, and every `_total` counter series present in both is
+/// monotone non-decreasing from the first to the second.
+pub fn lint_pair(first: &str, second: &str) -> Result<()> {
+    lint(first)?;
+    lint(second)?;
+    let totals = |body: &str| -> HashMap<String, f64> {
+        body.lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .filter_map(|l| l.rsplit_once(' '))
+            .filter(|(series, _)| {
+                series
+                    .split(['{', ' '])
+                    .next()
+                    .is_some_and(|n| n.ends_with("_total"))
+            })
+            .filter_map(|(series, v)| {
+                v.parse().ok().map(|v| (series.to_string(), v))
+            })
+            .collect()
+    };
+    let before = totals(first);
+    for (series, after) in totals(second) {
+        if let Some(&b) = before.get(&series) {
+            if after < b {
+                bail!(
+                    "counter {series} went backwards: {b} -> {after}"
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -445,7 +652,7 @@ mod tests {
             bytes: 4096,
             nanos: 2000,
         }];
-        let body = render(&snap, None, &kernels);
+        let body = render(&snap, None, &kernels, None);
         assert!(body.ends_with('\n'));
         let mut seen = HashSet::new();
         for line in sample_lines(&body) {
@@ -464,7 +671,7 @@ mod tests {
 
     #[test]
     fn type_and_help_appear_once_per_family() {
-        let body = render(&MetricsSnapshot::default(), None, &[]);
+        let body = render(&MetricsSnapshot::default(), None, &[], None);
         let mut typed = HashSet::new();
         for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
             let name = line.split_whitespace().nth(2).unwrap();
@@ -507,7 +714,7 @@ mod tests {
             }),
             ..MetricsSnapshot::default()
         };
-        let body = render(&snap, None, &[]);
+        let body = render(&snap, None, &[], None);
         // demand_hit + prefetch_hit == hits: labels partition accesses
         let line = |series: &str| -> f64 {
             body.lines()
@@ -533,13 +740,13 @@ mod tests {
         assert_eq!(line("mopeq_store_capacity_bytes"), 262_144.0);
         assert_eq!(line("mopeq_store_resident_experts"), 60.0);
         // absent store renders no store families at all
-        let none = render(&MetricsSnapshot::default(), None, &[]);
+        let none = render(&MetricsSnapshot::default(), None, &[], None);
         assert!(!none.contains("mopeq_store_"));
     }
 
     #[test]
     fn counters_carry_the_total_suffix_and_seconds_are_base_unit() {
-        let body = render(&MetricsSnapshot::default(), None, &[]);
+        let body = render(&MetricsSnapshot::default(), None, &[], None);
         for line in body.lines().filter(|l| l.starts_with("# TYPE ")) {
             let mut it = line.split_whitespace().skip(2);
             let (name, kind) = (it.next().unwrap(), it.next().unwrap());
@@ -555,7 +762,7 @@ mod tests {
             latency_sum: Duration::from_micros(1500),
             ..MetricsSnapshot::default()
         };
-        let body = render(&snap, None, &[]);
+        let body = render(&snap, None, &[], None);
         let line = body
             .lines()
             .find(|l| l.starts_with("mopeq_request_duration_seconds_sum"))
@@ -575,7 +782,7 @@ mod tests {
             adapt_last_drift: 0.25,
             ..MetricsSnapshot::default()
         };
-        let body = render(&snap, None, &[]);
+        let body = render(&snap, None, &[], None);
         let bucket_lines: Vec<&str> = body
             .lines()
             .filter(|l| {
@@ -606,5 +813,92 @@ mod tests {
         assert!(body.contains("mopeq_adapt_drift 0.25\n"));
         // and the old quantile-gauge family is gone
         assert!(!body.contains("mopeq_request_latency_seconds"));
+    }
+
+    #[test]
+    fn quality_families_render_and_lint_clean() {
+        use crate::obs::quality::{QualitySnapshot, QualityWindow};
+        let q = QualitySnapshot {
+            variant: "dsvl2_tiny".into(),
+            sample: 4,
+            generation: 2,
+            probed: 10,
+            dropped: 1,
+            failed: 0,
+            stale: 2,
+            window: QualityWindow {
+                generation: 2,
+                probes: 8,
+                agree: 6,
+                mse_sum: 0.4,
+            },
+            history: Vec::new(),
+            grid: vec![vec![0.25, 0.15], vec![0.4, 0.0]],
+            bits: None,
+            probes: Vec::new(),
+        };
+        let body =
+            render(&MetricsSnapshot::default(), None, &[], Some(&q));
+        lint(&body).expect("quality exposition lints clean");
+        assert!(body.contains("mopeq_quality_probes_total 10\n"));
+        assert!(body.contains("mopeq_quality_dropped_total 1\n"));
+        assert!(body.contains("mopeq_quality_stale_total 2\n"));
+        assert!(body.contains("mopeq_quality_window_probes 8\n"));
+        assert!(body.contains("mopeq_quality_top1_agreement 0.75\n"));
+        assert!(body.contains("mopeq_quality_mse_mean 0.05\n"));
+        assert!(body.contains(
+            "mopeq_quality_expert_error{layer=\"1\",expert=\"0\"} 0.4\n"
+        ));
+        // without a quality plane, no quality families at all
+        let none = render(&MetricsSnapshot::default(), None, &[], None);
+        assert!(!none.contains("mopeq_quality_"));
+    }
+
+    #[test]
+    fn lint_accepts_the_real_exposition_and_rejects_structural_breaks() {
+        let body = render(&MetricsSnapshot::default(), None, &[], None);
+        lint(&body).expect("the renderer's own output lints clean");
+
+        // an undeclared sample
+        let err = lint("orphan_metric 1\n").unwrap_err();
+        assert!(err.to_string().contains("no TYPE"), "{err}");
+        // a duplicate series
+        let dup = "# TYPE x gauge\n# HELP x h\nx 1\nx 2\n";
+        assert!(lint(dup).unwrap_err().to_string().contains("duplicate"));
+        // a counter without _total
+        let bare = "# TYPE hits counter\nhits 3\n";
+        assert!(lint(bare).unwrap_err().to_string().contains("_total"));
+        // a double TYPE declaration
+        let twice = "# TYPE x gauge\n# TYPE x gauge\nx 1\n";
+        assert!(lint(twice).unwrap_err().to_string().contains("twice"));
+        // a histogram ladder missing its +Inf closure
+        let open = "# TYPE h histogram\n\
+                    h_bucket{le=\"0.1\"} 1\n\
+                    h_bucket{le=\"0.5\"} 2\n\
+                    h_sum 0.2\nh_count 2\n";
+        assert!(lint(open).unwrap_err().to_string().contains("+Inf"));
+        // a non-cumulative ladder
+        let decreasing = "# TYPE h histogram\n\
+                          h_bucket{le=\"0.1\"} 5\n\
+                          h_bucket{le=\"+Inf\"} 2\n\
+                          h_sum 0.2\nh_count 2\n";
+        assert!(lint(decreasing)
+            .unwrap_err()
+            .to_string()
+            .contains("cumulative"));
+    }
+
+    #[test]
+    fn lint_pair_catches_counter_regressions() {
+        let a = "# TYPE hits_total counter\nhits_total 5\n";
+        let b = "# TYPE hits_total counter\nhits_total 9\n";
+        lint_pair(a, b).expect("monotone counters pass");
+        let err = lint_pair(b, a).unwrap_err();
+        assert!(err.to_string().contains("backwards"), "{err}");
+        // series only in one scrape are fine (e.g. a store family
+        // appearing after the store spins up)
+        let c = "# TYPE hits_total counter\n# TYPE new_total counter\n\
+                 hits_total 9\nnew_total 1\n";
+        lint_pair(b, c).expect("new counters may appear");
     }
 }

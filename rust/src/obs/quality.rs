@@ -1,0 +1,719 @@
+//! Quality observability: shadow-reference probes measuring how much
+//! accuracy the live precision map actually gives up, on real traffic.
+//!
+//! A `--quality-sample N` engine samples 1-in-N completed requests and
+//! re-executes them on the **dense f32 reference** (the weights a
+//! reloadable engine already retains for repacking) in a background
+//! probe thread. Each probe yields the logit MSE between the served
+//! (packed) and reference rows, top-1 agreement, and a per-(layer,
+//! expert) error attribution folded into a preallocated atomic grid
+//! mirroring [`routing`](crate::obs::routing). Quality is windowed per
+//! weight generation, so each hot-swap's delta is directly readable:
+//! [`QualityStats::rotate`] closes the live window the moment a swap
+//! lands.
+//!
+//! The serving path never blocks on probes: workers hand jobs through a
+//! bounded `try_send` channel ([`QualityTap`]) — a full channel drops
+//! the probe and counts it, it never backpressures a reply.
+
+use crate::data::Sample;
+use crate::jsonx::Json;
+use crate::Result;
+use anyhow::bail;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+/// Bound on the retained per-probe records (newest kept).
+pub const RECORD_CAPACITY: usize = 256;
+/// Bound on closed per-generation windows (newest kept).
+pub const HISTORY_CAPACITY: usize = 8;
+
+/// One sampled request shipped from a serving worker to the probe
+/// thread: the sample itself plus what the packed path answered.
+pub struct ProbeJob {
+    pub sample: Sample,
+    /// served logits row for this sample (packed path)
+    pub logits: Vec<f32>,
+    /// served top-1 prediction
+    pub pred: usize,
+    /// weight generation the request was served on
+    pub generation: u64,
+}
+
+/// Clonable worker-side handle: the sampling decision plus a
+/// never-blocking hand-off onto the probe channel.
+#[derive(Clone)]
+pub struct QualityTap {
+    stats: Arc<QualityStats>,
+    tx: SyncSender<ProbeJob>,
+}
+
+impl QualityTap {
+    pub fn new(
+        stats: Arc<QualityStats>,
+        tx: SyncSender<ProbeJob>,
+    ) -> QualityTap {
+        QualityTap { stats, tx }
+    }
+
+    /// The 1-in-N sampling decision, global across workers — with
+    /// sample rate N, exactly every N-th completed request probes.
+    pub fn sampled(&self) -> bool {
+        self.stats.tick()
+    }
+
+    /// Hand a sampled request to the probe thread. Never blocks: a
+    /// full (or closed) channel drops the probe and counts the drop.
+    pub fn send(&self, job: ProbeJob) {
+        match self.tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_))
+            | Err(TrySendError::Disconnected(_)) => {
+                self.stats.count_dropped()
+            }
+        }
+    }
+}
+
+/// Per-generation quality window: probes folded in while this weight
+/// generation was live.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QualityWindow {
+    pub generation: u64,
+    pub probes: u64,
+    /// probes whose dense-reference top-1 matched the served top-1
+    pub agree: u64,
+    pub mse_sum: f64,
+}
+
+impl QualityWindow {
+    pub fn top1_agreement(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.agree as f64 / self.probes as f64
+        }
+    }
+
+    pub fn mse_mean(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.mse_sum / self.probes as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("generation".into(), Json::Num(self.generation as f64)),
+            ("probes".into(), Json::Num(self.probes as f64)),
+            ("agree".into(), Json::Num(self.agree as f64)),
+            (
+                "top1_agreement".into(),
+                Json::Num(self.top1_agreement()),
+            ),
+            ("mse_sum".into(), Json::Num(self.mse_sum)),
+            ("mse_mean".into(), Json::Num(self.mse_mean())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QualityWindow> {
+        Ok(QualityWindow {
+            generation: j.req("generation")?.as_usize()? as u64,
+            probes: j.req("probes")?.as_usize()? as u64,
+            agree: j.req("agree")?.as_usize()? as u64,
+            mse_sum: j.req("mse_sum")?.as_f64()?,
+        })
+    }
+}
+
+/// One completed probe: enough to match it back to its sample (the
+/// token fingerprint) and to place it on the timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeRecord {
+    /// FNV-1a fingerprint of the sample's tokens ([`sample_key`])
+    pub key: u64,
+    pub task: String,
+    /// weight generation the request was served on
+    pub generation: u64,
+    /// logit MSE between the served and dense-reference rows
+    pub mse: f64,
+    /// dense-reference top-1 == served top-1
+    pub agree: bool,
+    /// probe start, nanoseconds since engine epoch
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl ProbeRecord {
+    /// `key` travels as a 16-hex-digit string: an arbitrary u64 hash
+    /// does not survive an f64 JSON number.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("key".into(), Json::Str(format!("{:016x}", self.key))),
+            ("task".into(), Json::Str(self.task.clone())),
+            ("generation".into(), Json::Num(self.generation as f64)),
+            ("mse".into(), Json::Num(self.mse)),
+            ("agree".into(), Json::Bool(self.agree)),
+            ("start_ns".into(), Json::Num(self.start_ns as f64)),
+            ("dur_ns".into(), Json::Num(self.dur_ns as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ProbeRecord> {
+        let hex = j.req("key")?.as_str()?;
+        let Ok(key) = u64::from_str_radix(hex, 16) else {
+            bail!("bad probe key `{hex}` (16 hex digits)");
+        };
+        Ok(ProbeRecord {
+            key,
+            task: j.req("task")?.as_str()?.to_string(),
+            generation: j.req("generation")?.as_usize()? as u64,
+            mse: j.req("mse")?.as_f64()?,
+            agree: j.req("agree")?.as_bool()?,
+            start_ns: j.req("start_ns")?.as_f64()? as u64,
+            dur_ns: j.req("dur_ns")?.as_f64()? as u64,
+        })
+    }
+}
+
+struct Windows {
+    current: QualityWindow,
+    closed: VecDeque<QualityWindow>,
+}
+
+/// The quality telemetry plane: sampling counter, per-generation
+/// windows, cumulative per-(layer, expert) error grid, and a bounded
+/// ring of recent probe records. The grid is `AtomicU64` f64 bit
+/// patterns with a single writer (the probe thread), so readers never
+/// lock and never tear.
+pub struct QualityStats {
+    sample: usize,
+    ticks: AtomicU64,
+    probed: AtomicU64,
+    dropped: AtomicU64,
+    failed: AtomicU64,
+    stale: AtomicU64,
+    grid: Vec<Vec<AtomicU64>>,
+    windows: Mutex<Windows>,
+    records: Mutex<VecDeque<ProbeRecord>>,
+}
+
+impl QualityStats {
+    pub fn new(
+        moe_layers: usize,
+        experts: usize,
+        sample: usize,
+    ) -> QualityStats {
+        QualityStats {
+            sample: sample.max(1),
+            ticks: AtomicU64::new(0),
+            probed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            grid: (0..moe_layers)
+                .map(|_| {
+                    (0..experts).map(|_| AtomicU64::new(0)).collect()
+                })
+                .collect(),
+            windows: Mutex::new(Windows {
+                current: QualityWindow::default(),
+                closed: VecDeque::new(),
+            }),
+            records: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn sample(&self) -> usize {
+        self.sample
+    }
+
+    /// Advance the global completed-request counter; true on every
+    /// N-th call (the first call samples, so short tests probe).
+    pub fn tick(&self) -> bool {
+        self.ticks.fetch_add(1, Ordering::Relaxed)
+            % self.sample as u64
+            == 0
+    }
+
+    pub fn count_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one completed probe in: the cumulative error grid always
+    /// takes the attribution; the live window takes it only when the
+    /// probe's generation is still the live one (a probe racing a
+    /// hot-swap is counted `stale` instead of polluting the new map's
+    /// window).
+    pub fn record_probe(
+        &self,
+        rec: ProbeRecord,
+        contributions: &[Vec<f64>],
+    ) {
+        for (row, layer) in self.grid.iter().zip(contributions) {
+            for (cell, &c) in row.iter().zip(layer) {
+                if c != 0.0 {
+                    let cur = f64::from_bits(cell.load(Ordering::Relaxed));
+                    cell.store((cur + c).to_bits(), Ordering::Relaxed);
+                }
+            }
+        }
+        {
+            let mut w = self.windows.lock().unwrap();
+            if rec.generation == w.current.generation {
+                w.current.probes += 1;
+                w.current.agree += rec.agree as u64;
+                w.current.mse_sum += rec.mse;
+            } else {
+                self.stale.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let mut ring = self.records.lock().unwrap();
+        if ring.len() == RECORD_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+        self.probed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Close the live window and open a fresh one for `generation` —
+    /// called the moment a hot-swap lands, so each generation's
+    /// agreement/MSE reads separately.
+    pub fn rotate(&self, generation: u64) {
+        let mut w = self.windows.lock().unwrap();
+        let done = std::mem::replace(
+            &mut w.current,
+            QualityWindow { generation, ..QualityWindow::default() },
+        );
+        w.closed.push_back(done);
+        if w.closed.len() > HISTORY_CAPACITY {
+            w.closed.pop_front();
+        }
+    }
+
+    pub fn probed(&self) -> u64 {
+        self.probed.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn stale(&self) -> u64 {
+        self.stale.load(Ordering::Relaxed)
+    }
+
+    /// Plain copy of the cumulative error grid.
+    pub fn grid(&self) -> Vec<Vec<f64>> {
+        self.grid
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The live per-generation window.
+    pub fn window(&self) -> QualityWindow {
+        self.windows.lock().unwrap().current.clone()
+    }
+
+    pub fn snapshot(
+        &self,
+        variant: &str,
+        bits: Option<Vec<Vec<u8>>>,
+    ) -> QualitySnapshot {
+        let (window, history, generation) = {
+            let w = self.windows.lock().unwrap();
+            (
+                w.current.clone(),
+                w.closed.iter().cloned().collect(),
+                w.current.generation,
+            )
+        };
+        QualitySnapshot {
+            variant: variant.to_string(),
+            sample: self.sample,
+            generation,
+            probed: self.probed(),
+            dropped: self.dropped(),
+            failed: self.failed(),
+            stale: self.stale(),
+            window,
+            history,
+            grid: self.grid(),
+            bits,
+            probes: self
+                .records
+                .lock()
+                .unwrap()
+                .iter()
+                .cloned()
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time export of the quality plane — the `GET /v1/quality`
+/// wire body, byte-stable like the other telemetry schemas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QualitySnapshot {
+    pub variant: String,
+    /// the 1-in-N sampling rate
+    pub sample: usize,
+    /// live weight generation (the current window's)
+    pub generation: u64,
+    pub probed: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    pub stale: u64,
+    /// the live generation's window
+    pub window: QualityWindow,
+    /// closed windows of earlier generations, oldest first
+    pub history: Vec<QualityWindow>,
+    /// cumulative `[moe_layer][expert]` error contribution
+    pub grid: Vec<Vec<f64>>,
+    /// allocated width per expert, when serving a precision map
+    pub bits: Option<Vec<Vec<u8>>>,
+    /// recent probe records, oldest first
+    pub probes: Vec<ProbeRecord>,
+}
+
+impl QualitySnapshot {
+    /// Σ over one grid row — every row sums to the total probed MSE
+    /// (each layer receives the full per-probe MSE, split over its
+    /// experts by routed-token share).
+    pub fn row_sums(&self) -> Vec<f64> {
+        self.grid.iter().map(|row| row.iter().sum()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("sample".into(), Json::Num(self.sample as f64)),
+            ("generation".into(), Json::Num(self.generation as f64)),
+            ("probed".into(), Json::Num(self.probed as f64)),
+            ("dropped".into(), Json::Num(self.dropped as f64)),
+            ("failed".into(), Json::Num(self.failed as f64)),
+            ("stale".into(), Json::Num(self.stale as f64)),
+            ("window".into(), self.window.to_json()),
+            (
+                "history".into(),
+                Json::Arr(
+                    self.history.iter().map(|w| w.to_json()).collect(),
+                ),
+            ),
+            (
+                "grid".into(),
+                Json::Arr(
+                    self.grid
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(
+                                row.iter()
+                                    .map(|&v| Json::Num(v))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "bits".into(),
+                match &self.bits {
+                    None => Json::Null,
+                    Some(bits) => Json::Arr(
+                        bits.iter()
+                            .map(|row| {
+                                Json::Arr(
+                                    row.iter()
+                                        .map(|&b| Json::Num(b as f64))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                },
+            ),
+            (
+                "probes".into(),
+                Json::Arr(
+                    self.probes.iter().map(|r| r.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QualitySnapshot> {
+        Ok(QualitySnapshot {
+            variant: j.req("variant")?.as_str()?.to_string(),
+            sample: j.req("sample")?.as_usize()?,
+            generation: j.req("generation")?.as_usize()? as u64,
+            probed: j.req("probed")?.as_usize()? as u64,
+            dropped: j.req("dropped")?.as_usize()? as u64,
+            failed: j.req("failed")?.as_usize()? as u64,
+            stale: j.req("stale")?.as_usize()? as u64,
+            window: QualityWindow::from_json(j.req("window")?)?,
+            history: j
+                .req("history")?
+                .as_arr()?
+                .iter()
+                .map(QualityWindow::from_json)
+                .collect::<Result<_>>()?,
+            grid: j
+                .req("grid")?
+                .as_arr()?
+                .iter()
+                .map(|row| {
+                    row.as_arr()?.iter().map(|c| c.as_f64()).collect()
+                })
+                .collect::<Result<_>>()?,
+            bits: match j.req("bits")? {
+                Json::Null => None,
+                b => Some(
+                    b.as_arr()?
+                        .iter()
+                        .map(|row| {
+                            row.as_arr()?
+                                .iter()
+                                .map(|c| Ok(c.as_usize()? as u8))
+                                .collect()
+                        })
+                        .collect::<Result<_>>()?,
+                ),
+            },
+            probes: j
+                .req("probes")?
+                .as_arr()?
+                .iter()
+                .map(ProbeRecord::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Deterministic f64 MSE between the served and dense-reference logit
+/// rows, accumulated in index order — an offline recomputation over
+/// the same inputs is **bit-identical**, which is what the probe test
+/// asserts.
+pub fn probe_mse(served: &[f32], dense: &[f32]) -> f64 {
+    debug_assert_eq!(served.len(), dense.len());
+    let mut sum = 0.0f64;
+    for (a, b) in served.iter().zip(dense) {
+        let d = *a as f64 - *b as f64;
+        sum += d * d;
+    }
+    sum / served.len().max(1) as f64
+}
+
+/// FNV-1a fingerprint of a sample's tokens — how a probe record points
+/// back at the request it measured without the wire carrying tokens.
+pub fn sample_key(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Distribute one probe's MSE across the routing grid: each MoE layer
+/// receives the full MSE, split over its experts proportional to the
+/// reference run's routed-token counts — so **every grid row sums to
+/// the total probed MSE**.
+pub fn attribute(mse: f64, counts: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    counts
+        .iter()
+        .map(|row| {
+            let total: f64 = row.iter().map(|&c| c as f64).sum();
+            if total > 0.0 {
+                row.iter().map(|&c| mse * c as f64 / total).collect()
+            } else {
+                vec![0.0; row.len()]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(generation: u64, mse: f64, agree: bool) -> ProbeRecord {
+        ProbeRecord {
+            key: 0xdead_beef_0123_4567,
+            task: "BLINK".into(),
+            generation,
+            mse,
+            agree,
+            start_ns: 1000,
+            dur_ns: 500,
+        }
+    }
+
+    #[test]
+    fn tick_samples_one_in_n_starting_immediately() {
+        let q = QualityStats::new(1, 1, 4);
+        let hits: Vec<bool> = (0..12).map(|_| q.tick()).collect();
+        let want: Vec<bool> =
+            (0..12).map(|i| i % 4 == 0).collect();
+        assert_eq!(hits, want);
+        // sample 0 is clamped to 1 (probe everything), never div-by-0
+        let all = QualityStats::new(1, 1, 0);
+        assert!(all.tick() && all.tick());
+    }
+
+    #[test]
+    fn grid_rows_each_sum_to_total_mse_and_windows_rotate() {
+        let q = QualityStats::new(2, 3, 1);
+        let counts =
+            vec![vec![2.0f32, 1.0, 1.0], vec![0.0, 4.0, 0.0]];
+        q.record_probe(rec(0, 0.5, true), &attribute(0.5, &counts));
+        q.record_probe(rec(0, 0.25, false), &attribute(0.25, &counts));
+        let sums = q
+            .snapshot("t", None)
+            .row_sums();
+        for s in &sums {
+            assert!((s - 0.75).abs() < 1e-12, "row sum {s} != 0.75");
+        }
+        let w = q.window();
+        assert_eq!((w.generation, w.probes, w.agree), (0, 2, 1));
+        assert!((w.top1_agreement() - 0.5).abs() < 1e-12);
+        assert!((w.mse_mean() - 0.375).abs() < 1e-12);
+
+        // swap: window closes, a fresh generation-1 window opens, and
+        // a probe raced from the old generation counts stale
+        q.rotate(1);
+        let w = q.window();
+        assert_eq!((w.generation, w.probes), (1, 0));
+        q.record_probe(rec(0, 9.0, true), &attribute(9.0, &counts));
+        assert_eq!(q.stale(), 1);
+        assert_eq!(q.window().probes, 0, "stale probe stays out");
+        q.record_probe(rec(1, 1.0, true), &attribute(1.0, &counts));
+        let snap = q.snapshot("t", None);
+        assert_eq!(snap.generation, 1);
+        assert_eq!(snap.window.probes, 1);
+        assert_eq!(snap.history.len(), 1);
+        assert_eq!(snap.history[0].generation, 0);
+        assert_eq!(snap.history[0].probes, 2);
+        // the grid is cumulative across generations (incl. stale)
+        for s in snap.row_sums() {
+            assert!((s - 10.75).abs() < 1e-12);
+        }
+        assert_eq!(snap.probed, 4);
+    }
+
+    #[test]
+    fn record_ring_and_history_are_bounded() {
+        let q = QualityStats::new(1, 1, 1);
+        let counts = vec![vec![1.0f32]];
+        for i in 0..(RECORD_CAPACITY + 10) {
+            q.record_probe(
+                rec(0, i as f64, true),
+                &attribute(i as f64, &counts),
+            );
+        }
+        let snap = q.snapshot("t", None);
+        assert_eq!(snap.probes.len(), RECORD_CAPACITY);
+        assert_eq!(snap.probes[0].mse, 10.0, "oldest evicted first");
+        for g in 1..=(HISTORY_CAPACITY + 3) {
+            q.rotate(g as u64);
+        }
+        assert_eq!(
+            q.snapshot("t", None).history.len(),
+            HISTORY_CAPACITY
+        );
+    }
+
+    #[test]
+    fn probe_mse_is_index_order_deterministic() {
+        let a = vec![1.0f32, -2.5, 3.25, 0.0];
+        let b = vec![1.5f32, -2.0, 3.25, -1.0];
+        let m1 = probe_mse(&a, &b);
+        let m2 = probe_mse(&a, &b);
+        assert_eq!(m1.to_bits(), m2.to_bits());
+        assert!((m1 - (0.25 + 0.25 + 0.0 + 1.0) / 4.0).abs() < 1e-12);
+        assert_eq!(probe_mse(&a, &a), 0.0);
+        assert_eq!(probe_mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sample_keys_separate_nearby_token_streams() {
+        let a = sample_key(&[1, 2, 3]);
+        assert_eq!(a, sample_key(&[1, 2, 3]), "stable");
+        assert_ne!(a, sample_key(&[1, 2, 4]));
+        assert_ne!(a, sample_key(&[3, 2, 1]));
+        assert_ne!(sample_key(&[]), sample_key(&[0]));
+    }
+
+    #[test]
+    fn attribution_handles_unrouted_layers() {
+        let grid = attribute(
+            1.0,
+            &[vec![1.0f32, 3.0], vec![0.0, 0.0]],
+        );
+        assert!((grid[0][0] - 0.25).abs() < 1e-12);
+        assert!((grid[0][1] - 0.75).abs() < 1e-12);
+        assert_eq!(grid[1], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn snapshot_json_round_trip_is_byte_stable() {
+        let q = QualityStats::new(2, 2, 4);
+        let counts = vec![vec![1.0f32, 2.0], vec![3.0, 0.0]];
+        q.record_probe(
+            rec(0, 0.125, true),
+            &attribute(0.125, &counts),
+        );
+        q.record_probe(
+            rec(0, 0.0625, false),
+            &attribute(0.0625, &counts),
+        );
+        q.rotate(1);
+        q.count_dropped();
+        for snap in [
+            q.snapshot("dsvl2_tiny", Some(vec![vec![2, 4], vec![3, 3]])),
+            q.snapshot("dsvl2_tiny", None),
+        ] {
+            let wire = snap.to_json().to_string();
+            let back =
+                QualitySnapshot::from_json(&Json::parse(&wire).unwrap())
+                    .unwrap();
+            assert_eq!(back, snap);
+            assert_eq!(back.to_json().to_string(), wire);
+        }
+        let wire = q.snapshot("t", None).to_json().to_string();
+        assert!(wire.contains("\"bits\":null"));
+    }
+
+    #[test]
+    fn probe_record_key_survives_the_wire_as_hex() {
+        let r = rec(3, 1.5e-7, false);
+        let wire = r.to_json().to_string();
+        assert!(wire.contains("\"key\":\"deadbeef01234567\""));
+        let back =
+            ProbeRecord::from_json(&Json::parse(&wire).unwrap())
+                .unwrap();
+        assert_eq!(back, r);
+        assert!(ProbeRecord::from_json(
+            &Json::parse("{\"key\":\"zz\",\"task\":\"B\",\"generation\":0,\"mse\":0,\"agree\":true,\"start_ns\":0,\"dur_ns\":0}")
+                .unwrap()
+        )
+        .is_err());
+    }
+}

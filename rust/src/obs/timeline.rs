@@ -1,0 +1,349 @@
+//! Timeline export: render the trace ring, probe records, lifecycle
+//! events, and kernel/store counters as a Chrome Trace Event JSON
+//! array — `GET /v1/timeline`, loadable directly in Perfetto or
+//! `chrome://tracing`.
+//!
+//! Track layout: one process per serving worker (pid = worker index,
+//! one thread per pipeline stage), plus three background processes —
+//! `quality-probe` (pid [`PROBE_PID`], complete events per probe),
+//! `lifecycle` (pid [`EVENTS_PID`], instant events for swaps, drift,
+//! SLO crossings), and `counters` (pid [`COUNTERS_PID`], counter
+//! events for per-width kernel totals and the tiered store). All
+//! timestamps are microseconds from the engine epoch, and the array is
+//! globally time-sorted, so `ts` is monotone within every track.
+
+use crate::jsonx::Json;
+use crate::obs::health::Event;
+use crate::obs::kern::KernelStat;
+use crate::obs::quality::ProbeRecord;
+use crate::obs::trace::TraceSpan;
+use crate::store::StoreSnapshot;
+
+pub const PROBE_PID: u64 = 100;
+pub const EVENTS_PID: u64 = 101;
+pub const COUNTERS_PID: u64 = 102;
+
+/// ns → trace-event µs.
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// `process_name`/`thread_name` metadata event.
+fn meta(kind: &str, pid: u64, tid: u64, name: &str) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(kind.into())),
+        ("ph".into(), Json::Str("M".into())),
+        ("pid".into(), num(pid)),
+        ("tid".into(), num(tid)),
+        (
+            "args".into(),
+            Json::Obj(vec![("name".into(), Json::Str(name.into()))]),
+        ),
+    ])
+}
+
+/// Complete ("X") event.
+fn complete(
+    name: &str,
+    start_ns: u64,
+    dur_ns: u64,
+    pid: u64,
+    tid: u64,
+    args: Vec<(String, Json)>,
+) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(name.into())),
+        ("ph".into(), Json::Str("X".into())),
+        ("ts".into(), us(start_ns)),
+        ("dur".into(), us(dur_ns)),
+        ("pid".into(), num(pid)),
+        ("tid".into(), num(tid)),
+        ("args".into(), Json::Obj(args)),
+    ])
+}
+
+/// Render everything as one time-sorted Chrome Trace Event array.
+/// `now_ns` stamps the counter samples (they are totals-at-scrape, not
+/// time series).
+pub fn chrome_trace(
+    spans: &[TraceSpan],
+    probes: &[ProbeRecord],
+    events: &[Event],
+    kernels: &[KernelStat],
+    store: Option<&StoreSnapshot>,
+    now_ns: u64,
+) -> Json {
+    // (sort key ns, event); metadata sorts first at ts 0
+    let mut out: Vec<(u64, Json)> = Vec::new();
+
+    let mut workers: Vec<usize> =
+        spans.iter().map(|s| s.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    for &w in &workers {
+        out.push((
+            0,
+            meta("process_name", w as u64, 0, &format!("worker{w}")),
+        ));
+        for (tid, stage) in
+            crate::obs::trace::STAGE_NAMES.iter().enumerate()
+        {
+            out.push((
+                0,
+                meta("thread_name", w as u64, tid as u64, stage),
+            ));
+        }
+    }
+    for span in spans {
+        let mut t = span.start_ns;
+        for (tid, (stage, d)) in span.stages().iter().enumerate() {
+            let dur = d.as_nanos() as u64;
+            out.push((
+                t,
+                complete(
+                    stage,
+                    t,
+                    dur,
+                    span.worker as u64,
+                    tid as u64,
+                    vec![(
+                        "batch_fill".into(),
+                        num(span.batch_fill as u64),
+                    )],
+                ),
+            ));
+            t += dur;
+        }
+    }
+
+    if !probes.is_empty() {
+        out.push((0, meta("process_name", PROBE_PID, 0, "quality-probe")));
+    }
+    for p in probes {
+        out.push((
+            p.start_ns,
+            complete(
+                &format!("probe:{}", p.task),
+                p.start_ns,
+                p.dur_ns,
+                PROBE_PID,
+                0,
+                vec![
+                    ("mse".into(), Json::Num(p.mse)),
+                    ("agree".into(), Json::Bool(p.agree)),
+                    ("generation".into(), num(p.generation)),
+                ],
+            ),
+        ));
+    }
+
+    if !events.is_empty() {
+        out.push((0, meta("process_name", EVENTS_PID, 0, "lifecycle")));
+    }
+    for e in events {
+        out.push((
+            e.at_ns,
+            Json::Obj(vec![
+                ("name".into(), Json::Str(e.kind.clone())),
+                ("ph".into(), Json::Str("i".into())),
+                ("ts".into(), us(e.at_ns)),
+                ("pid".into(), num(EVENTS_PID)),
+                ("tid".into(), num(0)),
+                ("s".into(), Json::Str("g".into())),
+                (
+                    "args".into(),
+                    Json::Obj(vec![
+                        ("seq".into(), num(e.seq)),
+                        (
+                            "detail".into(),
+                            Json::Str(e.detail.clone()),
+                        ),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+
+    let mut counters: Vec<(u64, Json)> = Vec::new();
+    if !kernels.is_empty() {
+        let series = |f: &dyn Fn(&KernelStat) -> u64| -> Vec<(String, Json)> {
+            kernels
+                .iter()
+                .map(|k| (format!("{}b", k.bits), num(f(k))))
+                .collect()
+        };
+        counters.push((
+            now_ns,
+            counter("qmatmul_calls", now_ns, series(&|k| k.calls)),
+        ));
+        counters.push((
+            now_ns,
+            counter("qmatmul_bytes", now_ns, series(&|k| k.bytes)),
+        ));
+    }
+    if let Some(s) = store {
+        counters.push((
+            now_ns,
+            counter(
+                "store",
+                now_ns,
+                vec![
+                    ("hits".into(), num(s.hits)),
+                    ("misses".into(), num(s.misses)),
+                    ("prefetched".into(), num(s.prefetched)),
+                    (
+                        "resident_bytes".into(),
+                        num(s.resident_bytes as u64),
+                    ),
+                ],
+            ),
+        ));
+    }
+    if !counters.is_empty() {
+        out.push((0, meta("process_name", COUNTERS_PID, 0, "counters")));
+        out.extend(counters);
+    }
+
+    // stable sort: ties (and all the ts-0 metadata) keep their
+    // insertion order, everything else lands time-ordered — so ts is
+    // monotone per (pid, tid) track by construction
+    out.sort_by_key(|(t, _)| *t);
+    Json::Arr(out.into_iter().map(|(_, j)| j).collect())
+}
+
+fn counter(name: &str, at_ns: u64, args: Vec<(String, Json)>) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(name.into())),
+        ("ph".into(), Json::Str("C".into())),
+        ("ts".into(), us(at_ns)),
+        ("pid".into(), num(COUNTERS_PID)),
+        ("tid".into(), num(0)),
+        ("args".into(), Json::Obj(args)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(worker: usize, start_ms: u64) -> TraceSpan {
+        TraceSpan {
+            worker,
+            batch_fill: 2,
+            start_ns: start_ms * 1_000_000,
+            queue_wait: Duration::from_millis(1),
+            linger: Duration::from_millis(1),
+            triage: Duration::from_micros(10),
+            execute: Duration::from_millis(5),
+            reply_send: Duration::from_micros(20),
+            total: Duration::from_millis(8),
+        }
+    }
+
+    fn probe(start_ms: u64) -> ProbeRecord {
+        ProbeRecord {
+            key: 7,
+            task: "BLINK".into(),
+            generation: 0,
+            mse: 0.25,
+            agree: true,
+            start_ns: start_ms * 1_000_000,
+            dur_ns: 2_000_000,
+        }
+    }
+
+    fn field<'a>(j: &'a Json, k: &str) -> &'a Json {
+        j.req(k).unwrap()
+    }
+
+    #[test]
+    fn tracks_sort_time_monotone_and_parse() {
+        let spans = [span(1, 10), span(0, 4)];
+        let probes = [probe(12)];
+        let events = [Event {
+            seq: 0,
+            at_ns: 6_000_000,
+            kind: "engine_start".into(),
+            detail: "2 workers".into(),
+        }];
+        let kernels = [KernelStat {
+            bits: 2,
+            calls: 5,
+            bytes: 1000,
+            nanos: 50,
+        }];
+        let j = chrome_trace(
+            &spans,
+            &probes,
+            &events,
+            &kernels,
+            None,
+            20_000_000,
+        );
+        // the wire body is a plain JSON array that re-parses
+        let arr = Json::parse(&j.to_string()).unwrap();
+        let arr = arr.as_arr().unwrap();
+        assert!(!arr.is_empty());
+
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut pids = std::collections::HashSet::new();
+        let mut names = Vec::new();
+        for e in arr {
+            let ph = field(e, "ph").as_str().unwrap().to_string();
+            let ts = match e.get("ts") {
+                Some(t) => t.as_f64().unwrap(),
+                None => 0.0, // metadata events carry no ts
+            };
+            if ph != "M" {
+                assert!(
+                    ts >= last_ts,
+                    "global ts order violated: {ts} < {last_ts}"
+                );
+                last_ts = ts;
+            }
+            pids.insert(field(e, "pid").as_usize().unwrap());
+            names.push(field(e, "name").as_str().unwrap().to_string());
+        }
+        // every track shows up: both workers, probe, lifecycle, counters
+        for pid in [0, 1, PROBE_PID as usize, EVENTS_PID as usize, COUNTERS_PID as usize] {
+            assert!(pids.contains(&pid), "missing track pid {pid}");
+        }
+        assert!(names.iter().any(|n| n == "probe:BLINK"));
+        assert!(names.iter().any(|n| n == "engine_start"));
+        assert!(names.iter().any(|n| n == "qmatmul_bytes"));
+        assert!(names.iter().any(|n| n == "execute"));
+        // metadata first (stable sort keeps ts-0 block leading)
+        assert_eq!(field(&arr[0], "ph").as_str().unwrap(), "M");
+    }
+
+    #[test]
+    fn stages_lay_end_to_end_from_start_ns() {
+        let s = span(0, 1);
+        let j = chrome_trace(&[s.clone()], &[], &[], &[], None, 0);
+        let arr = j.as_arr().unwrap();
+        let xs: Vec<&Json> = arr
+            .iter()
+            .filter(|e| {
+                field(e, "ph").as_str().unwrap() == "X"
+            })
+            .collect();
+        assert_eq!(xs.len(), 5, "five pipeline stages");
+        let mut expect = s.start_ns as f64 / 1000.0;
+        for x in xs {
+            let ts = field(x, "ts").as_f64().unwrap();
+            assert!((ts - expect).abs() < 1e-9, "{ts} != {expect}");
+            expect = ts + field(x, "dur").as_f64().unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_inputs_render_an_empty_array() {
+        let j = chrome_trace(&[], &[], &[], &[], None, 0);
+        assert_eq!(j.to_string(), "[]");
+    }
+}

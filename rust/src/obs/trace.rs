@@ -25,6 +25,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// The five measured pipeline stages, in execution order. Shared by
+/// [`TraceSpan::stages`], the `/v1/traces?stage=` filter, and the
+/// timeline renderer's per-worker thread naming, so the three views
+/// can never disagree on what a stage is called.
+pub const STAGE_NAMES: [&str; 5] =
+    ["queue_wait", "linger", "triage", "execute", "reply_send"];
+
 fn dur_json(d: Duration) -> Json {
     Json::Num(d.as_nanos() as f64)
 }
@@ -44,6 +51,9 @@ pub struct TraceSpan {
     pub worker: usize,
     /// how many live jobs shared the batch (and its triage/execute)
     pub batch_fill: usize,
+    /// submit time, nanoseconds from the engine epoch — anchors the
+    /// span on the timeline export's absolute time axis
+    pub start_ns: u64,
     pub queue_wait: Duration,
     pub linger: Duration,
     pub triage: Duration,
@@ -54,6 +64,19 @@ pub struct TraceSpan {
 }
 
 impl TraceSpan {
+    /// The five stage durations paired with their [`STAGE_NAMES`], in
+    /// pipeline order — the list the timeline renderer lays end to
+    /// end from `start_ns`.
+    pub fn stages(&self) -> [(&'static str, Duration); 5] {
+        [
+            (STAGE_NAMES[0], self.queue_wait),
+            (STAGE_NAMES[1], self.linger),
+            (STAGE_NAMES[2], self.triage),
+            (STAGE_NAMES[3], self.execute),
+            (STAGE_NAMES[4], self.reply_send),
+        ]
+    }
+
     /// Sum of the attributed stages (≤ [`TraceSpan::total`]).
     pub fn stage_sum(&self) -> Duration {
         self.queue_wait
@@ -70,6 +93,7 @@ impl TraceSpan {
                 "batch_fill".into(),
                 Json::Num(self.batch_fill as f64),
             ),
+            ("start_ns".into(), Json::Num(self.start_ns as f64)),
             ("queue_wait_ns".into(), dur_json(self.queue_wait)),
             ("linger_ns".into(), dur_json(self.linger)),
             ("triage_ns".into(), dur_json(self.triage)),
@@ -83,6 +107,7 @@ impl TraceSpan {
         Ok(TraceSpan {
             worker: j.req("worker")?.as_usize()?,
             batch_fill: j.req("batch_fill")?.as_usize()?,
+            start_ns: j.req("start_ns")?.as_f64()? as u64,
             queue_wait: dur_from(j.req("queue_wait_ns")?)?,
             linger: dur_from(j.req("linger_ns")?)?,
             triage: dur_from(j.req("triage_ns")?)?,
@@ -283,6 +308,7 @@ mod tests {
         TraceSpan {
             worker: 1,
             batch_fill: 3,
+            start_ns: ms * 1_000_000,
             queue_wait: Duration::from_millis(ms),
             linger: Duration::from_micros(200),
             triage: Duration::from_micros(30),

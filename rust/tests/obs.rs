@@ -354,6 +354,12 @@ fn telemetry_endpoints_serve_live_and_counters_stay_monotone() {
     let scrape2 = client.get("/metrics?format=prometheus");
     let series2 =
         parse_exposition(&String::from_utf8(scrape2.body.clone()).unwrap());
+    // the reusable exposition lint agrees: both scrapes are
+    // structurally sound and no counter went backwards between them
+    let text1 = String::from_utf8(scrape1.body.clone()).unwrap();
+    let text2 = String::from_utf8(scrape2.body.clone()).unwrap();
+    mopeq::obs::prom::lint(&text1).unwrap();
+    mopeq::obs::prom::lint_pair(&text1, &text2).unwrap();
     for (key, v1) in &series1 {
         if key.split('{').next().unwrap().ends_with("_total") {
             let v2 = series2

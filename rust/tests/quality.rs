@@ -1,0 +1,666 @@
+//! Quality-observability integration suite. Locks the PR's acceptance
+//! criteria end to end:
+//!
+//! - under a 2-worker packed engine with `--quality-sample 4` and 3
+//!   concurrent clients, every shadow probe's MSE and top-1 agreement
+//!   is **bit-identical** to an offline dense-reference run of the same
+//!   (task, seed), and every per-(layer, expert) grid row sums to the
+//!   per-request MSE total within fp tolerance;
+//! - the probe thread never blocks serving: a flood at `--quality-sample
+//!   1` completes with zero rejections while every sampled request is
+//!   accounted for (probed + dropped + failed);
+//! - over raw TCP, `GET /v1/quality` serves the live snapshot joined
+//!   with the precision map's bits, `POST /v1/reload` rotates the
+//!   per-generation window (the old generation's agreement moves to
+//!   history, the new map's is reported separately), `/v1/events`
+//!   carries the lifecycle, `/v1/timeline` renders Chrome Trace JSON,
+//!   `/v1/traces` filters by limit/stage with typed 400s, `/healthz`
+//!   grades declared SLOs, and the Prometheus scrape lints clean with
+//!   the quality families present.
+
+use mopeq::config::{self, ModelConfig};
+use mopeq::coordinator::ModelExecutor;
+use mopeq::data::{gen_sample, pack_batch, Sample, Task};
+use mopeq::engine::spec::SavedMap;
+use mopeq::engine::{Engine, ObsHandle, PrecisionSource, WeightForm};
+use mopeq::jsonx::Json;
+use mopeq::moe::{local_meta, PackedStore, PrecisionMap, WeightStore};
+use mopeq::net::http::{read_response, write_request, Response};
+use mopeq::net::{wire, NetConfig, NetServer};
+use mopeq::obs::health::SloConfig;
+use mopeq::obs::quality::{self, ProbeRecord, QualitySnapshot};
+use mopeq::rng::Rng;
+use mopeq::runtime::Session;
+use mopeq::serve::BatchPolicy;
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 123;
+
+fn cfg() -> ModelConfig {
+    config::variant("dsvl2_tiny").unwrap()
+}
+
+/// Two distinct mixed {2,3,4}-bit maps with the same per-layer shape.
+fn map_pair(cfg: &ModelConfig) -> (PrecisionMap, PrecisionMap) {
+    let mut a = PrecisionMap::uniform(cfg, 2);
+    let mut b = PrecisionMap::uniform(cfg, 2);
+    for l in 0..cfg.moe_layers() {
+        for e in 0..cfg.experts {
+            a.bits[l][e] = [2u8, 3, 4][(l + e) % 3];
+            b.bits[l][e] = [4u8, 3, 2][(l + e) % 3];
+        }
+    }
+    (a, b)
+}
+
+/// The offline probe oracle: for each sample, run the served (packed
+/// codes, dequantized — bit-exact to the packed lowering) and the
+/// dense-reference executors on the same weights the engine retains,
+/// and compute exactly what a probe must record — keyed by the same
+/// token fingerprint probe records carry.
+fn probe_oracle(
+    cfg: &ModelConfig,
+    seed: u64,
+    pmap: &PrecisionMap,
+    samples: &[Sample],
+) -> HashMap<u64, (f64, bool)> {
+    let ws = WeightStore::init(cfg, &local_meta(cfg), seed);
+    let store = PackedStore::rtn(cfg, &ws, pmap).unwrap();
+    let mut qdq = WeightStore::init(cfg, &local_meta(cfg), seed);
+    store.write_dequantized(&mut qdq).unwrap();
+    let session = Session::native();
+    let served = ModelExecutor::new(&session, cfg, &qdq).unwrap();
+    let dense = ModelExecutor::new(&session, cfg, &ws).unwrap();
+    samples
+        .iter()
+        .map(|s| {
+            let (tokens, vis) = pack_batch(std::slice::from_ref(s), cfg);
+            let sout = served.forward(&tokens, &vis, false).unwrap();
+            let dout = dense.forward(&tokens, &vis, false).unwrap();
+            let mse = quality::probe_mse(
+                &sout.logits.index0(0).data,
+                &dout.logits.index0(0).data,
+            );
+            let agree = dout.logits.argmax_rows()[0]
+                == sout.logits.argmax_rows()[0];
+            (quality::sample_key(&s.tokens), (mse, agree))
+        })
+        .collect()
+}
+
+/// Deterministic per-client workloads (same idiom as tests/adapt.rs).
+fn workloads(
+    cfg: &ModelConfig,
+    clients: usize,
+    per_client: usize,
+) -> Vec<Vec<Sample>> {
+    (0..clients)
+        .map(|c| {
+            let mut rng =
+                Rng::new(SEED).derive(&format!("quality-client-{c}"));
+            (0..per_client)
+                .map(|i| {
+                    gen_sample(
+                        Task::ALL[(c + i) % Task::ALL.len()],
+                        cfg,
+                        &mut rng,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Probes are asynchronous by design — wait until every sampled
+/// request is accounted for (completed, dropped, or failed).
+fn wait_probes(obs: &ObsHandle, want: u64) -> QualitySnapshot {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let q = obs.quality().expect("quality plane enabled");
+        if q.probed + q.dropped + q.failed >= want {
+            return q;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {want} probes: probed {} dropped {} \
+             failed {}",
+            q.probed,
+            q.dropped,
+            q.failed
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// --- the in-process acceptance criterion -------------------------------
+
+/// 2-worker packed engine, `quality_sample(4)`, 3 concurrent clients:
+/// exactly 1 in 4 completed requests is probed, every probe is
+/// bit-identical to the offline dense-reference oracle, and the
+/// attribution grid's row sums reproduce the per-request MSE totals.
+#[test]
+fn probes_match_the_offline_dense_oracle_bit_for_bit() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 8;
+    const SAMPLE: usize = 4;
+    let cfg = cfg();
+    let (pmap, _) = map_pair(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .workers(2)
+        .queue_depth(64)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .reloadable(true)
+        .quality_sample(SAMPLE)
+        .build()
+        .unwrap();
+    let obs = engine.observer();
+
+    let loads = workloads(&cfg, CLIENTS, PER_CLIENT);
+    let all: Vec<Sample> = loads.concat();
+    let oracle = probe_oracle(&cfg, SEED, &pmap, &all);
+
+    std::thread::scope(|scope| {
+        for samples in &loads {
+            let client = engine.client();
+            scope.spawn(move || {
+                for s in samples {
+                    client.call(s.clone()).unwrap();
+                }
+            });
+        }
+    });
+
+    // the global sampling tick fires on ticks 0, 4, 8, … — 24 requests
+    // at 1-in-4 is exactly 6 probes, whatever the client interleaving
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let expected = total.div_ceil(SAMPLE as u64);
+    let q = wait_probes(&obs, expected);
+    assert_eq!(q.probed, expected, "all sampled requests must complete");
+    assert_eq!(q.dropped, 0, "6 probes can never fill the channel");
+    assert_eq!(q.failed, 0);
+    assert_eq!(q.stale, 0, "no reload happened");
+    assert_eq!(q.sample, SAMPLE);
+    assert_eq!(q.probes.len(), expected as usize);
+
+    // bit-identical to the offline dense run of the same (task, seed):
+    // exact f64 equality, no tolerance
+    for rec in &q.probes {
+        let (mse, agree) = oracle
+            .get(&rec.key)
+            .unwrap_or_else(|| panic!("probe of unknown sample {:016x}", rec.key));
+        assert_eq!(rec.generation, 0);
+        assert!(
+            rec.mse == *mse,
+            "probe MSE {} != offline oracle {} for {:016x}",
+            rec.mse,
+            mse,
+            rec.key
+        );
+        assert_eq!(rec.agree, *agree, "agreement bit for {:016x}", rec.key);
+    }
+    // the window aggregates exactly those records
+    assert_eq!(q.window.generation, 0);
+    assert_eq!(q.window.probes, expected);
+    assert_eq!(
+        q.window.agree,
+        q.probes.iter().filter(|r| r.agree).count() as u64
+    );
+
+    // every grid row sums to the per-request MSE total (each MoE layer
+    // receives the full per-probe MSE, split over its routed experts)
+    let total_mse: f64 = q.probes.iter().map(|r| r.mse).sum();
+    assert_eq!(q.grid.len(), cfg.moe_layers());
+    for (l, row_sum) in q.row_sums().iter().enumerate() {
+        assert!(
+            (row_sum - total_mse).abs() <= 1e-9 * total_mse.max(1.0),
+            "layer {l} row sum {row_sum} != Σ probe MSE {total_mse}"
+        );
+    }
+
+    // probing never cost a request
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.rejected_busy, 0);
+    assert_eq!(stats.rejected_deadline, 0);
+    assert_eq!(stats.requests, total as usize);
+}
+
+/// Flood at `quality_sample(1)`: every completed request is sampled,
+/// serving never blocks on the probe channel, and the accounting
+/// invariant probed + dropped + failed == sampled holds exactly.
+#[test]
+fn probe_thread_never_blocks_serving_under_flood() {
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 16;
+    let cfg = cfg();
+    let (pmap, _) = map_pair(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap))
+        .workers(2)
+        .queue_depth(2 * CLIENTS * PER_CLIENT)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .reloadable(true)
+        .quality_sample(1)
+        .build()
+        .unwrap();
+    let obs = engine.observer();
+    let loads = workloads(&cfg, CLIENTS, PER_CLIENT);
+    std::thread::scope(|scope| {
+        for samples in &loads {
+            let client = engine.client();
+            scope.spawn(move || {
+                for s in samples {
+                    // zero probe-induced rejections: every call lands
+                    client.call(s.clone()).unwrap();
+                }
+            });
+        }
+    });
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let q = wait_probes(&obs, total);
+    assert_eq!(
+        q.probed + q.dropped + q.failed,
+        total,
+        "every sampled request is accounted for exactly once"
+    );
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.rejected_busy, 0, "probing must not reject traffic");
+    assert_eq!(stats.rejected_deadline, 0);
+    assert_eq!(stats.requests, total as usize);
+    // shutdown joined the probe thread: the final snapshot is complete
+    let q = obs.quality().unwrap();
+    assert_eq!(q.probed + q.dropped + q.failed, total);
+}
+
+/// The capability is gated: probes re-execute on the retained dense
+/// reference, so `quality_sample` without `reloadable` is a build
+/// error, and a quality-less engine exposes no snapshot.
+#[test]
+fn quality_capability_is_gated_on_the_retained_reference() {
+    let cfg = cfg();
+    let (pmap, _) = map_pair(&cfg);
+    let err = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(pmap.clone()))
+        .quality_sample(4)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("reloadable"), "{err}");
+
+    let plain = Engine::builder(cfg.name).seed(SEED).build().unwrap();
+    assert!(plain.observer().quality().is_none());
+    plain.shutdown().unwrap();
+}
+
+// --- over raw TCP ------------------------------------------------------
+
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    addr: String,
+}
+
+impl WireClient {
+    fn connect(addr: &str) -> WireClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            addr: addr.to_string(),
+        }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> Response {
+        write_request(
+            &mut self.writer,
+            "POST",
+            path,
+            &self.addr,
+            Some(("application/json", body.as_bytes())),
+            &[],
+        )
+        .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+
+    fn get(&mut self, path: &str) -> Response {
+        write_request(&mut self.writer, "GET", path, &self.addr, None, &[])
+            .unwrap();
+        read_response(&mut self.reader).unwrap()
+    }
+}
+
+fn error_code(resp: &Response) -> String {
+    resp.json_body()
+        .unwrap()
+        .req("error")
+        .unwrap()
+        .req("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Poll `GET /v1/quality` until `want` probes are accounted for.
+fn wait_probes_wire(client: &mut WireClient, want: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let resp = client.get("/v1/quality");
+        assert_eq!(resp.status, 200);
+        let q = resp.json_body().unwrap();
+        let tally = ["probed", "dropped", "failed"]
+            .iter()
+            .map(|k| q.req(k).unwrap().as_usize().unwrap() as u64)
+            .sum::<u64>();
+        if tally >= want {
+            return q;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {want} probes over the wire"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The full wire surface: live quality snapshot with the bits join,
+/// window rotation across `POST /v1/reload`, the event log, the
+/// Perfetto timeline, trace filters, graded `/healthz`, and a clean
+/// Prometheus lint — all on one keep-alive socket.
+#[test]
+fn quality_surface_round_trips_over_raw_tcp() {
+    const ROUND: usize = 8;
+    const SAMPLE: usize = 2;
+    let cfg = cfg();
+    let (map_a, map_b) = map_pair(&cfg);
+    let engine = Engine::builder(cfg.name)
+        .seed(SEED)
+        .weight_form(WeightForm::Packed)
+        .precision(PrecisionSource::Map(map_a.clone()))
+        .workers(2)
+        .queue_depth(64)
+        .batch_policy(BatchPolicy { max_linger: Duration::from_millis(1) })
+        .reloadable(true)
+        .quality_sample(SAMPLE)
+        // an impossible latency objective: Ok while idle, unhealthy
+        // as soon as real traffic lands (grading is exercised live)
+        .slo(SloConfig {
+            p99_ms: Some(1e-6),
+            max_reject: Some(0.5),
+            min_agreement: None,
+        })
+        .build()
+        .unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr);
+
+    // before traffic: every check grades Ok on an empty snapshot
+    let health = client.get("/healthz");
+    assert_eq!(health.status, 200);
+    let h = health.json_body().unwrap();
+    assert_eq!(h.req("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(
+        h.req("variant").unwrap().as_str().unwrap(),
+        "dsvl2_tiny"
+    );
+    let checks = h.req("checks").unwrap().as_arr().unwrap();
+    assert!(!checks.is_empty(), "graded healthz must detail its checks");
+
+    // drive one round and wait for its probes
+    let mut rng = Rng::new(SEED).derive("quality-wire");
+    let drive = |client: &mut WireClient, rng: &mut Rng| {
+        let samples: Vec<Sample> = (0..ROUND)
+            .map(|i| gen_sample(Task::ALL[i % Task::ALL.len()], &cfg, rng))
+            .collect();
+        for s in &samples {
+            let resp = client
+                .post("/v1/infer", &wire::sample_json(s, None).to_string());
+            assert_eq!(resp.status, 200);
+        }
+        samples
+    };
+    let first = drive(&mut client, &mut rng);
+    let probes_a = (ROUND / SAMPLE) as u64;
+    let q = wait_probes_wire(&mut client, probes_a);
+    assert_eq!(q.req("sample").unwrap().as_usize().unwrap(), SAMPLE);
+    assert_eq!(q.req("generation").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(
+        q.req("probed").unwrap().as_usize().unwrap() as u64,
+        probes_a
+    );
+    // the precision join rides along: bits match the live map
+    let bits = q.req("bits").unwrap().as_arr().unwrap();
+    assert_eq!(bits.len(), cfg.moe_layers());
+    for (l, row) in bits.iter().enumerate() {
+        let row: Vec<u8> = row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.as_usize().unwrap() as u8)
+            .collect();
+        assert_eq!(row, map_a.bits[l]);
+    }
+    // probe records parse and match the offline oracle (tolerance-based
+    // here: f64s crossed a JSON round-trip)
+    let oracle_a = probe_oracle(&cfg, SEED, &map_a, &first);
+    let window = q.req("window").unwrap();
+    assert_eq!(
+        window.req("generation").unwrap().as_usize().unwrap(),
+        0
+    );
+    for pj in q.req("probes").unwrap().as_arr().unwrap() {
+        let rec = ProbeRecord::from_json(pj).unwrap();
+        let (mse, agree) = oracle_a.get(&rec.key).unwrap();
+        assert!((rec.mse - mse).abs() <= 1e-9 * mse.max(1e-12));
+        assert_eq!(rec.agree, *agree);
+    }
+
+    // traffic landed: the impossible p99 objective now grades unhealthy
+    let health = client.get("/healthz");
+    assert_eq!(health.status, 503, "unhealthy must flip readiness");
+    let h = health.json_body().unwrap();
+    assert_eq!(h.req("status").unwrap().as_str().unwrap(), "unhealthy");
+
+    // the event log saw the lifecycle and the SLO crossing
+    let events = client.get("/v1/events");
+    assert_eq!(events.status, 200);
+    let kinds: Vec<String> = events
+        .json_body()
+        .unwrap()
+        .req("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.req("kind").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(kinds.contains(&"engine_start".to_string()), "{kinds:?}");
+    assert!(kinds.contains(&"slo".to_string()), "{kinds:?}");
+
+    // trace filters: limit keeps the newest N, stage projects one
+    // duration, bad values answer typed 400s
+    let traces = client.get("/v1/traces?limit=2");
+    assert_eq!(traces.status, 200);
+    let spans = traces
+        .json_body()
+        .unwrap()
+        .req("traces")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .len();
+    assert!(spans <= 2, "limit=2 kept {spans} spans");
+    let staged = client.get("/v1/traces?stage=execute&limit=3");
+    assert_eq!(staged.status, 200);
+    let j = staged.json_body().unwrap();
+    for sj in j.req("traces").unwrap().as_arr().unwrap() {
+        sj.req("execute_ns").unwrap().as_f64().unwrap();
+        assert!(sj.get("queue_wait_ns").is_none(), "projected to one stage");
+    }
+    let bad = client.get("/v1/traces?limit=0");
+    assert_eq!(bad.status, 400);
+    assert_eq!(error_code(&bad), "bad_request");
+    let bad = client.get("/v1/traces?stage=bogus");
+    assert_eq!(bad.status, 400);
+
+    // Prometheus: quality families present, whole scrape lints clean
+    let prom = client.get("/metrics?format=prometheus");
+    assert_eq!(prom.status, 200);
+    let text = String::from_utf8(prom.body.clone()).unwrap();
+    mopeq::obs::prom::lint(&text).unwrap();
+    assert!(text.contains(&format!(
+        "mopeq_quality_probes_total {probes_a}\n"
+    )));
+    assert!(text.contains("mopeq_quality_top1_agreement "));
+    assert!(text.contains("mopeq_quality_expert_error{layer=\"0\""));
+
+    // reload rotates the quality window: the old generation's
+    // agreement moves to history, the new map's is reported separately
+    let resp = client.post(
+        "/v1/reload",
+        &SavedMap {
+            variant: cfg.name.to_string(),
+            map: map_b.clone(),
+            provenance: None,
+        }
+        .to_json()
+        .to_string(),
+    );
+    assert_eq!(resp.status, 200);
+    let q = client.get("/v1/quality").json_body().unwrap();
+    assert_eq!(q.req("generation").unwrap().as_usize().unwrap(), 1);
+    let window = q.req("window").unwrap();
+    assert_eq!(window.req("generation").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        window.req("probes").unwrap().as_usize().unwrap(),
+        0,
+        "the new generation's window starts empty"
+    );
+    let history = q.req("history").unwrap().as_arr().unwrap();
+    assert_eq!(history.len(), 1);
+    assert_eq!(
+        history[0].req("generation").unwrap().as_usize().unwrap(),
+        0
+    );
+    assert_eq!(
+        history[0].req("probes").unwrap().as_usize().unwrap() as u64,
+        probes_a,
+        "generation 0's probes are preserved in history"
+    );
+
+    // post-swap traffic fills the new window with map B's agreement
+    let second = drive(&mut client, &mut rng);
+    let q = wait_probes_wire(&mut client, 2 * probes_a);
+    let window = q.req("window").unwrap();
+    assert_eq!(window.req("generation").unwrap().as_usize().unwrap(), 1);
+    let win_probes =
+        window.req("probes").unwrap().as_usize().unwrap() as u64;
+    let stale = q.req("stale").unwrap().as_usize().unwrap() as u64;
+    assert_eq!(
+        win_probes + stale,
+        probes_a,
+        "every post-reload probe is either in the new window or stale"
+    );
+    let oracle_b = probe_oracle(&cfg, SEED, &map_b, &second);
+    let mut gen1_agree = 0u64;
+    let mut gen1_probes = 0u64;
+    for pj in q.req("probes").unwrap().as_arr().unwrap() {
+        let rec = ProbeRecord::from_json(pj).unwrap();
+        if rec.generation != 1 {
+            continue;
+        }
+        gen1_probes += 1;
+        let (mse, agree) = oracle_b.get(&rec.key).unwrap_or_else(|| {
+            panic!("generation-1 probe of a pre-swap sample {:016x}", rec.key)
+        });
+        assert!((rec.mse - mse).abs() <= 1e-9 * mse.max(1e-12));
+        assert_eq!(rec.agree, *agree);
+        if rec.agree {
+            gen1_agree += 1;
+        }
+    }
+    assert_eq!(gen1_probes, win_probes);
+    assert_eq!(
+        window.req("agree").unwrap().as_usize().unwrap() as u64,
+        gen1_agree,
+        "the live window reports the new map's agreement, not a blend"
+    );
+
+    // the timeline renders loadable Chrome Trace JSON: an array of
+    // events, each with the mandatory keys, spanning spans ("X"),
+    // instants ("i"/"g"), counters ("C"), and metadata ("M")
+    let timeline = client.get("/v1/timeline");
+    assert_eq!(timeline.status, 200);
+    let events = timeline.json_body().unwrap();
+    let arr = events.as_arr().unwrap();
+    assert!(!arr.is_empty());
+    let mut phases: Vec<String> = Vec::new();
+    for ev in arr {
+        let ph = ev.req("ph").unwrap().as_str().unwrap().to_string();
+        ev.req("name").unwrap().as_str().unwrap();
+        ev.req("pid").unwrap().as_usize().unwrap();
+        if ph != "M" {
+            assert!(
+                ev.req("ts").unwrap().as_f64().unwrap() >= 0.0,
+                "timeline ts must be non-negative µs"
+            );
+        }
+        phases.push(ph);
+    }
+    for want in ["M", "X", "C"] {
+        assert!(
+            phases.iter().any(|p| p == want),
+            "timeline lacks phase {want:?}: {phases:?}"
+        );
+    }
+    assert!(
+        arr.iter().any(|ev| {
+            ev.req("name")
+                .unwrap()
+                .as_str()
+                .map(|n| n.starts_with("probe:"))
+                .unwrap_or(false)
+        }),
+        "probes must land on the timeline"
+    );
+
+    // method guards on the new endpoints
+    for path in ["/v1/quality", "/v1/events", "/v1/timeline"] {
+        let resp = client.post(path, "{}");
+        assert_eq!(resp.status, 405, "{path}");
+        assert_eq!(resp.header("allow"), Some("GET"));
+    }
+
+    server.shutdown().unwrap();
+}
+
+/// A server without `--quality-sample` answers a typed 400 on
+/// `/v1/quality` — "not measured" must never read as "perfect".
+#[test]
+fn quality_endpoint_is_typed_400_when_disabled() {
+    let cfg = cfg();
+    let engine = Engine::builder(cfg.name).seed(SEED).build().unwrap();
+    let server = NetServer::spawn(engine, NetConfig::default()).unwrap();
+    let mut client = WireClient::connect(&server.local_addr().to_string());
+    let resp = client.get("/v1/quality");
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "quality_disabled");
+    // the sibling endpoints stay live: events and timeline need no
+    // probe thread
+    assert_eq!(client.get("/v1/events").status, 200);
+    assert_eq!(client.get("/v1/timeline").status, 200);
+    server.shutdown().unwrap();
+}
